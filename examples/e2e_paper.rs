@@ -1,0 +1,122 @@
+//! End-to-end paper reproduction driver.
+//!
+//! ```bash
+//! cargo run --release --example e2e_paper            # tiny catalog (~1 min)
+//! cargo run --release --example e2e_paper -- --full  # full catalog (the record run)
+//! ```
+//!
+//! Exercises every layer of the system on a real workload, proving they
+//! compose:
+//!
+//! 1. **substrate** — generate/cache the four paper-graph analogues;
+//! 2. **Table I** — print the graph inventory next to the paper's counts;
+//! 3. **real engine** — run all three benchmarks multithreaded and
+//!    validate against serial references;
+//! 4. **Table II** — the headline result: per-optimisation speed-ups on
+//!    the 32-virtual-thread testbed, printed beside the paper's values,
+//!    with the §VII aggregate summary;
+//! 5. **accel path** — if `make artifacts` has run, execute PageRank/CC
+//!    through the AOT-compiled JAX/Pallas kernels via PJRT and check the
+//!    numbers against the engine.
+//!
+//! The output of the full run is recorded in EXPERIMENTS.md.
+
+use ipregel::algos::{reference, ConnectedComponents, PageRank, Sssp};
+use ipregel::config::Opts;
+use ipregel::engine::{run, EngineConfig};
+use ipregel::exp::{run_table1, table2, Bench, Table2Options};
+use ipregel::graph::catalog;
+use ipregel::runtime::{accel, default_artifact_dir, Runtime};
+use ipregel::util::timer::{fmt_duration, Timer};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let opts = Opts::parse(std::env::args().skip(1));
+    let full = opts.flag("full");
+    let dir = PathBuf::from(opts.get_or("dir", "data/graphs"));
+    let entries = if full {
+        catalog::catalog()
+    } else {
+        catalog::catalog_tiny()
+    };
+    let total = Timer::start();
+
+    // ---- 1+2: substrate + Table I --------------------------------------
+    println!("=== Table I: graphs ({} catalog) ===", if full { "full" } else { "tiny" });
+    println!("{}", run_table1(&entries, &dir)?);
+
+    // ---- 3: real multithreaded engine, validated -----------------------
+    println!("=== real engine validation (4 threads) ===");
+    let probe = entries[0].load_or_generate(&dir)?;
+    let pr = run(&probe, &PageRank::default(), EngineConfig::default().threads(4));
+    let pr_ref = reference::pagerank(&probe, 10, 0.85);
+    let max_err = pr
+        .values
+        .iter()
+        .zip(&pr_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("pagerank: {} | max |err| vs serial = {max_err:.2e}", pr.metrics.summary());
+    assert!(max_err < 1e-9);
+
+    let cc = run(
+        &probe,
+        &ConnectedComponents,
+        EngineConfig::default().threads(4).bypass(true),
+    );
+    assert_eq!(cc.values, reference::connected_components(&probe));
+    println!("cc:       {} | labels match union-find", cc.metrics.summary());
+
+    let sp = Sssp::from_hub(&probe);
+    let ss = run(&probe, &sp, EngineConfig::default().threads(4).bypass(true));
+    assert_eq!(ss.values, reference::bfs_levels(&probe, sp.source));
+    println!("sssp:     {} | distances match BFS", ss.metrics.summary());
+
+    // ---- 4: Table II on the virtual testbed ----------------------------
+    println!("\n=== Table II: speed-ups at 32 virtual threads ===");
+    let mut graphs = Vec::new();
+    for e in &entries {
+        graphs.push((e.stands_for.to_string(), e.load_or_generate(&dir)?));
+    }
+    let t2opts = Table2Options {
+        threads: 32,
+        benches: Bench::all().to_vec(),
+        // The tiny graphs need a finer FCFS grain than the paper's 256
+        // (they have 64× fewer vertices); the full catalog uses 256.
+        dynamic_chunk_override: if full { None } else { Some(16) },
+    };
+    let t = Timer::start();
+    let results = table2::run_table2(&graphs, &t2opts);
+    let names: Vec<String> = graphs.iter().map(|(n, _)| n.clone()).collect();
+    println!("{}", table2::render(&names, &results));
+    println!("{}", table2::summary(&results));
+    println!("(table II computed in {})", fmt_duration(t.elapsed()));
+
+    // ---- 5: accelerated dense-block path (three-layer composition) -----
+    println!("\n=== accel path (PJRT + AOT JAX/Pallas) ===");
+    let adir = default_artifact_dir();
+    if adir.join("manifest.txt").exists() {
+        let rt = Runtime::load(&adir)?;
+        println!("platform={} artifacts={:?}", rt.platform(), rt.executables());
+        let small = ipregel::graph::gen::barabasi_albert(800, 3, 5);
+        let block = accel::DenseBlock::from_graph(&rt, &small)?;
+        let accel_pr = accel::pagerank(&rt, &small, &block)?;
+        let eng_pr = run(&small, &PageRank::default(), EngineConfig::default());
+        let max_err = accel_pr
+            .iter()
+            .zip(&eng_pr.values)
+            .map(|(&a, &b)| (a as f64 - b).abs())
+            .fold(0.0f64, f64::max);
+        println!("pagerank via PJRT: max |err| vs engine = {max_err:.2e}");
+        assert!(max_err < 1e-6);
+        let accel_cc = accel::connected_components(&rt, &small, &block)?;
+        let eng_cc = run(&small, &ConnectedComponents, EngineConfig::default());
+        assert_eq!(accel_cc, eng_cc.values);
+        println!("cc via PJRT: labels identical to engine ✓");
+    } else {
+        println!("artifacts/ missing — run `make artifacts` to exercise the PJRT path");
+    }
+
+    println!("\ne2e complete in {}", fmt_duration(total.elapsed()));
+    Ok(())
+}

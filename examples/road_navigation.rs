@@ -1,0 +1,97 @@
+//! Navigation scenario: shortest paths on a road-like grid vs a social
+//! hub-and-spoke graph — the paper's SSSP benchmark in both its hard and
+//! easy regimes.
+//!
+//! ```bash
+//! cargo run --release --example road_navigation
+//! ```
+//!
+//! The grid (high diameter, tiny frontiers) and the scale-free graph (low
+//! diameter, huge frontiers) stress opposite parts of the push engine;
+//! the example also compares combiner strategies on the contended
+//! scale-free case and prints the BFS wave profile.
+
+use ipregel::algos::{Sssp, UNREACHED};
+use ipregel::combine::Strategy;
+use ipregel::engine::{run, EngineConfig};
+use ipregel::graph::gen;
+use ipregel::util::timer::{fmt_duration, Timer};
+
+fn wave_profile(label: &str, metrics: &ipregel::metrics::RunMetrics) {
+    let peak = metrics
+        .supersteps
+        .iter()
+        .map(|s| s.active_vertices)
+        .max()
+        .unwrap_or(0);
+    println!(
+        "  {label:<24} supersteps={:<5} peak frontier={peak}",
+        metrics.num_supersteps()
+    );
+}
+
+fn main() {
+    // --- Road network: 600×600 grid -------------------------------------
+    let grid = gen::grid(600, 600);
+    println!(
+        "road grid: {} junctions, {} road segments",
+        grid.num_vertices(),
+        grid.num_edges()
+    );
+    let p = Sssp { source: 0 };
+    let t = Timer::start();
+    let r = run(&grid, &p, EngineConfig::default().threads(4).bypass(true));
+    println!("  solved in {}", fmt_duration(t.elapsed()));
+    wave_profile("grid (bypass)", &r.metrics);
+    // Corner-to-corner Manhattan distance.
+    assert_eq!(r.values[grid.num_vertices() - 1], (599 + 599) as u64);
+
+    // --- Social graph: contended hubs ------------------------------------
+    let social = gen::rmat(17, 16, 0.57, 0.19, 0.19, 5);
+    println!(
+        "\nsocial graph: {} members, {} directed edges",
+        social.num_vertices(),
+        social.num_edges()
+    );
+    let p = Sssp::from_hub(&social);
+    let mut reference = None;
+    for strategy in [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+        let t = Timer::start();
+        let r = run(
+            &social,
+            &p,
+            EngineConfig::default()
+                .threads(4)
+                .bypass(true)
+                .strategy(strategy),
+        );
+        println!(
+            "  {:<12} {:>10}  ({} messages)",
+            format!("{strategy:?}"),
+            fmt_duration(t.elapsed()),
+            r.metrics.total_messages()
+        );
+        if let Some(ref want) = reference {
+            assert_eq!(want, &r.values, "{strategy:?} changed results");
+        } else {
+            wave_profile("rmat (bypass)", &r.metrics);
+            reference = Some(r.values);
+        }
+    }
+
+    let dist = reference.unwrap();
+    let reached = dist.iter().filter(|&&d| d != UNREACHED).count();
+    let mut histo = [0usize; 16];
+    for &d in &dist {
+        if d != UNREACHED {
+            histo[(d as usize).min(15)] += 1;
+        }
+    }
+    println!("\nhop-distance histogram from hub v{}:", p.source);
+    for (h, &c) in histo.iter().enumerate() {
+        if c > 0 {
+            println!("  {h:>2} hops: {c:>8}");
+        }
+    }
+    println!("reached {reached}/{} members", social.num_vertices());
+}

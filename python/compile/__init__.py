@@ -1,0 +1,4 @@
+"""Build-time compile path: Layer-2 JAX model + Layer-1 Pallas kernels.
+
+Imported only by ``aot.py`` and the pytest suite — never at runtime.
+"""

@@ -1,0 +1,99 @@
+"""AOT lowering: JAX/Pallas supersteps -> HLO text artifacts.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Runs once at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--n 1024] [--tile 256]
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+MULTI_SOURCES = 32
+
+
+def artifact_specs(n: int, tile: int):
+    """(name, function, example-arg shapes) for every artifact."""
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    batch = jax.ShapeDtypeStruct((n, MULTI_SOURCES), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return [
+        (
+            "multi_sssp_relax",
+            functools.partial(model.multi_sssp_superstep, tile=tile),
+            (mat, batch),
+        ),
+        (
+            "pagerank_step",
+            functools.partial(model.pagerank_step, tile=tile),
+            (mat, vec, scalar),
+        ),
+        (
+            "pagerank_run",
+            functools.partial(model.pagerank_run, tile=tile),
+            (mat, vec, vec, scalar),
+        ),
+        (
+            "sssp_relax",
+            functools.partial(model.sssp_superstep, tile=tile),
+            (mat, vec),
+        ),
+        (
+            "cc_label",
+            functools.partial(model.cc_superstep, tile=tile),
+            (mat, vec),
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--n", type=int, default=1024, help="padded block size")
+    ap.add_argument("--tile", type=int, default=256, help="Pallas tile size")
+    args = ap.parse_args()
+    if args.n % args.tile != 0:
+        raise SystemExit(f"--n {args.n} must be a multiple of --tile {args.tile}")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = [f"n={args.n}", f"tile={args.tile}", "dtype=f32",
+                f"damping={model.DAMPING}", f"pr_iterations={model.PR_ITERATIONS}",
+                f"multi_sources={MULTI_SOURCES}"]
+    for name, fn, specs in artifact_specs(args.n, args.tile):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"artifact={name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

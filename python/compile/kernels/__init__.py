@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the dense-block accelerated supersteps."""
+
+from .batched import batched_min_plus, batched_sum_matmul
+from .matvec import DEFAULT_TILE, min_plus_matvec, sum_matvec
+
+__all__ = [
+    "DEFAULT_TILE",
+    "batched_min_plus",
+    "batched_sum_matmul",
+    "min_plus_matvec",
+    "sum_matvec",
+]

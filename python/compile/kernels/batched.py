@@ -1,0 +1,82 @@
+"""Batched (multi-vector) semiring kernels — the MXU-utilisation variant.
+
+The single-vector kernels in ``matvec.py`` occupy one MXU column lane
+(rank-1 output). Batching ``B`` message vectors turns the contraction
+into a true ``(TILE×TILE) @ (TILE×B)`` matmul that fills the systolic
+array — the natural TPU extension for multi-source BFS/SSSP and
+personalised-PageRank sweeps (EXPERIMENTS.md §Perf L1).
+
+Same conventions as ``matvec.py``: ``adj[i, j] == 1`` iff edge ``j → i``,
+``interpret=True`` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matvec import DEFAULT_TILE
+
+
+def _check_args(adj, x, tile):
+    n = adj.shape[0]
+    if adj.shape != (n, n):
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    if x.ndim != 2 or x.shape[0] != n:
+        raise ValueError(f"batch shape {x.shape} does not match adjacency {adj.shape}")
+    if n % tile != 0:
+        raise ValueError(f"n={n} must be a multiple of tile={tile}")
+    return n, x.shape[1]
+
+
+def _sum_kernel(a_ref, x_ref, o_ref):
+    """(i, j) grid step of the batched (+, ·) matmul: o += a @ x."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ x_ref[...]
+
+
+def _min_plus_kernel(a_ref, x_ref, o_ref, *, increment):
+    """(i, j) grid step of the batched (min, +increment) product."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    a = a_ref[...]  # (tile, tile)
+    x = x_ref[...]  # (tile, B)
+    cand = jnp.where(a[:, :, None] > 0, x[None, :, :] + increment, jnp.inf)
+    o_ref[...] = jnp.minimum(o_ref[...], jnp.min(cand, axis=1))
+
+
+def _tiled_call(kernel, adj, x, tile):
+    n, batch = _check_args(adj, x, tile)
+    grid = (n // tile, n // tile)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((tile, batch), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, batch), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, batch), x.dtype),
+        interpret=True,
+    )(adj, x)
+
+
+def batched_sum_matmul(adj, x, *, tile=DEFAULT_TILE):
+    """``out[i, b] = Σ_j adj[i, j] · x[j, b]`` — MXU-shaped."""
+    return _tiled_call(_sum_kernel, adj, x, tile)
+
+
+def batched_min_plus(adj, x, *, increment=1.0, tile=DEFAULT_TILE):
+    """``out[i, b] = min_j (adj[i, j] > 0 ? x[j, b] + increment : ∞)``."""
+    kernel = functools.partial(_min_plus_kernel, increment=increment)
+    return _tiled_call(kernel, adj, x, tile)

@@ -1,0 +1,99 @@
+"""Layer-1 Pallas kernels: the dense-block superstep hot-spots.
+
+The paper's three benchmarks all reduce, on a dense adjacency block, to a
+tiled "matvec" with a semiring:
+
+- PageRank:      sums[i]  = Σ_j  A[i,j] · contrib[j]          (+, ·)
+- SSSP (unit):   cand[i]  = min_j A[i,j] ? dist[j] + 1 : ∞    (min, +1)
+- CC min-label:  cand[i]  = min_j A[i,j] ? label[j] : ∞       (min, id)
+
+``A[i, j] == 1`` iff the graph has a directed edge ``j → i`` (an
+*in-neighbour* matrix), so one row gathers exactly what the pull-based
+engine gathers per vertex.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the engine's
+scattered per-neighbour loads become an HBM→VMEM *block schedule*: each
+grid step stages one ``(TILE, TILE)`` adjacency tile and one ``(TILE,)``
+message-vector tile in VMEM, and the sum semiring engages the MXU through
+a dense contraction. ``interpret=True`` everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 256
+
+
+def _check_args(adj, x, tile):
+    n = adj.shape[0]
+    if adj.shape != (n, n):
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    if x.shape != (n,):
+        raise ValueError(f"vector shape {x.shape} does not match adjacency {adj.shape}")
+    if n % tile != 0:
+        raise ValueError(f"n={n} must be a multiple of tile={tile}")
+    return n
+
+
+def _sum_kernel(a_ref, x_ref, o_ref):
+    """One (row-tile, col-tile) step of the (+, ·) matvec.
+
+    The output tile is revisited across the column grid dimension and
+    accumulated in place; col step 0 initialises it. The contraction
+    ``a @ x`` is the MXU-shaped op on real hardware.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ x_ref[...]
+
+
+def _min_plus_kernel(a_ref, x_ref, o_ref, *, increment):
+    """One step of the (min, +increment) masked matvec."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    a = a_ref[...]
+    cand = jnp.where(a > 0, x_ref[...][None, :] + increment, jnp.inf)
+    o_ref[...] = jnp.minimum(o_ref[...], jnp.min(cand, axis=1))
+
+
+def _tiled_call(kernel, adj, x, tile):
+    n = _check_args(adj, x, tile)
+    grid = (n // tile, n // tile)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((tile,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(adj, x)
+
+
+def sum_matvec(adj, x, *, tile=DEFAULT_TILE):
+    """``out[i] = Σ_j adj[i, j] * x[j]`` — the PageRank gather."""
+    return _tiled_call(_sum_kernel, adj, x, tile)
+
+
+def min_plus_matvec(adj, x, *, increment=1.0, tile=DEFAULT_TILE):
+    """``out[i] = min_j (adj[i, j] > 0 ? x[j] + increment : ∞)``.
+
+    ``increment=1.0`` is the unit-weight SSSP relaxation;
+    ``increment=0.0`` is CC min-label propagation.
+    """
+    kernel = functools.partial(_min_plus_kernel, increment=increment)
+    return _tiled_call(kernel, adj, x, tile)

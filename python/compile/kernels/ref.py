@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These are deliberately the most obvious possible implementations; every
+kernel must match them to float tolerance for all shapes/dtypes pytest
+sweeps (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def sum_matvec(adj, x):
+    """out[i] = sum_j adj[i, j] * x[j]."""
+    return adj @ x
+
+
+def min_plus_matvec(adj, x, increment=1.0):
+    """out[i] = min_j (adj[i, j] > 0 ? x[j] + increment : inf)."""
+    cand = jnp.where(adj > 0, x[None, :] + increment, jnp.inf)
+    return jnp.min(cand, axis=1)
+
+
+def pagerank_step(adj, contrib, n_real, damping=0.85):
+    """One pull-based PageRank update over the dense block."""
+    return (1.0 - damping) / n_real + damping * (adj @ contrib)
+
+
+def pagerank_run(adj, rank, inv_outdeg, n_real, iterations=10, damping=0.85):
+    """``iterations`` PageRank updates (the fused artifact's semantics)."""
+    for _ in range(iterations):
+        contrib = rank * inv_outdeg
+        rank = pagerank_step(adj, contrib, n_real, damping)
+    return rank
+
+
+def sssp_relax(adj, dist):
+    """One unit-weight SSSP relaxation: dist' = min(dist, min-plus gather)."""
+    return jnp.minimum(dist, min_plus_matvec(adj, dist, 1.0))
+
+
+def cc_step(adj, label):
+    """One CC min-label propagation step."""
+    return jnp.minimum(label, min_plus_matvec(adj, label, 0.0))
+
+
+def batched_sum_matmul(adj, x):
+    """out[i, b] = sum_j adj[i, j] * x[j, b]."""
+    return adj @ x
+
+
+def batched_min_plus(adj, x, increment=1.0):
+    """out[i, b] = min_j (adj[i, j] > 0 ? x[j, b] + increment : inf)."""
+    cand = jnp.where(adj[:, :, None] > 0, x[None, :, :] + increment, jnp.inf)
+    return jnp.min(cand, axis=1)
+
+
+def multi_sssp_relax(adj, dists):
+    """One relaxation wave for a batch of sources (columns of dists)."""
+    return jnp.minimum(dists, batched_min_plus(adj, dists, 1.0))

@@ -1,0 +1,70 @@
+"""Layer-2 JAX model: the dense-block accelerated supersteps.
+
+Each function composes the Layer-1 Pallas kernels into one engine
+superstep over a padded dense adjacency block. ``aot.py`` lowers these
+once to HLO text; the Rust runtime (``rust/src/runtime/``) executes them
+via PJRT — Python never runs on the request path.
+
+Conventions shared with the Rust side (rust/src/runtime/accel.rs):
+
+- ``adj[i, j] == 1.0`` iff the graph has a directed edge ``j → i``
+  (in-neighbour matrix), padded with zeros to the compiled size ``n``;
+- PageRank: padded lanes carry ``inv_outdeg == 0`` so they contribute
+  nothing; the returned rank of a padded lane is the harmless constant
+  ``(1-d)/n_real``, which Rust ignores;
+- SSSP distances / CC labels: padded lanes hold ``+inf``.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import batched_min_plus, min_plus_matvec, sum_matvec
+
+DAMPING = 0.85
+PR_ITERATIONS = 10  # the paper's Table II PageRank configuration
+
+
+def pagerank_step(adj, contrib, n_real, *, tile):
+    """One PageRank update: ``(1-d)/n + d * (adj @ contrib)``.
+
+    ``contrib[j] = rank[j] / out_degree[j]`` is prepared by the caller
+    (Rust hot path or the fused loop below); ``n_real`` is the unpadded
+    vertex count as a traced f32 scalar.
+    """
+    sums = sum_matvec(adj, contrib, tile=tile)
+    return (1.0 - DAMPING) / n_real + DAMPING * sums
+
+
+def pagerank_run(adj, rank, inv_outdeg, n_real, *, tile, iterations=PR_ITERATIONS):
+    """The paper's full PR benchmark fused into one computation:
+    ``iterations`` damped updates with dangling mass dropped
+    (``inv_outdeg[j] == 0`` for dangling j), as in the Rust engine.
+    """
+
+    def body(_, r):
+        contrib = r * inv_outdeg
+        return pagerank_step(adj, contrib, n_real, tile=tile)
+
+    return lax.fori_loop(0, iterations, body, rank)
+
+
+def sssp_superstep(adj, dist, *, tile):
+    """One unit-weight SSSP relaxation wave over the block."""
+    cand = min_plus_matvec(adj, dist, increment=1.0, tile=tile)
+    return jnp.minimum(dist, cand)
+
+
+def cc_superstep(adj, label, *, tile):
+    """One CC min-label propagation wave over the block."""
+    cand = min_plus_matvec(adj, label, increment=0.0, tile=tile)
+    return jnp.minimum(label, cand)
+
+
+def multi_sssp_superstep(adj, dists, *, tile):
+    """Batched unit-weight SSSP wave: one column per source.
+
+    MXU-utilisation variant of ``sssp_superstep`` (EXPERIMENTS.md §Perf
+    L1): the batch dimension fills the systolic array on real hardware.
+    """
+    cand = batched_min_plus(adj, dists, increment=1.0, tile=tile)
+    return jnp.minimum(dists, cand)

@@ -1,0 +1,67 @@
+"""AOT pipeline checks: lowering works, HLO text parses, manifest sane.
+
+Uses a small n to keep lowering fast; `make artifacts` produces the real
+n=1024 artifacts.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+def test_artifact_specs_cover_all_models():
+    specs = aot.artifact_specs(n=16, tile=8)
+    names = [s[0] for s in specs]
+    assert names == [
+        "multi_sssp_relax",
+        "pagerank_step",
+        "pagerank_run",
+        "sssp_relax",
+        "cc_label",
+    ]
+
+
+@pytest.mark.parametrize("name_idx", range(5))
+def test_lowering_produces_parseable_hlo_text(name_idx):
+    import jax
+
+    name, fn, specs = aot.artifact_specs(n=16, tile=8)[name_idx]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), name
+    # The fused PR loop must contain a while op; steps must not.
+    if name == "pagerank_run":
+        assert "while" in text
+    assert "ENTRY" in text
+
+
+def test_aot_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--n", "16", "--tile", "8"],
+        check=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env,
+    )
+    files = sorted(p.name for p in out.iterdir())
+    assert "manifest.txt" in files
+    for name in ["pagerank_step", "pagerank_run", "sssp_relax", "cc_label", "multi_sssp_relax"]:
+        assert f"{name}.hlo.txt" in files
+        assert (out / f"{name}.hlo.txt").read_text().startswith("HloModule")
+    manifest = (out / "manifest.txt").read_text()
+    assert "n=16" in manifest and "tile=8" in manifest
+    assert f"pr_iterations={model.PR_ITERATIONS}" in manifest
+
+
+def test_aot_rejects_bad_tile(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--n", "10", "--tile", "8"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+    )
+    assert proc.returncode != 0

@@ -1,0 +1,68 @@
+"""Batched multi-source kernels vs oracles (hypothesis sweep)."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import batched, ref
+
+
+@st.composite
+def batched_case(draw):
+    tile = draw(st.sampled_from([4, 8]))
+    blocks = draw(st.integers(min_value=1, max_value=3))
+    batch = draw(st.sampled_from([1, 2, 5, 8]))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    density = draw(st.floats(min_value=0.0, max_value=0.8))
+    return tile, tile * blocks, batch, seed, density
+
+
+@given(batched_case())
+@settings(max_examples=30, deadline=None)
+def test_batched_sum_matches_ref(case):
+    tile, n, b, seed, density = case
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < density).astype(np.float32)
+    x = rng.random((n, b)).astype(np.float32)
+    got = batched.batched_sum_matmul(jnp.asarray(adj), jnp.asarray(x), tile=tile)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.batched_sum_matmul(adj, x)), rtol=1e-5, atol=1e-5
+    )
+
+
+@given(batched_case())
+@settings(max_examples=30, deadline=None)
+def test_batched_min_plus_matches_ref_and_columns(case):
+    tile, n, b, seed, density = case
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < density).astype(np.float32)
+    x = rng.random((n, b)).astype(np.float32) * 50
+    x[rng.random((n, b)) < 0.3] = np.inf
+    got = batched.batched_min_plus(jnp.asarray(adj), jnp.asarray(x), tile=tile)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.batched_min_plus(adj, x)))
+    # Column b of the batch must equal the single-vector kernel on column b.
+    from compile.kernels import matvec
+
+    for col in range(b):
+        single = matvec.min_plus_matvec(jnp.asarray(adj), jnp.asarray(x[:, col]), tile=tile)
+        np.testing.assert_allclose(np.asarray(got)[:, col], np.asarray(single))
+
+
+def test_multi_sssp_superstep_waves():
+    # Ring of 16, sources at 0 and 8: columns advance independent waves.
+    n, tile = 16, 8
+    adj = np.zeros((n, n), np.float32)
+    for v in range(n):
+        adj[v, (v - 1) % n] = adj[v, (v + 1) % n] = 1.0
+    d = np.full((n, 2), np.inf, np.float32)
+    d[0, 0] = 0.0
+    d[8, 1] = 0.0
+    cur = jnp.asarray(d)
+    for _ in range(8):
+        cur = model.multi_sssp_superstep(jnp.asarray(adj), cur, tile=tile)
+    got = np.asarray(cur)
+    for v in range(n):
+        assert got[v, 0] == min(v, n - v), v
+        assert got[v, 1] == min(abs(v - 8), n - abs(v - 8)), v

@@ -1,0 +1,94 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, tiles, densities and value ranges; every kernel
+must match ref.py to float tolerance. This is the core correctness signal
+for the accelerated path.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import matvec, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def random_adj(rng, n, density):
+    return (rng.random((n, n)) < density).astype(np.float32)
+
+
+@st.composite
+def matvec_case(draw):
+    tile = draw(st.sampled_from([4, 8, 16]))
+    blocks = draw(st.integers(min_value=1, max_value=4))
+    n = tile * blocks
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    density = draw(st.floats(min_value=0.0, max_value=1.0))
+    return tile, n, seed, density
+
+
+@given(matvec_case())
+@settings(max_examples=40, deadline=None)
+def test_sum_matvec_matches_ref(case):
+    tile, n, seed, density = case
+    rng = np.random.default_rng(seed)
+    adj = random_adj(rng, n, density)
+    x = rng.random(n).astype(np.float32)
+    got = matvec.sum_matvec(jnp.asarray(adj), jnp.asarray(x), tile=tile)
+    want = ref.sum_matvec(jnp.asarray(adj), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(matvec_case(), st.sampled_from([0.0, 1.0]))
+@settings(max_examples=40, deadline=None)
+def test_min_plus_matvec_matches_ref(case, increment):
+    tile, n, seed, density = case
+    rng = np.random.default_rng(seed)
+    adj = random_adj(rng, n, density)
+    # Mix of finite values and +inf (unreached vertices).
+    x = rng.random(n).astype(np.float32) * 100
+    x[rng.random(n) < 0.3] = np.inf
+    got = matvec.min_plus_matvec(
+        jnp.asarray(adj), jnp.asarray(x), increment=increment, tile=tile
+    )
+    want = ref.min_plus_matvec(jnp.asarray(adj), jnp.asarray(x), increment)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_kernels_support_dtypes(dtype):
+    n, tile = 16, 8
+    rng = np.random.default_rng(0)
+    adj = jnp.asarray(random_adj(rng, n, 0.4), dtype=dtype)
+    x = jnp.asarray(rng.random(n), dtype=dtype)
+    got = matvec.sum_matvec(adj, x, tile=tile)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.sum_matvec(adj, x)), rtol=1e-5
+    )
+    got_min = matvec.min_plus_matvec(adj, x, tile=tile)
+    assert got_min.dtype == dtype
+
+
+def test_empty_adjacency_gives_identity_semantics():
+    n, tile = 8, 4
+    adj = jnp.zeros((n, n), jnp.float32)
+    x = jnp.arange(n, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(matvec.sum_matvec(adj, x, tile=tile)), 0.0)
+    got = matvec.min_plus_matvec(adj, x, tile=tile)
+    assert np.all(np.isinf(np.asarray(got)))
+
+
+def test_shape_validation():
+    adj = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="multiple of tile"):
+        matvec.sum_matvec(adj, jnp.zeros(8), tile=3)
+    with pytest.raises(ValueError, match="square"):
+        matvec.sum_matvec(jnp.zeros((8, 4)), jnp.zeros(8), tile=4)
+    with pytest.raises(ValueError, match="does not match"):
+        matvec.sum_matvec(adj, jnp.zeros(4), tile=4)

@@ -1,0 +1,94 @@
+//! Combiner micro-benchmarks (§III) — the measurements that calibrate the
+//! virtual testbed's synchronisation costs.
+//!
+//! Reports ns/delivery for lock, CAS-neutral and hybrid strategies:
+//! uncontended single-thread, first-push-heavy, and multi-thread hammer
+//! on one slot (real contention — threads interleave even on one core).
+//!
+//! Run: `cargo bench --bench bench_combiners`
+
+use ipregel::combine::{MinCombiner, MsgSlot, Strategy, SumCombiner};
+use ipregel::metrics::TablePrinter;
+use ipregel::util::timer::ns_per_iter;
+use std::sync::Arc;
+
+const STRATEGIES: [Strategy; 3] = [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid];
+
+fn uncontended_steady(strategy: Strategy, iters: usize) -> f64 {
+    // Slot already populated: measures the steady-state combine path.
+    let slot: MsgSlot<u64> = MsgSlot::new();
+    strategy.reset_slot(&slot, &MinCombiner);
+    strategy.deliver(&slot, u64::MAX - 1, &MinCombiner);
+    let mut x = 1u64;
+    ns_per_iter(iters, || {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+        strategy.deliver(&slot, x | 1, &MinCombiner);
+    })
+}
+
+fn first_push_heavy(strategy: Strategy, iters: usize) -> f64 {
+    // Fresh slot every delivery: measures the first-push path (the case
+    // hybrid routes through its lock).
+    let slots: Vec<MsgSlot<u64>> = (0..4096).map(|_| MsgSlot::new()).collect();
+    for s in &slots {
+        strategy.reset_slot(s, &SumCombiner);
+    }
+    let mut i = 0usize;
+    ns_per_iter(iters, || {
+        strategy.deliver(&slots[i & 4095], 7, &SumCombiner);
+        i += 1;
+        if i & 4095 == 0 {
+            for s in &slots {
+                let _ = strategy.collect(s, &SumCombiner);
+                strategy.reset_slot(s, &SumCombiner);
+            }
+        }
+    })
+}
+
+fn contended(strategy: Strategy, threads: usize, per_thread: usize) -> f64 {
+    let slot: Arc<MsgSlot<u64>> = Arc::new(MsgSlot::new());
+    strategy.reset_slot(&slot, &SumCombiner);
+    let t = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let slot = Arc::clone(&slot);
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    strategy.deliver(&slot, ((tid * per_thread + i) % 97 + 1) as u64, &SumCombiner);
+                }
+            });
+        }
+    });
+    let elapsed = t.elapsed().as_nanos() as f64;
+    let got = strategy.collect(&slot, &SumCombiner).unwrap();
+    assert!(got > 0);
+    elapsed / (threads * per_thread) as f64
+}
+
+fn main() {
+    let iters: usize = std::env::var("BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000_000);
+    println!("== combiner micro-benchmarks (ns/delivery, iters={iters}) ==\n");
+    let mut t = TablePrinter::new(&[
+        "strategy",
+        "steady (uncontended)",
+        "first-push heavy",
+        "contended x4",
+    ]);
+    for s in STRATEGIES {
+        t.row(vec![
+            format!("{s:?}"),
+            format!("{:.1}", uncontended_steady(s, iters)),
+            format!("{:.1}", first_push_heavy(s, iters)),
+            format!("{:.1}", contended(s, 4, iters / 20)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expectation (paper §III): hybrid ≈ CAS in steady state, ≈ lock on\n\
+         first push; lock worst under contention. Feeds sim::CostModel."
+    );
+}

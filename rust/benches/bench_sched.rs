@@ -1,0 +1,80 @@
+//! Scheduling micro-benchmarks (§V): virtual-machine makespans for every
+//! policy on power-law workloads, a dynamic-chunk-size sweep (the paper's
+//! empirical 256), plus the real `parallel_for` dispatch overhead.
+//!
+//! Run: `cargo bench --bench bench_sched`
+
+use ipregel::metrics::TablePrinter;
+use ipregel::sched::{parallel_for, Schedule};
+use ipregel::sim::VirtualMachine;
+use ipregel::util::quick::skewed_degrees;
+use ipregel::util::rng::Rng;
+use ipregel::util::timer::Timer;
+
+fn makespan(sched: Schedule, costs: &[f64], weights: &[u64], threads: usize) -> (f64, f64) {
+    let mut vm = VirtualMachine::new(threads);
+    let stats = vm.region(sched, costs, Some(weights), 25.0);
+    (stats.makespan_ns, stats.imbalance)
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let n = 1 << 20;
+    let threads = 32;
+    // Per-item cost ∝ degree (the §V-A premise) over a power-law degree
+    // sequence — the canonical vertex-centric workload shape.
+    let degrees = skewed_degrees(&mut rng, n, 50_000);
+    let costs: Vec<f64> = degrees.iter().map(|&d| 4.0 + d as f64 * 2.0).collect();
+
+    println!("== schedule makespans: 2^20 power-law items, 32 virtual threads ==\n");
+    let mut t = TablePrinter::new(&["schedule", "makespan (ms)", "imbalance"]);
+    for (name, sched) in [
+        ("static", Schedule::Static),
+        ("dynamic:256", Schedule::Dynamic { chunk: 256 }),
+        ("dynamic:16", Schedule::Dynamic { chunk: 16 }),
+        ("guided", Schedule::Guided { min_chunk: 64 }),
+        ("edge-centric", Schedule::EdgeCentric),
+    ] {
+        let (ms, imb) = makespan(sched, &costs, &degrees, threads);
+        t.row(vec![
+            name.into(),
+            format!("{:.3}", ms / 1e6),
+            format!("{imb:.3}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("== dynamic chunk-size sweep (paper: 256 is the sweet spot) ==\n");
+    let mut t2 = TablePrinter::new(&["chunk", "makespan (ms)", "imbalance"]);
+    for chunk in [1usize, 16, 64, 256, 1024, 8192, 65_536] {
+        let (ms, imb) = makespan(Schedule::Dynamic { chunk }, &costs, &degrees, threads);
+        t2.row(vec![
+            chunk.to_string(),
+            format!("{:.3}", ms / 1e6),
+            format!("{imb:.3}"),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    println!("== real parallel_for dispatch overhead (4 threads, empty body) ==\n");
+    let mut t3 = TablePrinter::new(&["schedule", "µs/region"]);
+    for (name, sched) in [
+        ("static", Schedule::Static),
+        ("dynamic:256", Schedule::Dynamic { chunk: 256 }),
+        ("edge-centric", Schedule::EdgeCentric),
+    ] {
+        let w: Vec<u64> = vec![1; 10_000];
+        let reps = 200;
+        let timer = Timer::start();
+        for _ in 0..reps {
+            parallel_for(4, 10_000, sched, Some(&w), |_, r| {
+                std::hint::black_box(r.len());
+            });
+        }
+        t3.row(vec![
+            name.into(),
+            format!("{:.1}", timer.elapsed().as_micros() as f64 / reps as f64),
+        ]);
+    }
+    println!("{}", t3.render());
+}

@@ -1,0 +1,52 @@
+//! End-to-end Table II bench target: regenerates the paper's results
+//! table on the catalog analogues (tiny catalog by default so
+//! `cargo bench` stays fast; set `BENCH_FULL=1` for the record run used
+//! in EXPERIMENTS.md).
+//!
+//! Run: `cargo bench --bench bench_table2`
+//!       BENCH_FULL=1 cargo bench --bench bench_table2
+
+use ipregel::exp::{table2, Bench, Table2Options};
+use ipregel::graph::catalog;
+use ipregel::util::timer::{fmt_duration, Timer};
+use std::path::PathBuf;
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let dir = PathBuf::from(
+        std::env::var("IPREGEL_GRAPHS").unwrap_or_else(|_| "data/graphs".into()),
+    );
+    let entries = if full {
+        catalog::catalog()
+    } else {
+        catalog::catalog_tiny()
+    };
+    println!(
+        "== Table II end-to-end ({} catalog, 32 virtual threads) ==",
+        if full { "FULL" } else { "tiny" }
+    );
+    let mut graphs = Vec::new();
+    for e in &entries {
+        let t = Timer::start();
+        let g = e.load_or_generate(&dir).expect("graph generation");
+        eprintln!(
+            "  {:<16} |V|={:<9} |E|={:<11} ({})",
+            e.name,
+            g.num_vertices(),
+            g.num_edges(),
+            fmt_duration(t.elapsed())
+        );
+        graphs.push((e.stands_for.to_string(), g));
+    }
+    let opts = Table2Options {
+        threads: 32,
+        benches: Bench::all().to_vec(),
+        dynamic_chunk_override: if full { None } else { Some(16) },
+    };
+    let t = Timer::start();
+    let results = table2::run_table2(&graphs, &opts);
+    let names: Vec<String> = graphs.iter().map(|(n, _)| n.clone()).collect();
+    println!("{}", table2::render(&names, &results));
+    println!("{}", table2::summary(&results));
+    println!("\n(total bench time {})", fmt_duration(t.elapsed()));
+}

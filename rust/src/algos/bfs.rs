@@ -1,0 +1,128 @@
+//! Breadth-first search levels + parents (extra API exercise: push mode
+//! with a compound value).
+
+use crate::combine::MinCombiner;
+use crate::engine::{Context, Mode, VertexProgram};
+use crate::graph::csr::{Csr, VertexId};
+
+/// Per-vertex BFS state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BfsState {
+    /// BFS level (u32::MAX = unreached).
+    pub level: u32,
+    /// Discovering parent (u32::MAX = none/root).
+    pub parent: VertexId,
+}
+
+/// BFS program. Messages encode `(level+1) << 32 | sender` so the min
+/// combiner picks the lowest level and, within a level, the lowest parent
+/// id — a deterministic parent assignment under any thread interleaving.
+#[derive(Clone, Copy, Debug)]
+pub struct Bfs {
+    /// Root vertex.
+    pub root: VertexId,
+}
+
+impl VertexProgram for Bfs {
+    type Value = BfsState;
+    type Message = u64;
+    type Comb = MinCombiner;
+
+    fn mode(&self) -> Mode {
+        Mode::Push
+    }
+
+    fn combiner(&self) -> MinCombiner {
+        MinCombiner
+    }
+
+    fn init(&self, _g: &Csr, v: VertexId) -> BfsState {
+        if v == self.root {
+            BfsState {
+                level: 0,
+                parent: VertexId::MAX,
+            }
+        } else {
+            BfsState {
+                level: u32::MAX,
+                parent: VertexId::MAX,
+            }
+        }
+    }
+
+    fn initially_active(&self, _g: &Csr, v: VertexId) -> bool {
+        v == self.root
+    }
+
+    fn compute<C: Context<BfsState, u64>>(&self, ctx: &mut C, msg: Option<u64>) {
+        let discovered = if ctx.superstep() == 0 && ctx.id() == self.root {
+            true
+        } else if let Some(m) = msg {
+            let level = (m >> 32) as u32;
+            let parent = (m & 0xFFFF_FFFF) as VertexId;
+            if level < ctx.value().level {
+                *ctx.value_mut() = BfsState { level, parent };
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        if discovered {
+            let my_level = ctx.value().level;
+            let me = ctx.id() as u64;
+            ctx.broadcast(((my_level as u64 + 1) << 32) | me);
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::reference;
+    use crate::engine::{run, EngineConfig};
+    use crate::graph::gen;
+
+    #[test]
+    fn levels_match_reference() {
+        let g = gen::rmat(8, 3, 0.57, 0.19, 0.19, 31);
+        let root = g.max_out_degree_vertex();
+        let got = run(&g, &Bfs { root }, EngineConfig::default().bypass(true));
+        let want = reference::bfs_levels(&g, root);
+        for v in g.vertices() {
+            let lvl = got.values[v as usize].level;
+            let want_lvl = want[v as usize];
+            let got64 = if lvl == u32::MAX { u64::MAX } else { lvl as u64 };
+            assert_eq!(got64, want_lvl, "v{v}");
+        }
+    }
+
+    #[test]
+    fn parents_are_consistent() {
+        let g = gen::grid(6, 6);
+        let got = run(&g, &Bfs { root: 0 }, EngineConfig::default().threads(4));
+        for v in g.vertices() {
+            let st = got.values[v as usize];
+            if v == 0 {
+                assert_eq!(st.level, 0);
+                continue;
+            }
+            // Parent must be a real in-neighbour one level up.
+            let p = st.parent;
+            assert!(g.in_neighbors(v).contains(&p), "v{v} parent {p}");
+            assert_eq!(got.values[p as usize].level + 1, st.level);
+        }
+    }
+
+    #[test]
+    fn deterministic_parent_under_threads() {
+        let g = gen::complete(12);
+        let a = run(&g, &Bfs { root: 3 }, EngineConfig::default().threads(1));
+        let b = run(&g, &Bfs { root: 3 }, EngineConfig::default().threads(8));
+        for v in g.vertices() {
+            assert_eq!(a.values[v as usize], b.values[v as usize]);
+        }
+    }
+}

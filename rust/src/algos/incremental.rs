@@ -1,0 +1,172 @@
+//! Incremental connected components — the paper's §VIII future-work
+//! direction ("incrementalisation … could unlock a new level of
+//! performance", citing Zakian et al. IPDPS'19).
+//!
+//! After *edge insertions*, min-labels can only decrease, so the previous
+//! fixpoint is a valid warm start: seed every vertex with its old label
+//! and activate only the endpoints of the new edges. The wave then
+//! touches just the vertices whose component actually changed, instead of
+//! re-converging from scratch. (Deletions can *raise* labels and
+//! invalidate the warm start; [`IncrementalCc::supports`] rejects them.)
+
+use crate::combine::MinCombiner;
+use crate::engine::{run, Context, EngineConfig, Mode, RunResult, VertexProgram};
+use crate::graph::csr::{Csr, VertexId};
+use crate::graph::GraphBuilder;
+
+/// Warm-started min-label propagation.
+pub struct IncrementalCc {
+    /// Converged labels of the pre-update graph.
+    pub prior: Vec<u32>,
+    /// Endpoints of the inserted edges (the initially active set).
+    pub touched: Vec<VertexId>,
+}
+
+impl IncrementalCc {
+    /// Whether a batch of updates is warm-startable (insert-only).
+    pub fn supports(inserts: usize, deletes: usize) -> bool {
+        inserts > 0 && deletes == 0
+    }
+}
+
+impl VertexProgram for IncrementalCc {
+    type Value = u32;
+    type Message = u32;
+    type Comb = MinCombiner;
+
+    fn mode(&self) -> Mode {
+        Mode::Pull
+    }
+
+    fn combiner(&self) -> MinCombiner {
+        MinCombiner
+    }
+
+    fn init(&self, _g: &Csr, v: VertexId) -> u32 {
+        self.prior[v as usize]
+    }
+
+    fn initially_active(&self, _g: &Csr, v: VertexId) -> bool {
+        self.touched.contains(&v)
+    }
+
+    fn compute<C: Context<u32, u32>>(&self, ctx: &mut C, msg: Option<u32>) {
+        // Superstep 0: the touched endpoints re-announce their labels so
+        // the two merged components can see each other. Afterwards:
+        // standard min-label propagation.
+        if ctx.superstep() == 0 {
+            let label = *ctx.value();
+            ctx.broadcast(label);
+        } else if let Some(m) = msg {
+            if m < *ctx.value() {
+                *ctx.value_mut() = m;
+                ctx.broadcast(m);
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// Apply insert-only updates to `g` and incrementally repair `labels`.
+/// Returns the new graph, the repaired labels, and the run metrics.
+pub fn insert_edges(
+    g: &Csr,
+    labels: &[u32],
+    inserts: &[(VertexId, VertexId)],
+    cfg: EngineConfig,
+) -> (Csr, RunResult<u32>) {
+    let mut gb = GraphBuilder::new(g.num_vertices()).symmetric(true);
+    for (s, d) in g.edges() {
+        // Existing edges are already symmetric pairs; keep one direction.
+        if s <= d {
+            gb.push_edge(s, d);
+        }
+    }
+    for &(s, d) in inserts {
+        gb.push_edge(s, d);
+    }
+    let g2 = gb.build();
+    let touched: Vec<VertexId> = inserts.iter().flat_map(|&(s, d)| [s, d]).collect();
+    let prog = IncrementalCc {
+        prior: labels.to_vec(),
+        touched,
+    };
+    let result = run(&g2, &prog, cfg.bypass(true));
+    (g2, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{reference, ConnectedComponents};
+    use crate::graph::gen;
+    use crate::util::quick;
+
+    #[test]
+    fn merging_two_rings_updates_only_the_higher_labelled_one() {
+        let g = gen::disjoint_rings(2, 30); // components {0..30}, {30..60}
+        let base = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+        let (g2, inc) = insert_edges(&g, &base.values, &[(5, 45)], EngineConfig::default());
+        // All vertices now share label 0.
+        assert!(inc.values.iter().all(|&l| l == 0));
+        assert_eq!(inc.values, reference::connected_components(&g2));
+        // The warm start touches far fewer vertices than a cold rerun.
+        let cold = run(&g2, &ConnectedComponents, EngineConfig::default().bypass(true));
+        assert!(
+            inc.metrics.total_activations() < cold.metrics.total_activations(),
+            "incremental {} vs cold {}",
+            inc.metrics.total_activations(),
+            cold.metrics.total_activations()
+        );
+    }
+
+    #[test]
+    fn insert_within_a_component_converges_immediately() {
+        let g = gen::ring(50);
+        let base = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+        let (g2, inc) = insert_edges(&g, &base.values, &[(3, 30)], EngineConfig::default());
+        assert_eq!(inc.values, reference::connected_components(&g2));
+        // Labels unchanged → the wave dies after the re-announcement.
+        assert!(inc.metrics.num_supersteps() <= 3);
+    }
+
+    #[test]
+    fn supports_rejects_deletions() {
+        assert!(IncrementalCc::supports(3, 0));
+        assert!(!IncrementalCc::supports(3, 1));
+        assert!(!IncrementalCc::supports(0, 0));
+    }
+
+    #[test]
+    fn prop_incremental_equals_cold_recompute() {
+        quick::check("incremental CC == cold CC", |rng| {
+            let n = 10 + rng.below(150) as usize;
+            let edges = quick::random_edges(rng, n, n);
+            let g = GraphBuilder::new(n)
+                .symmetric(true)
+                .drop_self_loops(true)
+                .edges(&edges)
+                .build();
+            let base = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+            let k = 1 + rng.below(5) as usize;
+            let inserts: Vec<(VertexId, VertexId)> = (0..k)
+                .map(|_| {
+                    (
+                        rng.below(n as u64) as VertexId,
+                        rng.below(n as u64) as VertexId,
+                    )
+                })
+                .filter(|&(s, d)| s != d)
+                .collect();
+            if inserts.is_empty() {
+                return Ok(());
+            }
+            let (g2, inc) = insert_edges(&g, &base.values, &inserts, EngineConfig::default());
+            let want = reference::connected_components(&g2);
+            if inc.values != want {
+                return Err(format!("labels differ after {inserts:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! k-core membership: iteratively prune vertices of degree < k.
+//!
+//! A push-mode program with a sum combiner: a vertex that falls out of
+//! the core broadcasts a removal notice; survivors decrement their
+//! remaining degree by the combined count. The fixpoint marks exactly
+//! the k-core (the maximal subgraph with all degrees ≥ k).
+
+use crate::combine::SumCombiner;
+use crate::engine::{Context, Mode, VertexProgram};
+use crate::graph::csr::{Csr, VertexId};
+
+/// Per-vertex k-core state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoreState {
+    /// Still in the candidate core.
+    pub alive: bool,
+    /// Degree counting only still-alive neighbours.
+    pub remaining_degree: u64,
+}
+
+/// k-core program.
+#[derive(Clone, Copy, Debug)]
+pub struct KCore {
+    /// The core order `k`.
+    pub k: u64,
+}
+
+impl VertexProgram for KCore {
+    type Value = CoreState;
+    type Message = u64;
+    type Comb = SumCombiner;
+
+    fn mode(&self) -> Mode {
+        Mode::Push
+    }
+
+    fn combiner(&self) -> SumCombiner {
+        SumCombiner
+    }
+
+    fn init(&self, g: &Csr, v: VertexId) -> CoreState {
+        CoreState {
+            alive: true,
+            remaining_degree: g.out_degree(v) as u64,
+        }
+    }
+
+    fn compute<C: Context<CoreState, u64>>(&self, ctx: &mut C, msg: Option<u64>) {
+        let mut st = *ctx.value();
+        if st.alive {
+            if let Some(removed) = msg {
+                st.remaining_degree = st.remaining_degree.saturating_sub(removed);
+            }
+            if st.remaining_degree < self.k {
+                st.alive = false;
+                *ctx.value_mut() = st;
+                ctx.broadcast(1); // tell neighbours one more of theirs left
+            } else {
+                *ctx.value_mut() = st;
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// Serial reference: repeated pruning.
+pub fn kcore_reference(g: &Csr, k: u64) -> Vec<bool> {
+    let n = g.num_vertices();
+    let mut alive = vec![true; n];
+    let mut deg: Vec<u64> = g.vertices().map(|v| g.out_degree(v) as u64).collect();
+    loop {
+        let mut changed = false;
+        for v in 0..n {
+            if alive[v] && deg[v] < k {
+                alive[v] = false;
+                changed = true;
+                for &u in g.out_neighbors(v as VertexId) {
+                    deg[u as usize] = deg[u as usize].saturating_sub(1);
+                }
+            }
+        }
+        if !changed {
+            return alive;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combine::Strategy;
+    use crate::engine::{run, EngineConfig};
+    use crate::graph::gen;
+
+    #[test]
+    fn ring_is_a_2core_but_not_3core() {
+        let g = gen::ring(20);
+        let r2 = run(&g, &KCore { k: 2 }, EngineConfig::default());
+        assert!(r2.values.iter().all(|s| s.alive));
+        let r3 = run(&g, &KCore { k: 3 }, EngineConfig::default());
+        assert!(r3.values.iter().all(|s| !s.alive));
+    }
+
+    #[test]
+    fn star_collapses_entirely_at_k2() {
+        // Leaves die (degree 1), then the hub follows.
+        let g = gen::star(50);
+        let r = run(&g, &KCore { k: 2 }, EngineConfig::default().bypass(true));
+        assert!(r.values.iter().all(|s| !s.alive));
+    }
+
+    #[test]
+    fn matches_reference_on_random_graphs_all_strategies() {
+        let g = gen::barabasi_albert(500, 3, 6);
+        for k in [2u64, 3, 4, 5] {
+            let want = kcore_reference(&g, k);
+            for strategy in [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+                let got = run(
+                    &g,
+                    &KCore { k },
+                    EngineConfig::default().threads(4).strategy(strategy).bypass(true),
+                );
+                let got_alive: Vec<bool> = got.values.iter().map(|s| s.alive).collect();
+                assert_eq!(got_alive, want, "k={k} {strategy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn survivors_have_degree_at_least_k_within_core() {
+        let g = gen::rmat(9, 6, 0.57, 0.19, 0.19, 8);
+        let k = 4u64;
+        let r = run(&g, &KCore { k }, EngineConfig::default().bypass(true));
+        for v in g.vertices() {
+            if r.values[v as usize].alive {
+                let core_deg = g
+                    .out_neighbors(v)
+                    .iter()
+                    .filter(|&&u| r.values[u as usize].alive)
+                    .count() as u64;
+                assert!(core_deg >= k, "v{v} core degree {core_deg}");
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! The benchmark algorithms, written against the public Pregel API.
+//!
+//! These are the paper's three benchmarks — PageRank (pull
+//! single-broadcast), Connected Components (pull + selection bypass) and
+//! unweighted SSSP (push + combiner + selection bypass) — plus smaller
+//! programs exercising other corners of the API. Per the paper's
+//! programmability thesis, **no algorithm references any optimisation**:
+//! the same `compute` text runs under every engine configuration.
+
+pub mod bfs;
+pub mod cc;
+pub mod degree;
+pub mod incremental;
+pub mod kcore;
+pub mod maxval;
+pub mod pagerank;
+pub mod pagerank_dangling;
+pub mod reference;
+pub mod sssp;
+
+pub use bfs::Bfs;
+pub use cc::ConnectedComponents;
+pub use degree::DegreeCount;
+pub use incremental::IncrementalCc;
+pub use kcore::{CoreState, KCore};
+pub use maxval::MaxValue;
+pub use pagerank::PageRank;
+pub use pagerank_dangling::DanglingPageRank;
+pub use sssp::{Sssp, UNREACHED};

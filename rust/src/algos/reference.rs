@@ -1,0 +1,134 @@
+//! Serial reference implementations used to validate every engine
+//! configuration. Straight-line, obviously-correct code — no parallelism,
+//! no framework.
+
+use crate::graph::csr::{Csr, VertexId};
+use std::collections::VecDeque;
+
+/// Serial PageRank with the same semantics as [`crate::algos::PageRank`]:
+/// `iterations` pull updates, damping `d`, dangling mass dropped.
+pub fn pagerank(g: &Csr, iterations: usize, d: f64) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut rank = vec![1.0 / n as f64; n];
+    for _ in 0..iterations {
+        let contrib: Vec<f64> = g
+            .vertices()
+            .map(|v| {
+                let deg = g.out_degree(v);
+                if deg > 0 {
+                    rank[v as usize] / deg as f64
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let mut next = vec![(1.0 - d) / n as f64; n];
+        for v in g.vertices() {
+            let sum: f64 = g.in_neighbors(v).iter().map(|&u| contrib[u as usize]).sum();
+            next[v as usize] += d * sum;
+        }
+        rank = next;
+    }
+    rank
+}
+
+/// Serial connected components via union-find; labels = min vertex id of
+/// the component (matching min-label propagation's fixpoint).
+pub fn connected_components(g: &Csr) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+    for (s, d) in g.edges() {
+        let (rs, rd) = (find(&mut parent, s), find(&mut parent, d));
+        if rs != rd {
+            // Union by min id keeps the min-label invariant directly.
+            let (lo, hi) = if rs < rd { (rs, rd) } else { (rd, rs) };
+            parent[hi as usize] = lo;
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+/// Serial BFS levels from `root` following out-edges; `u64::MAX` =
+/// unreached. Matches unweighted SSSP distances.
+pub fn bfs_levels(g: &Csr, root: VertexId) -> Vec<u64> {
+    let n = g.num_vertices();
+    let mut level = vec![u64::MAX; n];
+    if n == 0 {
+        return level;
+    }
+    let mut q = VecDeque::new();
+    level[root as usize] = 0;
+    q.push_back(root);
+    while let Some(v) = q.pop_front() {
+        let next = level[v as usize] + 1;
+        for &u in g.out_neighbors(v) {
+            if level[u as usize] == u64::MAX {
+                level[u as usize] = next;
+                q.push_back(u);
+            }
+        }
+    }
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::util::quick;
+
+    #[test]
+    fn bfs_on_path_is_identity() {
+        let g = gen::path(6);
+        assert_eq!(bfs_levels(&g, 0), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn cc_counts_components() {
+        let g = gen::disjoint_rings(5, 4);
+        let labels = connected_components(&g);
+        let mut uniq: Vec<u32> = labels.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq, vec![0, 4, 8, 12, 16]);
+    }
+
+    #[test]
+    fn pagerank_uniform_on_regular_graph() {
+        let g = gen::ring(20);
+        let pr = pagerank(&g, 10, 0.85);
+        for &r in &pr {
+            assert!((r - 0.05).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn prop_cc_labels_are_component_minima() {
+        quick::check("cc labels are minima", |rng| {
+            let n = 2 + rng.below(60) as usize;
+            let edges = quick::random_edges(rng, n, n * 2);
+            let g = crate::graph::GraphBuilder::new(n)
+                .symmetric(true)
+                .edges(&edges)
+                .build();
+            let labels = connected_components(&g);
+            for v in 0..n {
+                // Label must be ≤ v and share v's component.
+                if labels[v] > v as u32 {
+                    return Err(format!("label[{v}]={} exceeds id", labels[v]));
+                }
+                if labels[labels[v] as usize] != labels[v] {
+                    return Err(format!("label of label not fixed at {v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! Single-Source Shortest Path — the paper's SSSP benchmark.
+//!
+//! Unweighted (every edge costs 1), push-based: distance improvements are
+//! *sent* to out-neighbours and merged by a min-combiner in the recipient
+//! mailbox. This is the benchmark where the hybrid combiner (§III)
+//! applies — PR and CC use the lock-free pull version instead.
+
+use crate::combine::MinCombiner;
+use crate::engine::{Context, Mode, VertexProgram};
+use crate::graph::csr::{Csr, VertexId};
+
+/// Distance value for unreached vertices.
+pub const UNREACHED: u64 = u64::MAX;
+
+/// SSSP program. Value = current best distance from the source.
+#[derive(Clone, Copy, Debug)]
+pub struct Sssp {
+    /// Source vertex. The Table II experiments source from the
+    /// max-out-degree vertex so the traversal covers the giant component.
+    pub source: VertexId,
+}
+
+impl Sssp {
+    /// SSSP from the graph's maximum-degree hub (the experiment default).
+    pub fn from_hub(g: &Csr) -> Self {
+        Sssp {
+            source: g.max_out_degree_vertex(),
+        }
+    }
+}
+
+impl VertexProgram for Sssp {
+    type Value = u64;
+    type Message = u64;
+    type Comb = MinCombiner;
+
+    fn mode(&self) -> Mode {
+        Mode::Push
+    }
+
+    fn combiner(&self) -> MinCombiner {
+        MinCombiner
+    }
+
+    fn init(&self, _g: &Csr, v: VertexId) -> u64 {
+        if v == self.source {
+            0
+        } else {
+            UNREACHED
+        }
+    }
+
+    fn initially_active(&self, _g: &Csr, v: VertexId) -> bool {
+        v == self.source
+    }
+
+    fn compute<C: Context<u64, u64>>(&self, ctx: &mut C, msg: Option<u64>) {
+        let improved = if ctx.superstep() == 0 && ctx.id() == self.source {
+            true // seed the frontier
+        } else if let Some(m) = msg {
+            if m < *ctx.value() {
+                *ctx.value_mut() = m;
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        if improved {
+            let next = *ctx.value() + 1;
+            ctx.broadcast(next);
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::reference;
+    use crate::combine::Strategy;
+    use crate::engine::{run, EngineConfig};
+    use crate::graph::gen;
+
+    #[test]
+    fn path_graph_distances_are_positions() {
+        let g = gen::path(10);
+        let got = run(&g, &Sssp { source: 0 }, EngineConfig::default().bypass(true));
+        for v in 0..10 {
+            assert_eq!(got.values[v], v as u64);
+        }
+    }
+
+    #[test]
+    fn matches_bfs_reference_all_strategies() {
+        let g = gen::rmat(9, 4, 0.57, 0.19, 0.19, 17);
+        let p = Sssp::from_hub(&g);
+        let want = reference::bfs_levels(&g, p.source);
+        for strategy in [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+            let got = run(
+                &g,
+                &p,
+                EngineConfig::default()
+                    .threads(4)
+                    .strategy(strategy)
+                    .bypass(true),
+            );
+            assert_eq!(got.values, want, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn unreachable_vertices_stay_unreached() {
+        let g = gen::disjoint_rings(2, 4); // two components
+        let got = run(&g, &Sssp { source: 0 }, EngineConfig::default());
+        for v in 0..4 {
+            assert!(got.values[v] < UNREACHED);
+        }
+        for v in 4..8 {
+            assert_eq!(got.values[v], UNREACHED);
+        }
+    }
+
+    #[test]
+    fn frontier_sizes_trace_bfs_waves() {
+        let g = gen::path(50);
+        let got = run(&g, &Sssp { source: 0 }, EngineConfig::default().bypass(true));
+        // Path: each wave advances one hop; the frontier holds the new
+        // vertex plus the (non-improving) echo back to its predecessor.
+        for s in &got.metrics.supersteps {
+            assert!(s.active_vertices <= 2, "{}", s.active_vertices);
+        }
+        // 49 hops + the final echo-only superstep.
+        assert!(
+            (50..=51).contains(&got.metrics.num_supersteps()),
+            "{}",
+            got.metrics.num_supersteps()
+        );
+    }
+}

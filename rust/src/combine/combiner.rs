@@ -1,0 +1,147 @@
+//! User-definable combine operations.
+//!
+//! A combiner merges two messages destined for the same vertex into one
+//! (Pregel's message-reduction hook). It must be commutative and
+//! associative — the engine combines in arbitrary interleavings.
+
+/// A commutative, associative merge of two messages.
+pub trait Combiner<M>: Send + Sync {
+    /// Combine `a` and `b` into a single message.
+    fn combine(&self, a: M, b: M) -> M;
+
+    /// A neutral element, if one exists for this operation
+    /// (`combine(n, x) == x`). Required by the pure-CAS strategy; the
+    /// hybrid strategy works without one — that is precisely its point.
+    fn neutral(&self) -> Option<M> {
+        None
+    }
+}
+
+/// Minimum (used by CC label propagation, SSSP distances, BFS levels).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MinCombiner;
+
+/// Maximum.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaxCombiner;
+
+/// Sum (used by PageRank contributions).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SumCombiner;
+
+macro_rules! impl_minmax {
+    ($($t:ty => $max:expr, $min:expr);* $(;)?) => {$(
+        impl Combiner<$t> for MinCombiner {
+            #[inline]
+            fn combine(&self, a: $t, b: $t) -> $t {
+                if b < a { b } else { a }
+            }
+            fn neutral(&self) -> Option<$t> {
+                Some($max)
+            }
+        }
+        impl Combiner<$t> for MaxCombiner {
+            #[inline]
+            fn combine(&self, a: $t, b: $t) -> $t {
+                if b > a { b } else { a }
+            }
+            fn neutral(&self) -> Option<$t> {
+                Some($min)
+            }
+        }
+    )*};
+}
+
+impl_minmax! {
+    u32 => u32::MAX, u32::MIN;
+    u64 => u64::MAX, u64::MIN;
+    i32 => i32::MAX, i32::MIN;
+    i64 => i64::MAX, i64::MIN;
+    f32 => f32::INFINITY, f32::NEG_INFINITY;
+    f64 => f64::INFINITY, f64::NEG_INFINITY;
+}
+
+macro_rules! impl_sum {
+    ($($t:ty),*) => {$(
+        impl Combiner<$t> for SumCombiner {
+            #[inline]
+            fn combine(&self, a: $t, b: $t) -> $t {
+                a + b
+            }
+            fn neutral(&self) -> Option<$t> {
+                Some(0 as $t)
+            }
+        }
+    )*};
+}
+
+impl_sum!(u32, u64, i32, i64, f32, f64);
+
+/// A combiner defined by a plain function, with optionally-declared
+/// neutral element — this is the "user writes any arbitrary combination
+/// operation" path the paper's hybrid design enables.
+pub struct FnCombiner<M, F: Fn(M, M) -> M + Send + Sync> {
+    f: F,
+    neutral: Option<M>,
+}
+
+impl<M: Copy + Send + Sync, F: Fn(M, M) -> M + Send + Sync> FnCombiner<M, F> {
+    /// Combiner from a closure, no neutral element declared.
+    pub fn new(f: F) -> Self {
+        FnCombiner { f, neutral: None }
+    }
+
+    /// Declare a neutral element (enables the pure-CAS strategy).
+    pub fn with_neutral(mut self, n: M) -> Self {
+        self.neutral = Some(n);
+        self
+    }
+}
+
+impl<M: Copy + Send + Sync, F: Fn(M, M) -> M + Send + Sync> Combiner<M> for FnCombiner<M, F> {
+    #[inline]
+    fn combine(&self, a: M, b: M) -> M {
+        (self.f)(a, b)
+    }
+
+    fn neutral(&self) -> Option<M> {
+        self.neutral
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_max_sum_basics() {
+        assert_eq!(MinCombiner.combine(3u32, 5), 3);
+        assert_eq!(MaxCombiner.combine(3u32, 5), 5);
+        assert_eq!(SumCombiner.combine(3u32, 5), 8);
+        assert_eq!(MinCombiner.combine(1.5f64, -2.0), -2.0);
+        assert_eq!(SumCombiner.combine(1.5f32, 2.5), 4.0);
+    }
+
+    #[test]
+    fn neutral_elements_are_neutral() {
+        fn check<C: Combiner<u64>>(c: C, samples: &[u64]) {
+            let n = c.neutral().unwrap();
+            for &x in samples {
+                assert_eq!(c.combine(n, x), x);
+                assert_eq!(c.combine(x, n), x);
+            }
+        }
+        check(MinCombiner, &[0, 1, u64::MAX, 42]);
+        check(MaxCombiner, &[0, 1, u64::MAX, 42]);
+        check(SumCombiner, &[0, 1, 1000]);
+    }
+
+    #[test]
+    fn fn_combiner_wraps_closures() {
+        let c = FnCombiner::new(|a: u32, b: u32| a ^ b).with_neutral(0);
+        assert_eq!(c.combine(0b101, 0b011), 0b110);
+        assert_eq!(c.neutral(), Some(0));
+        let no_neutral = FnCombiner::new(|a: u32, b: u32| a.min(b) + 1);
+        assert_eq!(no_neutral.neutral(), None);
+    }
+}

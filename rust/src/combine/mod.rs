@@ -1,0 +1,28 @@
+//! Message combination — the fine-grain synchronisation hot spot (§III).
+//!
+//! Every vertex owns a one-message mailbox; concurrent senders must merge
+//! their messages into it through a user-defined, commutative+associative
+//! *combine* operation. Three delivery strategies are provided:
+//!
+//! - [`Strategy::Lock`] — classic per-vertex lock around check+combine;
+//! - [`Strategy::CasNeutral`] — pure compare-and-swap; lock-free, but
+//!   requires a *neutral element* and loses the notion of an empty
+//!   mailbox (the paper's §III discusses why this can produce incorrect
+//!   programs — we implement it faithfully as the comparison baseline);
+//! - [`Strategy::Hybrid`] — the paper's contribution (Fig. 1): a
+//!   lock-protected *first push* that establishes the mailbox value, then
+//!   lock-free CAS for every subsequent combine.
+//!
+//! Strategies operate on [`slot::MsgSlot`]s, which are embedded either in
+//! an interleaved vertex record (baseline layout) or in an externalised
+//! hot array (§IV) — see [`crate::layout`].
+
+pub mod combiner;
+pub mod slot;
+pub mod spinlock;
+pub mod strategy;
+
+pub use combiner::{Combiner, MaxCombiner, MinCombiner, SumCombiner};
+pub use slot::{MessageValue, MsgSlot};
+pub use spinlock::SpinLock;
+pub use strategy::Strategy;

@@ -1,0 +1,263 @@
+//! The per-vertex mailbox slot and the bit-level message representation.
+//!
+//! CAS operations need the message in an atomic word, so every message
+//! type is represented in a single `AtomicU64` via [`MessageValue`]
+//! (floats through their IEEE bit patterns — bit equality is what CAS
+//! compares, which also sidesteps NaN `!=` NaN surprises).
+
+use crate::combine::spinlock::SpinLock;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Message types storable in a mailbox slot: plain-old-data with a
+/// round-trippable 64-bit representation.
+pub trait MessageValue: Copy + Send + Sync + 'static {
+    /// Encode to the atomic word.
+    fn to_bits(self) -> u64;
+    /// Decode from the atomic word.
+    fn from_bits(bits: u64) -> Self;
+}
+
+macro_rules! impl_int_msg {
+    ($($t:ty),*) => {$(
+        impl MessageValue for $t {
+            #[inline]
+            fn to_bits(self) -> u64 {
+                self as u64
+            }
+            #[inline]
+            fn from_bits(bits: u64) -> Self {
+                bits as $t
+            }
+        }
+    )*};
+}
+
+impl_int_msg!(u8, u16, u32, u64, usize);
+
+impl MessageValue for i32 {
+    #[inline]
+    fn to_bits(self) -> u64 {
+        self as u32 as u64
+    }
+    #[inline]
+    fn from_bits(bits: u64) -> Self {
+        bits as u32 as i32
+    }
+}
+
+impl MessageValue for i64 {
+    #[inline]
+    fn to_bits(self) -> u64 {
+        self as u64
+    }
+    #[inline]
+    fn from_bits(bits: u64) -> Self {
+        bits as i64
+    }
+}
+
+impl MessageValue for f32 {
+    #[inline]
+    fn to_bits(self) -> u64 {
+        f32::to_bits(self) as u64
+    }
+    #[inline]
+    fn from_bits(bits: u64) -> Self {
+        f32::from_bits(bits as u32)
+    }
+}
+
+impl MessageValue for f64 {
+    #[inline]
+    fn to_bits(self) -> u64 {
+        f64::to_bits(self)
+    }
+    #[inline]
+    fn from_bits(bits: u64) -> Self {
+        f64::from_bits(bits)
+    }
+}
+
+/// One vertex's mailbox: the paper's `{lock, has_msg_next, msg_next}`
+/// triple (Fig. 1), with the message held in an atomic word so both
+/// lock-based and CAS-based strategies can operate on the same slot.
+///
+/// Field order keeps the flag and message adjacent — with the lock — in a
+/// single 16-byte unit, so one cache line holds four slots when
+/// externalised (§IV).
+pub struct MsgSlot<M: MessageValue> {
+    /// The pending message's bit pattern; meaningful only when `has_msg`.
+    msg: AtomicU64,
+    /// True once at least one message has been delivered this superstep.
+    has_msg: AtomicBool,
+    /// Per-vertex lock for the lock strategy and the hybrid first-push.
+    lock: SpinLock,
+    _marker: PhantomData<M>,
+}
+
+impl<M: MessageValue> Default for MsgSlot<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<M: MessageValue> MsgSlot<M> {
+    /// Fresh, empty slot.
+    pub fn new() -> Self {
+        MsgSlot {
+            msg: AtomicU64::new(0),
+            has_msg: AtomicBool::new(false),
+            lock: SpinLock::new(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// The slot's lock (strategies use it; nothing else should).
+    #[inline]
+    pub fn lock(&self) -> &SpinLock {
+        &self.lock
+    }
+
+    /// Whether a message is pending. Paper Fig. 1 reads this flag with
+    /// sequentially-consistent semantics (C11 `_Atomic` default).
+    #[inline]
+    pub fn has_msg(&self) -> bool {
+        self.has_msg.load(Ordering::SeqCst)
+    }
+
+    /// Read the current message bits (caller must know `has_msg`).
+    #[inline]
+    pub fn load_msg(&self) -> M {
+        M::from_bits(self.msg.load(Ordering::SeqCst))
+    }
+
+    /// Store the message **then** set the flag. The ordering of the two
+    /// stores is the correctness crux of the hybrid combiner: a `true`
+    /// flag guarantees the message value is visible (paper §III — the
+    /// "full memory barrier in-between", here provided by SeqCst stores).
+    #[inline]
+    pub fn store_first(&self, msg: M) {
+        self.msg.store(msg.to_bits(), Ordering::SeqCst);
+        self.has_msg.store(true, Ordering::SeqCst);
+    }
+
+    /// Raw store of the message bits without touching the flag (used by
+    /// the neutral-element CAS strategy, which has no flag).
+    #[inline]
+    pub fn store_msg(&self, msg: M) {
+        self.msg.store(msg.to_bits(), Ordering::SeqCst);
+    }
+
+    /// One CAS attempt on the message word: succeed iff the slot still
+    /// holds `expected`. On failure returns the observed bits.
+    #[inline]
+    pub fn cas_msg(&self, expected: M, new: M) -> Result<(), M> {
+        match self.msg.compare_exchange(
+            expected.to_bits(),
+            new.to_bits(),
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        ) {
+            Ok(_) => Ok(()),
+            Err(observed) => Err(M::from_bits(observed)),
+        }
+    }
+
+    /// Take the message and reset the slot (superstep boundary; the
+    /// engine guarantees no concurrent senders at this point).
+    pub fn take(&self) -> Option<M> {
+        if self.has_msg.load(Ordering::SeqCst) {
+            let m = M::from_bits(self.msg.load(Ordering::SeqCst));
+            self.has_msg.store(false, Ordering::SeqCst);
+            Some(m)
+        } else {
+            None
+        }
+    }
+
+    /// Non-destructive read (pull-based versions peek neighbours' slots).
+    pub fn peek(&self) -> Option<M> {
+        if self.has_msg.load(Ordering::SeqCst) {
+            Some(M::from_bits(self.msg.load(Ordering::SeqCst)))
+        } else {
+            None
+        }
+    }
+
+    /// Relaxed-ordering peek for the pull-mode scan hot path.
+    ///
+    /// Sound only under the engine's superstep discipline: the slots
+    /// scanned were written during the *previous* superstep, and the
+    /// barrier between supersteps (thread join) establishes the
+    /// happens-before edge, so no ordering is needed on the loads
+    /// themselves. This is the §Perf L3 optimisation — SeqCst loads in
+    /// the inner pull loop cost ~15% of PR's runtime (EXPERIMENTS.md).
+    #[inline]
+    pub fn peek_scan(&self) -> Option<M> {
+        if self.has_msg.load(Ordering::Relaxed) {
+            Some(M::from_bits(self.msg.load(Ordering::Relaxed)))
+        } else {
+            None
+        }
+    }
+
+    /// Reset without reading.
+    pub fn clear(&self) {
+        self.has_msg.store(false, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrips() {
+        assert_eq!(u32::from_bits(42u32.to_bits()), 42);
+        assert_eq!(u64::from_bits(u64::MAX.to_bits()), u64::MAX);
+        assert_eq!(i32::from_bits((-7i32).to_bits()), -7);
+        assert_eq!(i64::from_bits(i64::MIN.to_bits()), i64::MIN);
+        assert_eq!(f32::from_bits(3.25f32.to_bits()), 3.25);
+        assert_eq!(f64::from_bits((-0.0f64).to_bits()).to_bits(), (-0.0f64).to_bits());
+        let nan = f64::from_bits(f64::NAN.to_bits());
+        assert!(nan.is_nan());
+    }
+
+    #[test]
+    fn i32_negative_does_not_sign_extend_into_junk() {
+        // Round-trip must be exact even though the backing word is u64.
+        for v in [-1i32, i32::MIN, i32::MAX, 0, 7] {
+            assert_eq!(i32::from_bits(v.to_bits()), v);
+        }
+    }
+
+    #[test]
+    fn store_first_take_roundtrip() {
+        let s: MsgSlot<f64> = MsgSlot::new();
+        assert!(!s.has_msg());
+        assert_eq!(s.take(), None);
+        s.store_first(2.5);
+        assert!(s.has_msg());
+        assert_eq!(s.peek(), Some(2.5));
+        assert_eq!(s.take(), Some(2.5));
+        assert!(!s.has_msg());
+        assert_eq!(s.take(), None);
+    }
+
+    #[test]
+    fn cas_succeeds_only_on_expected() {
+        let s: MsgSlot<u64> = MsgSlot::new();
+        s.store_first(10);
+        assert_eq!(s.cas_msg(10, 20), Ok(()));
+        assert_eq!(s.cas_msg(10, 30), Err(20));
+        assert_eq!(s.load_msg(), 20);
+    }
+
+    #[test]
+    fn slot_is_compact() {
+        // lock(1) + flag(1) + padding + msg(8) — must stay within 16 bytes
+        // so four externalised slots share a cache line.
+        assert!(std::mem::size_of::<MsgSlot<f64>>() <= 16);
+    }
+}

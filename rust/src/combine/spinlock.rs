@@ -1,0 +1,128 @@
+//! A one-byte test-and-test-and-set spinlock.
+//!
+//! iPregel guards each vertex mailbox with a tiny lock embedded in the
+//! vertex structure (one byte, not a pthread mutex — with 65M vertices the
+//! lock's footprint matters). Critical sections are a handful of
+//! instructions, so spinning beats parking by a wide margin.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// One-byte spinlock. `acquire`/`release` pairs establish the usual
+/// Acquire/Release happens-before edges.
+#[repr(transparent)]
+pub struct SpinLock {
+    locked: AtomicBool,
+}
+
+impl Default for SpinLock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpinLock {
+    /// New, unlocked.
+    pub const fn new() -> Self {
+        SpinLock {
+            locked: AtomicBool::new(false),
+        }
+    }
+
+    /// Spin until the lock is held by the caller.
+    #[inline]
+    pub fn acquire(&self) {
+        loop {
+            // Test-and-set fast path.
+            if self
+                .locked
+                .compare_exchange_weak(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+            // Test loop: spin on a plain load to avoid cache-line
+            // ping-pong while the lock is held.
+            while self.locked.load(Ordering::Relaxed) {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    /// Try once; true on success.
+    #[inline]
+    pub fn try_acquire(&self) -> bool {
+        self.locked
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Release a held lock.
+    #[inline]
+    pub fn release(&self) {
+        self.locked.store(false, Ordering::Release);
+    }
+
+    /// Run `f` under the lock.
+    #[inline]
+    pub fn with<R>(&self, f: impl FnOnce() -> R) -> R {
+        self.acquire();
+        let r = f();
+        self.release();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn try_acquire_excludes() {
+        let l = SpinLock::new();
+        assert!(l.try_acquire());
+        assert!(!l.try_acquire());
+        l.release();
+        assert!(l.try_acquire());
+        l.release();
+    }
+
+    #[test]
+    fn with_runs_closure() {
+        let l = SpinLock::new();
+        assert_eq!(l.with(|| 7), 7);
+        assert!(l.try_acquire());
+        l.release();
+    }
+
+    #[test]
+    fn mutual_exclusion_under_contention() {
+        // Non-atomic counter protected only by the lock; races would lose
+        // increments.
+        struct Shared {
+            lock: SpinLock,
+            counter: std::cell::UnsafeCell<u64>,
+        }
+        unsafe impl Sync for Shared {}
+        let s = Arc::new(Shared {
+            lock: SpinLock::new(),
+            counter: std::cell::UnsafeCell::new(0),
+        });
+        const THREADS: usize = 8;
+        const INCS: usize = 20_000;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for _ in 0..INCS {
+                        s.lock.with(|| unsafe { *s.counter.get() += 1 });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(unsafe { *s.counter.get() }, (THREADS * INCS) as u64);
+    }
+}

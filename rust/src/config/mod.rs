@@ -1,0 +1,132 @@
+//! Minimal CLI argument parsing (the offline build has no `clap`).
+//!
+//! `Opts` splits a flat argv into positional arguments and `--key value` /
+//! `--flag` options, with typed accessors that produce helpful errors.
+//! Shared by the `ipregel` binary and the examples.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command-line options.
+#[derive(Debug, Clone, Default)]
+pub struct Opts {
+    /// Positional (non-flag) arguments in order.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+/// Marker value for boolean flags given without an argument.
+const FLAG_SET: &str = "\u{1}true";
+
+impl Opts {
+    /// Parse an argv slice. A token `--k` consumes the next token as its
+    /// value unless that token is itself a flag (then `--k` is boolean).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Opts {
+        let args: Vec<String> = args.into_iter().collect();
+        let mut opts = Opts::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let takes_value = i + 1 < args.len() && !args[i + 1].starts_with("--");
+                if takes_value {
+                    opts.flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    opts.flags.insert(key.to_string(), FLAG_SET.to_string());
+                    i += 1;
+                }
+            } else {
+                opts.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        opts
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str()).filter(|s| *s != FLAG_SET)
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Boolean flag (present with no value, or `true`/`false`).
+    pub fn flag(&self, key: &str) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some(FLAG_SET) | Some("true") | Some("1") => true,
+            Some("false") | Some("0") | None => false,
+            Some(_) => true,
+        }
+    }
+
+    /// Parsed numeric option.
+    pub fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Error on unknown flags (catches typos early).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Opts {
+        Opts::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags_separate() {
+        let o = parse("run --threads 8 graph.ipg --bypass");
+        assert_eq!(o.positional, vec!["run", "graph.ipg"]);
+        assert_eq!(o.get("threads"), Some("8"));
+        assert!(o.flag("bypass"));
+        assert!(!o.flag("absent"));
+    }
+
+    #[test]
+    fn numeric_parsing_and_defaults() {
+        let o = parse("--threads 8");
+        assert_eq!(o.get_num("threads", 4usize).unwrap(), 8);
+        assert_eq!(o.get_num("chunk", 256usize).unwrap(), 256);
+        let bad = parse("--threads eight");
+        assert!(bad.get_num("threads", 4usize).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let o = parse("--bypass --threads 2");
+        assert!(o.flag("bypass"));
+        assert_eq!(o.get("threads"), Some("2"));
+    }
+
+    #[test]
+    fn ensure_known_catches_typos() {
+        let o = parse("--theads 8");
+        assert!(o.ensure_known(&["threads"]).is_err());
+        assert!(o.ensure_known(&["theads", "threads"]).is_ok());
+    }
+
+    #[test]
+    fn explicit_false_is_false() {
+        let o = parse("--bypass false");
+        assert!(!o.flag("bypass"));
+    }
+}

@@ -1,0 +1,452 @@
+//! The superstep loop shared by all engine versions.
+//!
+//! One [`Engine`] implements both communication modes and both active-set
+//! representations; the mode/bypass branches sit at superstep granularity,
+//! outside the per-vertex hot loop, and the store type is monomorphised so
+//! layout differences compile down to pointer arithmetic.
+
+use crate::combine::{Combiner, Strategy};
+use crate::engine::{Context, EngineConfig, Mode, RunResult, VertexProgram};
+use crate::graph::csr::{Csr, VertexId};
+use crate::layout::{SyncCell, VertexStore};
+use crate::metrics::{RunMetrics, SuperstepStats};
+use crate::sched::{parallel_for, Schedule};
+use crate::util::bitset::AtomicBitSet;
+use crate::util::timer::Timer;
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The engine: graph + program + store + activity tracking.
+pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
+    g: &'g Csr,
+    program: &'g P,
+    store: S,
+    cfg: EngineConfig,
+    comb: P::Comb,
+    mode: Mode,
+    /// Vertices active in the *next* superstep (set during compute).
+    active_next: AtomicBitSet,
+    /// Pull mode: vertices that broadcast *this* superstep (their outbox
+    /// slots need clearing two barriers later).
+    bcast_next: AtomicBitSet,
+    /// Pull mode: vertices whose outbox holds last superstep's broadcast.
+    bcast_cur: AtomicBitSet,
+    /// Degree weights for edge-centric scans (computed once, out- or
+    /// in-degrees depending on mode).
+    scan_weights: Option<Vec<u64>>,
+    /// Merged aggregator value from the previous superstep.
+    agg_prev: Option<f64>,
+}
+
+/// Per-vertex context implementation. Holds only shared references plus
+/// the per-vertex mutable bits, so constructing one per vertex is free.
+struct Ctx<'a, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
+    g: &'a Csr,
+    store: &'a S,
+    program: &'a P,
+    comb: &'a P::Comb,
+    strategy: Strategy,
+    mode: Mode,
+    active_next: &'a AtomicBitSet,
+    bcast_next: &'a AtomicBitSet,
+    msg_counter: &'a AtomicU64,
+    /// This worker's aggregator partial: (accumulated, contributed?).
+    agg_cell: &'a SyncCell<(f64, bool)>,
+    agg_prev: Option<f64>,
+    superstep: usize,
+    v: VertexId,
+    halted: bool,
+}
+
+impl<'a, P, S> Context<P::Value, P::Message> for Ctx<'a, P, S>
+where
+    P: VertexProgram,
+    S: VertexStore<P::Value, P::Message>,
+{
+    #[inline]
+    fn id(&self) -> VertexId {
+        self.v
+    }
+
+    #[inline]
+    fn superstep(&self) -> usize {
+        self.superstep
+    }
+
+    #[inline]
+    fn num_vertices(&self) -> usize {
+        self.g.num_vertices()
+    }
+
+    #[inline]
+    fn value(&self) -> &P::Value {
+        self.store.value(self.v)
+    }
+
+    #[inline]
+    fn value_mut(&mut self) -> &mut P::Value {
+        self.store.value_mut(self.v)
+    }
+
+    #[inline]
+    fn out_neighbors(&self) -> &[VertexId] {
+        self.g.out_neighbors(self.v)
+    }
+
+    #[inline]
+    fn in_degree(&self) -> usize {
+        self.g.in_degree(self.v)
+    }
+
+    #[inline]
+    fn send(&mut self, dst: VertexId, msg: P::Message) {
+        assert!(
+            self.mode == Mode::Push,
+            "send() requires a push-mode program; single-broadcast (pull) \
+             versions only support broadcast() — see paper §II"
+        );
+        self.msg_counter.fetch_add(1, Ordering::Relaxed);
+        self.strategy
+            .deliver(self.store.next_slot(dst), msg, self.comb);
+        self.active_next.set(dst as usize);
+    }
+
+    #[inline]
+    fn broadcast(&mut self, msg: P::Message) {
+        match self.mode {
+            Mode::Push => {
+                // Broadcast = send along every outgoing edge.
+                let nbrs = self.g.out_neighbors(self.v);
+                self.msg_counter
+                    .fetch_add(nbrs.len() as u64, Ordering::Relaxed);
+                for &dst in nbrs {
+                    self.strategy
+                        .deliver(self.store.next_slot(dst), msg, self.comb);
+                    self.active_next.set(dst as usize);
+                }
+            }
+            Mode::Pull => {
+                // One lock-free store into our own outbox; recipients pull
+                // next superstep. Activation still walks out-edges (the
+                // framework must know who has mail).
+                self.store.next_slot(self.v).store_first(msg);
+                self.bcast_next.set(self.v as usize);
+                for &dst in self.g.out_neighbors(self.v) {
+                    self.active_next.set(dst as usize);
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn vote_to_halt(&mut self) {
+        self.halted = true;
+    }
+
+    #[inline]
+    fn contribute(&mut self, x: f64) {
+        // Per-thread cell: no synchronisation needed (engine hands each
+        // worker its own padded cell); merged at the barrier.
+        let (acc, used) = *self.agg_cell.get();
+        let merged = if used {
+            self.program.agg_combine(acc, x)
+        } else {
+            x
+        };
+        *self.agg_cell.get_mut() = (merged, true);
+    }
+
+    #[inline]
+    fn aggregated(&self) -> Option<f64> {
+        self.agg_prev
+    }
+}
+
+impl<'g, P, S> Engine<'g, P, S>
+where
+    P: VertexProgram,
+    S: VertexStore<P::Value, P::Message>,
+{
+    /// Build an engine: initialise values, activity and (for CAS-neutral
+    /// runs) pre-load every slot with the neutral element.
+    pub fn new(g: &'g Csr, program: &'g P, cfg: EngineConfig) -> Self {
+        let comb = program.combiner();
+        let mode = program.mode();
+        let mut init = |v: VertexId| program.init(g, v);
+        let mut store = S::build(g, &mut init);
+        let n = g.num_vertices();
+
+        if mode == Mode::Push && cfg.strategy == Strategy::CasNeutral {
+            for v in g.vertices() {
+                cfg.strategy.reset_slot(store.cur_slot(v), &comb);
+                cfg.strategy.reset_slot(store.next_slot(v), &comb);
+            }
+        }
+        // Make `cur` the epoch compute reads in superstep 0 (empty) —
+        // store starts unflipped, which is already correct.
+        let _ = &mut store;
+
+        let active_next = AtomicBitSet::new(n);
+        for v in g.vertices() {
+            if program.initially_active(g, v) {
+                active_next.set(v as usize);
+            }
+        }
+
+        let scan_weights = if cfg.schedule.needs_weights() && !cfg.bypass {
+            // Scan engines split the full vertex range by degree once.
+            Some(match mode {
+                Mode::Push => g.out_degrees_u64(),
+                Mode::Pull => g.in_degrees_u64(),
+            })
+        } else {
+            None
+        };
+
+        Engine {
+            g,
+            program,
+            store,
+            cfg,
+            comb,
+            mode,
+            active_next,
+            bcast_next: AtomicBitSet::new(n),
+            bcast_cur: AtomicBitSet::new(n),
+            scan_weights,
+            agg_prev: None,
+        }
+    }
+
+    /// Combined incoming message for `v` at superstep start.
+    #[inline]
+    fn collect_msg(&self, v: VertexId, msgs_done: &AtomicU64) -> Option<P::Message> {
+        match self.mode {
+            Mode::Push => {
+                // Consume and reset the mailbox (owner-exclusive here).
+                let slot = self.store.cur_slot(v);
+                let m = self.cfg.strategy.collect(slot, &self.comb);
+                if self.cfg.strategy == Strategy::CasNeutral && m.is_some() {
+                    self.cfg.strategy.reset_slot(slot, &self.comb);
+                }
+                m
+            }
+            Mode::Pull => {
+                // Combine in-neighbours' outboxes locally — the lock-free
+                // pull loop whose memory behaviour §IV optimises. The
+                // neighbour list reveals the access pattern iterations in
+                // advance, so software-prefetch the slot 8 ahead
+                // (§Perf L3 — see EXPERIMENTS.md).
+                let in_nbrs = self.g.in_neighbors(v);
+                let mut acc: Option<P::Message> = None;
+                let mut combined = 0u64;
+                for (i, &src) in in_nbrs.iter().enumerate() {
+                    #[cfg(all(target_arch = "x86_64", not(feature = "no-prefetch")))]
+                    if let Some(&ahead) = in_nbrs.get(i + 8) {
+                        // SAFETY: prefetch is only a hint.
+                        unsafe {
+                            std::arch::x86_64::_mm_prefetch(
+                                self.store.cur_slot(ahead) as *const _ as *const i8,
+                                std::arch::x86_64::_MM_HINT_T0,
+                            );
+                        }
+                    }
+                    if let Some(m) = self.store.cur_slot(src).peek_scan() {
+                        combined += 1;
+                        acc = Some(match acc {
+                            None => m,
+                            Some(a) => self.comb.combine(a, m),
+                        });
+                    }
+                }
+                if combined > 0 {
+                    msgs_done.fetch_add(combined, Ordering::Relaxed);
+                }
+                acc
+            }
+        }
+    }
+
+    /// Run to quiescence (or the superstep cap). Returns final values and
+    /// metrics.
+    pub fn run(mut self) -> RunResult<P::Value> {
+        let total = Timer::start();
+        let n = self.g.num_vertices();
+        let threads = self.cfg.threads.max(1);
+        let mut metrics = RunMetrics::default();
+
+        // Per-thread padded message counters (hot-path friendly).
+        let counters: Vec<CachePadded<AtomicU64>> =
+            (0..threads).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
+        let pull_comb_counter = AtomicU64::new(0);
+        let neutral = self.program.agg_neutral();
+        let agg_cells: Vec<CachePadded<SyncCell<(f64, bool)>>> = (0..threads)
+            .map(|_| CachePadded::new(SyncCell::new((neutral, false))))
+            .collect();
+
+        let mut superstep = 0usize;
+        loop {
+            // ---- Snapshot this superstep's active set -------------------
+            let active_list: Option<Vec<VertexId>> = if self.cfg.bypass {
+                Some(
+                    self.active_next
+                        .iter()
+                        .map(|i| i as VertexId)
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            let active_scan = if self.cfg.bypass {
+                None
+            } else {
+                Some(self.active_next.snapshot())
+            };
+            let active_count = match (&active_list, &active_scan) {
+                (Some(l), _) => l.len(),
+                (_, Some(b)) => b.count(),
+                _ => unreachable!(),
+            };
+            if active_count == 0 || superstep >= self.cfg.max_supersteps {
+                break;
+            }
+            self.active_next.clear_all();
+
+            // ---- Compute phase -----------------------------------------
+            let t_compute = Timer::start();
+            {
+                let engine = &self;
+                let counters = &counters;
+                let pull_comb_counter = &pull_comb_counter;
+                let superstep_now = superstep;
+
+                // Edge-centric weights for bypass runs are rebuilt every
+                // superstep from the active list (the §V-A overhead the
+                // paper attributes to selection-bypass benchmarks).
+                let bypass_weights: Option<Vec<u64>> = match (&active_list, self.cfg.schedule) {
+                    (Some(list), Schedule::EdgeCentric) => Some(
+                        list.iter()
+                            .map(|&v| match self.mode {
+                                Mode::Push => self.g.out_degree(v) as u64,
+                                Mode::Pull => self.g.in_degree(v) as u64,
+                            })
+                            .collect(),
+                    ),
+                    _ => None,
+                };
+
+                let agg_cells = &agg_cells;
+                let agg_prev_now = self.agg_prev;
+                let run_vertex = |tid: usize, v: VertexId| {
+                    let msg = engine.collect_msg(v, pull_comb_counter);
+                    let mut ctx: Ctx<'_, P, S> = Ctx {
+                        g: engine.g,
+                        store: &engine.store,
+                        program: engine.program,
+                        comb: &engine.comb,
+                        strategy: engine.cfg.strategy,
+                        mode: engine.mode,
+                        active_next: &engine.active_next,
+                        bcast_next: &engine.bcast_next,
+                        msg_counter: &counters[tid],
+                        agg_cell: &agg_cells[tid],
+                        agg_prev: agg_prev_now,
+                        superstep: superstep_now,
+                        v,
+                        halted: false,
+                    };
+                    engine.program.compute(&mut ctx, msg);
+                    if !ctx.halted {
+                        engine.active_next.set(v as usize);
+                    }
+                };
+
+                match (&active_list, &active_scan) {
+                    (Some(list), _) => {
+                        // Selection bypass: iterate the dense active list.
+                        parallel_for(
+                            threads,
+                            list.len(),
+                            self.cfg.schedule,
+                            bypass_weights.as_deref(),
+                            |tid, range| {
+                                for i in range {
+                                    run_vertex(tid, list[i]);
+                                }
+                            },
+                        );
+                    }
+                    (_, Some(bits)) => {
+                        // Full scan: iterate all ids, skip inactive — the
+                        // baseline behaviour bypass eliminates.
+                        parallel_for(
+                            threads,
+                            n,
+                            self.cfg.schedule,
+                            self.scan_weights.as_deref(),
+                            |tid, range| {
+                                for i in range {
+                                    if bits.get(i) {
+                                        run_vertex(tid, i as VertexId);
+                                    }
+                                }
+                            },
+                        );
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            let compute_time = t_compute.elapsed();
+
+            // ---- Barrier phase -----------------------------------------
+            let t_barrier = Timer::start();
+            if self.mode == Mode::Pull {
+                // Clear outboxes consumed this superstep, then rotate the
+                // broadcaster sets.
+                for v in self.bcast_cur.iter() {
+                    self.store.cur_slot(v as VertexId).clear();
+                }
+                std::mem::swap(&mut self.bcast_cur, &mut self.bcast_next);
+                self.bcast_next.clear_all();
+            }
+            self.store.swap_epochs();
+            // Merge this superstep's aggregator partials (workers are
+            // joined, so the plain reads are race-free).
+            let mut merged: Option<f64> = None;
+            for cell in &agg_cells {
+                let (acc, used) = *cell.get();
+                if used {
+                    merged = Some(match merged {
+                        None => acc,
+                        Some(m) => self.program.agg_combine(m, acc),
+                    });
+                }
+                *cell.get_mut() = (neutral, false);
+            }
+            self.agg_prev = merged;
+            let barrier_time = t_barrier.elapsed();
+
+            let messages = counters
+                .iter()
+                .map(|c| c.swap(0, Ordering::Relaxed))
+                .sum::<u64>()
+                + pull_comb_counter.swap(0, Ordering::Relaxed);
+
+            metrics.supersteps.push(SuperstepStats {
+                active_vertices: active_count,
+                messages,
+                compute_time,
+                barrier_time,
+            });
+            superstep += 1;
+        }
+
+        metrics.total_time = total.elapsed();
+        let values = self
+            .g
+            .vertices()
+            .map(|v| self.store.value(v).clone())
+            .collect();
+        RunResult { values, metrics }
+    }
+}

@@ -1,0 +1,209 @@
+//! The vertex-centric execution engine.
+//!
+//! Users write a [`VertexProgram`] — the classic Pregel single
+//! user-defined function — and the engine runs it superstep by superstep
+//! under a chosen combination of the paper's optimisations:
+//!
+//! - **communication mode** ([`Mode`]): `Push` (messages delivered into
+//!   recipient mailboxes through a [`Strategy`]) or `Pull` (iPregel's
+//!   *single-broadcast* version: vertices publish one message to their own
+//!   outbox, recipients combine from in-neighbours, lock-free by design);
+//! - **vertex layout** ([`Layout`]): interleaved baseline or externalised;
+//! - **work distribution** ([`Schedule`]): static, dynamic, guided or
+//!   edge-centric;
+//! - **selection bypass** (`bypass`): maintain an explicit active-vertex
+//!   list instead of scanning all vertices every superstep.
+//!
+//! None of these switches appear in user code — the same program text runs
+//! under every configuration, which is the paper's programmability thesis.
+
+pub mod core;
+
+use crate::combine::{Combiner, MessageValue, Strategy};
+use crate::graph::csr::{Csr, VertexId};
+use crate::layout::{AosStore, Layout, SoaStore};
+use crate::metrics::RunMetrics;
+use crate::sched::Schedule;
+
+/// Communication mode of a program (fixed per algorithm, as in iPregel's
+/// internal versions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Arbitrary point-to-point sends into recipient mailboxes.
+    Push,
+    /// Single-broadcast: each vertex may only broadcast one message per
+    /// superstep; recipients pull from in-neighbours' outboxes.
+    Pull,
+}
+
+/// The per-vertex compute context handed to [`VertexProgram::compute`].
+pub trait Context<V, M> {
+    /// This vertex's id.
+    fn id(&self) -> VertexId;
+    /// Current superstep number (0-based).
+    fn superstep(&self) -> usize;
+    /// Total number of vertices in the graph.
+    fn num_vertices(&self) -> usize;
+    /// Shared borrow of this vertex's value.
+    fn value(&self) -> &V;
+    /// Exclusive borrow of this vertex's value.
+    fn value_mut(&mut self) -> &mut V;
+    /// Outgoing neighbours of this vertex.
+    fn out_neighbors(&self) -> &[VertexId];
+    /// Out-degree of this vertex.
+    fn out_degree(&self) -> usize {
+        self.out_neighbors().len()
+    }
+    /// In-degree of this vertex.
+    fn in_degree(&self) -> usize;
+    /// Send `msg` to `dst` (push-mode programs only; a pull-mode program
+    /// calling this panics — the same constraint iPregel's
+    /// single-broadcast versions impose at compile time).
+    fn send(&mut self, dst: VertexId, msg: M);
+    /// Broadcast `msg` along all outgoing edges. In pull mode this is one
+    /// lock-free store into the vertex's own outbox.
+    fn broadcast(&mut self, msg: M);
+    /// Vote to halt: stay inactive until a message arrives.
+    fn vote_to_halt(&mut self);
+    /// Contribute to the global aggregator (Pregel aggregators): all
+    /// contributions of a superstep are merged with
+    /// [`VertexProgram::agg_combine`] and visible to every vertex next
+    /// superstep via [`Context::aggregated`].
+    fn contribute(&mut self, x: f64);
+    /// The merged aggregator value from the previous superstep, if any
+    /// vertex contributed.
+    fn aggregated(&self) -> Option<f64>;
+}
+
+/// A vertex-centric program: Pregel's user-defined function plus the
+/// type-level choices (value, message, combiner, communication mode).
+pub trait VertexProgram: Send + Sync {
+    /// Per-vertex state.
+    type Value: Clone + Send + Sync;
+    /// Message type.
+    type Message: MessageValue;
+    /// Message combiner.
+    type Comb: Combiner<Self::Message>;
+
+    /// Which communication mode this program uses.
+    fn mode(&self) -> Mode;
+
+    /// The combiner instance.
+    fn combiner(&self) -> Self::Comb;
+
+    /// Initial value of vertex `v`.
+    fn init(&self, g: &Csr, v: VertexId) -> Self::Value;
+
+    /// Whether `v` starts active (default: all vertices, as in Pregel).
+    fn initially_active(&self, _g: &Csr, _v: VertexId) -> bool {
+        true
+    }
+
+    /// Neutral element of the global aggregator (default: 0, for sums).
+    fn agg_neutral(&self) -> f64 {
+        0.0
+    }
+
+    /// Commutative merge of two aggregator partials (default: sum).
+    fn agg_combine(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+
+    /// The user-defined function, applied to each active vertex each
+    /// superstep. `msg` is the combined incoming message, if any.
+    fn compute<C: Context<Self::Value, Self::Message>>(
+        &self,
+        ctx: &mut C,
+        msg: Option<Self::Message>,
+    );
+}
+
+/// Engine configuration: the optimisation switches of Table II.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Worker threads (the paper's experiments fix this at 32).
+    pub threads: usize,
+    /// Work-distribution policy (§V).
+    pub schedule: Schedule,
+    /// Mailbox synchronisation design (§III; push mode only).
+    pub strategy: Strategy,
+    /// Vertex attribute layout (§IV).
+    pub layout: Layout,
+    /// Selection bypass: explicit active list vs full scan.
+    pub bypass: bool,
+    /// Safety cap on supersteps.
+    pub max_supersteps: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            threads: 4,
+            schedule: Schedule::Static,
+            strategy: Strategy::Lock,
+            layout: Layout::Interleaved,
+            bypass: false,
+            max_supersteps: 100_000,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The paper's baseline configuration.
+    pub fn baseline() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style setters.
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = t.max(1);
+        self
+    }
+    /// Set the schedule.
+    pub fn schedule(mut self, s: Schedule) -> Self {
+        self.schedule = s;
+        self
+    }
+    /// Set the combination strategy.
+    pub fn strategy(mut self, s: Strategy) -> Self {
+        self.strategy = s;
+        self
+    }
+    /// Set the vertex layout.
+    pub fn layout(mut self, l: Layout) -> Self {
+        self.layout = l;
+        self
+    }
+    /// Enable/disable selection bypass.
+    pub fn bypass(mut self, b: bool) -> Self {
+        self.bypass = b;
+        self
+    }
+    /// Cap the number of supersteps.
+    pub fn max_supersteps(mut self, n: usize) -> Self {
+        self.max_supersteps = n;
+        self
+    }
+}
+
+/// Result of an engine run: final vertex values plus metrics.
+#[derive(Clone, Debug)]
+pub struct RunResult<V> {
+    /// Final value of each vertex, indexed by id.
+    pub values: Vec<V>,
+    /// Per-superstep and whole-run statistics.
+    pub metrics: RunMetrics,
+}
+
+/// Run `program` on `g` under `cfg`, dispatching to the store type the
+/// layout switch selects. This is the library's main entry point.
+pub fn run<P: VertexProgram>(g: &Csr, program: &P, cfg: EngineConfig) -> RunResult<P::Value> {
+    match cfg.layout {
+        Layout::Interleaved => {
+            core::Engine::<P, AosStore<P::Value, P::Message>>::new(g, program, cfg).run()
+        }
+        Layout::Externalised => {
+            core::Engine::<P, SoaStore<P::Value, P::Message>>::new(g, program, cfg).run()
+        }
+    }
+}

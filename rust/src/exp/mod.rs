@@ -1,0 +1,13 @@
+//! Experiment harness: regenerate the paper's Table I and Table II.
+//!
+//! Table II is reproduced on the virtual testbed ([`crate::sim`]) at 32
+//! virtual threads, on the catalog analogue graphs; every cell is a
+//! speed-up over the benchmark's baseline configuration, printed next to
+//! the paper's value. DESIGN.md §6 maps each row to the module that
+//! implements it.
+
+pub mod table1;
+pub mod table2;
+
+pub use table1::run_table1;
+pub use table2::{run_table2, Bench, Table2Options};

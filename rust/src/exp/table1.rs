@@ -1,0 +1,103 @@
+//! Table I reproduction: the graph inventory.
+//!
+//! Prints, for each catalog analogue, the original SNAP graph's counts
+//! (paper Table I) next to the generated analogue's counts and the degree
+//! statistics that justify the substitution (DESIGN.md §3).
+
+use crate::graph::catalog::CatalogEntry;
+use crate::graph::stats;
+use crate::metrics::TablePrinter;
+use crate::util::commas;
+use anyhow::Result;
+use std::path::Path;
+
+/// One row of the reproduced Table I.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    /// Analogue name.
+    pub name: String,
+    /// Original graph name.
+    pub stands_for: String,
+    /// Paper's vertex/undirected-edge counts.
+    pub original_vertices: u64,
+    pub original_edges: u64,
+    /// Analogue counts (directed edges / 2 = undirected).
+    pub vertices: u64,
+    pub directed_edges: u64,
+    pub avg_degree: f64,
+    pub max_degree: u64,
+    pub gini: f64,
+}
+
+/// Generate (or load cached) analogues and collect rows.
+pub fn collect(entries: &[CatalogEntry], cache_dir: &Path) -> Result<Vec<Table1Row>> {
+    let mut rows = Vec::new();
+    for e in entries {
+        let g = e.load_or_generate(cache_dir)?;
+        let s = stats::degree_stats(&g);
+        rows.push(Table1Row {
+            name: e.name.to_string(),
+            stands_for: e.stands_for.to_string(),
+            original_vertices: e.original_vertices,
+            original_edges: e.original_edges,
+            vertices: s.num_vertices as u64,
+            directed_edges: s.num_directed_edges as u64,
+            avg_degree: s.avg_out_degree,
+            max_degree: s.max_out_degree as u64,
+            gini: s.gini,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the table in the paper's shape (plus analogue diagnostics).
+pub fn render(rows: &[Table1Row]) -> String {
+    let mut t = TablePrinter::new(&[
+        "Graph",
+        "paper |V|",
+        "paper |E|",
+        "analogue",
+        "|V|",
+        "directed |E|",
+        "avg deg",
+        "max deg",
+        "gini",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.stands_for.clone(),
+            commas(r.original_vertices),
+            commas(r.original_edges),
+            r.name.clone(),
+            commas(r.vertices),
+            commas(r.directed_edges),
+            format!("{:.1}", r.avg_degree),
+            commas(r.max_degree),
+            format!("{:.2}", r.gini),
+        ]);
+    }
+    t.render()
+}
+
+/// Full Table I run: collect + render.
+pub fn run_table1(entries: &[CatalogEntry], cache_dir: &Path) -> Result<String> {
+    Ok(render(&collect(entries, cache_dir)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::catalog;
+
+    #[test]
+    fn tiny_table1_renders_all_rows() {
+        let dir = std::env::temp_dir().join(format!("ipregel_t1_{}", std::process::id()));
+        let out = run_table1(&catalog::catalog_tiny(), &dir).unwrap();
+        for name in ["DBLP", "LiveJournal", "Orkut", "Friendster"] {
+            assert!(out.contains(name), "{out}");
+        }
+        assert!(out.contains("317,080"));
+        assert!(out.contains("1,806,067,135"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

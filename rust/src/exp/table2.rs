@@ -1,0 +1,400 @@
+//! Table II reproduction: per-optimisation speed-ups.
+//!
+//! For each benchmark (PR, CC, SSSP) and each catalog graph, run the
+//! baseline iPregel configuration and every optimisation variant on the
+//! virtual testbed, and report `t_baseline / t_variant`, next to the
+//! paper's measured value. The variant grid mirrors §VII exactly:
+//!
+//! - PR, CC (pull, lock-free by design): externalised structure,
+//!   edge-centric workload, dynamic scheduling, final = externalised +
+//!   dynamic (no combiner; edge-centric excluded from "final" as
+//!   incompatible with dynamic — paper §VII-B);
+//! - SSSP (push): hybrid combiner, externalised, edge-centric, dynamic,
+//!   final = hybrid + externalised + dynamic.
+
+use crate::algos::{ConnectedComponents, PageRank, Sssp};
+use crate::combine::Strategy;
+use crate::engine::EngineConfig;
+use crate::graph::csr::Csr;
+use crate::layout::Layout;
+use crate::metrics::TablePrinter;
+use crate::sched::Schedule;
+use crate::sim::SimEngine;
+use crate::util::geomean;
+
+/// The paper's three benchmarks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bench {
+    /// PageRank, 10 iterations, pull single-broadcast.
+    Pr,
+    /// Connected Components, pull + selection bypass.
+    Cc,
+    /// Unweighted SSSP from the max-degree hub, push + selection bypass.
+    Sssp,
+}
+
+impl Bench {
+    /// All benchmarks in the paper's order.
+    pub fn all() -> [Bench; 3] {
+        [Bench::Pr, Bench::Cc, Bench::Sssp]
+    }
+
+    /// Table section header, as printed in the paper.
+    pub fn title(self) -> &'static str {
+        match self {
+            Bench::Pr => "PR (10 iterations)",
+            Bench::Cc => "CC",
+            Bench::Sssp => "SSSP",
+        }
+    }
+
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Bench> {
+        match s.to_ascii_lowercase().as_str() {
+            "pr" | "pagerank" => Some(Bench::Pr),
+            "cc" => Some(Bench::Cc),
+            "sssp" => Some(Bench::Sssp),
+            _ => None,
+        }
+    }
+
+    /// The benchmark's baseline engine configuration (paper §VI-C: PR =
+    /// plain single-broadcast; CC and SSSP = selection-bypass versions).
+    pub fn base_cfg(self, threads: usize) -> EngineConfig {
+        let cfg = EngineConfig::default()
+            .threads(threads)
+            .schedule(Schedule::Static)
+            .layout(Layout::Interleaved)
+            .strategy(Strategy::Lock);
+        match self {
+            Bench::Pr => cfg,
+            Bench::Cc | Bench::Sssp => cfg.bypass(true),
+        }
+    }
+}
+
+/// One optimisation variant: a name, a config transform, and the paper's
+/// measured speed-ups on (DBLP, LiveJournal, Orkut, Friendster).
+pub struct Variant {
+    /// Row label (paper wording).
+    pub name: &'static str,
+    /// Applies the optimisation(s) to the baseline config.
+    pub apply: fn(EngineConfig) -> EngineConfig,
+    /// Paper Table II values for the four graphs.
+    pub paper: [f64; 4],
+}
+
+/// The paper's variant grid for one benchmark.
+pub fn variants(bench: Bench) -> Vec<Variant> {
+    let externalise: fn(EngineConfig) -> EngineConfig = |c| c.layout(Layout::Externalised);
+    let edge: fn(EngineConfig) -> EngineConfig = |c| c.schedule(Schedule::EdgeCentric);
+    let dynamic: fn(EngineConfig) -> EngineConfig =
+        |c| c.schedule(Schedule::Dynamic { chunk: 256 });
+    match bench {
+        Bench::Pr => vec![
+            Variant { name: "Externalised structure", apply: externalise, paper: [1.31, 1.27, 1.51, 1.13] },
+            Variant { name: "Edge-centric workload", apply: edge, paper: [1.01, 2.31, 1.67, 1.36] },
+            Variant { name: "Dynamic scheduling", apply: dynamic, paper: [1.23, 2.31, 1.99, 1.44] },
+            Variant {
+                name: "Final",
+                apply: |c| c.layout(Layout::Externalised).schedule(Schedule::Dynamic { chunk: 256 }),
+                paper: [1.61, 3.14, 3.07, 1.63],
+            },
+        ],
+        Bench::Cc => vec![
+            Variant { name: "Externalised structure", apply: externalise, paper: [1.58, 1.66, 1.47, 1.65] },
+            Variant { name: "Edge-centric workload", apply: edge, paper: [0.56, 1.12, 1.27, 1.41] },
+            Variant { name: "Dynamic scheduling", apply: dynamic, paper: [1.23, 1.67, 1.69, 1.20] },
+            Variant {
+                name: "Final",
+                apply: |c| c.layout(Layout::Externalised).schedule(Schedule::Dynamic { chunk: 256 }),
+                paper: [2.05, 2.96, 2.41, 2.12],
+            },
+        ],
+        Bench::Sssp => vec![
+            Variant {
+                name: "Hybrid combiner",
+                apply: |c| c.strategy(Strategy::Hybrid),
+                paper: [1.01, 1.12, 2.35, 4.07],
+            },
+            Variant { name: "Externalised structure", apply: externalise, paper: [1.08, 1.01, 1.07, 1.10] },
+            Variant { name: "Edge-centric workload", apply: edge, paper: [0.91, 0.87, 1.28, 1.29] },
+            Variant { name: "Dynamic scheduling", apply: dynamic, paper: [1.11, 1.33, 1.55, 1.69] },
+            Variant {
+                name: "Final",
+                apply: |c| {
+                    c.strategy(Strategy::Hybrid)
+                        .layout(Layout::Externalised)
+                        .schedule(Schedule::Dynamic { chunk: 256 })
+                },
+                paper: [1.09, 1.75, 3.18, 5.63],
+            },
+        ],
+    }
+}
+
+/// Options for a Table II run.
+#[derive(Clone, Debug)]
+pub struct Table2Options {
+    /// Virtual thread count (paper: 32).
+    pub threads: usize,
+    /// Which benchmarks to run.
+    pub benches: Vec<Bench>,
+    /// Dynamic-scheduling chunk for graphs too small for 256 (tests).
+    pub dynamic_chunk_override: Option<usize>,
+}
+
+impl Default for Table2Options {
+    fn default() -> Self {
+        Table2Options {
+            threads: 32,
+            benches: Bench::all().to_vec(),
+            dynamic_chunk_override: None,
+        }
+    }
+}
+
+/// One variant row of results across the graph columns.
+#[derive(Clone, Debug)]
+pub struct VariantRow {
+    pub name: String,
+    /// Measured speed-up per graph.
+    pub speedups: Vec<f64>,
+    /// Paper's speed-up per graph (empty unless 4 catalog graphs).
+    pub paper: Vec<f64>,
+}
+
+/// Results for one benchmark section.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub bench: Bench,
+    /// Baseline virtual seconds per graph.
+    pub baseline_secs: Vec<f64>,
+    pub rows: Vec<VariantRow>,
+}
+
+fn sim_virtual_secs(bench: Bench, g: &Csr, cfg: EngineConfig) -> f64 {
+    match bench {
+        Bench::Pr => SimEngine::new(g, &PageRank::default(), cfg).run().virtual_seconds,
+        Bench::Cc => SimEngine::new(g, &ConnectedComponents, cfg).run().virtual_seconds,
+        Bench::Sssp => {
+            let p = Sssp::from_hub(g);
+            SimEngine::new(g, &p, cfg).run().virtual_seconds
+        }
+    }
+}
+
+fn override_chunk(cfg: EngineConfig, chunk: Option<usize>) -> EngineConfig {
+    match (cfg.schedule, chunk) {
+        (Schedule::Dynamic { .. }, Some(c)) => cfg.schedule(Schedule::Dynamic { chunk: c }),
+        _ => cfg,
+    }
+}
+
+/// Run Table II over `graphs` (name, graph) columns.
+pub fn run_table2(graphs: &[(String, Csr)], opts: &Table2Options) -> Vec<BenchResult> {
+    let paper_columns = graphs.len() == 4;
+    opts.benches
+        .iter()
+        .map(|&bench| {
+            let base = bench.base_cfg(opts.threads);
+            let baseline_secs: Vec<f64> = graphs
+                .iter()
+                .map(|(_, g)| sim_virtual_secs(bench, g, base))
+                .collect();
+            let rows = variants(bench)
+                .into_iter()
+                .map(|v| {
+                    let speedups = graphs
+                        .iter()
+                        .zip(&baseline_secs)
+                        .map(|((_, g), &tb)| {
+                            let cfg = override_chunk((v.apply)(base), opts.dynamic_chunk_override);
+                            let tv = sim_virtual_secs(bench, g, cfg);
+                            tb / tv
+                        })
+                        .collect();
+                    VariantRow {
+                        name: v.name.to_string(),
+                        speedups,
+                        paper: if paper_columns { v.paper.to_vec() } else { vec![] },
+                    }
+                })
+                .collect();
+            BenchResult {
+                bench,
+                baseline_secs,
+                rows,
+            }
+        })
+        .collect()
+}
+
+/// Render the paper-shaped table: `measured (paper)` per cell.
+pub fn render(graphs: &[String], results: &[BenchResult]) -> String {
+    let mut headers: Vec<&str> = vec![""];
+    for g in graphs {
+        headers.push(g);
+    }
+    let mut out = String::new();
+    for r in results {
+        let mut t = TablePrinter::new(&headers);
+        out.push_str(&format!("\n== {} ==\n", r.bench.title()));
+        let mut base_row = vec!["Baseline (virtual s)".to_string()];
+        for secs in &r.baseline_secs {
+            base_row.push(format!("{secs:.3}s"));
+        }
+        t.row(base_row);
+        for row in &r.rows {
+            let mut cells = vec![row.name.clone()];
+            for (i, s) in row.speedups.iter().enumerate() {
+                let cell = match row.paper.get(i) {
+                    Some(p) => format!("{s:.2} (paper {p:.2})"),
+                    None => format!("{s:.2}"),
+                };
+                cells.push(cell);
+            }
+            t.row(cells);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// The paper's §VII aggregate claims, computed over our measured cells.
+pub fn summary(results: &[BenchResult]) -> String {
+    let mut individual: Vec<f64> = Vec::new();
+    let mut finals: Vec<f64> = Vec::new();
+    let mut hybrid: Vec<f64> = Vec::new();
+    let mut extern_: Vec<f64> = Vec::new();
+    let mut edge: Vec<f64> = Vec::new();
+    let mut dynamic: Vec<f64> = Vec::new();
+    for r in results {
+        for row in &r.rows {
+            let bucket: Option<&mut Vec<f64>> = match row.name.as_str() {
+                "Hybrid combiner" => Some(&mut hybrid),
+                "Externalised structure" => Some(&mut extern_),
+                "Edge-centric workload" => Some(&mut edge),
+                "Dynamic scheduling" => Some(&mut dynamic),
+                "Final" => {
+                    finals.extend(&row.speedups);
+                    None
+                }
+                _ => None,
+            };
+            if let Some(b) = bucket {
+                b.extend(&row.speedups);
+                individual.extend(&row.speedups);
+            }
+        }
+    }
+    let wins = individual.iter().filter(|&&s| s > 1.0).count();
+    let cut: Vec<f64> = finals.iter().map(|s| (1.0 - 1.0 / s) * 100.0).collect();
+    let mean_cut = cut.iter().sum::<f64>() / cut.len().max(1) as f64;
+    let min_cut = cut.iter().copied().fold(f64::INFINITY, f64::min);
+    let max_cut = cut.iter().copied().fold(0.0, f64::max);
+    format!(
+        "summary vs paper §VII:\n\
+         \u{20} hybrid combiner geomean   {:>5.2}  (paper 1.81)\n\
+         \u{20} externalisation geomean   {:>5.2}  (paper 1.30)\n\
+         \u{20} edge-centric geomean      {:>5.2}  (paper 1.19)\n\
+         \u{20} dynamic geomean           {:>5.2}  (paper 1.50)\n\
+         \u{20} individual wins           {:>2}/{:<2} (paper 37/40)\n\
+         \u{20} final runtime cut mean    {:>5.1}% (paper 59%)\n\
+         \u{20} final runtime cut range   {:>4.1}%..{:>4.1}% (paper 8%..82%)",
+        geomean(&hybrid),
+        geomean(&extern_),
+        geomean(&edge),
+        geomean(&dynamic),
+        wins,
+        individual.len(),
+        mean_cut,
+        min_cut,
+        max_cut,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn tiny_graphs() -> Vec<(String, Csr)> {
+        vec![
+            ("g1".into(), gen::barabasi_albert(1200, 3, 1)),
+            ("g2".into(), gen::rmat(11, 8, 0.57, 0.19, 0.19, 2)),
+        ]
+    }
+
+    #[test]
+    fn table2_structure_is_paper_shaped() {
+        let graphs = tiny_graphs();
+        let opts = Table2Options {
+            threads: 32,
+            benches: vec![Bench::Pr, Bench::Sssp],
+            dynamic_chunk_override: Some(16),
+        };
+        let results = run_table2(&graphs, &opts);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].rows.len(), 4); // PR: extern, edge, dyn, final
+        assert_eq!(results[1].rows.len(), 5); // SSSP: + hybrid
+        for r in &results {
+            for row in &r.rows {
+                assert_eq!(row.speedups.len(), graphs.len());
+                for &s in &row.speedups {
+                    assert!(s.is_finite() && s > 0.0);
+                }
+            }
+        }
+        let names: Vec<String> = graphs.iter().map(|(n, _)| n.clone()).collect();
+        let rendered = render(&names, &results);
+        assert!(rendered.contains("PR (10 iterations)"));
+        assert!(rendered.contains("SSSP"));
+        assert!(rendered.contains("Final"));
+    }
+
+    #[test]
+    fn sssp_hybrid_speedup_positive_on_skewed_graph() {
+        let g = gen::rmat(12, 16, 0.57, 0.19, 0.19, 5);
+        let opts = Table2Options {
+            threads: 32,
+            benches: vec![Bench::Sssp],
+            dynamic_chunk_override: Some(32),
+        };
+        let results = run_table2(&[("rmat".into(), g)], &opts);
+        let hybrid = &results[0].rows[0];
+        assert_eq!(hybrid.name, "Hybrid combiner");
+        assert!(
+            hybrid.speedups[0] > 1.0,
+            "hybrid speedup {}",
+            hybrid.speedups[0]
+        );
+        // Final composes hybrid + extern + dynamic: at least as good as
+        // hybrid alone on this workload.
+        let final_ = results[0].rows.last().unwrap();
+        assert!(final_.speedups[0] > hybrid.speedups[0] * 0.8);
+    }
+
+    #[test]
+    fn summary_renders_paper_aggregates() {
+        let graphs = tiny_graphs();
+        let opts = Table2Options {
+            threads: 32,
+            benches: Bench::all().to_vec(),
+            dynamic_chunk_override: Some(16),
+        };
+        let results = run_table2(&graphs, &opts);
+        let s = summary(&results);
+        assert!(s.contains("paper 1.81"));
+        assert!(s.contains("individual wins"));
+    }
+
+    #[test]
+    fn bench_parse() {
+        assert_eq!(Bench::parse("pr"), Some(Bench::Pr));
+        assert_eq!(Bench::parse("PageRank"), Some(Bench::Pr));
+        assert_eq!(Bench::parse("cc"), Some(Bench::Cc));
+        assert_eq!(Bench::parse("sssp"), Some(Bench::Sssp));
+        assert_eq!(Bench::parse("nope"), None);
+    }
+}

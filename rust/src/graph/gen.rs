@@ -1,0 +1,292 @@
+//! Synthetic graph generators.
+//!
+//! The paper's evaluation runs on four SNAP graphs we cannot download in
+//! this offline environment, so the catalog (see [`crate::graph::catalog`])
+//! builds analogues from these generators. RMAT is the workhorse: its
+//! recursive-quadrant sampling yields the power-law degree distributions
+//! that drive every optimisation the paper studies.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::{Csr, VertexId};
+use crate::util::rng::Rng;
+
+/// Recursive-MATrix (Graph500-style) generator.
+///
+/// `scale` = log2(#vertices); `edge_factor` = undirected edges per vertex.
+/// `(a, b, c)` are the standard quadrant probabilities (d = 1-a-b-c);
+/// Graph500 uses (0.57, 0.19, 0.19).
+pub fn rmat(
+    scale: u32,
+    edge_factor: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+) -> Csr {
+    assert!(a + b + c < 1.0, "quadrant probabilities must leave room for d");
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let mut rng = Rng::new(seed);
+    let mut gb = GraphBuilder::new(n).symmetric(true).drop_self_loops(true);
+    for _ in 0..m {
+        let (mut src, mut dst) = (0usize, 0usize);
+        for _ in 0..scale {
+            src <<= 1;
+            dst <<= 1;
+            let r = rng.f64();
+            if r < a {
+                // top-left: neither bit set
+            } else if r < a + b {
+                dst |= 1;
+            } else if r < a + b + c {
+                src |= 1;
+            } else {
+                src |= 1;
+                dst |= 1;
+            }
+        }
+        gb.push_edge(src as VertexId, dst as VertexId);
+    }
+    gb.build()
+}
+
+/// Barabási–Albert preferential attachment: each new vertex attaches to
+/// `m_per_vertex` existing vertices with probability proportional to their
+/// degree. Produces power-law degree graphs with a connected core —
+/// a good analogue for social networks (Orkut/LiveJournal shapes).
+pub fn barabasi_albert(n: usize, m_per_vertex: usize, seed: u64) -> Csr {
+    assert!(n > m_per_vertex && m_per_vertex >= 1);
+    let mut rng = Rng::new(seed);
+    let mut gb = GraphBuilder::new(n).symmetric(true).drop_self_loops(true);
+    // `targets` holds one entry per edge endpoint → sampling uniformly from
+    // it is sampling proportional to degree.
+    let mut endpoints: Vec<VertexId> = Vec::with_capacity(2 * n * m_per_vertex);
+    // Seed clique over the first m_per_vertex+1 vertices.
+    for i in 0..=m_per_vertex {
+        for j in 0..i {
+            gb.push_edge(i as VertexId, j as VertexId);
+            endpoints.push(i as VertexId);
+            endpoints.push(j as VertexId);
+        }
+    }
+    for v in (m_per_vertex + 1)..n {
+        let mut chosen = [VertexId::MAX; 64];
+        assert!(m_per_vertex <= 64);
+        let mut count = 0;
+        while count < m_per_vertex {
+            let t = endpoints[rng.below(endpoints.len() as u64) as usize];
+            if !chosen[..count].contains(&t) {
+                chosen[count] = t;
+                count += 1;
+            }
+        }
+        for &t in &chosen[..m_per_vertex] {
+            gb.push_edge(v as VertexId, t);
+            endpoints.push(v as VertexId);
+            endpoints.push(t);
+        }
+    }
+    gb.build()
+}
+
+/// Erdős–Rényi G(n, m): `m` undirected edges sampled uniformly.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut gb = GraphBuilder::new(n).symmetric(true).drop_self_loops(true);
+    for _ in 0..m {
+        let s = rng.below(n as u64) as VertexId;
+        let d = rng.below(n as u64) as VertexId;
+        gb.push_edge(s, d);
+    }
+    gb.build()
+}
+
+/// Undirected path 0–1–…–(n-1). Worst case for BFS-style frontier growth.
+pub fn path(n: usize) -> Csr {
+    let mut gb = GraphBuilder::new(n).symmetric(true);
+    for v in 1..n {
+        gb.push_edge((v - 1) as VertexId, v as VertexId);
+    }
+    gb.build()
+}
+
+/// Undirected cycle.
+pub fn ring(n: usize) -> Csr {
+    assert!(n >= 3);
+    let mut gb = GraphBuilder::new(n).symmetric(true);
+    for v in 0..n {
+        gb.push_edge(v as VertexId, ((v + 1) % n) as VertexId);
+    }
+    gb.build()
+}
+
+/// Star: hub 0 connected to all others — maximal degree skew, the
+/// adversarial case for vertex-count work distribution (paper §V-A).
+pub fn star(n: usize) -> Csr {
+    assert!(n >= 2);
+    let mut gb = GraphBuilder::new(n).symmetric(true);
+    for v in 1..n {
+        gb.push_edge(0, v as VertexId);
+    }
+    gb.build()
+}
+
+/// Complete graph K_n (small n only).
+pub fn complete(n: usize) -> Csr {
+    let mut gb = GraphBuilder::new(n).symmetric(true);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            gb.push_edge(i as VertexId, j as VertexId);
+        }
+    }
+    gb.build()
+}
+
+/// 2-D grid (rows × cols), 4-neighbourhood — regular degrees, the
+/// counterpoint workload where edge-centric balancing should not help.
+pub fn grid(rows: usize, cols: usize) -> Csr {
+    let n = rows * cols;
+    let mut gb = GraphBuilder::new(n).symmetric(true);
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                gb.push_edge(id(r, c), id(r, c + 1));
+            }
+            if r + 1 < rows {
+                gb.push_edge(id(r, c), id(r + 1, c));
+            }
+        }
+    }
+    gb.build()
+}
+
+/// Relabel a fraction of the vertices with a seeded random permutation.
+///
+/// RMAT and preferential-attachment generators put their hubs at low
+/// vertex ids, which makes contiguous static thread ranges pathologically
+/// imbalanced — far worse than real SNAP orderings, whose crawl order has
+/// only *partial* degree-id correlation. A partial shuffle (`fraction` of
+/// vertices relabelled, the rest kept in place) reproduces that moderate
+/// correlation; the catalog applies 0.5 (see DESIGN.md §3).
+pub fn partial_shuffle(g: &Csr, fraction: f64, seed: u64) -> Csr {
+    let n = g.num_vertices();
+    let mut rng = Rng::new(seed);
+    // Select exactly ≈fraction·n vertices and permute them among
+    // themselves; the rest keep their (clustered) positions.
+    let mut perm: Vec<VertexId> = (0..n as VertexId).collect();
+    let chosen: Vec<VertexId> = (0..n as VertexId)
+        .filter(|_| rng.chance(fraction.clamp(0.0, 1.0)))
+        .collect();
+    let mut targets = chosen.clone();
+    rng.shuffle(&mut targets);
+    for (src, dst) in chosen.iter().zip(&targets) {
+        perm[*src as usize] = *dst;
+    }
+    let mut gb = GraphBuilder::new(n);
+    for (s, d) in g.edges() {
+        gb.push_edge(perm[s as usize], perm[d as usize]);
+    }
+    gb.build()
+}
+
+/// Disjoint union of `k` rings of `size` vertices each — ground truth for
+/// connected-components tests (k components by construction).
+pub fn disjoint_rings(k: usize, size: usize) -> Csr {
+    assert!(size >= 3);
+    let n = k * size;
+    let mut gb = GraphBuilder::new(n).symmetric(true);
+    for comp in 0..k {
+        let base = comp * size;
+        for v in 0..size {
+            gb.push_edge((base + v) as VertexId, (base + (v + 1) % size) as VertexId);
+        }
+    }
+    gb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn rmat_shape_and_validity() {
+        let g = rmat(10, 8, 0.57, 0.19, 0.19, 42);
+        assert_eq!(g.num_vertices(), 1024);
+        // symmetric, self-loops dropped → directed edges ≤ 2 * n * ef
+        assert!(g.num_edges() <= 2 * 1024 * 8);
+        assert!(g.num_edges() > 1024 * 8); // most edges survive
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rmat_is_deterministic() {
+        let a = rmat(8, 4, 0.57, 0.19, 0.19, 7);
+        let b = rmat(8, 4, 0.57, 0.19, 0.19, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(12, 8, 0.57, 0.19, 0.19, 1);
+        let s = stats::degree_stats(&g);
+        assert!(
+            s.max_out_degree as f64 > 8.0 * s.avg_out_degree,
+            "rmat should be heavy-tailed: max={} avg={}",
+            s.max_out_degree,
+            s.avg_out_degree
+        );
+    }
+
+    #[test]
+    fn ba_degrees_and_validity() {
+        let g = barabasi_albert(500, 3, 11);
+        g.validate().unwrap();
+        // Every vertex (beyond the seed clique) attaches with m edges.
+        assert!(g.num_edges() >= 2 * (500 - 4) * 3);
+        let s = stats::degree_stats(&g);
+        assert!(s.max_out_degree > 3 * s.avg_out_degree as usize);
+    }
+
+    #[test]
+    fn erdos_renyi_is_symmetric() {
+        let g = erdos_renyi(100, 300, 5);
+        g.validate().unwrap();
+        for v in g.vertices() {
+            for &u in g.out_neighbors(v) {
+                assert!(g.out_neighbors(u).binary_search(&v).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn structured_generators() {
+        let p = path(10);
+        assert_eq!(p.num_edges(), 18); // 9 undirected
+        assert_eq!(p.out_degree(0), 1);
+        assert_eq!(p.out_degree(5), 2);
+
+        let r = ring(10);
+        assert!(r.vertices().all(|v| r.out_degree(v) == 2));
+
+        let s = star(10);
+        assert_eq!(s.out_degree(0), 9);
+        assert!(s.vertices().skip(1).all(|v| s.out_degree(v) == 1));
+
+        let k = complete(6);
+        assert!(k.vertices().all(|v| k.out_degree(v) == 5));
+
+        let g = grid(4, 5);
+        assert_eq!(g.num_vertices(), 20);
+        assert_eq!(g.out_degree(0), 2); // corner
+        assert_eq!(g.out_degree(6), 4); // interior
+
+        let d = disjoint_rings(3, 5);
+        assert_eq!(d.num_vertices(), 15);
+        assert!(d.vertices().all(|v| d.out_degree(v) == 2));
+        for gg in [&p, &r, &s, &k, &g, &d] {
+            gg.validate().unwrap();
+        }
+    }
+}

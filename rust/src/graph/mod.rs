@@ -1,0 +1,16 @@
+//! Graph substrate: compressed sparse-row storage, construction,
+//! generation, persistence and statistics.
+//!
+//! Everything downstream (engine, schedulers, experiments) consumes the
+//! [`Csr`] type, which stores both out- and in-adjacency so that push- and
+//! pull-based engine versions can traverse in either direction.
+
+pub mod builder;
+pub mod catalog;
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod stats;
+
+pub use builder::GraphBuilder;
+pub use csr::{Csr, VertexId};

@@ -1,0 +1,131 @@
+//! Baseline array-of-structures layout: one interleaved record per vertex.
+//!
+//! This mirrors the unoptimised iPregel vertex structure, where the hot
+//! flag+message pair shares a record (and its cache lines) with the user
+//! value and the neighbour metadata. Scanning neighbours' mailboxes
+//! therefore loads mostly-useless bytes — the §IV problem.
+
+use crate::combine::slot::{MessageValue, MsgSlot};
+use crate::graph::csr::{Csr, VertexId};
+use crate::layout::store::{Layout, SyncCell, VertexMeta, VertexStore};
+
+/// One interleaved vertex record. The two epoch slots sit between the
+/// cold fields, as in the original struct.
+struct Record<V, M: MessageValue> {
+    value: SyncCell<V>,
+    meta: VertexMeta,
+    slot_a: MsgSlot<M>,
+    slot_b: MsgSlot<M>,
+}
+
+/// Baseline interleaved store.
+pub struct AosStore<V, M: MessageValue> {
+    records: Vec<Record<V, M>>,
+    /// Which slot is the *current* epoch: false → `slot_a`, true → `slot_b`.
+    flipped: bool,
+}
+
+impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for AosStore<V, M> {
+    fn build(g: &Csr, init: &mut dyn FnMut(VertexId) -> V) -> Self {
+        let records = g
+            .vertices()
+            .map(|v| Record {
+                value: SyncCell::new(init(v)),
+                meta: VertexMeta::of(g, v),
+                slot_a: MsgSlot::new(),
+                slot_b: MsgSlot::new(),
+            })
+            .collect();
+        AosStore {
+            records,
+            flipped: false,
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    #[inline]
+    fn value(&self, v: VertexId) -> &V {
+        self.records[v as usize].value.get()
+    }
+
+    #[inline]
+    fn value_mut(&self, v: VertexId) -> &mut V {
+        self.records[v as usize].value.get_mut()
+    }
+
+    #[inline]
+    fn meta(&self, v: VertexId) -> &VertexMeta {
+        &self.records[v as usize].meta
+    }
+
+    #[inline]
+    fn cur_slot(&self, v: VertexId) -> &MsgSlot<M> {
+        let r = &self.records[v as usize];
+        if self.flipped {
+            &r.slot_b
+        } else {
+            &r.slot_a
+        }
+    }
+
+    #[inline]
+    fn next_slot(&self, v: VertexId) -> &MsgSlot<M> {
+        let r = &self.records[v as usize];
+        if self.flipped {
+            &r.slot_a
+        } else {
+            &r.slot_b
+        }
+    }
+
+    fn swap_epochs(&mut self) {
+        self.flipped = !self.flipped;
+    }
+
+    fn layout(&self) -> Layout {
+        Layout::Interleaved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn build_and_access() {
+        let g = gen::ring(10);
+        let store: AosStore<f64, f64> = AosStore::build(&g, &mut |v| v as f64);
+        assert_eq!(store.len(), 10);
+        assert_eq!(*store.value(3), 3.0);
+        *store.value_mut(3) = 7.5;
+        assert_eq!(*store.value(3), 7.5);
+        assert_eq!(store.meta(3).out_degree, 2);
+        assert_eq!(store.layout(), Layout::Interleaved);
+    }
+
+    #[test]
+    fn epochs_swap() {
+        let g = gen::ring(5);
+        let mut store: AosStore<u32, u64> = AosStore::build(&g, &mut |_| 0);
+        store.next_slot(2).store_first(99);
+        assert_eq!(store.cur_slot(2).peek(), None);
+        store.swap_epochs();
+        assert_eq!(store.cur_slot(2).peek(), Some(99));
+        assert_eq!(store.next_slot(2).peek(), None);
+        store.swap_epochs();
+        // Back to the original orientation: slot_a never received anything.
+        assert_eq!(store.cur_slot(2).peek(), None);
+    }
+
+    #[test]
+    fn record_is_bigger_than_hot_slot() {
+        // The whole point of §IV: the interleaved record wastes cache
+        // space relative to the 16-byte hot slot.
+        assert!(std::mem::size_of::<Record<f64, f64>>() > 2 * std::mem::size_of::<MsgSlot<f64>>());
+    }
+}

@@ -1,0 +1,21 @@
+//! Vertex attribute layouts — baseline interleaved vs externalised (§IV).
+//!
+//! During communication the engine touches only each vertex's *hot*
+//! attributes (message slot + flag); everything else — the user value,
+//! degrees, activity metadata — is *cold*. The baseline [`AosStore`]
+//! interleaves hot and cold in one record per vertex, so every pull of a
+//! neighbour's message drags a full record-sized region through the cache.
+//! The externalised [`SoaStore`] groups attributes by access frequency:
+//! hot slots in their own dense arrays, cold attributes elsewhere, so
+//! cache lines carry only useful bytes.
+//!
+//! Both implement [`VertexStore`]; the engine is generic over it, which is
+//! exactly how the optimisation stays invisible to user code.
+
+pub mod aos;
+pub mod soa;
+pub mod store;
+
+pub use aos::AosStore;
+pub use soa::SoaStore;
+pub use store::{Layout, SyncCell, VertexMeta, VertexStore};

@@ -1,0 +1,127 @@
+//! The [`VertexStore`] abstraction shared by both layouts.
+
+use crate::combine::slot::{MessageValue, MsgSlot};
+use crate::graph::csr::{Csr, VertexId};
+use std::cell::UnsafeCell;
+
+/// Which layout an engine run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// Baseline: one interleaved record per vertex (array-of-structures).
+    Interleaved,
+    /// Externalised hot attributes (§IV, structure-of-arrays).
+    Externalised,
+}
+
+impl Layout {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Layout> {
+        match s {
+            "aos" | "interleaved" | "baseline" => Some(Layout::Interleaved),
+            "soa" | "externalised" | "externalized" | "extern" => Some(Layout::Externalised),
+            _ => None,
+        }
+    }
+}
+
+/// Interior-mutable cell for per-vertex user values. The engine guarantees
+/// each vertex is computed by exactly one thread per superstep, which makes
+/// the unsynchronised access sound (same discipline iPregel's C code uses).
+#[repr(transparent)]
+pub struct SyncCell<T>(UnsafeCell<T>);
+
+unsafe impl<T: Send> Sync for SyncCell<T> {}
+
+impl<T> SyncCell<T> {
+    /// Wrap a value.
+    pub fn new(v: T) -> Self {
+        SyncCell(UnsafeCell::new(v))
+    }
+
+    /// Shared read. Sound while no thread holds `get_mut` on the same
+    /// vertex — the engine's per-vertex ownership discipline.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub fn get(&self) -> &T {
+        unsafe { &*self.0.get() }
+    }
+
+    /// Exclusive write handle (engine-enforced exclusivity per vertex).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub fn get_mut(&self) -> &mut T {
+        unsafe { &mut *self.0.get() }
+    }
+}
+
+/// Cold per-vertex metadata a realistic vertex-centric framework carries in
+/// its vertex structure (iPregel's has id, neighbour pointers and counts).
+/// The baseline layout interleaves this with the hot slots — faithfully
+/// reproducing the cache pollution the paper measures.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VertexMeta {
+    /// Vertex id (iPregel stores it; useful for debugging/dumps).
+    pub id: VertexId,
+    /// Cached out-degree.
+    pub out_degree: u32,
+    /// Cached in-degree.
+    pub in_degree: u32,
+    /// Offset of this vertex's row in the CSR out-targets array.
+    pub out_offset: u64,
+    /// Offset of this vertex's row in the CSR in-sources array.
+    pub in_offset: u64,
+}
+
+impl VertexMeta {
+    /// Build metadata for vertex `v` of `g`.
+    pub fn of(g: &Csr, v: VertexId) -> Self {
+        VertexMeta {
+            id: v,
+            out_degree: g.out_degree(v) as u32,
+            in_degree: g.in_degree(v) as u32,
+            out_offset: g.out_offsets[v as usize] as u64,
+            in_offset: g.in_offsets[v as usize] as u64,
+        }
+    }
+}
+
+/// Storage of per-vertex state: user value `V`, cold metadata, and two
+/// epochs of message slots (`cur` = read by this superstep's compute,
+/// `next` = written by this superstep's sends; swapped at the barrier).
+pub trait VertexStore<V: Send, M: MessageValue>: Send + Sync {
+    /// Build a store for graph `g`, initialising each value with `init`.
+    fn build(g: &Csr, init: &mut dyn FnMut(VertexId) -> V) -> Self
+    where
+        Self: Sized;
+
+    /// Number of vertices.
+    fn len(&self) -> usize;
+
+    /// True when the store holds no vertices.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Shared borrow of `v`'s user value.
+    fn value(&self, v: VertexId) -> &V;
+
+    /// Exclusive borrow of `v`'s user value (engine guarantees one thread
+    /// per vertex per superstep).
+    #[allow(clippy::mut_from_ref)]
+    fn value_mut(&self, v: VertexId) -> &mut V;
+
+    /// Cold metadata of `v`.
+    fn meta(&self, v: VertexId) -> &VertexMeta;
+
+    /// Current-epoch slot (messages delivered *last* superstep).
+    fn cur_slot(&self, v: VertexId) -> &MsgSlot<M>;
+
+    /// Next-epoch slot (messages being delivered *this* superstep).
+    fn next_slot(&self, v: VertexId) -> &MsgSlot<M>;
+
+    /// Flip epochs at the superstep barrier (single-threaded phase).
+    fn swap_epochs(&mut self);
+
+    /// Which layout this store implements (for reporting).
+    fn layout(&self) -> Layout;
+}

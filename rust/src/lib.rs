@@ -1,0 +1,34 @@
+//! # iPregel — vertex-centric graph processing for irregular workloads
+//!
+//! A Rust reproduction of *“iPregel: Strategies to Deal with an Extreme
+//! Form of Irregularity in Vertex-Centric Graph Processing”* (Capelli,
+//! Brown, Bull — IA³/SC19), structured as a three-layer
+//! Rust + JAX + Pallas stack (see `DESIGN.md`).
+//!
+//! The crate provides:
+//! - a Pregel-style user API ([`engine::VertexProgram`]) with three
+//!   internal execution versions (push+combiner, pull single-broadcast,
+//!   selection bypass);
+//! - the paper's optimisations as composable components: hybrid
+//!   combiners ([`combine`]), externalised vertex layouts ([`layout`]),
+//!   edge-centric & dynamic scheduling ([`sched`]);
+//! - a graph substrate ([`graph`]) with generators, IO and the
+//!   paper-analogue catalog;
+//! - a calibrated virtual-testbed simulator ([`sim`]) reproducing the
+//!   paper's 32-thread results on this single-core machine;
+//! - a PJRT runtime ([`runtime`]) executing AOT-compiled JAX/Pallas
+//!   superstep kernels for the dense-block accelerated path;
+//! - the experiment harness ([`exp`]) regenerating Tables I and II.
+
+pub mod algos;
+pub mod combine;
+pub mod config;
+pub mod exp;
+pub mod engine;
+pub mod metrics;
+pub mod graph;
+pub mod layout;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,343 @@
+//! `ipregel` — the command-line launcher.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! ipregel generate  [--tiny] [--dir data/graphs]          generate + cache catalog graphs
+//! ipregel info      <graph|name> [--dir …]                degree stats + histogram
+//! ipregel run       --algo pr|cc|sssp|bfs <graph|name>    real multithreaded engine run
+//!                   [--threads N] [--schedule S] [--strategy S]
+//!                   [--layout aos|soa] [--bypass] [--iterations N] [--source V]
+//! ipregel sim       (same switches)                       virtual-testbed run (32 vthreads)
+//! ipregel table1    [--tiny] [--dir …]                    reproduce paper Table I
+//! ipregel table2    [--tiny] [--dir …] [--bench pr,cc,sssp] [--threads 32]
+//! ipregel calibrate                                        measure cost-model constants
+//! ipregel accel     --algo pr|cc|sssp <graph|name>        PJRT dense-block backend
+//! ```
+//!
+//! Graphs are referenced by catalog name (`dblp-s`, `friendster-t`, …) or
+//! by path (`.ipg` binary / edge-list text).
+
+use anyhow::{anyhow, bail, Context, Result};
+use ipregel::algos::{Bfs, ConnectedComponents, PageRank, Sssp};
+use ipregel::combine::Strategy;
+use ipregel::config::Opts;
+use ipregel::engine::{run, EngineConfig, VertexProgram};
+use ipregel::exp::{run_table1, table2, Bench, Table2Options};
+use ipregel::graph::csr::Csr;
+use ipregel::graph::{catalog, io, stats};
+use ipregel::layout::Layout;
+use ipregel::metrics::RunMetrics;
+use ipregel::sched::Schedule;
+use ipregel::sim::{calibrate, SimEngine};
+use ipregel::util::timer::fmt_duration;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: Vec<String>) -> Result<()> {
+    let opts = Opts::parse(args);
+    let cmd = opts
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "generate" => cmd_generate(&opts),
+        "info" => cmd_info(&opts),
+        "run" => cmd_run(&opts, false),
+        "sim" => cmd_run(&opts, true),
+        "table1" => cmd_table1(&opts),
+        "table2" => cmd_table2(&opts),
+        "calibrate" => cmd_calibrate(&opts),
+        "accel" => cmd_accel(&opts),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' — try `ipregel help`"),
+    }
+}
+
+const HELP: &str = "ipregel — vertex-centric graph processing (iPregel reproduction)\n\
+  generate | info | run | sim | table1 | table2 | calibrate | accel | help\n\
+  See README.md for full usage.";
+
+fn graph_dir(opts: &Opts) -> PathBuf {
+    PathBuf::from(opts.get_or("dir", "data/graphs"))
+}
+
+/// Resolve a graph argument: catalog name or file path.
+fn load_graph(arg: &str, dir: &Path) -> Result<Csr> {
+    if let Some(entry) = catalog::find(arg) {
+        return entry.load_or_generate(dir);
+    }
+    let p = Path::new(arg);
+    if p.exists() {
+        return io::load(p, false);
+    }
+    bail!(
+        "'{arg}' is neither a catalog name (e.g. dblp-s, friendster-t) \
+         nor an existing file"
+    )
+}
+
+fn cmd_generate(opts: &Opts) -> Result<()> {
+    opts.ensure_known(&["tiny", "dir"])?;
+    let dir = graph_dir(opts);
+    let entries = if opts.flag("tiny") {
+        catalog::catalog_tiny()
+    } else {
+        catalog::catalog()
+    };
+    for e in &entries {
+        let t = ipregel::util::timer::Timer::start();
+        let g = e.load_or_generate(&dir)?;
+        println!(
+            "{:<16} |V|={:<10} directed |E|={:<13} ({})",
+            e.name,
+            g.num_vertices(),
+            g.num_edges(),
+            fmt_duration(t.elapsed())
+        );
+    }
+    println!("cached under {}", dir.display());
+    Ok(())
+}
+
+fn cmd_info(opts: &Opts) -> Result<()> {
+    opts.ensure_known(&["dir"])?;
+    let arg = opts
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: ipregel info <graph|name>"))?;
+    let g = load_graph(arg, &graph_dir(opts))?;
+    let s = stats::degree_stats(&g);
+    println!("{s:#?}");
+    println!("{}", stats::render_histogram(&stats::degree_histogram(&g)));
+    Ok(())
+}
+
+fn engine_cfg(opts: &Opts) -> Result<EngineConfig> {
+    let schedule = Schedule::parse(&opts.get_or("schedule", "static"))
+        .ok_or_else(|| anyhow!("--schedule: static|dynamic[:chunk]|guided[:min]|edge-centric"))?;
+    let strategy = Strategy::parse(&opts.get_or("strategy", "lock"))
+        .ok_or_else(|| anyhow!("--strategy: lock|cas|hybrid"))?;
+    let layout = Layout::parse(&opts.get_or("layout", "aos"))
+        .ok_or_else(|| anyhow!("--layout: aos|soa"))?;
+    Ok(EngineConfig::default()
+        .threads(opts.get_num("threads", 4usize)?)
+        .schedule(schedule)
+        .strategy(strategy)
+        .layout(layout)
+        .bypass(opts.flag("bypass"))
+        .max_supersteps(opts.get_num("max-supersteps", 100_000usize)?))
+}
+
+const RUN_FLAGS: &[&str] = &[
+    "algo", "threads", "schedule", "strategy", "layout", "bypass", "iterations", "source",
+    "max-supersteps", "dir",
+];
+
+fn print_run(label: &str, metrics: &RunMetrics) {
+    println!("{label}: {}", metrics.summary());
+}
+
+fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
+    opts.ensure_known(RUN_FLAGS)?;
+    let arg = opts
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: ipregel run --algo pr|cc|sssp|bfs <graph|name>"))?;
+    let g = load_graph(arg, &graph_dir(opts))?;
+    let cfg = engine_cfg(opts)?;
+    let algo = opts.get_or("algo", "pr");
+
+    fn go<P: VertexProgram>(
+        g: &Csr,
+        p: &P,
+        cfg: EngineConfig,
+        simulated: bool,
+        label: &str,
+        show: impl Fn(&[P::Value]),
+    ) {
+        if simulated {
+            let r = SimEngine::new(g, p, cfg).run();
+            println!(
+                "{label} [virtual {} threads]: {:.6} virtual s, {} supersteps, {} messages, \
+                 imbalance {:.2} (simulated in {})",
+                cfg.threads,
+                r.virtual_seconds,
+                r.supersteps,
+                r.messages,
+                r.mean_imbalance,
+                fmt_duration(r.wall)
+            );
+            show(&r.values);
+        } else {
+            let r = run(g, p, cfg);
+            print_run(label, &r.metrics);
+            show(&r.values);
+        }
+    }
+
+    match algo.as_str() {
+        "pr" | "pagerank" => {
+            let p = PageRank {
+                iterations: opts.get_num("iterations", 10usize)?,
+                damping: 0.85,
+            };
+            go(&g, &p, cfg, simulated, "pagerank", |vals| {
+                let mut idx: Vec<usize> = (0..vals.len()).collect();
+                idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
+                let top: Vec<String> = idx
+                    .iter()
+                    .take(5)
+                    .map(|&v| format!("v{v}={:.3e}", vals[v]))
+                    .collect();
+                println!("  top ranks: {}", top.join(" "));
+            });
+        }
+        "cc" => {
+            go(&g, &ConnectedComponents, cfg, simulated, "cc", |vals| {
+                let mut labels = vals.to_vec();
+                labels.sort_unstable();
+                labels.dedup();
+                println!("  components: {}", labels.len());
+            });
+        }
+        "sssp" => {
+            let source = opts.get_num("source", g.max_out_degree_vertex())?;
+            let p = Sssp { source };
+            go(&g, &p, cfg, simulated, "sssp", |vals| {
+                let reached = vals.iter().filter(|&&d| d != u64::MAX).count();
+                let ecc = vals
+                    .iter()
+                    .filter(|&&d| d != u64::MAX)
+                    .max()
+                    .copied()
+                    .unwrap_or(0);
+                println!("  reached {reached} vertices, eccentricity {ecc}");
+            });
+        }
+        "bfs" => {
+            let root = opts.get_num("source", g.max_out_degree_vertex())?;
+            let p = Bfs { root };
+            go(&g, &p, cfg, simulated, "bfs", |vals| {
+                let reached = vals.iter().filter(|s| s.level != u32::MAX).count();
+                println!("  reached {reached} vertices");
+            });
+        }
+        other => bail!("--algo {other}: expected pr|cc|sssp|bfs"),
+    }
+    Ok(())
+}
+
+fn cmd_table1(opts: &Opts) -> Result<()> {
+    opts.ensure_known(&["tiny", "dir"])?;
+    let entries = if opts.flag("tiny") {
+        catalog::catalog_tiny()
+    } else {
+        catalog::catalog()
+    };
+    println!("{}", run_table1(&entries, &graph_dir(opts))?);
+    Ok(())
+}
+
+fn cmd_table2(opts: &Opts) -> Result<()> {
+    opts.ensure_known(&["tiny", "dir", "bench", "threads", "chunk"])?;
+    let entries = if opts.flag("tiny") {
+        catalog::catalog_tiny()
+    } else {
+        catalog::catalog()
+    };
+    let dir = graph_dir(opts);
+    let benches: Vec<Bench> = match opts.get("bench") {
+        None => Bench::all().to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|b| Bench::parse(b).ok_or_else(|| anyhow!("--bench: bad value '{b}'")))
+            .collect::<Result<_>>()?,
+    };
+    let t2 = Table2Options {
+        threads: opts.get_num("threads", 32usize)?,
+        benches,
+        dynamic_chunk_override: opts.get("chunk").map(|c| c.parse()).transpose()?,
+    };
+    let mut graphs = Vec::new();
+    for e in &entries {
+        eprintln!("loading {} …", e.name);
+        graphs.push((e.stands_for.to_string(), e.load_or_generate(&dir)?));
+    }
+    let t = ipregel::util::timer::Timer::start();
+    let results = table2::run_table2(&graphs, &t2);
+    let names: Vec<String> = graphs.iter().map(|(n, _)| n.clone()).collect();
+    println!("{}", table2::render(&names, &results));
+    println!("{}", table2::summary(&results));
+    eprintln!("(table2 computed in {})", fmt_duration(t.elapsed()));
+    Ok(())
+}
+
+fn cmd_calibrate(opts: &Opts) -> Result<()> {
+    opts.ensure_known(&[])?;
+    let c = calibrate::calibrate(1);
+    println!("{}", c.render());
+    println!("\nderived cost model:\n{:#?}", c.to_cost_model());
+    Ok(())
+}
+
+fn cmd_accel(opts: &Opts) -> Result<()> {
+    opts.ensure_known(&["algo", "dir", "artifacts", "source"])?;
+    let arg = opts
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: ipregel accel --algo pr|cc|sssp <graph|name>"))?;
+    let g = load_graph(arg, &graph_dir(opts))?;
+    let adir = opts
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(ipregel::runtime::default_artifact_dir);
+    let rt = ipregel::runtime::Runtime::load(&adir)
+        .with_context(|| "loading artifacts (run `make artifacts`)")?;
+    println!(
+        "runtime: platform={} artifacts={:?} block n={}",
+        rt.platform(),
+        rt.executables(),
+        rt.manifest.n
+    );
+    let block = ipregel::runtime::accel::DenseBlock::from_graph(&rt, &g)?;
+    let t = ipregel::util::timer::Timer::start();
+    match opts.get_or("algo", "pr").as_str() {
+        "pr" | "pagerank" => {
+            let ranks = ipregel::runtime::accel::pagerank(&rt, &g, &block)?;
+            let top = ranks
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            println!("pagerank via PJRT: top vertex v{} rank {:.3e}", top.0, top.1);
+        }
+        "cc" => {
+            let labels = ipregel::runtime::accel::connected_components(&rt, &g, &block)?;
+            let mut u = labels.clone();
+            u.sort_unstable();
+            u.dedup();
+            println!("cc via PJRT: {} components", u.len());
+        }
+        "sssp" => {
+            let source = opts.get_num("source", g.max_out_degree_vertex())?;
+            let dist = ipregel::runtime::accel::sssp(&rt, &g, &block, source)?;
+            let reached = dist.iter().filter(|d| d.is_finite()).count();
+            println!("sssp via PJRT: reached {reached} vertices from v{source}");
+        }
+        other => bail!("--algo {other}: expected pr|cc|sssp"),
+    }
+    println!("(accel run in {})", fmt_duration(t.elapsed()));
+    Ok(())
+}

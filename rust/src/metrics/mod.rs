@@ -1,0 +1,163 @@
+//! Run metrics: per-superstep statistics and whole-run summaries.
+
+use std::time::Duration;
+
+/// Statistics for one superstep.
+#[derive(Clone, Debug, Default)]
+pub struct SuperstepStats {
+    /// Vertices whose compute ran this superstep.
+    pub active_vertices: usize,
+    /// Messages delivered (push) or combinations performed (pull).
+    pub messages: u64,
+    /// Wall-clock time of the compute phase.
+    pub compute_time: Duration,
+    /// Wall-clock time of the barrier phase (swap/clear/activate).
+    pub barrier_time: Duration,
+}
+
+/// Whole-run metrics returned by every engine.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// One entry per executed superstep.
+    pub supersteps: Vec<SuperstepStats>,
+    /// Total wall-clock time including setup and teardown.
+    pub total_time: Duration,
+}
+
+impl RunMetrics {
+    /// Number of supersteps executed.
+    pub fn num_supersteps(&self) -> usize {
+        self.supersteps.len()
+    }
+
+    /// Total messages/combinations across the run.
+    pub fn total_messages(&self) -> u64 {
+        self.supersteps.iter().map(|s| s.messages).sum()
+    }
+
+    /// Sum of compute-phase times.
+    pub fn compute_time(&self) -> Duration {
+        self.supersteps.iter().map(|s| s.compute_time).sum()
+    }
+
+    /// Sum of the per-superstep active counts (total vertex activations).
+    pub fn total_activations(&self) -> u64 {
+        self.supersteps.iter().map(|s| s.active_vertices as u64).sum()
+    }
+
+    /// Compact single-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "supersteps={} activations={} messages={} compute={} total={}",
+            self.num_supersteps(),
+            self.total_activations(),
+            self.total_messages(),
+            crate::util::timer::fmt_duration(self.compute_time()),
+            crate::util::timer::fmt_duration(self.total_time),
+        )
+    }
+}
+
+/// Fixed-width table printer used by `info`, `table1` and `table2` output.
+pub struct TablePrinter {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    /// Table with the given column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        TablePrinter {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header count).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with padded columns, first column left-aligned, rest right.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i == 0 {
+                    line.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+                } else {
+                    line.push_str(&format!("  {:>w$}", cells[i], w = widths[i]));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total_w: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total_w));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_aggregation() {
+        let m = RunMetrics {
+            supersteps: vec![
+                SuperstepStats {
+                    active_vertices: 10,
+                    messages: 100,
+                    compute_time: Duration::from_millis(5),
+                    barrier_time: Duration::from_millis(1),
+                },
+                SuperstepStats {
+                    active_vertices: 4,
+                    messages: 7,
+                    compute_time: Duration::from_millis(2),
+                    barrier_time: Duration::from_millis(1),
+                },
+            ],
+            total_time: Duration::from_millis(10),
+        };
+        assert_eq!(m.num_supersteps(), 2);
+        assert_eq!(m.total_messages(), 107);
+        assert_eq!(m.total_activations(), 14);
+        assert_eq!(m.compute_time(), Duration::from_millis(7));
+        assert!(m.summary().contains("supersteps=2"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TablePrinter::new(&["name", "count"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "12345".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[3].ends_with("12345"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = TablePrinter::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,176 @@
+//! The accelerated dense-block backend: drive supersteps through the
+//! AOT-compiled XLA computations.
+//!
+//! Small graphs (≤ the artifact block size, default 1024) are embedded in
+//! a padded dense in-neighbour matrix and the paper's three benchmarks run
+//! as PJRT executions. This demonstrates the full three-layer
+//! composition: Rust coordinator → XLA executable → Pallas kernel.
+//! Results are bit-compatible with the pure-Rust engine up to f32
+//! rounding and validated against it in `rust/tests/test_accel.rs`.
+
+use crate::graph::csr::{Csr, VertexId};
+use crate::runtime::Runtime;
+use anyhow::{bail, Result};
+
+/// A graph embedded in the runtime's padded dense block.
+pub struct DenseBlock {
+    /// Real (unpadded) vertex count.
+    pub n_real: usize,
+    /// The padded in-neighbour matrix, uploaded to the device once and
+    /// reused across every superstep execution (§Perf: avoids re-staging
+    /// the n² matrix on each of the O(diameter) iterated calls).
+    adj: crate::runtime::DeviceBuf,
+}
+
+impl DenseBlock {
+    /// Embed `g` into the runtime's block. Fails if the graph exceeds the
+    /// compiled block size — the accel path is a small-graph backend; use
+    /// the pure-Rust engine beyond it.
+    pub fn from_graph(rt: &Runtime, g: &Csr) -> Result<DenseBlock> {
+        let n = rt.manifest.n;
+        let n_real = g.num_vertices();
+        if n_real > n {
+            bail!(
+                "graph has {n_real} vertices but artifacts were compiled \
+                 for n={n}; regenerate with `make artifacts` at a larger --n"
+            );
+        }
+        // adj[i][j] = 1 iff edge j -> i (row i gathers i's in-neighbours).
+        let mut flat = vec![0f32; n * n];
+        for (src, dst) in g.edges() {
+            flat[dst as usize * n + src as usize] = 1.0;
+        }
+        Ok(DenseBlock {
+            n_real,
+            adj: rt.to_device(rt.square_literal(&flat)?)?,
+        })
+    }
+
+    /// Pad an `n_real` vector to the block size with `fill`.
+    fn pad(&self, rt: &Runtime, v: &[f32], fill: f32) -> Vec<f32> {
+        let mut out = vec![fill; rt.manifest.n];
+        out[..v.len()].copy_from_slice(v);
+        out
+    }
+}
+
+/// PageRank via the fused `pagerank_run` artifact (10 damped iterations,
+/// dangling mass dropped — identical semantics to [`crate::algos::PageRank`]).
+pub fn pagerank(rt: &Runtime, g: &Csr, block: &DenseBlock) -> Result<Vec<f32>> {
+    let n_real = block.n_real;
+    let rank0: Vec<f32> = vec![1.0 / n_real as f32; n_real];
+    let inv_outdeg: Vec<f32> = g
+        .vertices()
+        .map(|v| {
+            let d = g.out_degree(v);
+            if d > 0 {
+                1.0 / d as f32
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let rank_b = rt.to_device(rt.vec_literal(&block.pad(rt, &rank0, 0.0))?)?;
+    let inv_b = rt.to_device(rt.vec_literal(&block.pad(rt, &inv_outdeg, 0.0))?)?;
+    let n_b = rt.to_device(rt.scalar_literal(n_real as f32))?;
+    let out = rt.call_vec_b(
+        "pagerank_run",
+        &[&block.adj.buf, &rank_b.buf, &inv_b.buf, &n_b.buf],
+    )?;
+    Ok(out[..n_real].to_vec())
+}
+
+/// Unweighted SSSP: iterate the `sssp_relax` artifact until fixpoint.
+/// Returns distances with `f32::INFINITY` for unreached vertices.
+pub fn sssp(rt: &Runtime, g: &Csr, block: &DenseBlock, source: VertexId) -> Result<Vec<f32>> {
+    let n_real = block.n_real;
+    anyhow::ensure!((source as usize) < n_real, "source out of range");
+    let mut dist = vec![f32::INFINITY; n_real];
+    dist[source as usize] = 0.0;
+    let mut cur = block.pad(rt, &dist, f32::INFINITY);
+    // Unit weights: the fixpoint arrives within n_real waves.
+    for _ in 0..n_real.max(1) {
+        let cur_b = rt.to_device(rt.vec_literal(&cur)?)?;
+        let next = rt.call_vec_b("sssp_relax", &[&block.adj.buf, &cur_b.buf])?;
+        if next == cur {
+            break;
+        }
+        cur = next;
+    }
+    let _ = g;
+    Ok(cur[..n_real].to_vec())
+}
+
+/// Connected components: iterate `cc_label` to fixpoint. Returns the
+/// min-vertex-id component labels (as f32 ids, exact for n < 2^24).
+pub fn connected_components(rt: &Runtime, g: &Csr, block: &DenseBlock) -> Result<Vec<u32>> {
+    let n_real = block.n_real;
+    anyhow::ensure!(
+        n_real < (1 << 24),
+        "labels-as-f32 require n < 2^24 for exactness"
+    );
+    let labels: Vec<f32> = (0..n_real).map(|v| v as f32).collect();
+    let mut cur = block.pad(rt, &labels, f32::INFINITY);
+    for _ in 0..n_real.max(1) {
+        let cur_b = rt.to_device(rt.vec_literal(&cur)?)?;
+        let next = rt.call_vec_b("cc_label", &[&block.adj.buf, &cur_b.buf])?;
+        if next == cur {
+            break;
+        }
+        cur = next;
+    }
+    let _ = g;
+    Ok(cur[..n_real].iter().map(|&l| l as u32).collect())
+}
+
+/// One raw PageRank step via the `pagerank_step` artifact (used by tests
+/// and the quickstart example to show single-superstep offload).
+pub fn pagerank_step(rt: &Runtime, block: &DenseBlock, contrib: &[f32]) -> Result<Vec<f32>> {
+    let contrib_b = rt.to_device(rt.vec_literal(&block.pad(rt, contrib, 0.0))?)?;
+    let n_b = rt.to_device(rt.scalar_literal(block.n_real as f32))?;
+    let out = rt.call_vec_b(
+        "pagerank_step",
+        &[&block.adj.buf, &contrib_b.buf, &n_b.buf],
+    )?;
+    Ok(out[..block.n_real].to_vec())
+}
+
+/// Multi-source unweighted SSSP via the batched `multi_sssp_relax`
+/// artifact: up to `manifest.multi_sources` sources solved in one
+/// iterated fixpoint — the MXU-utilisation variant (EXPERIMENTS.md §Perf
+/// L1). Returns one distance vector per source.
+pub fn multi_sssp(
+    rt: &Runtime,
+    block: &DenseBlock,
+    sources: &[VertexId],
+) -> Result<Vec<Vec<f32>>> {
+    let n = rt.manifest.n;
+    let b = rt.manifest.multi_sources;
+    let n_real = block.n_real;
+    anyhow::ensure!(
+        !sources.is_empty() && sources.len() <= b,
+        "need 1..={b} sources, got {}",
+        sources.len()
+    );
+    anyhow::ensure!(
+        sources.iter().all(|&s| (s as usize) < n_real),
+        "source out of range"
+    );
+    // Row-major (n, B): column k is source k's distance vector; unused
+    // columns stay all-infinity and converge immediately.
+    let mut cur = vec![f32::INFINITY; n * b];
+    for (k, &src) in sources.iter().enumerate() {
+        cur[src as usize * b + k] = 0.0;
+    }
+    for _ in 0..n_real.max(1) {
+        let cur_b = rt.to_device(rt.batch_literal(&cur)?)?;
+        let next = rt.call_vec_b("multi_sssp_relax", &[&block.adj.buf, &cur_b.buf])?;
+        if next == cur {
+            break;
+        }
+        cur = next;
+    }
+    Ok((0..sources.len())
+        .map(|k| (0..n_real).map(|v| cur[v * b + k]).collect())
+        .collect())
+}

@@ -1,0 +1,268 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas supersteps.
+//!
+//! `make artifacts` lowers the Layer-2 model to HLO text once at build
+//! time; this module compiles those artifacts on the PJRT CPU client and
+//! exposes typed entry points the coordinator calls from its (pure-Rust)
+//! hot path. Python is never on the request path.
+//!
+//! Interchange is HLO **text** — the xla crate's xla_extension 0.5.1
+//! rejects jax≥0.5's 64-bit-instruction-id protos, while the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod accel;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Padded dense block size every artifact was compiled for.
+    pub n: usize,
+    /// Pallas tile size (recorded for DESIGN.md perf estimates).
+    pub tile: usize,
+    /// Damping factor baked into the PageRank artifacts.
+    pub damping: f64,
+    /// Iterations fused into `pagerank_run`.
+    pub pr_iterations: usize,
+    /// Batch width of the multi-source artifacts.
+    pub multi_sources: usize,
+    /// Artifact file names.
+    pub artifacts: Vec<String>,
+}
+
+impl Manifest {
+    /// Parse the `key=value` manifest written by `aot.py`.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut n = None;
+        let mut tile = None;
+        let mut damping = None;
+        let mut pr_iterations = None;
+        let mut multi_sources = None;
+        let mut artifacts = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad manifest line: {line}"))?;
+            match k {
+                "n" => n = Some(v.parse().context("n")?),
+                "tile" => tile = Some(v.parse().context("tile")?),
+                "damping" => damping = Some(v.parse().context("damping")?),
+                "pr_iterations" => pr_iterations = Some(v.parse().context("pr_iterations")?),
+                "multi_sources" => multi_sources = Some(v.parse().context("multi_sources")?),
+                "artifact" => artifacts.push(v.to_string()),
+                "dtype" => {
+                    if v != "f32" {
+                        bail!("unsupported artifact dtype {v}");
+                    }
+                }
+                _ => bail!("unknown manifest key {k}"),
+            }
+        }
+        Ok(Manifest {
+            n: n.ok_or_else(|| anyhow!("manifest missing n"))?,
+            tile: tile.ok_or_else(|| anyhow!("manifest missing tile"))?,
+            damping: damping.unwrap_or(0.85),
+            pr_iterations: pr_iterations.unwrap_or(10),
+            multi_sources: multi_sources.unwrap_or(32),
+            artifacts,
+        })
+    }
+
+    /// Read and parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let p = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {} (run `make artifacts`)", p.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// A device-resident buffer plus the host literal backing its (possibly
+/// still in-flight) transfer.
+pub struct DeviceBuf {
+    /// The PJRT buffer to execute with.
+    pub buf: xla::PjRtBuffer,
+    _keepalive: xla::Literal,
+}
+
+/// A compiled artifact set on a live PJRT CPU client.
+pub struct Runtime {
+    /// The manifest the artifacts were built under.
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Default artifacts directory: `$IPREGEL_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("IPREGEL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl Runtime {
+    /// Compile every artifact in `dir` on a fresh PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for name in &manifest.artifacts {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            let key = name.trim_end_matches(".hlo.txt").to_string();
+            exes.insert(key, exe);
+        }
+        Ok(Runtime {
+            manifest,
+            client,
+            exes,
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of loaded executables.
+    pub fn executables(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded (have {:?})", self.executables()))
+    }
+
+    /// Execute `name` with the given literals; unwraps the 1-tuple result
+    /// (artifacts are lowered with `return_tuple=True`) into a f32 vector.
+    pub fn call_vec(&self, name: &str, args: &[&xla::Literal]) -> Result<Vec<f32>> {
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("reading {name} result: {e:?}"))
+    }
+
+    /// Upload a literal to the device once; reuse the returned buffer
+    /// across many executions (§Perf: the n×n adjacency dominates the
+    /// per-call transfer cost of iterated supersteps).
+    pub fn to_device(&self, lit: xla::Literal) -> Result<DeviceBuf> {
+        // Pass the first addressable device explicitly — the crate's
+        // `None` path hands a null device pointer to the C++ side, which
+        // the CPU plugin dereferences. The literal is kept alive inside
+        // the returned [`DeviceBuf`]: the CPU client's host->device
+        // transfer is asynchronous and may still read the host memory
+        // after this call returns.
+        let devices = self.client.addressable_devices();
+        let dev = devices.first();
+        let buf = self
+            .client
+            .buffer_from_host_literal(dev, &lit)
+            .map_err(|e| anyhow!("host->device transfer: {e:?}"))?;
+        Ok(DeviceBuf {
+            buf,
+            _keepalive: lit,
+        })
+    }
+
+    /// Execute `name` with device-resident buffers (see [`Self::to_device`]).
+    pub fn call_vec_b(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("reading {name} result: {e:?}"))
+    }
+
+    /// Build a square `n×n` f32 literal from a flat row-major vector.
+    pub fn square_literal(&self, flat: &[f32]) -> Result<xla::Literal> {
+        let n = self.manifest.n;
+        anyhow::ensure!(flat.len() == n * n, "expected {}², got {}", n, flat.len());
+        xla::Literal::vec1(flat)
+            .reshape(&[n as i64, n as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Build an `n`-vector f32 literal.
+    pub fn vec_literal(&self, v: &[f32]) -> Result<xla::Literal> {
+        anyhow::ensure!(v.len() == self.manifest.n, "expected {}, got {}", self.manifest.n, v.len());
+        Ok(xla::Literal::vec1(v))
+    }
+
+    /// Build an f32 scalar literal.
+    pub fn scalar_literal(&self, v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Build an `n×B` f32 literal from a flat row-major vector (the
+    /// multi-source distance matrix).
+    pub fn batch_literal(&self, flat: &[f32]) -> Result<xla::Literal> {
+        let n = self.manifest.n;
+        let b = self.manifest.multi_sources;
+        anyhow::ensure!(flat.len() == n * b, "expected {n}×{b}, got {}", flat.len());
+        xla::Literal::vec1(flat)
+            .reshape(&[n as i64, b as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_roundtrip() {
+        let text = "n=1024\ntile=256\ndtype=f32\ndamping=0.85\npr_iterations=10\n\
+                    artifact=pagerank_step.hlo.txt\nartifact=cc_label.hlo.txt\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.n, 1024);
+        assert_eq!(m.tile, 256);
+        assert_eq!(m.pr_iterations, 10);
+        assert_eq!(m.artifacts.len(), 2);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("nonsense").is_err());
+        assert!(Manifest::parse("tile=256\n").is_err(), "missing n");
+        assert!(Manifest::parse("n=4\ntile=2\ndtype=f64\n").is_err(), "bad dtype");
+        assert!(Manifest::parse("n=4\ntile=2\nwat=1\n").is_err(), "unknown key");
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        // NOTE: do not mutate the env (tests run multithreaded); just
+        // check the default path shape.
+        let d = default_artifact_dir();
+        assert!(d.ends_with("artifacts") || d.is_absolute());
+    }
+}

@@ -1,0 +1,261 @@
+//! Work distribution across threads (§V).
+//!
+//! A [`Schedule`] describes how the iteration space of one superstep is
+//! cut into chunks and handed to workers:
+//!
+//! - [`Schedule::Static`] — equal *item-count* contiguous ranges, the
+//!   common vertex-centric default and the paper's baseline;
+//! - [`Schedule::Dynamic`] — OpenMP `schedule(dynamic, chunk)` semantics:
+//!   fixed-size chunks claimed first-come-first-served from an atomic
+//!   counter (§V-B; the paper's empirically-best chunk is 256);
+//! - [`Schedule::Guided`] — OpenMP guided: exponentially shrinking chunks;
+//! - [`Schedule::EdgeCentric`] — the paper's §V-A contribution: ranges cut
+//!   so each worker receives an equal number of *edges* (degree-weighted
+//!   prefix sums), while the user-visible model stays vertex-centric.
+//!
+//! [`parallel_for`] executes a body over `0..n` under any schedule using
+//! real threads; [`Schedule::chunks`] exposes the same decomposition to
+//! the virtual testbed ([`crate::sim`]) so simulated runs use *exactly*
+//! the distribution semantics of real runs.
+
+pub mod pool;
+
+use crate::util::prefix::{balanced_cuts, exclusive_prefix_sum};
+use std::ops::Range;
+
+pub use pool::parallel_for;
+
+/// Default dynamic chunk size — the paper's empirically determined 256.
+pub const DEFAULT_CHUNK: usize = 256;
+
+/// A work-distribution policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Equal item counts per thread (baseline).
+    Static,
+    /// FCFS fixed-size chunks (OpenMP dynamic).
+    Dynamic { chunk: usize },
+    /// FCFS exponentially shrinking chunks (OpenMP guided).
+    Guided { min_chunk: usize },
+    /// Equal *edge* counts per thread (paper §V-A). Incompatible with
+    /// dynamic chunking: the ranges are precomputed per superstep from
+    /// the active vertices' degrees (which is also why the paper pits it
+    /// *against* dynamic scheduling rather than composing them).
+    EdgeCentric,
+}
+
+impl Schedule {
+    /// Parse from CLI text: `static`, `dynamic[:chunk]`, `guided[:min]`,
+    /// `edge-centric`.
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let (kind, param) = match s.split_once(':') {
+            Some((k, p)) => (k, Some(p)),
+            None => (s, None),
+        };
+        match kind {
+            "static" => Some(Schedule::Static),
+            "dynamic" => Some(Schedule::Dynamic {
+                chunk: param.and_then(|p| p.parse().ok()).unwrap_or(DEFAULT_CHUNK),
+            }),
+            "guided" => Some(Schedule::Guided {
+                min_chunk: param.and_then(|p| p.parse().ok()).unwrap_or(1),
+            }),
+            "edge-centric" | "edge" => Some(Schedule::EdgeCentric),
+            _ => None,
+        }
+    }
+
+    /// Whether this schedule needs per-item weights (degrees).
+    pub fn needs_weights(self) -> bool {
+        matches!(self, Schedule::EdgeCentric)
+    }
+
+    /// Decompose `0..n` into the ordered chunk list this policy would
+    /// produce for `threads` workers. For FCFS policies the chunks are
+    /// claimed in this order; for pre-partitioned policies chunk `t`
+    /// belongs to thread `t`.
+    ///
+    /// `weights` (item → work units, e.g. degrees) is required for
+    /// [`Schedule::EdgeCentric`] and ignored otherwise.
+    pub fn chunks(self, n: usize, threads: usize, weights: Option<&[u64]>) -> Vec<Range<usize>> {
+        let threads = threads.max(1);
+        match self {
+            Schedule::Static => {
+                let mut out = Vec::with_capacity(threads);
+                for t in 0..threads {
+                    let lo = n * t / threads;
+                    let hi = n * (t + 1) / threads;
+                    out.push(lo..hi);
+                }
+                out
+            }
+            Schedule::Dynamic { chunk } => {
+                let chunk = chunk.max(1);
+                let mut out = Vec::with_capacity(crate::util::div_ceil(n.max(1), chunk));
+                let mut lo = 0;
+                while lo < n {
+                    let hi = (lo + chunk).min(n);
+                    out.push(lo..hi);
+                    lo = hi;
+                }
+                out
+            }
+            Schedule::Guided { min_chunk } => {
+                let min_chunk = min_chunk.max(1);
+                let mut out = Vec::new();
+                let mut lo = 0;
+                while lo < n {
+                    let remaining = n - lo;
+                    let c = (remaining / threads).max(min_chunk).min(remaining);
+                    out.push(lo..lo + c);
+                    lo += c;
+                }
+                out
+            }
+            Schedule::EdgeCentric => {
+                let w = weights.expect("EdgeCentric schedule requires per-item weights");
+                assert_eq!(w.len(), n, "weights length must match item count");
+                let prefix = exclusive_prefix_sum(w);
+                let cuts = balanced_cuts(&prefix, threads);
+                cuts.windows(2).map(|c| c[0]..c[1]).collect()
+            }
+        }
+    }
+
+    /// True when chunks are claimed FCFS at runtime (load-adaptive) rather
+    /// than pre-assigned to threads.
+    pub fn is_fcfs(self) -> bool {
+        matches!(self, Schedule::Dynamic { .. } | Schedule::Guided { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick;
+
+    fn covers_exactly(chunks: &[Range<usize>], n: usize) -> Result<(), String> {
+        let mut seen = vec![false; n];
+        for r in chunks {
+            for i in r.clone() {
+                if seen[i] {
+                    return Err(format!("item {i} covered twice"));
+                }
+                seen[i] = true;
+            }
+        }
+        match seen.iter().position(|&s| !s) {
+            Some(i) => Err(format!("item {i} not covered")),
+            None => Ok(()),
+        }
+    }
+
+    #[test]
+    fn parse_all_kinds() {
+        assert_eq!(Schedule::parse("static"), Some(Schedule::Static));
+        assert_eq!(
+            Schedule::parse("dynamic"),
+            Some(Schedule::Dynamic { chunk: 256 })
+        );
+        assert_eq!(
+            Schedule::parse("dynamic:64"),
+            Some(Schedule::Dynamic { chunk: 64 })
+        );
+        assert_eq!(
+            Schedule::parse("guided:8"),
+            Some(Schedule::Guided { min_chunk: 8 })
+        );
+        assert_eq!(Schedule::parse("edge-centric"), Some(Schedule::EdgeCentric));
+        assert_eq!(Schedule::parse("bogus"), None);
+    }
+
+    #[test]
+    fn static_splits_evenly() {
+        let ch = Schedule::Static.chunks(100, 4, None);
+        assert_eq!(ch, vec![0..25, 25..50, 50..75, 75..100]);
+        covers_exactly(&ch, 100).unwrap();
+    }
+
+    #[test]
+    fn dynamic_chunk_sizes() {
+        let ch = Schedule::Dynamic { chunk: 30 }.chunks(100, 4, None);
+        assert_eq!(ch, vec![0..30, 30..60, 60..90, 90..100]);
+    }
+
+    #[test]
+    fn guided_chunks_shrink() {
+        let ch = Schedule::Guided { min_chunk: 1 }.chunks(1000, 4, None);
+        covers_exactly(&ch, 1000).unwrap();
+        // First chunk is remaining/threads = 250; sizes never grow.
+        assert_eq!(ch[0], 0..250);
+        let sizes: Vec<usize> = ch.iter().map(|r| r.len()).collect();
+        for w in sizes.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+    }
+
+    #[test]
+    fn edge_centric_balances_edges_not_items() {
+        // 9 light vertices (degree 1) + 1 heavy (degree 91): static would
+        // give thread 0 the heavy one plus others; edge-centric isolates it.
+        let mut w = vec![1u64; 9];
+        w.push(91);
+        let ch = Schedule::EdgeCentric.chunks(10, 2, Some(&w));
+        assert_eq!(ch.len(), 2);
+        covers_exactly(&ch, 10).unwrap();
+        let edge_load: Vec<u64> = ch
+            .iter()
+            .map(|r| r.clone().map(|i| w[i]).sum::<u64>())
+            .collect();
+        // Perfect balance impossible (one item holds 91%), but the light
+        // items must all land in the first part: cuts at the 50% edge mark.
+        assert_eq!(ch[0], 0..9);
+        assert_eq!(ch[1], 9..10);
+        assert_eq!(edge_load, vec![9, 91]);
+    }
+
+    #[test]
+    fn prop_all_schedules_cover_exactly_once() {
+        quick::check("schedule coverage", |rng| {
+            let n = rng.below(500) as usize;
+            let threads = 1 + rng.below(16) as usize;
+            let weights = quick::skewed_degrees(rng, n, 64);
+            for sched in [
+                Schedule::Static,
+                Schedule::Dynamic {
+                    chunk: 1 + rng.below(64) as usize,
+                },
+                Schedule::Guided {
+                    min_chunk: 1 + rng.below(8) as usize,
+                },
+                Schedule::EdgeCentric,
+            ] {
+                let ch = sched.chunks(n, threads, Some(&weights));
+                covers_exactly(&ch, n).map_err(|e| format!("{sched:?}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_edge_centric_parts_within_one_max_degree_of_ideal() {
+        quick::check("edge-centric balance", |rng| {
+            let n = 1 + rng.below(400) as usize;
+            let threads = 1 + rng.below(8) as usize;
+            let w = quick::skewed_degrees(rng, n, 128);
+            let total: u64 = w.iter().sum();
+            let maxw = *w.iter().max().unwrap();
+            let ideal = total as f64 / threads as f64;
+            let ch = Schedule::EdgeCentric.chunks(n, threads, Some(&w));
+            for r in &ch {
+                let load: u64 = r.clone().map(|i| w[i]).sum();
+                if load as f64 > ideal + maxw as f64 {
+                    return Err(format!(
+                        "part {r:?} load {load} exceeds ideal {ideal} + max degree {maxw}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! Cost-model calibration from host microbenchmarks.
+//!
+//! `ipregel calibrate` measures the synchronisation and memory primitives
+//! the [`CostModel`](crate::sim::CostModel) prices, on the actual host,
+//! and prints a model ready to paste into `CostModel::default()` (the
+//! compiled-in defaults were produced this way — see EXPERIMENTS.md
+//! §Calibration).
+
+use crate::combine::{MinCombiner, MsgSlot, SpinLock, Strategy};
+use crate::sim::CostModel;
+use crate::util::rng::Rng;
+use crate::util::timer::ns_per_iter;
+
+/// Measured primitive costs.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// ns per uncontended CAS delivery (hybrid steady state).
+    pub cas_ns: f64,
+    /// ns per uncontended lock delivery.
+    pub lock_ns: f64,
+    /// ns per cached sequential slot access.
+    pub hit_ns: f64,
+    /// ns per random DRAM access beyond LLC.
+    pub miss_ns: f64,
+    /// ns per atomic chunk claim.
+    pub claim_ns: f64,
+}
+
+/// Run the microbenchmarks. `scale` shrinks iteration counts for tests
+/// (1 = full calibration, ~a second of wall time).
+pub fn calibrate(scale: usize) -> Calibration {
+    let iters = (2_000_000 / scale.max(1)).max(1000);
+
+    // -- CAS delivery: steady-state hybrid combine on a populated slot.
+    let slot: MsgSlot<u64> = MsgSlot::new();
+    slot.store_first(u64::MAX);
+    let mut x = 0u64;
+    let cas_ns = ns_per_iter(iters, || {
+        x = x.wrapping_add(0x9E3779B9);
+        Strategy::Hybrid.deliver(&slot, x | 1, &MinCombiner);
+    });
+
+    // -- Lock delivery: same combine through the lock path.
+    let slot2: MsgSlot<u64> = MsgSlot::new();
+    slot2.store_first(u64::MAX);
+    let mut y = 0u64;
+    let lock_ns = ns_per_iter(iters, || {
+        y = y.wrapping_add(0x9E3779B9);
+        Strategy::Lock.deliver(&slot2, y | 1, &MinCombiner);
+    });
+
+    // -- Cached access: sequential scan of a small slot array.
+    let small: Vec<u64> = (0..1024u64).collect();
+    let mut acc = 0u64;
+    let mut i = 0usize;
+    let hit_ns = ns_per_iter(iters, || {
+        acc = acc.wrapping_add(small[i & 1023]);
+        i += 1;
+    });
+
+    // -- Random DRAM access: index into a buffer several times the LLC.
+    let big_len = (96 * 1024 * 1024 / 8) / scale.max(1).min(8);
+    let big: Vec<u64> = vec![1; big_len.max(1024)];
+    let mut rng = Rng::new(7);
+    let idx: Vec<usize> = (0..65_536)
+        .map(|_| rng.below(big.len() as u64) as usize)
+        .collect();
+    let mut j = 0usize;
+    let miss_total_ns = ns_per_iter(iters.min(500_000), || {
+        acc = acc.wrapping_add(big[idx[j & 0xFFFF]]);
+        j += 1;
+    });
+    let miss_ns = (miss_total_ns - hit_ns).max(10.0);
+
+    // -- Chunk claim: fetch_add on a shared counter.
+    let counter = std::sync::atomic::AtomicUsize::new(0);
+    let claim_ns = ns_per_iter(iters, || {
+        counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    });
+    std::hint::black_box((acc, &slot, &slot2));
+    let _ = SpinLock::new(); // keep the import honest
+
+    Calibration {
+        cas_ns,
+        lock_ns,
+        hit_ns: hit_ns.max(0.3),
+        miss_ns,
+        claim_ns: claim_ns.max(1.0),
+    }
+}
+
+impl Calibration {
+    /// Fold the measurements into a [`CostModel`] (contention parameters
+    /// keep their analytic defaults — they model cross-thread effects a
+    /// single-core host cannot measure directly).
+    pub fn to_cost_model(&self) -> CostModel {
+        CostModel {
+            t_access_hit: self.hit_ns,
+            t_miss: self.miss_ns,
+            t_lock: self.lock_ns,
+            t_cas: self.cas_ns,
+            t_crit: self.lock_ns * 0.6,
+            t_cas_retry: self.cas_ns * 0.7,
+            t_chunk_claim: self.claim_ns.max(8.0),
+            ..CostModel::default()
+        }
+    }
+
+    /// Render for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "calibration (host-measured):\n\
+             \u{20}  cas delivery    {:>8.2} ns\n\
+             \u{20}  lock delivery   {:>8.2} ns\n\
+             \u{20}  cached access   {:>8.2} ns\n\
+             \u{20}  dram miss       {:>8.2} ns\n\
+             \u{20}  chunk claim     {:>8.2} ns",
+            self.cas_ns, self.lock_ns, self.hit_ns, self.miss_ns, self.claim_ns
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_produces_sane_orderings() {
+        let c = calibrate(64); // fast, reduced iterations
+        assert!(c.cas_ns > 0.0 && c.lock_ns > 0.0);
+        // Lock path (acquire+check+store+release) costs at least as much
+        // as the steady-state CAS path.
+        assert!(
+            c.lock_ns >= c.cas_ns * 0.8,
+            "lock {} vs cas {}",
+            c.lock_ns,
+            c.cas_ns
+        );
+        // A DRAM miss dwarfs a cache hit.
+        assert!(c.miss_ns > c.hit_ns * 3.0, "miss {} hit {}", c.miss_ns, c.hit_ns);
+        let m = c.to_cost_model();
+        assert!(m.t_lock > 0.0 && m.t_cas > 0.0 && m.t_chunk_claim >= 8.0);
+        assert!(c.render().contains("cas delivery"));
+    }
+}

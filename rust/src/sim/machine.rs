@@ -1,0 +1,168 @@
+//! The virtual parallel machine: per-thread clocks + schedule-faithful
+//! chunk assignment.
+
+use crate::sched::Schedule;
+
+/// A `threads`-wide virtual machine accumulating virtual nanoseconds.
+#[derive(Clone, Debug)]
+pub struct VirtualMachine {
+    /// Number of virtual worker threads (the paper's experiments use 32).
+    pub threads: usize,
+    /// Total virtual time elapsed (ns) — the running makespan.
+    pub clock_ns: f64,
+}
+
+impl VirtualMachine {
+    /// New machine with all clocks at zero.
+    pub fn new(threads: usize) -> Self {
+        VirtualMachine {
+            threads: threads.max(1),
+            clock_ns: 0.0,
+        }
+    }
+
+    /// Execute one parallel region: items `0..costs.len()` with the given
+    /// per-item costs (ns), distributed by `sched`. Advances the global
+    /// clock by the region's makespan and returns it, along with the
+    /// imbalance ratio (makespan / mean-thread-time).
+    ///
+    /// Pre-partitioned schedules assign chunk `t` to thread `t`.
+    /// FCFS schedules replay OpenMP dynamic semantics exactly: each chunk
+    /// is claimed by the virtual thread whose clock is lowest when the
+    /// chunk reaches the head of the queue, paying the claim cost.
+    pub fn region(
+        &mut self,
+        sched: Schedule,
+        costs: &[f64],
+        weights: Option<&[u64]>,
+        t_chunk_claim: f64,
+    ) -> RegionStats {
+        let n = costs.len();
+        let mut tclock = vec![0.0f64; self.threads];
+        if n > 0 {
+            let chunks = sched.chunks(n, self.threads, weights);
+            if sched.is_fcfs() {
+                // Greedy earliest-free-thread assignment == FCFS claiming.
+                for r in chunks {
+                    let (t, _) = tclock
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap();
+                    let chunk_cost: f64 = costs[r].iter().sum();
+                    tclock[t] += t_chunk_claim + chunk_cost;
+                }
+            } else {
+                for (t, r) in chunks.into_iter().enumerate() {
+                    let chunk_cost: f64 = costs[r].iter().sum();
+                    tclock[t.min(self.threads - 1)] += chunk_cost;
+                }
+            }
+        }
+        let makespan = tclock.iter().copied().fold(0.0, f64::max);
+        let busy: f64 = tclock.iter().sum();
+        let mean = busy / self.threads as f64;
+        self.clock_ns += makespan;
+        RegionStats {
+            makespan_ns: makespan,
+            imbalance: if mean > 0.0 { makespan / mean } else { 1.0 },
+            busy_ns: busy,
+        }
+    }
+
+    /// Charge a serial section (runs on one thread while others wait).
+    pub fn serial(&mut self, ns: f64) {
+        self.clock_ns += ns;
+    }
+
+    /// Virtual seconds elapsed.
+    pub fn seconds(&self) -> f64 {
+        self.clock_ns / 1e9
+    }
+}
+
+/// Statistics of one parallel region.
+#[derive(Clone, Copy, Debug)]
+pub struct RegionStats {
+    /// The region's wall time on the virtual machine.
+    pub makespan_ns: f64,
+    /// makespan / mean-per-thread-busy-time, ≥ 1; 1 = perfect balance.
+    pub imbalance: f64,
+    /// Total busy ns across threads.
+    pub busy_ns: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfectly_uniform_static_is_balanced() {
+        let mut vm = VirtualMachine::new(4);
+        let costs = vec![1.0; 400];
+        let s = vm.region(Schedule::Static, &costs, None, 0.0);
+        assert!((s.makespan_ns - 100.0).abs() < 1e-9);
+        assert!((s.imbalance - 1.0).abs() < 1e-9);
+        assert!((vm.clock_ns - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_suffers_from_skew_dynamic_recovers() {
+        // One hot item at the front of the range: static gives thread 0
+        // the hot item plus a quarter of the rest; dynamic spreads the
+        // rest across the other threads while thread 0 chews the hot one.
+        let mut costs = vec![1.0; 1024];
+        costs[0] = 1000.0;
+        let mut vm_s = VirtualMachine::new(4);
+        let st = vm_s.region(Schedule::Static, &costs, None, 0.0);
+        let mut vm_d = VirtualMachine::new(4);
+        let dy = vm_d.region(Schedule::Dynamic { chunk: 16 }, &costs, None, 0.0);
+        assert!(
+            dy.makespan_ns < st.makespan_ns * 0.85,
+            "dynamic {dy:?} vs static {st:?}"
+        );
+        assert!(dy.imbalance < st.imbalance);
+    }
+
+    #[test]
+    fn edge_centric_balances_weighted_skew() {
+        // Item cost proportional to weight (degree) — the edge-centric
+        // premise. Static-by-count is imbalanced; edge-centric fixes it.
+        let weights: Vec<u64> = (0..1000u64).map(|i| if i < 10 { 500 } else { 1 }).collect();
+        let costs: Vec<f64> = weights.iter().map(|&w| w as f64).collect();
+        let mut vm_s = VirtualMachine::new(4);
+        let st = vm_s.region(Schedule::Static, &costs, None, 0.0);
+        let mut vm_e = VirtualMachine::new(4);
+        let ec = vm_e.region(Schedule::EdgeCentric, &costs, Some(&weights), 0.0);
+        assert!(
+            ec.makespan_ns < st.makespan_ns * 0.7,
+            "edge-centric {ec:?} vs static {st:?}"
+        );
+    }
+
+    #[test]
+    fn chunk_claim_cost_penalises_tiny_chunks() {
+        let costs = vec![10.0; 10_000];
+        let mut vm_small = VirtualMachine::new(8);
+        let small = vm_small.region(Schedule::Dynamic { chunk: 1 }, &costs, None, 25.0);
+        let mut vm_big = VirtualMachine::new(8);
+        let big = vm_big.region(Schedule::Dynamic { chunk: 256 }, &costs, None, 25.0);
+        assert!(big.makespan_ns < small.makespan_ns);
+    }
+
+    #[test]
+    fn serial_section_advances_clock() {
+        let mut vm = VirtualMachine::new(8);
+        vm.serial(5000.0);
+        assert_eq!(vm.clock_ns, 5000.0);
+        assert!((vm.seconds() - 5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_region_is_free_except_nothing() {
+        let mut vm = VirtualMachine::new(4);
+        let s = vm.region(Schedule::Dynamic { chunk: 4 }, &[], None, 25.0);
+        assert_eq!(s.makespan_ns, 0.0);
+        assert_eq!(vm.clock_ns, 0.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Plain and atomic fixed-size bitsets.
+//!
+//! The engine tracks active vertices either with a dense bitset (scanned
+//! versions) or an explicit list (selection-bypass versions, §II of the
+//! paper / [Capelli et al. ICPP'18]). The atomic variant lets worker
+//! threads mark vertices active during message delivery without locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BITS: usize = 64;
+
+/// A dense, non-thread-safe bitset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    /// All-zero bitset holding `len` bits.
+    pub fn new(len: usize) -> Self {
+        BitSet {
+            words: vec![0; crate::util::div_ceil(len.max(1), BITS)],
+            len,
+        }
+    }
+
+    /// Number of addressable bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no bits are addressable.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / BITS] |= 1u64 << (i % BITS);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / BITS] &= !(1u64 << (i % BITS));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / BITS] >> (i % BITS) & 1 == 1
+    }
+
+    /// Set every bit.
+    pub fn set_all(&mut self) {
+        for w in &mut self.words {
+            *w = !0;
+        }
+        self.mask_tail();
+    }
+
+    /// Clear every bit.
+    pub fn clear_all(&mut self) {
+        for w in &mut self.words {
+            *w = 0;
+        }
+    }
+
+    /// Population count.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over set bit indices in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    return None;
+                }
+                let b = w.trailing_zeros() as usize;
+                w &= w - 1;
+                Some(wi * BITS + b)
+            })
+        })
+    }
+
+    fn mask_tail(&mut self) {
+        let tail = self.len % BITS;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+}
+
+/// A dense bitset whose bits can be set concurrently from many threads.
+///
+/// `set` uses a relaxed-failure `fetch_or`; the engine establishes the
+/// necessary happens-before edges at superstep barriers, so `Relaxed` is
+/// sufficient for the activity bits themselves (the barrier is `SeqCst`).
+pub struct AtomicBitSet {
+    words: Vec<AtomicU64>,
+    len: usize,
+}
+
+impl AtomicBitSet {
+    /// All-zero atomic bitset holding `len` bits.
+    pub fn new(len: usize) -> Self {
+        let mut words = Vec::with_capacity(crate::util::div_ceil(len.max(1), BITS));
+        words.resize_with(crate::util::div_ceil(len.max(1), BITS), || AtomicU64::new(0));
+        AtomicBitSet { words, len }
+    }
+
+    /// Number of addressable bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no bits are addressable.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Atomically set bit `i`; returns `true` if this call changed it
+    /// (i.e. the bit was previously clear) — used to deduplicate
+    /// activations when many messages hit the same vertex.
+    #[inline]
+    pub fn set(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let mask = 1u64 << (i % BITS);
+        let prev = self.words[i / BITS].fetch_or(mask, Ordering::Relaxed);
+        prev & mask == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / BITS].load(Ordering::Relaxed) >> (i % BITS) & 1 == 1
+    }
+
+    /// Clear all bits (single-threaded phase between supersteps).
+    pub fn clear_all(&mut self) {
+        for w in &mut self.words {
+            *w.get_mut() = 0;
+        }
+    }
+
+    /// Set all bits (single-threaded phase).
+    pub fn set_all(&mut self) {
+        for w in &mut self.words {
+            *w.get_mut() = !0;
+        }
+        let tail = self.len % BITS;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last.get_mut() &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    /// Population count (quiescent only — not linearisable mid-superstep).
+    pub fn count(&self) -> usize {
+        self.words
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed).count_ones() as usize)
+            .sum()
+    }
+
+    /// Snapshot into a plain bitset (quiescent only).
+    pub fn snapshot(&self) -> BitSet {
+        let mut out = BitSet::new(self.len);
+        for (i, w) in self.words.iter().enumerate() {
+            out.words[i] = w.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Iterate set bits (quiescent only).
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, w)| {
+            let mut bits = w.load(Ordering::Relaxed);
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    return None;
+                }
+                let b = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                Some(wi * BITS + b)
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn set_get_clear_roundtrip() {
+        let mut bs = BitSet::new(130);
+        assert_eq!(bs.count(), 0);
+        bs.set(0);
+        bs.set(64);
+        bs.set(129);
+        assert!(bs.get(0) && bs.get(64) && bs.get(129));
+        assert!(!bs.get(1) && !bs.get(63) && !bs.get(128));
+        assert_eq!(bs.count(), 3);
+        bs.clear(64);
+        assert!(!bs.get(64));
+        assert_eq!(bs.count(), 2);
+    }
+
+    #[test]
+    fn iter_yields_sorted_set_bits() {
+        let mut bs = BitSet::new(200);
+        for i in [3usize, 64, 65, 199] {
+            bs.set(i);
+        }
+        assert_eq!(bs.iter().collect::<Vec<_>>(), vec![3, 64, 65, 199]);
+    }
+
+    #[test]
+    fn set_all_respects_length() {
+        let mut bs = BitSet::new(70);
+        bs.set_all();
+        assert_eq!(bs.count(), 70);
+        bs.clear_all();
+        assert_eq!(bs.count(), 0);
+    }
+
+    #[test]
+    fn atomic_set_reports_first_setter() {
+        let bs = AtomicBitSet::new(100);
+        assert!(bs.set(42));
+        assert!(!bs.set(42));
+        assert!(bs.get(42));
+        assert_eq!(bs.count(), 1);
+    }
+
+    #[test]
+    fn atomic_concurrent_sets_exactly_one_winner_per_bit() {
+        let bs = Arc::new(AtomicBitSet::new(512));
+        let winners: Vec<usize> = (0..4)
+            .map(|_| {
+                let bs = Arc::clone(&bs);
+                std::thread::spawn(move || (0..512).filter(|&i| bs.set(i)).count())
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect();
+        assert_eq!(winners.iter().sum::<usize>(), 512);
+        assert_eq!(bs.count(), 512);
+    }
+
+    #[test]
+    fn snapshot_matches() {
+        let bs = AtomicBitSet::new(99);
+        bs.set(0);
+        bs.set(98);
+        let snap = bs.snapshot();
+        assert_eq!(snap.iter().collect::<Vec<_>>(), vec![0, 98]);
+    }
+}

@@ -1,0 +1,72 @@
+//! Small self-contained utilities shared across the framework.
+//!
+//! Everything here is dependency-free: the build environment is offline, so
+//! we carry our own PRNG ([`rng`]), bitsets ([`bitset`]), prefix sums
+//! ([`prefix`]), timing helpers ([`timer`]) and a miniature property-testing
+//! harness ([`quick`]).
+
+pub mod bitset;
+pub mod prefix;
+pub mod quick;
+pub mod rng;
+pub mod timer;
+
+/// Human-readable formatting of a count with thousands separators,
+/// e.g. `1806067135` → `"1,806,067,135"`.
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let offset = s.len() % 3;
+    for (i, c) in s.chars().enumerate() {
+        if i != 0 && (i + 3 - offset) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Geometric mean of a slice of positive numbers. Returns `NaN` on empty
+/// input (callers decide how to render that).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Integer ceiling division.
+#[inline]
+pub const fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas_formats_groups() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(317_080), "317,080");
+        assert_eq!(commas(1_806_067_135), "1,806,067,135");
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn div_ceil_rounds_up() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+}

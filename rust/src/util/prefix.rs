@@ -1,0 +1,146 @@
+//! Prefix sums and partition search over monotone sequences.
+//!
+//! The edge-centric workload representation (paper §V-A) is built on an
+//! exclusive prefix sum over vertex degrees followed by binary searches
+//! that cut the cumulative edge count into equal-work ranges.
+
+/// Exclusive prefix sum: `out[i] = sum(xs[0..i])`, `out[len] = total`.
+/// Returns a vector one longer than the input (CSR-offsets shape).
+pub fn exclusive_prefix_sum(xs: &[u64]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(xs.len() + 1);
+    let mut acc = 0u64;
+    out.push(0);
+    for &x in xs {
+        acc += x;
+        out.push(acc);
+    }
+    out
+}
+
+/// In-place exclusive prefix sum over `usize` (used by the CSR builder to
+/// turn per-vertex counts into offsets). Returns the total.
+pub fn exclusive_prefix_sum_in_place(xs: &mut [usize]) -> usize {
+    let mut acc = 0usize;
+    for x in xs.iter_mut() {
+        let v = *x;
+        *x = acc;
+        acc += v;
+    }
+    acc
+}
+
+/// Largest index `i` such that `prefix[i] <= target`, for a non-decreasing
+/// `prefix` with `prefix[0] == 0`. Used to locate which vertex owns the
+/// k-th edge in the cumulative-degree array.
+pub fn rank_in_prefix(prefix: &[u64], target: u64) -> usize {
+    debug_assert!(!prefix.is_empty());
+    // partition_point returns the first index where pred is false.
+    let idx = prefix.partition_point(|&p| p <= target);
+    idx.saturating_sub(1)
+}
+
+/// Cut `[0, total)` work (as described by `prefix`, len = n+1) into `parts`
+/// contiguous item ranges with near-equal cumulative weight. Returns
+/// `parts + 1` item boundaries, first 0, last n, non-decreasing.
+///
+/// This is exactly the paper's edge-centric split: items are vertices,
+/// weights are degrees, and each part receives ≈ total/parts edges.
+pub fn balanced_cuts(prefix: &[u64], parts: usize) -> Vec<usize> {
+    assert!(!prefix.is_empty(), "prefix must have at least one entry");
+    assert!(parts > 0);
+    let n = prefix.len() - 1;
+    let total = prefix[n];
+    let mut cuts = Vec::with_capacity(parts + 1);
+    cuts.push(0);
+    for p in 1..parts {
+        let target = (total as u128 * p as u128 / parts as u128) as u64;
+        // First item index whose prefix reaches the target…
+        let mut c = prefix.partition_point(|&x| x < target).min(n);
+        // …but prefer the boundary *closest* to the target: a single huge
+        // item (power-law hub) should not drag every lighter item onto its
+        // side of the cut.
+        if c > 0 && target - prefix[c - 1] <= prefix[c] - target {
+            c -= 1;
+        }
+        // Clamp to keep boundaries monotone when many items weigh zero.
+        if c < *cuts.last().unwrap() {
+            c = *cuts.last().unwrap();
+        }
+        cuts.push(c);
+    }
+    cuts.push(n);
+    cuts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exclusive_prefix_sum_basics() {
+        assert_eq!(exclusive_prefix_sum(&[]), vec![0]);
+        assert_eq!(exclusive_prefix_sum(&[3, 0, 2]), vec![0, 3, 3, 5]);
+    }
+
+    #[test]
+    fn in_place_matches_and_returns_total() {
+        let mut xs = vec![3usize, 0, 2, 5];
+        let total = exclusive_prefix_sum_in_place(&mut xs);
+        assert_eq!(xs, vec![0, 3, 3, 5]);
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn rank_in_prefix_finds_owner() {
+        let prefix = vec![0u64, 3, 3, 5, 10];
+        assert_eq!(rank_in_prefix(&prefix, 0), 0);
+        assert_eq!(rank_in_prefix(&prefix, 2), 0);
+        assert_eq!(rank_in_prefix(&prefix, 3), 2); // vertex 1 has degree 0
+        assert_eq!(rank_in_prefix(&prefix, 4), 2);
+        assert_eq!(rank_in_prefix(&prefix, 9), 3);
+    }
+
+    #[test]
+    fn balanced_cuts_cover_and_balance() {
+        // 8 items of weight 1 → 4 parts of 2 items.
+        let prefix = exclusive_prefix_sum(&[1; 8]);
+        assert_eq!(balanced_cuts(&prefix, 4), vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn balanced_cuts_handle_skew() {
+        // One huge item dominates; it must land alone in a part.
+        let prefix = exclusive_prefix_sum(&[1, 1, 100, 1, 1]);
+        let cuts = balanced_cuts(&prefix, 2);
+        assert_eq!(cuts.first(), Some(&0));
+        assert_eq!(cuts.last(), Some(&5));
+        for w in cuts.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // The heavy item (index 2) is fully inside one part.
+        let part_of_heavy = cuts.windows(2).position(|w| w[0] <= 2 && 2 < w[1]);
+        assert!(part_of_heavy.is_some());
+    }
+
+    #[test]
+    fn balanced_cuts_more_parts_than_items() {
+        let prefix = exclusive_prefix_sum(&[5, 5]);
+        let cuts = balanced_cuts(&prefix, 8);
+        assert_eq!(cuts.len(), 9);
+        assert_eq!(*cuts.first().unwrap(), 0);
+        assert_eq!(*cuts.last().unwrap(), 2);
+        for w in cuts.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn balanced_cuts_all_zero_weights() {
+        let prefix = exclusive_prefix_sum(&[0, 0, 0]);
+        let cuts = balanced_cuts(&prefix, 3);
+        assert_eq!(*cuts.last().unwrap(), 3);
+        for w in cuts.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! A miniature property-based testing harness.
+//!
+//! The offline environment has no `proptest`/`quickcheck`, so this module
+//! provides the 10% we need: run a property over many seeded random cases
+//! and, on failure, report the exact case seed so the failure replays
+//! deterministically (`QUICK_SEED=<n> cargo test ...`).
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with env `QUICK_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("QUICK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Base seed (override with env `QUICK_SEED` to replay one failing case).
+pub fn base_seed() -> u64 {
+    std::env::var("QUICK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1CE_5EED)
+}
+
+/// Run `prop` against `default_cases()` seeded RNGs. `prop` returns
+/// `Err(description)` to fail; the panic message includes the case seed.
+pub fn check<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let base = base_seed();
+    let replay_single = std::env::var("QUICK_SEED").is_ok();
+    for case in 0..cases {
+        let seed = if replay_single { base } else { base.wrapping_add(case as u64) };
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}): {msg}\n\
+                 replay with: QUICK_SEED={seed} QUICK_CASES=1"
+            );
+        }
+        if replay_single {
+            break;
+        }
+    }
+}
+
+/// Generate a random degree sequence with power-law-ish skew: most entries
+/// small, a few heavy hitters — the shape vertex-centric graphs exhibit.
+pub fn skewed_degrees(rng: &mut Rng, n: usize, max_degree: usize) -> Vec<u64> {
+    (0..n)
+        .map(|_| {
+            // Inverse-power sampling: P(d) ∝ d^-2 over [1, max_degree].
+            let u = rng.f64().max(1e-12);
+            let d = (1.0 / u).sqrt();
+            (d as usize).clamp(1, max_degree.max(1)) as u64
+        })
+        .collect()
+}
+
+/// Generate a random edge list over `n` vertices (possibly with duplicates
+/// and self-loops — builders must tolerate both).
+pub fn random_edges(rng: &mut Rng, n: usize, m: usize) -> Vec<(u32, u32)> {
+    (0..m)
+        .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("below stays below", |rng| {
+            let b = 1 + rng.below(100);
+            let x = rng.below(b);
+            if x < b {
+                Ok(())
+            } else {
+                Err(format!("{x} >= {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check("always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn skewed_degrees_in_range() {
+        let mut rng = Rng::new(1);
+        let ds = skewed_degrees(&mut rng, 1000, 50);
+        assert_eq!(ds.len(), 1000);
+        assert!(ds.iter().all(|&d| (1..=50).contains(&d)));
+        // Skew sanity: max should exceed mean substantially.
+        let mean = ds.iter().sum::<u64>() as f64 / 1000.0;
+        let max = *ds.iter().max().unwrap() as f64;
+        assert!(max > 2.0 * mean, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn random_edges_in_range() {
+        let mut rng = Rng::new(2);
+        let es = random_edges(&mut rng, 10, 500);
+        assert!(es.iter().all(|&(s, d)| s < 10 && d < 10));
+    }
+}

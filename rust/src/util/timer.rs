@@ -1,0 +1,99 @@
+//! Wall-clock timing helpers used by benchmarks and the experiment harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap duration.
+    pub fn lap(&mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.start = Instant::now();
+        d
+    }
+}
+
+/// Measure the best-of-`reps` wall time of `f`, with one warm-up run.
+/// Best-of is the standard noise-resistant estimator for short kernels.
+pub fn best_of<F: FnMut()>(reps: usize, mut f: F) -> Duration {
+    f(); // warm-up
+    let mut best = Duration::MAX;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed());
+    }
+    best
+}
+
+/// Measure mean ns/iteration of `f` by running it `iters` times inside one
+/// timed region (for very short operations where per-call timing is noise).
+pub fn ns_per_iter<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_nanos() as f64 / iters.max(1) as f64
+}
+
+/// Render a duration compactly: `1.234s`, `56.7ms`, `890µs`, `12ns`.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.secs() > 0.0);
+    }
+
+    #[test]
+    fn best_of_runs_f() {
+        let mut n = 0;
+        let _ = best_of(3, || n += 1);
+        assert_eq!(n, 4); // warm-up + 3 reps
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12ns");
+        assert_eq!(fmt_duration(Duration::from_micros(890)), "890.0µs");
+        assert_eq!(fmt_duration(Duration::from_millis(56)), "56.0ms");
+        assert_eq!(fmt_duration(Duration::from_secs(1)), "1.000s");
+    }
+}

@@ -1,0 +1,142 @@
+//! End-to-end three-layer validation: graphs run through the AOT-compiled
+//! JAX/Pallas artifacts (via PJRT) must agree with the pure-Rust engine.
+//!
+//! Requires `make artifacts`; tests skip (with a note) when the artifact
+//! directory is missing so `cargo test` works on a fresh checkout.
+
+use ipregel::algos::{ConnectedComponents, PageRank, Sssp};
+use ipregel::engine::{run, EngineConfig};
+use ipregel::graph::gen;
+use ipregel::runtime::{accel, default_artifact_dir, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!(
+            "skipping accel tests: {} missing (run `make artifacts`)",
+            dir.display()
+        );
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts present but failed to load"))
+}
+
+#[test]
+fn accel_pagerank_matches_engine() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let g = gen::barabasi_albert(600, 3, 12);
+    let block = accel::DenseBlock::from_graph(&rt, &g).unwrap();
+    let accel_ranks = accel::pagerank(&rt, &g, &block).unwrap();
+
+    let engine_ranks = run(&g, &PageRank::default(), EngineConfig::default());
+    assert_eq!(accel_ranks.len(), 600);
+    for v in 0..600 {
+        let (a, b) = (accel_ranks[v] as f64, engine_ranks.values[v]);
+        assert!(
+            (a - b).abs() < 1e-6 + b * 1e-4,
+            "v{v}: accel {a} vs engine {b}"
+        );
+    }
+}
+
+#[test]
+fn accel_sssp_matches_engine() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let g = gen::rmat(9, 4, 0.57, 0.19, 0.19, 44); // 512 vertices
+    let p = Sssp::from_hub(&g);
+    let block = accel::DenseBlock::from_graph(&rt, &g).unwrap();
+    let accel_dist = accel::sssp(&rt, &g, &block, p.source).unwrap();
+    let engine_dist = run(&g, &p, EngineConfig::default().bypass(true));
+    for v in 0..g.num_vertices() {
+        let a = accel_dist[v];
+        let b = engine_dist.values[v];
+        if b == u64::MAX {
+            assert!(a.is_infinite(), "v{v}: accel {a} but engine unreached");
+        } else {
+            assert_eq!(a as u64, b, "v{v}");
+        }
+    }
+}
+
+#[test]
+fn accel_cc_matches_engine() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let g = gen::disjoint_rings(7, 40); // 280 vertices, 7 components
+    let block = accel::DenseBlock::from_graph(&rt, &g).unwrap();
+    let accel_labels = accel::connected_components(&rt, &g, &block).unwrap();
+    let engine_labels = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+    assert_eq!(accel_labels, engine_labels.values);
+}
+
+#[test]
+fn accel_single_step_is_one_engine_superstep() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let g = gen::ring(64);
+    let block = accel::DenseBlock::from_graph(&rt, &g).unwrap();
+    // Uniform contributions on a 2-regular ring: every vertex gathers
+    // 2 * (1/n)/2 = 1/n, so the step returns 0.15/n + 0.85/n = 1/n.
+    let n = 64.0f32;
+    let contrib: Vec<f32> = vec![1.0 / n / 2.0; 64];
+    let out = accel::pagerank_step(&rt, &block, &contrib).unwrap();
+    for (v, &r) in out.iter().enumerate() {
+        assert!((r - 1.0 / n).abs() < 1e-6, "v{v}: {r}");
+    }
+}
+
+#[test]
+fn accel_rejects_oversized_graphs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let g = gen::ring(rt.manifest.n + 1);
+    match accel::DenseBlock::from_graph(&rt, &g) {
+        Ok(_) => panic!("oversized graph must be rejected"),
+        Err(err) => assert!(err.to_string().contains("compiled for n="), "{err}"),
+    }
+}
+
+#[test]
+fn runtime_reports_loaded_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names = rt.executables();
+    for expected in ["pagerank_run", "pagerank_step", "sssp_relax", "cc_label"] {
+        assert!(names.contains(&expected), "{names:?}");
+    }
+    assert!(!rt.platform().is_empty());
+    assert_eq!(rt.manifest.n % rt.manifest.tile, 0);
+}
+
+#[test]
+fn accel_multi_sssp_matches_per_source_engine_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let g = gen::rmat(9, 4, 0.57, 0.19, 0.19, 91); // 512 vertices
+    let block = accel::DenseBlock::from_graph(&rt, &g).unwrap();
+    let sources: Vec<u32> = vec![g.max_out_degree_vertex(), 0, 17, 255];
+    let all = accel::multi_sssp(&rt, &block, &sources).unwrap();
+    assert_eq!(all.len(), sources.len());
+    for (k, &src) in sources.iter().enumerate() {
+        let engine = run(
+            &g,
+            &Sssp { source: src },
+            EngineConfig::default().bypass(true),
+        );
+        for v in 0..g.num_vertices() {
+            let a = all[k][v];
+            let b = engine.values[v];
+            if b == u64::MAX {
+                assert!(a.is_infinite(), "src {src} v{v}");
+            } else {
+                assert_eq!(a as u64, b, "src {src} v{v}");
+            }
+        }
+    }
+}
+
+#[test]
+fn accel_multi_sssp_validates_inputs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let g = gen::ring(64);
+    let block = accel::DenseBlock::from_graph(&rt, &g).unwrap();
+    assert!(accel::multi_sssp(&rt, &block, &[]).is_err());
+    assert!(accel::multi_sssp(&rt, &block, &[64]).is_err());
+    let too_many: Vec<u32> = (0..rt.manifest.multi_sources as u32 + 1).collect();
+    assert!(accel::multi_sssp(&rt, &block, &too_many).is_err());
+}

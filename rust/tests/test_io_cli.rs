@@ -1,0 +1,161 @@
+//! Persistence + CLI integration tests: graph round-trips through the
+//! binary and text formats, catalog caching, and the `ipregel` binary's
+//! subcommands end to end (spawned as a subprocess).
+
+use ipregel::graph::{catalog, gen, io};
+use std::path::PathBuf;
+use std::process::Command;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("ipregel_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+#[test]
+fn large_graph_binary_roundtrip_exact() {
+    let g = gen::rmat(13, 8, 0.57, 0.19, 0.19, 77);
+    let dir = tmp_dir("bin");
+    let p = dir.join("g.ipg");
+    io::write_binary(&g, &p).unwrap();
+    let g2 = io::read_binary(&p).unwrap();
+    assert_eq!(g, g2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn text_roundtrip_preserves_edge_multiset() {
+    let g = gen::barabasi_albert(400, 3, 5);
+    let dir = tmp_dir("txt");
+    let p = dir.join("g.txt");
+    io::write_edge_list(&g, &p).unwrap();
+    let g2 = io::read_edge_list(&p, false).unwrap();
+    assert_eq!(g.num_edges(), g2.num_edges());
+    let mut a: Vec<_> = g.edges().collect();
+    let mut b: Vec<_> = g2.edges().collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_binary_is_rejected() {
+    let g = gen::ring(100);
+    let dir = tmp_dir("trunc");
+    let p = dir.join("g.ipg");
+    io::write_binary(&g, &p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(io::read_binary(&p).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn catalog_cache_is_deterministic_across_loads() {
+    let dir = tmp_dir("cat");
+    let e = &catalog::catalog_tiny()[1];
+    let a = e.load_or_generate(&dir).unwrap();
+    let b = e.load_or_generate(&dir).unwrap(); // cache hit
+    assert_eq!(a, b);
+    // Regeneration from scratch is also identical (seeded).
+    std::fs::remove_file(e.cache_path(&dir)).unwrap();
+    let c = e.load_or_generate(&dir).unwrap();
+    assert_eq!(a, c);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- CLI subprocess tests ----------------------------------------------
+
+fn ipregel() -> Command {
+    // Integration tests and the binary land in the same target profile dir.
+    let mut exe = std::env::current_exe().unwrap();
+    exe.pop(); // deps/
+    exe.pop(); // debug|release/
+    exe.push(format!("ipregel{}", std::env::consts::EXE_SUFFIX));
+    assert!(
+        exe.exists(),
+        "binary not built at {} — cargo builds it automatically for integration tests",
+        exe.display()
+    );
+    Command::new(exe)
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = ipregel().args(args).output().unwrap();
+    assert!(
+        out.status.success(),
+        "ipregel {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn cli_help_and_unknown_subcommand() {
+    let help = run_ok(&["help"]);
+    assert!(help.contains("table2"));
+    let out = ipregel().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn cli_info_run_sim_on_generated_graph() {
+    let dir = tmp_dir("cli");
+    let dirs = dir.to_str().unwrap();
+
+    let info = run_ok(&["info", "dblp-t", "--dir", dirs]);
+    assert!(info.contains("num_vertices"));
+
+    let run_out = run_ok(&[
+        "run", "--algo", "cc", "dblp-t", "--dir", dirs, "--threads", "2", "--bypass",
+    ]);
+    assert!(run_out.contains("components:"), "{run_out}");
+
+    let sim_out = run_ok(&[
+        "sim", "--algo", "sssp", "dblp-t", "--dir", dirs, "--threads", "32", "--bypass",
+        "--strategy", "hybrid",
+    ]);
+    assert!(sim_out.contains("virtual s"), "{sim_out}");
+
+    let pr_out = run_ok(&[
+        "run", "--algo", "pr", "dblp-t", "--dir", dirs, "--layout", "soa", "--schedule",
+        "dynamic:64",
+    ]);
+    assert!(pr_out.contains("top ranks:"), "{pr_out}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_table1_tiny() {
+    let dir = tmp_dir("t1");
+    let out = run_ok(&["table1", "--tiny", "--dir", dir.to_str().unwrap()]);
+    assert!(out.contains("Friendster"));
+    assert!(out.contains("1,806,067,135"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_rejects_unknown_flags() {
+    let out = ipregel()
+        .args(["run", "--algo", "pr", "dblp-t", "--theads", "2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown option"));
+}
+
+#[test]
+fn cli_table2_single_bench_tiny() {
+    let dir = tmp_dir("t2");
+    let out = run_ok(&[
+        "table2", "--tiny", "--dir", dir.to_str().unwrap(), "--bench", "sssp", "--chunk", "16",
+    ]);
+    assert!(out.contains("SSSP"), "{out}");
+    assert!(out.contains("Hybrid combiner"), "{out}");
+    assert!(out.contains("paper"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,154 @@
+//! Property-based integration tests over randomised graphs and
+//! configurations (seeded; replay any failure with the printed
+//! `QUICK_SEED`).
+
+use ipregel::algos::{reference, ConnectedComponents, PageRank, Sssp};
+use ipregel::combine::Strategy;
+use ipregel::engine::{run, EngineConfig};
+use ipregel::graph::gen;
+use ipregel::graph::GraphBuilder;
+use ipregel::layout::Layout;
+use ipregel::sched::Schedule;
+use ipregel::util::quick;
+use ipregel::util::rng::Rng;
+
+fn random_cfg(rng: &mut Rng) -> EngineConfig {
+    let schedules = [
+        Schedule::Static,
+        Schedule::Dynamic {
+            chunk: 1 + rng.below(128) as usize,
+        },
+        Schedule::Guided {
+            min_chunk: 1 + rng.below(16) as usize,
+        },
+        Schedule::EdgeCentric,
+    ];
+    let strategies = [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid];
+    let layouts = [Layout::Interleaved, Layout::Externalised];
+    EngineConfig::default()
+        .threads(1 + rng.below(6) as usize)
+        .schedule(schedules[rng.below(4) as usize])
+        .strategy(strategies[rng.below(3) as usize])
+        .layout(layouts[rng.below(2) as usize])
+        .bypass(rng.chance(0.5))
+}
+
+fn random_graph(rng: &mut Rng) -> ipregel::graph::Csr {
+    let n = 2 + rng.below(300) as usize;
+    let m = rng.below(4 * n as u64) as usize;
+    let edges = quick::random_edges(rng, n, m);
+    GraphBuilder::new(n)
+        .symmetric(rng.chance(0.7))
+        .dedup(rng.chance(0.5))
+        .drop_self_loops(true)
+        .edges(&edges)
+        .build()
+}
+
+#[test]
+fn prop_pagerank_mass_and_reference_agreement() {
+    quick::check("pagerank properties", |rng| {
+        let g = random_graph(rng);
+        let cfg = random_cfg(rng);
+        let iters = rng.below(6) as usize;
+        let p = PageRank {
+            iterations: iters,
+            damping: 0.85,
+        };
+        let got = run(&g, &p, cfg);
+        // Mass never exceeds 1 (dangling mass only leaks out).
+        let total: f64 = got.values.iter().sum();
+        if total > 1.0 + 1e-9 {
+            return Err(format!("mass {total} > 1 under {cfg:?}"));
+        }
+        if got.values.iter().any(|&r| !(r > 0.0) || !r.is_finite()) {
+            return Err("non-positive or non-finite rank".into());
+        }
+        let want = reference::pagerank(&g, iters, 0.85);
+        for v in g.vertices() {
+            let (a, b) = (got.values[v as usize], want[v as usize]);
+            if (a - b).abs() > 1e-11 {
+                return Err(format!("v{v}: {a} vs {b} under {cfg:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cc_fixpoint_and_reference_agreement() {
+    quick::check("cc properties", |rng| {
+        // CC via min-label propagation assumes an undirected graph (all
+        // of the paper's Table I graphs are), so force symmetry here.
+        let n = 2 + rng.below(300) as usize;
+        let m = rng.below(4 * n as u64) as usize;
+        let edges = quick::random_edges(rng, n, m);
+        let g = GraphBuilder::new(n)
+            .symmetric(true)
+            .drop_self_loops(true)
+            .edges(&edges)
+            .build();
+        let cfg = random_cfg(rng);
+        let got = run(&g, &ConnectedComponents, cfg);
+        let want = reference::connected_components(&g);
+        if got.values != want {
+            return Err(format!("labels differ under {cfg:?}"));
+        }
+        // Fixpoint: every vertex label ≤ all neighbours' labels would be
+        // wrong (labels are equal within a component); check equality
+        // along every edge instead.
+        for (s, d) in g.edges() {
+            if got.values[s as usize] != got.values[d as usize] {
+                return Err(format!("edge ({s},{d}) crosses labels"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sssp_triangle_inequality_and_reference() {
+    quick::check("sssp properties", |rng| {
+        let g = random_graph(rng);
+        let cfg = random_cfg(rng);
+        let source = rng.below(g.num_vertices() as u64) as u32;
+        let got = run(&g, &Sssp { source }, cfg);
+        let want = reference::bfs_levels(&g, source);
+        if got.values != want {
+            return Err(format!("distances differ under {cfg:?} source {source}"));
+        }
+        // Edge relaxation invariant: d(v) ≤ d(u) + 1 for every edge u→v.
+        for (u, v) in g.edges() {
+            let (du, dv) = (got.values[u as usize], got.values[v as usize]);
+            if du != u64::MAX && dv > du + 1 {
+                return Err(format!("edge ({u},{v}): d={du} then {dv}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_structured_graphs_have_known_answers() {
+    quick::check("structured graph answers", |rng| {
+        // Grid: CC = single component; SSSP from corner = Manhattan.
+        let rows = 2 + rng.below(10) as usize;
+        let cols = 2 + rng.below(10) as usize;
+        let g = gen::grid(rows, cols);
+        let cfg = random_cfg(rng);
+        let cc = run(&g, &ConnectedComponents, cfg);
+        if cc.values.iter().any(|&l| l != 0) {
+            return Err("grid must be one component".into());
+        }
+        let ss = run(&g, &Sssp { source: 0 }, cfg);
+        for r in 0..rows {
+            for c in 0..cols {
+                let want = (r + c) as u64;
+                if ss.values[r * cols + c] != want {
+                    return Err(format!("grid ({r},{c}): {}", ss.values[r * cols + c]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
