@@ -23,14 +23,14 @@
 
 use ipregel::algos::{reference, ConnectedComponents, PageRank, Sssp};
 use ipregel::config::Opts;
-use ipregel::engine::{run, EngineConfig};
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions};
 use ipregel::exp::{run_table1, table2, Bench, Table2Options};
 use ipregel::graph::catalog;
 use ipregel::runtime::{accel, default_artifact_dir, Runtime};
 use ipregel::util::timer::{fmt_duration, Timer};
 use std::path::PathBuf;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ipregel::util::error::Result<()> {
     let opts = Opts::parse(std::env::args().skip(1));
     let full = opts.flag("full");
     let dir = PathBuf::from(opts.get_or("dir", "data/graphs"));
@@ -46,9 +46,10 @@ fn main() -> anyhow::Result<()> {
     println!("{}", run_table1(&entries, &dir)?);
 
     // ---- 3: real multithreaded engine, validated -----------------------
-    println!("=== real engine validation (4 threads) ===");
+    println!("=== real engine validation (4 threads, one GraphSession) ===");
     let probe = entries[0].load_or_generate(&dir)?;
-    let pr = run(&probe, &PageRank::default(), EngineConfig::default().threads(4));
+    let probe_session = GraphSession::with_config(&probe, EngineConfig::default().threads(4));
+    let pr = probe_session.run(&PageRank::default());
     let pr_ref = reference::pagerank(&probe, 10, 0.85);
     let max_err = pr
         .values
@@ -59,16 +60,18 @@ fn main() -> anyhow::Result<()> {
     println!("pagerank: {} | max |err| vs serial = {max_err:.2e}", pr.metrics.summary());
     assert!(max_err < 1e-9);
 
-    let cc = run(
-        &probe,
+    let cc = probe_session.run_with(
         &ConnectedComponents,
-        EngineConfig::default().threads(4).bypass(true),
+        RunOptions::new().config(EngineConfig::default().threads(4).bypass(true)),
     );
     assert_eq!(cc.values, reference::connected_components(&probe));
     println!("cc:       {} | labels match union-find", cc.metrics.summary());
 
     let sp = Sssp::from_hub(&probe);
-    let ss = run(&probe, &sp, EngineConfig::default().threads(4).bypass(true));
+    let ss = probe_session.run_with(
+        &sp,
+        RunOptions::new().config(EngineConfig::default().threads(4).bypass(true)),
+    );
     assert_eq!(ss.values, reference::bfs_levels(&probe, sp.source));
     println!("sssp:     {} | distances match BFS", ss.metrics.summary());
 
@@ -100,8 +103,9 @@ fn main() -> anyhow::Result<()> {
         println!("platform={} artifacts={:?}", rt.platform(), rt.executables());
         let small = ipregel::graph::gen::barabasi_albert(800, 3, 5);
         let block = accel::DenseBlock::from_graph(&rt, &small)?;
+        let small_session = GraphSession::new(&small);
         let accel_pr = accel::pagerank(&rt, &small, &block)?;
-        let eng_pr = run(&small, &PageRank::default(), EngineConfig::default());
+        let eng_pr = small_session.run(&PageRank::default());
         let max_err = accel_pr
             .iter()
             .zip(&eng_pr.values)
@@ -110,7 +114,7 @@ fn main() -> anyhow::Result<()> {
         println!("pagerank via PJRT: max |err| vs engine = {max_err:.2e}");
         assert!(max_err < 1e-6);
         let accel_cc = accel::connected_components(&rt, &small, &block)?;
-        let eng_cc = run(&small, &ConnectedComponents, EngineConfig::default());
+        let eng_cc = small_session.run(&ConnectedComponents);
         assert_eq!(accel_cc, eng_cc.values);
         println!("cc via PJRT: labels identical to engine ✓");
     } else {

@@ -1,16 +1,21 @@
-//! Quickstart: write a vertex-centric program and run it.
+//! Quickstart: write a vertex-centric program and run it through a
+//! [`GraphSession`].
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Shows the complete public API surface in ~60 lines: define a
-//! [`VertexProgram`], pick an [`EngineConfig`], call [`run`]. The same
-//! program text runs under every optimisation configuration — the paper's
-//! programmability thesis.
+//! Shows the complete public API surface in ~80 lines: define a
+//! [`VertexProgram`], open a [`GraphSession`] over the graph, run the
+//! program under several optimisation configurations (the same session
+//! pools mailboxes, stores and bitsets across runs), and read the
+//! metrics. The same program text runs under every configuration — the
+//! paper's programmability thesis.
 
 use ipregel::combine::SumCombiner;
-use ipregel::engine::{run, Context, EngineConfig, Mode, VertexProgram};
+use ipregel::engine::{
+    Context, EngineConfig, GraphSession, Mode, NoAgg, RunOptions, VertexProgram,
+};
 use ipregel::graph::csr::{Csr, VertexId};
 use ipregel::graph::gen;
 use ipregel::layout::Layout;
@@ -24,6 +29,7 @@ impl VertexProgram for NeighbourSum {
     type Value = u64;
     type Message = u64;
     type Comb = SumCombiner;
+    type Agg = NoAgg;
 
     fn mode(&self) -> Mode {
         Mode::Push
@@ -31,6 +37,10 @@ impl VertexProgram for NeighbourSum {
 
     fn combiner(&self) -> SumCombiner {
         SumCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
     }
 
     fn init(&self, _g: &Csr, _v: VertexId) -> u64 {
@@ -55,20 +65,33 @@ fn main() {
         g.num_edges()
     );
 
+    // One session per graph: stores/mailboxes/bitsets are built on the
+    // first run and recycled by every later one.
+    let session = GraphSession::with_config(&g, EngineConfig::default().threads(4));
+
     // Baseline configuration…
-    let base = run(&g, &NeighbourSum, EngineConfig::default().threads(4));
+    let base = session.run(&NeighbourSum);
     println!("baseline:  {}", base.metrics.summary());
 
     // …and the paper's "final"-style configuration: externalised vertex
-    // layout + dynamic scheduling. Same program, same results.
+    // layout + dynamic scheduling, as a per-run override. Same program,
+    // same results.
     let tuned_cfg = EngineConfig::default()
         .threads(4)
         .layout(Layout::Externalised)
         .schedule(Schedule::Dynamic { chunk: 64 });
-    let tuned = run(&g, &NeighbourSum, tuned_cfg);
+    let tuned = session.run_with(&NeighbourSum, RunOptions::new().config(tuned_cfg));
     println!("optimised: {}", tuned.metrics.summary());
 
     assert_eq!(base.values, tuned.values, "optimisations never change results");
+
+    // A third run on the session hits the store pool (no reallocation).
+    let again = session.run(&NeighbourSum);
+    assert!(again.metrics.store_reused);
+    println!(
+        "third run reused pooled state ✓ ({} runs on this session)",
+        session.runs_completed()
+    );
 
     // Spot-check vertex 0 against the CSR.
     let expect: u64 = g.in_neighbors(0).iter().map(|&u| u as u64).sum();

@@ -1,6 +1,6 @@
 //! Navigation scenario: shortest paths on a road-like grid vs a social
 //! hub-and-spoke graph — the paper's SSSP benchmark in both its hard and
-//! easy regimes.
+//! easy regimes, plus *weighted* roads through the v2 API.
 //!
 //! ```bash
 //! cargo run --release --example road_navigation
@@ -9,11 +9,13 @@
 //! The grid (high diameter, tiny frontiers) and the scale-free graph (low
 //! diameter, huge frontiers) stress opposite parts of the push engine;
 //! the example also compares combiner strategies on the contended
-//! scale-free case and prints the BFS wave profile.
+//! scale-free case, prints the BFS wave profile, and finishes with
+//! weighted SSSP (travel times instead of hop counts) validated against
+//! a serial Dijkstra.
 
-use ipregel::algos::{Sssp, UNREACHED};
+use ipregel::algos::{reference, Sssp, WeightedSssp, UNREACHED};
 use ipregel::combine::Strategy;
-use ipregel::engine::{run, EngineConfig};
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions};
 use ipregel::graph::gen;
 use ipregel::util::timer::{fmt_duration, Timer};
 
@@ -38,13 +40,43 @@ fn main() {
         grid.num_vertices(),
         grid.num_edges()
     );
+    let grid_session =
+        GraphSession::with_config(&grid, EngineConfig::default().threads(4).bypass(true));
     let p = Sssp { source: 0 };
     let t = Timer::start();
-    let r = run(&grid, &p, EngineConfig::default().threads(4).bypass(true));
+    let r = grid_session.run(&p);
     println!("  solved in {}", fmt_duration(t.elapsed()));
     wave_profile("grid (bypass)", &r.metrics);
     // Corner-to-corner Manhattan distance.
     assert_eq!(r.values[grid.num_vertices() - 1], (599 + 599) as u64);
+
+    // --- Weighted roads: travel times, not hop counts --------------------
+    // Same junction topology, but every segment gets a travel time in
+    // [1, 5) minutes. WeightedSssp relaxes per-edge via Context::out_edge;
+    // the unweighted program text above keeps working unchanged.
+    let roads = gen::randomly_weighted(&grid, 1.0, 5.0, 77);
+    let roads_session =
+        GraphSession::with_config(&roads, EngineConfig::default().threads(4).bypass(true));
+    let wp = WeightedSssp { source: 0 };
+    let t = Timer::start();
+    let wr = roads_session.run(&wp);
+    println!(
+        "\nweighted roads: corner-to-corner travel time {:.2} (solved in {})",
+        wr.values[roads.num_vertices() - 1],
+        fmt_duration(t.elapsed())
+    );
+    wave_profile("weighted grid (bypass)", &wr.metrics);
+    // Cross-check a sample of junctions against serial Dijkstra.
+    let dij = reference::dijkstra(&roads, 0);
+    for v in (0..roads.num_vertices()).step_by(50_000) {
+        assert!(
+            (wr.values[v] - dij[v]).abs() < 1e-9,
+            "junction {v}: engine {} vs dijkstra {}",
+            wr.values[v],
+            dij[v]
+        );
+    }
+    println!("  matches serial Dijkstra ✓");
 
     // --- Social graph: contended hubs ------------------------------------
     let social = gen::rmat(17, 16, 0.57, 0.19, 0.19, 5);
@@ -53,17 +85,19 @@ fn main() {
         social.num_vertices(),
         social.num_edges()
     );
+    let social_session = GraphSession::new(&social);
     let p = Sssp::from_hub(&social);
-    let mut reference = None;
+    let mut reference_dist = None;
     for strategy in [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
         let t = Timer::start();
-        let r = run(
-            &social,
+        let r = social_session.run_with(
             &p,
-            EngineConfig::default()
-                .threads(4)
-                .bypass(true)
-                .strategy(strategy),
+            RunOptions::new().config(
+                EngineConfig::default()
+                    .threads(4)
+                    .bypass(true)
+                    .strategy(strategy),
+            ),
         );
         println!(
             "  {:<12} {:>10}  ({} messages)",
@@ -71,15 +105,15 @@ fn main() {
             fmt_duration(t.elapsed()),
             r.metrics.total_messages()
         );
-        if let Some(ref want) = reference {
+        if let Some(ref want) = reference_dist {
             assert_eq!(want, &r.values, "{strategy:?} changed results");
         } else {
             wave_profile("rmat (bypass)", &r.metrics);
-            reference = Some(r.values);
+            reference_dist = Some(r.values);
         }
     }
 
-    let dist = reference.unwrap();
+    let dist = reference_dist.unwrap();
     let reached = dist.iter().filter(|&&d| d != UNREACHED).count();
     let mut histo = [0usize; 16];
     for &d in &dist {

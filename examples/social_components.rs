@@ -12,7 +12,7 @@
 
 use ipregel::algos::ConnectedComponents;
 use ipregel::config::Opts;
-use ipregel::engine::{run, EngineConfig};
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions};
 use ipregel::graph::csr::VertexId;
 use ipregel::graph::{gen, GraphBuilder};
 use ipregel::util::rng::Rng;
@@ -51,18 +51,20 @@ fn main() {
     println!("  {} vertices, {} directed edges", g.num_vertices(), g.num_edges());
 
     // Baseline: full-scan version.
+    let session = GraphSession::with_config(&g, EngineConfig::default().threads(4));
     let t = Timer::start();
-    let scan = run(&g, &ConnectedComponents, EngineConfig::default().threads(4));
+    let scan = session.run(&ConnectedComponents);
     let scan_time = t.elapsed();
 
-    // Selection bypass: explicit active list.
+    // Selection bypass: explicit active list. Same session — the second
+    // run recycles the first run's store and bitsets.
     let t = Timer::start();
-    let bypass = run(
-        &g,
+    let bypass = session.run_with(
         &ConnectedComponents,
-        EngineConfig::default().threads(4).bypass(true),
+        RunOptions::new().config(EngineConfig::default().threads(4).bypass(true)),
     );
     let bypass_time = t.elapsed();
+    assert!(bypass.metrics.store_reused);
 
     assert_eq!(scan.values, bypass.values);
     println!(

@@ -8,14 +8,14 @@
 //! ```
 
 use ipregel::algos::{incremental, ConnectedComponents, Sssp};
-use ipregel::engine::{run, EngineConfig};
+use ipregel::engine::{EngineConfig, GraphSession};
 use ipregel::graph::csr::VertexId;
 use ipregel::graph::gen;
 use ipregel::runtime::{accel, default_artifact_dir, Runtime};
 use ipregel::util::rng::Rng;
 use ipregel::util::timer::{fmt_duration, Timer};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ipregel::util::error::Result<()> {
     // A network that starts fragmented: 40 communities of 500 members.
     let mut g = gen::disjoint_rings(40, 500);
     println!(
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
         g.num_edges()
     );
     let cfg = EngineConfig::default().threads(4);
-    let base = run(&g, &ConnectedComponents, cfg.bypass(true));
+    let base = GraphSession::with_config(&g, cfg.bypass(true)).run(&ConnectedComponents);
     let mut labels = base.values;
 
     // Stream in friendship batches; repair labels incrementally and
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         let (g2, inc) = incremental::insert_edges(&g, &labels, &inserts, cfg);
         let inc_time = t.elapsed();
         let t = Timer::start();
-        let cold = run(&g2, &ConnectedComponents, cfg.bypass(true));
+        let cold = GraphSession::with_config(&g2, cfg.bypass(true)).run(&ConnectedComponents);
         let cold_time = t.elapsed();
         assert_eq!(inc.values, cold.values, "incremental must equal cold");
         inc_activations += inc.metrics.total_activations();
@@ -93,8 +93,10 @@ fn main() -> anyhow::Result<()> {
             sources.len(),
             fmt_duration(t.elapsed())
         );
+        // One session answers all per-source validation runs.
+        let q_session = GraphSession::with_config(&q, cfg.bypass(true));
         for (k, &src) in sources.iter().enumerate() {
-            let engine = run(&q, &Sssp { source: src }, cfg.bypass(true));
+            let engine = q_session.run(&Sssp { source: src });
             let agree = dists[k]
                 .iter()
                 .zip(&engine.values)

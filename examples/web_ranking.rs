@@ -12,7 +12,7 @@
 
 use ipregel::algos::PageRank;
 use ipregel::config::Opts;
-use ipregel::engine::{run, EngineConfig};
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions};
 use ipregel::graph::gen;
 use ipregel::layout::Layout;
 use ipregel::sched::Schedule;
@@ -51,11 +51,12 @@ fn main() {
         ),
     ];
 
-    println!("\nreal engine, {threads} threads:");
+    println!("\nreal engine, {threads} threads (one GraphSession, pooled state):");
+    let session = GraphSession::new(&g);
     let mut reference: Option<Vec<f64>> = None;
     for (name, cfg) in grid {
         let t = Timer::start();
-        let r = run(&g, &pr, cfg.threads(threads));
+        let r = session.run_with(&pr, RunOptions::new().config(cfg.threads(threads)));
         println!("  {name:<34} {}", fmt_duration(t.elapsed()));
         if let Some(ref want) = reference {
             for v in 0..g.num_vertices() {

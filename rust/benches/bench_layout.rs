@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench bench_layout`
 
 use ipregel::combine::MsgSlot;
-use ipregel::engine::{run, EngineConfig};
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions};
 use ipregel::algos::PageRank;
 use ipregel::graph::gen;
 use ipregel::layout::{AosStore, Layout, SoaStore, VertexStore};
@@ -68,14 +68,14 @@ fn main() {
     println!("== end-to-end: PageRank(10) wall clock, 1 thread ==\n");
     let g = gen::rmat(20, 8, 0.57, 0.19, 0.19, 11);
     let mut t2 = TablePrinter::new(&["layout", "wall", "speedup"]);
+    let session = GraphSession::with_config(&g, EngineConfig::default().threads(1));
     let timer = Timer::start();
-    let _ = run(&g, &PageRank::default(), EngineConfig::default().threads(1));
+    let _ = session.run(&PageRank::default());
     let aos_t = timer.secs();
     let timer = Timer::start();
-    let _ = run(
-        &g,
+    let _ = session.run_with(
         &PageRank::default(),
-        EngineConfig::default().threads(1).layout(Layout::Externalised),
+        RunOptions::new().config(EngineConfig::default().threads(1).layout(Layout::Externalised)),
     );
     let soa_t = timer.secs();
     t2.row(vec!["interleaved".into(), format!("{aos_t:.2}s"), "1.00".into()]);

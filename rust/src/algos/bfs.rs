@@ -2,7 +2,7 @@
 //! with a compound value).
 
 use crate::combine::MinCombiner;
-use crate::engine::{Context, Mode, VertexProgram};
+use crate::engine::{Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Per-vertex BFS state.
@@ -27,6 +27,7 @@ impl VertexProgram for Bfs {
     type Value = BfsState;
     type Message = u64;
     type Comb = MinCombiner;
+    type Agg = NoAgg;
 
     fn mode(&self) -> Mode {
         Mode::Push
@@ -34,6 +35,10 @@ impl VertexProgram for Bfs {
 
     fn combiner(&self) -> MinCombiner {
         MinCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
     }
 
     fn init(&self, _g: &Csr, v: VertexId) -> BfsState {
@@ -82,14 +87,15 @@ impl VertexProgram for Bfs {
 mod tests {
     use super::*;
     use crate::algos::reference;
-    use crate::engine::{run, EngineConfig};
+    use crate::engine::{EngineConfig, GraphSession};
     use crate::graph::gen;
 
     #[test]
     fn levels_match_reference() {
         let g = gen::rmat(8, 3, 0.57, 0.19, 0.19, 31);
         let root = g.max_out_degree_vertex();
-        let got = run(&g, &Bfs { root }, EngineConfig::default().bypass(true));
+        let got = GraphSession::with_config(&g, EngineConfig::default().bypass(true))
+            .run(&Bfs { root });
         let want = reference::bfs_levels(&g, root);
         for v in g.vertices() {
             let lvl = got.values[v as usize].level;
@@ -102,7 +108,8 @@ mod tests {
     #[test]
     fn parents_are_consistent() {
         let g = gen::grid(6, 6);
-        let got = run(&g, &Bfs { root: 0 }, EngineConfig::default().threads(4));
+        let got =
+            GraphSession::with_config(&g, EngineConfig::default().threads(4)).run(&Bfs { root: 0 });
         for v in g.vertices() {
             let st = got.values[v as usize];
             if v == 0 {
@@ -119,8 +126,15 @@ mod tests {
     #[test]
     fn deterministic_parent_under_threads() {
         let g = gen::complete(12);
-        let a = run(&g, &Bfs { root: 3 }, EngineConfig::default().threads(1));
-        let b = run(&g, &Bfs { root: 3 }, EngineConfig::default().threads(8));
+        let session = GraphSession::new(&g);
+        let a = session.run_with(
+            &Bfs { root: 3 },
+            crate::engine::RunOptions::new().config(EngineConfig::default().threads(1)),
+        );
+        let b = session.run_with(
+            &Bfs { root: 3 },
+            crate::engine::RunOptions::new().config(EngineConfig::default().threads(8)),
+        );
         for v in g.vertices() {
             assert_eq!(a.values[v as usize], b.values[v as usize]);
         }

@@ -11,7 +11,7 @@
 //! `EngineConfig::bypass(true)` (the program text is identical either way).
 
 use crate::combine::MinCombiner;
-use crate::engine::{Context, Mode, VertexProgram};
+use crate::engine::{Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Connected-components program. Value = current component label.
@@ -22,6 +22,7 @@ impl VertexProgram for ConnectedComponents {
     type Value = u32;
     type Message = u32;
     type Comb = MinCombiner;
+    type Agg = NoAgg;
 
     fn mode(&self) -> Mode {
         Mode::Pull
@@ -29,6 +30,10 @@ impl VertexProgram for ConnectedComponents {
 
     fn combiner(&self) -> MinCombiner {
         MinCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
     }
 
     fn init(&self, _g: &Csr, v: VertexId) -> u32 {
@@ -53,13 +58,14 @@ impl VertexProgram for ConnectedComponents {
 mod tests {
     use super::*;
     use crate::algos::reference;
-    use crate::engine::{run, EngineConfig};
+    use crate::engine::{EngineConfig, GraphSession, RunOptions};
     use crate::graph::gen;
 
     #[test]
     fn disjoint_rings_get_distinct_labels() {
         let g = gen::disjoint_rings(4, 5);
-        let got = run(&g, &ConnectedComponents, EngineConfig::default().threads(2));
+        let got =
+            GraphSession::with_config(&g, EngineConfig::default().threads(2)).run(&ConnectedComponents);
         // Component labels = min id of each ring: 0, 5, 10, 15.
         for comp in 0..4u32 {
             for v in 0..5u32 {
@@ -71,7 +77,7 @@ mod tests {
     #[test]
     fn matches_union_find_on_random_graph() {
         let g = gen::erdos_renyi(300, 350, 13);
-        let got = run(&g, &ConnectedComponents, EngineConfig::default());
+        let got = GraphSession::new(&g).run(&ConnectedComponents);
         let want = reference::connected_components(&g);
         assert_eq!(got.values, want);
     }
@@ -79,8 +85,12 @@ mod tests {
     #[test]
     fn bypass_and_scan_agree() {
         let g = gen::rmat(9, 3, 0.57, 0.19, 0.19, 21);
-        let scan = run(&g, &ConnectedComponents, EngineConfig::default());
-        let bypass = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+        let session = GraphSession::new(&g);
+        let scan = session.run(&ConnectedComponents);
+        let bypass = session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().config(EngineConfig::default().bypass(true)),
+        );
         assert_eq!(scan.values, bypass.values);
         // Bypass must touch no *more* vertices than the scan version ran.
         assert!(bypass.metrics.total_activations() <= scan.metrics.total_activations());
@@ -89,7 +99,8 @@ mod tests {
     #[test]
     fn single_component_converges_to_zero() {
         let g = gen::complete(20);
-        let got = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+        let got =
+            GraphSession::with_config(&g, EngineConfig::default().bypass(true)).run(&ConnectedComponents);
         assert!(got.values.iter().all(|&l| l == 0));
         // Complete graph: everyone hears 0 in superstep 1; done by 2-3.
         assert!(got.metrics.num_supersteps() <= 4);

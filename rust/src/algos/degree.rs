@@ -3,7 +3,7 @@
 //! in-degree). Exercises the sum-combiner push path end to end.
 
 use crate::combine::SumCombiner;
-use crate::engine::{Context, Mode, VertexProgram};
+use crate::engine::{Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Value = in-degree measured by counting received messages.
@@ -14,6 +14,7 @@ impl VertexProgram for DegreeCount {
     type Value = u64;
     type Message = u64;
     type Comb = SumCombiner;
+    type Agg = NoAgg;
 
     fn mode(&self) -> Mode {
         Mode::Push
@@ -21,6 +22,10 @@ impl VertexProgram for DegreeCount {
 
     fn combiner(&self) -> SumCombiner {
         SumCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
     }
 
     fn init(&self, _g: &Csr, _v: VertexId) -> u64 {
@@ -42,7 +47,7 @@ impl VertexProgram for DegreeCount {
 mod tests {
     use super::*;
     use crate::combine::Strategy;
-    use crate::engine::{run, EngineConfig};
+    use crate::engine::{EngineConfig, GraphSession, RunOptions};
     use crate::graph::gen;
     use crate::layout::Layout;
     use crate::sched::Schedule;
@@ -50,7 +55,7 @@ mod tests {
     #[test]
     fn counts_match_csr_degrees() {
         let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 77);
-        let got = run(&g, &DegreeCount, EngineConfig::default().threads(4));
+        let got = GraphSession::with_config(&g, EngineConfig::default().threads(4)).run(&DegreeCount);
         for v in g.vertices() {
             assert_eq!(got.values[v as usize], g.in_degree(v) as u64, "v{v}");
         }
@@ -62,6 +67,9 @@ mod tests {
         // paper's core claim of user-transparent optimisation.
         let g = gen::barabasi_albert(400, 4, 3);
         let want: Vec<u64> = g.vertices().map(|v| g.in_degree(v) as u64).collect();
+        // One session serves the whole matrix — the per-type store pool is
+        // hit from the second configuration on.
+        let session = GraphSession::new(&g);
         for strategy in [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
             for layout in [Layout::Interleaved, Layout::Externalised] {
                 for schedule in [
@@ -76,7 +84,7 @@ mod tests {
                             .layout(layout)
                             .schedule(schedule)
                             .bypass(bypass);
-                        let got = run(&g, &DegreeCount, cfg);
+                        let got = session.run_with(&DegreeCount, RunOptions::new().config(cfg));
                         assert_eq!(
                             got.values, want,
                             "{strategy:?}/{layout:?}/{schedule:?}/bypass={bypass}"

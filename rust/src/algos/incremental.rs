@@ -1,23 +1,31 @@
 //! Incremental connected components — the paper's §VIII future-work
 //! direction ("incrementalisation … could unlock a new level of
-//! performance", citing Zakian et al. IPDPS'19).
+//! performance", citing Zakian et al. IPDPS'19), built on the session
+//! API's **warm start**.
 //!
 //! After *edge insertions*, min-labels can only decrease, so the previous
 //! fixpoint is a valid warm start: seed every vertex with its old label
-//! and activate only the endpoints of the new edges. The wave then
-//! touches just the vertices whose component actually changed, instead of
-//! re-converging from scratch. (Deletions can *raise* labels and
-//! invalidate the warm start; [`IncrementalCc::supports`] rejects them.)
+//! ([`crate::engine::RunOptions::warm_start`]) and activate only the
+//! endpoints of the new edges. The wave then touches just the vertices
+//! whose component actually changed, instead of re-converging from
+//! scratch. (Deletions can *raise* labels and invalidate the warm start;
+//! [`IncrementalCc::supports`] rejects them.)
 
 use crate::combine::MinCombiner;
-use crate::engine::{run, Context, EngineConfig, Mode, RunResult, VertexProgram};
+use crate::engine::{
+    Context, EngineConfig, GraphSession, Mode, NoAgg, RunOptions, RunResult, VertexProgram,
+};
 use crate::graph::csr::{Csr, VertexId};
 use crate::graph::GraphBuilder;
 
 /// Warm-started min-label propagation.
+///
+/// This program **requires** [`RunOptions::warm_start`] with the
+/// previous fixpoint's labels: only the `touched` endpoints start
+/// active, so a cold start could never propagate labels to the rest of
+/// the graph. Running it without warm-start values panics immediately
+/// (in `init`) rather than silently returning non-fixpoint labels.
 pub struct IncrementalCc {
-    /// Converged labels of the pre-update graph.
-    pub prior: Vec<u32>,
     /// Endpoints of the inserted edges (the initially active set).
     pub touched: Vec<VertexId>,
 }
@@ -33,6 +41,7 @@ impl VertexProgram for IncrementalCc {
     type Value = u32;
     type Message = u32;
     type Comb = MinCombiner;
+    type Agg = NoAgg;
 
     fn mode(&self) -> Mode {
         Mode::Pull
@@ -42,8 +51,18 @@ impl VertexProgram for IncrementalCc {
         MinCombiner
     }
 
-    fn init(&self, _g: &Csr, v: VertexId) -> u32 {
-        self.prior[v as usize]
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
+    }
+
+    fn init(&self, _g: &Csr, _v: VertexId) -> u32 {
+        // `init` is only consulted when no warm start was supplied — and a
+        // cold IncrementalCc run would silently produce non-fixpoint
+        // labels (most vertices never activate). Fail fast instead.
+        panic!(
+            "IncrementalCc requires RunOptions::warm_start(prior labels); \
+             run ConnectedComponents for a cold computation"
+        );
     }
 
     fn initially_active(&self, _g: &Csr, v: VertexId) -> bool {
@@ -67,8 +86,9 @@ impl VertexProgram for IncrementalCc {
     }
 }
 
-/// Apply insert-only updates to `g` and incrementally repair `labels`.
-/// Returns the new graph, the repaired labels, and the run metrics.
+/// Apply insert-only updates to `g` and incrementally repair `labels` by
+/// warm-starting from the previous fixpoint. Returns the new graph and
+/// the repaired labels plus run metrics.
 pub fn insert_edges(
     g: &Csr,
     labels: &[u32],
@@ -87,11 +107,9 @@ pub fn insert_edges(
     }
     let g2 = gb.build();
     let touched: Vec<VertexId> = inserts.iter().flat_map(|&(s, d)| [s, d]).collect();
-    let prog = IncrementalCc {
-        prior: labels.to_vec(),
-        touched,
-    };
-    let result = run(&g2, &prog, cfg.bypass(true));
+    let prog = IncrementalCc { touched };
+    let session = GraphSession::with_config(&g2, cfg.bypass(true));
+    let result = session.run_with(&prog, RunOptions::new().warm_start(labels));
     (g2, result)
 }
 
@@ -99,19 +117,24 @@ pub fn insert_edges(
 mod tests {
     use super::*;
     use crate::algos::{reference, ConnectedComponents};
-    use crate::graph::gen;
     use crate::util::quick;
+    use crate::graph::gen;
+
+    fn cc_bypass(g: &Csr) -> RunResult<u32> {
+        GraphSession::with_config(g, EngineConfig::default().bypass(true))
+            .run(&ConnectedComponents)
+    }
 
     #[test]
     fn merging_two_rings_updates_only_the_higher_labelled_one() {
         let g = gen::disjoint_rings(2, 30); // components {0..30}, {30..60}
-        let base = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+        let base = cc_bypass(&g);
         let (g2, inc) = insert_edges(&g, &base.values, &[(5, 45)], EngineConfig::default());
         // All vertices now share label 0.
         assert!(inc.values.iter().all(|&l| l == 0));
         assert_eq!(inc.values, reference::connected_components(&g2));
         // The warm start touches far fewer vertices than a cold rerun.
-        let cold = run(&g2, &ConnectedComponents, EngineConfig::default().bypass(true));
+        let cold = cc_bypass(&g2);
         assert!(
             inc.metrics.total_activations() < cold.metrics.total_activations(),
             "incremental {} vs cold {}",
@@ -123,11 +146,18 @@ mod tests {
     #[test]
     fn insert_within_a_component_converges_immediately() {
         let g = gen::ring(50);
-        let base = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+        let base = cc_bypass(&g);
         let (g2, inc) = insert_edges(&g, &base.values, &[(3, 30)], EngineConfig::default());
         assert_eq!(inc.values, reference::connected_components(&g2));
         // Labels unchanged → the wave dies after the re-announcement.
         assert!(inc.metrics.num_supersteps() <= 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "warm_start")]
+    fn cold_run_without_warm_start_fails_fast() {
+        let g = gen::ring(8);
+        let _ = GraphSession::new(&g).run(&IncrementalCc { touched: vec![0] });
     }
 
     #[test]
@@ -147,7 +177,7 @@ mod tests {
                 .drop_self_loops(true)
                 .edges(&edges)
                 .build();
-            let base = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+            let base = cc_bypass(&g);
             let k = 1 + rng.below(5) as usize;
             let inserts: Vec<(VertexId, VertexId)> = (0..k)
                 .map(|_| {

@@ -6,7 +6,7 @@
 //! the k-core (the maximal subgraph with all degrees ≥ k).
 
 use crate::combine::SumCombiner;
-use crate::engine::{Context, Mode, VertexProgram};
+use crate::engine::{Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Per-vertex k-core state.
@@ -29,6 +29,7 @@ impl VertexProgram for KCore {
     type Value = CoreState;
     type Message = u64;
     type Comb = SumCombiner;
+    type Agg = NoAgg;
 
     fn mode(&self) -> Mode {
         Mode::Push
@@ -36,6 +37,10 @@ impl VertexProgram for KCore {
 
     fn combiner(&self) -> SumCombiner {
         SumCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
     }
 
     fn init(&self, g: &Csr, v: VertexId) -> CoreState {
@@ -89,36 +94,41 @@ pub fn kcore_reference(g: &Csr, k: u64) -> Vec<bool> {
 mod tests {
     use super::*;
     use crate::combine::Strategy;
-    use crate::engine::{run, EngineConfig};
+    use crate::engine::{EngineConfig, GraphSession, RunOptions};
     use crate::graph::gen;
 
     #[test]
     fn ring_is_a_2core_but_not_3core() {
         let g = gen::ring(20);
-        let r2 = run(&g, &KCore { k: 2 }, EngineConfig::default());
+        let session = GraphSession::new(&g);
+        let r2 = session.run(&KCore { k: 2 });
         assert!(r2.values.iter().all(|s| s.alive));
-        let r3 = run(&g, &KCore { k: 3 }, EngineConfig::default());
+        let r3 = session.run(&KCore { k: 3 });
         assert!(r3.values.iter().all(|s| !s.alive));
+        assert!(r3.metrics.store_reused, "second run must recycle the store");
     }
 
     #[test]
     fn star_collapses_entirely_at_k2() {
         // Leaves die (degree 1), then the hub follows.
         let g = gen::star(50);
-        let r = run(&g, &KCore { k: 2 }, EngineConfig::default().bypass(true));
+        let r = GraphSession::with_config(&g, EngineConfig::default().bypass(true))
+            .run(&KCore { k: 2 });
         assert!(r.values.iter().all(|s| !s.alive));
     }
 
     #[test]
     fn matches_reference_on_random_graphs_all_strategies() {
         let g = gen::barabasi_albert(500, 3, 6);
+        let session = GraphSession::new(&g);
         for k in [2u64, 3, 4, 5] {
             let want = kcore_reference(&g, k);
             for strategy in [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
-                let got = run(
-                    &g,
+                let got = session.run_with(
                     &KCore { k },
-                    EngineConfig::default().threads(4).strategy(strategy).bypass(true),
+                    RunOptions::new().config(
+                        EngineConfig::default().threads(4).strategy(strategy).bypass(true),
+                    ),
                 );
                 let got_alive: Vec<bool> = got.values.iter().map(|s| s.alive).collect();
                 assert_eq!(got_alive, want, "k={k} {strategy:?}");
@@ -130,7 +140,8 @@ mod tests {
     fn survivors_have_degree_at_least_k_within_core() {
         let g = gen::rmat(9, 6, 0.57, 0.19, 0.19, 8);
         let k = 4u64;
-        let r = run(&g, &KCore { k }, EngineConfig::default().bypass(true));
+        let r = GraphSession::with_config(&g, EngineConfig::default().bypass(true))
+            .run(&KCore { k });
         for v in g.vertices() {
             if r.values[v as usize].alive {
                 let core_deg = g

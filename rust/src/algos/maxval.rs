@@ -2,7 +2,7 @@
 //! here as an API exercise for push mode with a max-combiner.
 
 use crate::combine::MaxCombiner;
-use crate::engine::{Context, Mode, VertexProgram};
+use crate::engine::{Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Every vertex converges to the maximum initial value in its weakly
@@ -17,6 +17,7 @@ impl<F: Fn(VertexId) -> u64 + Send + Sync> VertexProgram for MaxValue<F> {
     type Value = u64;
     type Message = u64;
     type Comb = MaxCombiner;
+    type Agg = NoAgg;
 
     fn mode(&self) -> Mode {
         Mode::Push
@@ -24,6 +25,10 @@ impl<F: Fn(VertexId) -> u64 + Send + Sync> VertexProgram for MaxValue<F> {
 
     fn combiner(&self) -> MaxCombiner {
         MaxCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
     }
 
     fn init(&self, _g: &Csr, v: VertexId) -> u64 {
@@ -54,7 +59,7 @@ impl<F: Fn(VertexId) -> u64 + Send + Sync> VertexProgram for MaxValue<F> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{run, EngineConfig};
+    use crate::engine::{EngineConfig, GraphSession};
     use crate::graph::gen;
 
     #[test]
@@ -63,7 +68,8 @@ mod tests {
         let prog = MaxValue {
             seed: |v| (v as u64 * 37) % 101,
         };
-        let got = run(&g, &prog, EngineConfig::default().threads(3).bypass(true));
+        let got = GraphSession::with_config(&g, EngineConfig::default().threads(3).bypass(true))
+            .run(&prog);
         for comp in 0..3u32 {
             let ids = (comp * 7)..(comp * 7 + 7);
             let want = ids.clone().map(|v| (v as u64 * 37) % 101).max().unwrap();
@@ -77,7 +83,7 @@ mod tests {
     fn already_converged_halts_fast() {
         let g = gen::ring(10);
         let prog = MaxValue { seed: |_| 5 };
-        let got = run(&g, &prog, EngineConfig::default());
+        let got = GraphSession::new(&g).run(&prog);
         assert!(got.values.iter().all(|&v| v == 5));
         // Superstep 0 broadcasts, superstep 1 sees no growth, halt.
         assert!(got.metrics.num_supersteps() <= 3);

@@ -3,9 +3,12 @@
 //! These are the paper's three benchmarks — PageRank (pull
 //! single-broadcast), Connected Components (pull + selection bypass) and
 //! unweighted SSSP (push + combiner + selection bypass) — plus smaller
-//! programs exercising other corners of the API. Per the paper's
-//! programmability thesis, **no algorithm references any optimisation**:
-//! the same `compute` text runs under every engine configuration.
+//! programs exercising other corners of the API: weighted shortest paths
+//! ([`WeightedSssp`], via `Context::out_edge`), typed aggregators
+//! ([`DanglingPageRank`]), and warm-started incremental recomputation
+//! ([`IncrementalCc`]). Per the paper's programmability thesis, **no
+//! algorithm references any optimisation**: the same `compute` text runs
+//! under every engine configuration.
 
 pub mod bfs;
 pub mod cc;
@@ -26,4 +29,4 @@ pub use kcore::{CoreState, KCore};
 pub use maxval::MaxValue;
 pub use pagerank::PageRank;
 pub use pagerank_dangling::DanglingPageRank;
-pub use sssp::{Sssp, UNREACHED};
+pub use sssp::{Sssp, WeightedSssp, UNREACHED};

@@ -6,7 +6,7 @@
 //! iteration count (the paper uses 10) bounds the run.
 
 use crate::combine::SumCombiner;
-use crate::engine::{Context, Mode, VertexProgram};
+use crate::engine::{Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// PageRank program. Value = current rank.
@@ -32,6 +32,7 @@ impl VertexProgram for PageRank {
     type Value = f64;
     type Message = f64;
     type Comb = SumCombiner;
+    type Agg = NoAgg;
 
     fn mode(&self) -> Mode {
         Mode::Pull
@@ -39,6 +40,10 @@ impl VertexProgram for PageRank {
 
     fn combiner(&self) -> SumCombiner {
         SumCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
     }
 
     fn init(&self, g: &Csr, _v: VertexId) -> f64 {
@@ -70,14 +75,14 @@ impl VertexProgram for PageRank {
 mod tests {
     use super::*;
     use crate::algos::reference;
-    use crate::engine::{run, EngineConfig};
+    use crate::engine::{EngineConfig, GraphSession};
     use crate::graph::gen;
 
     #[test]
     fn matches_serial_reference_on_small_graph() {
         let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 5);
         let pr = PageRank::default();
-        let got = run(&g, &pr, EngineConfig::default().threads(3));
+        let got = GraphSession::with_config(&g, EngineConfig::default().threads(3)).run(&pr);
         let want = reference::pagerank(&g, pr.iterations, pr.damping);
         assert_eq!(got.metrics.num_supersteps(), pr.iterations + 1);
         for v in g.vertices() {
@@ -89,7 +94,7 @@ mod tests {
     #[test]
     fn rank_mass_bounded_by_one() {
         let g = gen::barabasi_albert(200, 2, 8);
-        let got = run(&g, &PageRank::default(), EngineConfig::default());
+        let got = GraphSession::new(&g).run(&PageRank::default());
         let total: f64 = got.values.iter().sum();
         assert!(total <= 1.0 + 1e-9, "total={total}");
         assert!(total > 0.1);
@@ -100,7 +105,7 @@ mod tests {
     fn hub_outranks_leaves_on_star() {
         // All leaves point at the hub and vice versa (undirected star).
         let g = gen::star(50);
-        let got = run(&g, &PageRank::default(), EngineConfig::default());
+        let got = GraphSession::new(&g).run(&PageRank::default());
         let hub = got.values[0];
         for v in 1..50 {
             assert!(hub > got.values[v], "hub {hub} vs leaf {}", got.values[v]);
@@ -110,14 +115,10 @@ mod tests {
     #[test]
     fn zero_iterations_keeps_uniform_ranks() {
         let g = gen::ring(10);
-        let got = run(
-            &g,
-            &PageRank {
-                iterations: 0,
-                damping: 0.85,
-            },
-            EngineConfig::default(),
-        );
+        let got = GraphSession::new(&g).run(&PageRank {
+            iterations: 0,
+            damping: 0.85,
+        });
         for &r in &got.values {
             assert!((r - 0.1).abs() < 1e-15);
         }

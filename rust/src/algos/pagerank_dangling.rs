@@ -1,15 +1,18 @@
-//! Mass-conserving PageRank via the global aggregator.
+//! Mass-conserving PageRank via the typed global aggregator.
 //!
 //! The Table II benchmark ([`crate::algos::PageRank`]) drops dangling
 //! (zero-out-degree) mass, as iPregel's benchmark version does. This
-//! variant redistributes it uniformly using the engine's Pregel-style
+//! variant redistributes it uniformly using a typed [`SumAgg<f64>`]
 //! aggregator: dangling vertices `contribute` their rank each superstep;
 //! everyone adds `aggregated() / n` the next. Ranks then sum to exactly 1
 //! — the invariant the tests pin down — and the program doubles as the
-//! aggregator subsystem's end-to-end exercise.
+//! aggregator subsystem's end-to-end exercise (including
+//! aggregator-convergence [`Halt`] policies, tested below).
+//!
+//! [`Halt`]: crate::engine::Halt
 
 use crate::combine::SumCombiner;
-use crate::engine::{Context, Mode, VertexProgram};
+use crate::engine::{Context, Mode, SumAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// PageRank with uniform dangling-mass redistribution.
@@ -34,6 +37,7 @@ impl VertexProgram for DanglingPageRank {
     type Value = f64;
     type Message = f64;
     type Comb = SumCombiner;
+    type Agg = SumAgg<f64>;
 
     fn mode(&self) -> Mode {
         Mode::Pull
@@ -43,15 +47,19 @@ impl VertexProgram for DanglingPageRank {
         SumCombiner
     }
 
+    fn aggregator(&self) -> SumAgg<f64> {
+        SumAgg::new()
+    }
+
     fn init(&self, g: &Csr, _v: VertexId) -> f64 {
         1.0 / g.num_vertices() as f64
     }
 
-    fn compute<C: Context<f64, f64>>(&self, ctx: &mut C, msg: Option<f64>) {
+    fn compute<C: Context<f64, f64, f64>>(&self, ctx: &mut C, msg: Option<f64>) {
         let n = ctx.num_vertices() as f64;
         if ctx.superstep() > 0 {
             let link_mass = msg.unwrap_or(0.0);
-            let dangling_mass = ctx.aggregated().unwrap_or(0.0);
+            let dangling_mass = ctx.aggregated().copied().unwrap_or(0.0);
             *ctx.value_mut() =
                 (1.0 - self.damping) / n + self.damping * (link_mass + dangling_mass / n);
         }
@@ -104,9 +112,10 @@ pub fn reference(g: &Csr, iterations: usize, d: f64) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{run, EngineConfig};
+    use crate::engine::{EngineConfig, GraphSession, Halt, RunOptions};
     use crate::graph::{gen, GraphBuilder};
     use crate::layout::Layout;
+    use crate::metrics::HaltReason;
     use crate::sched::Schedule;
     use crate::sim::SimEngine;
 
@@ -128,15 +137,45 @@ mod tests {
     #[test]
     fn mass_is_conserved_exactly() {
         let g = graph_with_dangling();
-        let r = run(&g, &DanglingPageRank::default(), EngineConfig::default().threads(3));
+        let r = GraphSession::with_config(&g, EngineConfig::default().threads(3))
+            .run(&DanglingPageRank::default());
         let total: f64 = r.values.iter().sum();
         assert!((total - 1.0).abs() < 1e-12, "total={total}");
     }
 
     #[test]
+    fn aggregator_convergence_halt_stops_early() {
+        // Long-running variant; the dangling mass stabilises quickly, so
+        // an aggregator-convergence predicate must cut the run well short
+        // of the 500-iteration program bound.
+        let g = graph_with_dangling();
+        let session = GraphSession::new(&g);
+        let p = DanglingPageRank {
+            iterations: 500,
+            damping: 0.85,
+        };
+        let r = session.run_with(
+            &p,
+            RunOptions::new().halt(Halt::converged(|prev: Option<&f64>, cur: Option<&f64>| {
+                matches!((prev, cur), (Some(a), Some(b)) if (a - b).abs() < 1e-14)
+            })),
+        );
+        assert_eq!(r.metrics.halt_reason, HaltReason::Converged);
+        assert!(
+            r.metrics.num_supersteps() < 500,
+            "converged at {} supersteps",
+            r.metrics.num_supersteps()
+        );
+        // The converged ranks still conserve mass.
+        let total: f64 = r.values.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "total={total}");
+    }
+
+    #[test]
     fn matches_serial_reference() {
         let g = graph_with_dangling();
-        let r = run(&g, &DanglingPageRank::default(), EngineConfig::default().threads(4));
+        let r = GraphSession::with_config(&g, EngineConfig::default().threads(4))
+            .run(&DanglingPageRank::default());
         let want = reference(&g, 10, 0.85);
         for v in g.vertices() {
             assert!(
@@ -152,6 +191,7 @@ mod tests {
     fn aggregator_works_under_every_configuration() {
         let g = gen::rmat(8, 3, 0.57, 0.19, 0.19, 19); // rmat has dangling vertices
         let want = reference(&g, 10, 0.85);
+        let session = GraphSession::new(&g);
         for layout in [Layout::Interleaved, Layout::Externalised] {
             for schedule in [Schedule::Static, Schedule::Dynamic { chunk: 32 }] {
                 for threads in [1, 4] {
@@ -159,7 +199,8 @@ mod tests {
                         .threads(threads)
                         .layout(layout)
                         .schedule(schedule);
-                    let r = run(&g, &DanglingPageRank::default(), cfg);
+                    let r = session
+                        .run_with(&DanglingPageRank::default(), RunOptions::new().config(cfg));
                     for v in g.vertices() {
                         assert!(
                             (r.values[v as usize] - want[v as usize]).abs() < 1e-12,
@@ -174,7 +215,7 @@ mod tests {
     #[test]
     fn sim_engine_supports_aggregators() {
         let g = graph_with_dangling();
-        let real = run(&g, &DanglingPageRank::default(), EngineConfig::default());
+        let real = GraphSession::new(&g).run(&DanglingPageRank::default());
         let sim = SimEngine::new(&g, &DanglingPageRank::default(), EngineConfig::default()).run();
         for v in g.vertices() {
             assert!((real.values[v as usize] - sim.values[v as usize]).abs() < 1e-12);
@@ -188,8 +229,9 @@ mod tests {
         // On a ring nobody contributes; aggregated() must stay None and
         // results equal the plain benchmark PageRank.
         let g = gen::ring(16);
-        let a = run(&g, &DanglingPageRank::default(), EngineConfig::default());
-        let b = run(&g, &crate::algos::PageRank::default(), EngineConfig::default());
+        let session = GraphSession::new(&g);
+        let a = session.run(&DanglingPageRank::default());
+        let b = session.run(&crate::algos::PageRank::default());
         for v in g.vertices() {
             assert!((a.values[v as usize] - b.values[v as usize]).abs() < 1e-15);
         }

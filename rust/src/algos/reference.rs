@@ -2,8 +2,9 @@
 //! configuration. Straight-line, obviously-correct code — no parallelism,
 //! no framework.
 
-use crate::graph::csr::{Csr, VertexId};
-use std::collections::VecDeque;
+use crate::graph::csr::{Csr, EdgeWeight, VertexId};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Serial PageRank with the same semantics as [`crate::algos::PageRank`]:
 /// `iterations` pull updates, damping `d`, dangling mass dropped.
@@ -78,6 +79,53 @@ pub fn bfs_levels(g: &Csr, root: VertexId) -> Vec<u64> {
     level
 }
 
+/// Total-order wrapper so `f64` distances can sit in a [`BinaryHeap`].
+#[derive(Clone, Copy, PartialEq)]
+struct TotalF64(f64);
+
+impl Eq for TotalF64 {}
+
+impl PartialOrd for TotalF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TotalF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Serial Dijkstra over out-edges with non-negative weights (unit weights
+/// on unweighted graphs); `f64::INFINITY` = unreached. The ground truth
+/// for [`crate::algos::WeightedSssp`].
+pub fn dijkstra(g: &Csr, source: VertexId) -> Vec<EdgeWeight> {
+    let n = g.num_vertices();
+    let mut dist = vec![f64::INFINITY; n];
+    if n == 0 {
+        return dist;
+    }
+    let mut heap: BinaryHeap<Reverse<(TotalF64, VertexId)>> = BinaryHeap::new();
+    dist[source as usize] = 0.0;
+    heap.push(Reverse((TotalF64(0.0), source)));
+    while let Some(Reverse((TotalF64(d), v))) = heap.pop() {
+        if d > dist[v as usize] {
+            continue; // stale entry
+        }
+        for i in 0..g.out_degree(v) {
+            let (u, w) = g.out_edge(v, i);
+            debug_assert!(w >= 0.0, "dijkstra requires non-negative weights");
+            let nd = d + w;
+            if nd < dist[u as usize] {
+                dist[u as usize] = nd;
+                heap.push(Reverse((TotalF64(nd), u)));
+            }
+        }
+    }
+    dist
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +146,31 @@ mod tests {
         uniq.sort_unstable();
         uniq.dedup();
         assert_eq!(uniq, vec![0, 4, 8, 12, 16]);
+    }
+
+    #[test]
+    fn dijkstra_on_unweighted_equals_bfs() {
+        let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 6);
+        let root = g.max_out_degree_vertex();
+        let bfs = bfs_levels(&g, root);
+        let dij = dijkstra(&g, root);
+        for v in g.vertices() {
+            let b = bfs[v as usize];
+            let d = dij[v as usize];
+            if b == u64::MAX {
+                assert!(d.is_infinite());
+            } else {
+                assert!((d - b as f64).abs() < 1e-12, "v{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dijkstra_takes_the_cheap_path() {
+        let g = crate::graph::GraphBuilder::new(4)
+            .weighted_edges(&[(0, 3, 9.0), (0, 1, 2.0), (1, 2, 2.0), (2, 3, 2.0)])
+            .build();
+        assert_eq!(dijkstra(&g, 0), vec![0.0, 2.0, 4.0, 6.0]);
     }
 
     #[test]

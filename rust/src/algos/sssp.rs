@@ -1,12 +1,20 @@
-//! Single-Source Shortest Path — the paper's SSSP benchmark.
+//! Single-Source Shortest Path — the paper's SSSP benchmark, plus the
+//! weighted generalisation the v2 API unlocks.
 //!
-//! Unweighted (every edge costs 1), push-based: distance improvements are
-//! *sent* to out-neighbours and merged by a min-combiner in the recipient
-//! mailbox. This is the benchmark where the hybrid combiner (§III)
-//! applies — PR and CC use the lock-free pull version instead.
+//! [`Sssp`] is the paper's version: unweighted (every edge costs 1),
+//! push-based, distance improvements *sent* to out-neighbours and merged
+//! by a min-combiner in the recipient mailbox. This is the benchmark
+//! where the hybrid combiner (§III) applies — PR and CC use the
+//! lock-free pull version instead.
+//!
+//! [`WeightedSssp`] runs the same wavefront with real edge weights via
+//! [`Context::out_edge`] (Bellman-Ford-style label correcting under the
+//! Pregel model). On an unweighted graph every weight reads as `1.0`, so
+//! it degenerates to BFS distances; results are validated against a
+//! serial Dijkstra reference.
 
 use crate::combine::MinCombiner;
-use crate::engine::{Context, Mode, VertexProgram};
+use crate::engine::{Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Distance value for unreached vertices.
@@ -33,6 +41,7 @@ impl VertexProgram for Sssp {
     type Value = u64;
     type Message = u64;
     type Comb = MinCombiner;
+    type Agg = NoAgg;
 
     fn mode(&self) -> Mode {
         Mode::Push
@@ -40,6 +49,10 @@ impl VertexProgram for Sssp {
 
     fn combiner(&self) -> MinCombiner {
         MinCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
     }
 
     fn init(&self, _g: &Csr, v: VertexId) -> u64 {
@@ -75,18 +88,109 @@ impl VertexProgram for Sssp {
     }
 }
 
+/// Weighted SSSP. Value = current best distance (`f64::INFINITY` =
+/// unreached). Requires non-negative edge weights — a negative weight
+/// panics during run initialisation (label-correcting propagation would
+/// oscillate or return wrong distances, and the serial Dijkstra
+/// reference is invalid there).
+#[derive(Clone, Copy, Debug)]
+pub struct WeightedSssp {
+    /// Source vertex.
+    pub source: VertexId,
+}
+
+impl WeightedSssp {
+    /// Weighted SSSP from the graph's maximum-degree hub.
+    pub fn from_hub(g: &Csr) -> Self {
+        WeightedSssp {
+            source: g.max_out_degree_vertex(),
+        }
+    }
+}
+
+impl VertexProgram for WeightedSssp {
+    type Value = f64;
+    type Message = f64;
+    type Comb = MinCombiner;
+    type Agg = NoAgg;
+
+    fn mode(&self) -> Mode {
+        Mode::Push
+    }
+
+    fn combiner(&self) -> MinCombiner {
+        MinCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
+    }
+
+    fn init(&self, g: &Csr, v: VertexId) -> f64 {
+        // Release-mode guard, paid once per run (init visits each vertex
+        // exactly once, so this totals one O(E) sweep): IO/builder only
+        // reject non-finite weights, and label-correcting relaxation
+        // returns wrong distances on negative ones.
+        if let Some(ws) = g.out_weights_of(v) {
+            if let Some(w) = ws.iter().find(|w| **w < 0.0) {
+                panic!(
+                    "WeightedSssp requires non-negative edge weights; \
+                     vertex {v} has an out-edge of weight {w}"
+                );
+            }
+        }
+        if v == self.source {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn initially_active(&self, _g: &Csr, v: VertexId) -> bool {
+        v == self.source
+    }
+
+    fn compute<C: Context<f64, f64>>(&self, ctx: &mut C, msg: Option<f64>) {
+        let improved = if ctx.superstep() == 0 && ctx.id() == self.source {
+            true
+        } else if let Some(m) = msg {
+            if m < *ctx.value() {
+                *ctx.value_mut() = m;
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        if improved {
+            // Per-edge relaxation: each neighbour gets dist + its own edge
+            // weight, so this cannot use broadcast() — this loop is what
+            // Context::out_edge exists for.
+            let dist = *ctx.value();
+            for i in 0..ctx.out_degree() {
+                let (dst, w) = ctx.out_edge(i);
+                debug_assert!(w >= 0.0, "negative weight reached relaxation");
+                ctx.send(dst, dist + w);
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::algos::reference;
     use crate::combine::Strategy;
-    use crate::engine::{run, EngineConfig};
+    use crate::engine::{EngineConfig, GraphSession};
     use crate::graph::gen;
 
     #[test]
     fn path_graph_distances_are_positions() {
         let g = gen::path(10);
-        let got = run(&g, &Sssp { source: 0 }, EngineConfig::default().bypass(true));
+        let session = GraphSession::with_config(&g, EngineConfig::default().bypass(true));
+        let got = session.run(&Sssp { source: 0 });
         for v in 0..10 {
             assert_eq!(got.values[v], v as u64);
         }
@@ -97,14 +201,16 @@ mod tests {
         let g = gen::rmat(9, 4, 0.57, 0.19, 0.19, 17);
         let p = Sssp::from_hub(&g);
         let want = reference::bfs_levels(&g, p.source);
+        let session = GraphSession::new(&g);
         for strategy in [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
-            let got = run(
-                &g,
+            let got = session.run_with(
                 &p,
-                EngineConfig::default()
-                    .threads(4)
-                    .strategy(strategy)
-                    .bypass(true),
+                crate::engine::RunOptions::new().config(
+                    EngineConfig::default()
+                        .threads(4)
+                        .strategy(strategy)
+                        .bypass(true),
+                ),
             );
             assert_eq!(got.values, want, "{strategy:?}");
         }
@@ -113,7 +219,7 @@ mod tests {
     #[test]
     fn unreachable_vertices_stay_unreached() {
         let g = gen::disjoint_rings(2, 4); // two components
-        let got = run(&g, &Sssp { source: 0 }, EngineConfig::default());
+        let got = GraphSession::new(&g).run(&Sssp { source: 0 });
         for v in 0..4 {
             assert!(got.values[v] < UNREACHED);
         }
@@ -125,7 +231,8 @@ mod tests {
     #[test]
     fn frontier_sizes_trace_bfs_waves() {
         let g = gen::path(50);
-        let got = run(&g, &Sssp { source: 0 }, EngineConfig::default().bypass(true));
+        let session = GraphSession::with_config(&g, EngineConfig::default().bypass(true));
+        let got = session.run(&Sssp { source: 0 });
         // Path: each wave advances one hop; the frontier holds the new
         // vertex plus the (non-improving) echo back to its predecessor.
         for s in &got.metrics.supersteps {
@@ -137,5 +244,70 @@ mod tests {
             "{}",
             got.metrics.num_supersteps()
         );
+    }
+
+    #[test]
+    fn weighted_matches_dijkstra_on_random_weighted_graphs() {
+        for seed in [1u64, 5, 9] {
+            let base = gen::rmat(8, 4, 0.57, 0.19, 0.19, seed);
+            let g = gen::randomly_weighted(&base, 0.25, 8.0, seed ^ 0xABCD);
+            let p = WeightedSssp::from_hub(&g);
+            let want = reference::dijkstra(&g, p.source);
+            let session = GraphSession::new(&g);
+            for strategy in [Strategy::Lock, Strategy::Hybrid] {
+                let got = session.run_with(
+                    &p,
+                    crate::engine::RunOptions::new().config(
+                        EngineConfig::default()
+                            .threads(4)
+                            .strategy(strategy)
+                            .bypass(true),
+                    ),
+                );
+                for v in g.vertices() {
+                    let (a, b) = (got.values[v as usize], want[v as usize]);
+                    assert!(
+                        (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-9,
+                        "seed {seed} v{v}: {a} vs {b} under {strategy:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_on_unweighted_graph_equals_bfs() {
+        let g = gen::rmat(8, 3, 0.57, 0.19, 0.19, 23);
+        let p = WeightedSssp::from_hub(&g);
+        let want = reference::bfs_levels(&g, p.source);
+        let got = GraphSession::new(&g).run(&p);
+        for v in g.vertices() {
+            let b = want[v as usize];
+            let a = got.values[v as usize];
+            if b == u64::MAX {
+                assert!(a.is_infinite(), "v{v}");
+            } else {
+                assert!((a - b as f64).abs() < 1e-12, "v{v}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn weighted_rejects_negative_weights_up_front() {
+        let g = crate::graph::GraphBuilder::new(2)
+            .weighted_edges(&[(0, 1, -1.0)])
+            .build();
+        let _ = GraphSession::new(&g).run(&WeightedSssp { source: 0 });
+    }
+
+    #[test]
+    fn weighted_prefers_cheap_detour_over_direct_hop() {
+        // 0 -> 2 costs 10 directly, but 0 -> 1 -> 2 costs 3.
+        let g = crate::graph::GraphBuilder::new(3)
+            .weighted_edges(&[(0, 2, 10.0), (0, 1, 1.0), (1, 2, 2.0)])
+            .build();
+        let got = GraphSession::new(&g).run(&WeightedSssp { source: 0 });
+        assert_eq!(got.values, vec![0.0, 1.0, 3.0]);
     }
 }

@@ -4,7 +4,8 @@
 //! `--flag` options, with typed accessors that produce helpful errors.
 //! Shared by the `ipregel` binary and the examples.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{bail, err};
 use std::collections::BTreeMap;
 
 /// Parsed command-line options.
@@ -69,7 +70,7 @@ impl Opts {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow!("--{key}: cannot parse '{v}'")),
+                .map_err(|_| err!("--{key}: cannot parse '{v}'")),
         }
     }
 

@@ -1,0 +1,234 @@
+//! Typed global aggregators (Pregel aggregators, generalised).
+//!
+//! The seed API hardcoded one `f64` sum per program; this module replaces
+//! it with a typed [`Aggregator`] trait: a program declares its aggregator
+//! *type* (`VertexProgram::Agg`), vertices [`contribute`] values of the
+//! aggregator's `Value` type, the engine merges per-worker partials with
+//! [`Aggregator::combine`] at the superstep barrier, and every vertex
+//! reads the merged value next superstep via [`aggregated`].
+//!
+//! Multiple named aggregators compose structurally: pair two aggregators
+//! with [`AggPair`] (values travel as a tuple), or define a struct-valued
+//! aggregator with [`FnAgg`] whose fields *are* the names. Programs that
+//! aggregate nothing use [`NoAgg`] (value `()`, zero cost).
+//!
+//! [`contribute`]: crate::engine::Context::contribute
+//! [`aggregated`]: crate::engine::Context::aggregated
+
+use std::marker::PhantomData;
+
+/// A commutative, associative merge over values of one type, with a
+/// neutral element. The engine keeps one padded partial per worker and
+/// merges them single-threaded at the barrier, so `combine` needs no
+/// interior synchronisation.
+pub trait Aggregator: Send + Sync {
+    /// The aggregated value type.
+    type Value: Clone + Send + Sync + 'static;
+
+    /// Element such that `combine(neutral(), x) == x`.
+    fn neutral(&self) -> Self::Value;
+
+    /// Commutative, associative merge of two partials.
+    fn combine(&self, a: Self::Value, b: Self::Value) -> Self::Value;
+}
+
+/// The no-op aggregator for programs that aggregate nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoAgg;
+
+impl Aggregator for NoAgg {
+    type Value = ();
+
+    fn neutral(&self) {}
+
+    fn combine(&self, _a: (), _b: ()) {}
+}
+
+/// Sum aggregator over a numeric type.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SumAgg<T>(PhantomData<T>);
+
+/// Minimum aggregator over a numeric type.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MinAgg<T>(PhantomData<T>);
+
+/// Maximum aggregator over a numeric type.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaxAgg<T>(PhantomData<T>);
+
+impl<T> SumAgg<T> {
+    /// The sum aggregator.
+    pub const fn new() -> Self {
+        SumAgg(PhantomData)
+    }
+}
+
+impl<T> MinAgg<T> {
+    /// The minimum aggregator.
+    pub const fn new() -> Self {
+        MinAgg(PhantomData)
+    }
+}
+
+impl<T> MaxAgg<T> {
+    /// The maximum aggregator.
+    pub const fn new() -> Self {
+        MaxAgg(PhantomData)
+    }
+}
+
+macro_rules! impl_numeric_aggs {
+    ($($t:ty => $zero:expr, $min:expr, $max:expr);* $(;)?) => {$(
+        impl Aggregator for SumAgg<$t> {
+            type Value = $t;
+            fn neutral(&self) -> $t {
+                $zero
+            }
+            #[inline]
+            fn combine(&self, a: $t, b: $t) -> $t {
+                a + b
+            }
+        }
+        impl Aggregator for MinAgg<$t> {
+            type Value = $t;
+            fn neutral(&self) -> $t {
+                $max
+            }
+            #[inline]
+            fn combine(&self, a: $t, b: $t) -> $t {
+                if b < a { b } else { a }
+            }
+        }
+        impl Aggregator for MaxAgg<$t> {
+            type Value = $t;
+            fn neutral(&self) -> $t {
+                $min
+            }
+            #[inline]
+            fn combine(&self, a: $t, b: $t) -> $t {
+                if b > a { b } else { a }
+            }
+        }
+    )*};
+}
+
+impl_numeric_aggs! {
+    f64 => 0.0, f64::NEG_INFINITY, f64::INFINITY;
+    f32 => 0.0, f32::NEG_INFINITY, f32::INFINITY;
+    u64 => 0, u64::MIN, u64::MAX;
+    u32 => 0, u32::MIN, u32::MAX;
+    i64 => 0, i64::MIN, i64::MAX;
+    i32 => 0, i32::MIN, i32::MAX;
+    usize => 0, usize::MIN, usize::MAX;
+}
+
+/// Two aggregators running side by side; the value is the tuple of both.
+/// Nest pairs for three or more, or use [`FnAgg`] with a struct value.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AggPair<A, B> {
+    /// First component.
+    pub a: A,
+    /// Second component.
+    pub b: B,
+}
+
+impl<A, B> AggPair<A, B> {
+    /// Pair two aggregators.
+    pub const fn new(a: A, b: B) -> Self {
+        AggPair { a, b }
+    }
+}
+
+impl<A: Aggregator, B: Aggregator> Aggregator for AggPair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn neutral(&self) -> Self::Value {
+        (self.a.neutral(), self.b.neutral())
+    }
+
+    #[inline]
+    fn combine(&self, x: Self::Value, y: Self::Value) -> Self::Value {
+        (self.a.combine(x.0, y.0), self.b.combine(x.1, y.1))
+    }
+}
+
+/// An aggregator defined by a neutral value and a combine closure — the
+/// quickest way to aggregate a custom (e.g. named-struct) value type.
+pub struct FnAgg<V, F: Fn(V, V) -> V + Send + Sync> {
+    neutral: V,
+    f: F,
+}
+
+impl<V: Clone + Send + Sync + 'static, F: Fn(V, V) -> V + Send + Sync> FnAgg<V, F> {
+    /// Aggregator from a neutral element and a merge closure.
+    pub fn new(neutral: V, f: F) -> Self {
+        FnAgg { neutral, f }
+    }
+}
+
+impl<V: Clone + Send + Sync + 'static, F: Fn(V, V) -> V + Send + Sync> Aggregator for FnAgg<V, F> {
+    type Value = V;
+
+    fn neutral(&self) -> V {
+        self.neutral.clone()
+    }
+
+    #[inline]
+    fn combine(&self, a: V, b: V) -> V {
+        (self.f)(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_aggregators_fold_correctly() {
+        let sum = SumAgg::<f64>::new();
+        assert_eq!(sum.combine(sum.neutral(), 2.5), 2.5);
+        assert_eq!(sum.combine(1.0, 2.0), 3.0);
+        let min = MinAgg::<u64>::new();
+        assert_eq!(min.combine(min.neutral(), 9), 9);
+        assert_eq!(min.combine(4, 9), 4);
+        let max = MaxAgg::<i32>::new();
+        assert_eq!(max.combine(max.neutral(), -3), -3);
+        assert_eq!(max.combine(-3, 7), 7);
+    }
+
+    #[test]
+    fn pair_aggregates_componentwise() {
+        // Two *named* aggregators: total mass (sum) and slowest vertex (max).
+        let agg = AggPair::new(SumAgg::<f64>::new(), MaxAgg::<u64>::new());
+        let n = agg.neutral();
+        let merged = agg.combine(agg.combine(n, (0.5, 3)), (0.25, 11));
+        assert_eq!(merged, (0.75, 11));
+    }
+
+    #[test]
+    fn fn_agg_wraps_custom_values() {
+        #[derive(Clone, Debug, PartialEq)]
+        struct Stats {
+            count: u64,
+            total: f64,
+        }
+        let agg = FnAgg::new(
+            Stats { count: 0, total: 0.0 },
+            |a: Stats, b: Stats| Stats {
+                count: a.count + b.count,
+                total: a.total + b.total,
+            },
+        );
+        let m = agg.combine(
+            Stats { count: 1, total: 2.0 },
+            Stats { count: 2, total: 0.5 },
+        );
+        assert_eq!(m, Stats { count: 3, total: 2.5 });
+    }
+
+    #[test]
+    fn no_agg_is_inert() {
+        let a = NoAgg;
+        a.combine(a.neutral(), ());
+    }
+}

@@ -4,17 +4,37 @@
 //! representations; the mode/bypass branches sit at superstep granularity,
 //! outside the per-vertex hot loop, and the store type is monomorphised so
 //! layout differences compile down to pointer arithmetic.
+//!
+//! Engines are constructed by [`crate::engine::GraphSession`] from pooled
+//! parts (a primed [`VertexStore`], recycled activity bitsets, shared
+//! edge-centric scan weights) and hand those parts back after the run so
+//! the next run skips the allocations.
 
 use crate::combine::{Combiner, Strategy};
-use crate::engine::{Context, EngineConfig, Mode, RunResult, VertexProgram};
-use crate::graph::csr::{Csr, VertexId};
+use crate::engine::session::Halt;
+use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, RunResult, VertexProgram};
+use crate::graph::csr::{Csr, EdgeWeight, VertexId};
 use crate::layout::{SyncCell, VertexStore};
-use crate::metrics::{RunMetrics, SuperstepStats};
+use crate::metrics::{HaltReason, RunMetrics, SuperstepStats};
 use crate::sched::{parallel_for, Schedule};
 use crate::util::bitset::AtomicBitSet;
 use crate::util::timer::Timer;
-use crossbeam_utils::CachePadded;
+use crate::util::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Reusable allocations a [`crate::engine::GraphSession`] threads through
+/// consecutive runs.
+pub(crate) struct EngineSetup<S> {
+    /// Value-initialised store (fresh-built or pool-recycled and reset).
+    pub store: S,
+    /// Whether `store` came out of the session pool.
+    pub store_reused: bool,
+    /// Up to three recycled, cleared, `n`-bit activity bitsets.
+    pub bitsets: Vec<AtomicBitSet>,
+    /// Degree weights for edge-centric full scans, shared session-wide.
+    pub scan_weights: Option<Arc<Vec<u64>>>,
+}
 
 /// The engine: graph + program + store + activity tracking.
 pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
@@ -22,8 +42,11 @@ pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     program: &'g P,
     store: S,
     cfg: EngineConfig,
+    halt: Halt<AggValue<P>>,
     comb: P::Comb,
+    agg: P::Agg,
     mode: Mode,
+    store_reused: bool,
     /// Vertices active in the *next* superstep (set during compute).
     active_next: AtomicBitSet,
     /// Pull mode: vertices that broadcast *this* superstep (their outbox
@@ -31,11 +54,11 @@ pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     bcast_next: AtomicBitSet,
     /// Pull mode: vertices whose outbox holds last superstep's broadcast.
     bcast_cur: AtomicBitSet,
-    /// Degree weights for edge-centric scans (computed once, out- or
-    /// in-degrees depending on mode).
-    scan_weights: Option<Vec<u64>>,
+    /// Degree weights for edge-centric scans (out- or in-degrees depending
+    /// on mode; computed once per session and shared across runs).
+    scan_weights: Option<Arc<Vec<u64>>>,
     /// Merged aggregator value from the previous superstep.
-    agg_prev: Option<f64>,
+    agg_prev: Option<AggValue<P>>,
 }
 
 /// Per-vertex context implementation. Holds only shared references plus
@@ -43,22 +66,22 @@ pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
 struct Ctx<'a, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     g: &'a Csr,
     store: &'a S,
-    program: &'a P,
     comb: &'a P::Comb,
+    agg: &'a P::Agg,
     strategy: Strategy,
     mode: Mode,
     active_next: &'a AtomicBitSet,
     bcast_next: &'a AtomicBitSet,
     msg_counter: &'a AtomicU64,
     /// This worker's aggregator partial: (accumulated, contributed?).
-    agg_cell: &'a SyncCell<(f64, bool)>,
-    agg_prev: Option<f64>,
+    agg_cell: &'a SyncCell<(AggValue<P>, bool)>,
+    agg_prev: Option<&'a AggValue<P>>,
     superstep: usize,
     v: VertexId,
     halted: bool,
 }
 
-impl<'a, P, S> Context<P::Value, P::Message> for Ctx<'a, P, S>
+impl<'a, P, S> Context<P::Value, P::Message, AggValue<P>> for Ctx<'a, P, S>
 where
     P: VertexProgram,
     S: VertexStore<P::Value, P::Message>,
@@ -96,6 +119,11 @@ where
     #[inline]
     fn in_degree(&self) -> usize {
         self.g.in_degree(self.v)
+    }
+
+    #[inline]
+    fn out_edge(&self, i: usize) -> (VertexId, EdgeWeight) {
+        self.g.out_edge(self.v, i)
     }
 
     #[inline]
@@ -144,20 +172,16 @@ where
     }
 
     #[inline]
-    fn contribute(&mut self, x: f64) {
+    fn contribute(&mut self, x: AggValue<P>) {
         // Per-thread cell: no synchronisation needed (engine hands each
         // worker its own padded cell); merged at the barrier.
-        let (acc, used) = *self.agg_cell.get();
-        let merged = if used {
-            self.program.agg_combine(acc, x)
-        } else {
-            x
-        };
+        let (acc, used) = self.agg_cell.get().clone();
+        let merged = if used { self.agg.combine(acc, x) } else { x };
         *self.agg_cell.get_mut() = (merged, true);
     }
 
     #[inline]
-    fn aggregated(&self) -> Option<f64> {
+    fn aggregated(&self) -> Option<&AggValue<P>> {
         self.agg_prev
     }
 }
@@ -167,13 +191,25 @@ where
     P: VertexProgram,
     S: VertexStore<P::Value, P::Message>,
 {
-    /// Build an engine: initialise values, activity and (for CAS-neutral
-    /// runs) pre-load every slot with the neutral element.
-    pub fn new(g: &'g Csr, program: &'g P, cfg: EngineConfig) -> Self {
+    /// Assemble an engine from session-prepared parts. `setup.store` must
+    /// already hold initial values; activity and (for CAS-neutral runs)
+    /// slot pre-loading happen here.
+    pub(crate) fn with_setup(
+        g: &'g Csr,
+        program: &'g P,
+        cfg: EngineConfig,
+        halt: Halt<AggValue<P>>,
+        setup: EngineSetup<S>,
+    ) -> Self {
+        let EngineSetup {
+            store,
+            store_reused,
+            mut bitsets,
+            scan_weights,
+        } = setup;
         let comb = program.combiner();
+        let agg = program.aggregator();
         let mode = program.mode();
-        let mut init = |v: VertexId| program.init(g, v);
-        let mut store = S::build(g, &mut init);
         let n = g.num_vertices();
 
         if mode == Mode::Push && cfg.strategy == Strategy::CasNeutral {
@@ -182,40 +218,41 @@ where
                 cfg.strategy.reset_slot(store.next_slot(v), &comb);
             }
         }
-        // Make `cur` the epoch compute reads in superstep 0 (empty) —
-        // store starts unflipped, which is already correct.
-        let _ = &mut store;
 
-        let active_next = AtomicBitSet::new(n);
+        let mut next_bitset = || bitsets.pop().unwrap_or_else(|| AtomicBitSet::new(n));
+        let active_next = next_bitset();
+        let bcast_next = next_bitset();
+        let bcast_cur = next_bitset();
         for v in g.vertices() {
             if program.initially_active(g, v) {
                 active_next.set(v as usize);
             }
         }
 
-        let scan_weights = if cfg.schedule.needs_weights() && !cfg.bypass {
-            // Scan engines split the full vertex range by degree once.
-            Some(match mode {
-                Mode::Push => g.out_degrees_u64(),
-                Mode::Pull => g.in_degrees_u64(),
-            })
-        } else {
-            None
-        };
-
         Engine {
             g,
             program,
             store,
             cfg,
+            halt,
             comb,
+            agg,
             mode,
+            store_reused,
             active_next,
-            bcast_next: AtomicBitSet::new(n),
-            bcast_cur: AtomicBitSet::new(n),
+            bcast_next,
+            bcast_cur,
             scan_weights,
             agg_prev: None,
         }
+    }
+
+    /// Disassemble after a run so the session can pool the parts.
+    pub(crate) fn into_parts(self) -> (S, Vec<AtomicBitSet>) {
+        (
+            self.store,
+            vec![self.active_next, self.bcast_next, self.bcast_cur],
+        )
     }
 
     /// Combined incoming message for `v` at superstep start.
@@ -267,21 +304,28 @@ where
         }
     }
 
-    /// Run to quiescence (or the superstep cap). Returns final values and
-    /// metrics.
-    pub fn run(mut self) -> RunResult<P::Value> {
+    /// Run to quiescence, the superstep cap, or per-run [`Halt`]
+    /// convergence. Returns final values and metrics.
+    pub fn run(&mut self) -> RunResult<P::Value> {
         let total = Timer::start();
         let n = self.g.num_vertices();
         let threads = self.cfg.threads.max(1);
-        let mut metrics = RunMetrics::default();
+        let mut metrics = RunMetrics {
+            store_reused: self.store_reused,
+            ..RunMetrics::default()
+        };
+        let max_supersteps = self
+            .halt
+            .max_supersteps
+            .map_or(self.cfg.max_supersteps, |h| h.min(self.cfg.max_supersteps));
 
         // Per-thread padded message counters (hot-path friendly).
         let counters: Vec<CachePadded<AtomicU64>> =
             (0..threads).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
         let pull_comb_counter = AtomicU64::new(0);
-        let neutral = self.program.agg_neutral();
-        let agg_cells: Vec<CachePadded<SyncCell<(f64, bool)>>> = (0..threads)
-            .map(|_| CachePadded::new(SyncCell::new((neutral, false))))
+        let neutral = self.agg.neutral();
+        let agg_cells: Vec<CachePadded<SyncCell<(AggValue<P>, bool)>>> = (0..threads)
+            .map(|_| CachePadded::new(SyncCell::new((neutral.clone(), false))))
             .collect();
 
         let mut superstep = 0usize;
@@ -307,7 +351,12 @@ where
                 (_, Some(b)) => b.count(),
                 _ => unreachable!(),
             };
-            if active_count == 0 || superstep >= self.cfg.max_supersteps {
+            if active_count == 0 {
+                metrics.halt_reason = HaltReason::Quiescence;
+                break;
+            }
+            if superstep >= max_supersteps {
+                metrics.halt_reason = HaltReason::SuperstepCap;
                 break;
             }
             self.active_next.clear_all();
@@ -336,14 +385,14 @@ where
                 };
 
                 let agg_cells = &agg_cells;
-                let agg_prev_now = self.agg_prev;
+                let agg_prev_now = self.agg_prev.as_ref();
                 let run_vertex = |tid: usize, v: VertexId| {
                     let msg = engine.collect_msg(v, pull_comb_counter);
                     let mut ctx: Ctx<'_, P, S> = Ctx {
                         g: engine.g,
                         store: &engine.store,
-                        program: engine.program,
                         comb: &engine.comb,
+                        agg: &engine.agg,
                         strategy: engine.cfg.strategy,
                         mode: engine.mode,
                         active_next: &engine.active_next,
@@ -383,7 +432,7 @@ where
                             threads,
                             n,
                             self.cfg.schedule,
-                            self.scan_weights.as_deref(),
+                            self.scan_weights.as_ref().map(|w| w.as_slice()),
                             |tid, range| {
                                 for i in range {
                                     if bits.get(i) {
@@ -412,17 +461,28 @@ where
             self.store.swap_epochs();
             // Merge this superstep's aggregator partials (workers are
             // joined, so the plain reads are race-free).
-            let mut merged: Option<f64> = None;
+            let mut merged: Option<AggValue<P>> = None;
             for cell in &agg_cells {
-                let (acc, used) = *cell.get();
+                let (acc, used) = cell.get().clone();
                 if used {
                     merged = Some(match merged {
                         None => acc,
-                        Some(m) => self.program.agg_combine(m, acc),
+                        Some(m) => self.agg.combine(m, acc),
                     });
                 }
-                *cell.get_mut() = (neutral, false);
+                *cell.get_mut() = (neutral.clone(), false);
             }
+            // The predicate only ever sees supersteps where the aggregator
+            // stream is live: while nothing has contributed yet both values
+            // are None, and a predicate like |a, b| a == b would otherwise
+            // halt superstep 1 of every run that aggregates late (or not
+            // at all).
+            let converged = match &self.halt.converged {
+                Some(pred) if self.agg_prev.is_some() || merged.is_some() => {
+                    pred(self.agg_prev.as_ref(), merged.as_ref())
+                }
+                _ => false,
+            };
             self.agg_prev = merged;
             let barrier_time = t_barrier.elapsed();
 
@@ -439,6 +499,10 @@ where
                 barrier_time,
             });
             superstep += 1;
+            if converged {
+                metrics.halt_reason = HaltReason::Converged;
+                break;
+            }
         }
 
         metrics.total_time = total.elapsed();

@@ -1,8 +1,11 @@
 //! The vertex-centric execution engine.
 //!
 //! Users write a [`VertexProgram`] — the classic Pregel single
-//! user-defined function — and the engine runs it superstep by superstep
-//! under a chosen combination of the paper's optimisations:
+//! user-defined function — and run it through a [`GraphSession`]: load or
+//! build a [`Csr`] once, then execute many programs against it
+//! back-to-back (or concurrently) with amortised allocations. Each run
+//! executes superstep by superstep under a chosen combination of the
+//! paper's optimisations:
 //!
 //! - **communication mode** ([`Mode`]): `Push` (messages delivered into
 //!   recipient mailboxes through a [`Strategy`]) or `Pull` (iPregel's
@@ -16,14 +19,26 @@
 //!
 //! None of these switches appear in user code — the same program text runs
 //! under every configuration, which is the paper's programmability thesis.
+//! The v2 API extends the *user-visible* surface without breaking it:
+//! weighted-edge iteration ([`Context::out_edge`]), typed composable
+//! aggregators ([`agg::Aggregator`]) and composable termination
+//! ([`session::Halt`]).
 
-pub mod core;
+pub mod agg;
+pub(crate) mod core;
+pub mod session;
+
+pub use agg::{AggPair, Aggregator, FnAgg, MaxAgg, MinAgg, NoAgg, SumAgg};
+pub use session::{GraphSession, Halt, RunOptions};
 
 use crate::combine::{Combiner, MessageValue, Strategy};
-use crate::graph::csr::{Csr, VertexId};
-use crate::layout::{AosStore, Layout, SoaStore};
+use crate::graph::csr::{Csr, EdgeWeight, VertexId};
+use crate::layout::Layout;
 use crate::metrics::RunMetrics;
 use crate::sched::Schedule;
+
+/// The aggregated-value type of a program's aggregator.
+pub type AggValue<P> = <<P as VertexProgram>::Agg as Aggregator>::Value;
 
 /// Communication mode of a program (fixed per algorithm, as in iPregel's
 /// internal versions).
@@ -37,7 +52,10 @@ pub enum Mode {
 }
 
 /// The per-vertex compute context handed to [`VertexProgram::compute`].
-pub trait Context<V, M> {
+///
+/// `A` is the program's aggregated-value type ([`AggValue`]); programs
+/// without aggregators leave it at the default `()`.
+pub trait Context<V, M, A = ()> {
     /// This vertex's id.
     fn id(&self) -> VertexId;
     /// Current superstep number (0-based).
@@ -56,6 +74,17 @@ pub trait Context<V, M> {
     }
     /// In-degree of this vertex.
     fn in_degree(&self) -> usize;
+    /// The `i`-th outgoing edge as `(target, weight)`; weight is `1.0` on
+    /// unweighted graphs, so weight-aware programs run on any input.
+    /// Returned by value, so `send` can be called inside the loop:
+    ///
+    /// ```ignore
+    /// for i in 0..ctx.out_degree() {
+    ///     let (dst, w) = ctx.out_edge(i);
+    ///     ctx.send(dst, dist + w);
+    /// }
+    /// ```
+    fn out_edge(&self, i: usize) -> (VertexId, EdgeWeight);
     /// Send `msg` to `dst` (push-mode programs only; a pull-mode program
     /// calling this panics — the same constraint iPregel's
     /// single-broadcast versions impose at compile time).
@@ -65,31 +94,36 @@ pub trait Context<V, M> {
     fn broadcast(&mut self, msg: M);
     /// Vote to halt: stay inactive until a message arrives.
     fn vote_to_halt(&mut self);
-    /// Contribute to the global aggregator (Pregel aggregators): all
-    /// contributions of a superstep are merged with
-    /// [`VertexProgram::agg_combine`] and visible to every vertex next
-    /// superstep via [`Context::aggregated`].
-    fn contribute(&mut self, x: f64);
+    /// Contribute to the program's global aggregator: all contributions of
+    /// a superstep are merged with [`Aggregator::combine`] and visible to
+    /// every vertex next superstep via [`Context::aggregated`].
+    fn contribute(&mut self, x: A);
     /// The merged aggregator value from the previous superstep, if any
     /// vertex contributed.
-    fn aggregated(&self) -> Option<f64>;
+    fn aggregated(&self) -> Option<&A>;
 }
 
 /// A vertex-centric program: Pregel's user-defined function plus the
-/// type-level choices (value, message, combiner, communication mode).
+/// type-level choices (value, message, combiner, aggregator,
+/// communication mode).
 pub trait VertexProgram: Send + Sync {
     /// Per-vertex state.
-    type Value: Clone + Send + Sync;
+    type Value: Clone + Send + Sync + 'static;
     /// Message type.
     type Message: MessageValue;
     /// Message combiner.
     type Comb: Combiner<Self::Message>;
+    /// Global aggregator ([`NoAgg`] when the program aggregates nothing).
+    type Agg: Aggregator;
 
     /// Which communication mode this program uses.
     fn mode(&self) -> Mode;
 
     /// The combiner instance.
     fn combiner(&self) -> Self::Comb;
+
+    /// The aggregator instance.
+    fn aggregator(&self) -> Self::Agg;
 
     /// Initial value of vertex `v`.
     fn init(&self, g: &Csr, v: VertexId) -> Self::Value;
@@ -99,19 +133,9 @@ pub trait VertexProgram: Send + Sync {
         true
     }
 
-    /// Neutral element of the global aggregator (default: 0, for sums).
-    fn agg_neutral(&self) -> f64 {
-        0.0
-    }
-
-    /// Commutative merge of two aggregator partials (default: sum).
-    fn agg_combine(&self, a: f64, b: f64) -> f64 {
-        a + b
-    }
-
     /// The user-defined function, applied to each active vertex each
     /// superstep. `msg` is the combined incoming message, if any.
-    fn compute<C: Context<Self::Value, Self::Message>>(
+    fn compute<C: Context<Self::Value, Self::Message, AggValue<Self>>>(
         &self,
         ctx: &mut C,
         msg: Option<Self::Message>,
@@ -195,15 +219,17 @@ pub struct RunResult<V> {
     pub metrics: RunMetrics,
 }
 
-/// Run `program` on `g` under `cfg`, dispatching to the store type the
-/// layout switch selects. This is the library's main entry point.
+/// Run `program` on `g` under `cfg` through a throwaway session.
+///
+/// Compatibility shim for the v1 free-function API: behaviour is
+/// unchanged, but every allocation is rebuilt per call. Long-lived
+/// services should hold a [`GraphSession`] instead and reuse it across
+/// runs.
+#[deprecated(
+    since = "0.2.0",
+    note = "use GraphSession::run — a session amortises mailbox/store/bitset \
+            allocations across runs and supports warm starts"
+)]
 pub fn run<P: VertexProgram>(g: &Csr, program: &P, cfg: EngineConfig) -> RunResult<P::Value> {
-    match cfg.layout {
-        Layout::Interleaved => {
-            core::Engine::<P, AosStore<P::Value, P::Message>>::new(g, program, cfg).run()
-        }
-        Layout::Externalised => {
-            core::Engine::<P, SoaStore<P::Value, P::Message>>::new(g, program, cfg).run()
-        }
-    }
+    GraphSession::with_config(g, cfg).run(program)
 }

@@ -1,0 +1,448 @@
+//! Long-lived, reusable execution sessions.
+//!
+//! A [`GraphSession`] binds to one [`Csr`] and runs many
+//! [`VertexProgram`]s against it — back-to-back or concurrently — with
+//! amortised allocations:
+//!
+//! - **vertex stores** (values + the two mailbox-slot epochs) are pooled
+//!   by concrete store type and re-primed with [`VertexStore::reset`]
+//!   instead of reallocated;
+//! - **activity bitsets** (active/broadcast sets) are recycled;
+//! - **scheduler state** (the degree-weight vectors edge-centric full
+//!   scans need) is computed once per session and shared by `Arc`.
+//!
+//! Per run, callers can override the session's [`EngineConfig`], install
+//! a composable [`Halt`] policy (superstep cap, aggregator-convergence
+//! predicate — quiescence always applies), and **warm-start** vertex
+//! values from a previous run's output ([`RunOptions::warm_start`]),
+//! which is what incremental recomputation
+//! ([`crate::algos::incremental`]) builds on.
+//!
+//! ```no_run
+//! use ipregel::engine::{EngineConfig, GraphSession};
+//! use ipregel::algos::{ConnectedComponents, PageRank};
+//! # let g = ipregel::graph::gen::ring(8);
+//!
+//! let session = GraphSession::with_config(&g, EngineConfig::default().threads(4));
+//! let labels = session.run(&ConnectedComponents);     // allocates
+//! let ranks = session.run(&PageRank::default());      // reuses pools
+//! ```
+
+use crate::engine::core::{Engine, EngineSetup};
+use crate::engine::{AggValue, EngineConfig, Mode, RunResult, VertexProgram};
+use crate::graph::csr::{Csr, VertexId};
+use crate::layout::{AosStore, Layout, SoaStore, VertexStore};
+use crate::util::bitset::AtomicBitSet;
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Composable per-run termination policy. Quiescence (all vertices halted
+/// with no pending messages) always terminates a run; a `Halt` adds an
+/// optional superstep cap and an optional convergence predicate on the
+/// program's aggregator stream. Set both to compose them: the run stops
+/// at whichever fires first.
+pub struct Halt<A> {
+    /// Extra cap on supersteps for this run, on top of
+    /// [`EngineConfig::max_supersteps`] (the effective cap is the
+    /// minimum of the two).
+    pub max_supersteps: Option<usize>,
+    /// Called at each superstep barrier with the merged aggregator value
+    /// of the previous and the just-finished superstep; returning `true`
+    /// stops the run with [`HaltReason::Converged`]. The predicate is
+    /// **not** consulted while the aggregator stream is silent (both
+    /// values `None` — nothing has contributed yet), so `|a, b| a == b`
+    /// cannot spuriously halt a program that aggregates late or never.
+    ///
+    /// [`HaltReason::Converged`]: crate::metrics::HaltReason::Converged
+    #[allow(clippy::type_complexity)]
+    pub converged: Option<Arc<dyn Fn(Option<&A>, Option<&A>) -> bool + Send + Sync>>,
+}
+
+impl<A> Default for Halt<A> {
+    fn default() -> Self {
+        Halt {
+            max_supersteps: None,
+            converged: None,
+        }
+    }
+}
+
+impl<A> Clone for Halt<A> {
+    fn clone(&self) -> Self {
+        Halt {
+            max_supersteps: self.max_supersteps,
+            converged: self.converged.clone(),
+        }
+    }
+}
+
+impl<A> Halt<A> {
+    /// Halt policy with only the implicit quiescence rule.
+    pub fn quiescence() -> Self {
+        Self::default()
+    }
+
+    /// Halt after at most `n` supersteps.
+    pub fn supersteps(n: usize) -> Self {
+        Self::default().and_supersteps(n)
+    }
+
+    /// Halt when `pred(prev_agg, cur_agg)` returns true (e.g. when two
+    /// consecutive aggregator values differ by less than a tolerance).
+    pub fn converged<F>(pred: F) -> Self
+    where
+        F: Fn(Option<&A>, Option<&A>) -> bool + Send + Sync + 'static,
+    {
+        Self::default().and_converged(pred)
+    }
+
+    /// Add (or tighten) a superstep cap.
+    pub fn and_supersteps(mut self, n: usize) -> Self {
+        self.max_supersteps = Some(match self.max_supersteps {
+            Some(old) => old.min(n),
+            None => n,
+        });
+        self
+    }
+
+    /// Add a convergence predicate (replaces any existing one).
+    pub fn and_converged<F>(mut self, pred: F) -> Self
+    where
+        F: Fn(Option<&A>, Option<&A>) -> bool + Send + Sync + 'static,
+    {
+        self.converged = Some(Arc::new(pred));
+        self
+    }
+}
+
+/// Per-run options for [`GraphSession::run_with`].
+pub struct RunOptions<'a, P: VertexProgram> {
+    /// Engine configuration override; `None` uses the session default.
+    pub config: Option<EngineConfig>,
+    /// Termination policy for this run.
+    pub halt: Halt<AggValue<P>>,
+    /// Seed vertex values from a previous run instead of
+    /// [`VertexProgram::init`] — the warm-start path. Must hold exactly
+    /// one value per vertex.
+    pub warm_start: Option<&'a [P::Value]>,
+}
+
+impl<'a, P: VertexProgram> Default for RunOptions<'a, P> {
+    fn default() -> Self {
+        RunOptions {
+            config: None,
+            halt: Halt::default(),
+            warm_start: None,
+        }
+    }
+}
+
+impl<'a, P: VertexProgram> RunOptions<'a, P> {
+    /// Fresh default options.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Override the engine configuration for this run.
+    pub fn config(mut self, cfg: EngineConfig) -> Self {
+        self.config = Some(cfg);
+        self
+    }
+
+    /// Set the termination policy for this run.
+    pub fn halt(mut self, halt: Halt<AggValue<P>>) -> Self {
+        self.halt = halt;
+        self
+    }
+
+    /// Warm-start vertex values from `values` (one per vertex).
+    pub fn warm_start(mut self, values: &'a [P::Value]) -> Self {
+        self.warm_start = Some(values);
+        self
+    }
+}
+
+/// A reusable execution session over one graph. See the [module
+/// docs](self) for the pooling model; construction is cheap (no
+/// allocation proportional to the graph), so short-lived sessions are
+/// fine too — that is exactly what the deprecated [`run`] shim does.
+///
+/// [`run`]: crate::engine::run
+pub struct GraphSession<'g> {
+    g: &'g Csr,
+    cfg: EngineConfig,
+    /// Pooled vertex stores, keyed by concrete store type. One store per
+    /// type: when concurrent runs of the same type overlap, the extras
+    /// build fresh and the last one back wins the pool slot.
+    stores: Mutex<HashMap<TypeId, Box<dyn Any + Send>>>,
+    /// Recycled activity bitsets (all sized to this graph).
+    bitsets: Mutex<Vec<AtomicBitSet>>,
+    /// Out-/in-degree weight vectors for edge-centric full scans,
+    /// computed on first use and shared across runs.
+    out_degree_weights: Mutex<Option<Arc<Vec<u64>>>>,
+    in_degree_weights: Mutex<Option<Arc<Vec<u64>>>>,
+    runs: AtomicU64,
+}
+
+impl<'g> GraphSession<'g> {
+    /// Session over `g` with the default [`EngineConfig`].
+    pub fn new(g: &'g Csr) -> Self {
+        Self::with_config(g, EngineConfig::default())
+    }
+
+    /// Session over `g` with a session-wide default configuration
+    /// (overridable per run via [`RunOptions::config`]).
+    pub fn with_config(g: &'g Csr, cfg: EngineConfig) -> Self {
+        GraphSession {
+            g,
+            cfg,
+            stores: Mutex::new(HashMap::new()),
+            bitsets: Mutex::new(Vec::new()),
+            out_degree_weights: Mutex::new(None),
+            in_degree_weights: Mutex::new(None),
+            runs: AtomicU64::new(0),
+        }
+    }
+
+    /// The session's graph.
+    pub fn graph(&self) -> &'g Csr {
+        self.g
+    }
+
+    /// The session's default configuration.
+    pub fn config(&self) -> EngineConfig {
+        self.cfg
+    }
+
+    /// Number of runs this session has completed.
+    pub fn runs_completed(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
+
+    /// Number of vertex stores currently parked in the pool (diagnostic).
+    pub fn pooled_stores(&self) -> usize {
+        self.stores.lock().expect("store pool poisoned").len()
+    }
+
+    /// Run `program` under the session configuration with default
+    /// termination (quiescence + config superstep cap).
+    pub fn run<P: VertexProgram>(&self, program: &P) -> RunResult<P::Value> {
+        self.run_with(program, RunOptions::default())
+    }
+
+    /// Run `program` with per-run options (config override, halt policy,
+    /// warm start).
+    pub fn run_with<P: VertexProgram>(
+        &self,
+        program: &P,
+        opts: RunOptions<'_, P>,
+    ) -> RunResult<P::Value> {
+        let cfg = opts.config.unwrap_or(self.cfg);
+        match cfg.layout {
+            Layout::Interleaved => {
+                self.run_typed::<P, AosStore<P::Value, P::Message>>(program, cfg, opts)
+            }
+            Layout::Externalised => {
+                self.run_typed::<P, SoaStore<P::Value, P::Message>>(program, cfg, opts)
+            }
+        }
+    }
+
+    /// Degree-weight vector for edge-centric full scans, built lazily and
+    /// shared session-wide (push scans weight by out-degree, pull scans by
+    /// in-degree).
+    fn degree_weights(&self, mode: Mode) -> Arc<Vec<u64>> {
+        let slot = match mode {
+            Mode::Push => &self.out_degree_weights,
+            Mode::Pull => &self.in_degree_weights,
+        };
+        let mut cached = slot.lock().expect("weight cache poisoned");
+        match &*cached {
+            Some(w) => Arc::clone(w),
+            None => {
+                let w = Arc::new(match mode {
+                    Mode::Push => self.g.out_degrees_u64(),
+                    Mode::Pull => self.g.in_degrees_u64(),
+                });
+                *cached = Some(Arc::clone(&w));
+                w
+            }
+        }
+    }
+
+    fn run_typed<P, S>(
+        &self,
+        program: &P,
+        cfg: EngineConfig,
+        opts: RunOptions<'_, P>,
+    ) -> RunResult<P::Value>
+    where
+        P: VertexProgram,
+        S: VertexStore<P::Value, P::Message> + Any + Send + 'static,
+    {
+        let n = self.g.num_vertices();
+        if let Some(w) = opts.warm_start {
+            assert_eq!(
+                w.len(),
+                n,
+                "warm_start must supply exactly one value per vertex"
+            );
+        }
+        let g = self.g;
+        let mut init: Box<dyn FnMut(VertexId) -> P::Value + '_> = match opts.warm_start {
+            Some(vals) => Box::new(move |v| vals[v as usize].clone()),
+            None => Box::new(move |v| program.init(g, v)),
+        };
+
+        // ---- Store: recycle by concrete type, else build fresh ---------
+        let key = TypeId::of::<S>();
+        let pooled: Option<S> = self
+            .stores
+            .lock()
+            .expect("store pool poisoned")
+            .remove(&key)
+            .and_then(|b| b.downcast::<S>().ok())
+            .map(|b| *b);
+        let (store, store_reused) = match pooled {
+            Some(mut s) => {
+                s.reset(self.g, &mut *init);
+                (s, true)
+            }
+            None => (S::build(self.g, &mut *init), false),
+        };
+
+        // ---- Bitsets: recycle up to the three the engine needs ---------
+        let mut recycled = Vec::new();
+        {
+            let mut pool = self.bitsets.lock().expect("bitset pool poisoned");
+            while recycled.len() < 3 {
+                match pool.pop() {
+                    Some(mut b) => {
+                        if b.len() == n {
+                            b.clear_all();
+                            recycled.push(b);
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+
+        let scan_weights = if cfg.schedule.needs_weights() && !cfg.bypass {
+            Some(self.degree_weights(program.mode()))
+        } else {
+            None
+        };
+
+        let mut engine = Engine::with_setup(
+            self.g,
+            program,
+            cfg,
+            opts.halt,
+            EngineSetup {
+                store,
+                store_reused,
+                bitsets: recycled,
+                scan_weights,
+            },
+        );
+        let result = engine.run();
+
+        // ---- Return the parts to the pools -----------------------------
+        let (store, bitsets) = engine.into_parts();
+        self.stores
+            .lock()
+            .expect("store pool poisoned")
+            .insert(key, Box::new(store));
+        self.bitsets
+            .lock()
+            .expect("bitset pool poisoned")
+            .extend(bitsets);
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{ConnectedComponents, PageRank};
+    use crate::graph::gen;
+    use crate::metrics::HaltReason;
+
+    #[test]
+    fn consecutive_runs_reuse_the_store() {
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 3);
+        let session = GraphSession::new(&g);
+        let a = session.run(&ConnectedComponents);
+        assert!(!a.metrics.store_reused);
+        let b = session.run(&ConnectedComponents);
+        assert!(b.metrics.store_reused);
+        assert_eq!(a.values, b.values);
+        assert_eq!(session.runs_completed(), 2);
+        assert_eq!(session.pooled_stores(), 1);
+    }
+
+    #[test]
+    fn different_value_types_pool_separately() {
+        let g = gen::ring(32);
+        let session = GraphSession::new(&g);
+        session.run(&ConnectedComponents); // (u32, u32) store
+        session.run(&PageRank::default()); // (f64, f64) store
+        assert_eq!(session.pooled_stores(), 2);
+        // Second round reuses both.
+        assert!(session.run(&ConnectedComponents).metrics.store_reused);
+        assert!(session.run(&PageRank::default()).metrics.store_reused);
+    }
+
+    #[test]
+    fn per_run_config_override_switches_layout() {
+        let g = gen::grid(6, 6);
+        let session = GraphSession::new(&g);
+        let base = session.run(&ConnectedComponents);
+        let soa = session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().config(session.config().layout(Layout::Externalised)),
+        );
+        assert_eq!(base.values, soa.values);
+        // Two layouts → two pooled store types.
+        assert_eq!(session.pooled_stores(), 2);
+    }
+
+    #[test]
+    fn halt_superstep_cap_applies() {
+        let g = gen::path(200);
+        let session = GraphSession::new(&g);
+        let r = session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().halt(Halt::supersteps(3)),
+        );
+        assert_eq!(r.metrics.num_supersteps(), 3);
+        assert_eq!(r.metrics.halt_reason, HaltReason::SuperstepCap);
+    }
+
+    #[test]
+    fn halt_combinators_compose() {
+        let h: Halt<f64> = Halt::supersteps(10)
+            .and_supersteps(5)
+            .and_converged(|_, _| false);
+        assert_eq!(h.max_supersteps, Some(5));
+        assert!(h.converged.is_some());
+        let cloned = h.clone();
+        assert_eq!(cloned.max_supersteps, Some(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "one value per vertex")]
+    fn warm_start_length_is_checked() {
+        let g = gen::ring(8);
+        let session = GraphSession::new(&g);
+        let bad = vec![0u32; 3];
+        session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().warm_start(&bad),
+        );
+    }
+}

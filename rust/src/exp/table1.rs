@@ -8,7 +8,7 @@ use crate::graph::catalog::CatalogEntry;
 use crate::graph::stats;
 use crate::metrics::TablePrinter;
 use crate::util::commas;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::path::Path;
 
 /// One row of the reproduced Table I.

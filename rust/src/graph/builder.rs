@@ -4,14 +4,21 @@
 //! edge streams, then produces a [`Csr`] via counting sort — O(V + E), no
 //! per-vertex allocation, which matters when materialising the ~113M-edge
 //! Friendster analogue on a single core.
+//!
+//! Edges may carry weights ([`GraphBuilder::weighted_edge`]): mixing
+//! weighted and unweighted pushes is allowed (unweighted edges default to
+//! weight `1.0`), and the weight arrays are carried through both counting
+//! sorts so the out- and in-CSR views stay consistent.
 
-use crate::graph::csr::{Csr, VertexId};
+use crate::graph::csr::{Csr, EdgeWeight, VertexId};
 use crate::util::prefix::exclusive_prefix_sum_in_place;
 
 /// Accumulates edges and builds a [`Csr`].
 pub struct GraphBuilder {
     num_vertices: usize,
     edge_list: Vec<(VertexId, VertexId)>,
+    /// Parallel to `edge_list` once any weighted edge has been pushed.
+    weights: Option<Vec<EdgeWeight>>,
     dedup: bool,
     drop_self_loops: bool,
     symmetric: bool,
@@ -27,13 +34,16 @@ impl GraphBuilder {
         GraphBuilder {
             num_vertices,
             edge_list: Vec::new(),
+            weights: None,
             dedup: false,
             drop_self_loops: false,
             symmetric: false,
         }
     }
 
-    /// Remove duplicate edges at build time.
+    /// Remove duplicate edges at build time. On weighted graphs parallel
+    /// edges collapse to the one with the **minimum** weight (the useful
+    /// semantics for shortest-path workloads).
     pub fn dedup(mut self, yes: bool) -> Self {
         self.dedup = yes;
         self
@@ -47,6 +57,7 @@ impl GraphBuilder {
 
     /// Insert the reverse of every edge (undirected graphs; the paper's
     /// four SNAP graphs are undirected, stored as two directed edges each).
+    /// Reversed edges keep the original edge's weight.
     pub fn symmetric(mut self, yes: bool) -> Self {
         self.symmetric = yes;
         self
@@ -55,6 +66,12 @@ impl GraphBuilder {
     /// Add one edge.
     pub fn edge(mut self, src: VertexId, dst: VertexId) -> Self {
         self.push_edge(src, dst);
+        self
+    }
+
+    /// Add one weighted edge.
+    pub fn weighted_edge(mut self, src: VertexId, dst: VertexId, w: EdgeWeight) -> Self {
+        self.push_weighted_edge(src, dst, w);
         self
     }
 
@@ -67,10 +84,36 @@ impl GraphBuilder {
         self
     }
 
+    /// Add many weighted edges.
+    pub fn weighted_edges(mut self, es: &[(VertexId, VertexId, EdgeWeight)]) -> Self {
+        self.edge_list.reserve(es.len());
+        for &(s, d, w) in es {
+            self.push_weighted_edge(s, d, w);
+        }
+        self
+    }
+
     /// Add an edge without consuming the builder (streaming use).
     pub fn push_edge(&mut self, src: VertexId, dst: VertexId) {
         debug_assert!((src as usize) < self.num_vertices, "src {src} out of range");
         debug_assert!((dst as usize) < self.num_vertices, "dst {dst} out of range");
+        self.edge_list.push((src, dst));
+        if let Some(w) = &mut self.weights {
+            w.push(1.0);
+        }
+    }
+
+    /// Add a weighted edge without consuming the builder. The first
+    /// weighted push switches the builder (and the built graph) to
+    /// weighted mode; earlier unweighted edges get weight `1.0`.
+    pub fn push_weighted_edge(&mut self, src: VertexId, dst: VertexId, w: EdgeWeight) {
+        debug_assert!((src as usize) < self.num_vertices, "src {src} out of range");
+        debug_assert!((dst as usize) < self.num_vertices, "dst {dst} out of range");
+        assert!(w.is_finite(), "edge weight must be finite, got {w}");
+        let ws = self
+            .weights
+            .get_or_insert_with(|| vec![1.0; self.edge_list.len()]);
+        ws.push(w);
         self.edge_list.push((src, dst));
     }
 
@@ -79,8 +122,21 @@ impl GraphBuilder {
         self.edge_list.len()
     }
 
+    /// Whether any weighted edge has been staged.
+    pub fn is_weighted(&self) -> bool {
+        self.weights.is_some()
+    }
+
     /// Build the CSR (consumes the builder).
     pub fn build(mut self) -> Csr {
+        match self.weights.take() {
+            Some(weights) => self.build_weighted(weights),
+            None => self.build_unweighted(),
+        }
+    }
+
+    /// The original unweighted path: counting sort, no per-edge payload.
+    fn build_unweighted(mut self) -> Csr {
         if self.symmetric {
             let rev: Vec<(VertexId, VertexId)> = self
                 .edge_list
@@ -153,6 +209,103 @@ impl GraphBuilder {
             out_targets,
             in_offsets,
             in_sources,
+            out_weights: None,
+            in_weights: None,
+        }
+    }
+
+    /// Weighted path: same counting sorts, carrying the weight payload.
+    fn build_weighted(self, weights: Vec<EdgeWeight>) -> Csr {
+        debug_assert_eq!(weights.len(), self.edge_list.len());
+        let mut triples: Vec<(VertexId, VertexId, EdgeWeight)> = self
+            .edge_list
+            .iter()
+            .zip(&weights)
+            .map(|(&(s, d), &w)| (s, d, w))
+            .collect();
+        if self.symmetric {
+            let rev: Vec<_> = triples
+                .iter()
+                .filter(|&&(s, d, _)| s != d)
+                .map(|&(s, d, w)| (d, s, w))
+                .collect();
+            triples.extend(rev);
+        }
+        if self.drop_self_loops {
+            triples.retain(|&(s, d, _)| s != d);
+        }
+        // Sort by (src, dst, weight) once: the sequential counting fill
+        // below then emits every out-row already sorted, so no per-row
+        // permutation buffers are needed (keeping the builder's
+        // no-per-vertex-allocation property from the unweighted path).
+        triples.sort_unstable_by(|a, b| {
+            (a.0, a.1)
+                .cmp(&(b.0, b.1))
+                .then(a.2.total_cmp(&b.2))
+        });
+        if self.dedup {
+            // Keeping the first of each (src, dst) run collapses parallel
+            // edges to their minimum weight.
+            triples.dedup_by_key(|t| (t.0, t.1));
+        }
+        let n = self.num_vertices;
+        let m = triples.len();
+
+        // Counting fill into out-CSR, weights riding along; rows come out
+        // sorted by (target, weight) because the triples are.
+        let mut out_offsets = vec![0usize; n + 1];
+        for &(s, _, _) in &triples {
+            out_offsets[s as usize + 1] += 1;
+        }
+        exclusive_prefix_sum_in_place(&mut out_offsets[1..]);
+        let mut out_targets = vec![0 as VertexId; m];
+        let mut out_weights = vec![0.0 as EdgeWeight; m];
+        {
+            let mut cursor = out_offsets[1..].to_vec();
+            for &(s, d, w) in &triples {
+                let c = &mut cursor[s as usize];
+                out_targets[*c] = d;
+                out_weights[*c] = w;
+                *c += 1;
+            }
+            for v in 0..n {
+                out_offsets[v + 1] = cursor[v];
+            }
+        }
+
+        // Re-sort by (dst, src, weight) and fill the in-CSR the same way.
+        triples.sort_unstable_by(|a, b| {
+            (a.1, a.0)
+                .cmp(&(b.1, b.0))
+                .then(a.2.total_cmp(&b.2))
+        });
+        let mut in_offsets = vec![0usize; n + 1];
+        for &(_, d, _) in &triples {
+            in_offsets[d as usize + 1] += 1;
+        }
+        exclusive_prefix_sum_in_place(&mut in_offsets[1..]);
+        let mut in_sources = vec![0 as VertexId; m];
+        let mut in_weights = vec![0.0 as EdgeWeight; m];
+        {
+            let mut cursor = in_offsets[1..].to_vec();
+            for &(s, d, w) in &triples {
+                let c = &mut cursor[d as usize];
+                in_sources[*c] = s;
+                in_weights[*c] = w;
+                *c += 1;
+            }
+            for v in 0..n {
+                in_offsets[v + 1] = cursor[v];
+            }
+        }
+
+        Csr {
+            out_offsets,
+            out_targets,
+            in_offsets,
+            in_sources,
+            out_weights: Some(out_weights),
+            in_weights: Some(in_weights),
         }
     }
 }
@@ -220,6 +373,57 @@ mod tests {
     }
 
     #[test]
+    fn weighted_rows_sorted_with_weights_attached() {
+        let g = GraphBuilder::new(4)
+            .weighted_edges(&[(0, 3, 0.3), (0, 1, 0.1), (0, 2, 0.2)])
+            .build();
+        assert_eq!(g.out_neighbors(0), &[1, 2, 3]);
+        assert_eq!(g.out_weights_of(0), Some(&[0.1, 0.2, 0.3][..]));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn mixed_pushes_default_unweighted_edges_to_one() {
+        let mut gb = GraphBuilder::new(3);
+        gb.push_edge(0, 1); // before weighted mode engages
+        gb.push_weighted_edge(1, 2, 5.5);
+        gb.push_edge(2, 0); // after: still defaults to 1.0
+        let g = gb.build();
+        assert!(g.has_weights());
+        assert_eq!(g.out_weights_of(0), Some(&[1.0][..]));
+        assert_eq!(g.out_weights_of(1), Some(&[5.5][..]));
+        assert_eq!(g.out_weights_of(2), Some(&[1.0][..]));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn symmetric_weighted_mirrors_weights() {
+        let g = GraphBuilder::new(3)
+            .symmetric(true)
+            .weighted_edges(&[(0, 1, 2.0), (1, 2, 3.0)])
+            .build();
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.out_weights_of(1), Some(&[2.0, 3.0][..]));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn weighted_dedup_keeps_minimum_weight() {
+        let g = GraphBuilder::new(2)
+            .dedup(true)
+            .weighted_edges(&[(0, 1, 4.0), (0, 1, 2.0), (0, 1, 9.0)])
+            .build();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.out_weights_of(0), Some(&[2.0][..]));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn non_finite_weight_rejected() {
+        GraphBuilder::new(2).weighted_edge(0, 1, f64::NAN);
+    }
+
+    #[test]
     fn prop_built_csr_always_validates() {
         quick::check("builder produces valid CSR", |rng| {
             let n = 1 + rng.below(50) as usize;
@@ -230,6 +434,25 @@ mod tests {
                 .dedup(rng.chance(0.5))
                 .drop_self_loops(rng.chance(0.5))
                 .edges(&edges)
+                .build();
+            g.validate()
+        });
+    }
+
+    #[test]
+    fn prop_weighted_csr_always_validates() {
+        quick::check("weighted builder produces valid CSR", |rng| {
+            let n = 1 + rng.below(40) as usize;
+            let m = rng.below(150) as usize;
+            let edges: Vec<(u32, u32, f64)> = quick::random_edges(rng, n, m)
+                .into_iter()
+                .map(|(s, d)| (s, d, (rng.below(1000) as f64) / 10.0))
+                .collect();
+            let g = GraphBuilder::new(n)
+                .symmetric(rng.chance(0.5))
+                .dedup(rng.chance(0.5))
+                .drop_self_loops(rng.chance(0.5))
+                .weighted_edges(&edges)
                 .build();
             g.validate()
         });

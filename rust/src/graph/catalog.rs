@@ -17,7 +17,7 @@
 
 use crate::graph::csr::Csr;
 use crate::graph::{gen, io};
-use anyhow::Result;
+use crate::util::error::Result;
 use std::path::{Path, PathBuf};
 
 /// How an analogue graph is generated.

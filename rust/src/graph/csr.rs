@@ -7,6 +7,12 @@
 //!   by iPregel's single-broadcast versions, which read from the *sender's*
 //!   outbox).
 //!
+//! Edges may optionally carry weights: `out_weights`/`in_weights` run
+//! parallel to the adjacency arrays (both present or both absent). An
+//! unweighted graph reports weight `1.0` for every edge through
+//! [`Csr::out_edge`], so weight-aware programs (weighted SSSP) run
+//! unchanged on unweighted inputs.
+//!
 //! Vertex ids are `u32` (the paper's largest graph has 65.6M vertices; our
 //! scaled analogues are far below 4.29B), keeping adjacency arrays compact —
 //! cache behaviour is a first-class concern in this paper.
@@ -14,8 +20,12 @@
 /// Vertex identifier type used throughout the framework.
 pub type VertexId = u32;
 
-/// An immutable directed graph in CSR form with both adjacency directions.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// Edge weight type. Unweighted graphs behave as all-ones.
+pub type EdgeWeight = f64;
+
+/// An immutable directed graph in CSR form with both adjacency directions
+/// and optional per-edge weights.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
     /// `out_offsets[v]..out_offsets[v+1]` indexes `out_targets`.
     pub out_offsets: Vec<usize>,
@@ -25,6 +35,10 @@ pub struct Csr {
     pub in_offsets: Vec<usize>,
     /// Flattened incoming neighbour lists.
     pub in_sources: Vec<VertexId>,
+    /// Weight of `out_targets[i]`'s edge, when the graph is weighted.
+    pub out_weights: Option<Vec<EdgeWeight>>,
+    /// Weight of `in_sources[i]`'s edge, when the graph is weighted.
+    pub in_weights: Option<Vec<EdgeWeight>>,
 }
 
 impl Csr {
@@ -38,6 +52,12 @@ impl Csr {
     #[inline]
     pub fn num_edges(&self) -> usize {
         self.out_targets.len()
+    }
+
+    /// Whether edges carry weights.
+    #[inline]
+    pub fn has_weights(&self) -> bool {
+        self.out_weights.is_some()
     }
 
     /// Out-degree of `v`.
@@ -68,6 +88,51 @@ impl Csr {
         &self.in_sources[self.in_offsets[v]..self.in_offsets[v + 1]]
     }
 
+    /// Weights of `v`'s outgoing edges (parallel to
+    /// [`Csr::out_neighbors`]); `None` on unweighted graphs.
+    #[inline]
+    pub fn out_weights_of(&self, v: VertexId) -> Option<&[EdgeWeight]> {
+        let v = v as usize;
+        self.out_weights
+            .as_ref()
+            .map(|w| &w[self.out_offsets[v]..self.out_offsets[v + 1]])
+    }
+
+    /// Weights of `v`'s incoming edges (parallel to
+    /// [`Csr::in_neighbors`]); `None` on unweighted graphs.
+    #[inline]
+    pub fn in_weights_of(&self, v: VertexId) -> Option<&[EdgeWeight]> {
+        let v = v as usize;
+        self.in_weights
+            .as_ref()
+            .map(|w| &w[self.in_offsets[v]..self.in_offsets[v + 1]])
+    }
+
+    /// The `i`-th outgoing edge of `v` as `(target, weight)`; weight is
+    /// `1.0` on unweighted graphs. `i` must be below `out_degree(v)`.
+    #[inline]
+    pub fn out_edge(&self, v: VertexId, i: usize) -> (VertexId, EdgeWeight) {
+        let base = self.out_offsets[v as usize];
+        let dst = self.out_targets[base + i];
+        let w = match &self.out_weights {
+            Some(ws) => ws[base + i],
+            None => 1.0,
+        };
+        (dst, w)
+    }
+
+    /// The `i`-th incoming edge of `v` as `(source, weight)`.
+    #[inline]
+    pub fn in_edge(&self, v: VertexId, i: usize) -> (VertexId, EdgeWeight) {
+        let base = self.in_offsets[v as usize];
+        let src = self.in_sources[base + i];
+        let w = match &self.in_weights {
+            Some(ws) => ws[base + i],
+            None => 1.0,
+        };
+        (src, w)
+    }
+
     /// Iterate all vertex ids.
     #[inline]
     pub fn vertices(&self) -> impl Iterator<Item = VertexId> {
@@ -78,6 +143,17 @@ impl Csr {
     pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
         self.vertices().flat_map(move |v| {
             self.out_neighbors(v).iter().map(move |&d| (v, d))
+        })
+    }
+
+    /// Iterate all directed edges as `(src, dst, weight)` triples (weight
+    /// `1.0` throughout on unweighted graphs).
+    pub fn weighted_edges(&self) -> impl Iterator<Item = (VertexId, VertexId, EdgeWeight)> + '_ {
+        self.vertices().flat_map(move |v| {
+            (0..self.out_degree(v)).map(move |i| {
+                let (d, w) = self.out_edge(v, i);
+                (v, d, w)
+            })
         })
     }
 
@@ -102,15 +178,25 @@ impl Csr {
 
     /// Approximate resident memory of the adjacency arrays in bytes.
     pub fn memory_bytes(&self) -> usize {
+        let weight_bytes = self
+            .out_weights
+            .as_ref()
+            .map_or(0, |w| w.len() * std::mem::size_of::<EdgeWeight>())
+            + self
+                .in_weights
+                .as_ref()
+                .map_or(0, |w| w.len() * std::mem::size_of::<EdgeWeight>());
         self.out_offsets.len() * std::mem::size_of::<usize>()
             + self.in_offsets.len() * std::mem::size_of::<usize>()
             + self.out_targets.len() * std::mem::size_of::<VertexId>()
             + self.in_sources.len() * std::mem::size_of::<VertexId>()
+            + weight_bytes
     }
 
     /// Structural validation used by tests and after deserialisation:
-    /// offsets monotone and bounded, targets in range, and the in/out
-    /// adjacency views describe the same edge multiset.
+    /// offsets monotone and bounded, targets in range, the in/out
+    /// adjacency views describe the same edge multiset, and weight arrays
+    /// (when present) are consistent between directions.
     pub fn validate(&self) -> Result<(), String> {
         let n = self.num_vertices();
         for (name, offs, adj_len) in [
@@ -136,16 +222,53 @@ impl Csr {
         if self.out_targets.len() != self.in_sources.len() {
             return Err("edge count mismatch between directions".into());
         }
-        // Same edge multiset in both directions (checked via sorted pairs).
-        let mut fwd: Vec<(VertexId, VertexId)> = self.edges().collect();
-        let mut bwd: Vec<(VertexId, VertexId)> = self
-            .vertices()
-            .flat_map(|v| self.in_neighbors(v).iter().map(move |&s| (s, v)))
-            .collect();
-        fwd.sort_unstable();
-        bwd.sort_unstable();
-        if fwd != bwd {
-            return Err("in/out adjacency describe different edge sets".into());
+        match (&self.out_weights, &self.in_weights) {
+            (None, None) => {}
+            (Some(ow), Some(iw)) => {
+                if ow.len() != self.out_targets.len() {
+                    return Err("out_weights length mismatch".into());
+                }
+                if iw.len() != self.in_sources.len() {
+                    return Err("in_weights length mismatch".into());
+                }
+                if ow.iter().chain(iw.iter()).any(|w| !w.is_finite()) {
+                    return Err("non-finite edge weight".into());
+                }
+            }
+            _ => return Err("weights present in only one direction".into()),
+        }
+        if self.has_weights() {
+            // Same weighted edge multiset in both directions.
+            let mut fwd: Vec<(VertexId, VertexId, u64)> = self
+                .weighted_edges()
+                .map(|(s, d, w)| (s, d, w.to_bits()))
+                .collect();
+            let mut bwd: Vec<(VertexId, VertexId, u64)> = self
+                .vertices()
+                .flat_map(|v| {
+                    (0..self.in_degree(v)).map(move |i| {
+                        let (s, w) = self.in_edge(v, i);
+                        (s, v, w.to_bits())
+                    })
+                })
+                .collect();
+            fwd.sort_unstable();
+            bwd.sort_unstable();
+            if fwd != bwd {
+                return Err("in/out weighted adjacency describe different edge sets".into());
+            }
+        } else {
+            // Same edge multiset in both directions (checked via sorted pairs).
+            let mut fwd: Vec<(VertexId, VertexId)> = self.edges().collect();
+            let mut bwd: Vec<(VertexId, VertexId)> = self
+                .vertices()
+                .flat_map(|v| self.in_neighbors(v).iter().map(move |&s| (s, v)))
+                .collect();
+            fwd.sort_unstable();
+            bwd.sort_unstable();
+            if fwd != bwd {
+                return Err("in/out adjacency describe different edge sets".into());
+            }
         }
         Ok(())
     }
@@ -168,6 +291,7 @@ mod tests {
         assert_eq!(g.in_degree(2), 2);
         assert_eq!(g.in_neighbors(2), &[0, 1]);
         assert_eq!(g.max_out_degree_vertex(), 0);
+        assert!(!g.has_weights());
         g.validate().unwrap();
     }
 
@@ -193,5 +317,45 @@ mod tests {
     fn memory_estimate_positive() {
         let g = GraphBuilder::new(2).edges(&[(0, 1)]).build();
         assert!(g.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn unweighted_graph_reports_unit_weights() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (0, 2)]).build();
+        assert_eq!(g.out_edge(0, 0), (1, 1.0));
+        assert_eq!(g.out_edge(0, 1), (2, 1.0));
+        assert_eq!(g.in_edge(2, 0), (0, 1.0));
+        assert_eq!(g.out_weights_of(0), None);
+        let triples: Vec<_> = g.weighted_edges().collect();
+        assert_eq!(triples, vec![(0, 1, 1.0), (0, 2, 1.0)]);
+    }
+
+    #[test]
+    fn weighted_graph_roundtrips_weights_both_directions() {
+        let g = GraphBuilder::new(3)
+            .weighted_edges(&[(0, 1, 2.5), (0, 2, 0.5), (1, 2, 4.0)])
+            .build();
+        assert!(g.has_weights());
+        assert_eq!(g.out_edge(0, 0), (1, 2.5));
+        assert_eq!(g.out_edge(0, 1), (2, 0.5));
+        assert_eq!(g.out_weights_of(0), Some(&[2.5, 0.5][..]));
+        // In-direction carries the same weights.
+        assert_eq!(g.in_edge(2, 0), (0, 0.5));
+        assert_eq!(g.in_edge(2, 1), (1, 4.0));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn weight_validation_catches_direction_mismatch() {
+        let mut g = GraphBuilder::new(2)
+            .weighted_edges(&[(0, 1, 3.0)])
+            .build();
+        g.in_weights = None;
+        assert!(g.validate().is_err());
+        let mut g2 = GraphBuilder::new(2)
+            .weighted_edges(&[(0, 1, 3.0)])
+            .build();
+        g2.in_weights = Some(vec![7.0]);
+        assert!(g2.validate().is_err(), "weight value mismatch must fail");
     }
 }

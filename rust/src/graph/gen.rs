@@ -190,6 +190,26 @@ pub fn partial_shuffle(g: &Csr, fraction: f64, seed: u64) -> Csr {
     gb.build()
 }
 
+/// Attach deterministic pseudo-random weights in `[lo, hi)` to every edge
+/// of `g`. The weight is a pure function of `(src, dst, seed)`, so
+/// parallel edges and the two directions of a symmetrised edge pair get
+/// consistent values, and regeneration is reproducible.
+pub fn randomly_weighted(g: &Csr, lo: f64, hi: f64, seed: u64) -> Csr {
+    assert!(lo.is_finite() && hi.is_finite() && lo < hi);
+    let mut gb = GraphBuilder::new(g.num_vertices());
+    for (s, d) in g.edges() {
+        // Order-independent key: (u,v) and (v,u) hash identically, so a
+        // symmetrised edge pair shares one weight.
+        let (a, b) = if s <= d { (s, d) } else { (d, s) };
+        let mut state =
+            seed ^ ((a as u64) << 32 | b as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let r = crate::util::rng::splitmix64(&mut state);
+        let unit = (r >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+        gb.push_weighted_edge(s, d, lo + unit * (hi - lo));
+    }
+    gb.build()
+}
+
 /// Disjoint union of `k` rings of `size` vertices each — ground truth for
 /// connected-components tests (k components by construction).
 pub fn disjoint_rings(k: usize, size: usize) -> Csr {
@@ -225,6 +245,32 @@ mod tests {
         let a = rmat(8, 4, 0.57, 0.19, 0.19, 7);
         let b = rmat(8, 4, 0.57, 0.19, 0.19, 7);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn randomly_weighted_is_deterministic_and_in_range() {
+        let base = ring(20);
+        let a = randomly_weighted(&base, 1.0, 3.0, 5);
+        let b = randomly_weighted(&base, 1.0, 3.0, 5);
+        assert_eq!(a, b);
+        assert!(a.has_weights());
+        a.validate().unwrap();
+        for (_, _, w) in a.weighted_edges() {
+            assert!((1.0..3.0).contains(&w), "{w}");
+        }
+        // Same topology, just weights attached.
+        assert_eq!(a.out_targets, base.out_targets);
+        // Mirrored directions of the symmetric ring share one weight.
+        let weight_of = |g: &Csr, s: u32, d: u32| {
+            (0..g.out_degree(s))
+                .map(|i| g.out_edge(s, i))
+                .find(|&(t, _)| t == d)
+                .map(|(_, w)| w)
+                .unwrap()
+        };
+        for (s, d) in base.edges() {
+            assert_eq!(weight_of(&a, s, d), weight_of(&a, d, s), "{s}<->{d}");
+        }
     }
 
     #[test]

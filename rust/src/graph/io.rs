@@ -5,34 +5,49 @@
 //! Table II runs skip the (minutes-long) RMAT generation step.
 
 use crate::graph::builder::GraphBuilder;
-use crate::graph::csr::{Csr, VertexId};
-use anyhow::{bail, Context, Result};
+use crate::graph::csr::{Csr, EdgeWeight, VertexId};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"IPGRAPH1";
+/// Version 2 adds optional per-edge weight arrays after each adjacency
+/// array. Unweighted graphs keep writing the v1 format so existing caches
+/// stay byte-identical; the reader accepts both.
+const MAGIC2: &[u8; 8] = b"IPGRAPH2";
 
-/// Write a SNAP-style edge list: `# comment` lines then `src\tdst` pairs.
+/// Write a SNAP-style edge list: `# comment` lines then `src\tdst` pairs,
+/// with a third `weight` column on weighted graphs.
 pub fn write_edge_list(g: &Csr, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(f);
     writeln!(w, "# Directed edge list written by ipregel")?;
     writeln!(w, "# Nodes: {} Edges: {}", g.num_vertices(), g.num_edges())?;
-    for (s, d) in g.edges() {
-        writeln!(w, "{s}\t{d}")?;
+    if g.has_weights() {
+        for (s, d, wt) in g.weighted_edges() {
+            writeln!(w, "{s}\t{d}\t{wt}")?;
+        }
+    } else {
+        for (s, d) in g.edges() {
+            writeln!(w, "{s}\t{d}")?;
+        }
     }
     Ok(())
 }
 
 /// Read a SNAP-style edge list. Accepts `#`/`%` comments, tab or space
-/// separators, and arbitrary (non-contiguous) vertex ids, which are kept
-/// as-is; `num_vertices` = max id + 1. `symmetric` mirrors every edge.
+/// separators, an optional third column (edge weight; any weighted line
+/// makes the whole graph weighted, missing weights default to `1.0`), and
+/// arbitrary (non-contiguous) vertex ids, which are kept as-is;
+/// `num_vertices` = max id + 1. `symmetric` mirrors every edge.
 pub fn read_edge_list(path: &Path, symmetric: bool) -> Result<Csr> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
     let r = BufReader::new(f);
-    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut edges: Vec<(VertexId, VertexId, EdgeWeight)> = Vec::new();
+    let mut any_weight = false;
     let mut max_id: u64 = 0;
     for (lineno, line) in r.lines().enumerate() {
         let line = line?;
@@ -54,43 +69,77 @@ pub fn read_edge_list(path: &Path, symmetric: bool) -> Result<Csr> {
         if s > VertexId::MAX as u64 || d > VertexId::MAX as u64 {
             bail!("{}:{}: id exceeds u32", path.display(), lineno + 1);
         }
+        let w: EdgeWeight = match it.next() {
+            Some(ws) => {
+                let w: EdgeWeight = ws.parse().with_context(|| {
+                    format!("{}:{}: bad edge weight", path.display(), lineno + 1)
+                })?;
+                if !w.is_finite() {
+                    bail!("{}:{}: non-finite edge weight", path.display(), lineno + 1);
+                }
+                any_weight = true;
+                w
+            }
+            None => 1.0,
+        };
         max_id = max_id.max(s).max(d);
-        edges.push((s as VertexId, d as VertexId));
+        edges.push((s as VertexId, d as VertexId, w));
     }
     let n = if edges.is_empty() { 0 } else { max_id as usize + 1 };
-    Ok(GraphBuilder::new(n).symmetric(symmetric).edges(&edges).build())
+    let mut gb = GraphBuilder::new(n).symmetric(symmetric);
+    if any_weight {
+        for &(s, d, w) in &edges {
+            gb.push_weighted_edge(s, d, w);
+        }
+    } else {
+        for &(s, d, _) in &edges {
+            gb.push_edge(s, d);
+        }
+    }
+    Ok(gb.build())
 }
 
-/// Write the binary `.ipg` format: magic, counts, then the four CSR arrays
-/// as little-endian integers. ~10× faster to load than text.
+/// Write the binary `.ipg` format: magic, counts, then the CSR arrays as
+/// little-endian integers (plus f64 weight arrays in the v2 format).
+/// ~10× faster to load than text.
 pub fn write_binary(g: &Csr, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
+    w.write_all(if g.has_weights() { MAGIC2 } else { MAGIC })?;
     write_u64(&mut w, g.num_vertices() as u64)?;
     write_u64(&mut w, g.num_edges() as u64)?;
     for off in &g.out_offsets {
         write_u64(&mut w, *off as u64)?;
     }
     write_u32_slice(&mut w, &g.out_targets)?;
+    if let Some(ws) = &g.out_weights {
+        write_f64_slice(&mut w, ws)?;
+    }
     for off in &g.in_offsets {
         write_u64(&mut w, *off as u64)?;
     }
     write_u32_slice(&mut w, &g.in_sources)?;
+    if let Some(ws) = &g.in_weights {
+        write_f64_slice(&mut w, ws)?;
+    }
     Ok(())
 }
 
-/// Read the binary `.ipg` format and validate the structure.
+/// Read the binary `.ipg` format (v1 or v2) and validate the structure.
 pub fn read_binary(path: &Path) -> Result<Csr> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let weighted = if &magic == MAGIC {
+        false
+    } else if &magic == MAGIC2 {
+        true
+    } else {
         bail!("{}: not an ipgraph file", path.display());
-    }
+    };
     let n = read_u64(&mut r)? as usize;
     let m = read_u64(&mut r)? as usize;
     let mut out_offsets = vec![0usize; n + 1];
@@ -98,19 +147,31 @@ pub fn read_binary(path: &Path) -> Result<Csr> {
         *o = read_u64(&mut r)? as usize;
     }
     let out_targets = read_u32_vec(&mut r, m)?;
+    let out_weights = if weighted {
+        Some(read_f64_vec(&mut r, m)?)
+    } else {
+        None
+    };
     let mut in_offsets = vec![0usize; n + 1];
     for o in &mut in_offsets {
         *o = read_u64(&mut r)? as usize;
     }
     let in_sources = read_u32_vec(&mut r, m)?;
+    let in_weights = if weighted {
+        Some(read_f64_vec(&mut r, m)?)
+    } else {
+        None
+    };
     let g = Csr {
         out_offsets,
         out_targets,
         in_offsets,
         in_sources,
+        out_weights,
+        in_weights,
     };
     g.validate()
-        .map_err(|e| anyhow::anyhow!("{}: corrupt graph: {e}", path.display()))?;
+        .map_err(|e| err!("{}: corrupt graph: {e}", path.display()))?;
     Ok(g)
 }
 
@@ -145,6 +206,22 @@ fn read_u32_vec<R: Read>(r: &mut R, len: usize) -> std::io::Result<Vec<u32>> {
     let mut out = vec![0u32; len];
     let bytes = unsafe {
         std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, len * 4)
+    };
+    r.read_exact(bytes)?;
+    Ok(out)
+}
+
+fn write_f64_slice<W: Write>(w: &mut W, xs: &[f64]) -> std::io::Result<()> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 8)
+    };
+    w.write_all(bytes)
+}
+
+fn read_f64_vec<R: Read>(r: &mut R, len: usize) -> std::io::Result<Vec<f64>> {
+    let mut out = vec![0f64; len];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, len * 8)
     };
     r.read_exact(bytes)?;
     Ok(out)
@@ -203,6 +280,56 @@ mod tests {
         write_binary(&g, &p).unwrap();
         let g2 = read_binary(&p).unwrap();
         assert_eq!(g, g2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn weighted_text_roundtrip() {
+        let g = crate::graph::GraphBuilder::new(4)
+            .weighted_edges(&[(0, 1, 2.5), (1, 2, 0.125), (2, 3, 7.0), (3, 0, 1.0)])
+            .build();
+        let p = tmp("wel.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p, false).unwrap();
+        assert!(g2.has_weights());
+        let mut e1: Vec<_> = g.weighted_edges().collect();
+        let mut e2: Vec<_> = g2.weighted_edges().collect();
+        e1.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        e2.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        assert_eq!(e1, e2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mixed_weight_lines_default_to_one() {
+        let p = tmp("mixed.txt");
+        std::fs::write(&p, "0 1 2.5\n1 2\n").unwrap();
+        let g = read_edge_list(&p, false).unwrap();
+        assert!(g.has_weights());
+        assert_eq!(g.out_weights_of(0), Some(&[2.5][..]));
+        assert_eq!(g.out_weights_of(1), Some(&[1.0][..]));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn weighted_binary_roundtrip_exact() {
+        let base = gen::barabasi_albert(200, 3, 9);
+        let g = gen::randomly_weighted(&base, 0.5, 4.5, 11);
+        let p = tmp("wg.ipg");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g, g2);
+        assert!(g2.has_weights());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn unweighted_binary_stays_v1_format() {
+        let g = gen::ring(8);
+        let p = tmp("v1.ipg");
+        write_binary(&g, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..8], b"IPGRAPH1");
         std::fs::remove_file(&p).ok();
     }
 

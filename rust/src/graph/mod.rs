@@ -13,4 +13,4 @@ pub mod io;
 pub mod stats;
 
 pub use builder::GraphBuilder;
-pub use csr::{Csr, VertexId};
+pub use csr::{Csr, EdgeWeight, VertexId};

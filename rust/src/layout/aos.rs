@@ -42,6 +42,16 @@ impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for AosStore<V, M> {
         }
     }
 
+    fn reset(&mut self, g: &Csr, init: &mut dyn FnMut(VertexId) -> V) {
+        debug_assert_eq!(self.records.len(), g.num_vertices());
+        for (v, r) in self.records.iter_mut().enumerate() {
+            *r.value.get_mut() = init(v as VertexId);
+            r.slot_a.clear();
+            r.slot_b.clear();
+        }
+        self.flipped = false;
+    }
+
     #[inline]
     fn len(&self) -> usize {
         self.records.len()
@@ -120,6 +130,21 @@ mod tests {
         store.swap_epochs();
         // Back to the original orientation: slot_a never received anything.
         assert_eq!(store.cur_slot(2).peek(), None);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state_without_realloc() {
+        let g = gen::ring(6);
+        let mut store: AosStore<u64, u64> = AosStore::build(&g, &mut |v| v as u64);
+        store.next_slot(1).store_first(42);
+        store.swap_epochs();
+        *store.value_mut(1) = 999;
+        store.reset(&g, &mut |v| v as u64 + 10);
+        assert_eq!(*store.value(1), 11);
+        for v in g.vertices() {
+            assert_eq!(store.cur_slot(v).peek(), None);
+            assert_eq!(store.next_slot(v).peek(), None);
+        }
     }
 
     #[test]

@@ -38,6 +38,20 @@ impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for SoaStore<V, M> {
         }
     }
 
+    fn reset(&mut self, g: &Csr, init: &mut dyn FnMut(VertexId) -> V) {
+        debug_assert_eq!(self.values.len(), g.num_vertices());
+        for (v, cell) in self.values.iter_mut().enumerate() {
+            *cell.get_mut() = init(v as VertexId);
+        }
+        for s in &self.slots_a {
+            s.clear();
+        }
+        for s in &self.slots_b {
+            s.clear();
+        }
+        self.flipped = false;
+    }
+
     #[inline]
     fn len(&self) -> usize {
         self.values.len()
@@ -111,6 +125,21 @@ mod tests {
         store.swap_epochs();
         assert_eq!(store.cur_slot(1).peek(), Some(7));
         assert_eq!(store.next_slot(1).peek(), None);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state_without_realloc() {
+        let g = gen::ring(5);
+        let mut store: SoaStore<u32, u32> = SoaStore::build(&g, &mut |v| v);
+        store.next_slot(2).store_first(7);
+        store.swap_epochs();
+        *store.value_mut(2) = 77;
+        store.reset(&g, &mut |v| v + 1);
+        assert_eq!(*store.value(2), 3);
+        for v in g.vertices() {
+            assert_eq!(store.cur_slot(v).peek(), None);
+            assert_eq!(store.next_slot(v).peek(), None);
+        }
     }
 
     #[test]

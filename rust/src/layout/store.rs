@@ -94,6 +94,13 @@ pub trait VertexStore<V: Send, M: MessageValue>: Send + Sync {
     where
         Self: Sized;
 
+    /// Re-prime an existing store for a fresh run on the *same* graph:
+    /// re-initialise every value with `init`, clear both epoch slots and
+    /// reset the epoch flip — without reallocating any of the slabs. This
+    /// is what lets a [`crate::engine::GraphSession`] amortise store
+    /// allocations across runs.
+    fn reset(&mut self, g: &Csr, init: &mut dyn FnMut(VertexId) -> V);
+
     /// Number of vertices.
     fn len(&self) -> usize;
 

@@ -3,32 +3,44 @@
 //! A Rust reproduction of *“iPregel: Strategies to Deal with an Extreme
 //! Form of Irregularity in Vertex-Centric Graph Processing”* (Capelli,
 //! Brown, Bull — IA³/SC19), structured as a three-layer
-//! Rust + JAX + Pallas stack (see `DESIGN.md`).
+//! Rust + JAX + Pallas stack (see `DESIGN.md` at the repository root).
 //!
 //! The crate provides:
 //! - a Pregel-style user API ([`engine::VertexProgram`]) with three
 //!   internal execution versions (push+combiner, pull single-broadcast,
-//!   selection bypass);
+//!   selection bypass), weighted-edge iteration
+//!   ([`engine::Context::out_edge`]), typed composable aggregators
+//!   ([`engine::Aggregator`]) and composable termination
+//!   ([`engine::Halt`]);
+//! - a long-lived [`engine::GraphSession`] that runs many programs over
+//!   one graph with pooled stores/mailboxes/bitsets, per-run config
+//!   overrides and warm starts (the deprecated free function
+//!   [`engine::run`] remains as a compatibility shim);
 //! - the paper's optimisations as composable components: hybrid
 //!   combiners ([`combine`]), externalised vertex layouts ([`layout`]),
 //!   edge-centric & dynamic scheduling ([`sched`]);
-//! - a graph substrate ([`graph`]) with generators, IO and the
+//! - a graph substrate ([`graph`]) with generators, IO (including
+//!   weighted edge lists and the `.ipg` v2 binary format) and the
 //!   paper-analogue catalog;
 //! - a calibrated virtual-testbed simulator ([`sim`]) reproducing the
 //!   paper's 32-thread results on this single-core machine;
 //! - a PJRT runtime ([`runtime`]) executing AOT-compiled JAX/Pallas
-//!   superstep kernels for the dense-block accelerated path;
+//!   superstep kernels for the dense-block accelerated path (behind the
+//!   `pjrt` cargo feature; a stub otherwise);
 //! - the experiment harness ([`exp`]) regenerating Tables I and II.
 
 pub mod algos;
 pub mod combine;
 pub mod config;
-pub mod exp;
 pub mod engine;
-pub mod metrics;
+pub mod exp;
 pub mod graph;
 pub mod layout;
+pub mod metrics;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod util;
+
+pub use engine::{EngineConfig, GraphSession, Halt, RunOptions, VertexProgram};
+pub use graph::{Csr, GraphBuilder};

@@ -5,7 +5,7 @@
 //! ```text
 //! ipregel generate  [--tiny] [--dir data/graphs]          generate + cache catalog graphs
 //! ipregel info      <graph|name> [--dir …]                degree stats + histogram
-//! ipregel run       --algo pr|cc|sssp|bfs <graph|name>    real multithreaded engine run
+//! ipregel run       --algo pr|cc|sssp|wsssp|bfs <graph|name>  real engine run (GraphSession)
 //!                   [--threads N] [--schedule S] [--strategy S]
 //!                   [--layout aos|soa] [--bypass] [--iterations N] [--source V]
 //! ipregel sim       (same switches)                       virtual-testbed run (32 vthreads)
@@ -18,11 +18,10 @@
 //! Graphs are referenced by catalog name (`dblp-s`, `friendster-t`, …) or
 //! by path (`.ipg` binary / edge-list text).
 
-use anyhow::{anyhow, bail, Context, Result};
-use ipregel::algos::{Bfs, ConnectedComponents, PageRank, Sssp};
+use ipregel::algos::{Bfs, ConnectedComponents, PageRank, Sssp, WeightedSssp};
 use ipregel::combine::Strategy;
 use ipregel::config::Opts;
-use ipregel::engine::{run, EngineConfig, VertexProgram};
+use ipregel::engine::{EngineConfig, GraphSession, VertexProgram};
 use ipregel::exp::{run_table1, table2, Bench, Table2Options};
 use ipregel::graph::csr::Csr;
 use ipregel::graph::{catalog, io, stats};
@@ -30,7 +29,9 @@ use ipregel::layout::Layout;
 use ipregel::metrics::RunMetrics;
 use ipregel::sched::Schedule;
 use ipregel::sim::{calibrate, SimEngine};
+use ipregel::util::error::{Context, Result};
 use ipregel::util::timer::fmt_duration;
+use ipregel::{bail, err};
 use std::path::{Path, PathBuf};
 
 fn main() {
@@ -116,7 +117,7 @@ fn cmd_info(opts: &Opts) -> Result<()> {
     let arg = opts
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("usage: ipregel info <graph|name>"))?;
+        .ok_or_else(|| err!("usage: ipregel info <graph|name>"))?;
     let g = load_graph(arg, &graph_dir(opts))?;
     let s = stats::degree_stats(&g);
     println!("{s:#?}");
@@ -126,11 +127,11 @@ fn cmd_info(opts: &Opts) -> Result<()> {
 
 fn engine_cfg(opts: &Opts) -> Result<EngineConfig> {
     let schedule = Schedule::parse(&opts.get_or("schedule", "static"))
-        .ok_or_else(|| anyhow!("--schedule: static|dynamic[:chunk]|guided[:min]|edge-centric"))?;
+        .ok_or_else(|| err!("--schedule: static|dynamic[:chunk]|guided[:min]|edge-centric"))?;
     let strategy = Strategy::parse(&opts.get_or("strategy", "lock"))
-        .ok_or_else(|| anyhow!("--strategy: lock|cas|hybrid"))?;
+        .ok_or_else(|| err!("--strategy: lock|cas|hybrid"))?;
     let layout = Layout::parse(&opts.get_or("layout", "aos"))
-        .ok_or_else(|| anyhow!("--layout: aos|soa"))?;
+        .ok_or_else(|| err!("--layout: aos|soa"))?;
     Ok(EngineConfig::default()
         .threads(opts.get_num("threads", 4usize)?)
         .schedule(schedule)
@@ -154,7 +155,7 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
     let arg = opts
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("usage: ipregel run --algo pr|cc|sssp|bfs <graph|name>"))?;
+        .ok_or_else(|| err!("usage: ipregel run --algo pr|cc|sssp|wsssp|bfs <graph|name>"))?;
     let g = load_graph(arg, &graph_dir(opts))?;
     let cfg = engine_cfg(opts)?;
     let algo = opts.get_or("algo", "pr");
@@ -181,7 +182,7 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
             );
             show(&r.values);
         } else {
-            let r = run(g, p, cfg);
+            let r = GraphSession::with_config(g, cfg).run(p);
             print_run(label, &r.metrics);
             show(&r.values);
         }
@@ -234,7 +235,19 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
                 println!("  reached {reached} vertices");
             });
         }
-        other => bail!("--algo {other}: expected pr|cc|sssp|bfs"),
+        "wsssp" | "weighted-sssp" => {
+            let source = opts.get_num("source", g.max_out_degree_vertex())?;
+            let p = WeightedSssp { source };
+            go(&g, &p, cfg, simulated, "weighted-sssp", |vals| {
+                let reached = vals.iter().filter(|d| d.is_finite()).count();
+                let ecc = vals
+                    .iter()
+                    .filter(|d| d.is_finite())
+                    .fold(0.0f64, |a, &b| a.max(b));
+                println!("  reached {reached} vertices, weighted eccentricity {ecc:.3}");
+            });
+        }
+        other => bail!("--algo {other}: expected pr|cc|sssp|wsssp|bfs"),
     }
     Ok(())
 }
@@ -262,7 +275,7 @@ fn cmd_table2(opts: &Opts) -> Result<()> {
         None => Bench::all().to_vec(),
         Some(list) => list
             .split(',')
-            .map(|b| Bench::parse(b).ok_or_else(|| anyhow!("--bench: bad value '{b}'")))
+            .map(|b| Bench::parse(b).ok_or_else(|| err!("--bench: bad value '{b}'")))
             .collect::<Result<_>>()?,
     };
     let t2 = Table2Options {
@@ -297,7 +310,7 @@ fn cmd_accel(opts: &Opts) -> Result<()> {
     let arg = opts
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("usage: ipregel accel --algo pr|cc|sssp <graph|name>"))?;
+        .ok_or_else(|| err!("usage: ipregel accel --algo pr|cc|sssp <graph|name>"))?;
     let g = load_graph(arg, &graph_dir(opts))?;
     let adir = opts
         .get("artifacts")

@@ -15,6 +15,20 @@ pub struct SuperstepStats {
     pub barrier_time: Duration,
 }
 
+/// Why a run stopped.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HaltReason {
+    /// Every vertex halted with no pending messages (classic Pregel).
+    #[default]
+    Quiescence,
+    /// The superstep cap (config or per-run [`Halt`] policy) was reached.
+    ///
+    /// [`Halt`]: ../engine/session/struct.Halt.html
+    SuperstepCap,
+    /// The per-run convergence predicate fired.
+    Converged,
+}
+
 /// Whole-run metrics returned by every engine.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -22,6 +36,12 @@ pub struct RunMetrics {
     pub supersteps: Vec<SuperstepStats>,
     /// Total wall-clock time including setup and teardown.
     pub total_time: Duration,
+    /// Why the run stopped.
+    pub halt_reason: HaltReason,
+    /// Whether this run recycled a pooled vertex store from its
+    /// [`GraphSession`](../engine/session/struct.GraphSession.html)
+    /// instead of allocating a fresh one.
+    pub store_reused: bool,
 }
 
 impl RunMetrics {
@@ -134,6 +154,7 @@ mod tests {
                 },
             ],
             total_time: Duration::from_millis(10),
+            ..Default::default()
         };
         assert_eq!(m.num_supersteps(), 2);
         assert_eq!(m.total_messages(), 107);

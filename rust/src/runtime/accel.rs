@@ -8,9 +8,10 @@
 //! Results are bit-compatible with the pure-Rust engine up to f32
 //! rounding and validated against it in `rust/tests/test_accel.rs`.
 
+use crate::bail;
 use crate::graph::csr::{Csr, VertexId};
 use crate::runtime::Runtime;
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 /// A graph embedded in the runtime's padded dense block.
 pub struct DenseBlock {
@@ -84,7 +85,7 @@ pub fn pagerank(rt: &Runtime, g: &Csr, block: &DenseBlock) -> Result<Vec<f32>> {
 /// Returns distances with `f32::INFINITY` for unreached vertices.
 pub fn sssp(rt: &Runtime, g: &Csr, block: &DenseBlock, source: VertexId) -> Result<Vec<f32>> {
     let n_real = block.n_real;
-    anyhow::ensure!((source as usize) < n_real, "source out of range");
+    crate::ensure!((source as usize) < n_real, "source out of range");
     let mut dist = vec![f32::INFINITY; n_real];
     dist[source as usize] = 0.0;
     let mut cur = block.pad(rt, &dist, f32::INFINITY);
@@ -105,7 +106,7 @@ pub fn sssp(rt: &Runtime, g: &Csr, block: &DenseBlock, source: VertexId) -> Resu
 /// min-vertex-id component labels (as f32 ids, exact for n < 2^24).
 pub fn connected_components(rt: &Runtime, g: &Csr, block: &DenseBlock) -> Result<Vec<u32>> {
     let n_real = block.n_real;
-    anyhow::ensure!(
+    crate::ensure!(
         n_real < (1 << 24),
         "labels-as-f32 require n < 2^24 for exactness"
     );
@@ -147,12 +148,12 @@ pub fn multi_sssp(
     let n = rt.manifest.n;
     let b = rt.manifest.multi_sources;
     let n_real = block.n_real;
-    anyhow::ensure!(
+    crate::ensure!(
         !sources.is_empty() && sources.len() <= b,
         "need 1..={b} sources, got {}",
         sources.len()
     );
-    anyhow::ensure!(
+    crate::ensure!(
         sources.iter().all(|&s| (s as usize) < n_real),
         "source out of range"
     );

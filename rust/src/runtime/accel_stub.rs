@@ -1,0 +1,49 @@
+//! Stub of the accelerated dense-block backend, compiled when the `pjrt`
+//! cargo feature is off (the default, offline build).
+//!
+//! [`super::Runtime::load`] always errors in this configuration, so a
+//! stub [`Runtime`](super::Runtime) value can never exist and none of
+//! these functions is reachable; they exist so callers (CLI, examples,
+//! tests) compile unchanged and skip the accel path at runtime.
+
+use crate::graph::csr::{Csr, VertexId};
+use crate::runtime::Runtime;
+use crate::util::error::Result;
+
+/// A graph embedded in the runtime's padded dense block (stub).
+pub struct DenseBlock {
+    /// Real (unpadded) vertex count.
+    pub n_real: usize,
+}
+
+impl DenseBlock {
+    /// Embed `g` into the runtime's block (unreachable without `pjrt`).
+    pub fn from_graph(rt: &Runtime, _g: &Csr) -> Result<DenseBlock> {
+        rt.absent()
+    }
+}
+
+/// PageRank via the fused `pagerank_run` artifact (unreachable stub).
+pub fn pagerank(rt: &Runtime, _g: &Csr, _block: &DenseBlock) -> Result<Vec<f32>> {
+    rt.absent()
+}
+
+/// Unweighted SSSP fixpoint iteration (unreachable stub).
+pub fn sssp(rt: &Runtime, _g: &Csr, _block: &DenseBlock, _source: VertexId) -> Result<Vec<f32>> {
+    rt.absent()
+}
+
+/// Connected components fixpoint iteration (unreachable stub).
+pub fn connected_components(rt: &Runtime, _g: &Csr, _block: &DenseBlock) -> Result<Vec<u32>> {
+    rt.absent()
+}
+
+/// One raw PageRank step (unreachable stub).
+pub fn pagerank_step(rt: &Runtime, _block: &DenseBlock, _contrib: &[f32]) -> Result<Vec<f32>> {
+    rt.absent()
+}
+
+/// Batched multi-source SSSP (unreachable stub).
+pub fn multi_sssp(rt: &Runtime, _block: &DenseBlock, _sources: &[VertexId]) -> Result<Vec<Vec<f32>>> {
+    rt.absent()
+}

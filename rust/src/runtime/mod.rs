@@ -8,11 +8,23 @@
 //! Interchange is HLO **text** — the xla crate's xla_extension 0.5.1
 //! rejects jax≥0.5's 64-bit-instruction-id protos, while the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The XLA dependency is only available inside the accelerator image, so
+//! the whole execution path is gated behind the `pjrt` cargo feature.
+//! Without it (the default, offline build) [`Runtime::load`] reports the
+//! backend unavailable and every caller falls back to the pure-Rust
+//! engine; [`Manifest`] parsing stays available everywhere so tooling can
+//! still inspect artifact directories.
 
+#[cfg(feature = "pjrt")]
 pub mod accel;
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+#[cfg(not(feature = "pjrt"))]
+#[path = "accel_stub.rs"]
+pub mod accel;
+
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 use std::path::{Path, PathBuf};
 
 /// Parsed `artifacts/manifest.txt`.
@@ -48,7 +60,7 @@ impl Manifest {
             }
             let (k, v) = line
                 .split_once('=')
-                .ok_or_else(|| anyhow!("bad manifest line: {line}"))?;
+                .ok_or_else(|| err!("bad manifest line: {line}"))?;
             match k {
                 "n" => n = Some(v.parse().context("n")?),
                 "tile" => tile = Some(v.parse().context("tile")?),
@@ -65,8 +77,8 @@ impl Manifest {
             }
         }
         Ok(Manifest {
-            n: n.ok_or_else(|| anyhow!("manifest missing n"))?,
-            tile: tile.ok_or_else(|| anyhow!("manifest missing tile"))?,
+            n: n.ok_or_else(|| err!("manifest missing n"))?,
+            tile: tile.ok_or_else(|| err!("manifest missing tile"))?,
             damping: damping.unwrap_or(0.85),
             pr_iterations: pr_iterations.unwrap_or(10),
             multi_sources: multi_sources.unwrap_or(32),
@@ -83,22 +95,6 @@ impl Manifest {
     }
 }
 
-/// A device-resident buffer plus the host literal backing its (possibly
-/// still in-flight) transfer.
-pub struct DeviceBuf {
-    /// The PJRT buffer to execute with.
-    pub buf: xla::PjRtBuffer,
-    _keepalive: xla::Literal,
-}
-
-/// A compiled artifact set on a live PJRT CPU client.
-pub struct Runtime {
-    /// The manifest the artifacts were built under.
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
 /// Default artifacts directory: `$IPREGEL_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
     std::env::var_os("IPREGEL_ARTIFACTS")
@@ -106,134 +102,221 @@ pub fn default_artifact_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl Runtime {
-    /// Compile every artifact in `dir` on a fresh PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        let mut exes = HashMap::new();
-        for name in &manifest.artifacts {
-            let path = dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-            let key = name.trim_end_matches(".hlo.txt").to_string();
-            exes.insert(key, exe);
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use super::Manifest;
+    use crate::err;
+    use crate::util::error::Result;
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    /// A device-resident buffer plus the host literal backing its (possibly
+    /// still in-flight) transfer.
+    pub struct DeviceBuf {
+        /// The PJRT buffer to execute with.
+        pub buf: xla::PjRtBuffer,
+        _keepalive: xla::Literal,
+    }
+
+    /// A compiled artifact set on a live PJRT CPU client.
+    pub struct Runtime {
+        /// The manifest the artifacts were built under.
+        pub manifest: Manifest,
+        client: xla::PjRtClient,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Runtime {
+        /// Compile every artifact in `dir` on a fresh PJRT CPU client.
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT client: {e:?}"))?;
+            let mut exes = HashMap::new();
+            for name in &manifest.artifacts {
+                let path = dir.join(name);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
+                )
+                .map_err(|e| err!("parsing {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| err!("compiling {}: {e:?}", path.display()))?;
+                let key = name.trim_end_matches(".hlo.txt").to_string();
+                exes.insert(key, exe);
+            }
+            Ok(Runtime {
+                manifest,
+                client,
+                exes,
+            })
         }
-        Ok(Runtime {
-            manifest,
-            client,
-            exes,
-        })
-    }
 
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// Names of loaded executables.
-    pub fn executables(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
-        v.sort_unstable();
-        v
-    }
+        /// Names of loaded executables.
+        pub fn executables(&self) -> Vec<&str> {
+            let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+            v.sort_unstable();
+            v
+        }
 
-    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        self.exes
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not loaded (have {:?})", self.executables()))
-    }
+        fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            self.exes.get(name).ok_or_else(|| {
+                err!("artifact '{name}' not loaded (have {:?})", self.executables())
+            })
+        }
 
-    /// Execute `name` with the given literals; unwraps the 1-tuple result
-    /// (artifacts are lowered with `return_tuple=True`) into a f32 vector.
-    pub fn call_vec(&self, name: &str, args: &[&xla::Literal]) -> Result<Vec<f32>> {
-        let exe = self.exe(name)?;
-        let result = exe
-            .execute::<&xla::Literal>(args)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
-        out.to_vec::<f32>()
-            .map_err(|e| anyhow!("reading {name} result: {e:?}"))
-    }
+        /// Execute `name` with the given literals; unwraps the 1-tuple result
+        /// (artifacts are lowered with `return_tuple=True`) into a f32 vector.
+        pub fn call_vec(&self, name: &str, args: &[&xla::Literal]) -> Result<Vec<f32>> {
+            let exe = self.exe(name)?;
+            let result = exe
+                .execute::<&xla::Literal>(args)
+                .map_err(|e| err!("executing {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| err!("fetching {name} result: {e:?}"))?;
+            let out = result
+                .to_tuple1()
+                .map_err(|e| err!("untupling {name} result: {e:?}"))?;
+            out.to_vec::<f32>()
+                .map_err(|e| err!("reading {name} result: {e:?}"))
+        }
 
-    /// Upload a literal to the device once; reuse the returned buffer
-    /// across many executions (§Perf: the n×n adjacency dominates the
-    /// per-call transfer cost of iterated supersteps).
-    pub fn to_device(&self, lit: xla::Literal) -> Result<DeviceBuf> {
-        // Pass the first addressable device explicitly — the crate's
-        // `None` path hands a null device pointer to the C++ side, which
-        // the CPU plugin dereferences. The literal is kept alive inside
-        // the returned [`DeviceBuf`]: the CPU client's host->device
-        // transfer is asynchronous and may still read the host memory
-        // after this call returns.
-        let devices = self.client.addressable_devices();
-        let dev = devices.first();
-        let buf = self
-            .client
-            .buffer_from_host_literal(dev, &lit)
-            .map_err(|e| anyhow!("host->device transfer: {e:?}"))?;
-        Ok(DeviceBuf {
-            buf,
-            _keepalive: lit,
-        })
-    }
+        /// Upload a literal to the device once; reuse the returned buffer
+        /// across many executions (§Perf: the n×n adjacency dominates the
+        /// per-call transfer cost of iterated supersteps).
+        pub fn to_device(&self, lit: xla::Literal) -> Result<DeviceBuf> {
+            // Pass the first addressable device explicitly — the crate's
+            // `None` path hands a null device pointer to the C++ side, which
+            // the CPU plugin dereferences. The literal is kept alive inside
+            // the returned [`DeviceBuf`]: the CPU client's host->device
+            // transfer is asynchronous and may still read the host memory
+            // after this call returns.
+            let devices = self.client.addressable_devices();
+            let dev = devices.first();
+            let buf = self
+                .client
+                .buffer_from_host_literal(dev, &lit)
+                .map_err(|e| err!("host->device transfer: {e:?}"))?;
+            Ok(DeviceBuf {
+                buf,
+                _keepalive: lit,
+            })
+        }
 
-    /// Execute `name` with device-resident buffers (see [`Self::to_device`]).
-    pub fn call_vec_b(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
-        let exe = self.exe(name)?;
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(args)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
-        out.to_vec::<f32>()
-            .map_err(|e| anyhow!("reading {name} result: {e:?}"))
-    }
+        /// Execute `name` with device-resident buffers (see [`Self::to_device`]).
+        pub fn call_vec_b(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+            let exe = self.exe(name)?;
+            let result = exe
+                .execute_b::<&xla::PjRtBuffer>(args)
+                .map_err(|e| err!("executing {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| err!("fetching {name} result: {e:?}"))?;
+            let out = result
+                .to_tuple1()
+                .map_err(|e| err!("untupling {name} result: {e:?}"))?;
+            out.to_vec::<f32>()
+                .map_err(|e| err!("reading {name} result: {e:?}"))
+        }
 
-    /// Build a square `n×n` f32 literal from a flat row-major vector.
-    pub fn square_literal(&self, flat: &[f32]) -> Result<xla::Literal> {
-        let n = self.manifest.n;
-        anyhow::ensure!(flat.len() == n * n, "expected {}², got {}", n, flat.len());
-        xla::Literal::vec1(flat)
-            .reshape(&[n as i64, n as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))
-    }
+        /// Build a square `n×n` f32 literal from a flat row-major vector.
+        pub fn square_literal(&self, flat: &[f32]) -> Result<xla::Literal> {
+            let n = self.manifest.n;
+            crate::ensure!(flat.len() == n * n, "expected {}², got {}", n, flat.len());
+            xla::Literal::vec1(flat)
+                .reshape(&[n as i64, n as i64])
+                .map_err(|e| err!("reshape: {e:?}"))
+        }
 
-    /// Build an `n`-vector f32 literal.
-    pub fn vec_literal(&self, v: &[f32]) -> Result<xla::Literal> {
-        anyhow::ensure!(v.len() == self.manifest.n, "expected {}, got {}", self.manifest.n, v.len());
-        Ok(xla::Literal::vec1(v))
-    }
+        /// Build an `n`-vector f32 literal.
+        pub fn vec_literal(&self, v: &[f32]) -> Result<xla::Literal> {
+            crate::ensure!(
+                v.len() == self.manifest.n,
+                "expected {}, got {}",
+                self.manifest.n,
+                v.len()
+            );
+            Ok(xla::Literal::vec1(v))
+        }
 
-    /// Build an f32 scalar literal.
-    pub fn scalar_literal(&self, v: f32) -> xla::Literal {
-        xla::Literal::scalar(v)
-    }
+        /// Build an f32 scalar literal.
+        pub fn scalar_literal(&self, v: f32) -> xla::Literal {
+            xla::Literal::scalar(v)
+        }
 
-    /// Build an `n×B` f32 literal from a flat row-major vector (the
-    /// multi-source distance matrix).
-    pub fn batch_literal(&self, flat: &[f32]) -> Result<xla::Literal> {
-        let n = self.manifest.n;
-        let b = self.manifest.multi_sources;
-        anyhow::ensure!(flat.len() == n * b, "expected {n}×{b}, got {}", flat.len());
-        xla::Literal::vec1(flat)
-            .reshape(&[n as i64, b as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))
+        /// Build an `n×B` f32 literal from a flat row-major vector (the
+        /// multi-source distance matrix).
+        pub fn batch_literal(&self, flat: &[f32]) -> Result<xla::Literal> {
+            let n = self.manifest.n;
+            let b = self.manifest.multi_sources;
+            crate::ensure!(flat.len() == n * b, "expected {n}×{b}, got {}", flat.len());
+            xla::Literal::vec1(flat)
+                .reshape(&[n as i64, b as i64])
+                .map_err(|e| err!("reshape: {e:?}"))
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::{DeviceBuf, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_backend {
+    use super::Manifest;
+    use crate::bail;
+    use crate::util::error::Result;
+    use std::path::Path;
+
+    /// Uninhabited: proves a stub [`Runtime`] can never be constructed, so
+    /// its methods are statically unreachable.
+    enum Never {}
+
+    /// Placeholder for the device buffer type when the backend is absent.
+    pub struct DeviceBuf {
+        _never: Never,
+    }
+
+    /// Stub runtime compiled when the `pjrt` feature is off. Parses
+    /// nothing, executes nothing: [`Runtime::load`] always errors, which
+    /// callers already treat as "accel path unavailable, skip".
+    pub struct Runtime {
+        /// The manifest the artifacts were built under.
+        pub manifest: Manifest,
+        _never: Never,
+    }
+
+    impl Runtime {
+        /// Always fails: the crate was built without the `pjrt` feature.
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            bail!(
+                "PJRT backend unavailable: ipregel was built without the \
+                 `pjrt` cargo feature (artifacts dir: {})",
+                dir.display()
+            );
+        }
+
+        pub(crate) fn absent(&self) -> ! {
+            match self._never {}
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.absent()
+        }
+
+        /// Names of loaded executables.
+        pub fn executables(&self) -> Vec<&str> {
+            self.absent()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_backend::{DeviceBuf, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -264,5 +347,12 @@ mod tests {
         // check the default path shape.
         let d = default_artifact_dir();
         assert!(d.ends_with("artifacts") || d.is_absolute());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let e = Runtime::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 }

@@ -12,8 +12,8 @@
 //! never in *answers*.
 
 use crate::combine::{Combiner, Strategy};
-use crate::engine::{Context, EngineConfig, Mode, VertexProgram};
-use crate::graph::csr::{Csr, VertexId};
+use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, VertexProgram};
+use crate::graph::csr::{Csr, EdgeWeight, VertexId};
 use crate::layout::{SoaStore, VertexStore};
 use crate::sim::machine::VirtualMachine;
 use crate::sim::CostModel;
@@ -64,8 +64,9 @@ pub struct SimEngine<'g, P: VertexProgram> {
     cost: CostModel,
 }
 
-/// Mutable per-superstep state shared with the context.
-struct StepState {
+/// Mutable per-superstep state shared with the context. Generic over the
+/// program's aggregated-value type.
+struct StepState<AV> {
     /// Push: messages received per recipient this superstep.
     counts: Vec<u32>,
     /// Push: recipients touched this superstep (for cheap reset).
@@ -77,26 +78,26 @@ struct StepState {
     /// Explicit (non-broadcast) send destinations.
     sends_log: Vec<VertexId>,
     /// Aggregator partial of the current superstep: (value, contributed?).
-    agg_cur: (f64, bool),
+    agg_cur: (AV, bool),
 }
 
 /// Serial context: delivers for real, records for the model.
 struct SimCtx<'a, P: VertexProgram> {
     g: &'a Csr,
     store: &'a SoaStore<P::Value, P::Message>,
-    program: &'a P,
     comb: &'a P::Comb,
-    agg_prev: Option<f64>,
+    agg: &'a P::Agg,
+    agg_prev: Option<&'a AggValue<P>>,
     strategy: Strategy,
     mode: Mode,
-    step: &'a mut StepState,
+    step: &'a mut StepState<AggValue<P>>,
     superstep: usize,
     v: VertexId,
     halted: bool,
     did_broadcast: bool,
 }
 
-impl<'a, P: VertexProgram> Context<P::Value, P::Message> for SimCtx<'a, P> {
+impl<'a, P: VertexProgram> Context<P::Value, P::Message, AggValue<P>> for SimCtx<'a, P> {
     fn id(&self) -> VertexId {
         self.v
     }
@@ -117,6 +118,10 @@ impl<'a, P: VertexProgram> Context<P::Value, P::Message> for SimCtx<'a, P> {
     }
     fn in_degree(&self) -> usize {
         self.g.in_degree(self.v)
+    }
+
+    fn out_edge(&self, i: usize) -> (VertexId, EdgeWeight) {
+        self.g.out_edge(self.v, i)
     }
 
     fn send(&mut self, dst: VertexId, msg: P::Message) {
@@ -154,20 +159,20 @@ impl<'a, P: VertexProgram> Context<P::Value, P::Message> for SimCtx<'a, P> {
         self.halted = true;
     }
 
-    fn contribute(&mut self, x: f64) {
-        let (acc, used) = self.step.agg_cur;
+    fn contribute(&mut self, x: AggValue<P>) {
+        let (acc, used) = self.step.agg_cur.clone();
         self.step.agg_cur = (
-            if used { self.program.agg_combine(acc, x) } else { x },
+            if used { self.agg.combine(acc, x) } else { x },
             true,
         );
     }
 
-    fn aggregated(&self) -> Option<f64> {
+    fn aggregated(&self) -> Option<&AggValue<P>> {
         self.agg_prev
     }
 }
 
-impl StepState {
+impl<AV: Clone> StepState<AV> {
     fn record_delivery(&mut self, dst: VertexId) {
         if self.counts[dst as usize] == 0 {
             self.touched.push(dst);
@@ -202,6 +207,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
         let cfg = &self.cfg;
         let cost = &self.cost;
         let comb = self.program.combiner();
+        let agg = self.program.aggregator();
         let mode = self.program.mode();
         let mut init = |v: VertexId| self.program.init(g, v);
         let mut store: SoaStore<P::Value, P::Message> = SoaStore::build(g, &mut init);
@@ -214,13 +220,13 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
         }
 
         let mut vm = VirtualMachine::new(cfg.threads);
-        let mut step = StepState {
+        let mut step: StepState<AggValue<P>> = StepState {
             counts: vec![0; n],
             touched: Vec::new(),
             active_next: BitSet::new(n),
             bcast_next: BitSet::new(n),
             sends_log: Vec::new(),
-            agg_cur: (self.program.agg_neutral(), false),
+            agg_cur: (agg.neutral(), false),
         };
         for v in g.vertices() {
             if self.program.initially_active(g, v) {
@@ -239,7 +245,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             None
         };
 
-        let mut agg_prev: Option<f64> = None;
+        let mut agg_prev: Option<AggValue<P>> = None;
         let mut superstep = 0usize;
         let mut total_messages = 0u64;
         let mut imbalance_sum = 0.0;
@@ -291,9 +297,9 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 let mut ctx: SimCtx<'_, P> = SimCtx {
                     g,
                     store: &store,
-                    program: self.program,
                     comb: &comb,
-                    agg_prev,
+                    agg: &agg,
+                    agg_prev: agg_prev.as_ref(),
                     strategy: cfg.strategy,
                     mode,
                     step: &mut step,
@@ -432,9 +438,9 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             for &d in &step.touched {
                 step.counts[d as usize] = 0;
             }
-            let (agg_val, agg_used) = step.agg_cur;
+            let (agg_val, agg_used) =
+                std::mem::replace(&mut step.agg_cur, (agg.neutral(), false));
             agg_prev = if agg_used { Some(agg_val) } else { None };
-            step.agg_cur = (self.program.agg_neutral(), false);
             store.swap_epochs();
             superstep += 1;
         }
@@ -459,7 +465,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
 mod tests {
     use super::*;
     use crate::algos::{ConnectedComponents, PageRank, Sssp};
-    use crate::engine::run;
+    use crate::engine::GraphSession;
     use crate::graph::gen;
     use crate::layout::Layout;
     use crate::sched::Schedule;
@@ -468,7 +474,7 @@ mod tests {
     fn sim_values_match_real_engine_pagerank() {
         let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 41);
         let pr = PageRank::default();
-        let real = run(&g, &pr, EngineConfig::default());
+        let real = GraphSession::new(&g).run(&pr);
         let sim = SimEngine::new(&g, &pr, EngineConfig::default()).run();
         for v in g.vertices() {
             let (a, b) = (real.values[v as usize], sim.values[v as usize]);
@@ -480,12 +486,13 @@ mod tests {
     #[test]
     fn sim_values_match_real_engine_cc_and_sssp() {
         let g = gen::barabasi_albert(500, 3, 2);
-        let real_cc = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+        let session = GraphSession::with_config(&g, EngineConfig::default().bypass(true));
+        let real_cc = session.run(&ConnectedComponents);
         let sim_cc = SimEngine::new(&g, &ConnectedComponents, EngineConfig::default().bypass(true)).run();
         assert_eq!(real_cc.values, sim_cc.values);
 
         let p = Sssp::from_hub(&g);
-        let real_s = run(&g, &p, EngineConfig::default().bypass(true));
+        let real_s = session.run(&p);
         let sim_s = SimEngine::new(&g, &p, EngineConfig::default().bypass(true)).run();
         assert_eq!(real_s.values, sim_s.values);
     }

@@ -1,0 +1,152 @@
+//! Minimal error plumbing for the offline build (no `anyhow` crate).
+//!
+//! Provides the same ergonomics the codebase needs from `anyhow`: a
+//! string-backed [`Error`] that any `std::error::Error` converts into via
+//! `?`, a [`Result`] alias, the [`err!`]/[`bail!`]/[`ensure!`] macros, and
+//! a [`Context`] extension trait for `Result` and `Option`.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of context messages.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Error from a displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error {
+            msg: msg.to_string(),
+        }
+    }
+
+    /// Prepend a context layer, `anyhow`-style (`context: cause`).
+    pub fn wrap(self, ctx: impl fmt::Display) -> Self {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    // `fn main() -> Result<()>` prints errors with Debug; show the plain
+    // message rather than a struct dump.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, which
+// is what makes this blanket conversion legal (same trick as `anyhow`).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string: `err!("bad id {id}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)*));
+        }
+    };
+}
+
+/// Attach context to errors (and to `None`), mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn context_layers_compose() {
+        let e: Result<()> = Err(io_err());
+        let wrapped = e.with_context(|| "opening x.txt").unwrap_err();
+        assert_eq!(wrapped.to_string(), "opening x.txt: gone");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        fn guarded(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(guarded(3).unwrap(), 3);
+        assert_eq!(guarded(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(guarded(7).unwrap_err().to_string(), "unlucky");
+        let e = err!("formatted {}", 42);
+        assert_eq!(e.to_string(), "formatted 42");
+    }
+}

@@ -6,10 +6,49 @@
 //! harness ([`quick`]).
 
 pub mod bitset;
+pub mod error;
 pub mod prefix;
 pub mod quick;
 pub mod rng;
 pub mod timer;
+
+/// Pads and aligns a value to 128 bytes so neighbouring instances never
+/// share a cache line (two 64-byte lines: spatial prefetchers pull pairs).
+/// Local stand-in for `crossbeam_utils::CachePadded` — the build is
+/// offline and dependency-free.
+#[derive(Clone, Copy, Debug, Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap a value in cache-line padding.
+    pub const fn new(value: T) -> Self {
+        CachePadded { value }
+    }
+
+    /// Unwrap the inner value.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
 
 /// Human-readable formatting of a count with thousands separators,
 /// e.g. `1806067135` → `"1,806,067,135"`.
@@ -60,6 +99,15 @@ mod tests {
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
         assert!((geomean(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
         assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn cache_padded_is_line_aligned() {
+        assert_eq!(std::mem::align_of::<CachePadded<u64>>(), 128);
+        let mut c = CachePadded::new(7u64);
+        *c += 1;
+        assert_eq!(*c, 8);
+        assert_eq!(c.into_inner(), 8);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! directory is missing so `cargo test` works on a fresh checkout.
 
 use ipregel::algos::{ConnectedComponents, PageRank, Sssp};
-use ipregel::engine::{run, EngineConfig};
+use ipregel::engine::{EngineConfig, GraphSession};
 use ipregel::graph::gen;
 use ipregel::runtime::{accel, default_artifact_dir, Runtime};
 
@@ -28,7 +28,7 @@ fn accel_pagerank_matches_engine() {
     let block = accel::DenseBlock::from_graph(&rt, &g).unwrap();
     let accel_ranks = accel::pagerank(&rt, &g, &block).unwrap();
 
-    let engine_ranks = run(&g, &PageRank::default(), EngineConfig::default());
+    let engine_ranks = GraphSession::new(&g).run(&PageRank::default());
     assert_eq!(accel_ranks.len(), 600);
     for v in 0..600 {
         let (a, b) = (accel_ranks[v] as f64, engine_ranks.values[v]);
@@ -46,7 +46,7 @@ fn accel_sssp_matches_engine() {
     let p = Sssp::from_hub(&g);
     let block = accel::DenseBlock::from_graph(&rt, &g).unwrap();
     let accel_dist = accel::sssp(&rt, &g, &block, p.source).unwrap();
-    let engine_dist = run(&g, &p, EngineConfig::default().bypass(true));
+    let engine_dist = GraphSession::with_config(&g, EngineConfig::default().bypass(true)).run(&p);
     for v in 0..g.num_vertices() {
         let a = accel_dist[v];
         let b = engine_dist.values[v];
@@ -64,7 +64,8 @@ fn accel_cc_matches_engine() {
     let g = gen::disjoint_rings(7, 40); // 280 vertices, 7 components
     let block = accel::DenseBlock::from_graph(&rt, &g).unwrap();
     let accel_labels = accel::connected_components(&rt, &g, &block).unwrap();
-    let engine_labels = run(&g, &ConnectedComponents, EngineConfig::default().bypass(true));
+    let engine_labels =
+        GraphSession::with_config(&g, EngineConfig::default().bypass(true)).run(&ConnectedComponents);
     assert_eq!(accel_labels, engine_labels.values);
 }
 
@@ -113,11 +114,8 @@ fn accel_multi_sssp_matches_per_source_engine_runs() {
     let all = accel::multi_sssp(&rt, &block, &sources).unwrap();
     assert_eq!(all.len(), sources.len());
     for (k, &src) in sources.iter().enumerate() {
-        let engine = run(
-            &g,
-            &Sssp { source: src },
-            EngineConfig::default().bypass(true),
-        );
+        let engine = GraphSession::with_config(&g, EngineConfig::default().bypass(true))
+            .run(&Sssp { source: src });
         for v in 0..g.num_vertices() {
             let a = all[k][v];
             let b = engine.values[v];

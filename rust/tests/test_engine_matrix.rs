@@ -1,11 +1,16 @@
 //! Cross-configuration integration tests: every benchmark algorithm must
 //! produce identical results under the full optimisation matrix — the
 //! paper's core "transparent to the user" claim — and the virtual-testbed
-//! engine must agree with the real engine everywhere.
+//! engine must agree with the real engine everywhere. All runs go through
+//! the [`GraphSession`] API, so the matrix doubles as a soak test of the
+//! session's store/bitset pooling across heterogeneous configurations.
 
-use ipregel::algos::{reference, Bfs, ConnectedComponents, MaxValue, PageRank, Sssp};
+use ipregel::algos::{
+    kcore, pagerank_dangling, reference, Bfs, ConnectedComponents, DanglingPageRank, DegreeCount,
+    IncrementalCc, KCore, MaxValue, PageRank, Sssp, WeightedSssp,
+};
 use ipregel::combine::Strategy;
-use ipregel::engine::{run, EngineConfig};
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions};
 use ipregel::graph::csr::Csr;
 use ipregel::graph::gen;
 use ipregel::layout::Layout;
@@ -37,6 +42,34 @@ fn matrix() -> Vec<EngineConfig> {
     cfgs
 }
 
+/// Strategy × Layout × Schedule × bypass — the full per-run switch grid
+/// (strategies only matter in push mode but are exercised everywhere).
+fn full_matrix() -> Vec<EngineConfig> {
+    let mut cfgs = Vec::new();
+    for &strategy in &[Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+        for &layout in &[Layout::Interleaved, Layout::Externalised] {
+            for &schedule in &[
+                Schedule::Static,
+                Schedule::Dynamic { chunk: 32 },
+                Schedule::Guided { min_chunk: 4 },
+                Schedule::EdgeCentric,
+            ] {
+                for &bypass in &[false, true] {
+                    cfgs.push(
+                        EngineConfig::default()
+                            .threads(4)
+                            .strategy(strategy)
+                            .layout(layout)
+                            .schedule(schedule)
+                            .bypass(bypass),
+                    );
+                }
+            }
+        }
+    }
+    cfgs
+}
+
 fn graphs() -> Vec<Csr> {
     vec![
         gen::rmat(9, 6, 0.57, 0.19, 0.19, 1),
@@ -51,8 +84,9 @@ fn graphs() -> Vec<Csr> {
 fn pagerank_identical_across_matrix() {
     for (gi, g) in graphs().into_iter().enumerate() {
         let want = reference::pagerank(&g, 10, 0.85);
+        let session = GraphSession::new(&g);
         for cfg in matrix() {
-            let got = run(&g, &PageRank::default(), cfg);
+            let got = session.run_with(&PageRank::default(), RunOptions::new().config(cfg));
             for v in g.vertices() {
                 let (a, b) = (got.values[v as usize], want[v as usize]);
                 assert!(
@@ -68,8 +102,9 @@ fn pagerank_identical_across_matrix() {
 fn cc_identical_across_matrix() {
     for (gi, g) in graphs().into_iter().enumerate() {
         let want = reference::connected_components(&g);
+        let session = GraphSession::new(&g);
         for cfg in matrix() {
-            let got = run(&g, &ConnectedComponents, cfg);
+            let got = session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
             assert_eq!(got.values, want, "graph {gi} under {cfg:?}");
         }
     }
@@ -80,20 +115,119 @@ fn sssp_identical_across_matrix_and_strategies() {
     for (gi, g) in graphs().into_iter().enumerate() {
         let p = Sssp::from_hub(&g);
         let want = reference::bfs_levels(&g, p.source);
+        let session = GraphSession::new(&g);
         for cfg in matrix() {
             for strategy in [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
-                let got = run(&g, &p, cfg.strategy(strategy));
+                let got = session.run_with(&p, RunOptions::new().config(cfg.strategy(strategy)));
                 assert_eq!(got.values, want, "graph {gi} {strategy:?} under {cfg:?}");
             }
         }
     }
 }
 
+/// The satellite matrix: *every* algorithm in `algos/` against its serial
+/// reference under the full Strategy × Layout × Schedule × bypass grid,
+/// all through one session per graph.
+#[test]
+fn all_algos_match_references_across_full_matrix() {
+    let g = gen::barabasi_albert(300, 3, 14);
+    let gw = gen::randomly_weighted(&g, 0.5, 4.0, 99);
+
+    // Serial ground truths, computed once.
+    let cc_want = reference::connected_components(&g);
+    let pr_want = reference::pagerank(&g, 10, 0.85);
+    let dpr_want = pagerank_dangling::reference(&g, 10, 0.85);
+    let sssp_src = g.max_out_degree_vertex();
+    let sssp_want = reference::bfs_levels(&g, sssp_src);
+    let wsssp_want = reference::dijkstra(&gw, sssp_src);
+    let deg_want: Vec<u64> = g.vertices().map(|v| g.in_degree(v) as u64).collect();
+    let kcore_want = kcore::kcore_reference(&g, 3);
+    let bfs_want = reference::bfs_levels(&g, sssp_src);
+    // MaxValue converges to the per-component maximum of the seeds.
+    let seed = |v: u32| (v as u64).wrapping_mul(2654435761) % 1_000_003;
+    let mv_want: Vec<u64> = {
+        let mut comp_max = std::collections::HashMap::new();
+        for v in g.vertices() {
+            let e = comp_max.entry(cc_want[v as usize]).or_insert(0u64);
+            *e = (*e).max(seed(v));
+        }
+        g.vertices().map(|v| comp_max[&cc_want[v as usize]]).collect()
+    };
+
+    let session = GraphSession::new(&g);
+    let weighted_session = GraphSession::new(&gw);
+    for cfg in full_matrix() {
+        let cc = session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        assert_eq!(cc.values, cc_want, "cc under {cfg:?}");
+
+        let pr = session.run_with(&PageRank::default(), RunOptions::new().config(cfg));
+        for v in g.vertices() {
+            assert!(
+                (pr.values[v as usize] - pr_want[v as usize]).abs() < 1e-12,
+                "pagerank v{v} under {cfg:?}"
+            );
+        }
+
+        let dpr = session.run_with(&DanglingPageRank::default(), RunOptions::new().config(cfg));
+        for v in g.vertices() {
+            assert!(
+                (dpr.values[v as usize] - dpr_want[v as usize]).abs() < 1e-12,
+                "dangling pagerank v{v} under {cfg:?}"
+            );
+        }
+
+        let ss = session.run_with(&Sssp { source: sssp_src }, RunOptions::new().config(cfg));
+        assert_eq!(ss.values, sssp_want, "sssp under {cfg:?}");
+
+        let ws = weighted_session.run_with(
+            &WeightedSssp { source: sssp_src },
+            RunOptions::new().config(cfg),
+        );
+        for v in gw.vertices() {
+            let (a, b) = (ws.values[v as usize], wsssp_want[v as usize]);
+            assert!(
+                (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-9,
+                "weighted sssp v{v}: {a} vs {b} under {cfg:?}"
+            );
+        }
+
+        let deg = session.run_with(&DegreeCount, RunOptions::new().config(cfg));
+        assert_eq!(deg.values, deg_want, "degree under {cfg:?}");
+
+        let kc = session.run_with(&KCore { k: 3 }, RunOptions::new().config(cfg));
+        let kc_alive: Vec<bool> = kc.values.iter().map(|s| s.alive).collect();
+        assert_eq!(kc_alive, kcore_want, "kcore under {cfg:?}");
+
+        let bfs = session.run_with(&Bfs { root: sssp_src }, RunOptions::new().config(cfg));
+        for v in g.vertices() {
+            let lvl = bfs.values[v as usize].level;
+            let got = if lvl == u32::MAX { u64::MAX } else { lvl as u64 };
+            assert_eq!(got, bfs_want[v as usize], "bfs v{v} under {cfg:?}");
+        }
+
+        let mv = session.run_with(&MaxValue { seed }, RunOptions::new().config(cfg));
+        assert_eq!(mv.values, mv_want, "maxvalue under {cfg:?}");
+
+        // Incremental CC: warm-start from the fixpoint, add one edge that
+        // merges nothing new (same component) — labels must stay the
+        // union-find answer under every configuration.
+        let inc = session.run_with(
+            &IncrementalCc {
+                touched: vec![0, sssp_src],
+            },
+            RunOptions::new().config(cfg).warm_start(&cc_want),
+        );
+        assert_eq!(inc.values, cc_want, "incremental cc under {cfg:?}");
+    }
+    assert!(session.runs_completed() >= 48 * 9);
+}
+
 #[test]
 fn sim_engine_agrees_with_real_engine_everywhere() {
     let g = gen::rmat(9, 5, 0.57, 0.19, 0.19, 33);
+    let session = GraphSession::new(&g);
     for cfg in matrix().into_iter().step_by(3) {
-        let real = run(&g, &PageRank::default(), cfg);
+        let real = session.run_with(&PageRank::default(), RunOptions::new().config(cfg));
         let sim = SimEngine::new(&g, &PageRank::default(), cfg).run();
         for v in g.vertices() {
             assert!(
@@ -104,7 +238,7 @@ fn sim_engine_agrees_with_real_engine_everywhere() {
         assert_eq!(real.metrics.num_supersteps(), sim.supersteps, "{cfg:?}");
 
         let p = Sssp::from_hub(&g);
-        let real_s = run(&g, &p, cfg.strategy(Strategy::Hybrid));
+        let real_s = session.run_with(&p, RunOptions::new().config(cfg.strategy(Strategy::Hybrid)));
         let sim_s = SimEngine::new(&g, &p, cfg.strategy(Strategy::Hybrid)).run();
         assert_eq!(real_s.values, sim_s.values, "{cfg:?}");
     }
@@ -119,7 +253,8 @@ fn maxvalue_and_bfs_work_under_final_config() {
         .layout(Layout::Externalised)
         .schedule(Schedule::Dynamic { chunk: 64 })
         .bypass(true);
-    let mv = run(&g, &MaxValue { seed: |v| (v as u64).wrapping_mul(2654435761) % 1_000_003 }, final_cfg);
+    let session = GraphSession::with_config(&g, final_cfg);
+    let mv = session.run(&MaxValue { seed: |v| (v as u64).wrapping_mul(2654435761) % 1_000_003 });
     // Connected BA graph: a single component, one global max.
     let want = (0..500u32)
         .map(|v| (v as u64).wrapping_mul(2654435761) % 1_000_003)
@@ -128,7 +263,7 @@ fn maxvalue_and_bfs_work_under_final_config() {
     assert!(mv.values.iter().all(|&x| x == want));
 
     let root = g.max_out_degree_vertex();
-    let bfs = run(&g, &Bfs { root }, final_cfg);
+    let bfs = session.run(&Bfs { root });
     let want_levels = reference::bfs_levels(&g, root);
     for v in g.vertices() {
         let lvl = bfs.values[v as usize].level;
@@ -140,9 +275,8 @@ fn maxvalue_and_bfs_work_under_final_config() {
 #[test]
 fn message_counts_are_exact_for_push_mode() {
     // DegreeCount sends exactly one message per directed edge.
-    use ipregel::algos::DegreeCount;
     let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 3);
-    let r = run(&g, &DegreeCount, EngineConfig::default().threads(4));
+    let r = GraphSession::with_config(&g, EngineConfig::default().threads(4)).run(&DegreeCount);
     assert_eq!(r.metrics.total_messages(), g.num_edges() as u64);
 }
 
@@ -152,8 +286,12 @@ fn bypass_skips_inactive_work_on_sssp() {
     // must be linear in n while scan activations are quadratic-ish.
     let g = gen::path(2000);
     let p = Sssp { source: 0 };
-    let scan = run(&g, &p, EngineConfig::default());
-    let bypass = run(&g, &p, EngineConfig::default().bypass(true));
+    let session = GraphSession::new(&g);
+    let scan = session.run(&p);
+    let bypass = session.run_with(
+        &p,
+        RunOptions::new().config(EngineConfig::default().bypass(true)),
+    );
     assert_eq!(scan.values, bypass.values);
     assert!(bypass.metrics.total_activations() <= scan.metrics.total_activations());
     // The scan engine still *scans* everything; activations only count

@@ -130,6 +130,34 @@ fn cli_info_run_sim_on_generated_graph() {
 }
 
 #[test]
+fn cli_weighted_sssp_on_weighted_edge_list() {
+    let dir = tmp_dir("wsssp");
+    let p = dir.join("w.txt");
+    // 0 -> 2 direct costs 10; the detour through 1 costs 3.
+    std::fs::write(&p, "0 2 10.0\n0 1 1.0\n1 2 2.0\n").unwrap();
+    let out = run_ok(&[
+        "run", "--algo", "wsssp", p.to_str().unwrap(), "--source", "0", "--bypass",
+    ]);
+    assert!(out.contains("weighted-sssp"), "{out}");
+    assert!(out.contains("reached 3 vertices"), "{out}");
+    assert!(out.contains("eccentricity 3.000"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn weighted_binary_cache_roundtrip_via_io() {
+    let base = gen::barabasi_albert(150, 3, 4);
+    let g = gen::randomly_weighted(&base, 1.0, 9.0, 2);
+    let dir = tmp_dir("wbin");
+    let p = dir.join("w.ipg");
+    io::write_binary(&g, &p).unwrap();
+    let g2 = io::read_binary(&p).unwrap();
+    assert_eq!(g, g2);
+    assert!(g2.has_weights());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn cli_table1_tiny() {
     let dir = tmp_dir("t1");
     let out = run_ok(&["table1", "--tiny", "--dir", dir.to_str().unwrap()]);

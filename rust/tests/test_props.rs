@@ -2,9 +2,9 @@
 //! configurations (seeded; replay any failure with the printed
 //! `QUICK_SEED`).
 
-use ipregel::algos::{reference, ConnectedComponents, PageRank, Sssp};
+use ipregel::algos::{reference, ConnectedComponents, PageRank, Sssp, WeightedSssp};
 use ipregel::combine::Strategy;
-use ipregel::engine::{run, EngineConfig};
+use ipregel::engine::{EngineConfig, GraphSession};
 use ipregel::graph::gen;
 use ipregel::graph::GraphBuilder;
 use ipregel::layout::Layout;
@@ -55,7 +55,7 @@ fn prop_pagerank_mass_and_reference_agreement() {
             iterations: iters,
             damping: 0.85,
         };
-        let got = run(&g, &p, cfg);
+        let got = GraphSession::with_config(&g, cfg).run(&p);
         // Mass never exceeds 1 (dangling mass only leaks out).
         let total: f64 = got.values.iter().sum();
         if total > 1.0 + 1e-9 {
@@ -89,7 +89,7 @@ fn prop_cc_fixpoint_and_reference_agreement() {
             .edges(&edges)
             .build();
         let cfg = random_cfg(rng);
-        let got = run(&g, &ConnectedComponents, cfg);
+        let got = GraphSession::with_config(&g, cfg).run(&ConnectedComponents);
         let want = reference::connected_components(&g);
         if got.values != want {
             return Err(format!("labels differ under {cfg:?}"));
@@ -112,7 +112,7 @@ fn prop_sssp_triangle_inequality_and_reference() {
         let g = random_graph(rng);
         let cfg = random_cfg(rng);
         let source = rng.below(g.num_vertices() as u64) as u32;
-        let got = run(&g, &Sssp { source }, cfg);
+        let got = GraphSession::with_config(&g, cfg).run(&Sssp { source });
         let want = reference::bfs_levels(&g, source);
         if got.values != want {
             return Err(format!("distances differ under {cfg:?} source {source}"));
@@ -129,6 +129,26 @@ fn prop_sssp_triangle_inequality_and_reference() {
 }
 
 #[test]
+fn prop_weighted_sssp_matches_dijkstra() {
+    quick::check("weighted sssp vs dijkstra", |rng| {
+        let base = random_graph(rng);
+        let g = ipregel::graph::gen::randomly_weighted(&base, 0.1, 10.0, rng.next_u64());
+        let cfg = random_cfg(rng);
+        let source = rng.below(g.num_vertices() as u64) as u32;
+        let got = GraphSession::with_config(&g, cfg).run(&WeightedSssp { source });
+        let want = reference::dijkstra(&g, source);
+        for v in g.vertices() {
+            let (a, b) = (got.values[v as usize], want[v as usize]);
+            let ok = (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-9;
+            if !ok {
+                return Err(format!("v{v}: {a} vs {b} under {cfg:?} source {source}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_structured_graphs_have_known_answers() {
     quick::check("structured graph answers", |rng| {
         // Grid: CC = single component; SSSP from corner = Manhattan.
@@ -136,11 +156,12 @@ fn prop_structured_graphs_have_known_answers() {
         let cols = 2 + rng.below(10) as usize;
         let g = gen::grid(rows, cols);
         let cfg = random_cfg(rng);
-        let cc = run(&g, &ConnectedComponents, cfg);
+        let session = GraphSession::with_config(&g, cfg);
+        let cc = session.run(&ConnectedComponents);
         if cc.values.iter().any(|&l| l != 0) {
             return Err("grid must be one component".into());
         }
-        let ss = run(&g, &Sssp { source: 0 }, cfg);
+        let ss = session.run(&Sssp { source: 0 });
         for r in 0..rows {
             for c in 0..cols {
                 let want = (r + c) as u64;

@@ -1,0 +1,216 @@
+//! GraphSession integration tests: pooled-state reuse must be
+//! bit-invisible (reused runs give bit-identical results to fresh
+//! sessions), warm starts must actually save work, halt policies must
+//! fire, concurrent use must be safe, and the deprecated `engine::run`
+//! shim must behave exactly like a throwaway session.
+
+use ipregel::algos::{
+    reference, ConnectedComponents, DanglingPageRank, KCore, PageRank, Sssp, WeightedSssp,
+};
+use ipregel::combine::Strategy;
+use ipregel::engine::{EngineConfig, GraphSession, Halt, RunOptions};
+use ipregel::graph::gen;
+use ipregel::layout::Layout;
+use ipregel::metrics::HaltReason;
+use ipregel::sched::Schedule;
+
+#[test]
+fn session_reuse_is_bit_identical_to_fresh_sessions() {
+    let g = gen::rmat(9, 5, 0.57, 0.19, 0.19, 7);
+    let cfg = EngineConfig::default().threads(4).bypass(true);
+
+    // Two consecutive runs on ONE session (second reuses pooled state)…
+    let shared = GraphSession::with_config(&g, cfg);
+    let a1 = shared.run(&ConnectedComponents);
+    let a2 = shared.run(&ConnectedComponents);
+    assert!(!a1.metrics.store_reused);
+    assert!(a2.metrics.store_reused);
+
+    // …must equal two runs on TWO fresh sessions, bit for bit.
+    let b1 = GraphSession::with_config(&g, cfg).run(&ConnectedComponents);
+    let b2 = GraphSession::with_config(&g, cfg).run(&ConnectedComponents);
+    assert_eq!(a1.values, b1.values);
+    assert_eq!(a2.values, b2.values);
+    assert_eq!(a1.values, a2.values);
+    assert_eq!(
+        a1.metrics.num_supersteps(),
+        a2.metrics.num_supersteps(),
+        "reuse must not change the superstep trace"
+    );
+
+    // Same property for a float-valued program (f64 bit-exactness).
+    let p1 = shared.run(&PageRank::default());
+    let p2 = shared.run(&PageRank::default());
+    let fresh = GraphSession::with_config(&g, cfg).run(&PageRank::default());
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&p1.values), bits(&p2.values));
+    assert_eq!(bits(&p1.values), bits(&fresh.values));
+}
+
+#[test]
+fn interleaved_program_types_still_reuse_correctly() {
+    // Alternate programs with different (Value, Message) types; each type
+    // keeps its own pooled store and results never bleed across.
+    let g = gen::barabasi_albert(400, 3, 21);
+    let session = GraphSession::new(&g);
+    let cc_want = reference::connected_components(&g);
+    let pr_want = reference::pagerank(&g, 10, 0.85);
+    for round in 0..3 {
+        let cc = session.run(&ConnectedComponents);
+        assert_eq!(cc.values, cc_want, "round {round}");
+        let pr = session.run(&PageRank::default());
+        for v in g.vertices() {
+            assert!(
+                (pr.values[v as usize] - pr_want[v as usize]).abs() < 1e-12,
+                "round {round} v{v}"
+            );
+        }
+        let kc = session.run(&KCore { k: 2 });
+        assert!(kc.values.iter().any(|s| s.alive), "round {round}");
+        if round > 0 {
+            assert!(cc.metrics.store_reused && pr.metrics.store_reused);
+        }
+    }
+}
+
+#[test]
+fn warm_start_converges_in_fewer_supersteps() {
+    // Cold CC on a high-diameter graph needs O(diameter) supersteps;
+    // warm-started from the fixpoint it must settle almost immediately.
+    let g = gen::grid(40, 40);
+    let session = GraphSession::with_config(&g, EngineConfig::default().bypass(true));
+    let cold = session.run(&ConnectedComponents);
+    assert!(cold.metrics.num_supersteps() > 10);
+
+    let warm = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new().warm_start(&cold.values),
+    );
+    assert_eq!(warm.values, cold.values);
+    assert!(
+        warm.metrics.num_supersteps() <= 3,
+        "warm start took {} supersteps vs cold {}",
+        warm.metrics.num_supersteps(),
+        cold.metrics.num_supersteps()
+    );
+    assert!(warm.metrics.total_activations() < cold.metrics.total_activations());
+}
+
+#[test]
+fn warm_start_with_stale_values_still_reaches_the_fixpoint() {
+    // Warm-starting from a *partially* converged state (labels of a
+    // coarser run) must still land on the exact fixpoint: min-label
+    // propagation is self-correcting downward.
+    let g = gen::disjoint_rings(3, 60);
+    let session = GraphSession::with_config(&g, EngineConfig::default().bypass(true));
+    let want = reference::connected_components(&g);
+    // Stale start: everyone still believes their own id (a fully
+    // unconverged state supplied through the warm-start path).
+    let stale: Vec<u32> = g.vertices().collect();
+    let r = session.run_with(&ConnectedComponents, RunOptions::new().warm_start(&stale));
+    assert_eq!(r.values, want);
+}
+
+#[test]
+fn concurrent_runs_on_one_session_are_safe_and_correct() {
+    let g = gen::barabasi_albert(600, 4, 5);
+    let session = GraphSession::with_config(&g, EngineConfig::default().threads(2));
+    let want = reference::connected_components(&g);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let session = &session;
+                s.spawn(move || session.run(&ConnectedComponents).values)
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), want);
+        }
+    });
+    assert_eq!(session.runs_completed(), 4);
+}
+
+#[test]
+fn per_run_overrides_cover_the_whole_switch_grid() {
+    let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 12);
+    let p = Sssp::from_hub(&g);
+    let want = reference::bfs_levels(&g, p.source);
+    let session = GraphSession::new(&g);
+    for (strategy, layout, schedule) in [
+        (Strategy::Hybrid, Layout::Externalised, Schedule::Dynamic { chunk: 32 }),
+        (Strategy::Lock, Layout::Interleaved, Schedule::EdgeCentric),
+        (Strategy::CasNeutral, Layout::Externalised, Schedule::Static),
+    ] {
+        let cfg = EngineConfig::default()
+            .threads(3)
+            .strategy(strategy)
+            .layout(layout)
+            .schedule(schedule)
+            .bypass(true);
+        let got = session.run_with(&p, RunOptions::new().config(cfg));
+        assert_eq!(got.values, want, "{strategy:?}/{layout:?}/{schedule:?}");
+    }
+}
+
+#[test]
+fn halt_policies_compose_with_sessions() {
+    let g = gen::path(500);
+    let session = GraphSession::new(&g);
+
+    // Superstep cap fires first on a long path.
+    let capped = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new().halt(Halt::supersteps(5)),
+    );
+    assert_eq!(capped.metrics.halt_reason, HaltReason::SuperstepCap);
+    assert_eq!(capped.metrics.num_supersteps(), 5);
+
+    // Quiescence on an unconstrained run.
+    let free = session.run(&ConnectedComponents);
+    assert_eq!(free.metrics.halt_reason, HaltReason::Quiescence);
+
+    // Aggregator convergence composed with a cap: the directed path's
+    // tail vertex is dangling, so the aggregator stream is live and one
+    // of the two composed conditions must end the run before the
+    // program's own 400-iteration bound.
+    let converging = session.run_with(
+        &DanglingPageRank {
+            iterations: 400,
+            damping: 0.85,
+        },
+        RunOptions::new().halt(
+            Halt::converged(|a: Option<&f64>, b: Option<&f64>| {
+                matches!((a, b), (Some(x), Some(y)) if (x - y).abs() < 1e-13)
+            })
+            .and_supersteps(300),
+        ),
+    );
+    assert_ne!(converging.metrics.halt_reason, HaltReason::Quiescence);
+    assert!(
+        converging.metrics.num_supersteps() <= 300,
+        "{}",
+        converging.metrics.num_supersteps()
+    );
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_run_shim_matches_session_exactly() {
+    let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 44);
+    let cfg = EngineConfig::default().threads(4).bypass(true);
+    let p = Sssp::from_hub(&g);
+    let via_shim = ipregel::engine::run(&g, &p, cfg);
+    let via_session = GraphSession::with_config(&g, cfg).run(&p);
+    assert_eq!(via_shim.values, via_session.values);
+    assert_eq!(
+        via_shim.metrics.num_supersteps(),
+        via_session.metrics.num_supersteps()
+    );
+
+    let wg = gen::randomly_weighted(&g, 1.0, 2.0, 3);
+    let wp = WeightedSssp::from_hub(&wg);
+    let shim_w = ipregel::engine::run(&wg, &wp, cfg);
+    let session_w = GraphSession::with_config(&wg, cfg).run(&wp);
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&shim_w.values), bits(&session_w.values));
+}
