@@ -1,0 +1,217 @@
+//! Partitioned-substrate bench: flat vs sharded execution per algorithm,
+//! emitting a machine-readable `BENCH_partition.json` so the repo's perf
+//! trajectory is tracked run over run.
+//!
+//! Run: `cargo bench --bench bench_partition`
+//!      `BENCH_SMOKE=1 cargo bench --bench bench_partition`  (CI smoke:
+//!       one small graph, 2 supersteps — exercises the partition path,
+//!       not the clock)
+//!      `BENCH_OUT=path.json` overrides the output location.
+
+use ipregel::algos::{ConnectedComponents, DegreeCount, PageRank, Sssp};
+use ipregel::engine::{EngineConfig, GraphSession, Halt, RunOptions, VertexProgram};
+use ipregel::graph::csr::Csr;
+use ipregel::graph::gen;
+use ipregel::metrics::RunMetrics;
+use ipregel::util::timer::fmt_duration;
+use std::fmt::Write as _;
+
+struct Row {
+    algo: &'static str,
+    mode: String,
+    millis: f64,
+    supersteps: usize,
+    messages: u64,
+    intra: u64,
+    cross: u64,
+    imbalance: f64,
+}
+
+fn record(algo: &'static str, mode: String, m: &RunMetrics, millis: f64) -> Row {
+    Row {
+        algo,
+        mode,
+        millis,
+        supersteps: m.num_supersteps(),
+        messages: m.total_messages(),
+        intra: m.intra_shard_messages,
+        cross: m.cross_shard_messages,
+        imbalance: m.shard_edge_imbalance,
+    }
+}
+
+/// Best-of-`reps` wall time for one (program, config) pair.
+fn bench_one<P: VertexProgram>(
+    session: &GraphSession<'_>,
+    p: &P,
+    cfg: EngineConfig,
+    halt: &Halt<ipregel::engine::AggValue<P>>,
+    reps: usize,
+) -> (RunMetrics, f64) {
+    let mut best: Option<(RunMetrics, f64)> = None;
+    for _ in 0..reps.max(1) {
+        let r = session.run_with(p, RunOptions::new().config(cfg).halt(halt.clone()));
+        let ms = r.metrics.total_time.as_secs_f64() * 1e3;
+        let better = match &best {
+            None => true,
+            Some((_, b)) => ms < *b,
+        };
+        if better {
+            best = Some((r.metrics, ms));
+        }
+    }
+    best.unwrap()
+}
+
+fn json_escape_free(s: &str) -> &str {
+    debug_assert!(!s.contains('"') && !s.contains('\\'));
+    s
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_partition.json".to_string());
+
+    let (g, reps, halt_cap): (Csr, usize, Option<usize>) = if smoke {
+        (gen::rmat(9, 4, 0.57, 0.19, 0.19, 7), 1, Some(2))
+    } else {
+        (gen::rmat(15, 8, 0.57, 0.19, 0.19, 7), 3, None)
+    };
+    eprintln!(
+        "== bench_partition ({}): |V|={} |E|={} ==",
+        if smoke { "SMOKE" } else { "full" },
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    let threads = 4usize;
+    let session = GraphSession::with_config(&g, EngineConfig::default().threads(threads));
+    let shard_counts: &[usize] = &[4, 16];
+    let mut rows: Vec<Row> = Vec::new();
+
+    fn fmt_ms(ms: f64) -> String {
+        fmt_duration(std::time::Duration::from_secs_f64(ms / 1e3))
+    }
+
+    struct BenchCtx<'a, 'g> {
+        session: &'a GraphSession<'g>,
+        reps: usize,
+        shard_counts: &'a [usize],
+    }
+
+    fn run_algo<P: VertexProgram>(
+        ctx: &BenchCtx<'_, '_>,
+        name: &'static str,
+        p: &P,
+        base: EngineConfig,
+        halt: &Halt<ipregel::engine::AggValue<P>>,
+        rows: &mut Vec<Row>,
+    ) {
+        let (m, ms) = bench_one(ctx.session, p, base, halt, ctx.reps);
+        eprintln!("  {:<8} flat      {} ({})", name, m.summary(), fmt_ms(ms));
+        rows.push(record(name, "flat".into(), &m, ms));
+        for &k in ctx.shard_counts {
+            let (m, ms) = bench_one(ctx.session, p, base.shards(k), halt, ctx.reps);
+            eprintln!(
+                "  {:<8} shards={:<2} {} ({})",
+                name,
+                k,
+                m.summary(),
+                fmt_ms(ms)
+            );
+            rows.push(record(name, format!("shards{k}"), &m, ms));
+        }
+    }
+
+    let ctx = BenchCtx {
+        session: &session,
+        reps,
+        shard_counts,
+    };
+    let base = EngineConfig::default().threads(threads);
+    let halt_pr: Halt<()> = match halt_cap {
+        Some(n) => Halt::supersteps(n),
+        None => Halt::supersteps(10),
+    };
+    run_algo(&ctx, "pr", &PageRank::default(), base, &halt_pr, &mut rows);
+    let halt_cc: Halt<()> = match halt_cap {
+        Some(n) => Halt::supersteps(n),
+        None => Halt::quiescence(),
+    };
+    run_algo(
+        &ctx,
+        "cc",
+        &ConnectedComponents,
+        base.bypass(true),
+        &halt_cc,
+        &mut rows,
+    );
+    run_algo(
+        &ctx,
+        "sssp",
+        &Sssp::from_hub(&g),
+        base.bypass(true),
+        &halt_cc,
+        &mut rows,
+    );
+    run_algo(&ctx, "degree", &DegreeCount, base, &halt_cc, &mut rows);
+
+    // ---- Emit BENCH_partition.json ---------------------------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(j, "  \"bench\": \"partition\",");
+    let _ = writeln!(j, "  \"smoke\": {},", smoke);
+    let _ = writeln!(
+        j,
+        "  \"graph\": {{\"vertices\": {}, \"edges\": {}}},",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let _ = writeln!(j, "  \"threads\": {},", threads);
+    j.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"algo\": \"{}\", \"mode\": \"{}\", \"millis\": {:.3}, \
+             \"supersteps\": {}, \"messages\": {}, \"intra_shard\": {}, \
+             \"cross_shard\": {}, \"edge_imbalance\": {:.4}}}",
+            json_escape_free(r.algo),
+            json_escape_free(&r.mode),
+            r.millis,
+            r.supersteps,
+            r.messages,
+            r.intra,
+            r.cross,
+            r.imbalance
+        );
+        j.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ]\n}\n");
+
+    std::fs::write(&out_path, &j).expect("writing BENCH_partition.json");
+    eprintln!("wrote {out_path} ({} result rows)", rows.len());
+
+    // Smoke sanity: the sharded rows must have exercised the partition
+    // path (message split recorded) and matched flat message totals.
+    for algo in ["pr", "cc", "sssp", "degree"] {
+        let flat = rows
+            .iter()
+            .find(|r| r.algo == algo && r.mode == "flat")
+            .expect("flat row");
+        for r in rows.iter().filter(|r| r.algo == algo && r.mode != "flat") {
+            assert_eq!(
+                r.messages, flat.messages,
+                "{algo}/{}: sharded message total must match flat",
+                r.mode
+            );
+            assert_eq!(
+                r.intra + r.cross,
+                r.messages,
+                "{algo}/{}: intra + cross must cover the total",
+                r.mode
+            );
+        }
+    }
+    eprintln!("parity checks passed");
+}

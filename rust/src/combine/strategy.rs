@@ -50,6 +50,36 @@ impl Strategy {
         }
     }
 
+    /// Owner-exclusive delivery: the shard-local path of partitioned
+    /// execution. The caller guarantees no concurrent delivery to `slot`
+    /// (during scatter a shard's mailbox slab is written only by the
+    /// worker owning the shard; during flush only by the task owning the
+    /// destination shard), so no lock acquisition or CAS retry loop is
+    /// needed — plain load/combine/store. Produces exactly the merged
+    /// value [`Strategy::deliver`] would, including the CAS-neutral
+    /// design's value-is-neutral emptiness convention, so partitioned
+    /// runs stay bit-identical to flat runs.
+    #[inline]
+    pub fn deliver_exclusive<M: MessageValue, C: Combiner<M>>(
+        self,
+        slot: &MsgSlot<M>,
+        msg: M,
+        combiner: &C,
+    ) {
+        match self {
+            Strategy::Lock | Strategy::Hybrid => {
+                if slot.has_msg() {
+                    slot.store_msg(combiner.combine(slot.load_msg(), msg));
+                } else {
+                    slot.store_first(msg);
+                }
+            }
+            // No flag in this design: the slot always holds a value
+            // (pre-loaded neutral), so combining is unconditional.
+            Strategy::CasNeutral => slot.store_msg(combiner.combine(slot.load_msg(), msg)),
+        }
+    }
+
     /// Initialise a slot for this strategy at superstep start.
     /// The CAS-neutral design has no empty flag: it must pre-load the
     /// neutral element and pretend the flag is always set (this is the
@@ -242,6 +272,50 @@ mod tests {
         Strategy::Hybrid.deliver(&slot, 9, &c);
         Strategy::Hybrid.deliver(&slot, 4, &c);
         assert_eq!(Strategy::Hybrid.collect(&slot, &c), Some(4 * 2 + 9 % 3));
+    }
+
+    #[test]
+    fn exclusive_delivery_matches_concurrent_delivery() {
+        // The shard-local path must fold to the same value as the
+        // synchronised path for every strategy — the bit-identity
+        // contract of partitioned execution.
+        let msgs = [50u64, 20, 90, 30, 20];
+        for strat in all_strategies() {
+            let c = MinCombiner;
+            let shared: MsgSlot<u64> = MsgSlot::new();
+            let owned: MsgSlot<u64> = MsgSlot::new();
+            strat.reset_slot(&shared, &c);
+            strat.reset_slot(&owned, &c);
+            for &m in &msgs {
+                strat.deliver(&shared, m, &c);
+                strat.deliver_exclusive(&owned, m, &c);
+            }
+            assert_eq!(
+                strat.collect(&shared, &c),
+                strat.collect(&owned, &c),
+                "{strat:?}"
+            );
+        }
+        // Sum combiner too (adversarial for lost updates).
+        for strat in all_strategies() {
+            let c = SumCombiner;
+            let owned: MsgSlot<i64> = MsgSlot::new();
+            strat.reset_slot(&owned, &c);
+            for m in [5i64, -2, 9] {
+                strat.deliver_exclusive(&owned, m, &c);
+            }
+            assert_eq!(strat.collect(&owned, &c), Some(12), "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn exclusive_delivery_empty_slot_collects_none() {
+        for strat in all_strategies() {
+            let slot: MsgSlot<u64> = MsgSlot::new();
+            let c = MinCombiner;
+            strat.reset_slot(&slot, &c);
+            assert_eq!(strat.collect(&slot, &c), None, "{strat:?}");
+        }
     }
 
     fn stress<C: Combiner<u64> + Copy + 'static>(

@@ -1,27 +1,54 @@
 //! The superstep loop shared by all engine versions.
 //!
-//! One [`Engine`] implements both communication modes and both active-set
-//! representations; the mode/bypass branches sit at superstep granularity,
-//! outside the per-vertex hot loop, and the store type is monomorphised so
-//! layout differences compile down to pointer arithmetic.
+//! One [`Engine`] implements both communication modes, both active-set
+//! representations, and both execution substrates:
+//!
+//! - **flat** (`Partitioning::None`): one vertex range, one global
+//!   mailbox array — the original engine, preserved bit-for-bit;
+//! - **partitioned**: the graph is cut into cache-sized, edge-balanced
+//!   shards ([`crate::graph::partition::PartitionPlan`]) and each
+//!   superstep runs as three phases:
+//!   1. **scatter** — shards are dispatched to workers (the schedule
+//!      operates on shards, edge-centric weighting by shard edge
+//!      count); the worker owning a shard computes its active vertices
+//!      and delivers intra-shard messages straight into the shard's
+//!      mailbox slab through the owner-exclusive combiner path
+//!      ([`Strategy::deliver_exclusive`]), while cross-shard messages
+//!      are appended to the worker's per-destination-shard remote
+//!      buffer;
+//!   2. **flush** — destination shards are dispatched to workers; the
+//!      task owning shard `d` drains every worker's buffer for `d`
+//!      (again owner-exclusive — the buffered extension of the paper's
+//!      hybrid combiner: lock-free within the owning shard, batched
+//!      hand-off across shards);
+//!   3. **apply** — the old barrier: epoch swap, pull outbox clearing,
+//!      aggregator merge, convergence.
+//!
+//! The mode/bypass/substrate branches sit at superstep granularity,
+//! outside the per-vertex hot loop, and the store type is monomorphised
+//! so layout differences compile down to pointer arithmetic.
 //!
 //! Engines are constructed by [`crate::engine::GraphSession`] from pooled
 //! parts (a primed [`VertexStore`], recycled activity bitsets, shared
-//! edge-centric scan weights) and hand those parts back after the run so
-//! the next run skips the allocations.
+//! edge-centric scan weights, and — when partitioned — a recycled
+//! [`ShardState`]) and hand those parts back after the run so the next
+//! run skips the allocations.
 
-use crate::combine::{Combiner, Strategy};
+use crate::combine::{Combiner, MessageValue, Strategy};
 use crate::engine::session::Halt;
+use crate::engine::shard::ShardState;
 use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, RunResult, VertexProgram};
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
+use crate::graph::partition::PartitionPlan;
 use crate::layout::{SyncCell, VertexStore};
-use crate::metrics::{HaltReason, RunMetrics, SuperstepStats};
-use crate::sched::{parallel_for, Schedule};
-use crate::util::bitset::AtomicBitSet;
+use crate::metrics::{HaltReason, RunMetrics, ScheduleFallback, SuperstepStats};
+use crate::sched::{parallel_for, parallel_for_hinted, Schedule};
+use crate::util::bitset::{AtomicBitSet, BitSet};
 use crate::util::timer::Timer;
 use crate::util::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Once};
+use std::time::Duration;
 
 /// Reusable allocations a [`crate::engine::GraphSession`] threads through
 /// consecutive runs.
@@ -34,6 +61,9 @@ pub(crate) struct EngineSetup<S> {
     pub bitsets: Vec<AtomicBitSet>,
     /// Degree weights for edge-centric full scans, shared session-wide.
     pub scan_weights: Option<Arc<Vec<u64>>>,
+    /// Per-shard runtime state when the run is partitioned (plan,
+    /// activity bit slabs, remote buffers), pooled by the session.
+    pub partition: Option<ShardState>,
 }
 
 /// The engine: graph + program + store + activity tracking.
@@ -48,17 +78,32 @@ pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     mode: Mode,
     store_reused: bool,
     /// Vertices active in the *next* superstep (set during compute).
+    /// Flat substrate only; partitioned runs track activity per shard.
     active_next: AtomicBitSet,
     /// Pull mode: vertices that broadcast *this* superstep (their outbox
-    /// slots need clearing two barriers later).
+    /// slots need clearing two barriers later). Flat substrate only.
     bcast_next: AtomicBitSet,
     /// Pull mode: vertices whose outbox holds last superstep's broadcast.
+    /// Flat substrate only.
     bcast_cur: AtomicBitSet,
     /// Degree weights for edge-centric scans (out- or in-degrees depending
     /// on mode; computed once per session and shared across runs).
     scan_weights: Option<Arc<Vec<u64>>>,
     /// Merged aggregator value from the previous superstep.
     agg_prev: Option<AggValue<P>>,
+    /// Per-shard runtime state (None on flat runs).
+    partition: Option<ShardState>,
+}
+
+/// Shard routing for one vertex's context during partitioned scatter:
+/// which shard the vertex's worker owns, where to buffer cross-shard
+/// sends, and where cross-shard counts accumulate.
+struct ShardRoute<'a> {
+    plan: &'a PartitionPlan,
+    state: &'a ShardState,
+    shard: usize,
+    tid: usize,
+    cross: &'a AtomicU64,
 }
 
 /// Per-vertex context implementation. Holds only shared references plus
@@ -76,6 +121,8 @@ struct Ctx<'a, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     /// This worker's aggregator partial: (accumulated, contributed?).
     agg_cell: &'a SyncCell<(AggValue<P>, bool)>,
     agg_prev: Option<&'a AggValue<P>>,
+    /// Partitioned scatter: the shard-routing context (None = flat).
+    route: Option<ShardRoute<'a>>,
     superstep: usize,
     v: VertexId,
     halted: bool,
@@ -134,9 +181,27 @@ where
              versions only support broadcast() — see paper §II"
         );
         self.msg_counter.fetch_add(1, Ordering::Relaxed);
-        self.strategy
-            .deliver(self.store.next_slot(dst), msg, self.comb);
-        self.active_next.set(dst as usize);
+        match &self.route {
+            None => {
+                self.strategy
+                    .deliver(self.store.next_slot(dst), msg, self.comb);
+                self.active_next.set(dst as usize);
+            }
+            Some(r) => {
+                let d = r.plan.shard_of(dst);
+                if d == r.shard {
+                    // Shard-local: this worker owns the destination's
+                    // mailbox slab for the whole scatter phase.
+                    self.strategy
+                        .deliver_exclusive(self.store.next_slot(dst), msg, self.comb);
+                    r.state.active.set_in(d, dst as usize);
+                } else {
+                    // Cross-shard: batch for the flush phase.
+                    r.cross.fetch_add(1, Ordering::Relaxed);
+                    r.state.buffers.push(r.tid, d, (dst, msg.to_bits()));
+                }
+            }
+        }
     }
 
     #[inline]
@@ -147,20 +212,53 @@ where
                 let nbrs = self.g.out_neighbors(self.v);
                 self.msg_counter
                     .fetch_add(nbrs.len() as u64, Ordering::Relaxed);
-                for &dst in nbrs {
-                    self.strategy
-                        .deliver(self.store.next_slot(dst), msg, self.comb);
-                    self.active_next.set(dst as usize);
+                match &self.route {
+                    None => {
+                        for &dst in nbrs {
+                            self.strategy
+                                .deliver(self.store.next_slot(dst), msg, self.comb);
+                            self.active_next.set(dst as usize);
+                        }
+                    }
+                    Some(r) => {
+                        for &dst in nbrs {
+                            let d = r.plan.shard_of(dst);
+                            if d == r.shard {
+                                self.strategy.deliver_exclusive(
+                                    self.store.next_slot(dst),
+                                    msg,
+                                    self.comb,
+                                );
+                                r.state.active.set_in(d, dst as usize);
+                            } else {
+                                r.cross.fetch_add(1, Ordering::Relaxed);
+                                r.state.buffers.push(r.tid, d, (dst, msg.to_bits()));
+                            }
+                        }
+                    }
                 }
             }
             Mode::Pull => {
                 // One lock-free store into our own outbox; recipients pull
                 // next superstep. Activation still walks out-edges (the
-                // framework must know who has mail).
+                // framework must know who has mail); cross-shard
+                // activations are plain atomic bit sets in the target
+                // shard — no message buffering needed, the *data* stays
+                // in this vertex's outbox.
                 self.store.next_slot(self.v).store_first(msg);
-                self.bcast_next.set(self.v as usize);
-                for &dst in self.g.out_neighbors(self.v) {
-                    self.active_next.set(dst as usize);
+                match &self.route {
+                    None => {
+                        self.bcast_next.set(self.v as usize);
+                        for &dst in self.g.out_neighbors(self.v) {
+                            self.active_next.set(dst as usize);
+                        }
+                    }
+                    Some(r) => {
+                        r.state.bcast_next.set(self.v as usize);
+                        for &dst in self.g.out_neighbors(self.v) {
+                            r.state.active.set(dst as usize);
+                        }
+                    }
                 }
             }
         }
@@ -186,6 +284,21 @@ where
     }
 }
 
+/// One-time stderr note for the documented EdgeCentric + bypass
+/// fallback (see [`Schedule::EdgeCentric`] and
+/// [`ScheduleFallback::EdgeCentricBypassRebuild`]).
+fn warn_edge_centric_bypass_once() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        eprintln!(
+            "ipregel: edge-centric schedule with selection bypass cannot use \
+             precomputed degree weights; falling back to rebuilding weights \
+             from the active list every superstep (documented — see \
+             Schedule::EdgeCentric; surfaced in RunMetrics::schedule_fallback)"
+        );
+    });
+}
+
 impl<'g, P, S> Engine<'g, P, S>
 where
     P: VertexProgram,
@@ -206,6 +319,7 @@ where
             store_reused,
             mut bitsets,
             scan_weights,
+            partition,
         } = setup;
         let comb = program.combiner();
         let agg = program.aggregator();
@@ -219,13 +333,33 @@ where
             }
         }
 
-        let mut next_bitset = || bitsets.pop().unwrap_or_else(|| AtomicBitSet::new(n));
+        // Partitioned runs track activity in the ShardState instead of
+        // the three flat bitsets — don't pay n-bit allocations (or drain
+        // the session pool) for structures the sharded loop never reads.
+        let mut next_bitset = || {
+            if partition.is_some() {
+                AtomicBitSet::new(0)
+            } else {
+                bitsets.pop().unwrap_or_else(|| AtomicBitSet::new(n))
+            }
+        };
         let active_next = next_bitset();
         let bcast_next = next_bitset();
         let bcast_cur = next_bitset();
-        for v in g.vertices() {
-            if program.initially_active(g, v) {
-                active_next.set(v as usize);
+        match &partition {
+            Some(state) => {
+                for v in g.vertices() {
+                    if program.initially_active(g, v) {
+                        state.active.set(v as usize);
+                    }
+                }
+            }
+            None => {
+                for v in g.vertices() {
+                    if program.initially_active(g, v) {
+                        active_next.set(v as usize);
+                    }
+                }
             }
         }
 
@@ -244,20 +378,61 @@ where
             bcast_cur,
             scan_weights,
             agg_prev: None,
+            partition,
         }
     }
 
     /// Disassemble after a run so the session can pool the parts.
-    pub(crate) fn into_parts(self) -> (S, Vec<AtomicBitSet>) {
+    pub(crate) fn into_parts(self) -> (S, Vec<AtomicBitSet>, Option<ShardState>) {
         (
             self.store,
             vec![self.active_next, self.bcast_next, self.bcast_cur],
+            self.partition,
         )
     }
 
-    /// Combined incoming message for `v` at superstep start.
+    /// Assemble the per-vertex context — shared by the flat and
+    /// partitioned `run_vertex` closures so the two substrates cannot
+    /// silently diverge in what a program observes.
     #[inline]
-    fn collect_msg(&self, v: VertexId, msgs_done: &AtomicU64) -> Option<P::Message> {
+    fn make_ctx<'a>(
+        &'a self,
+        v: VertexId,
+        superstep: usize,
+        msg_counter: &'a AtomicU64,
+        agg_cell: &'a SyncCell<(AggValue<P>, bool)>,
+        agg_prev: Option<&'a AggValue<P>>,
+        route: Option<ShardRoute<'a>>,
+    ) -> Ctx<'a, P, S> {
+        Ctx {
+            g: self.g,
+            store: &self.store,
+            comb: &self.comb,
+            agg: &self.agg,
+            strategy: self.cfg.strategy,
+            mode: self.mode,
+            active_next: &self.active_next,
+            bcast_next: &self.bcast_next,
+            msg_counter,
+            agg_cell,
+            agg_prev,
+            route,
+            superstep,
+            v,
+            halted: false,
+        }
+    }
+
+    /// Combined incoming message for `v` at superstep start. `cross`
+    /// (partitioned pull runs) classifies each combined contribution by
+    /// the owner map and accumulates foreign-outbox combines.
+    #[inline]
+    fn collect_msg(
+        &self,
+        v: VertexId,
+        msgs_done: &AtomicU64,
+        cross: Option<(&PartitionPlan, &AtomicU64)>,
+    ) -> Option<P::Message> {
         match self.mode {
             Mode::Push => {
                 // Consume and reset the mailbox (owner-exclusive here).
@@ -275,8 +450,17 @@ where
                 // advance, so software-prefetch the slot 8 ahead
                 // (§Perf L3 — see EXPERIMENTS.md).
                 let in_nbrs = self.g.in_neighbors(v);
+                // Cross-classification by shard *bounds*, not per-source
+                // owner-map loads: `v`'s shard range is fixed for the whole
+                // scan, so foreignness is two register compares instead of
+                // a random access into the owner array per message.
+                let my_bounds = cross.map(|(plan, _)| {
+                    let r = plan.shard_range(plan.shard_of(v));
+                    (r.start as VertexId, r.end as VertexId)
+                });
                 let mut acc: Option<P::Message> = None;
                 let mut combined = 0u64;
+                let mut crossed = 0u64;
                 for (i, &src) in in_nbrs.iter().enumerate() {
                     #[cfg(all(target_arch = "x86_64", not(feature = "no-prefetch")))]
                     if let Some(&ahead) = in_nbrs.get(i + 8) {
@@ -290,6 +474,11 @@ where
                     }
                     if let Some(m) = self.store.cur_slot(src).peek_scan() {
                         combined += 1;
+                        if let Some((lo, hi)) = my_bounds {
+                            if src < lo || src >= hi {
+                                crossed += 1;
+                            }
+                        }
                         acc = Some(match acc {
                             None => m,
                             Some(a) => self.comb.combine(a, m),
@@ -298,6 +487,11 @@ where
                 }
                 if combined > 0 {
                     msgs_done.fetch_add(combined, Ordering::Relaxed);
+                }
+                if crossed > 0 {
+                    if let Some((_, ctr)) = cross {
+                        ctr.fetch_add(crossed, Ordering::Relaxed);
+                    }
                 }
                 acc
             }
@@ -308,16 +502,43 @@ where
     /// convergence. Returns final values and metrics.
     pub fn run(&mut self) -> RunResult<P::Value> {
         let total = Timer::start();
-        let n = self.g.num_vertices();
-        let threads = self.cfg.threads.max(1);
         let mut metrics = RunMetrics {
             store_reused: self.store_reused,
             ..RunMetrics::default()
         };
+        if let Some(state) = &self.partition {
+            metrics.shards = state.plan.num_shards();
+            metrics.shard_edge_imbalance = state.plan.edge_imbalance();
+        }
+        if self.cfg.schedule == Schedule::EdgeCentric && self.cfg.bypass {
+            metrics.schedule_fallback = Some(ScheduleFallback::EdgeCentricBypassRebuild);
+            warn_edge_centric_bypass_once();
+        }
         let max_supersteps = self
             .halt
             .max_supersteps
             .map_or(self.cfg.max_supersteps, |h| h.min(self.cfg.max_supersteps));
+
+        if self.partition.is_some() {
+            self.run_partitioned(&mut metrics, max_supersteps);
+        } else {
+            self.run_flat(&mut metrics, max_supersteps);
+        }
+
+        metrics.total_time = total.elapsed();
+        let values = self
+            .g
+            .vertices()
+            .map(|v| self.store.value(v).clone())
+            .collect();
+        RunResult { values, metrics }
+    }
+
+    /// The flat superstep loop (`Partitioning::None`) — one global
+    /// mailbox array, the pre-partition engine bit-for-bit.
+    fn run_flat(&mut self, metrics: &mut RunMetrics, max_supersteps: usize) {
+        let n = self.g.num_vertices();
+        let threads = self.cfg.threads.max(1);
 
         // Per-thread padded message counters (hot-path friendly).
         let counters: Vec<CachePadded<AtomicU64>> =
@@ -371,7 +592,9 @@ where
 
                 // Edge-centric weights for bypass runs are rebuilt every
                 // superstep from the active list (the §V-A overhead the
-                // paper attributes to selection-bypass benchmarks).
+                // paper attributes to selection-bypass benchmarks — the
+                // documented fallback surfaced in
+                // `RunMetrics::schedule_fallback`).
                 let bypass_weights: Option<Vec<u64>> = match (&active_list, self.cfg.schedule) {
                     (Some(list), Schedule::EdgeCentric) => Some(
                         list.iter()
@@ -387,23 +610,15 @@ where
                 let agg_cells = &agg_cells;
                 let agg_prev_now = self.agg_prev.as_ref();
                 let run_vertex = |tid: usize, v: VertexId| {
-                    let msg = engine.collect_msg(v, pull_comb_counter);
-                    let mut ctx: Ctx<'_, P, S> = Ctx {
-                        g: engine.g,
-                        store: &engine.store,
-                        comb: &engine.comb,
-                        agg: &engine.agg,
-                        strategy: engine.cfg.strategy,
-                        mode: engine.mode,
-                        active_next: &engine.active_next,
-                        bcast_next: &engine.bcast_next,
-                        msg_counter: &counters[tid],
-                        agg_cell: &agg_cells[tid],
-                        agg_prev: agg_prev_now,
-                        superstep: superstep_now,
+                    let msg = engine.collect_msg(v, pull_comb_counter, None);
+                    let mut ctx = engine.make_ctx(
                         v,
-                        halted: false,
-                    };
+                        superstep_now,
+                        &counters[tid],
+                        &agg_cells[tid],
+                        agg_prev_now,
+                        None,
+                    );
                     engine.program.compute(&mut ctx, msg);
                     if !ctx.halted {
                         engine.active_next.set(v as usize);
@@ -459,31 +674,7 @@ where
                 self.bcast_next.clear_all();
             }
             self.store.swap_epochs();
-            // Merge this superstep's aggregator partials (workers are
-            // joined, so the plain reads are race-free).
-            let mut merged: Option<AggValue<P>> = None;
-            for cell in &agg_cells {
-                let (acc, used) = cell.get().clone();
-                if used {
-                    merged = Some(match merged {
-                        None => acc,
-                        Some(m) => self.agg.combine(m, acc),
-                    });
-                }
-                *cell.get_mut() = (neutral.clone(), false);
-            }
-            // The predicate only ever sees supersteps where the aggregator
-            // stream is live: while nothing has contributed yet both values
-            // are None, and a predicate like |a, b| a == b would otherwise
-            // halt superstep 1 of every run that aggregates late (or not
-            // at all).
-            let converged = match &self.halt.converged {
-                Some(pred) if self.agg_prev.is_some() || merged.is_some() => {
-                    pred(self.agg_prev.as_ref(), merged.as_ref())
-                }
-                _ => false,
-            };
-            self.agg_prev = merged;
+            let converged = self.merge_aggregators(&agg_cells, &neutral);
             let barrier_time = t_barrier.elapsed();
 
             let messages = counters
@@ -496,6 +687,244 @@ where
                 active_vertices: active_count,
                 messages,
                 compute_time,
+                flush_time: Duration::ZERO,
+                barrier_time,
+            });
+            superstep += 1;
+            if converged {
+                metrics.halt_reason = HaltReason::Converged;
+                break;
+            }
+        }
+    }
+
+    /// The partitioned superstep loop: scatter / flush / apply over the
+    /// shard substrate. Must produce bit-identical values, activation
+    /// sets and message counts to [`Engine::run_flat`] — the parity
+    /// matrix in `rust/tests/test_partition.rs` pins this down.
+    fn run_partitioned(&mut self, metrics: &mut RunMetrics, max_supersteps: usize) {
+        let mut part = self
+            .partition
+            .take()
+            .expect("run_partitioned requires shard state");
+        let n_shards = part.plan.num_shards();
+        let threads = self.cfg.threads.max(1);
+        let shard_sched = self.cfg.schedule.for_shards();
+
+        let counters: Vec<CachePadded<AtomicU64>> =
+            (0..threads).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
+        let pull_comb_counter = AtomicU64::new(0);
+        let cross_counter = AtomicU64::new(0);
+        let neutral = self.agg.neutral();
+        let agg_cells: Vec<CachePadded<SyncCell<(AggValue<P>, bool)>>> = (0..threads)
+            .map(|_| CachePadded::new(SyncCell::new((neutral.clone(), false))))
+            .collect();
+
+        let mut superstep = 0usize;
+        loop {
+            // ---- Snapshot each shard's active set ----------------------
+            let shard_lists: Option<Vec<Vec<VertexId>>> = if self.cfg.bypass {
+                Some(
+                    (0..n_shards)
+                        .map(|s| part.active.iter_shard(s).collect())
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            let shard_scans: Option<Vec<BitSet>> = if self.cfg.bypass {
+                None
+            } else {
+                Some((0..n_shards).map(|s| part.active.snapshot_shard(s)).collect())
+            };
+            let active_count = match (&shard_lists, &shard_scans) {
+                (Some(ls), _) => ls.iter().map(|l| l.len()).sum(),
+                (_, Some(bs)) => bs.iter().map(|b| b.count()).sum(),
+                _ => unreachable!(),
+            };
+            if active_count == 0 {
+                metrics.halt_reason = HaltReason::Quiescence;
+                break;
+            }
+            if superstep >= max_supersteps {
+                metrics.halt_reason = HaltReason::SuperstepCap;
+                break;
+            }
+            part.active.clear_all();
+
+            // Edge-centric shard weights: static shard edge totals for
+            // scans, active-degree sums (rebuilt per superstep — the
+            // documented bypass fallback) for bypass runs.
+            let scatter_weights: Option<Vec<u64>> = if self.cfg.schedule == Schedule::EdgeCentric {
+                Some(match &shard_lists {
+                    Some(lists) => lists
+                        .iter()
+                        .map(|l| {
+                            l.iter()
+                                .map(|&v| match self.mode {
+                                    Mode::Push => self.g.out_degree(v) as u64,
+                                    Mode::Pull => self.g.in_degree(v) as u64,
+                                })
+                                .sum()
+                        })
+                        .collect(),
+                    None => match self.mode {
+                        Mode::Push => part.plan.out_edges().to_vec(),
+                        Mode::Pull => part.plan.in_edges().to_vec(),
+                    },
+                })
+            } else {
+                None
+            };
+
+            // ---- Scatter phase -----------------------------------------
+            let t_scatter = Timer::start();
+            {
+                let engine = &self;
+                let part_ref = &part;
+                let counters = &counters;
+                let pull_comb_counter = &pull_comb_counter;
+                let cross_counter = &cross_counter;
+                let agg_cells = &agg_cells;
+                let agg_prev_now = self.agg_prev.as_ref();
+                let superstep_now = superstep;
+
+                let plan: &PartitionPlan = &part_ref.plan;
+                let run_vertex = |tid: usize, shard: usize, v: VertexId| {
+                    let msg =
+                        engine.collect_msg(v, pull_comb_counter, Some((plan, cross_counter)));
+                    let mut ctx = engine.make_ctx(
+                        v,
+                        superstep_now,
+                        &counters[tid],
+                        &agg_cells[tid],
+                        agg_prev_now,
+                        Some(ShardRoute {
+                            plan,
+                            state: part_ref,
+                            shard,
+                            tid,
+                            cross: cross_counter,
+                        }),
+                    );
+                    engine.program.compute(&mut ctx, msg);
+                    if !ctx.halted {
+                        part_ref.active.set_in(shard, v as usize);
+                    }
+                };
+
+                let shard_lists = &shard_lists;
+                let shard_scans = &shard_scans;
+                parallel_for_hinted(
+                    threads,
+                    n_shards,
+                    shard_sched,
+                    scatter_weights.as_deref(),
+                    active_count,
+                    |tid, shard_range| {
+                        for s in shard_range {
+                            match (shard_lists, shard_scans) {
+                                (Some(lists), _) => {
+                                    for &v in &lists[s] {
+                                        run_vertex(tid, s, v);
+                                    }
+                                }
+                                (_, Some(scans)) => {
+                                    // Full scan semantics, per shard: every
+                                    // vertex pays the activity check, as in
+                                    // the flat scan — the §II baseline cost
+                                    // the bypass knob exists to remove (and
+                                    // what the sim prices for this path).
+                                    let range = part_ref.plan.shard_range(s);
+                                    let base = range.start;
+                                    for i in 0..range.len() {
+                                        if scans[s].get(i) {
+                                            run_vertex(tid, s, (base + i) as VertexId);
+                                        }
+                                    }
+                                }
+                                _ => unreachable!(),
+                            }
+                        }
+                    },
+                );
+            }
+            let compute_time = t_scatter.elapsed();
+
+            // ---- Flush phase: drain remote buffers shard-at-a-time -----
+            // (Push mode only — pull never writes a remote buffer, so
+            // skip even the pending scan on pull workloads.)
+            let t_flush = Timer::start();
+            let flush_weights: Option<Vec<u64>> = if self.mode == Mode::Push {
+                Some(
+                    (0..n_shards)
+                        .map(|d| part.buffers.pending_for(d) as u64)
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            let cross_pending: u64 = match &flush_weights {
+                Some(w) => w.iter().sum(),
+                None => 0,
+            };
+            if cross_pending > 0 {
+                let engine = &self;
+                let part_ref = &part;
+                let weights = flush_weights.as_ref().expect("push mode");
+                parallel_for_hinted(
+                    threads,
+                    n_shards,
+                    shard_sched,
+                    if shard_sched.needs_weights() {
+                        Some(weights.as_slice())
+                    } else {
+                        None
+                    },
+                    cross_pending as usize,
+                    |_tid, shard_range| {
+                        for d in shard_range {
+                            part_ref.buffers.drain_for(d, |(dst, bits)| {
+                                engine.cfg.strategy.deliver_exclusive(
+                                    engine.store.next_slot(dst),
+                                    <P::Message as MessageValue>::from_bits(bits),
+                                    &engine.comb,
+                                );
+                                part_ref.active.set_in(d, dst as usize);
+                            });
+                        }
+                    },
+                );
+            }
+            let flush_time = t_flush.elapsed();
+
+            // ---- Apply phase (barrier) ---------------------------------
+            let t_apply = Timer::start();
+            if self.mode == Mode::Pull {
+                for v in part.bcast_cur.iter_all() {
+                    self.store.cur_slot(v).clear();
+                }
+                std::mem::swap(&mut part.bcast_cur, &mut part.bcast_next);
+                part.bcast_next.clear_all();
+            }
+            self.store.swap_epochs();
+            let converged = self.merge_aggregators(&agg_cells, &neutral);
+            let barrier_time = t_apply.elapsed();
+
+            let messages = counters
+                .iter()
+                .map(|c| c.swap(0, Ordering::Relaxed))
+                .sum::<u64>()
+                + pull_comb_counter.swap(0, Ordering::Relaxed);
+            let cross_step = cross_counter.swap(0, Ordering::Relaxed);
+            metrics.cross_shard_messages += cross_step;
+            metrics.intra_shard_messages += messages - cross_step;
+
+            metrics.supersteps.push(SuperstepStats {
+                active_vertices: active_count,
+                messages,
+                compute_time,
+                flush_time,
                 barrier_time,
             });
             superstep += 1;
@@ -505,12 +934,40 @@ where
             }
         }
 
-        metrics.total_time = total.elapsed();
-        let values = self
-            .g
-            .vertices()
-            .map(|v| self.store.value(v).clone())
-            .collect();
-        RunResult { values, metrics }
+        self.partition = Some(part);
+    }
+
+    /// Merge this superstep's per-worker aggregator partials and evaluate
+    /// the convergence predicate (single-threaded barrier step; workers
+    /// are joined, so the plain reads are race-free).
+    fn merge_aggregators(
+        &mut self,
+        agg_cells: &[CachePadded<SyncCell<(AggValue<P>, bool)>>],
+        neutral: &AggValue<P>,
+    ) -> bool {
+        let mut merged: Option<AggValue<P>> = None;
+        for cell in agg_cells {
+            let (acc, used) = cell.get().clone();
+            if used {
+                merged = Some(match merged {
+                    None => acc,
+                    Some(m) => self.agg.combine(m, acc),
+                });
+            }
+            *cell.get_mut() = (neutral.clone(), false);
+        }
+        // The predicate only ever sees supersteps where the aggregator
+        // stream is live: while nothing has contributed yet both values
+        // are None, and a predicate like |a, b| a == b would otherwise
+        // halt superstep 1 of every run that aggregates late (or not
+        // at all).
+        let converged = match &self.halt.converged {
+            Some(pred) if self.agg_prev.is_some() || merged.is_some() => {
+                pred(self.agg_prev.as_ref(), merged.as_ref())
+            }
+            _ => false,
+        };
+        self.agg_prev = merged;
+        converged
     }
 }

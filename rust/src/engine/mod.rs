@@ -15,7 +15,11 @@
 //! - **work distribution** ([`Schedule`]): static, dynamic, guided or
 //!   edge-centric;
 //! - **selection bypass** (`bypass`): maintain an explicit active-vertex
-//!   list instead of scanning all vertices every superstep.
+//!   list instead of scanning all vertices every superstep;
+//! - **partitioning** ([`Partitioning`]): shard the graph into
+//!   cache-sized, edge-balanced subgraphs executed scatter/flush/apply
+//!   with buffered cross-shard message routing — bit-identical to flat
+//!   execution, `Partitioning::None` preserving the flat path.
 //!
 //! None of these switches appear in user code — the same program text runs
 //! under every configuration, which is the paper's programmability thesis.
@@ -27,8 +31,10 @@
 pub mod agg;
 pub(crate) mod core;
 pub mod session;
+pub(crate) mod shard;
 
 pub use agg::{AggPair, Aggregator, FnAgg, MaxAgg, MinAgg, NoAgg, SumAgg};
+pub use crate::graph::partition::Partitioning;
 pub use session::{GraphSession, Halt, RunOptions};
 
 use crate::combine::{Combiner, MessageValue, Strategy};
@@ -155,6 +161,10 @@ pub struct EngineConfig {
     pub layout: Layout,
     /// Selection bypass: explicit active list vs full scan.
     pub bypass: bool,
+    /// Partitioned execution substrate: cut the graph into cache-sized,
+    /// edge-balanced shards with buffered cross-shard routing
+    /// ([`Partitioning::None`] preserves the flat engine bit-for-bit).
+    pub partitioning: Partitioning,
     /// Safety cap on supersteps.
     pub max_supersteps: usize,
 }
@@ -167,6 +177,7 @@ impl Default for EngineConfig {
             strategy: Strategy::Lock,
             layout: Layout::Interleaved,
             bypass: false,
+            partitioning: Partitioning::None,
             max_supersteps: 100_000,
         }
     }
@@ -201,6 +212,20 @@ impl EngineConfig {
     /// Enable/disable selection bypass.
     pub fn bypass(mut self, b: bool) -> Self {
         self.bypass = b;
+        self
+    }
+    /// Set the partitioning policy.
+    pub fn partitioning(mut self, p: Partitioning) -> Self {
+        self.partitioning = p;
+        self
+    }
+    /// Shorthand: `k` edge-balanced shards (0 restores flat execution).
+    pub fn shards(mut self, k: usize) -> Self {
+        self.partitioning = if k == 0 {
+            Partitioning::None
+        } else {
+            Partitioning::Shards(k)
+        };
         self
     }
     /// Cap the number of supersteps.

@@ -29,8 +29,10 @@
 //! ```
 
 use crate::engine::core::{Engine, EngineSetup};
+use crate::engine::shard::ShardState;
 use crate::engine::{AggValue, EngineConfig, Mode, RunResult, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
+use crate::graph::partition::PartitionPlan;
 use crate::layout::{AosStore, Layout, SoaStore, VertexStore};
 use crate::util::bitset::AtomicBitSet;
 use std::any::{Any, TypeId};
@@ -183,6 +185,12 @@ pub struct GraphSession<'g> {
     /// computed on first use and shared across runs.
     out_degree_weights: Mutex<Option<Arc<Vec<u64>>>>,
     in_degree_weights: Mutex<Option<Arc<Vec<u64>>>>,
+    /// Partition plans, built once per resolved shard count and shared
+    /// across runs (the partition-config pooling key).
+    plans: Mutex<HashMap<usize, Arc<PartitionPlan>>>,
+    /// Pooled per-shard runtime state (activity bit slabs + remote
+    /// buffers), recycled when a run uses the same plan again.
+    shard_states: Mutex<Vec<ShardState>>,
     runs: AtomicU64,
 }
 
@@ -202,6 +210,8 @@ impl<'g> GraphSession<'g> {
             bitsets: Mutex::new(Vec::new()),
             out_degree_weights: Mutex::new(None),
             in_degree_weights: Mutex::new(None),
+            plans: Mutex::new(HashMap::new()),
+            shard_states: Mutex::new(Vec::new()),
             runs: AtomicU64::new(0),
         }
     }
@@ -224,6 +234,22 @@ impl<'g> GraphSession<'g> {
     /// Number of vertex stores currently parked in the pool (diagnostic).
     pub fn pooled_stores(&self) -> usize {
         self.stores.lock().expect("store pool poisoned").len()
+    }
+
+    /// Number of partition plans cached so far (diagnostic).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.lock().expect("plan cache poisoned").len()
+    }
+
+    /// The partition plan for `shards` shards, built on first use and
+    /// shared by `Arc` across runs.
+    fn partition_plan(&self, shards: usize) -> Arc<PartitionPlan> {
+        let mut cache = self.plans.lock().expect("plan cache poisoned");
+        Arc::clone(
+            cache
+                .entry(shards)
+                .or_insert_with(|| Arc::new(PartitionPlan::build(self.g, shards))),
+        )
     }
 
     /// Run `program` under the session configuration with default
@@ -296,6 +322,27 @@ impl<'g> GraphSession<'g> {
             None => Box::new(move |v| program.init(g, v)),
         };
 
+        // ---- Partition: resolve the config to a plan + shard state -----
+        let shards = cfg.partitioning.resolve(n);
+        let partition: Option<ShardState> = if shards == 0 {
+            None
+        } else {
+            let plan = self.partition_plan(shards);
+            let workers = cfg.threads.max(1);
+            let pooled = {
+                let mut pool = self.shard_states.lock().expect("shard pool poisoned");
+                let idx = pool.iter().position(|st| st.fits(&plan, workers));
+                idx.map(|i| pool.swap_remove(i))
+            };
+            Some(match pooled {
+                Some(mut st) => {
+                    st.reset();
+                    st
+                }
+                None => ShardState::new(plan, workers),
+            })
+        };
+
         // ---- Store: recycle by concrete type, else build fresh ---------
         let key = TypeId::of::<S>();
         let pooled: Option<S> = self
@@ -307,15 +354,28 @@ impl<'g> GraphSession<'g> {
             .map(|b| *b);
         let (store, store_reused) = match pooled {
             Some(mut s) => {
-                s.reset(self.g, &mut *init);
+                match &partition {
+                    // Partitioned runs prime shard-by-shard: each slab is
+                    // rewritten as one contiguous sweep, so the first
+                    // scatter finds its shard warm.
+                    Some(state) => {
+                        for sh in 0..state.plan.num_shards() {
+                            s.reset_range(state.plan.shard_range(sh), &mut *init);
+                        }
+                        s.rewind_epochs();
+                    }
+                    None => s.reset(self.g, &mut *init),
+                }
                 (s, true)
             }
             None => (S::build(self.g, &mut *init), false),
         };
 
         // ---- Bitsets: recycle up to the three the engine needs ---------
+        // (Partitioned runs track activity per shard and never touch the
+        // flat bitsets, so leave the pool alone.)
         let mut recycled = Vec::new();
-        {
+        if partition.is_none() {
             let mut pool = self.bitsets.lock().expect("bitset pool poisoned");
             while recycled.len() < 3 {
                 match pool.pop() {
@@ -330,7 +390,10 @@ impl<'g> GraphSession<'g> {
             }
         }
 
-        let scan_weights = if cfg.schedule.needs_weights() && !cfg.bypass {
+        // Full-scan edge-centric weights are only consulted by the flat
+        // substrate (the partitioned scatter weighs whole shards from the
+        // plan instead).
+        let scan_weights = if cfg.schedule.needs_weights() && !cfg.bypass && partition.is_none() {
             Some(self.degree_weights(program.mode()))
         } else {
             None
@@ -346,20 +409,29 @@ impl<'g> GraphSession<'g> {
                 store_reused,
                 bitsets: recycled,
                 scan_weights,
+                partition,
             },
         );
         let result = engine.run();
 
         // ---- Return the parts to the pools -----------------------------
-        let (store, bitsets) = engine.into_parts();
+        let (store, bitsets, shard_state) = engine.into_parts();
         self.stores
             .lock()
             .expect("store pool poisoned")
             .insert(key, Box::new(store));
+        // Partitioned runs hand back zero-length placeholders — only
+        // full-size bitsets are worth pooling.
         self.bitsets
             .lock()
             .expect("bitset pool poisoned")
-            .extend(bitsets);
+            .extend(bitsets.into_iter().filter(|b| b.len() == n));
+        if let Some(st) = shard_state {
+            self.shard_states
+                .lock()
+                .expect("shard pool poisoned")
+                .push(st);
+        }
         self.runs.fetch_add(1, Ordering::Relaxed);
         result
     }
@@ -368,7 +440,7 @@ impl<'g> GraphSession<'g> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algos::{ConnectedComponents, PageRank};
+    use crate::algos::{ConnectedComponents, DegreeCount, PageRank};
     use crate::graph::gen;
     use crate::metrics::HaltReason;
 
@@ -432,6 +504,45 @@ mod tests {
         assert!(h.converged.is_some());
         let cloned = h.clone();
         assert_eq!(cloned.max_supersteps, Some(5));
+    }
+
+    #[test]
+    fn partitioned_runs_share_plan_and_recycle_state() {
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 5);
+        let session = GraphSession::new(&g);
+        let flat = session.run(&ConnectedComponents);
+        assert_eq!(flat.metrics.shards, 0);
+        let cfg = session.config().shards(4);
+        let a = session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        assert_eq!(a.values, flat.values, "sharded must match flat");
+        assert_eq!(a.metrics.shards, 4);
+        assert!(a.metrics.shard_edge_imbalance >= 1.0);
+        assert_eq!(session.cached_plans(), 1);
+        let b = session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        assert_eq!(b.values, flat.values);
+        assert!(b.metrics.store_reused);
+        assert_eq!(session.cached_plans(), 1, "plan cached, not rebuilt");
+    }
+
+    #[test]
+    fn shard_message_split_accounts_for_every_message() {
+        // DegreeCount sends exactly one message per directed edge; the
+        // intra/cross split must cover them all, and cross must match
+        // the plan's cross-edge census.
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 11);
+        let session = GraphSession::new(&g);
+        let r = session.run_with(
+            &DegreeCount,
+            RunOptions::new().config(session.config().shards(5)),
+        );
+        let m = &r.metrics;
+        assert_eq!(m.total_messages(), g.num_edges() as u64);
+        assert_eq!(
+            m.intra_shard_messages + m.cross_shard_messages,
+            g.num_edges() as u64
+        );
+        let plan = crate::graph::partition::PartitionPlan::build(&g, 5);
+        assert_eq!(m.cross_shard_messages, plan.total_cross());
     }
 
     #[test]

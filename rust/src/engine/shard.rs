@@ -1,0 +1,272 @@
+//! Per-shard runtime state for partitioned execution.
+//!
+//! The partitioned engine (see `engine/core.rs`) replaces the flat
+//! engine's three global activity bitsets and single mailbox address
+//! space with:
+//!
+//! - [`ShardedBits`] — one [`AtomicBitSet`] per shard (each with its own
+//!   heap allocation, so no two shards' activity words share cache
+//!   lines), addressed by *global* vertex id through the plan's owner
+//!   map. Intra-shard activations touch only the owning shard's words;
+//!   cross-shard activations are rare atomic writes into the target
+//!   shard's set.
+//! - [`RemoteBuffers`] — a workers × shards grid of append-only message
+//!   buffers. During scatter, worker `w` writes only row `w` (no
+//!   synchronisation); during flush, the task owning destination shard
+//!   `d` drains only column `d`. The two phases are separated by a
+//!   barrier, which is what makes the interior-mutable access sound —
+//!   the same per-vertex ownership discipline the stores already use,
+//!   lifted to shards.
+//!
+//! A [`ShardState`] bundles the three activity structures and the
+//! buffers; the session pools one per partition plan and recycles it
+//! across runs (cleared, never reallocated).
+
+use crate::graph::csr::VertexId;
+use crate::graph::partition::PartitionPlan;
+use crate::layout::SyncCell;
+use crate::util::bitset::{AtomicBitSet, BitSet};
+use crate::util::CachePadded;
+use std::sync::Arc;
+
+/// A buffered cross-shard message: destination vertex plus the message's
+/// 64-bit representation ([`crate::combine::MessageValue`] bits), so one
+/// buffer type serves every program without generics.
+pub(crate) type RemoteMsg = (VertexId, u64);
+
+/// Dense per-shard activity bits addressed by global vertex id.
+pub(crate) struct ShardedBits {
+    plan: Arc<PartitionPlan>,
+    sets: Vec<AtomicBitSet>,
+}
+
+impl ShardedBits {
+    /// All-clear bits shaped to `plan`.
+    pub fn new(plan: Arc<PartitionPlan>) -> Self {
+        let sets = (0..plan.num_shards())
+            .map(|s| AtomicBitSet::new(plan.shard_len(s).max(1)))
+            .collect();
+        ShardedBits { plan, sets }
+    }
+
+    /// Atomically set the bit for global vertex `v` (routes through the
+    /// owner map; callable from any worker).
+    #[inline]
+    pub fn set(&self, v: usize) {
+        let s = self.plan.shard_of(v as VertexId);
+        self.set_in(s, v);
+    }
+
+    /// Atomically set the bit for global vertex `v`, whose owning shard
+    /// the caller already knows — the per-message hot path (intra-shard
+    /// delivery and flush both have the shard in hand, so this skips the
+    /// owner-map load `set` would repeat).
+    #[inline]
+    pub fn set_in(&self, s: usize, v: usize) {
+        debug_assert_eq!(self.plan.shard_of(v as VertexId), s);
+        self.sets[s].set(v - self.plan.cuts()[s]);
+    }
+
+    /// Total set bits across all shards (quiescent only; test support).
+    #[cfg(test)]
+    pub fn count(&self) -> usize {
+        self.sets.iter().map(|b| b.count()).sum()
+    }
+
+    /// Iterate shard `s`'s set bits as global vertex ids (quiescent only).
+    pub fn iter_shard(&self, s: usize) -> impl Iterator<Item = VertexId> + '_ {
+        let base = self.plan.cuts()[s];
+        self.sets[s].iter().map(move |i| (base + i) as VertexId)
+    }
+
+    /// Iterate every set bit across all shards, in ascending global id
+    /// order (quiescent only).
+    pub fn iter_all(&self) -> impl Iterator<Item = VertexId> + '_ {
+        (0..self.sets.len()).flat_map(move |s| self.iter_shard(s))
+    }
+
+    /// Snapshot shard `s` into a plain bitset over *local* indices.
+    pub fn snapshot_shard(&self, s: usize) -> BitSet {
+        self.sets[s].snapshot()
+    }
+
+    /// Clear every bit (single-threaded phase).
+    pub fn clear_all(&mut self) {
+        for b in &mut self.sets {
+            b.clear_all();
+        }
+    }
+}
+
+/// Workers × shards cross-shard message buffers (see module docs for the
+/// phase discipline that makes the [`SyncCell`] access sound).
+pub(crate) struct RemoteBuffers {
+    /// Row-major `[worker][shard]` cells, each padded so two workers'
+    /// cell headers never share a cache line.
+    cells: Vec<CachePadded<SyncCell<Vec<RemoteMsg>>>>,
+    workers: usize,
+    shards: usize,
+}
+
+impl RemoteBuffers {
+    /// Empty buffer grid.
+    pub fn new(workers: usize, shards: usize) -> Self {
+        let workers = workers.max(1);
+        let shards = shards.max(1);
+        let mut cells = Vec::with_capacity(workers * shards);
+        cells.resize_with(workers * shards, || CachePadded::new(SyncCell::new(Vec::new())));
+        RemoteBuffers {
+            cells,
+            workers,
+            shards,
+        }
+    }
+
+    /// Worker rows available.
+    #[inline]
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    #[inline]
+    fn cell(&self, w: usize, d: usize) -> &SyncCell<Vec<RemoteMsg>> {
+        &self.cells[w * self.shards + d]
+    }
+
+    /// Append a message from worker `w` to destination shard `d`.
+    /// Scatter phase only: each worker writes its own row exclusively.
+    #[inline]
+    pub fn push(&self, w: usize, d: usize, msg: RemoteMsg) {
+        self.cell(w, d).get_mut().push(msg);
+    }
+
+    /// Buffered message count for destination shard `d` (between phases).
+    pub fn pending_for(&self, d: usize) -> usize {
+        (0..self.workers).map(|w| self.cell(w, d).get().len()).sum()
+    }
+
+    /// Drain every worker's buffer for destination shard `d` through
+    /// `deliver`, in worker order then push order (deterministic).
+    /// Flush phase only: exactly one task owns each destination shard.
+    pub fn drain_for(&self, d: usize, mut deliver: impl FnMut(RemoteMsg)) {
+        for w in 0..self.workers {
+            let buf = self.cell(w, d).get_mut();
+            for &m in buf.iter() {
+                deliver(m);
+            }
+            buf.clear();
+        }
+    }
+
+    /// Clear every cell, keeping capacity (pool recycling).
+    pub fn clear_all(&mut self) {
+        for c in &mut self.cells {
+            c.get_mut().clear();
+        }
+    }
+}
+
+/// The pooled bundle of per-shard runtime state for one partition plan.
+pub(crate) struct ShardState {
+    /// The plan this state is shaped to.
+    pub plan: Arc<PartitionPlan>,
+    /// Vertices active next superstep.
+    pub active: ShardedBits,
+    /// Pull mode: broadcasters of this superstep.
+    pub bcast_next: ShardedBits,
+    /// Pull mode: broadcasters of the previous superstep.
+    pub bcast_cur: ShardedBits,
+    /// Cross-shard message buffers.
+    pub buffers: RemoteBuffers,
+}
+
+impl ShardState {
+    /// Fresh state for `plan` with `workers` buffer rows.
+    pub fn new(plan: Arc<PartitionPlan>, workers: usize) -> Self {
+        ShardState {
+            active: ShardedBits::new(Arc::clone(&plan)),
+            bcast_next: ShardedBits::new(Arc::clone(&plan)),
+            bcast_cur: ShardedBits::new(Arc::clone(&plan)),
+            buffers: RemoteBuffers::new(workers, plan.num_shards()),
+            plan,
+        }
+    }
+
+    /// Whether this pooled state can serve a run over `plan` with
+    /// `workers` workers without reallocation.
+    pub fn fits(&self, plan: &Arc<PartitionPlan>, workers: usize) -> bool {
+        Arc::ptr_eq(&self.plan, plan) && self.buffers.workers() >= workers.max(1)
+    }
+
+    /// Clear all activity and buffers for reuse (keeps allocations).
+    pub fn reset(&mut self) {
+        self.active.clear_all();
+        self.bcast_next.clear_all();
+        self.bcast_cur.clear_all();
+        self.buffers.clear_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::partition::PartitionPlan;
+
+    fn plan4() -> Arc<PartitionPlan> {
+        Arc::new(PartitionPlan::build(&gen::grid(8, 8), 4))
+    }
+
+    #[test]
+    fn sharded_bits_route_globally() {
+        let plan = plan4();
+        let mut bits = ShardedBits::new(Arc::clone(&plan));
+        let n = plan.num_vertices();
+        bits.set(0);
+        bits.set(n - 1);
+        bits.set(n / 2);
+        assert_eq!(bits.count(), 3);
+        let all: Vec<VertexId> = bits.iter_all().collect();
+        assert_eq!(all, vec![0, (n / 2) as VertexId, (n - 1) as VertexId]);
+        // Per-shard iteration yields ids inside the shard's range.
+        for s in 0..plan.num_shards() {
+            for v in bits.iter_shard(s) {
+                assert!(plan.shard_range(s).contains(&(v as usize)));
+            }
+        }
+        bits.clear_all();
+        assert_eq!(bits.count(), 0);
+    }
+
+    #[test]
+    fn remote_buffers_drain_in_worker_then_push_order() {
+        let bufs = RemoteBuffers::new(3, 2);
+        bufs.push(2, 1, (10, 100));
+        bufs.push(0, 1, (11, 101));
+        bufs.push(0, 1, (12, 102));
+        bufs.push(1, 0, (13, 103));
+        assert_eq!(bufs.pending_for(1), 3);
+        assert_eq!(bufs.pending_for(0), 1);
+        let mut seen = Vec::new();
+        bufs.drain_for(1, |m| seen.push(m));
+        assert_eq!(seen, vec![(11, 101), (12, 102), (10, 100)]);
+        assert_eq!(bufs.pending_for(1), 0);
+        assert_eq!(bufs.pending_for(0), 1, "other shard untouched");
+    }
+
+    #[test]
+    fn shard_state_resets_for_reuse() {
+        let plan = plan4();
+        let mut st = ShardState::new(Arc::clone(&plan), 2);
+        st.active.set(5);
+        st.bcast_next.set(6);
+        st.buffers.push(0, 0, (1, 2));
+        assert!(st.fits(&plan, 2));
+        assert!(st.fits(&plan, 1));
+        assert!(!st.fits(&plan, 3), "needs more worker rows");
+        st.reset();
+        assert_eq!(st.active.count(), 0);
+        assert_eq!(st.bcast_next.count(), 0);
+        assert_eq!(st.buffers.pending_for(0), 0);
+    }
+}

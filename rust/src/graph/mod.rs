@@ -10,7 +10,9 @@ pub mod catalog;
 pub mod csr;
 pub mod gen;
 pub mod io;
+pub mod partition;
 pub mod stats;
 
 pub use builder::GraphBuilder;
 pub use csr::{Csr, EdgeWeight, VertexId};
+pub use partition::{PartitionPlan, Partitioning};

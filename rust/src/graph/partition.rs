@@ -1,0 +1,403 @@
+//! Edge-balanced graph partitioning: the substrate for sharded execution.
+//!
+//! A [`PartitionPlan`] cuts a [`Csr`]'s vertex range into contiguous,
+//! edge-balanced shards using the same degree-prefix machinery as the
+//! edge-centric schedule ([`crate::util::prefix::balanced_cuts`], paper
+//! §V-A — the partitioner *is* the edge-centric cut promoted to a
+//! persistent runtime object). Each shard owns:
+//!
+//! - a contiguous vertex id range (`cuts[s]..cuts[s+1]`), which makes the
+//!   shard's mailbox slots a contiguous slab of the vertex store — the
+//!   cache-locality property the whole design exists for;
+//! - an entry in the **owner map** (`shard_of`), the O(1) routing oracle
+//!   the engine consults on every cross-shard send;
+//! - intra/cross **edge classification** counts: an out-edge is *interior*
+//!   when both endpoints share a shard (delivered in place during
+//!   scatter) and *cross* otherwise (buffered and flushed shard-at-a-time
+//!   — see `engine/core.rs`).
+//!
+//! Shard weights are `out_degree + in_degree`, so one plan balances both
+//! push scatter (out-edges) and pull gather (in-edges) work.
+//!
+//! [`Partitioning`] is the user-facing knob in
+//! [`EngineConfig`](crate::engine::EngineConfig): `None` preserves the
+//! flat engine, `Shards(k)` asks for an explicit shard count, and
+//! `CacheSized` derives the count from a per-shard hot-state byte budget.
+
+use crate::graph::csr::{Csr, VertexId};
+use crate::util::prefix::{balanced_cuts, exclusive_prefix_sum};
+use std::ops::Range;
+
+/// Estimated hot bytes per vertex for [`Partitioning::CacheSized`]: two
+/// 16-byte mailbox slots, the user value and activity bits, rounded to a
+/// cache line.
+pub const HOT_BYTES_PER_VERTEX: usize = 64;
+
+/// Default per-shard hot-state budget: half of a typical 4 MiB per-core
+/// L2/LLC slice, leaving room for the CSR rows the scatter walks.
+pub const DEFAULT_SHARD_BUDGET: usize = 2 * 1024 * 1024;
+
+/// How (and whether) a run shards the graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Partitioning {
+    /// Flat execution: one vertex range, one global mailbox array — the
+    /// pre-partition engine, bit-for-bit.
+    #[default]
+    None,
+    /// Exactly `k` edge-balanced shards (clamped to the vertex count).
+    Shards(usize),
+    /// As many shards as needed so each shard's hot vertex state fits in
+    /// `budget_bytes` ([`HOT_BYTES_PER_VERTEX`] per vertex).
+    CacheSized {
+        /// Per-shard hot-state byte budget.
+        budget_bytes: usize,
+    },
+}
+
+impl Partitioning {
+    /// Parse from CLI text: `none`, a shard count (`8`), or
+    /// `cache[:bytes]`.
+    pub fn parse(s: &str) -> Option<Partitioning> {
+        match s {
+            "none" | "flat" | "0" => Some(Partitioning::None),
+            "cache" => Some(Partitioning::CacheSized {
+                budget_bytes: DEFAULT_SHARD_BUDGET,
+            }),
+            _ => match s.split_once(':') {
+                Some(("cache", b)) => Some(Partitioning::CacheSized {
+                    budget_bytes: b.parse().ok()?,
+                }),
+                Some(_) => None,
+                None => s.parse().ok().map(Partitioning::Shards),
+            },
+        }
+    }
+
+    /// Resolve to a concrete shard count for an `n`-vertex graph.
+    /// Returns 0 for flat execution ([`Partitioning::None`], and
+    /// `Shards(0)` — every entry point treats 0 shards as "no
+    /// partitioning"); otherwise at least 1 and at most `n.max(1)`.
+    pub fn resolve(self, n: usize) -> usize {
+        match self {
+            Partitioning::None | Partitioning::Shards(0) => 0,
+            Partitioning::Shards(k) => k.clamp(1, n.max(1)),
+            Partitioning::CacheSized { budget_bytes } => {
+                let per_shard = (budget_bytes / HOT_BYTES_PER_VERTEX).max(1);
+                crate::util::div_ceil(n.max(1), per_shard).clamp(1, n.max(1))
+            }
+        }
+    }
+}
+
+/// An immutable partition of one graph into contiguous, edge-balanced
+/// shards. Built once per (graph, shard count) and shared by `Arc`
+/// across runs (the session caches plans keyed by resolved shard count).
+#[derive(Clone, Debug)]
+pub struct PartitionPlan {
+    /// Shard boundaries over vertex ids: `shards + 1` entries, first 0,
+    /// last `n`, non-decreasing. Shard `s` owns `cuts[s]..cuts[s+1]`.
+    cuts: Vec<usize>,
+    /// `owner[v]` = shard owning vertex `v` (redundant with `cuts`, kept
+    /// dense for O(1) routing on the send hot path).
+    owner: Vec<u32>,
+    /// Per-shard total out-edges (scatter-side work, push mode).
+    out_edges: Vec<u64>,
+    /// Per-shard total in-edges (gather-side work, pull mode).
+    in_edges: Vec<u64>,
+    /// Per-shard out-edges whose target lives in the same shard.
+    interior_out: Vec<u64>,
+    /// Per-shard out-edges whose target lives in another shard.
+    cross_out: Vec<u64>,
+}
+
+impl PartitionPlan {
+    /// Cut `g` into `shards` contiguous ranges balanced by
+    /// `out_degree + in_degree`, then classify every out-edge as
+    /// interior or cross.
+    pub fn build(g: &Csr, shards: usize) -> PartitionPlan {
+        let n = g.num_vertices();
+        let shards = shards.clamp(1, n.max(1));
+        let weights: Vec<u64> = g
+            .vertices()
+            .map(|v| (g.out_degree(v) + g.in_degree(v)) as u64)
+            .collect();
+        let prefix = exclusive_prefix_sum(&weights);
+        let cuts = balanced_cuts(&prefix, shards);
+
+        let mut owner = vec![0u32; n];
+        for s in 0..shards {
+            for o in &mut owner[cuts[s]..cuts[s + 1]] {
+                *o = s as u32;
+            }
+        }
+
+        let mut out_edges = vec![0u64; shards];
+        let mut in_edges = vec![0u64; shards];
+        let mut interior_out = vec![0u64; shards];
+        let mut cross_out = vec![0u64; shards];
+        for v in g.vertices() {
+            let s = owner[v as usize] as usize;
+            out_edges[s] += g.out_degree(v) as u64;
+            in_edges[s] += g.in_degree(v) as u64;
+            for &dst in g.out_neighbors(v) {
+                if owner[dst as usize] as usize == s {
+                    interior_out[s] += 1;
+                } else {
+                    cross_out[s] += 1;
+                }
+            }
+        }
+
+        PartitionPlan {
+            cuts,
+            owner,
+            out_edges,
+            in_edges,
+            interior_out,
+            cross_out,
+        }
+    }
+
+    /// Number of shards.
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.cuts.len() - 1
+    }
+
+    /// Number of vertices covered.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Shard owning vertex `v` — the routing oracle.
+    #[inline]
+    pub fn shard_of(&self, v: VertexId) -> usize {
+        self.owner[v as usize] as usize
+    }
+
+    /// Vertex id range of shard `s`.
+    #[inline]
+    pub fn shard_range(&self, s: usize) -> Range<usize> {
+        self.cuts[s]..self.cuts[s + 1]
+    }
+
+    /// Number of vertices in shard `s`.
+    #[inline]
+    pub fn shard_len(&self, s: usize) -> usize {
+        self.cuts[s + 1] - self.cuts[s]
+    }
+
+    /// Shard boundaries (`shards + 1` entries).
+    #[inline]
+    pub fn cuts(&self) -> &[usize] {
+        &self.cuts
+    }
+
+    /// Per-shard total out-edges.
+    #[inline]
+    pub fn out_edges(&self) -> &[u64] {
+        &self.out_edges
+    }
+
+    /// Per-shard total in-edges.
+    #[inline]
+    pub fn in_edges(&self) -> &[u64] {
+        &self.in_edges
+    }
+
+    /// Per-shard interior out-edges (both endpoints in the shard).
+    #[inline]
+    pub fn interior_out(&self) -> &[u64] {
+        &self.interior_out
+    }
+
+    /// Per-shard cross out-edges (target owned elsewhere).
+    #[inline]
+    pub fn cross_out(&self) -> &[u64] {
+        &self.cross_out
+    }
+
+    /// Total cross-shard out-edges.
+    pub fn total_cross(&self) -> u64 {
+        self.cross_out.iter().sum()
+    }
+
+    /// Edge imbalance: max shard weight over mean shard weight (weights
+    /// as used for the cut: out + in degree). 1.0 is a perfect cut; an
+    /// edgeless graph reports 1.0.
+    pub fn edge_imbalance(&self) -> f64 {
+        let loads: Vec<u64> = (0..self.num_shards())
+            .map(|s| self.out_edges[s] + self.in_edges[s])
+            .collect();
+        let total: u64 = loads.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / loads.len() as f64;
+        let max = *loads.iter().max().unwrap() as f64;
+        max / mean
+    }
+
+    /// Structural validation used by tests: cuts cover `0..n` monotonely,
+    /// the owner map agrees with the cuts, and the interior/cross counts
+    /// classify every out-edge exactly once.
+    pub fn validate(&self, g: &Csr) -> Result<(), String> {
+        let n = g.num_vertices();
+        if self.owner.len() != n {
+            return Err("owner map length mismatch".into());
+        }
+        if self.cuts.first() != Some(&0) || self.cuts.last() != Some(&n) {
+            return Err("cuts endpoints wrong".into());
+        }
+        if self.cuts.windows(2).any(|w| w[0] > w[1]) {
+            return Err("cuts not monotone".into());
+        }
+        for (v, &o) in self.owner.iter().enumerate() {
+            let s = o as usize;
+            if s >= self.num_shards() || !self.shard_range(s).contains(&v) {
+                return Err(format!("owner[{v}] disagrees with cuts"));
+            }
+        }
+        let mut interior = vec![0u64; self.num_shards()];
+        let mut cross = vec![0u64; self.num_shards()];
+        for (src, dst) in g.edges() {
+            let s = self.shard_of(src);
+            if s == self.shard_of(dst) {
+                interior[s] += 1;
+            } else {
+                cross[s] += 1;
+            }
+        }
+        if interior != self.interior_out || cross != self.cross_out {
+            return Err("interior/cross classification mismatch".into());
+        }
+        let classified: u64 = interior.iter().chain(cross.iter()).sum();
+        if classified != g.num_edges() as u64 {
+            return Err("edge classification does not cover every edge once".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::util::quick;
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(Partitioning::parse("none"), Some(Partitioning::None));
+        assert_eq!(Partitioning::parse("0"), Some(Partitioning::None));
+        assert_eq!(Partitioning::parse("8"), Some(Partitioning::Shards(8)));
+        assert_eq!(
+            Partitioning::parse("cache"),
+            Some(Partitioning::CacheSized {
+                budget_bytes: DEFAULT_SHARD_BUDGET
+            })
+        );
+        assert_eq!(
+            Partitioning::parse("cache:4096"),
+            Some(Partitioning::CacheSized { budget_bytes: 4096 })
+        );
+        assert_eq!(Partitioning::parse("bogus"), None);
+        // Malformed cache forms must not silently use the default budget.
+        assert_eq!(Partitioning::parse("cache4096"), None);
+        assert_eq!(Partitioning::parse("cache:lots"), None);
+    }
+
+    #[test]
+    fn resolve_clamps_and_sizes() {
+        assert_eq!(Partitioning::None.resolve(100), 0);
+        assert_eq!(Partitioning::Shards(4).resolve(100), 4);
+        assert_eq!(Partitioning::Shards(500).resolve(100), 100);
+        // 0 shards means flat everywhere, including the raw enum.
+        assert_eq!(Partitioning::Shards(0).resolve(100), 0);
+        // 4096-byte budget = 64 vertices per shard.
+        assert_eq!(
+            Partitioning::CacheSized { budget_bytes: 4096 }.resolve(640),
+            10
+        );
+        assert_eq!(
+            Partitioning::CacheSized { budget_bytes: 1 }.resolve(100),
+            100
+        );
+    }
+
+    #[test]
+    fn plan_covers_and_classifies_small_graph() {
+        let g = gen::grid(8, 8);
+        let plan = PartitionPlan::build(&g, 4);
+        assert_eq!(plan.num_shards(), 4);
+        plan.validate(&g).unwrap();
+        let interior: u64 = plan.interior_out().iter().sum();
+        let cross: u64 = plan.total_cross();
+        assert_eq!(interior + cross, g.num_edges() as u64);
+        // A grid cut into contiguous ranges has few cross edges.
+        assert!(cross < g.num_edges() as u64 / 2);
+    }
+
+    #[test]
+    fn single_shard_has_no_cross_edges() {
+        let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 7);
+        let plan = PartitionPlan::build(&g, 1);
+        assert_eq!(plan.num_shards(), 1);
+        plan.validate(&g).unwrap();
+        assert_eq!(plan.total_cross(), 0);
+        assert_eq!(plan.edge_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn prop_every_edge_interior_xor_cross_and_owner_consistent() {
+        quick::check("partition invariants", |rng| {
+            let scale = 5 + rng.below(4) as u32;
+            let g = gen::rmat(scale, 4, 0.45, 0.22, 0.22, rng.below(1000));
+            let shards = 1 + rng.below(9) as usize;
+            let plan = PartitionPlan::build(&g, shards);
+            plan.validate(&g)?;
+            // Owner map is a cover: every vertex owned exactly once, and
+            // shard lengths sum to n.
+            let total_len: usize = (0..plan.num_shards()).map(|s| plan.shard_len(s)).sum();
+            if total_len != g.num_vertices() {
+                return Err(format!(
+                    "shard lengths sum to {total_len}, want {}",
+                    g.num_vertices()
+                ));
+            }
+            // Edge balance: no shard exceeds ideal + max vertex weight
+            // (the balanced_cuts guarantee carried through).
+            let maxw = g
+                .vertices()
+                .map(|v| (g.out_degree(v) + g.in_degree(v)) as u64)
+                .max()
+                .unwrap_or(0);
+            let total: u64 = plan
+                .out_edges()
+                .iter()
+                .zip(plan.in_edges())
+                .map(|(o, i)| o + i)
+                .sum();
+            let ideal = total as f64 / plan.num_shards() as f64;
+            for s in 0..plan.num_shards() {
+                let load = plan.out_edges()[s] + plan.in_edges()[s];
+                if load as f64 > ideal + maxw as f64 {
+                    return Err(format!(
+                        "shard {s} load {load} exceeds ideal {ideal} + max weight {maxw}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn imbalance_reports_skew() {
+        // A star graph: the hub dominates, so any multi-shard cut is
+        // imbalanced; the metric must reflect that (> 1).
+        let g = gen::star(256);
+        let plan = PartitionPlan::build(&g, 4);
+        plan.validate(&g).unwrap();
+        assert!(plan.edge_imbalance() > 1.0);
+    }
+}

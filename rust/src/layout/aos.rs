@@ -52,6 +52,19 @@ impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for AosStore<V, M> {
         self.flipped = false;
     }
 
+    fn reset_range(&mut self, range: std::ops::Range<usize>, init: &mut dyn FnMut(VertexId) -> V) {
+        for v in range {
+            let r = &mut self.records[v];
+            *r.value.get_mut() = init(v as VertexId);
+            r.slot_a.clear();
+            r.slot_b.clear();
+        }
+    }
+
+    fn rewind_epochs(&mut self) {
+        self.flipped = false;
+    }
+
     #[inline]
     fn len(&self) -> usize {
         self.records.len()

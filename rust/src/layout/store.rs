@@ -101,6 +101,19 @@ pub trait VertexStore<V: Send, M: MessageValue>: Send + Sync {
     /// allocations across runs.
     fn reset(&mut self, g: &Csr, init: &mut dyn FnMut(VertexId) -> V);
 
+    /// Re-prime one contiguous vertex range — a partition shard's slab —
+    /// leaving the epoch flip untouched. Partitioned sessions prime a
+    /// pooled store shard-by-shard so each shard's values and slots are
+    /// written as one contiguous sweep (warming the slab the scatter
+    /// phase will own); callers follow up with [`VertexStore::rewind_epochs`]
+    /// once all shards are primed. The post-state of priming every shard
+    /// plus a rewind is identical to [`VertexStore::reset`].
+    fn reset_range(&mut self, range: std::ops::Range<usize>, init: &mut dyn FnMut(VertexId) -> V);
+
+    /// Reset the epoch flip to its initial orientation (companion of
+    /// [`VertexStore::reset_range`]; [`VertexStore::reset`] includes it).
+    fn rewind_epochs(&mut self);
+
     /// Number of vertices.
     fn len(&self) -> usize;
 

@@ -19,6 +19,12 @@
 //! - the paper's optimisations as composable components: hybrid
 //!   combiners ([`combine`]), externalised vertex layouts ([`layout`]),
 //!   edge-centric & dynamic scheduling ([`sched`]);
+//! - a **partitioned execution substrate**
+//!   ([`engine::Partitioning`], [`graph::partition`]): cache-sized,
+//!   edge-balanced shards executed scatter/flush/apply with
+//!   owner-exclusive shard-local combining and buffered cross-shard
+//!   message routing — bit-identical to flat execution across the whole
+//!   algorithm matrix;
 //! - a graph substrate ([`graph`]) with generators, IO (including
 //!   weighted edge lists and the `.ipg` v2 binary format) and the
 //!   paper-analogue catalog;

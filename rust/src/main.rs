@@ -7,7 +7,8 @@
 //! ipregel info      <graph|name> [--dir …]                degree stats + histogram
 //! ipregel run       --algo pr|cc|sssp|wsssp|bfs <graph|name>  real engine run (GraphSession)
 //!                   [--threads N] [--schedule S] [--strategy S]
-//!                   [--layout aos|soa] [--bypass] [--iterations N] [--source V]
+//!                   [--layout aos|soa] [--bypass] [--shards none|K|cache[:bytes]]
+//!                   [--iterations N] [--source V]
 //! ipregel sim       (same switches)                       virtual-testbed run (32 vthreads)
 //! ipregel table1    [--tiny] [--dir …]                    reproduce paper Table I
 //! ipregel table2    [--tiny] [--dir …] [--bench pr,cc,sssp] [--threads 32]
@@ -21,7 +22,7 @@
 use ipregel::algos::{Bfs, ConnectedComponents, PageRank, Sssp, WeightedSssp};
 use ipregel::combine::Strategy;
 use ipregel::config::Opts;
-use ipregel::engine::{EngineConfig, GraphSession, VertexProgram};
+use ipregel::engine::{EngineConfig, GraphSession, Partitioning, VertexProgram};
 use ipregel::exp::{run_table1, table2, Bench, Table2Options};
 use ipregel::graph::csr::Csr;
 use ipregel::graph::{catalog, io, stats};
@@ -132,18 +133,21 @@ fn engine_cfg(opts: &Opts) -> Result<EngineConfig> {
         .ok_or_else(|| err!("--strategy: lock|cas|hybrid"))?;
     let layout = Layout::parse(&opts.get_or("layout", "aos"))
         .ok_or_else(|| err!("--layout: aos|soa"))?;
+    let partitioning = Partitioning::parse(&opts.get_or("shards", "none"))
+        .ok_or_else(|| err!("--shards: none|<count>|cache[:bytes]"))?;
     Ok(EngineConfig::default()
         .threads(opts.get_num("threads", 4usize)?)
         .schedule(schedule)
         .strategy(strategy)
         .layout(layout)
         .bypass(opts.flag("bypass"))
+        .partitioning(partitioning)
         .max_supersteps(opts.get_num("max-supersteps", 100_000usize)?))
 }
 
 const RUN_FLAGS: &[&str] = &[
-    "algo", "threads", "schedule", "strategy", "layout", "bypass", "iterations", "source",
-    "max-supersteps", "dir",
+    "algo", "threads", "schedule", "strategy", "layout", "bypass", "shards", "iterations",
+    "source", "max-supersteps", "dir",
 ];
 
 fn print_run(label: &str, metrics: &RunMetrics) {

@@ -9,9 +9,13 @@ pub struct SuperstepStats {
     pub active_vertices: usize,
     /// Messages delivered (push) or combinations performed (pull).
     pub messages: u64,
-    /// Wall-clock time of the compute phase.
+    /// Wall-clock time of the compute phase (partitioned runs: scatter).
     pub compute_time: Duration,
-    /// Wall-clock time of the barrier phase (swap/clear/activate).
+    /// Wall-clock time of the cross-shard flush phase (zero on flat
+    /// runs, which have no such phase).
+    pub flush_time: Duration,
+    /// Wall-clock time of the barrier phase (swap/clear/activate;
+    /// partitioned runs call this apply).
     pub barrier_time: Duration,
 }
 
@@ -29,6 +33,32 @@ pub enum HaltReason {
     Converged,
 }
 
+/// A documented scheduling fallback the engine applied because the
+/// requested combination cannot run in its zero-overhead form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleFallback {
+    /// `Schedule::EdgeCentric` with selection bypass: the edge-centric
+    /// cut needs degree weights over the iteration space, but bypass
+    /// changes that space every superstep, so the engine rebuilds the
+    /// weight vector from the active list each superstep instead of
+    /// using session-cached weights — the §V-A overhead the paper
+    /// measures. Previously this happened silently; it is now warned
+    /// once per process and surfaced here.
+    EdgeCentricBypassRebuild,
+}
+
+impl std::fmt::Display for ScheduleFallback {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleFallback::EdgeCentricBypassRebuild => write!(
+                f,
+                "edge-centric + bypass: degree weights rebuilt from the \
+                 active list every superstep"
+            ),
+        }
+    }
+}
+
 /// Whole-run metrics returned by every engine.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -42,6 +72,19 @@ pub struct RunMetrics {
     /// [`GraphSession`](../engine/session/struct.GraphSession.html)
     /// instead of allocating a fresh one.
     pub store_reused: bool,
+    /// Shard count of the partitioned substrate (0 = flat execution).
+    pub shards: usize,
+    /// Max-over-mean shard edge load of the partition plan (1.0 ideal;
+    /// 0.0 on flat runs, where no plan exists).
+    pub shard_edge_imbalance: f64,
+    /// Messages delivered inside their destination's own shard (flat
+    /// runs: 0 — the split is only defined under partitioning).
+    pub intra_shard_messages: u64,
+    /// Messages that crossed shards through the remote buffers (push
+    /// sends to foreign shards; pull combines from foreign outboxes).
+    pub cross_shard_messages: u64,
+    /// A documented scheduling fallback applied to this run, if any.
+    pub schedule_fallback: Option<ScheduleFallback>,
 }
 
 impl RunMetrics {
@@ -60,6 +103,11 @@ impl RunMetrics {
         self.supersteps.iter().map(|s| s.compute_time).sum()
     }
 
+    /// Sum of cross-shard flush-phase times (zero on flat runs).
+    pub fn flush_time(&self) -> Duration {
+        self.supersteps.iter().map(|s| s.flush_time).sum()
+    }
+
     /// Sum of the per-superstep active counts (total vertex activations).
     pub fn total_activations(&self) -> u64 {
         self.supersteps.iter().map(|s| s.active_vertices as u64).sum()
@@ -67,14 +115,24 @@ impl RunMetrics {
 
     /// Compact single-line summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "supersteps={} activations={} messages={} compute={} total={}",
             self.num_supersteps(),
             self.total_activations(),
             self.total_messages(),
             crate::util::timer::fmt_duration(self.compute_time()),
             crate::util::timer::fmt_duration(self.total_time),
-        )
+        );
+        if self.shards > 0 {
+            s.push_str(&format!(
+                " shards={} cross={} imbalance={:.2}",
+                self.shards, self.cross_shard_messages, self.shard_edge_imbalance
+            ));
+        }
+        if let Some(fb) = &self.schedule_fallback {
+            s.push_str(&format!(" fallback=[{fb}]"));
+        }
+        s
     }
 }
 
@@ -144,12 +202,14 @@ mod tests {
                     active_vertices: 10,
                     messages: 100,
                     compute_time: Duration::from_millis(5),
+                    flush_time: Duration::from_millis(1),
                     barrier_time: Duration::from_millis(1),
                 },
                 SuperstepStats {
                     active_vertices: 4,
                     messages: 7,
                     compute_time: Duration::from_millis(2),
+                    flush_time: Duration::ZERO,
                     barrier_time: Duration::from_millis(1),
                 },
             ],
@@ -160,7 +220,21 @@ mod tests {
         assert_eq!(m.total_messages(), 107);
         assert_eq!(m.total_activations(), 14);
         assert_eq!(m.compute_time(), Duration::from_millis(7));
+        assert_eq!(m.flush_time(), Duration::from_millis(1));
         assert!(m.summary().contains("supersteps=2"));
+        // Flat run: no shard section in the summary.
+        assert!(!m.summary().contains("shards="));
+        let sharded = RunMetrics {
+            shards: 8,
+            cross_shard_messages: 42,
+            shard_edge_imbalance: 1.25,
+            schedule_fallback: Some(ScheduleFallback::EdgeCentricBypassRebuild),
+            ..Default::default()
+        };
+        let s = sharded.summary();
+        assert!(s.contains("shards=8"));
+        assert!(s.contains("cross=42"));
+        assert!(s.contains("fallback="));
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod pool;
 use crate::util::prefix::{balanced_cuts, exclusive_prefix_sum};
 use std::ops::Range;
 
-pub use pool::parallel_for;
+pub use pool::{parallel_for, parallel_for_hinted};
 
 /// Default dynamic chunk size — the paper's empirically determined 256.
 pub const DEFAULT_CHUNK: usize = 256;
@@ -41,7 +41,37 @@ pub enum Schedule {
     /// dynamic chunking: the ranges are precomputed per superstep from
     /// the active vertices' degrees (which is also why the paper pits it
     /// *against* dynamic scheduling rather than composing them).
+    ///
+    /// **With selection bypass** the iteration space changes every
+    /// superstep, so the precomputed-weights premise does not hold: the
+    /// engine falls back to rebuilding the degree-weight vector from
+    /// the active list each superstep. This fallback is documented
+    /// behaviour, warned once per process on stderr, and surfaced in
+    /// [`RunMetrics::schedule_fallback`].
+    ///
+    /// **Under partitioned execution** the edge-centric cut is applied
+    /// *per shard*: the dispatch unit becomes the shard, weighted by its
+    /// (active) edge count — the natural home for this schedule, since
+    /// the shard boundaries themselves come from the same
+    /// degree-balanced cut ([`crate::graph::partition::PartitionPlan`]).
+    ///
+    /// [`RunMetrics::schedule_fallback`]: crate::metrics::RunMetrics::schedule_fallback
     EdgeCentric,
+}
+
+impl Schedule {
+    /// The granularity this policy uses when the dispatch unit is a
+    /// *shard* rather than a vertex: FCFS policies claim one shard at a
+    /// time (a fixed chunk of hundreds of vertices would collapse a
+    /// handful of shards into a single claim), the pre-partitioned
+    /// policies are unchanged.
+    pub fn for_shards(self) -> Schedule {
+        match self {
+            Schedule::Dynamic { .. } => Schedule::Dynamic { chunk: 1 },
+            Schedule::Guided { .. } => Schedule::Guided { min_chunk: 1 },
+            s => s,
+        }
+    }
 }
 
 impl Schedule {
@@ -167,6 +197,20 @@ mod tests {
         );
         assert_eq!(Schedule::parse("edge-centric"), Some(Schedule::EdgeCentric));
         assert_eq!(Schedule::parse("bogus"), None);
+    }
+
+    #[test]
+    fn shard_granularity_claims_one_at_a_time() {
+        assert_eq!(
+            Schedule::Dynamic { chunk: 256 }.for_shards(),
+            Schedule::Dynamic { chunk: 1 }
+        );
+        assert_eq!(
+            Schedule::Guided { min_chunk: 8 }.for_shards(),
+            Schedule::Guided { min_chunk: 1 }
+        );
+        assert_eq!(Schedule::Static.for_shards(), Schedule::Static);
+        assert_eq!(Schedule::EdgeCentric.for_shards(), Schedule::EdgeCentric);
     }
 
     #[test]

@@ -29,6 +29,24 @@ pub fn parallel_for<F>(
 ) where
     F: Fn(usize, Range<usize>) + Sync,
 {
+    parallel_for_hinted(threads, n, sched, weights, n, body)
+}
+
+/// [`parallel_for`] with the serial cutoff judged against `work_hint`
+/// instead of the item count. The partitioned engine dispatches *shards*
+/// (a handful of items, each carrying thousands of vertices), so the
+/// item count says nothing about whether spawning a team pays off —
+/// the caller passes the active-vertex total instead.
+pub fn parallel_for_hinted<F>(
+    threads: usize,
+    n: usize,
+    sched: Schedule,
+    weights: Option<&[u64]>,
+    work_hint: usize,
+    body: F,
+) where
+    F: Fn(usize, Range<usize>) + Sync,
+{
     let threads = threads.max(1);
     if n == 0 {
         return;
@@ -40,7 +58,7 @@ pub fn parallel_for<F>(
     // a 600×600 grid SSSP has 1 200 supersteps of ≤1 198-vertex
     // frontiers). Below the cutoff the caller runs the chunks inline.
     const SERIAL_CUTOFF: usize = 4096;
-    if threads == 1 || n < SERIAL_CUTOFF {
+    if threads == 1 || work_hint < SERIAL_CUTOFF {
         for r in chunks {
             body(0, r);
         }
@@ -117,6 +135,23 @@ mod tests {
             run_and_count(threads, 1000, Schedule::Dynamic { chunk: 7 }, None);
             run_and_count(threads, 1000, Schedule::Guided { min_chunk: 3 }, None);
             run_and_count(threads, 1000, Schedule::EdgeCentric, Some(&weights));
+        }
+    }
+
+    #[test]
+    fn hinted_variant_visits_each_item_once_even_when_parallel() {
+        // 8 items with a large work hint: the cutoff is bypassed, so the
+        // chunks run on real threads — shard-dispatch shape.
+        for sched in [Schedule::Static, Schedule::Dynamic { chunk: 1 }] {
+            let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for_hinted(4, 8, sched, None, 1_000_000, |_tid, range| {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "item {i} under {sched:?}");
+            }
         }
     }
 

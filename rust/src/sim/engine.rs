@@ -14,6 +14,7 @@
 use crate::combine::{Combiner, Strategy};
 use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, VertexProgram};
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
+use crate::graph::partition::PartitionPlan;
 use crate::layout::{SoaStore, VertexStore};
 use crate::sim::machine::VirtualMachine;
 use crate::sim::CostModel;
@@ -245,6 +246,14 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             None
         };
 
+        // Partitioned substrate: the same plan the real engine would
+        // build. Values are unaffected (pass A delivers for real either
+        // way); only the pricing of the scatter/flush phases changes.
+        let plan: Option<PartitionPlan> = match cfg.partitioning.resolve(n) {
+            0 => None,
+            s => Some(PartitionPlan::build(g, s)),
+        };
+
         let mut agg_prev: Option<AggValue<P>> = None;
         let mut superstep = 0usize;
         let mut total_messages = 0u64;
@@ -377,7 +386,103 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             }
 
             // ---- Dispatch to the virtual machine ----------------------
-            let stats = if cfg.bypass {
+            let stats = if let Some(plan) = &plan {
+                // Partitioned scatter: whole shards are the dispatch
+                // unit. Each shard's cost is the sum of its active items
+                // (cross-shard sends paying a buffer append instead of a
+                // delivery), plus — when scanning — the activity check of
+                // its inactive vertices.
+                let shards = plan.num_shards();
+                let mut shard_costs = vec![0.0f64; shards];
+                let mut cross_to = vec![0u64; shards];
+                for (it, &c) in items.iter().zip(&active_costs) {
+                    let s = plan.shard_of(it.v);
+                    shard_costs[s] += c;
+                    if mode == Mode::Push {
+                        // `active_costs` priced every send as a *contended*
+                        // delivery; under the sharded substrate no scatter
+                        // delivery contends. Swap the price per target:
+                        // intra-shard → owner-exclusive combine+store (keeps
+                        // the memory-access term, drops the lock/CAS term);
+                        // cross-shard → a buffer append (the delivery happens
+                        // owner-exclusively in the flush region below).
+                        let exclusive = push_mem + cost.t_store + cost.t_combine;
+                        let mut reprice = |dst: VertexId, shard_costs: &mut Vec<f64>| {
+                            let d = plan.shard_of(dst);
+                            if d != s {
+                                cross_to[d] += 1;
+                                shard_costs[s] += cost.t_store - price_delivery(dst);
+                            } else {
+                                shard_costs[s] += exclusive - price_delivery(dst);
+                            }
+                        };
+                        if it.did_broadcast {
+                            for &dst in g.out_neighbors(it.v) {
+                                reprice(dst, &mut shard_costs);
+                            }
+                        }
+                        for &dst in &step.sends_log[it.sends.0 as usize..it.sends.1 as usize] {
+                            reprice(dst, &mut shard_costs);
+                        }
+                    }
+                }
+                if !cfg.bypass {
+                    let mut active_in = vec![0usize; shards];
+                    for it in &items {
+                        active_in[plan.shard_of(it.v)] += 1;
+                    }
+                    for s in 0..shards {
+                        shard_costs[s] +=
+                            (plan.shard_len(s) - active_in[s]) as f64 * cost.t_access_hit * 0.5;
+                    }
+                }
+                let shard_sched = cfg.schedule.for_shards();
+                let shard_weights: Option<Vec<u64>> = if shard_sched.needs_weights() {
+                    Some(if cfg.bypass {
+                        let mut w = vec![0u64; shards];
+                        for it in &items {
+                            w[plan.shard_of(it.v)] += match mode {
+                                Mode::Push => g.out_degree(it.v) as u64,
+                                Mode::Pull => g.in_degree(it.v) as u64,
+                            };
+                        }
+                        w
+                    } else {
+                        match mode {
+                            Mode::Push => plan.out_edges().to_vec(),
+                            Mode::Pull => plan.in_edges().to_vec(),
+                        }
+                    })
+                } else {
+                    None
+                };
+                let scatter = vm.region(
+                    shard_sched,
+                    &shard_costs,
+                    shard_weights.as_deref(),
+                    cost.t_chunk_claim,
+                );
+                // Flush: destination shards drain their buffered
+                // cross-shard messages owner-exclusively.
+                let total_cross: u64 = cross_to.iter().sum();
+                if total_cross > 0 {
+                    let flush_costs: Vec<f64> = cross_to
+                        .iter()
+                        .map(|&c| c as f64 * (cost.t_store + cost.t_combine))
+                        .collect();
+                    vm.region(
+                        shard_sched,
+                        &flush_costs,
+                        if shard_sched.needs_weights() {
+                            Some(cross_to.as_slice())
+                        } else {
+                            None
+                        },
+                        cost.t_chunk_claim,
+                    );
+                }
+                scatter
+            } else if cfg.bypass {
                 let weights: Option<Vec<u64>> = if cfg.schedule.needs_weights() {
                     Some(
                         active
@@ -495,6 +600,23 @@ mod tests {
         let real_s = session.run(&p);
         let sim_s = SimEngine::new(&g, &p, EngineConfig::default().bypass(true)).run();
         assert_eq!(real_s.values, sim_s.values);
+    }
+
+    #[test]
+    fn partitioned_sim_matches_real_partitioned_engine() {
+        let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 21);
+        let p = Sssp::from_hub(&g);
+        let cfg = EngineConfig::default().bypass(true).shards(4);
+        let real = GraphSession::with_config(&g, cfg).run(&p);
+        let sim = SimEngine::new(&g, &p, cfg).run();
+        assert_eq!(real.values, sim.values);
+        assert_eq!(real.metrics.num_supersteps(), sim.supersteps);
+        // Pull-mode too (PageRank), against the flat reference values.
+        let pr = PageRank::default();
+        let flat = SimEngine::new(&g, &pr, EngineConfig::default()).run();
+        let sharded = SimEngine::new(&g, &pr, EngineConfig::default().shards(4)).run();
+        assert_eq!(flat.values, sharded.values);
+        assert!(sharded.virtual_seconds > 0.0);
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Partitioned-substrate integration tests.
+//!
+//! The contract under test: sharded execution is **bit-identical** to
+//! the flat engine — same final values, same superstep count, same
+//! per-superstep active counts and message totals — for every algorithm
+//! in the parity matrix, across the Strategy × Layout × Schedule ×
+//! bypass grid; and the partition itself satisfies its structural
+//! invariants (every edge interior xor cross, owner map a consistent
+//! cover, message split exactly covering the message total).
+
+use ipregel::algos::{
+    reference, Bfs, ConnectedComponents, DegreeCount, MaxValue, PageRank, Sssp, WeightedSssp,
+};
+use ipregel::combine::Strategy;
+use ipregel::engine::{EngineConfig, GraphSession, Partitioning, RunOptions};
+use ipregel::graph::csr::Csr;
+use ipregel::graph::gen;
+use ipregel::graph::partition::PartitionPlan;
+use ipregel::layout::Layout;
+use ipregel::metrics::{RunMetrics, ScheduleFallback};
+use ipregel::sched::Schedule;
+use ipregel::util::quick;
+
+fn graphs() -> Vec<Csr> {
+    vec![
+        gen::rmat(8, 5, 0.57, 0.19, 0.19, 2),
+        gen::grid(15, 16),
+        gen::star(200),
+        gen::disjoint_rings(3, 40),
+    ]
+}
+
+/// Strategy × Layout × Schedule × bypass, trimmed to stay fast: every
+/// switch appears with every other at least once.
+fn grid() -> Vec<EngineConfig> {
+    let mut cfgs = Vec::new();
+    for &strategy in &[Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+        for &layout in &[Layout::Interleaved, Layout::Externalised] {
+            for &schedule in &[
+                Schedule::Static,
+                Schedule::Dynamic { chunk: 16 },
+                Schedule::Guided { min_chunk: 2 },
+                Schedule::EdgeCentric,
+            ] {
+                for &bypass in &[false, true] {
+                    cfgs.push(
+                        EngineConfig::default()
+                            .threads(4)
+                            .strategy(strategy)
+                            .layout(layout)
+                            .schedule(schedule)
+                            .bypass(bypass),
+                    );
+                }
+            }
+        }
+    }
+    cfgs
+}
+
+/// Superstep traces must agree step for step: active counts and message
+/// totals (times of course differ).
+fn assert_same_trace(flat: &RunMetrics, sharded: &RunMetrics, what: &str) {
+    assert_eq!(
+        flat.num_supersteps(),
+        sharded.num_supersteps(),
+        "{what}: superstep count"
+    );
+    for (i, (a, b)) in flat
+        .supersteps
+        .iter()
+        .zip(sharded.supersteps.iter())
+        .enumerate()
+    {
+        assert_eq!(
+            a.active_vertices, b.active_vertices,
+            "{what}: active count at superstep {i}"
+        );
+        assert_eq!(a.messages, b.messages, "{what}: messages at superstep {i}");
+    }
+    assert_eq!(flat.halt_reason, sharded.halt_reason, "{what}: halt reason");
+}
+
+#[test]
+fn sharded_bit_identical_to_flat_across_grid() {
+    for (gi, g) in graphs().into_iter().enumerate() {
+        let session = GraphSession::new(&g);
+        for cfg in grid() {
+            let flat_pr = session.run_with(&PageRank::default(), RunOptions::new().config(cfg));
+            let flat_ss =
+                session.run_with(&Sssp::from_hub(&g), RunOptions::new().config(cfg));
+            for shards in [1usize, 3, 8] {
+                let scfg = cfg.shards(shards);
+                let pr = session.run_with(&PageRank::default(), RunOptions::new().config(scfg));
+                // Bitwise equality, not tolerance: pull combines fold in
+                // identical in-neighbour order on both substrates.
+                assert_eq!(
+                    pr.values, flat_pr.values,
+                    "graph {gi} pagerank {shards} shards under {cfg:?}"
+                );
+                assert_same_trace(
+                    &flat_pr.metrics,
+                    &pr.metrics,
+                    &format!("graph {gi} pagerank {shards} shards under {cfg:?}"),
+                );
+
+                let ss = session.run_with(&Sssp::from_hub(&g), RunOptions::new().config(scfg));
+                assert_eq!(
+                    ss.values, flat_ss.values,
+                    "graph {gi} sssp {shards} shards under {cfg:?}"
+                );
+                assert_same_trace(
+                    &flat_ss.metrics,
+                    &ss.metrics,
+                    &format!("graph {gi} sssp {shards} shards under {cfg:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_parity_algorithms_match_under_sharding() {
+    let g = gen::barabasi_albert(400, 3, 8);
+    let gw = gen::randomly_weighted(&g, 0.5, 4.0, 17);
+    let session = GraphSession::new(&g);
+    let weighted_session = GraphSession::new(&gw);
+    let src = g.max_out_degree_vertex();
+    let seed = |v: u32| (v as u64).wrapping_mul(2654435761) % 1_000_003;
+
+    let cc_want = reference::connected_components(&g);
+    let pr_want = reference::pagerank(&g, 10, 0.85);
+    let bfs_want = reference::bfs_levels(&g, src);
+    let wsssp_want = reference::dijkstra(&gw, src);
+    let deg_want: Vec<u64> = g.vertices().map(|v| g.in_degree(v) as u64).collect();
+
+    for shards in [2usize, 6] {
+        for bypass in [false, true] {
+            let cfg = EngineConfig::default()
+                .threads(4)
+                .strategy(Strategy::Hybrid)
+                .bypass(bypass)
+                .shards(shards);
+
+            let cc = session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+            assert_eq!(cc.values, cc_want, "cc {shards} shards bypass={bypass}");
+
+            let pr = session.run_with(&PageRank::default(), RunOptions::new().config(cfg));
+            for v in g.vertices() {
+                assert!(
+                    (pr.values[v as usize] - pr_want[v as usize]).abs() < 1e-12,
+                    "pagerank v{v} {shards} shards bypass={bypass}"
+                );
+            }
+
+            let bfs = session.run_with(&Bfs { root: src }, RunOptions::new().config(cfg));
+            for v in g.vertices() {
+                let lvl = bfs.values[v as usize].level;
+                let got = if lvl == u32::MAX { u64::MAX } else { lvl as u64 };
+                assert_eq!(got, bfs_want[v as usize], "bfs v{v} {shards} shards");
+            }
+
+            let ws = weighted_session.run_with(
+                &WeightedSssp { source: src },
+                RunOptions::new().config(cfg),
+            );
+            for v in gw.vertices() {
+                let (a, b) = (ws.values[v as usize], wsssp_want[v as usize]);
+                assert!(
+                    (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-9,
+                    "weighted sssp v{v} {shards} shards"
+                );
+            }
+
+            let deg = session.run_with(&DegreeCount, RunOptions::new().config(cfg));
+            assert_eq!(deg.values, deg_want, "degree {shards} shards");
+
+            let mv = session.run_with(&MaxValue { seed }, RunOptions::new().config(cfg));
+            let flat_mv = session.run(&MaxValue { seed });
+            assert_eq!(mv.values, flat_mv.values, "maxvalue {shards} shards");
+        }
+    }
+}
+
+#[test]
+fn prop_partition_invariants_and_parity_on_random_graphs() {
+    quick::check("sharded parity", |rng| {
+        let scale = 5 + rng.below(3) as u32;
+        let g = gen::rmat(scale, 4, 0.5, 0.2, 0.2, rng.below(10_000));
+        let shards = 1 + rng.below(7) as usize;
+
+        // Structural invariants: every edge interior xor cross, owner
+        // map consistent with the cuts.
+        let plan = PartitionPlan::build(&g, shards);
+        plan.validate(&g)?;
+
+        // Behavioural parity on a random configuration.
+        let cfg = EngineConfig::default()
+            .threads(1 + rng.below(4) as usize)
+            .bypass(rng.below(2) == 0)
+            .layout(if rng.below(2) == 0 {
+                Layout::Interleaved
+            } else {
+                Layout::Externalised
+            });
+        let session = GraphSession::new(&g);
+        let flat = session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        let sharded = session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().config(cfg.shards(shards)),
+        );
+        if flat.values != sharded.values {
+            return Err(format!("values diverge at {shards} shards"));
+        }
+        if flat.metrics.num_supersteps() != sharded.metrics.num_supersteps() {
+            return Err("superstep traces diverge".into());
+        }
+        // The message split covers the total exactly.
+        let m = &sharded.metrics;
+        if m.intra_shard_messages + m.cross_shard_messages != m.total_messages() {
+            return Err("intra + cross != total messages".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partitioning_none_is_the_flat_engine() {
+    let g = gen::grid(12, 12);
+    let session = GraphSession::new(&g);
+    let r = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new().config(EngineConfig::default().partitioning(Partitioning::None)),
+    );
+    assert_eq!(r.metrics.shards, 0);
+    assert_eq!(r.metrics.shard_edge_imbalance, 0.0);
+    assert_eq!(r.metrics.intra_shard_messages, 0);
+    assert_eq!(r.metrics.cross_shard_messages, 0);
+    assert!(r.metrics.supersteps.iter().all(|s| s.flush_time.is_zero()));
+}
+
+#[test]
+fn cache_sized_partitioning_picks_shard_count_from_budget() {
+    let g = gen::rmat(9, 4, 0.57, 0.19, 0.19, 3); // 512 vertices
+    let session = GraphSession::new(&g);
+    // 64 bytes/vertex estimate → a 4096-byte budget is 64 vertices per
+    // shard → 8 shards for 512 vertices.
+    let r = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new().config(
+            session
+                .config()
+                .partitioning(Partitioning::CacheSized { budget_bytes: 4096 }),
+        ),
+    );
+    assert_eq!(r.metrics.shards, 8);
+    let flat = session.run(&ConnectedComponents);
+    assert_eq!(r.values, flat.values);
+}
+
+#[test]
+fn edge_centric_bypass_fallback_is_surfaced() {
+    let g = gen::barabasi_albert(300, 3, 4);
+    let p = Sssp::from_hub(&g);
+    let session = GraphSession::new(&g);
+    let want = session.run(&p).values;
+
+    // EdgeCentric + bypass: documented fallback, surfaced in metrics —
+    // on both substrates — and results unaffected.
+    for cfg in [
+        EngineConfig::default()
+            .schedule(Schedule::EdgeCentric)
+            .bypass(true),
+        EngineConfig::default()
+            .schedule(Schedule::EdgeCentric)
+            .bypass(true)
+            .shards(4),
+    ] {
+        let r = session.run_with(&p, RunOptions::new().config(cfg));
+        assert_eq!(
+            r.metrics.schedule_fallback,
+            Some(ScheduleFallback::EdgeCentricBypassRebuild),
+            "under {cfg:?}"
+        );
+        assert_eq!(r.values, want, "under {cfg:?}");
+    }
+
+    // No fallback without bypass, or with a different schedule.
+    for cfg in [
+        EngineConfig::default().schedule(Schedule::EdgeCentric),
+        EngineConfig::default()
+            .schedule(Schedule::Dynamic { chunk: 64 })
+            .bypass(true),
+    ] {
+        let r = session.run_with(&p, RunOptions::new().config(cfg));
+        assert_eq!(r.metrics.schedule_fallback, None, "under {cfg:?}");
+        assert_eq!(r.values, want, "under {cfg:?}");
+    }
+}
+
+#[test]
+fn warm_start_and_sharding_compose() {
+    let g = gen::barabasi_albert(300, 3, 6);
+    let session = GraphSession::new(&g);
+    let fixpoint = session.run(&ConnectedComponents);
+    let warm = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new()
+            .config(session.config().shards(4))
+            .warm_start(&fixpoint.values),
+    );
+    assert_eq!(warm.values, fixpoint.values);
+    assert!(
+        warm.metrics.num_supersteps() <= 3,
+        "warm start must converge fast under sharding too"
+    );
+}

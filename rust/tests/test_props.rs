@@ -31,6 +31,9 @@ fn random_cfg(rng: &mut Rng) -> EngineConfig {
         .strategy(strategies[rng.below(3) as usize])
         .layout(layouts[rng.below(2) as usize])
         .bypass(rng.chance(0.5))
+        // 0 = flat substrate; otherwise the partitioned scatter/flush
+        // path, which must be behaviourally indistinguishable.
+        .shards(rng.below(5) as usize)
 }
 
 fn random_graph(rng: &mut Rng) -> ipregel::graph::Csr {
