@@ -1,0 +1,245 @@
+//! Dynamic-graph bench: cold rebuild-and-rerun vs incremental
+//! recompute per mutation-batch size, emitting a machine-readable
+//! `BENCH_dynamic.json` so the repo's perf trajectory is tracked run
+//! over run.
+//!
+//! Run: `cargo bench --bench bench_dynamic`
+//!      `BENCH_SMOKE=1 cargo bench --bench bench_dynamic`  (CI smoke:
+//!       small graph, two batch sizes — exercises the mutate →
+//!       incremental path and the parity checks, not the clock)
+//!      `BENCH_OUT=path.json` overrides the output location.
+
+use ipregel::algos::incremental::{
+    delta_pagerank_halt, incremental_cc, incremental_pagerank, DeltaPageRank, IncrementalState,
+};
+use ipregel::algos::ConnectedComponents;
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions};
+use ipregel::graph::dynamic::{DynamicGraph, MutationSet};
+use ipregel::graph::{gen, Csr};
+use ipregel::util::rng::Rng;
+use ipregel::util::timer::{fmt_duration, Timer};
+use std::fmt::Write as _;
+
+struct Row {
+    algo: &'static str,
+    batch: usize,
+    cold_ms: f64,
+    inc_ms: f64,
+    rebuild_ms: f64,
+    apply_ms: f64,
+    cold_supersteps: usize,
+    inc_supersteps: usize,
+    delta_occupancy: f64,
+    compacted: bool,
+}
+
+/// Rebuild the merged view from scratch — what a system without the
+/// delta subsystem pays before it can even start the cold rerun.
+fn rebuild(g: &Csr) -> Csr {
+    g.rebuilt()
+}
+
+fn random_batch(rng: &mut Rng, n: usize, batch: usize) -> MutationSet {
+    let mut m = MutationSet::new();
+    while m.inserts().len() < 2 * batch {
+        let s = rng.below(n as u64) as u32;
+        let d = rng.below(n as u64) as u32;
+        if s != d {
+            m.insert_undirected(s, d);
+        }
+    }
+    m
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_dynamic.json".to_string());
+
+    let (g, batch_sizes): (Csr, &[usize]) = if smoke {
+        (gen::rmat(9, 4, 0.57, 0.19, 0.19, 7), &[8, 64])
+    } else {
+        (gen::rmat(14, 8, 0.57, 0.19, 0.19, 7), &[16, 128, 1024])
+    };
+    eprintln!(
+        "== bench_dynamic ({}): |V|={} |E|={} ==",
+        if smoke { "SMOKE" } else { "full" },
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    let threads = 4usize;
+    let cfg = EngineConfig::default().threads(threads);
+    let n = g.num_vertices();
+    let mut rows: Vec<Row> = Vec::new();
+    let mut rng = Rng::new(0xD1AC);
+
+    // ---- PageRank: warm incremental vs rebuild + cold rerun ----------
+    {
+        let p = DeltaPageRank::default();
+        let mut session = GraphSession::dynamic_with_config(DynamicGraph::new(g.clone()), cfg);
+        let cold0 = session.run_with(&p, RunOptions::new().halt(delta_pagerank_halt(&p)));
+        let mut state = IncrementalState::new(cold0.values, session.graph_epoch());
+        for &batch in batch_sizes {
+            let m = random_batch(&mut rng, n, batch);
+            let t_apply = Timer::start();
+            let receipt = session.apply_mutations(&m).expect("dynamic session");
+            let apply_ms = t_apply.elapsed().as_secs_f64() * 1e3;
+
+            let t_inc = Timer::start();
+            let (inc_metrics, next) =
+                incremental_pagerank(&session, &state, &receipt, &p).expect("epochs chain");
+            let inc_ms = t_inc.elapsed().as_secs_f64() * 1e3;
+
+            let t_rebuild = Timer::start();
+            let rebuilt = rebuild(session.graph());
+            let rebuild_ms = t_rebuild.elapsed().as_secs_f64() * 1e3;
+            let cold_session = GraphSession::with_config(&rebuilt, cfg);
+            let t_cold = Timer::start();
+            let cold = cold_session.run_with(&p, RunOptions::new().halt(delta_pagerank_halt(&p)));
+            let cold_ms = t_cold.elapsed().as_secs_f64() * 1e3;
+
+            // Parity: warm fixpoint == cold fixpoint (to tolerance).
+            for v in 0..n {
+                let (a, b) = (next.values[v], cold.values[v]);
+                assert!((a - b).abs() < 1e-6, "pr parity v{v}: {a} vs {b}");
+            }
+            eprintln!(
+                "  pr  batch={batch:<5} apply {} + inc {} ({} steps)  vs  rebuild {} + cold {} ({} steps)",
+                fmt_ms(apply_ms),
+                fmt_ms(inc_ms),
+                inc_metrics.num_supersteps(),
+                fmt_ms(rebuild_ms),
+                fmt_ms(cold_ms),
+                cold.metrics.num_supersteps(),
+            );
+            rows.push(Row {
+                algo: "pr",
+                batch,
+                cold_ms,
+                inc_ms,
+                rebuild_ms,
+                apply_ms,
+                cold_supersteps: cold.metrics.num_supersteps(),
+                inc_supersteps: inc_metrics.num_supersteps(),
+                delta_occupancy: inc_metrics.delta_occupancy,
+                compacted: receipt.compacted,
+            });
+            state = next;
+        }
+    }
+
+    // ---- CC: insert-only incremental vs rebuild + cold rerun ---------
+    {
+        let mut session = GraphSession::dynamic_with_config(DynamicGraph::new(g.clone()), cfg);
+        let cold0 = session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().config(cfg.bypass(true)),
+        );
+        let mut state = IncrementalState::new(cold0.values, session.graph_epoch());
+        for &batch in batch_sizes {
+            let m = random_batch(&mut rng, n, batch);
+            let t_apply = Timer::start();
+            let receipt = session.apply_mutations(&m).expect("dynamic session");
+            let apply_ms = t_apply.elapsed().as_secs_f64() * 1e3;
+
+            let t_inc = Timer::start();
+            let (inc_metrics, next) =
+                incremental_cc(&session, &state, &receipt).expect("insert-only");
+            let inc_ms = t_inc.elapsed().as_secs_f64() * 1e3;
+
+            let t_rebuild = Timer::start();
+            let rebuilt = rebuild(session.graph());
+            let rebuild_ms = t_rebuild.elapsed().as_secs_f64() * 1e3;
+            let cold_session = GraphSession::with_config(&rebuilt, cfg);
+            let t_cold = Timer::start();
+            let cold = cold_session.run_with(
+                &ConnectedComponents,
+                RunOptions::new().config(cfg.bypass(true)),
+            );
+            let cold_ms = t_cold.elapsed().as_secs_f64() * 1e3;
+
+            assert_eq!(next.values, cold.values, "cc parity at batch {batch}");
+            eprintln!(
+                "  cc  batch={batch:<5} apply {} + inc {} ({} steps)  vs  rebuild {} + cold {} ({} steps)",
+                fmt_ms(apply_ms),
+                fmt_ms(inc_ms),
+                inc_metrics.num_supersteps(),
+                fmt_ms(rebuild_ms),
+                fmt_ms(cold_ms),
+                cold.metrics.num_supersteps(),
+            );
+            rows.push(Row {
+                algo: "cc",
+                batch,
+                cold_ms,
+                inc_ms,
+                rebuild_ms,
+                apply_ms,
+                cold_supersteps: cold.metrics.num_supersteps(),
+                inc_supersteps: inc_metrics.num_supersteps(),
+                delta_occupancy: inc_metrics.delta_occupancy,
+                compacted: receipt.compacted,
+            });
+            state = next;
+        }
+    }
+
+    // ---- Emit BENCH_dynamic.json -------------------------------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(j, "  \"bench\": \"dynamic\",");
+    let _ = writeln!(j, "  \"smoke\": {},", smoke);
+    let _ = writeln!(
+        j,
+        "  \"graph\": {{\"vertices\": {}, \"edges\": {}}},",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let _ = writeln!(j, "  \"threads\": {},", threads);
+    j.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"algo\": \"{}\", \"batch\": {}, \"apply_millis\": {:.3}, \
+             \"incremental_millis\": {:.3}, \"rebuild_millis\": {:.3}, \
+             \"cold_millis\": {:.3}, \"incremental_supersteps\": {}, \
+             \"cold_supersteps\": {}, \"delta_occupancy\": {:.5}, \"compacted\": {}}}",
+            r.algo,
+            r.batch,
+            r.apply_ms,
+            r.inc_ms,
+            r.rebuild_ms,
+            r.cold_ms,
+            r.inc_supersteps,
+            r.cold_supersteps,
+            r.delta_occupancy,
+            r.compacted
+        );
+        j.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ]\n}\n");
+
+    std::fs::write(&out_path, &j).expect("writing BENCH_dynamic.json");
+    eprintln!("wrote {out_path} ({} result rows)", rows.len());
+
+    // Smoke sanity: incremental CC must do no more supersteps than cold
+    // (warm start from the previous fixpoint), and every row recorded a
+    // parity-checked run.
+    for r in &rows {
+        if r.algo == "cc" {
+            assert!(
+                r.inc_supersteps <= r.cold_supersteps + 2,
+                "cc batch {}: incremental {} vs cold {} supersteps",
+                r.batch,
+                r.inc_supersteps,
+                r.cold_supersteps
+            );
+        }
+    }
+    eprintln!("parity checks passed");
+}
+
+fn fmt_ms(ms: f64) -> String {
+    fmt_duration(std::time::Duration::from_secs_f64(ms / 1e3))
+}

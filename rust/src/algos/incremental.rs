@@ -1,22 +1,105 @@
-//! Incremental connected components — the paper's §VIII future-work
-//! direction ("incrementalisation … could unlock a new level of
-//! performance", citing Zakian et al. IPDPS'19), built on the session
-//! API's **warm start**.
+//! Incremental recomputation — the paper's §VIII future-work direction
+//! ("incrementalisation … could unlock a new level of performance",
+//! citing Zakian et al. IPDPS'19), built on the session API's **warm
+//! start** and, since the dynamic-graph subsystem
+//! ([`crate::graph::dynamic`]), on **mutation epochs**.
 //!
-//! After *edge insertions*, min-labels can only decrease, so the previous
-//! fixpoint is a valid warm start: seed every vertex with its old label
-//! ([`crate::engine::RunOptions::warm_start`]) and activate only the
-//! endpoints of the new edges. The wave then touches just the vertices
-//! whose component actually changed, instead of re-converging from
-//! scratch. (Deletions can *raise* labels and invalidate the warm start;
-//! [`IncrementalCc::supports`] rejects them.)
+//! Three delta-driven recomputations live here, all seeding their
+//! frontier from the mutated vertices instead of restarting cold:
+//!
+//! - [`IncrementalCc`] — min-label repair after edge insertions
+//!   (insert-only: labels can only decrease, so the old fixpoint is a
+//!   valid warm start);
+//! - [`IncrementalWsssp`] — weighted shortest-path repair after edge
+//!   insertions (insert-only: distances can only decrease);
+//! - [`DeltaPageRank`] — tolerance-terminated PageRank that converges
+//!   from the previous epoch's ranks in a handful of supersteps
+//!   (mutation-agnostic: deletions are fine, the power iteration
+//!   re-contracts from wherever it starts).
+//!
+//! The epoch-validated entry points ([`incremental_cc`],
+//! [`incremental_sssp`], [`incremental_pagerank`]) refuse stale inputs:
+//! warm-start values must carry the epoch the mutations were applied
+//! *from* ([`IncrementalState::epoch`] == [`MutationReceipt::from_epoch`])
+//! and the receipt must be the session's *current* epoch — reusing
+//! values across unacknowledged mutations is exactly the silent-stale
+//! bug this check exists to catch.
 
 use crate::combine::MinCombiner;
 use crate::engine::{
-    Context, EngineConfig, GraphSession, Mode, NoAgg, RunOptions, RunResult, VertexProgram,
+    Context, EngineConfig, GraphSession, Halt, Mode, NoAgg, RunOptions, RunResult, SumAgg,
+    VertexProgram,
 };
 use crate::graph::csr::{Csr, VertexId};
+use crate::graph::dynamic::MutationReceipt;
 use crate::graph::GraphBuilder;
+use crate::metrics::RunMetrics;
+use crate::util::error::Result;
+use crate::bail;
+
+/// Warm-start state for the epoch-validated incremental runs: the
+/// previous fixpoint's values plus the mutation epoch they reflect.
+#[derive(Clone, Debug)]
+pub struct IncrementalState<V> {
+    /// One value per vertex, from the previous converged run.
+    pub values: Vec<V>,
+    /// The graph mutation epoch those values were computed at.
+    pub epoch: u64,
+}
+
+impl<V> IncrementalState<V> {
+    /// Bundle `values` computed at `epoch`.
+    pub fn new(values: Vec<V>, epoch: u64) -> Self {
+        IncrementalState { values, epoch }
+    }
+}
+
+/// Refuse stale warm starts: `state` must be the fixpoint of the epoch
+/// the receipt's mutations were applied from, and the receipt must be
+/// the session's current epoch.
+fn validate_epochs<V>(
+    state: &IncrementalState<V>,
+    receipt: &MutationReceipt,
+    session: &GraphSession<'_>,
+) -> Result<()> {
+    if state.epoch != receipt.from_epoch {
+        bail!(
+            "stale warm start: values are from epoch {} but the mutation batch \
+             was applied at epoch {} — recompute or chain the receipts",
+            state.epoch,
+            receipt.from_epoch
+        );
+    }
+    let current = session.graph_epoch();
+    if receipt.epoch != current {
+        bail!(
+            "stale receipt: batch ended at epoch {} but the session's graph is \
+             at epoch {current} — apply receipts in order",
+            receipt.epoch
+        );
+    }
+    Ok(())
+}
+
+/// The shared gate for the insert-only incremental algorithms (CC,
+/// SSSP): epochs must chain, and the batch must not have removed any
+/// edge instance — deletions can raise labels/distances, invalidating
+/// the monotone warm start.
+fn validate_insert_only<V>(
+    state: &IncrementalState<V>,
+    receipt: &MutationReceipt,
+    session: &GraphSession<'_>,
+    algo: &str,
+) -> Result<()> {
+    validate_epochs(state, receipt, session)?;
+    if !receipt.removed.is_empty() {
+        bail!(
+            "incremental {algo} is insert-only (deletions can invalidate the \
+             monotone warm start); rerun the cold program for this batch"
+        );
+    }
+    Ok(())
+}
 
 /// Warm-started min-label propagation.
 ///
@@ -26,11 +109,23 @@ use crate::graph::GraphBuilder;
 /// the graph. Running it without warm-start values panics immediately
 /// (in `init`) rather than silently returning non-fixpoint labels.
 pub struct IncrementalCc {
-    /// Endpoints of the inserted edges (the initially active set).
-    pub touched: Vec<VertexId>,
+    /// Endpoints of the inserted edges (the initially active set),
+    /// sorted and deduplicated by [`IncrementalCc::new`] — the engine
+    /// probes it once per vertex at setup, so membership is a binary
+    /// search, not a linear scan.
+    touched: Vec<VertexId>,
 }
 
 impl IncrementalCc {
+    /// Program activating exactly `touched` (the mutation endpoints —
+    /// [`MutationReceipt::touched`] ready-made). Sorts and dedups, so
+    /// any order is accepted.
+    pub fn new(mut touched: Vec<VertexId>) -> Self {
+        touched.sort_unstable();
+        touched.dedup();
+        IncrementalCc { touched }
+    }
+
     /// Whether a batch of updates is warm-startable (insert-only).
     pub fn supports(inserts: usize, deletes: usize) -> bool {
         inserts > 0 && deletes == 0
@@ -66,7 +161,7 @@ impl VertexProgram for IncrementalCc {
     }
 
     fn initially_active(&self, _g: &Csr, v: VertexId) -> bool {
-        self.touched.contains(&v)
+        self.touched.binary_search(&v).is_ok()
     }
 
     fn compute<C: Context<u32, u32>>(&self, ctx: &mut C, msg: Option<u32>) {
@@ -86,9 +181,261 @@ impl VertexProgram for IncrementalCc {
     }
 }
 
+/// Warm-started weighted shortest-path repair (push + min-combiner,
+/// the same wavefront as [`crate::algos::WeightedSssp`]). Insert-only:
+/// new edges can only shorten paths, so the previous distances are a
+/// valid warm start and only the `touched` endpoints re-relax.
+///
+/// Like [`IncrementalCc`], running it without
+/// [`RunOptions::warm_start`] panics in `init`.
+pub struct IncrementalWsssp {
+    /// Endpoints of the inserted edges, sorted and deduplicated by
+    /// [`IncrementalWsssp::new`] (binary-searched per vertex at setup).
+    touched: Vec<VertexId>,
+}
+
+impl IncrementalWsssp {
+    /// Program activating exactly `touched`; sorts and dedups, so any
+    /// order is accepted.
+    pub fn new(mut touched: Vec<VertexId>) -> Self {
+        touched.sort_unstable();
+        touched.dedup();
+        IncrementalWsssp { touched }
+    }
+}
+
+impl VertexProgram for IncrementalWsssp {
+    type Value = f64;
+    type Message = f64;
+    type Comb = MinCombiner;
+    type Agg = NoAgg;
+
+    fn mode(&self) -> Mode {
+        Mode::Push
+    }
+
+    fn combiner(&self) -> MinCombiner {
+        MinCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
+    }
+
+    fn init(&self, _g: &Csr, _v: VertexId) -> f64 {
+        panic!(
+            "IncrementalWsssp requires RunOptions::warm_start(prior distances); \
+             run WeightedSssp for a cold computation"
+        );
+    }
+
+    fn initially_active(&self, _g: &Csr, v: VertexId) -> bool {
+        self.touched.binary_search(&v).is_ok()
+    }
+
+    fn compute<C: Context<f64, f64>>(&self, ctx: &mut C, msg: Option<f64>) {
+        let improved = if ctx.superstep() == 0 {
+            // Touched endpoints with a finite distance re-relax every
+            // out-edge — the inserted edges among them open the only
+            // possible improvements; everything else echoes harmlessly.
+            ctx.value().is_finite()
+        } else if let Some(m) = msg {
+            if m < *ctx.value() {
+                *ctx.value_mut() = m;
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        if improved {
+            let dist = *ctx.value();
+            for i in 0..ctx.out_degree() {
+                let (dst, w) = ctx.out_edge(i);
+                ctx.send(dst, dist + w);
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// Tolerance-terminated PageRank for delta recompute: every superstep
+/// aggregates the total absolute rank change (`SumAgg<f64>`), and
+/// [`delta_pagerank_halt`] stops the run once it drops to `tol`. From a
+/// cold uniform start this is ordinary power iteration; warm-started
+/// from the previous epoch's ranks it re-converges in the few
+/// supersteps the mutation actually perturbed — deletions included.
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaPageRank {
+    /// Damping factor (0.85, as everywhere in this repo).
+    pub damping: f64,
+    /// Stop once the superstep's summed |Δrank| is at most this.
+    pub tol: f64,
+    /// Safety cap on rank-update supersteps.
+    pub max_iterations: usize,
+}
+
+impl Default for DeltaPageRank {
+    fn default() -> Self {
+        DeltaPageRank {
+            damping: 0.85,
+            tol: 1e-10,
+            max_iterations: 300,
+        }
+    }
+}
+
+/// The halt policy matching a [`DeltaPageRank`]'s tolerance.
+pub fn delta_pagerank_halt(p: &DeltaPageRank) -> Halt<f64> {
+    let tol = p.tol;
+    Halt::converged(move |_, cur: Option<&f64>| cur.is_some_and(|&d| d <= tol))
+}
+
+impl VertexProgram for DeltaPageRank {
+    type Value = f64;
+    type Message = f64;
+    type Comb = crate::combine::SumCombiner;
+    type Agg = SumAgg<f64>;
+
+    fn mode(&self) -> Mode {
+        Mode::Pull
+    }
+
+    fn combiner(&self) -> crate::combine::SumCombiner {
+        crate::combine::SumCombiner
+    }
+
+    fn aggregator(&self) -> SumAgg<f64> {
+        SumAgg::new()
+    }
+
+    fn init(&self, g: &Csr, _v: VertexId) -> f64 {
+        1.0 / g.num_vertices() as f64
+    }
+
+    fn compute<C: Context<f64, f64, f64>>(&self, ctx: &mut C, msg: Option<f64>) {
+        let n = ctx.num_vertices() as f64;
+        if ctx.superstep() > 0 {
+            let sum = msg.unwrap_or(0.0);
+            let new = (1.0 - self.damping) / n + self.damping * sum;
+            ctx.contribute((new - *ctx.value()).abs());
+            *ctx.value_mut() = new;
+        }
+        if ctx.superstep() < self.max_iterations {
+            let deg = ctx.out_degree();
+            if deg > 0 {
+                let share = *ctx.value() / deg as f64;
+                ctx.broadcast(share);
+            } else {
+                if ctx.superstep() == 0 {
+                    // Dangling vertices never broadcast, and an *isolated*
+                    // one (no in-edges either) is never reactivated —
+                    // pull-mode activation flows along broadcasters'
+                    // out-edges — so superstep 0 is its only chance to
+                    // settle at the fixpoint (1-d)/n. Deliberately no
+                    // contribute(): the superstep-0 aggregator stream
+                    // must stay silent or the convergence predicate
+                    // could fire before the first real update wave.
+                    *ctx.value_mut() = (1.0 - self.damping) / n;
+                }
+                ctx.vote_to_halt();
+            }
+        } else {
+            ctx.vote_to_halt();
+        }
+    }
+}
+
+/// Epoch-validated incremental CC over a dynamic session: repair
+/// `state`'s labels after `receipt`'s insert-only batch by seeding the
+/// frontier from the receipt's touched vertices. Returns the run's
+/// metrics plus the chained state for the next epoch (the repaired
+/// labels live in [`IncrementalState::values`] — moved, not copied, so
+/// the per-batch cost stays O(wave), not O(V)).
+pub fn incremental_cc(
+    session: &GraphSession<'_>,
+    state: &IncrementalState<u32>,
+    receipt: &MutationReceipt,
+) -> Result<(RunMetrics, IncrementalState<u32>)> {
+    validate_insert_only(state, receipt, session, "CC")?;
+    let prog = IncrementalCc::new(receipt.touched.clone());
+    let result = session.run_with(
+        &prog,
+        RunOptions::new()
+            .config(session.config().bypass(true))
+            .warm_start(&state.values),
+    );
+    debug_assert_eq!(result.metrics.graph_epoch, receipt.epoch);
+    Ok((
+        result.metrics,
+        IncrementalState::new(result.values, receipt.epoch),
+    ))
+}
+
+/// Epoch-validated incremental weighted SSSP over a dynamic session
+/// (insert-only, like [`incremental_cc`]). `state` holds the previous
+/// distances (`f64::INFINITY` = unreached).
+pub fn incremental_sssp(
+    session: &GraphSession<'_>,
+    state: &IncrementalState<f64>,
+    receipt: &MutationReceipt,
+) -> Result<(RunMetrics, IncrementalState<f64>)> {
+    validate_insert_only(state, receipt, session, "SSSP")?;
+    // The cold path rejects negative weights in WeightedSssp::init; the
+    // warm path never runs init, so the new edges must be gated here
+    // (label-correcting relaxation diverges on negative cycles).
+    if let Some(&(s, d, w)) = receipt.inserted.iter().find(|&&(_, _, w)| w < 0.0) {
+        bail!(
+            "incremental SSSP requires non-negative edge weights; \
+             inserted ({s}, {d}) has weight {w}"
+        );
+    }
+    let prog = IncrementalWsssp::new(receipt.touched.clone());
+    let result = session.run_with(
+        &prog,
+        RunOptions::new()
+            .config(session.config().bypass(true))
+            .warm_start(&state.values),
+    );
+    debug_assert_eq!(result.metrics.graph_epoch, receipt.epoch);
+    Ok((
+        result.metrics,
+        IncrementalState::new(result.values, receipt.epoch),
+    ))
+}
+
+/// Epoch-validated incremental PageRank over a dynamic session: warm
+/// starts `p` from the previous epoch's ranks and runs to `p.tol`.
+/// Tolerates any mutation mix (insertions and deletions).
+pub fn incremental_pagerank(
+    session: &GraphSession<'_>,
+    state: &IncrementalState<f64>,
+    receipt: &MutationReceipt,
+    p: &DeltaPageRank,
+) -> Result<(RunMetrics, IncrementalState<f64>)> {
+    validate_epochs(state, receipt, session)?;
+    let result = session.run_with(
+        p,
+        RunOptions::new()
+            .halt(delta_pagerank_halt(p))
+            .warm_start(&state.values),
+    );
+    debug_assert_eq!(result.metrics.graph_epoch, receipt.epoch);
+    Ok((
+        result.metrics,
+        IncrementalState::new(result.values, receipt.epoch),
+    ))
+}
+
 /// Apply insert-only updates to `g` and incrementally repair `labels` by
 /// warm-starting from the previous fixpoint. Returns the new graph and
 /// the repaired labels plus run metrics.
+///
+/// This is the pre-dynamic-subsystem path: it **rebuilds** the CSR per
+/// batch. Long-lived services should hold a
+/// [`GraphSession::dynamic`] session and use [`incremental_cc`], which
+/// mutates in place and keeps the session pools warm.
 pub fn insert_edges(
     g: &Csr,
     labels: &[u32],
@@ -107,7 +454,7 @@ pub fn insert_edges(
     }
     let g2 = gb.build();
     let touched: Vec<VertexId> = inserts.iter().flat_map(|&(s, d)| [s, d]).collect();
-    let prog = IncrementalCc { touched };
+    let prog = IncrementalCc::new(touched);
     let session = GraphSession::with_config(&g2, cfg.bypass(true));
     let result = session.run_with(&prog, RunOptions::new().warm_start(labels));
     (g2, result)
@@ -116,9 +463,10 @@ pub fn insert_edges(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algos::{reference, ConnectedComponents};
-    use crate::util::quick;
+    use crate::algos::{reference, ConnectedComponents, WeightedSssp};
+    use crate::graph::dynamic::{DynamicGraph, MutationSet};
     use crate::graph::gen;
+    use crate::util::quick;
 
     fn cc_bypass(g: &Csr) -> RunResult<u32> {
         GraphSession::with_config(g, EngineConfig::default().bypass(true))
@@ -157,7 +505,7 @@ mod tests {
     #[should_panic(expected = "warm_start")]
     fn cold_run_without_warm_start_fails_fast() {
         let g = gen::ring(8);
-        let _ = GraphSession::new(&g).run(&IncrementalCc { touched: vec![0] });
+        let _ = GraphSession::new(&g).run(&IncrementalCc::new(vec![0]));
     }
 
     #[test]
@@ -198,5 +546,130 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // ---- Epoch-validated dynamic-session paths -----------------------
+
+    fn dynamic_session(g: Csr) -> GraphSession<'static> {
+        GraphSession::dynamic_with_config(
+            DynamicGraph::with_spill_threshold(g, 1_000_000),
+            EngineConfig::default(),
+        )
+    }
+
+    #[test]
+    fn epoch_validated_cc_repairs_across_batches() {
+        let g = gen::disjoint_rings(3, 20);
+        let mut session = dynamic_session(g);
+        let cold = session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().config(session.config().bypass(true)),
+        );
+        let mut state = IncrementalState::new(cold.values, session.graph_epoch());
+        for (a, b) in [(5u32, 25u32), (30, 45)] {
+            let mut m = MutationSet::new();
+            m.insert_undirected(a, b);
+            let receipt = session.apply_mutations(&m).unwrap();
+            let (_metrics, next) = incremental_cc(&session, &state, &receipt).unwrap();
+            let want = reference::connected_components(session.graph());
+            assert_eq!(next.values, want, "after merging {a}-{b}");
+            state = next;
+        }
+        assert_eq!(state.epoch, 2);
+    }
+
+    #[test]
+    fn epoch_validation_rejects_stale_state_and_receipts() {
+        let g = gen::ring(16);
+        let mut session = dynamic_session(g);
+        let cold = session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().config(session.config().bypass(true)),
+        );
+        let state = IncrementalState::new(cold.values, session.graph_epoch());
+        let mut m = MutationSet::new();
+        m.insert_undirected(0, 8);
+        let r1 = session.apply_mutations(&m).unwrap();
+        // Apply a second batch without consuming r1: r1 is now stale.
+        let mut m2 = MutationSet::new();
+        m2.insert_undirected(1, 9);
+        let r2 = session.apply_mutations(&m2).unwrap();
+        let e = incremental_cc(&session, &state, &r1).unwrap_err();
+        assert!(e.to_string().contains("stale receipt"), "{e}");
+        // And state from epoch 0 does not chain to r2 (from epoch 1).
+        let e2 = incremental_cc(&session, &state, &r2).unwrap_err();
+        assert!(e2.to_string().contains("stale warm start"), "{e2}");
+    }
+
+    #[test]
+    fn incremental_cc_rejects_deletions() {
+        let g = gen::ring(12);
+        let mut session = dynamic_session(g);
+        let cold = session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().config(session.config().bypass(true)),
+        );
+        let state = IncrementalState::new(cold.values, 0);
+        let mut m = MutationSet::new();
+        m.delete_undirected(0, 1);
+        let receipt = session.apply_mutations(&m).unwrap();
+        assert!(incremental_cc(&session, &state, &receipt).is_err());
+    }
+
+    #[test]
+    fn incremental_sssp_matches_cold_on_insert_only_batches() {
+        let base = gen::rmat(7, 4, 0.57, 0.19, 0.19, 31);
+        let g = gen::randomly_weighted(&base, 0.5, 4.0, 7);
+        let source = g.max_out_degree_vertex();
+        let mut session = dynamic_session(g);
+        let cold = session.run_with(
+            &WeightedSssp { source },
+            RunOptions::new().config(session.config().bypass(true)),
+        );
+        let mut state = IncrementalState::new(cold.values, 0);
+        let n = session.graph().num_vertices() as u32;
+        for round in 0..3u32 {
+            let mut m = MutationSet::new();
+            m.insert_weighted(round * 3 % n, (round * 17 + 5) % n, 0.25);
+            let receipt = session.apply_mutations(&m).unwrap();
+            let (_metrics, next) = incremental_sssp(&session, &state, &receipt).unwrap();
+            let want = reference::dijkstra(session.graph(), source);
+            for v in session.graph().vertices() {
+                let (a, b) = (next.values[v as usize], want[v as usize]);
+                assert!(
+                    (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-9,
+                    "round {round} v{v}: {a} vs {b}"
+                );
+            }
+            state = next;
+        }
+    }
+
+    #[test]
+    fn delta_pagerank_warm_start_converges_faster_than_cold() {
+        let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 51);
+        let p = DeltaPageRank::default();
+        let mut session = dynamic_session(g);
+        let cold = session.run_with(&p, RunOptions::new().halt(delta_pagerank_halt(&p)));
+        let mut state = IncrementalState::new(cold.values.clone(), 0);
+        let mut m = MutationSet::new();
+        m.insert_undirected(0, 200);
+        m.delete_undirected(1, 0); // deletions are fine for PageRank
+        let receipt = session.apply_mutations(&m).unwrap();
+        let (warm, next) = incremental_pagerank(&session, &state, &receipt, &p).unwrap();
+        assert!(
+            warm.num_supersteps() < cold.metrics.num_supersteps(),
+            "warm {} vs cold {}",
+            warm.num_supersteps(),
+            cold.metrics.num_supersteps()
+        );
+        // Warm fixpoint agrees with a cold fixpoint on the mutated graph.
+        let cold2 = session.run_with(&p, RunOptions::new().halt(delta_pagerank_halt(&p)));
+        for v in session.graph().vertices() {
+            let (a, b) = (next.values[v as usize], cold2.values[v as usize]);
+            assert!((a - b).abs() < 1e-7, "v{v}: {a} vs {b}");
+        }
+        state = next;
+        assert_eq!(state.epoch, 1);
     }
 }

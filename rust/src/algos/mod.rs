@@ -5,8 +5,10 @@
 //! unweighted SSSP (push + combiner + selection bypass) — plus smaller
 //! programs exercising other corners of the API: weighted shortest paths
 //! ([`WeightedSssp`], via `Context::out_edge`), typed aggregators
-//! ([`DanglingPageRank`]), and warm-started incremental recomputation
-//! ([`IncrementalCc`]). Per the paper's programmability thesis, **no
+//! ([`DanglingPageRank`]), and warm-started, epoch-validated incremental
+//! recomputation over evolving graphs ([`IncrementalCc`],
+//! [`IncrementalWsssp`], [`DeltaPageRank`] — see
+//! [`incremental`]). Per the paper's programmability thesis, **no
 //! algorithm references any optimisation**: the same `compute` text runs
 //! under every engine configuration.
 
@@ -24,7 +26,9 @@ pub mod sssp;
 pub use bfs::Bfs;
 pub use cc::ConnectedComponents;
 pub use degree::DegreeCount;
-pub use incremental::IncrementalCc;
+pub use incremental::{
+    DeltaPageRank, IncrementalCc, IncrementalState, IncrementalWsssp,
+};
 pub use kcore::{CoreState, KCore};
 pub use maxval::MaxValue;
 pub use pagerank::PageRank;

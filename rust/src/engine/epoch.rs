@@ -1,0 +1,140 @@
+//! Mutation-epoch plumbing: how a [`GraphSession`] keeps its caches
+//! valid while the graph underneath it evolves.
+//!
+//! A [`crate::graph::dynamic::DynamicGraph`] advances a monotonically
+//! increasing **mutation epoch** with every applied
+//! [`crate::graph::dynamic::MutationSet`]. Session-held state is tagged
+//! with (or patched to) the epoch it reflects:
+//!
+//! - **partition plans** — cuts and owner maps survive mutations
+//!   untouched (vertex ranges never move short of compaction), so the
+//!   session patches each cached plan's per-shard edge censuses from the
+//!   [`MutationReceipt`]'s edge-instance deltas, O(batch) instead of
+//!   O(V + E) (`absorb_receipt` below). A **compaction** rebuilds the
+//!   base CSR, so balance is re-derived from scratch: plans and pooled
+//!   shard state are dropped and rebuilt lazily — the "full
+//!   re-partition only on compaction" rule;
+//! - **pooled shard state** — follows its plan's pointer
+//!   (`ShardState::repoint_plan`); the activity slabs themselves are
+//!   shaped by the cuts, which didn't move;
+//! - **degree-weight vectors** (edge-centric full scans) — cheap to
+//!   rebuild, so they are simply invalidated;
+//! - **pooled vertex stores** — carry an epoch tag
+//!   ([`crate::layout::VertexStore::epoch_tag`]); the session re-stamps
+//!   them at checkout and surfaces a mismatch through
+//!   `RunMetrics::store_epoch_refreshed`, and the incremental algorithms
+//!   ([`crate::algos::incremental`]) refuse warm-start values whose
+//!   epoch doesn't chain to the current graph epoch.
+//!
+//! [`GraphSession`]: crate::engine::GraphSession
+//! [`MutationReceipt`]: crate::graph::dynamic::MutationReceipt
+
+use crate::engine::shard::ShardState;
+use crate::graph::dynamic::MutationReceipt;
+use crate::graph::partition::PartitionPlan;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A session's current epoch position, for callers that coordinate
+/// warm-start state across mutations (see
+/// [`crate::engine::GraphSession::epoch_watermark`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpochWatermark {
+    /// Current mutation epoch (0 = static graph or never mutated).
+    pub epoch: u64,
+    /// Mutation instances live in the delta overlay.
+    pub delta_edges: usize,
+    /// `delta_edges / num_edges` at this instant.
+    pub delta_occupancy: f64,
+}
+
+/// Bring the session's partition caches up to `receipt`'s epoch:
+/// patch every cached plan in place (repointing pooled shard state so
+/// it keeps fitting), or drop everything when the batch compacted.
+pub(crate) fn absorb_receipt(
+    plans: &mut HashMap<usize, Arc<PartitionPlan>>,
+    shard_states: &mut Vec<ShardState>,
+    receipt: &MutationReceipt,
+) {
+    if receipt.compacted {
+        plans.clear();
+        shard_states.clear();
+        return;
+    }
+    if receipt.inserted.is_empty() && receipt.removed.is_empty() {
+        return;
+    }
+    for plan_arc in plans.values_mut() {
+        let mut patched = (**plan_arc).clone();
+        patched.apply_edge_deltas(&receipt.inserted, &receipt.removed);
+        let patched = Arc::new(patched);
+        for st in shard_states.iter_mut() {
+            if Arc::ptr_eq(&st.plan, plan_arc) {
+                st.repoint_plan(Arc::clone(&patched));
+            }
+        }
+        *plan_arc = patched;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dynamic::{DynamicGraph, MutationSet};
+    use crate::graph::gen;
+
+    #[test]
+    fn absorb_patches_plans_and_repoints_shard_state() {
+        let g = gen::grid(8, 8);
+        let plan = Arc::new(PartitionPlan::build(&g, 4));
+        let mut plans = HashMap::new();
+        plans.insert(4usize, Arc::clone(&plan));
+        let mut states = vec![ShardState::new(Arc::clone(&plan), 2)];
+
+        let mut dg = DynamicGraph::with_spill_threshold(g, 1_000_000);
+        let mut m = MutationSet::new();
+        m.insert(0, 63);
+        let receipt = dg.apply(&m);
+        absorb_receipt(&mut plans, &mut states, &receipt);
+
+        let patched = &plans[&4];
+        assert!(!Arc::ptr_eq(patched, &plan), "plan replaced by patched copy");
+        assert_eq!(patched.cuts(), plan.cuts(), "cuts untouched");
+        patched.validate(dg.graph()).unwrap();
+        assert!(
+            states[0].fits(patched, 2),
+            "pooled state repointed to the patched plan"
+        );
+    }
+
+    #[test]
+    fn absorb_after_compaction_drops_partition_caches() {
+        let g = gen::grid(6, 6);
+        let plan = Arc::new(PartitionPlan::build(&g, 3));
+        let mut plans = HashMap::new();
+        plans.insert(3usize, Arc::clone(&plan));
+        let mut states = vec![ShardState::new(Arc::clone(&plan), 1)];
+
+        let mut dg = DynamicGraph::with_spill_threshold(g, 1);
+        let mut m = MutationSet::new();
+        m.insert(0, 35);
+        let receipt = dg.apply(&m);
+        assert!(receipt.compacted);
+        absorb_receipt(&mut plans, &mut states, &receipt);
+        assert!(plans.is_empty());
+        assert!(states.is_empty());
+    }
+
+    #[test]
+    fn empty_receipt_changes_nothing() {
+        let g = gen::ring(8);
+        let plan = Arc::new(PartitionPlan::build(&g, 2));
+        let mut plans = HashMap::new();
+        plans.insert(2usize, Arc::clone(&plan));
+        let mut states: Vec<ShardState> = Vec::new();
+        let mut dg = DynamicGraph::new(g);
+        let receipt = dg.apply(&MutationSet::new());
+        absorb_receipt(&mut plans, &mut states, &receipt);
+        assert!(Arc::ptr_eq(&plans[&2], &plan));
+    }
+}

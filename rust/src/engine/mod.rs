@@ -21,6 +21,13 @@
 //!   with buffered cross-shard message routing — bit-identical to flat
 //!   execution, `Partitioning::None` preserving the flat path.
 //!
+//! Sessions may also bind to a **mutable** graph
+//! ([`GraphSession::dynamic`] over a
+//! [`crate::graph::dynamic::DynamicGraph`]): batched edge mutations are
+//! applied under mutation epochs ([`session::GraphSession::apply_mutations`]),
+//! cached partition plans are patched instead of rebuilt (see
+//! [`epoch`]), and runs transparently see the merged base + delta view.
+//!
 //! None of these switches appear in user code — the same program text runs
 //! under every configuration, which is the paper's programmability thesis.
 //! The v2 API extends the *user-visible* surface without breaking it:
@@ -30,11 +37,13 @@
 
 pub mod agg;
 pub(crate) mod core;
+pub mod epoch;
 pub mod session;
 pub(crate) mod shard;
 
 pub use agg::{AggPair, Aggregator, FnAgg, MaxAgg, MinAgg, NoAgg, SumAgg};
 pub use crate::graph::partition::Partitioning;
+pub use epoch::EpochWatermark;
 pub use session::{GraphSession, Halt, RunOptions};
 
 use crate::combine::{Combiner, MessageValue, Strategy};

@@ -29,12 +29,16 @@
 //! ```
 
 use crate::engine::core::{Engine, EngineSetup};
+use crate::engine::epoch::{absorb_receipt, EpochWatermark};
 use crate::engine::shard::ShardState;
 use crate::engine::{AggValue, EngineConfig, Mode, RunResult, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
+use crate::graph::dynamic::{DynamicGraph, MutationReceipt, MutationSet};
 use crate::graph::partition::PartitionPlan;
 use crate::layout::{AosStore, Layout, SoaStore, VertexStore};
 use crate::util::bitset::AtomicBitSet;
+use crate::util::error::Result;
+use crate::bail;
 use std::any::{Any, TypeId};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -166,14 +170,41 @@ impl<'a, P: VertexProgram> RunOptions<'a, P> {
     }
 }
 
+/// How a session holds its graph: borrowed and immutable (the classic
+/// path), or owned and mutable through the dynamic-graph subsystem.
+enum GraphHandle<'g> {
+    /// A statically built graph the caller keeps ownership of.
+    Borrowed(&'g Csr),
+    /// An owned [`DynamicGraph`]: the session is the single writer, so
+    /// [`GraphSession::apply_mutations`] can mutate the graph and patch
+    /// the session's caches in one exclusive step.
+    Dynamic(Box<DynamicGraph>),
+}
+
+impl GraphHandle<'_> {
+    #[inline]
+    fn csr(&self) -> &Csr {
+        match self {
+            GraphHandle::Borrowed(g) => g,
+            GraphHandle::Dynamic(dg) => dg.graph(),
+        }
+    }
+}
+
 /// A reusable execution session over one graph. See the [module
 /// docs](self) for the pooling model; construction is cheap (no
 /// allocation proportional to the graph), so short-lived sessions are
 /// fine too — that is exactly what the deprecated [`run`] shim does.
 ///
+/// A session built with [`GraphSession::dynamic`] additionally owns a
+/// [`DynamicGraph`] and accepts [`GraphSession::apply_mutations`]
+/// between runs: the graph evolves in place under mutation epochs while
+/// the pools stay warm (plans patched, stores re-stamped — see
+/// `engine/epoch.rs`).
+///
 /// [`run`]: crate::engine::run
 pub struct GraphSession<'g> {
-    g: &'g Csr,
+    g: GraphHandle<'g>,
     cfg: EngineConfig,
     /// Pooled vertex stores, keyed by concrete store type. One store per
     /// type: when concurrent runs of the same type overlap, the extras
@@ -203,6 +234,22 @@ impl<'g> GraphSession<'g> {
     /// Session over `g` with a session-wide default configuration
     /// (overridable per run via [`RunOptions::config`]).
     pub fn with_config(g: &'g Csr, cfg: EngineConfig) -> Self {
+        Self::with_handle(GraphHandle::Borrowed(g), cfg)
+    }
+
+    /// Session that **owns** a mutable graph: runs see the merged
+    /// base + delta view, and [`GraphSession::apply_mutations`] evolves
+    /// it between runs. Default [`EngineConfig`].
+    pub fn dynamic(dg: DynamicGraph) -> GraphSession<'static> {
+        Self::dynamic_with_config(dg, EngineConfig::default())
+    }
+
+    /// [`GraphSession::dynamic`] with a session-wide configuration.
+    pub fn dynamic_with_config(dg: DynamicGraph, cfg: EngineConfig) -> GraphSession<'static> {
+        GraphSession::with_handle(GraphHandle::Dynamic(Box::new(dg)), cfg)
+    }
+
+    fn with_handle(g: GraphHandle<'g>, cfg: EngineConfig) -> Self {
         GraphSession {
             g,
             cfg,
@@ -216,9 +263,65 @@ impl<'g> GraphSession<'g> {
         }
     }
 
-    /// The session's graph.
-    pub fn graph(&self) -> &'g Csr {
-        self.g
+    /// The session's graph (the merged view on dynamic sessions).
+    pub fn graph(&self) -> &Csr {
+        self.g.csr()
+    }
+
+    /// The owned dynamic graph, when this session was built with
+    /// [`GraphSession::dynamic`].
+    pub fn dynamic_graph(&self) -> Option<&DynamicGraph> {
+        match &self.g {
+            GraphHandle::Borrowed(_) => None,
+            GraphHandle::Dynamic(dg) => Some(dg),
+        }
+    }
+
+    /// Current mutation epoch (0 for sessions over static graphs).
+    pub fn graph_epoch(&self) -> u64 {
+        self.dynamic_graph().map_or(0, |dg| dg.epoch())
+    }
+
+    /// Epoch position snapshot for warm-start coordination.
+    pub fn epoch_watermark(&self) -> EpochWatermark {
+        let g = self.graph();
+        EpochWatermark {
+            epoch: self.graph_epoch(),
+            delta_edges: g.delta_edge_count(),
+            delta_occupancy: g.delta_occupancy(),
+        }
+    }
+
+    /// Apply one mutation batch to the owned [`DynamicGraph`] under the
+    /// next mutation epoch, then bring the session's caches with it:
+    /// degree-weight vectors are invalidated, cached partition plans are
+    /// census-patched in place (full re-partition only when the batch
+    /// tripped a compaction — see `engine/epoch.rs`), and pooled shard
+    /// state follows its plan. Errors on sessions over borrowed graphs.
+    pub fn apply_mutations(&mut self, m: &MutationSet) -> Result<MutationReceipt> {
+        let receipt = match &mut self.g {
+            GraphHandle::Dynamic(dg) => dg.apply(m),
+            GraphHandle::Borrowed(_) => bail!(
+                "apply_mutations requires a session that owns its graph — \
+                 build it with GraphSession::dynamic(DynamicGraph::new(csr))"
+            ),
+        };
+        // Exclusive access (`&mut self`): no run is in flight, so the
+        // cache surgery below races with nothing.
+        *self
+            .out_degree_weights
+            .get_mut()
+            .expect("weight cache poisoned") = None;
+        *self
+            .in_degree_weights
+            .get_mut()
+            .expect("weight cache poisoned") = None;
+        absorb_receipt(
+            self.plans.get_mut().expect("plan cache poisoned"),
+            self.shard_states.get_mut().expect("shard pool poisoned"),
+            &receipt,
+        );
+        Ok(receipt)
     }
 
     /// The session's default configuration.
@@ -248,7 +351,7 @@ impl<'g> GraphSession<'g> {
         Arc::clone(
             cache
                 .entry(shards)
-                .or_insert_with(|| Arc::new(PartitionPlan::build(self.g, shards))),
+                .or_insert_with(|| Arc::new(PartitionPlan::build(self.g.csr(), shards))),
         )
     }
 
@@ -289,8 +392,8 @@ impl<'g> GraphSession<'g> {
             Some(w) => Arc::clone(w),
             None => {
                 let w = Arc::new(match mode {
-                    Mode::Push => self.g.out_degrees_u64(),
-                    Mode::Pull => self.g.in_degrees_u64(),
+                    Mode::Push => self.g.csr().out_degrees_u64(),
+                    Mode::Pull => self.g.csr().in_degrees_u64(),
                 });
                 *cached = Some(Arc::clone(&w));
                 w
@@ -308,7 +411,9 @@ impl<'g> GraphSession<'g> {
         P: VertexProgram,
         S: VertexStore<P::Value, P::Message> + Any + Send + 'static,
     {
-        let n = self.g.num_vertices();
+        let g = self.g.csr();
+        let n = g.num_vertices();
+        let graph_epoch = self.graph_epoch();
         if let Some(w) = opts.warm_start {
             assert_eq!(
                 w.len(),
@@ -316,7 +421,6 @@ impl<'g> GraphSession<'g> {
                 "warm_start must supply exactly one value per vertex"
             );
         }
-        let g = self.g;
         let mut init: Box<dyn FnMut(VertexId) -> P::Value + '_> = match opts.warm_start {
             Some(vals) => Box::new(move |v| vals[v as usize].clone()),
             None => Box::new(move |v| program.init(g, v)),
@@ -352,8 +456,14 @@ impl<'g> GraphSession<'g> {
             .remove(&key)
             .and_then(|b| b.downcast::<S>().ok())
             .map(|b| *b);
-        let (store, store_reused) = match pooled {
+        let (store, store_reused, store_epoch_refreshed) = match pooled {
             Some(mut s) => {
+                // Epoch-tagged invalidation: a pooled store primed
+                // against an older mutation epoch is still *shaped*
+                // right (the vertex set never moves), but its contents
+                // are stale by definition; the reset below re-primes it
+                // and the mismatch is surfaced through RunMetrics.
+                let epoch_stale = s.epoch_tag() != graph_epoch;
                 match &partition {
                     // Partitioned runs prime shard-by-shard: each slab is
                     // rewritten as one contiguous sweep, so the first
@@ -364,11 +474,16 @@ impl<'g> GraphSession<'g> {
                         }
                         s.rewind_epochs();
                     }
-                    None => s.reset(self.g, &mut *init),
+                    None => s.reset(g, &mut *init),
                 }
-                (s, true)
+                s.set_epoch_tag(graph_epoch);
+                (s, true, epoch_stale)
             }
-            None => (S::build(self.g, &mut *init), false),
+            None => {
+                let mut s = S::build(g, &mut *init);
+                s.set_epoch_tag(graph_epoch);
+                (s, false, false)
+            }
         };
 
         // ---- Bitsets: recycle up to the three the engine needs ---------
@@ -400,7 +515,7 @@ impl<'g> GraphSession<'g> {
         };
 
         let mut engine = Engine::with_setup(
-            self.g,
+            g,
             program,
             cfg,
             opts.halt,
@@ -412,7 +527,11 @@ impl<'g> GraphSession<'g> {
                 partition,
             },
         );
-        let result = engine.run();
+        let mut result = engine.run();
+        result.metrics.graph_epoch = graph_epoch;
+        result.metrics.delta_edges = g.delta_edge_count() as u64;
+        result.metrics.delta_occupancy = g.delta_occupancy();
+        result.metrics.store_epoch_refreshed = store_epoch_refreshed;
 
         // ---- Return the parts to the pools -----------------------------
         let (store, bitsets, shard_state) = engine.into_parts();
@@ -543,6 +662,74 @@ mod tests {
         );
         let plan = crate::graph::partition::PartitionPlan::build(&g, 5);
         assert_eq!(m.cross_shard_messages, plan.total_cross());
+    }
+
+    #[test]
+    fn dynamic_session_patches_plan_cache_across_mutations() {
+        use crate::graph::dynamic::{DynamicGraph, MutationSet};
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 5);
+        let cfg = EngineConfig::default().shards(4);
+        let mut session = GraphSession::dynamic_with_config(
+            DynamicGraph::with_spill_threshold(g, 1_000_000),
+            cfg,
+        );
+        let a = session.run(&ConnectedComponents);
+        assert_eq!(a.metrics.graph_epoch, 0);
+        assert_eq!(session.cached_plans(), 1);
+
+        let mut m = MutationSet::new();
+        m.insert_undirected(0, 100);
+        let receipt = session.apply_mutations(&m).unwrap();
+        assert_eq!(receipt.epoch, 1);
+        assert!(!receipt.compacted);
+
+        let b = session.run(&ConnectedComponents);
+        assert_eq!(b.metrics.graph_epoch, 1);
+        assert!(b.metrics.store_reused);
+        assert!(
+            b.metrics.store_epoch_refreshed,
+            "pooled store was tagged with epoch 0 and must be re-primed"
+        );
+        assert_eq!(session.cached_plans(), 1, "plan patched, not rebuilt");
+        // Patched plan still classifies the mutated graph correctly:
+        // the run's values match a throwaway session over a rebuild.
+        let rebuilt = session.graph().rebuilt();
+        let want = GraphSession::with_config(&rebuilt, cfg).run(&ConnectedComponents);
+        assert_eq!(b.values, want.values);
+        // A third run sees a matching epoch tag: no refresh flagged.
+        let c = session.run(&ConnectedComponents);
+        assert!(!c.metrics.store_epoch_refreshed);
+    }
+
+    #[test]
+    fn dynamic_session_compaction_drops_and_rebuilds_plans() {
+        use crate::graph::dynamic::{DynamicGraph, MutationSet};
+        let g = gen::grid(8, 8);
+        let cfg = EngineConfig::default().shards(3);
+        let mut session =
+            GraphSession::dynamic_with_config(DynamicGraph::with_spill_threshold(g, 1), cfg);
+        session.run(&ConnectedComponents);
+        assert_eq!(session.cached_plans(), 1);
+        let mut m = MutationSet::new();
+        m.insert_undirected(0, 63);
+        let receipt = session.apply_mutations(&m).unwrap();
+        assert!(receipt.compacted, "threshold 1 compacts immediately");
+        assert_eq!(session.cached_plans(), 0, "full re-partition on compaction");
+        let r = session.run(&ConnectedComponents);
+        assert_eq!(r.metrics.shards, 3);
+        assert_eq!(session.cached_plans(), 1);
+        assert_eq!(r.metrics.delta_edges, 0, "compacted graph has no overlay");
+    }
+
+    #[test]
+    fn apply_mutations_on_borrowed_session_errors() {
+        use crate::graph::dynamic::MutationSet;
+        let g = gen::ring(8);
+        let mut session = GraphSession::new(&g);
+        let mut m = MutationSet::new();
+        m.insert(0, 4);
+        let e = session.apply_mutations(&m).unwrap_err();
+        assert!(e.to_string().contains("GraphSession::dynamic"));
     }
 
     #[test]

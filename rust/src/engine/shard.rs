@@ -198,6 +198,22 @@ impl ShardState {
         Arc::ptr_eq(&self.plan, plan) && self.buffers.workers() >= workers.max(1)
     }
 
+    /// Swap in an epoch-patched plan with identical shard boundaries
+    /// (see `engine/epoch.rs`): after a mutation batch the session
+    /// replaces each cached plan with a census-patched copy, and pooled
+    /// shard state keeps fitting by following the pointer. The inner
+    /// [`ShardedBits`] keep their original `Arc` — they only consult the
+    /// cuts/owner map, which patching never changes — so the slabs need
+    /// no touch at all.
+    pub fn repoint_plan(&mut self, plan: Arc<PartitionPlan>) {
+        debug_assert_eq!(
+            self.plan.cuts(),
+            plan.cuts(),
+            "repoint requires identical shard boundaries"
+        );
+        self.plan = plan;
+    }
+
     /// Clear all activity and buffers for reuse (keeps allocations).
     pub fn reset(&mut self) {
         self.active.clear_all();

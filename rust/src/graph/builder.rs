@@ -211,6 +211,7 @@ impl GraphBuilder {
             in_sources,
             out_weights: None,
             in_weights: None,
+            overlay: None,
         }
     }
 
@@ -306,6 +307,7 @@ impl GraphBuilder {
             in_sources,
             out_weights: Some(out_weights),
             in_weights: Some(in_weights),
+            overlay: None,
         }
     }
 }

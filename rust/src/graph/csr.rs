@@ -16,6 +16,15 @@
 //! Vertex ids are `u32` (the paper's largest graph has 65.6M vertices; our
 //! scaled analogues are far below 4.29B), keeping adjacency arrays compact —
 //! cache behaviour is a first-class concern in this paper.
+//!
+//! A `Csr` may additionally carry a **delta overlay**
+//! ([`crate::graph::dynamic`]): per-vertex merged-row overrides applied by
+//! a [`crate::graph::dynamic::DynamicGraph`]. Every accessor consults the
+//! overlay first, so consumers transparently see the mutated graph; a
+//! `Csr` without an overlay behaves exactly as before (one well-predicted
+//! `Option` branch per row access).
+
+use crate::graph::dynamic::DeltaOverlay;
 
 /// Vertex identifier type used throughout the framework.
 pub type VertexId = u32;
@@ -39,6 +48,10 @@ pub struct Csr {
     pub out_weights: Option<Vec<EdgeWeight>>,
     /// Weight of `in_sources[i]`'s edge, when the graph is weighted.
     pub in_weights: Option<Vec<EdgeWeight>>,
+    /// Live delta overlay, present only while a
+    /// [`crate::graph::dynamic::DynamicGraph`] holds uncompacted
+    /// mutations. `None` on every statically built graph.
+    pub(crate) overlay: Option<Box<DeltaOverlay>>,
 }
 
 impl Csr {
@@ -48,10 +61,11 @@ impl Csr {
         self.out_offsets.len() - 1
     }
 
-    /// Number of directed edges.
+    /// Number of directed edges (merged view: base plus overlay delta).
     #[inline]
     pub fn num_edges(&self) -> usize {
-        self.out_targets.len()
+        let delta = self.overlay.as_ref().map_or(0, |o| o.edge_delta());
+        (self.out_targets.len() as isize + delta) as usize
     }
 
     /// Whether edges carry weights.
@@ -63,6 +77,11 @@ impl Csr {
     /// Out-degree of `v`.
     #[inline]
     pub fn out_degree(&self, v: VertexId) -> usize {
+        if let Some(ov) = &self.overlay {
+            if let Some(r) = ov.out_row(v) {
+                return r.targets.len();
+            }
+        }
         let v = v as usize;
         self.out_offsets[v + 1] - self.out_offsets[v]
     }
@@ -70,6 +89,11 @@ impl Csr {
     /// In-degree of `v`.
     #[inline]
     pub fn in_degree(&self, v: VertexId) -> usize {
+        if let Some(ov) = &self.overlay {
+            if let Some(r) = ov.in_row(v) {
+                return r.targets.len();
+            }
+        }
         let v = v as usize;
         self.in_offsets[v + 1] - self.in_offsets[v]
     }
@@ -77,6 +101,11 @@ impl Csr {
     /// Outgoing neighbours of `v`.
     #[inline]
     pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        if let Some(ov) = &self.overlay {
+            if let Some(r) = ov.out_row(v) {
+                return &r.targets;
+            }
+        }
         let v = v as usize;
         &self.out_targets[self.out_offsets[v]..self.out_offsets[v + 1]]
     }
@@ -84,6 +113,11 @@ impl Csr {
     /// Incoming neighbours of `v`.
     #[inline]
     pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
+        if let Some(ov) = &self.overlay {
+            if let Some(r) = ov.in_row(v) {
+                return &r.targets;
+            }
+        }
         let v = v as usize;
         &self.in_sources[self.in_offsets[v]..self.in_offsets[v + 1]]
     }
@@ -92,6 +126,12 @@ impl Csr {
     /// [`Csr::out_neighbors`]); `None` on unweighted graphs.
     #[inline]
     pub fn out_weights_of(&self, v: VertexId) -> Option<&[EdgeWeight]> {
+        self.out_weights.as_ref()?; // unweighted graphs report None
+        if let Some(ov) = &self.overlay {
+            if let Some(r) = ov.out_row(v) {
+                return Some(&r.weights);
+            }
+        }
         let v = v as usize;
         self.out_weights
             .as_ref()
@@ -102,6 +142,12 @@ impl Csr {
     /// [`Csr::in_neighbors`]); `None` on unweighted graphs.
     #[inline]
     pub fn in_weights_of(&self, v: VertexId) -> Option<&[EdgeWeight]> {
+        self.in_weights.as_ref()?; // unweighted graphs report None
+        if let Some(ov) = &self.overlay {
+            if let Some(r) = ov.in_row(v) {
+                return Some(&r.weights);
+            }
+        }
         let v = v as usize;
         self.in_weights
             .as_ref()
@@ -112,6 +158,12 @@ impl Csr {
     /// `1.0` on unweighted graphs. `i` must be below `out_degree(v)`.
     #[inline]
     pub fn out_edge(&self, v: VertexId, i: usize) -> (VertexId, EdgeWeight) {
+        if let Some(ov) = &self.overlay {
+            if let Some(r) = ov.out_row(v) {
+                let w = if r.weights.is_empty() { 1.0 } else { r.weights[i] };
+                return (r.targets[i], w);
+            }
+        }
         let base = self.out_offsets[v as usize];
         let dst = self.out_targets[base + i];
         let w = match &self.out_weights {
@@ -124,6 +176,12 @@ impl Csr {
     /// The `i`-th incoming edge of `v` as `(source, weight)`.
     #[inline]
     pub fn in_edge(&self, v: VertexId, i: usize) -> (VertexId, EdgeWeight) {
+        if let Some(ov) = &self.overlay {
+            if let Some(r) = ov.in_row(v) {
+                let w = if r.weights.is_empty() { 1.0 } else { r.weights[i] };
+                return (r.targets[i], w);
+            }
+        }
         let base = self.in_offsets[v as usize];
         let src = self.in_sources[base + i];
         let w = match &self.in_weights {
@@ -131,6 +189,72 @@ impl Csr {
             None => 1.0,
         };
         (src, w)
+    }
+
+    /// Whether a live delta overlay is present (the graph is serving
+    /// uncompacted mutations).
+    #[inline]
+    pub fn has_overlay(&self) -> bool {
+        self.overlay.is_some()
+    }
+
+    /// Whether `v`'s out-row is served from the delta overlay rather
+    /// than the base slab (the simulator prices the extra indirection).
+    #[inline]
+    pub fn out_row_overlaid(&self, v: VertexId) -> bool {
+        self.overlay
+            .as_ref()
+            .is_some_and(|ov| ov.out_row(v).is_some())
+    }
+
+    /// Whether `v`'s in-row is served from the delta overlay.
+    #[inline]
+    pub fn in_row_overlaid(&self, v: VertexId) -> bool {
+        self.overlay
+            .as_ref()
+            .is_some_and(|ov| ov.in_row(v).is_some())
+    }
+
+    /// Mutation instances (insertions + deletions) held in the overlay
+    /// since the last compaction; 0 on static/compacted graphs.
+    pub fn delta_edge_count(&self) -> usize {
+        self.overlay.as_ref().map_or(0, |o| o.delta_edges())
+    }
+
+    /// Overlay occupancy: `delta_edge_count / num_edges` (0.0 when fully
+    /// compacted or edgeless).
+    pub fn delta_occupancy(&self) -> f64 {
+        let m = self.num_edges();
+        if m == 0 {
+            0.0
+        } else {
+            self.delta_edge_count() as f64 / m as f64
+        }
+    }
+
+    /// Number of vertices whose adjacency is currently overlaid.
+    pub fn overlaid_vertices(&self) -> usize {
+        self.overlay.as_ref().map_or(0, |o| o.overlaid_vertices())
+    }
+
+    /// Rebuild this graph's merged view from scratch through the
+    /// builder: the canonical overlay-free base CSR a
+    /// [`crate::graph::dynamic::DynamicGraph`] compaction produces, and
+    /// the ground truth the dynamic-graph tests compare delta-merged
+    /// iteration against. On a graph without an overlay this is a
+    /// structural deep copy.
+    pub fn rebuilt(&self) -> Csr {
+        let mut gb = crate::graph::builder::GraphBuilder::new(self.num_vertices());
+        if self.has_weights() {
+            for (s, d, w) in self.weighted_edges() {
+                gb.push_weighted_edge(s, d, w);
+            }
+        } else {
+            for (s, d) in self.edges() {
+                gb.push_edge(s, d);
+            }
+        }
+        gb.build()
     }
 
     /// Iterate all vertex ids.
@@ -191,6 +315,7 @@ impl Csr {
             + self.out_targets.len() * std::mem::size_of::<VertexId>()
             + self.in_sources.len() * std::mem::size_of::<VertexId>()
             + weight_bytes
+            + self.overlay.as_ref().map_or(0, |o| o.memory_bytes())
     }
 
     /// Structural validation used by tests and after deserialisation:
@@ -236,6 +361,19 @@ impl Csr {
                 }
             }
             _ => return Err("weights present in only one direction".into()),
+        }
+        if let Some(ov) = &self.overlay {
+            ov.validate(n, self.has_weights())?;
+            // Merged degrees must account for the merged edge count.
+            let out_sum: usize = self.vertices().map(|v| self.out_degree(v)).sum();
+            let in_sum: usize = self.vertices().map(|v| self.in_degree(v)).sum();
+            if out_sum != self.num_edges() || in_sum != self.num_edges() {
+                return Err(format!(
+                    "overlay degree sums (out {out_sum}, in {in_sum}) disagree with \
+                     merged edge count {}",
+                    self.num_edges()
+                ));
+            }
         }
         if self.has_weights() {
             // Same weighted edge multiset in both directions.

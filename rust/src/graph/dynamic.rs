@@ -1,0 +1,914 @@
+//! Dynamic-graph subsystem: a delta edge log over the immutable CSR.
+//!
+//! The engine's substrate ([`Csr`]) is built once and never changes —
+//! which is exactly right for the paper's benchmarks and exactly wrong
+//! for a service whose graph evolves under it. This module adds the
+//! smallest structure that fixes that without touching the engine's hot
+//! loops:
+//!
+//! - a [`DeltaOverlay`] carried *inside* the `Csr`: per-vertex
+//!   **materialised merged rows** for the (few) vertices whose adjacency
+//!   has diverged from the base arrays. Every `Csr` accessor
+//!   (`out_neighbors`, `out_edge`, `in_edge`, degrees, weights) consults
+//!   the overlay first, so the whole stack — engine scatter/flush,
+//!   pull combining, partition planning, the simulator, every algorithm
+//!   — sees the *merged* graph through the unchanged API. Overlay rows
+//!   are kept in exactly the order a [`GraphBuilder`](crate::graph::GraphBuilder) rebuild would
+//!   produce (sorted by target, ties by weight), which is what makes
+//!   mutate-then-run **bit-identical** to rebuild-then-run
+//!   (`rust/tests/test_dynamic.rs` pins this across the Strategy ×
+//!   Layout × Schedule × Partitioning grid);
+//! - a [`DynamicGraph`] owning the `Csr` and the mutation lifecycle:
+//!   batched [`MutationSet`]s applied under a monotonically increasing
+//!   **mutation epoch**, each returning a [`MutationReceipt`] (the
+//!   edge-instance deltas downstream caches patch themselves with — see
+//!   `engine/epoch.rs`), and **compaction** back into a fresh base CSR
+//!   (via [`GraphBuilder`](crate::graph::GraphBuilder)) once the overlay crosses a spill threshold.
+//!
+//! The vertex set is fixed at construction (ids `0..n`); growing it is a
+//! rebuild, not a mutation. Deleting `(s, d)` removes **every** parallel
+//! `s → d` edge, matching what a rebuild from the surviving edge list
+//! would produce.
+
+use crate::graph::csr::{Csr, EdgeWeight, VertexId};
+use crate::util::timer::Timer;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Sentinel in the overlay's per-vertex index: no overlay row.
+const NO_ROW: u32 = u32::MAX;
+
+/// Staged edits for one adjacency row: insertions as
+/// `(neighbour, weight)` pairs plus deletion targets.
+type RowEdits = (Vec<(VertexId, EdgeWeight)>, Vec<VertexId>);
+
+/// One materialised merged adjacency row (targets sorted as a rebuilt
+/// CSR row would be; `weights` parallel to `targets`, empty on
+/// unweighted graphs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub(crate) struct OverlayRow {
+    pub(crate) targets: Vec<VertexId>,
+    pub(crate) weights: Vec<EdgeWeight>,
+}
+
+/// The delta edge log: per-vertex merged-row overrides over the base
+/// CSR arrays, for both adjacency directions, plus the bookkeeping the
+/// spill policy and metrics read.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaOverlay {
+    /// `out_index[v]` = index into `out_rows`, or [`NO_ROW`].
+    out_index: Vec<u32>,
+    out_rows: Vec<OverlayRow>,
+    /// `in_index[v]` = index into `in_rows`, or [`NO_ROW`].
+    in_index: Vec<u32>,
+    in_rows: Vec<OverlayRow>,
+    /// Merged edge count minus base edge count.
+    edge_delta: isize,
+    /// Mutation instances (insertions + deletions) absorbed since the
+    /// last compaction — the spill-policy gauge.
+    delta_edges: usize,
+}
+
+impl DeltaOverlay {
+    /// Empty overlay for an `n`-vertex graph.
+    pub(crate) fn new(n: usize) -> Self {
+        DeltaOverlay {
+            out_index: vec![NO_ROW; n],
+            out_rows: Vec::new(),
+            in_index: vec![NO_ROW; n],
+            in_rows: Vec::new(),
+            edge_delta: 0,
+            delta_edges: 0,
+        }
+    }
+
+    /// The overriding out-row of `v`, if any.
+    #[inline]
+    pub(crate) fn out_row(&self, v: VertexId) -> Option<&OverlayRow> {
+        match self.out_index.get(v as usize) {
+            Some(&i) if i != NO_ROW => Some(&self.out_rows[i as usize]),
+            _ => None,
+        }
+    }
+
+    /// The overriding in-row of `v`, if any.
+    #[inline]
+    pub(crate) fn in_row(&self, v: VertexId) -> Option<&OverlayRow> {
+        match self.in_index.get(v as usize) {
+            Some(&i) if i != NO_ROW => Some(&self.in_rows[i as usize]),
+            _ => None,
+        }
+    }
+
+    /// Merged-minus-base edge count.
+    #[inline]
+    pub(crate) fn edge_delta(&self) -> isize {
+        self.edge_delta
+    }
+
+    /// Mutation instances absorbed since the last compaction.
+    #[inline]
+    pub(crate) fn delta_edges(&self) -> usize {
+        self.delta_edges
+    }
+
+    /// Number of vertices with an overriding row (union over both
+    /// directions — an insert overlays its source's out-row and its
+    /// target's in-row, two distinct vertices).
+    pub(crate) fn overlaid_vertices(&self) -> usize {
+        self.out_index
+            .iter()
+            .zip(&self.in_index)
+            .filter(|&(&o, &i)| o != NO_ROW || i != NO_ROW)
+            .count()
+    }
+
+    /// Approximate overlay heap bytes (for `Csr::memory_bytes`).
+    pub(crate) fn memory_bytes(&self) -> usize {
+        let row_bytes = |rows: &[OverlayRow]| {
+            rows.iter()
+                .map(|r| {
+                    r.targets.len() * std::mem::size_of::<VertexId>()
+                        + r.weights.len() * std::mem::size_of::<EdgeWeight>()
+                })
+                .sum::<usize>()
+        };
+        (self.out_index.len() + self.in_index.len()) * std::mem::size_of::<u32>()
+            + row_bytes(&self.out_rows)
+            + row_bytes(&self.in_rows)
+    }
+
+    /// Store `row` as the overriding row of `v` on the given side.
+    fn set_row(&mut self, out: bool, v: VertexId, row: Vec<(VertexId, EdgeWeight)>, weighted: bool) {
+        let (index, rows) = if out {
+            (&mut self.out_index, &mut self.out_rows)
+        } else {
+            (&mut self.in_index, &mut self.in_rows)
+        };
+        let i = index[v as usize];
+        let slot = if i == NO_ROW {
+            index[v as usize] = rows.len() as u32;
+            rows.push(OverlayRow::default());
+            rows.last_mut().expect("just pushed")
+        } else {
+            &mut rows[i as usize]
+        };
+        slot.targets.clear();
+        slot.weights.clear();
+        for (t, w) in row {
+            slot.targets.push(t);
+            if weighted {
+                slot.weights.push(w);
+            }
+        }
+    }
+
+    /// Give every overlay row a unit-weight array (weight promotion —
+    /// mirrors a [`GraphBuilder`](crate::graph::GraphBuilder) switching to weighted mode).
+    fn promote_rows(&mut self) {
+        for r in self.out_rows.iter_mut().chain(self.in_rows.iter_mut()) {
+            if r.weights.is_empty() {
+                r.weights = vec![1.0; r.targets.len()];
+            }
+        }
+    }
+
+    /// Validate overlay structure against the graph shape (called from
+    /// [`Csr::validate`]).
+    pub(crate) fn validate(&self, n: usize, weighted: bool) -> Result<(), String> {
+        if self.out_index.len() != n || self.in_index.len() != n {
+            return Err("overlay index length mismatch".into());
+        }
+        for (side, index, rows) in [
+            ("out", &self.out_index, &self.out_rows),
+            ("in", &self.in_index, &self.in_rows),
+        ] {
+            for (v, &i) in index.iter().enumerate() {
+                if i != NO_ROW && i as usize >= rows.len() {
+                    return Err(format!("overlay {side}_index[{v}] out of range"));
+                }
+            }
+            for r in rows.iter() {
+                if r.targets.iter().any(|&t| (t as usize) >= n) {
+                    return Err(format!("overlay {side} row target out of range"));
+                }
+                if weighted {
+                    if r.weights.len() != r.targets.len() {
+                        return Err(format!("overlay {side} row weights length mismatch"));
+                    }
+                    if r.weights.iter().any(|w| !w.is_finite()) {
+                        return Err(format!("overlay {side} row non-finite weight"));
+                    }
+                } else if !r.weights.is_empty() {
+                    return Err(format!("overlay {side} row weighted on unweighted graph"));
+                }
+                // Rebuild-order invariant: sorted by (target, weight).
+                let sorted = r.targets.windows(2).enumerate().all(|(i, w)| {
+                    w[0] < w[1]
+                        || (w[0] == w[1]
+                            && (r.weights.is_empty()
+                                || r.weights[i].total_cmp(&r.weights[i + 1]).is_le()))
+                });
+                if !sorted {
+                    return Err(format!("overlay {side} row not in rebuild order"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A batch of edge insertions and deletions, applied atomically under
+/// one mutation epoch by [`DynamicGraph::apply`]. Deletions are applied
+/// before insertions, and a deletion removes every parallel copy of its
+/// edge.
+#[derive(Clone, Debug, Default)]
+pub struct MutationSet {
+    inserts: Vec<(VertexId, VertexId, EdgeWeight)>,
+    deletes: Vec<(VertexId, VertexId)>,
+    weighted: bool,
+}
+
+impl MutationSet {
+    /// Empty batch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage inserting `src → dst` with weight `1.0`.
+    pub fn insert(&mut self, src: VertexId, dst: VertexId) {
+        self.inserts.push((src, dst, 1.0));
+    }
+
+    /// Stage inserting `src → dst` with an explicit weight. Applying a
+    /// weighted insert to an unweighted graph promotes the whole graph
+    /// to weighted (existing edges read `1.0`), exactly as mixing
+    /// weighted pushes into a [`GraphBuilder`](crate::graph::GraphBuilder) does.
+    pub fn insert_weighted(&mut self, src: VertexId, dst: VertexId, w: EdgeWeight) {
+        assert!(w.is_finite(), "edge weight must be finite, got {w}");
+        self.weighted = true;
+        self.inserts.push((src, dst, w));
+    }
+
+    /// Stage inserting both directions of an undirected edge.
+    pub fn insert_undirected(&mut self, a: VertexId, b: VertexId) {
+        self.insert(a, b);
+        if a != b {
+            self.insert(b, a);
+        }
+    }
+
+    /// Stage deleting every parallel `src → dst` edge.
+    pub fn delete(&mut self, src: VertexId, dst: VertexId) {
+        self.deletes.push((src, dst));
+    }
+
+    /// Stage deleting both directions of an undirected edge.
+    pub fn delete_undirected(&mut self, a: VertexId, b: VertexId) {
+        self.delete(a, b);
+        if a != b {
+            self.delete(b, a);
+        }
+    }
+
+    /// Staged insertions as `(src, dst, weight)` triples.
+    pub fn inserts(&self) -> &[(VertexId, VertexId, EdgeWeight)] {
+        &self.inserts
+    }
+
+    /// Staged deletions.
+    pub fn deletes(&self) -> &[(VertexId, VertexId)] {
+        &self.deletes
+    }
+
+    /// Whether the batch stages nothing.
+    pub fn is_empty(&self) -> bool {
+        self.inserts.is_empty() && self.deletes.is_empty()
+    }
+
+    /// Number of staged mutations.
+    pub fn len(&self) -> usize {
+        self.inserts.len() + self.deletes.len()
+    }
+
+    /// Whether any staged insert carries an explicit weight.
+    pub fn has_weighted_inserts(&self) -> bool {
+        self.weighted
+    }
+
+    /// Sorted, deduplicated endpoints of every staged mutation — the
+    /// frontier seed for incremental recomputation.
+    pub fn touched(&self) -> Vec<VertexId> {
+        let mut t: Vec<VertexId> = self
+            .inserts
+            .iter()
+            .flat_map(|&(s, d, _)| [s, d])
+            .chain(self.deletes.iter().flat_map(|&(s, d)| [s, d]))
+            .collect();
+        t.sort_unstable();
+        t.dedup();
+        t
+    }
+}
+
+/// What one [`DynamicGraph::apply`] call actually did: the epoch step,
+/// the edge instances inserted and removed (deletions expanded per
+/// parallel copy — exactly what [`PartitionPlan::apply_edge_deltas`]
+/// needs to patch shard censuses), the touched frontier, and whether
+/// the batch tripped a compaction.
+///
+/// [`PartitionPlan::apply_edge_deltas`]: crate::graph::partition::PartitionPlan::apply_edge_deltas
+#[derive(Clone, Debug)]
+pub struct MutationReceipt {
+    /// Epoch the graph was at before this batch.
+    pub from_epoch: u64,
+    /// Epoch after this batch (`from_epoch + 1` for a non-empty batch).
+    pub epoch: u64,
+    /// Inserted edge instances `(src, dst, weight)`.
+    pub inserted: Vec<(VertexId, VertexId, EdgeWeight)>,
+    /// Removed edge instances `(src, dst)`, one entry per parallel copy
+    /// that actually existed.
+    pub removed: Vec<(VertexId, VertexId)>,
+    /// Sorted unique endpoints of the staged mutations — seed these
+    /// instead of restarting cold ([`crate::algos::incremental`]).
+    pub touched: Vec<VertexId>,
+    /// Whether applying this batch crossed the spill threshold and
+    /// compacted the overlay back into a fresh base CSR.
+    pub compacted: bool,
+}
+
+impl MutationReceipt {
+    /// Whether the batch only inserted edges (the warm-start-safe case
+    /// for monotone algorithms like CC and SSSP).
+    pub fn insert_only(&self) -> bool {
+        self.removed.is_empty() && !self.inserted.is_empty()
+    }
+}
+
+/// Point-in-time counters of a [`DynamicGraph`] (delta occupancy,
+/// compaction census — surfaced through `RunMetrics` and the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct DynamicStats {
+    /// Current mutation epoch.
+    pub epoch: u64,
+    /// Merged (served) edge count.
+    pub edges: usize,
+    /// Mutation instances held in the overlay since the last compaction.
+    pub delta_edges: usize,
+    /// `delta_edges / edges` (0.0 when fully compacted).
+    pub occupancy: f64,
+    /// Compactions performed so far.
+    pub compactions: u64,
+    /// Total wall-clock time spent compacting.
+    pub compaction_time: Duration,
+    /// Overlay mutation instances that trigger the next compaction.
+    pub spill_threshold: usize,
+}
+
+/// A mutable graph: the base [`Csr`] plus its live delta overlay, the
+/// mutation epoch, and the compaction policy. See the [module
+/// docs](self) for the lifecycle.
+#[derive(Clone, Debug)]
+pub struct DynamicGraph {
+    csr: Csr,
+    epoch: u64,
+    spill_threshold: usize,
+    compactions: u64,
+    compaction_time: Duration,
+}
+
+impl DynamicGraph {
+    /// Wrap `csr` with the default spill threshold (a quarter of the
+    /// base edge count, floored at 256 mutation instances).
+    pub fn new(csr: Csr) -> Self {
+        let threshold = (csr.num_edges() / 4).max(256);
+        Self::with_spill_threshold(csr, threshold)
+    }
+
+    /// Wrap `csr`, compacting whenever the overlay holds at least
+    /// `spill_threshold` mutation instances (minimum 1).
+    pub fn with_spill_threshold(csr: Csr, spill_threshold: usize) -> Self {
+        DynamicGraph {
+            csr,
+            epoch: 0,
+            spill_threshold: spill_threshold.max(1),
+            compactions: 0,
+            compaction_time: Duration::ZERO,
+        }
+    }
+
+    /// The merged graph view (base + overlay) every consumer reads.
+    #[inline]
+    pub fn graph(&self) -> &Csr {
+        &self.csr
+    }
+
+    /// Take the graph back out (drops the mutation machinery).
+    pub fn into_graph(self) -> Csr {
+        self.csr
+    }
+
+    /// Current mutation epoch (0 = never mutated).
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Mutation instances currently held in the overlay.
+    pub fn delta_edges(&self) -> usize {
+        self.csr.delta_edge_count()
+    }
+
+    /// Point-in-time counters.
+    pub fn stats(&self) -> DynamicStats {
+        let edges = self.csr.num_edges();
+        let delta = self.delta_edges();
+        DynamicStats {
+            epoch: self.epoch,
+            edges,
+            delta_edges: delta,
+            occupancy: if edges == 0 {
+                0.0
+            } else {
+                delta as f64 / edges as f64
+            },
+            compactions: self.compactions,
+            compaction_time: self.compaction_time,
+            spill_threshold: self.spill_threshold,
+        }
+    }
+
+    /// Apply one batch under the next mutation epoch. Deletions apply
+    /// before insertions. Returns the receipt downstream caches patch
+    /// themselves with; an empty batch is a no-op (no epoch step).
+    pub fn apply(&mut self, m: &MutationSet) -> MutationReceipt {
+        let from = self.epoch;
+        if m.is_empty() {
+            return MutationReceipt {
+                from_epoch: from,
+                epoch: from,
+                inserted: Vec::new(),
+                removed: Vec::new(),
+                touched: Vec::new(),
+                compacted: false,
+            };
+        }
+        let n = self.csr.num_vertices();
+        for &(s, d, _) in m.inserts() {
+            assert!(
+                (s as usize) < n && (d as usize) < n,
+                "mutation endpoint out of range: ({s}, {d}) on {n} vertices"
+            );
+        }
+        for &(s, d) in m.deletes() {
+            assert!(
+                (s as usize) < n && (d as usize) < n,
+                "mutation endpoint out of range: ({s}, {d}) on {n} vertices"
+            );
+        }
+
+        // Weight promotion before anything reads `has_weights`.
+        if m.has_weighted_inserts() && !self.csr.has_weights() {
+            self.csr.out_weights = Some(vec![1.0; self.csr.out_targets.len()]);
+            self.csr.in_weights = Some(vec![1.0; self.csr.in_sources.len()]);
+            if let Some(ov) = &mut self.csr.overlay {
+                ov.promote_rows();
+            }
+        }
+
+        if self.csr.overlay.is_none() {
+            self.csr.overlay = Some(Box::new(DeltaOverlay::new(n)));
+        }
+        // Split the borrow at field granularity: base arrays are read,
+        // the overlay is rewritten.
+        let Csr {
+            out_offsets,
+            out_targets,
+            in_offsets,
+            in_sources,
+            out_weights,
+            in_weights,
+            overlay,
+        } = &mut self.csr;
+        let weighted = out_weights.is_some();
+        let ov = overlay.as_mut().expect("overlay just ensured");
+
+        // ---- Out side: rows keyed by src (removals recorded here; the
+        // in side applies the identical edits keyed by dst, so its
+        // removal multiset is the same by the CSR invariant) -----------
+        let mut by_src: BTreeMap<VertexId, RowEdits> = BTreeMap::new();
+        for &(s, d, w) in m.inserts() {
+            by_src.entry(s).or_default().0.push((d, w));
+        }
+        for &(s, d) in m.deletes() {
+            by_src.entry(s).or_default().1.push(d);
+        }
+        let mut removed: Vec<(VertexId, VertexId)> = Vec::new();
+        rewrite_rows(
+            &by_src,
+            ov,
+            true,
+            BaseSide {
+                offsets: out_offsets,
+                adjacency: out_targets,
+                weights: out_weights,
+            },
+            weighted,
+            Some(&mut removed),
+        );
+
+        // ---- In side: same edits keyed by dst ------------------------
+        let mut by_dst: BTreeMap<VertexId, RowEdits> = BTreeMap::new();
+        for &(s, d, w) in m.inserts() {
+            by_dst.entry(d).or_default().0.push((s, w));
+        }
+        for &(s, d) in m.deletes() {
+            by_dst.entry(d).or_default().1.push(s);
+        }
+        rewrite_rows(
+            &by_dst,
+            ov,
+            false,
+            BaseSide {
+                offsets: in_offsets,
+                adjacency: in_sources,
+                weights: in_weights,
+            },
+            weighted,
+            None,
+        );
+
+        ov.edge_delta += m.inserts().len() as isize - removed.len() as isize;
+        ov.delta_edges += m.inserts().len() + removed.len();
+        self.epoch += 1;
+
+        let compacted = if self.delta_edges() >= self.spill_threshold {
+            self.compact()
+        } else {
+            false
+        };
+        MutationReceipt {
+            from_epoch: from,
+            epoch: self.epoch,
+            inserted: m.inserts().to_vec(),
+            removed,
+            touched: m.touched(),
+            compacted,
+        }
+    }
+
+    /// Fold the overlay back into a fresh base CSR via
+    /// [`Csr::rebuilt`] (O(V + E); the logical graph — and thus every
+    /// run result — is unchanged). Returns whether anything was
+    /// compacted.
+    pub fn compact(&mut self) -> bool {
+        if self.csr.overlay.is_none() {
+            return false;
+        }
+        let t = Timer::start();
+        self.csr = self.csr.rebuilt();
+        self.compactions += 1;
+        self.compaction_time += t.elapsed();
+        true
+    }
+}
+
+/// One direction's base CSR arrays, bundled for [`rewrite_rows`].
+struct BaseSide<'a> {
+    offsets: &'a [usize],
+    adjacency: &'a [VertexId],
+    weights: &'a Option<Vec<EdgeWeight>>,
+}
+
+/// Apply one side's staged row edits to the overlay: for each dirty
+/// row key, snapshot the current merged row, apply deletions (recording
+/// actually-removed instances as `(key, target)` when asked), append
+/// insertions, and store the result in rebuild order. Shared by the
+/// out side (keyed by src) and the in side (keyed by dst) so the two
+/// CSR views cannot drift apart.
+fn rewrite_rows(
+    edits: &BTreeMap<VertexId, RowEdits>,
+    ov: &mut DeltaOverlay,
+    out: bool,
+    base: BaseSide<'_>,
+    weighted: bool,
+    mut removed: Option<&mut Vec<(VertexId, VertexId)>>,
+) {
+    for (&key, (ins, dels)) in edits {
+        let ov_row = if out { ov.out_row(key) } else { ov.in_row(key) };
+        let mut row = snapshot_row(ov_row, base.offsets, base.adjacency, base.weights, key as usize);
+        for &t in dels.iter() {
+            let before = row.len();
+            row.retain(|&(x, _)| x != t);
+            if let Some(r) = removed.as_deref_mut() {
+                for _ in 0..(before - row.len()) {
+                    r.push((key, t));
+                }
+            }
+        }
+        row.extend(ins.iter().copied());
+        sort_row(&mut row, weighted);
+        ov.set_row(out, key, row, weighted);
+    }
+}
+
+/// Current merged row of one vertex as owned `(neighbour, weight)`
+/// pairs: the overlay row when present, else the base CSR slice.
+fn snapshot_row(
+    ov_row: Option<&OverlayRow>,
+    offsets: &[usize],
+    adjacency: &[VertexId],
+    weights: &Option<Vec<EdgeWeight>>,
+    v: usize,
+) -> Vec<(VertexId, EdgeWeight)> {
+    match ov_row {
+        Some(r) => {
+            if r.weights.is_empty() {
+                r.targets.iter().map(|&t| (t, 1.0)).collect()
+            } else {
+                r.targets
+                    .iter()
+                    .zip(&r.weights)
+                    .map(|(&t, &w)| (t, w))
+                    .collect()
+            }
+        }
+        None => {
+            let range = offsets[v]..offsets[v + 1];
+            match weights {
+                Some(ws) => adjacency[range.clone()]
+                    .iter()
+                    .zip(&ws[range])
+                    .map(|(&t, &w)| (t, w))
+                    .collect(),
+                None => adjacency[range].iter().map(|&t| (t, 1.0)).collect(),
+            }
+        }
+    }
+}
+
+/// Sort a merged row into rebuild order: by target, ties by weight —
+/// exactly the order [`GraphBuilder`](crate::graph::GraphBuilder) leaves rows in.
+fn sort_row(row: &mut [(VertexId, EdgeWeight)], weighted: bool) {
+    if weighted {
+        row.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    } else {
+        row.sort_unstable_by_key(|e| e.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::gen;
+    use crate::util::quick;
+    use crate::util::rng::Rng;
+
+    /// Rebuild the merged view from scratch through the builder — the
+    /// ground truth every delta-merged row must match exactly.
+    fn rebuild(g: &Csr) -> Csr {
+        g.rebuilt()
+    }
+
+    fn assert_rows_match(dyn_g: &Csr, rebuilt: &Csr) {
+        assert_eq!(dyn_g.num_vertices(), rebuilt.num_vertices());
+        assert_eq!(dyn_g.num_edges(), rebuilt.num_edges());
+        assert_eq!(dyn_g.has_weights(), rebuilt.has_weights());
+        for v in rebuilt.vertices() {
+            assert_eq!(dyn_g.out_degree(v), rebuilt.out_degree(v), "out deg v{v}");
+            assert_eq!(dyn_g.in_degree(v), rebuilt.in_degree(v), "in deg v{v}");
+            for i in 0..rebuilt.out_degree(v) {
+                assert_eq!(dyn_g.out_edge(v, i), rebuilt.out_edge(v, i), "out v{v}#{i}");
+            }
+            for i in 0..rebuilt.in_degree(v) {
+                assert_eq!(dyn_g.in_edge(v, i), rebuilt.in_edge(v, i), "in v{v}#{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn inserts_appear_in_both_directions_in_rebuild_order() {
+        let g = gen::ring(6); // v -> v+1, v -> v-1 (symmetric ring)
+        let mut dg = DynamicGraph::new(g);
+        let mut m = MutationSet::new();
+        m.insert(0, 3);
+        m.insert(3, 0);
+        let r = dg.apply(&m);
+        assert_eq!(r.from_epoch, 0);
+        assert_eq!(r.epoch, 1);
+        assert_eq!(r.touched, vec![0, 3]);
+        assert!(r.insert_only());
+        assert!(!r.compacted);
+        assert_eq!(dg.graph().out_neighbors(0), &[1, 3, 5]);
+        assert_eq!(dg.graph().in_neighbors(0), &[1, 3, 5]);
+        dg.graph().validate().unwrap();
+        assert_rows_match(dg.graph(), &rebuild(dg.graph()));
+    }
+
+    #[test]
+    fn delete_removes_every_parallel_copy() {
+        let g = GraphBuilder::new(3)
+            .edges(&[(0, 1), (0, 1), (0, 2), (1, 2)])
+            .build();
+        let mut dg = DynamicGraph::new(g);
+        let mut m = MutationSet::new();
+        m.delete(0, 1);
+        let r = dg.apply(&m);
+        assert_eq!(r.removed, vec![(0, 1), (0, 1)]);
+        assert!(!r.insert_only());
+        assert_eq!(dg.graph().out_neighbors(0), &[2]);
+        assert_eq!(dg.graph().in_neighbors(1), &[] as &[u32]);
+        assert_eq!(dg.graph().num_edges(), 2);
+        dg.graph().validate().unwrap();
+    }
+
+    #[test]
+    fn delete_then_insert_same_batch_deletes_first() {
+        let g = GraphBuilder::new(2).edges(&[(0, 1)]).build();
+        let mut dg = DynamicGraph::new(g);
+        let mut m = MutationSet::new();
+        m.delete(0, 1);
+        m.insert(0, 1);
+        let r = dg.apply(&m);
+        assert_eq!(r.removed, vec![(0, 1)]);
+        assert_eq!(r.inserted, vec![(0, 1, 1.0)]);
+        assert_eq!(dg.graph().out_neighbors(0), &[1]);
+        assert_eq!(dg.graph().num_edges(), 1);
+    }
+
+    #[test]
+    fn deleting_missing_edge_is_a_recorded_noop() {
+        let g = gen::path(4);
+        let mut dg = DynamicGraph::new(g);
+        let mut m = MutationSet::new();
+        m.delete(0, 3);
+        let r = dg.apply(&m);
+        assert!(r.removed.is_empty());
+        assert_eq!(r.epoch, 1, "epoch still advances for a non-empty batch");
+        assert_rows_match(dg.graph(), &rebuild(dg.graph()));
+    }
+
+    #[test]
+    fn weighted_insert_promotes_unweighted_graph() {
+        let g = gen::path(3); // unweighted
+        let mut dg = DynamicGraph::new(g);
+        let mut m = MutationSet::new();
+        m.insert_weighted(0, 2, 2.5);
+        dg.apply(&m);
+        let g = dg.graph();
+        assert!(g.has_weights());
+        // Pre-existing edges read 1.0 — the builder's mixing rule.
+        assert_eq!(g.out_edge(1, 0), (2, 1.0));
+        assert_eq!(g.out_edge(0, 1), (2, 2.5));
+        g.validate().unwrap();
+        assert_rows_match(g, &rebuild(g));
+    }
+
+    #[test]
+    fn weighted_parallel_edges_sort_by_weight_like_a_rebuild() {
+        let g = GraphBuilder::new(2)
+            .weighted_edges(&[(0, 1, 5.0)])
+            .build();
+        let mut dg = DynamicGraph::new(g);
+        let mut m = MutationSet::new();
+        m.insert_weighted(0, 1, 2.0);
+        m.insert_weighted(0, 1, 9.0);
+        dg.apply(&m);
+        assert_eq!(dg.graph().out_weights_of(0), Some(&[2.0, 5.0, 9.0][..]));
+        assert_rows_match(dg.graph(), &rebuild(dg.graph()));
+    }
+
+    #[test]
+    fn empty_batch_is_a_true_noop() {
+        let g = gen::ring(5);
+        let mut dg = DynamicGraph::new(g);
+        let r = dg.apply(&MutationSet::new());
+        assert_eq!(r.from_epoch, 0);
+        assert_eq!(r.epoch, 0);
+        assert_eq!(dg.epoch(), 0);
+        assert!(!dg.graph().has_overlay());
+    }
+
+    #[test]
+    fn spill_threshold_triggers_compaction() {
+        let g = gen::ring(8);
+        let mut dg = DynamicGraph::with_spill_threshold(g, 3);
+        let mut m = MutationSet::new();
+        m.insert(0, 4);
+        dg.apply(&m); // 1 instance < 3
+        assert!(dg.graph().has_overlay());
+        let mut m2 = MutationSet::new();
+        m2.insert(1, 5);
+        m2.insert(2, 6);
+        let r = dg.apply(&m2); // 3 instances >= 3 → compact
+        assert!(r.compacted);
+        assert!(!dg.graph().has_overlay());
+        assert_eq!(dg.stats().compactions, 1);
+        assert_eq!(dg.stats().delta_edges, 0);
+        assert_eq!(dg.graph().num_edges(), 8 * 2 + 3);
+        dg.graph().validate().unwrap();
+        // Compaction preserved the logical graph.
+        assert_rows_match(dg.graph(), &rebuild(dg.graph()));
+    }
+
+    #[test]
+    fn stats_track_occupancy_and_epoch() {
+        let g = gen::ring(10);
+        let mut dg = DynamicGraph::with_spill_threshold(g, 1_000_000);
+        assert_eq!(dg.stats().occupancy, 0.0);
+        let mut m = MutationSet::new();
+        m.insert_undirected(0, 5);
+        dg.apply(&m);
+        let st = dg.stats();
+        assert_eq!(st.epoch, 1);
+        assert_eq!(st.delta_edges, 2);
+        assert_eq!(st.edges, 22);
+        assert!(st.occupancy > 0.0);
+        assert_eq!(st.compactions, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_mutation_rejected() {
+        let mut dg = DynamicGraph::new(gen::ring(4));
+        let mut m = MutationSet::new();
+        m.insert(0, 99);
+        dg.apply(&m);
+    }
+
+    #[test]
+    fn prop_random_mutation_sequences_match_rebuild() {
+        quick::check("dynamic rows == rebuilt rows", |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let m0 = rng.below(3 * n as u64) as usize;
+            let weighted = rng.chance(0.5);
+            let g = random_graph(rng, n, m0, weighted);
+            let threshold = if rng.chance(0.3) {
+                1 + rng.below(6) as usize // exercise mid-sequence compaction
+            } else {
+                1_000_000
+            };
+            let mut dg = DynamicGraph::with_spill_threshold(g, threshold);
+            for _ in 0..(1 + rng.below(4)) {
+                let m = random_mutations(rng, dg.graph(), weighted);
+                dg.apply(&m);
+                dg.graph().validate()?;
+                let rebuilt = rebuild(dg.graph());
+                for v in rebuilt.vertices() {
+                    let got: Vec<_> = (0..dg.graph().out_degree(v))
+                        .map(|i| dg.graph().out_edge(v, i))
+                        .collect();
+                    let want: Vec<_> =
+                        (0..rebuilt.out_degree(v)).map(|i| rebuilt.out_edge(v, i)).collect();
+                    if got != want {
+                        return Err(format!("v{v}: {got:?} vs rebuilt {want:?}"));
+                    }
+                }
+                if dg.graph().num_edges() != rebuilt.num_edges() {
+                    return Err("edge count diverged from rebuild".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    fn random_graph(rng: &mut Rng, n: usize, m: usize, weighted: bool) -> Csr {
+        let edges = quick::random_edges(rng, n, m);
+        let mut gb = GraphBuilder::new(n);
+        for (s, d) in edges {
+            if weighted {
+                gb.push_weighted_edge(s, d, (1 + rng.below(80)) as f64 / 8.0);
+            } else {
+                gb.push_edge(s, d);
+            }
+        }
+        gb.build()
+    }
+
+    fn random_mutations(rng: &mut Rng, g: &Csr, weighted: bool) -> MutationSet {
+        let n = g.num_vertices() as u64;
+        let mut m = MutationSet::new();
+        for _ in 0..rng.below(6) {
+            let (s, d) = (rng.below(n) as VertexId, rng.below(n) as VertexId);
+            if weighted {
+                m.insert_weighted(s, d, (1 + rng.below(80)) as f64 / 8.0);
+            } else {
+                m.insert(s, d);
+            }
+        }
+        for _ in 0..rng.below(4) {
+            // Half the deletes target real edges, half are misses.
+            if rng.chance(0.5) && g.num_edges() > 0 {
+                let v = (0..g.num_vertices() as VertexId)
+                    .find(|&v| g.out_degree(v) > 0)
+                    .unwrap();
+                let d = g.out_neighbors(v)[rng.below(g.out_degree(v) as u64) as usize];
+                m.delete(v, d);
+            } else {
+                m.delete(rng.below(n) as VertexId, rng.below(n) as VertexId);
+            }
+        }
+        m
+    }
+}

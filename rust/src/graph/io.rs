@@ -103,6 +103,13 @@ pub fn read_edge_list(path: &Path, symmetric: bool) -> Result<Csr> {
 /// little-endian integers (plus f64 weight arrays in the v2 format).
 /// ~10× faster to load than text.
 pub fn write_binary(g: &Csr, path: &Path) -> Result<()> {
+    if g.has_overlay() {
+        bail!(
+            "{}: cannot serialise a graph with a live delta overlay — \
+             compact the DynamicGraph first",
+            path.display()
+        );
+    }
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(f);
@@ -169,6 +176,7 @@ pub fn read_binary(path: &Path) -> Result<Csr> {
         in_sources,
         out_weights,
         in_weights,
+        overlay: None,
     };
     g.validate()
         .map_err(|e| err!("{}: corrupt graph: {e}", path.display()))?;

@@ -8,6 +8,7 @@
 pub mod builder;
 pub mod catalog;
 pub mod csr;
+pub mod dynamic;
 pub mod gen;
 pub mod io;
 pub mod partition;
@@ -15,4 +16,5 @@ pub mod stats;
 
 pub use builder::GraphBuilder;
 pub use csr::{Csr, EdgeWeight, VertexId};
+pub use dynamic::{DynamicGraph, DynamicStats, MutationReceipt, MutationSet};
 pub use partition::{PartitionPlan, Partitioning};

@@ -27,6 +27,7 @@
 use crate::graph::csr::{Csr, VertexId};
 use crate::util::prefix::{balanced_cuts, exclusive_prefix_sum};
 use std::ops::Range;
+use std::sync::Arc;
 
 /// Estimated hot bytes per vertex for [`Partitioning::CacheSized`]: two
 /// 16-byte mailbox slots, the user value and activity bits, rounded to a
@@ -96,10 +97,15 @@ impl Partitioning {
 pub struct PartitionPlan {
     /// Shard boundaries over vertex ids: `shards + 1` entries, first 0,
     /// last `n`, non-decreasing. Shard `s` owns `cuts[s]..cuts[s+1]`.
-    cuts: Vec<usize>,
+    /// `Arc`-shared: cuts never change short of a full re-partition, so
+    /// an epoch-patched clone (see `engine/epoch.rs`) shares them.
+    cuts: Arc<Vec<usize>>,
     /// `owner[v]` = shard owning vertex `v` (redundant with `cuts`, kept
-    /// dense for O(1) routing on the send hot path).
-    owner: Vec<u32>,
+    /// dense for O(1) routing on the send hot path). `Arc`-shared like
+    /// `cuts`, keeping plan clones O(shards) rather than O(V) — only
+    /// the per-shard censuses below are deep-copied when a mutation
+    /// batch patches a cached plan.
+    owner: Arc<Vec<u32>>,
     /// Per-shard total out-edges (scatter-side work, push mode).
     out_edges: Vec<u64>,
     /// Per-shard total in-edges (gather-side work, pull mode).
@@ -149,8 +155,8 @@ impl PartitionPlan {
         }
 
         PartitionPlan {
-            cuts,
-            owner,
+            cuts: Arc::new(cuts),
+            owner: Arc::new(owner),
             out_edges,
             in_edges,
             interior_out,
@@ -221,6 +227,48 @@ impl PartitionPlan {
     /// Total cross-shard out-edges.
     pub fn total_cross(&self) -> u64 {
         self.cross_out.iter().sum()
+    }
+
+    /// Incrementally patch the per-shard edge censuses after a graph
+    /// mutation batch (see [`crate::graph::dynamic::MutationReceipt`]):
+    /// the cuts and owner map are untouched — vertex ranges never move
+    /// short of a full re-partition — so only the out/in/interior/cross
+    /// counts need adjusting, one O(1) update per edge instance. `removed`
+    /// entries must be edge instances that actually existed (the receipt
+    /// guarantees this), otherwise the counts would underflow.
+    pub fn apply_edge_deltas(
+        &mut self,
+        inserted: &[(VertexId, VertexId, crate::graph::csr::EdgeWeight)],
+        removed: &[(VertexId, VertexId)],
+    ) {
+        for &(s, d, _) in inserted {
+            self.bump_edge(s, d, true);
+        }
+        for &(s, d) in removed {
+            self.bump_edge(s, d, false);
+        }
+    }
+
+    fn bump_edge(&mut self, s: VertexId, d: VertexId, add: bool) {
+        let ss = self.shard_of(s);
+        let ds = self.shard_of(d);
+        if add {
+            self.out_edges[ss] += 1;
+            self.in_edges[ds] += 1;
+            if ss == ds {
+                self.interior_out[ss] += 1;
+            } else {
+                self.cross_out[ss] += 1;
+            }
+        } else {
+            self.out_edges[ss] -= 1;
+            self.in_edges[ds] -= 1;
+            if ss == ds {
+                self.interior_out[ss] -= 1;
+            } else {
+                self.cross_out[ss] -= 1;
+            }
+        }
     }
 
     /// Edge imbalance: max shard weight over mean shard weight (weights
@@ -389,6 +437,40 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn patched_plan_matches_plan_rebuilt_from_mutated_graph() {
+        use crate::graph::dynamic::{DynamicGraph, MutationSet};
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 13);
+        let mut plan = PartitionPlan::build(&g, 4);
+        let mut dg = DynamicGraph::with_spill_threshold(g, 1_000_000);
+        let n = dg.graph().num_vertices() as u32;
+        let mut m = MutationSet::new();
+        m.insert(0, n - 1);
+        m.insert(n / 2, 1);
+        // Delete a real edge so the receipt carries removals too.
+        let src = (0..n).find(|&v| dg.graph().out_degree(v) > 0).unwrap();
+        let dst = dg.graph().out_neighbors(src)[0];
+        m.delete(src, dst);
+        let receipt = dg.apply(&m);
+        assert!(!receipt.compacted);
+        plan.apply_edge_deltas(&receipt.inserted, &receipt.removed);
+        // validate() recomputes the interior/cross classification of the
+        // mutated graph under the plan's (unchanged) cuts.
+        plan.validate(dg.graph()).unwrap();
+        // The out/in censuses must equal a recount under the same cuts
+        // (a fresh build may cut elsewhere — degrees changed — which is
+        // exactly why patching, not rebuilding, is the epoch-cheap path).
+        let g2 = dg.graph();
+        let mut out_want = vec![0u64; plan.num_shards()];
+        let mut in_want = vec![0u64; plan.num_shards()];
+        for v in g2.vertices() {
+            out_want[plan.shard_of(v)] += g2.out_degree(v) as u64;
+            in_want[plan.shard_of(v)] += g2.in_degree(v) as u64;
+        }
+        assert_eq!(plan.out_edges(), &out_want[..]);
+        assert_eq!(plan.in_edges(), &in_want[..]);
     }
 
     #[test]

@@ -23,6 +23,8 @@ pub struct AosStore<V, M: MessageValue> {
     records: Vec<Record<V, M>>,
     /// Which slot is the *current* epoch: false → `slot_a`, true → `slot_b`.
     flipped: bool,
+    /// Graph mutation epoch the contents were last primed against.
+    epoch_tag: u64,
 }
 
 impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for AosStore<V, M> {
@@ -39,6 +41,7 @@ impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for AosStore<V, M> {
         AosStore {
             records,
             flipped: false,
+            epoch_tag: 0,
         }
     }
 
@@ -63,6 +66,15 @@ impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for AosStore<V, M> {
 
     fn rewind_epochs(&mut self) {
         self.flipped = false;
+    }
+
+    #[inline]
+    fn epoch_tag(&self) -> u64 {
+        self.epoch_tag
+    }
+
+    fn set_epoch_tag(&mut self, epoch: u64) {
+        self.epoch_tag = epoch;
     }
 
     #[inline]

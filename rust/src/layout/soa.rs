@@ -18,6 +18,8 @@ pub struct SoaStore<V, M: MessageValue> {
     slots_b: Vec<MsgSlot<M>>,
     /// false → `slots_a` is current; true → `slots_b` is current.
     flipped: bool,
+    /// Graph mutation epoch the contents were last primed against.
+    epoch_tag: u64,
 }
 
 impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for SoaStore<V, M> {
@@ -35,6 +37,7 @@ impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for SoaStore<V, M> {
             slots_a,
             slots_b,
             flipped: false,
+            epoch_tag: 0,
         }
     }
 
@@ -66,6 +69,15 @@ impl<V: Send + Sync, M: MessageValue> VertexStore<V, M> for SoaStore<V, M> {
 
     fn rewind_epochs(&mut self) {
         self.flipped = false;
+    }
+
+    #[inline]
+    fn epoch_tag(&self) -> u64 {
+        self.epoch_tag
+    }
+
+    fn set_epoch_tag(&mut self, epoch: u64) {
+        self.epoch_tag = epoch;
     }
 
     #[inline]

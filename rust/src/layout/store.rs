@@ -57,7 +57,10 @@ impl<T> SyncCell<T> {
 /// Cold per-vertex metadata a realistic vertex-centric framework carries in
 /// its vertex structure (iPregel's has id, neighbour pointers and counts).
 /// The baseline layout interleaves this with the hot slots — faithfully
-/// reproducing the cache pollution the paper measures.
+/// reproducing the cache pollution the paper measures. The cached degrees
+/// and offsets describe the **base** CSR arrays (nothing reads them on the
+/// compute path); on a mutated graph the live values come from the
+/// overlay-aware `Csr` accessors.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct VertexMeta {
     /// Vertex id (iPregel stores it; useful for debugging/dumps).
@@ -113,6 +116,16 @@ pub trait VertexStore<V: Send, M: MessageValue>: Send + Sync {
     /// Reset the epoch flip to its initial orientation (companion of
     /// [`VertexStore::reset_range`]; [`VertexStore::reset`] includes it).
     fn rewind_epochs(&mut self);
+
+    /// The graph **mutation epoch** this store's contents were last
+    /// primed against (see `graph/dynamic.rs`). Freshly built stores
+    /// report 0; sessions re-stamp pooled stores at checkout and use a
+    /// mismatch to flag (and re-prime away) state from an older epoch —
+    /// the epoch-tagged extension of the rewind machinery above.
+    fn epoch_tag(&self) -> u64;
+
+    /// Stamp the store with the mutation epoch it is being primed for.
+    fn set_epoch_tag(&mut self, epoch: u64);
 
     /// Number of vertices.
     fn len(&self) -> usize;

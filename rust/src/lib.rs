@@ -25,6 +25,14 @@
 //!   owner-exclusive shard-local combining and buffered cross-shard
 //!   message routing — bit-identical to flat execution across the whole
 //!   algorithm matrix;
+//! - a **dynamic-graph subsystem** ([`graph::dynamic`],
+//!   [`engine::epoch`]): per-vertex delta edge logs over the CSR,
+//!   batched mutations under monotone mutation epochs with
+//!   spill-threshold compaction, sessions that own the evolving graph
+//!   ([`engine::GraphSession::dynamic`], `apply_mutations`) and patch
+//!   their partition plans incrementally, and delta-driven incremental
+//!   PageRank/SSSP/CC recompute ([`algos::incremental`]) — mutate → run
+//!   is bit-identical to rebuild → run across the whole engine matrix;
 //! - a graph substrate ([`graph`]) with generators, IO (including
 //!   weighted edge lists and the `.ipg` v2 binary format) and the
 //!   paper-analogue catalog;

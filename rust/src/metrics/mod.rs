@@ -85,6 +85,17 @@ pub struct RunMetrics {
     pub cross_shard_messages: u64,
     /// A documented scheduling fallback applied to this run, if any.
     pub schedule_fallback: Option<ScheduleFallback>,
+    /// Graph mutation epoch the run executed against (0 = static graph
+    /// or never mutated — see `graph/dynamic.rs`).
+    pub graph_epoch: u64,
+    /// Delta-overlay mutation instances live at run start (0 = fully
+    /// compacted base CSR).
+    pub delta_edges: u64,
+    /// Overlay occupancy at run start: `delta_edges / num_edges`.
+    pub delta_occupancy: f64,
+    /// Whether the pooled vertex store carried an older mutation-epoch
+    /// tag and had to be re-primed (epoch-tagged invalidation).
+    pub store_epoch_refreshed: bool,
 }
 
 impl RunMetrics {
@@ -127,6 +138,14 @@ impl RunMetrics {
             s.push_str(&format!(
                 " shards={} cross={} imbalance={:.2}",
                 self.shards, self.cross_shard_messages, self.shard_edge_imbalance
+            ));
+        }
+        if self.graph_epoch > 0 || self.delta_edges > 0 {
+            s.push_str(&format!(
+                " epoch={} delta={} (occ {:.1}%)",
+                self.graph_epoch,
+                self.delta_edges,
+                self.delta_occupancy * 100.0
             ));
         }
         if let Some(fb) = &self.schedule_fallback {
@@ -235,6 +254,16 @@ mod tests {
         assert!(s.contains("shards=8"));
         assert!(s.contains("cross=42"));
         assert!(s.contains("fallback="));
+        assert!(!s.contains("epoch="), "static run omits the epoch section");
+        let dynamic = RunMetrics {
+            graph_epoch: 3,
+            delta_edges: 12,
+            delta_occupancy: 0.05,
+            ..Default::default()
+        };
+        let d = dynamic.summary();
+        assert!(d.contains("epoch=3"));
+        assert!(d.contains("delta=12"));
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Dynamic-graph subsystem integration tests: the bit-identity
+//! contract. For random mutation batches, running a program on the
+//! `DynamicGraph`'s delta-merged view must equal a cold run on a CSR
+//! rebuilt from scratch over the same logical edge set — across the
+//! Strategy × Layout × Schedule × Partitioning grid — and compaction
+//! mid-sequence must not perturb anything.
+
+use ipregel::algos::incremental::{
+    delta_pagerank_halt, incremental_cc, incremental_pagerank, incremental_sssp, DeltaPageRank,
+    IncrementalState,
+};
+use ipregel::algos::{reference, ConnectedComponents, PageRank, WeightedSssp};
+use ipregel::combine::Strategy;
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions};
+use ipregel::graph::dynamic::{DynamicGraph, MutationSet};
+use ipregel::graph::{gen, Csr, GraphBuilder};
+use ipregel::layout::Layout;
+use ipregel::sched::Schedule;
+use ipregel::util::rng::Rng;
+
+/// Rebuild the merged view from scratch — the cold-path ground truth
+/// (the same fold compaction uses).
+fn rebuild(g: &Csr) -> Csr {
+    g.rebuilt()
+}
+
+/// Strategy × Layout × Schedule × bypass × Partitioning — the grid the
+/// acceptance criterion names. Schedules and shard counts are crossed
+/// fully; 96 configurations total.
+fn grid() -> Vec<EngineConfig> {
+    let mut cfgs = Vec::new();
+    for &strategy in &[Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+        for &layout in &[Layout::Interleaved, Layout::Externalised] {
+            for &schedule in &[Schedule::Static, Schedule::Dynamic { chunk: 32 }] {
+                for &bypass in &[false, true] {
+                    for &shards in &[0usize, 3] {
+                        cfgs.push(
+                            EngineConfig::default()
+                                .threads(4)
+                                .strategy(strategy)
+                                .layout(layout)
+                                .schedule(schedule)
+                                .bypass(bypass)
+                                .shards(shards),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // The remaining schedules at one representative point each, so all
+    // four schedules appear in the grid without doubling its size.
+    for &schedule in &[Schedule::Guided { min_chunk: 4 }, Schedule::EdgeCentric] {
+        for &shards in &[0usize, 3] {
+            cfgs.push(
+                EngineConfig::default()
+                    .threads(4)
+                    .schedule(schedule)
+                    .bypass(true)
+                    .shards(shards),
+            );
+        }
+    }
+    cfgs
+}
+
+fn random_batch(rng: &mut Rng, g: &Csr, weighted: bool) -> MutationSet {
+    let n = g.num_vertices() as u64;
+    let mut m = MutationSet::new();
+    for _ in 0..6 {
+        let (s, d) = (rng.below(n) as u32, rng.below(n) as u32);
+        if s == d {
+            continue;
+        }
+        if weighted {
+            let w = 0.25 + (rng.below(800) as f64) / 200.0;
+            m.insert_weighted(s, d, w);
+            m.insert_weighted(d, s, w);
+        } else {
+            m.insert_undirected(s, d);
+        }
+    }
+    // A couple of real deletions, symmetric to keep CC's assumption.
+    for _ in 0..2 {
+        let v = (0..g.num_vertices() as u32)
+            .find(|&v| g.out_degree(v) > 0)
+            .expect("graph has edges");
+        let d = g.out_neighbors(v)[rng.below(g.out_degree(v) as u64) as usize];
+        m.delete_undirected(v, d);
+    }
+    m
+}
+
+#[test]
+fn bit_identity_across_the_grid_unweighted() {
+    let base = gen::rmat(7, 4, 0.57, 0.19, 0.19, 3);
+    let mut dg = DynamicGraph::with_spill_threshold(base, 1_000_000);
+    let mut rng = Rng::new(0xD15C);
+    for _ in 0..2 {
+        let m = random_batch(&mut rng, dg.graph(), false);
+        dg.apply(&m);
+    }
+    let g = dg.graph();
+    assert!(g.has_overlay(), "the point is to run over live deltas");
+    let cold = rebuild(g);
+    let dyn_session = GraphSession::new(g);
+    let cold_session = GraphSession::new(&cold);
+    for cfg in grid() {
+        let a = dyn_session.run_with(&PageRank::default(), RunOptions::new().config(cfg));
+        let b = cold_session.run_with(&PageRank::default(), RunOptions::new().config(cfg));
+        assert_eq!(a.values, b.values, "pagerank under {cfg:?}");
+        assert_eq!(
+            a.metrics.num_supersteps(),
+            b.metrics.num_supersteps(),
+            "pagerank supersteps under {cfg:?}"
+        );
+
+        let c = dyn_session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        let d = cold_session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        assert_eq!(c.values, d.values, "cc under {cfg:?}");
+        assert_eq!(
+            c.metrics.total_messages(),
+            d.metrics.total_messages(),
+            "cc message parity under {cfg:?}"
+        );
+    }
+}
+
+#[test]
+fn bit_identity_across_the_grid_weighted() {
+    let base = gen::randomly_weighted(&gen::rmat(7, 4, 0.57, 0.19, 0.19, 9), 0.5, 4.0, 11);
+    let source = base.max_out_degree_vertex();
+    let mut dg = DynamicGraph::with_spill_threshold(base, 1_000_000);
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..2 {
+        let m = random_batch(&mut rng, dg.graph(), true);
+        dg.apply(&m);
+    }
+    let g = dg.graph();
+    assert!(g.has_overlay());
+    assert!(g.has_weights());
+    let cold = rebuild(g);
+    let dyn_session = GraphSession::new(g);
+    let cold_session = GraphSession::new(&cold);
+    let p = WeightedSssp { source };
+    for cfg in grid() {
+        let a = dyn_session.run_with(&p, RunOptions::new().config(cfg));
+        let b = cold_session.run_with(&p, RunOptions::new().config(cfg));
+        assert_eq!(a.values, b.values, "weighted sssp under {cfg:?}");
+    }
+    // And the merged view agrees with the serial reference.
+    let dij = reference::dijkstra(&cold, source);
+    let got = dyn_session.run(&p);
+    for v in g.vertices() {
+        let (a, b) = (got.values[v as usize], dij[v as usize]);
+        assert!(
+            (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-9,
+            "v{v}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn compaction_mid_sequence_preserves_results() {
+    // Spill threshold low enough that the batch stream compacts several
+    // times; after every batch the dynamic run must equal a cold run on
+    // the rebuild, whether or not this batch compacted.
+    let base = gen::rmat(7, 4, 0.57, 0.19, 0.19, 21);
+    let mut session = GraphSession::dynamic_with_config(
+        DynamicGraph::with_spill_threshold(base, 20),
+        EngineConfig::default().threads(2).shards(3),
+    );
+    let mut rng = Rng::new(7);
+    let mut compactions_seen = 0u64;
+    for round in 0..6 {
+        let m = random_batch(&mut rng, session.graph(), false);
+        let receipt = session.apply_mutations(&m).unwrap();
+        if receipt.compacted {
+            compactions_seen += 1;
+        }
+        let cold = rebuild(session.graph());
+        let a = session.run(&ConnectedComponents);
+        let b = GraphSession::with_config(&cold, session.config()).run(&ConnectedComponents);
+        assert_eq!(a.values, b.values, "round {round} (compacted: {})", receipt.compacted);
+        assert_eq!(a.values, reference::connected_components(&cold), "round {round}");
+    }
+    assert!(
+        compactions_seen >= 1,
+        "threshold 20 must compact at least once in 6 batches"
+    );
+    assert_eq!(
+        session.dynamic_graph().unwrap().stats().compactions,
+        compactions_seen
+    );
+}
+
+#[test]
+fn incremental_recompute_chain_stays_exact_over_many_epochs() {
+    // The service loop: one dynamic session, a stream of insert-only
+    // batches, incremental CC and SSSP chained epoch to epoch — always
+    // equal to cold answers, always cheaper than restarting CC cold.
+    let base = {
+        let mut gb = GraphBuilder::new(120).symmetric(true);
+        for c in 0..4 {
+            for v in 0..30u32 {
+                gb.push_edge(c * 30 + v, c * 30 + (v + 1) % 30);
+            }
+        }
+        gb.build()
+    };
+    let mut session = GraphSession::dynamic_with_config(
+        DynamicGraph::with_spill_threshold(base, 1_000_000),
+        EngineConfig::default(),
+    );
+    let cold = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new().config(session.config().bypass(true)),
+    );
+    let mut cc_state = IncrementalState::new(cold.values, 0);
+    let mut inc_activations = 0u64;
+    let mut cold_activations = 0u64;
+    for (a, b) in [(5u32, 40u32), (70, 100), (10, 75)] {
+        let mut m = MutationSet::new();
+        m.insert_undirected(a, b);
+        let receipt = session.apply_mutations(&m).unwrap();
+        let (inc, next) = incremental_cc(&session, &cc_state, &receipt).unwrap();
+        let want = reference::connected_components(session.graph());
+        assert_eq!(next.values, want, "after {a}-{b}");
+        let cold = session.run_with(
+            &ConnectedComponents,
+            RunOptions::new().config(session.config().bypass(true)),
+        );
+        inc_activations += inc.total_activations();
+        cold_activations += cold.metrics.total_activations();
+        cc_state = next;
+    }
+    assert_eq!(cc_state.epoch, 3);
+    assert!(
+        inc_activations < cold_activations,
+        "incremental {inc_activations} vs cold {cold_activations}"
+    );
+}
+
+#[test]
+fn incremental_sssp_and_pagerank_agree_with_cold_after_mutations() {
+    let base = gen::randomly_weighted(&gen::rmat(7, 3, 0.57, 0.19, 0.19, 41), 0.5, 3.0, 5);
+    let source = base.max_out_degree_vertex();
+    let mut session = GraphSession::dynamic_with_config(
+        DynamicGraph::with_spill_threshold(base, 1_000_000),
+        EngineConfig::default(),
+    );
+    // SSSP chain (insert-only).
+    let cold = session.run_with(
+        &WeightedSssp { source },
+        RunOptions::new().config(session.config().bypass(true)),
+    );
+    let mut ss_state = IncrementalState::new(cold.values, 0);
+    // PageRank chain (any mutations).
+    let p = DeltaPageRank::default();
+    let pr_cold = session.run_with(&p, RunOptions::new().halt(delta_pagerank_halt(&p)));
+    let mut pr_state = IncrementalState::new(pr_cold.values, 0);
+
+    let mut rng = Rng::new(99);
+    for round in 0..3 {
+        let n = session.graph().num_vertices() as u64;
+        let mut m = MutationSet::new();
+        for _ in 0..4 {
+            let (s, d) = (rng.below(n) as u32, rng.below(n) as u32);
+            if s != d {
+                let w = 0.25 + (rng.below(400) as f64) / 100.0;
+                m.insert_weighted(s, d, w);
+            }
+        }
+        let receipt = session.apply_mutations(&m).unwrap();
+
+        let (_ss_metrics, ss_next) = incremental_sssp(&session, &ss_state, &receipt).unwrap();
+        let want = reference::dijkstra(session.graph(), source);
+        for v in session.graph().vertices() {
+            let (a, b) = (ss_next.values[v as usize], want[v as usize]);
+            assert!(
+                (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-9,
+                "round {round} v{v}: {a} vs {b}"
+            );
+        }
+        ss_state = ss_next;
+
+        let (pr_metrics, pr_next) =
+            incremental_pagerank(&session, &pr_state, &receipt, &p).unwrap();
+        let pr_cold = session.run_with(&p, RunOptions::new().halt(delta_pagerank_halt(&p)));
+        for v in session.graph().vertices() {
+            let (a, b) = (pr_next.values[v as usize], pr_cold.values[v as usize]);
+            assert!((a - b).abs() < 1e-7, "round {round} v{v}: {a} vs {b}");
+        }
+        assert!(
+            pr_metrics.num_supersteps() <= pr_cold.metrics.num_supersteps(),
+            "warm PageRank must not take more supersteps than cold"
+        );
+        pr_state = pr_next;
+    }
+}
+
+#[test]
+fn deletions_flow_through_engine_and_metrics() {
+    let base = gen::grid(8, 8);
+    let edges_before = base.num_edges();
+    let mut session = GraphSession::dynamic_with_config(
+        DynamicGraph::with_spill_threshold(base, 1_000_000),
+        EngineConfig::default().shards(2),
+    );
+    let mut m = MutationSet::new();
+    m.delete_undirected(0, 1);
+    let receipt = session.apply_mutations(&m).unwrap();
+    assert_eq!(receipt.removed.len(), 2, "one undirected edge = two instances");
+    assert_eq!(session.graph().num_edges(), edges_before - 2);
+    let cold = rebuild(session.graph());
+    let a = session.run(&ConnectedComponents);
+    let b = GraphSession::with_config(&cold, session.config()).run(&ConnectedComponents);
+    assert_eq!(a.values, b.values);
+    assert_eq!(a.metrics.graph_epoch, 1);
+    assert!(a.metrics.delta_edges > 0);
+    assert!(a.metrics.delta_occupancy > 0.0);
+}

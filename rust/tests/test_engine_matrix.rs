@@ -212,9 +212,7 @@ fn all_algos_match_references_across_full_matrix() {
         // merges nothing new (same component) — labels must stay the
         // union-find answer under every configuration.
         let inc = session.run_with(
-            &IncrementalCc {
-                touched: vec![0, sssp_src],
-            },
+            &IncrementalCc::new(vec![0, sssp_src]),
             RunOptions::new().config(cfg).warm_start(&cc_want),
         );
         assert_eq!(inc.values, cc_want, "incremental cc under {cfg:?}");

@@ -5,6 +5,7 @@
 use ipregel::algos::{reference, ConnectedComponents, PageRank, Sssp, WeightedSssp};
 use ipregel::combine::Strategy;
 use ipregel::engine::{EngineConfig, GraphSession};
+use ipregel::graph::dynamic::{DynamicGraph, MutationSet};
 use ipregel::graph::gen;
 use ipregel::graph::GraphBuilder;
 use ipregel::layout::Layout;
@@ -146,6 +147,118 @@ fn prop_weighted_sssp_matches_dijkstra() {
             if !ok {
                 return Err(format!("v{v}: {a} vs {b} under {cfg:?} source {source}"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delta_merged_out_edges_match_rebuilt_csr() {
+    // Weighted-edge parity under mutation: after arbitrary insert/delete
+    // batches (with optional forced compaction), delta-merged
+    // `out_edge`/`in_edge` iteration must yield the same (neighbour,
+    // weight) multiset — in fact the same sequence — as a CSR rebuilt
+    // from the surviving edge list.
+    quick::check("delta-merged out_edge == rebuilt CSR", |rng| {
+        let n = 2 + rng.below(60) as usize;
+        let m0 = rng.below(4 * n as u64) as usize;
+        let weighted = rng.chance(0.5);
+        let mut gb = GraphBuilder::new(n);
+        for (s, d) in quick::random_edges(rng, n, m0) {
+            if weighted {
+                gb.push_weighted_edge(s, d, (1 + rng.below(64)) as f64 / 8.0);
+            } else {
+                gb.push_edge(s, d);
+            }
+        }
+        let threshold = if rng.chance(0.3) {
+            1 + rng.below(8) as usize
+        } else {
+            1_000_000
+        };
+        let mut dg = DynamicGraph::with_spill_threshold(gb.build(), threshold);
+        for _ in 0..(1 + rng.below(3)) {
+            let mut m = MutationSet::new();
+            for _ in 0..rng.below(8) {
+                let (s, d) = (rng.below(n as u64) as u32, rng.below(n as u64) as u32);
+                if weighted {
+                    m.insert_weighted(s, d, (1 + rng.below(64)) as f64 / 8.0);
+                } else {
+                    m.insert(s, d);
+                }
+            }
+            for _ in 0..rng.below(4) {
+                let g = dg.graph();
+                if g.num_edges() > 0 && rng.chance(0.6) {
+                    let v = (0..n as u32).find(|&v| g.out_degree(v) > 0).unwrap();
+                    let d = g.out_neighbors(v)[rng.below(g.out_degree(v) as u64) as usize];
+                    m.delete(v, d);
+                } else {
+                    m.delete(rng.below(n as u64) as u32, rng.below(n as u64) as u32);
+                }
+            }
+            dg.apply(&m);
+        }
+        let g = dg.graph();
+        g.validate()?;
+        let rebuilt = g.rebuilt();
+        if g.num_edges() != rebuilt.num_edges() {
+            return Err("edge counts diverged".into());
+        }
+        for v in rebuilt.vertices() {
+            let got: Vec<_> = (0..g.out_degree(v)).map(|i| g.out_edge(v, i)).collect();
+            let want: Vec<_> = (0..rebuilt.out_degree(v))
+                .map(|i| rebuilt.out_edge(v, i))
+                .collect();
+            if got != want {
+                return Err(format!("out row v{v}: {got:?} vs {want:?}"));
+            }
+            let got_in: Vec<_> = (0..g.in_degree(v)).map(|i| g.in_edge(v, i)).collect();
+            let want_in: Vec<_> = (0..rebuilt.in_degree(v))
+                .map(|i| rebuilt.in_edge(v, i))
+                .collect();
+            if got_in != want_in {
+                return Err(format!("in row v{v}: {got_in:?} vs {want_in:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_results_identical_on_dynamic_and_rebuilt_graphs() {
+    // Random configuration, random mutations: mutate→run equals
+    // rebuild→run for a pull program (PageRank) — the end-to-end version
+    // of the row-parity property above.
+    quick::check("dynamic run == rebuilt run", |rng| {
+        let n = 4 + rng.below(120) as usize;
+        let edges = quick::random_edges(rng, n, rng.below(4 * n as u64) as usize);
+        let base = GraphBuilder::new(n)
+            .symmetric(true)
+            .drop_self_loops(true)
+            .edges(&edges)
+            .build();
+        let mut dg = DynamicGraph::with_spill_threshold(base, 1_000_000);
+        let mut m = MutationSet::new();
+        for _ in 0..(1 + rng.below(6)) {
+            let (s, d) = (rng.below(n as u64) as u32, rng.below(n as u64) as u32);
+            if s != d {
+                m.insert_undirected(s, d);
+            }
+        }
+        dg.apply(&m);
+        let g = dg.graph();
+        let rebuilt = g.rebuilt();
+        let cfg = random_cfg(rng);
+        let iters = rng.below(5) as usize;
+        let p = PageRank {
+            iterations: iters,
+            damping: 0.85,
+        };
+        let a = GraphSession::with_config(g, cfg).run(&p);
+        let b = GraphSession::with_config(&rebuilt, cfg).run(&p);
+        if a.values != b.values {
+            return Err(format!("pagerank diverged under {cfg:?}"));
         }
         Ok(())
     });
