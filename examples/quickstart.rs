@@ -14,7 +14,7 @@
 
 use ipregel::combine::SumCombiner;
 use ipregel::engine::{
-    Context, EngineConfig, GraphSession, Mode, NoAgg, RunOptions, VertexProgram,
+    CombinedPlane, Context, EngineConfig, GraphSession, Mode, NoAgg, RunOptions, VertexProgram,
 };
 use ipregel::graph::csr::{Csr, VertexId};
 use ipregel::graph::gen;
@@ -30,6 +30,7 @@ impl VertexProgram for NeighbourSum {
     type Message = u64;
     type Comb = SumCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Push

@@ -4,31 +4,54 @@
 //! in EXPERIMENTS.md).
 //!
 //! Run: `cargo bench --bench bench_table2`
-//!       BENCH_FULL=1 cargo bench --bench bench_table2
+//!      `BENCH_FULL=1 cargo bench --bench bench_table2`
+//!      `BENCH_SMOKE=1 cargo bench --bench bench_table2`  (CI smoke /
+//!       committed baseline: one tiny catalog graph, generated
+//!       in-memory, all three benchmarks)
+//!      `BENCH_OUT=path.json` additionally emits the speed-up grid as
+//!       machine-readable JSON (per bench × variant × graph) — the
+//!       Table II slice of `BENCH_baseline.json`.
 
 use ipregel::exp::{table2, Bench, Table2Options};
 use ipregel::graph::catalog;
 use ipregel::util::timer::{fmt_duration, Timer};
+use std::fmt::Write as _;
 use std::path::PathBuf;
 
 fn main() {
     let full = std::env::var("BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
     let dir = PathBuf::from(
         std::env::var("IPREGEL_GRAPHS").unwrap_or_else(|_| "data/graphs".into()),
     );
     let entries = if full {
         catalog::catalog()
+    } else if smoke {
+        // One graph keeps the committed baseline cheap to regenerate
+        // while still covering every benchmark × variant cell.
+        catalog::catalog_tiny().into_iter().take(1).collect()
     } else {
         catalog::catalog_tiny()
     };
     println!(
         "== Table II end-to-end ({} catalog, 32 virtual threads) ==",
-        if full { "FULL" } else { "tiny" }
+        if full {
+            "FULL"
+        } else if smoke {
+            "SMOKE"
+        } else {
+            "tiny"
+        }
     );
     let mut graphs = Vec::new();
     for e in &entries {
         let t = Timer::start();
-        let g = e.load_or_generate(&dir).expect("graph generation");
+        // Smoke runs generate in-memory: no cache-directory writes in CI.
+        let g = if smoke {
+            e.generate()
+        } else {
+            e.load_or_generate(&dir).expect("graph generation")
+        };
         eprintln!(
             "  {:<16} |V|={:<9} |E|={:<11} ({})",
             e.name,
@@ -49,4 +72,49 @@ fn main() {
     println!("{}", table2::render(&names, &results));
     println!("{}", table2::summary(&results));
     println!("\n(total bench time {})", fmt_duration(t.elapsed()));
+
+    if let Ok(out_path) = std::env::var("BENCH_OUT") {
+        let mut j = String::new();
+        j.push_str("{\n");
+        let _ = writeln!(j, "  \"bench\": \"table2\",");
+        let _ = writeln!(j, "  \"smoke\": {},", smoke);
+        let _ = writeln!(
+            j,
+            "  \"graphs\": [{}],",
+            names
+                .iter()
+                .map(|n| format!("\"{n}\""))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        j.push_str("  \"results\": [\n");
+        let mut rows: Vec<String> = Vec::new();
+        for r in &results {
+            for (i, _name) in names.iter().enumerate() {
+                rows.push(format!(
+                    "    {{\"bench\": \"{}\", \"variant\": \"Baseline\", \"graph\": {}, \
+                     \"virtual_secs\": {:.6}}}",
+                    r.bench.title(),
+                    i,
+                    r.baseline_secs[i]
+                ));
+            }
+            for row in &r.rows {
+                for (i, s) in row.speedups.iter().enumerate() {
+                    rows.push(format!(
+                        "    {{\"bench\": \"{}\", \"variant\": \"{}\", \"graph\": {}, \
+                         \"speedup\": {:.4}}}",
+                        r.bench.title(),
+                        row.name,
+                        i,
+                        s
+                    ));
+                }
+            }
+        }
+        j.push_str(&rows.join(",\n"));
+        j.push_str("\n  ]\n}\n");
+        std::fs::write(&out_path, &j).expect("writing BENCH_OUT json");
+        eprintln!("wrote {out_path} ({} result rows)", rows.len());
+    }
 }

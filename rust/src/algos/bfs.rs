@@ -2,7 +2,7 @@
 //! with a compound value).
 
 use crate::combine::MinCombiner;
-use crate::engine::{Context, Mode, NoAgg, VertexProgram};
+use crate::engine::{CombinedPlane, Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Per-vertex BFS state.
@@ -28,6 +28,7 @@ impl VertexProgram for Bfs {
     type Message = u64;
     type Comb = MinCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Push

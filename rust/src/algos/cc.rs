@@ -11,7 +11,7 @@
 //! `EngineConfig::bypass(true)` (the program text is identical either way).
 
 use crate::combine::MinCombiner;
-use crate::engine::{Context, Mode, NoAgg, VertexProgram};
+use crate::engine::{CombinedPlane, Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Connected-components program. Value = current component label.
@@ -23,6 +23,7 @@ impl VertexProgram for ConnectedComponents {
     type Message = u32;
     type Comb = MinCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Pull

@@ -3,7 +3,7 @@
 //! in-degree). Exercises the sum-combiner push path end to end.
 
 use crate::combine::SumCombiner;
-use crate::engine::{Context, Mode, NoAgg, VertexProgram};
+use crate::engine::{CombinedPlane, Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Value = in-degree measured by counting received messages.
@@ -15,6 +15,7 @@ impl VertexProgram for DegreeCount {
     type Message = u64;
     type Comb = SumCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Push

@@ -27,8 +27,8 @@
 
 use crate::combine::MinCombiner;
 use crate::engine::{
-    Context, EngineConfig, GraphSession, Halt, Mode, NoAgg, RunOptions, RunResult, SumAgg,
-    VertexProgram,
+    CombinedPlane, Context, EngineConfig, GraphSession, Halt, Mode, NoAgg, RunOptions, RunResult,
+    SumAgg, VertexProgram,
 };
 use crate::graph::csr::{Csr, VertexId};
 use crate::graph::dynamic::MutationReceipt;
@@ -137,6 +137,7 @@ impl VertexProgram for IncrementalCc {
     type Message = u32;
     type Comb = MinCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Pull
@@ -209,6 +210,7 @@ impl VertexProgram for IncrementalWsssp {
     type Message = f64;
     type Comb = MinCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Push
@@ -297,6 +299,7 @@ impl VertexProgram for DeltaPageRank {
     type Message = f64;
     type Comb = crate::combine::SumCombiner;
     type Agg = SumAgg<f64>;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Pull

@@ -6,7 +6,7 @@
 //! the k-core (the maximal subgraph with all degrees ≥ k).
 
 use crate::combine::SumCombiner;
-use crate::engine::{Context, Mode, NoAgg, VertexProgram};
+use crate::engine::{CombinedPlane, Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Per-vertex k-core state.
@@ -30,6 +30,7 @@ impl VertexProgram for KCore {
     type Message = u64;
     type Comb = SumCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Push

@@ -1,0 +1,205 @@
+//! Label Propagation (community detection) — the first algorithm the
+//! combined plane *cannot* express.
+//!
+//! Synchronous LPA: every vertex starts in its own community (label =
+//! own id); each round it adopts the **mode** of its in-neighbours'
+//! labels (ties broken toward the smallest label, which makes the update
+//! deterministic and independent of message order). The mode of a
+//! multiset is not expressible as a commutative pairwise combine into a
+//! single slot — `mode({a,a,b})` cannot be reconstructed from
+//! `combine(a, combine(a, b))` for any one-message `combine` — so this
+//! program runs on the [`LogPlane`]: every neighbour label survives to
+//! [`Context::recv`] and the vertex takes the mode of the full multiset.
+//!
+//! Synchronous LPA on bipartite-ish structures can oscillate between two
+//! label patterns instead of converging, so the program runs a fixed
+//! number of [`Lpa::rounds`] (the standard practice; a handful of rounds
+//! recovers communities) and then quiesces by itself — no external
+//! [`Halt`](crate::engine::Halt) policy needed. The serial reference
+//! ([`crate::algos::reference::lpa`]) applies the identical update rule
+//! for the identical number of rounds.
+
+use crate::combine::NullCombiner;
+use crate::engine::{Context, LogPlane, Mode, NoAgg, VertexProgram};
+use crate::graph::csr::{Csr, VertexId};
+
+/// Label-propagation program. Value = current community label.
+#[derive(Clone, Copy, Debug)]
+pub struct Lpa {
+    /// Synchronous label-update rounds to run (each vertex broadcasts
+    /// its label in rounds `0..rounds` and updates in rounds
+    /// `1..=rounds`).
+    pub rounds: usize,
+}
+
+impl Default for Lpa {
+    /// Ten rounds — enough for community structure on the catalog-scale
+    /// graphs; raise for deep, thin topologies.
+    fn default() -> Self {
+        Lpa { rounds: 10 }
+    }
+}
+
+/// Mode of a label multiset, ties broken toward the smallest label;
+/// `None` on an empty multiset. Shared verbatim between the engine
+/// program and the serial reference so the two cannot diverge in
+/// tie-breaking. Allocation-free wrappers below feed it: the compute
+/// hot path sorts into a per-thread scratch buffer.
+pub fn mode_of_sorted(sorted: &[u32]) -> Option<u32> {
+    if sorted.is_empty() {
+        return None;
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+    let mut best = sorted[0];
+    let mut best_count = 0usize;
+    let mut i = 0;
+    while i < sorted.len() {
+        let mut j = i + 1;
+        while j < sorted.len() && sorted[j] == sorted[i] {
+            j += 1;
+        }
+        // Strict '>' keeps the first (smallest) label on count ties.
+        if j - i > best_count {
+            best_count = j - i;
+            best = sorted[i];
+        }
+        i = j;
+    }
+    Some(best)
+}
+
+/// [`mode_of_sorted`] over an unsorted multiset, sorting into a
+/// caller-owned scratch buffer (no per-call allocation once the scratch
+/// has warmed up).
+pub fn mode_label_into(labels: &[u32], scratch: &mut Vec<u32>) -> Option<u32> {
+    scratch.clear();
+    scratch.extend_from_slice(labels);
+    scratch.sort_unstable();
+    mode_of_sorted(scratch)
+}
+
+/// Convenience form of [`mode_label_into`] with a throwaway buffer.
+pub fn mode_label(labels: &[u32]) -> Option<u32> {
+    mode_label_into(labels, &mut Vec::new())
+}
+
+impl VertexProgram for Lpa {
+    type Value = u32;
+    type Message = u32;
+    type Comb = NullCombiner;
+    type Agg = NoAgg;
+    type Delivery = LogPlane;
+
+    fn mode(&self) -> Mode {
+        Mode::Push
+    }
+
+    fn combiner(&self) -> NullCombiner {
+        NullCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
+    }
+
+    fn init(&self, _g: &Csr, v: VertexId) -> u32 {
+        v
+    }
+
+    fn compute<C: Context<u32, u32>>(&self, ctx: &mut C, _msg: Option<u32>) {
+        if ctx.superstep() > 0 {
+            // Per-worker scratch: the mode needs a sorted copy of the
+            // inbox, and allocating one per vertex per round would be
+            // the dominant cost of the compute phase.
+            thread_local! {
+                static SCRATCH: std::cell::RefCell<Vec<u32>> =
+                    std::cell::RefCell::new(Vec::new());
+            }
+            let label = SCRATCH.with(|s| mode_label_into(ctx.recv(), &mut s.borrow_mut()));
+            if let Some(label) = label {
+                *ctx.value_mut() = label;
+            }
+        }
+        if ctx.superstep() < self.rounds {
+            // Every vertex republishes every round — the full neighbour
+            // multiset is what the mode is defined over, so staying
+            // active (not halting) until the final round is part of the
+            // algorithm, not an inefficiency.
+            let label = *ctx.value();
+            ctx.broadcast(label);
+        } else {
+            ctx.vote_to_halt();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::reference;
+    use crate::engine::{EngineConfig, GraphSession};
+    use crate::graph::gen;
+    use crate::metrics::DeliveryPlaneKind;
+
+    #[test]
+    fn mode_label_takes_majority_and_breaks_ties_low() {
+        assert_eq!(mode_label(&[]), None);
+        assert_eq!(mode_label(&[5]), Some(5));
+        assert_eq!(mode_label(&[3, 7, 3]), Some(3));
+        assert_eq!(mode_label(&[7, 3, 7, 3]), Some(3), "tie -> smallest");
+        assert_eq!(mode_label(&[9, 9, 1, 2, 9, 1]), Some(9));
+        // The scratch-reusing form agrees and leaves the buffer reusable.
+        let mut scratch = Vec::new();
+        assert_eq!(mode_label_into(&[7, 3, 7, 3], &mut scratch), Some(3));
+        assert_eq!(mode_label_into(&[4], &mut scratch), Some(4));
+        assert_eq!(mode_label_into(&[], &mut scratch), None);
+        assert_eq!(mode_of_sorted(&[1, 2, 2, 9]), Some(2));
+    }
+
+    #[test]
+    fn two_cliques_with_a_bridge_get_two_communities() {
+        // Two K5s joined by one edge: LPA must settle each clique on one
+        // label and not bleed across the bridge.
+        let mut edges = Vec::new();
+        for a in 0..5u32 {
+            for b in 0..5u32 {
+                if a != b {
+                    edges.push((a, b));
+                    edges.push((a + 5, b + 5));
+                }
+            }
+        }
+        edges.push((4, 5));
+        edges.push((5, 4));
+        let g = crate::graph::GraphBuilder::new(10).dedup(true).edges(&edges).build();
+        let r = GraphSession::with_config(&g, EngineConfig::default().threads(3))
+            .run(&Lpa::default());
+        assert_eq!(r.metrics.delivery_plane, DeliveryPlaneKind::Log);
+        let left = r.values[0];
+        let right = r.values[9];
+        for v in 0..5 {
+            assert_eq!(r.values[v], left, "left clique split");
+        }
+        for v in 5..10 {
+            assert_eq!(r.values[v], right, "right clique split");
+        }
+        assert_ne!(left, right, "bridge bled a label across");
+    }
+
+    #[test]
+    fn matches_serial_reference_and_quiesces_by_itself() {
+        let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 31);
+        let p = Lpa { rounds: 6 };
+        let r = GraphSession::with_config(&g, EngineConfig::default().threads(4)).run(&p);
+        assert_eq!(r.values, reference::lpa(&g, 6));
+        // rounds broadcast supersteps + one final update-only superstep.
+        assert_eq!(r.metrics.num_supersteps(), 7);
+        assert_eq!(
+            r.metrics.halt_reason,
+            crate::metrics::HaltReason::Quiescence
+        );
+        // Every payload is retained — nothing may be folded on this plane.
+        assert_eq!(r.metrics.retained_messages, r.metrics.total_messages());
+        assert_eq!(r.metrics.combined_messages, 0);
+    }
+}

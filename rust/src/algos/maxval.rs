@@ -2,7 +2,7 @@
 //! here as an API exercise for push mode with a max-combiner.
 
 use crate::combine::MaxCombiner;
-use crate::engine::{Context, Mode, NoAgg, VertexProgram};
+use crate::engine::{CombinedPlane, Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Every vertex converges to the maximum initial value in its weakly
@@ -18,6 +18,7 @@ impl<F: Fn(VertexId) -> u64 + Send + Sync> VertexProgram for MaxValue<F> {
     type Message = u64;
     type Comb = MaxCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Push

@@ -8,7 +8,10 @@
 //! ([`DanglingPageRank`]), and warm-started, epoch-validated incremental
 //! recomputation over evolving graphs ([`IncrementalCc`],
 //! [`IncrementalWsssp`], [`DeltaPageRank`] — see
-//! [`incremental`]). Per the paper's programmability thesis, **no
+//! [`incremental`]), and two **non-combinable** programs that need the
+//! log delivery plane's full message multisets ([`Lpa`] label
+//! propagation and [`Triangles`] per-vertex triangle counting — see
+//! `combine/plane.rs`). Per the paper's programmability thesis, **no
 //! algorithm references any optimisation**: the same `compute` text runs
 //! under every engine configuration.
 
@@ -17,11 +20,13 @@ pub mod cc;
 pub mod degree;
 pub mod incremental;
 pub mod kcore;
+pub mod lpa;
 pub mod maxval;
 pub mod pagerank;
 pub mod pagerank_dangling;
 pub mod reference;
 pub mod sssp;
+pub mod triangles;
 
 pub use bfs::Bfs;
 pub use cc::ConnectedComponents;
@@ -30,7 +35,9 @@ pub use incremental::{
     DeltaPageRank, IncrementalCc, IncrementalState, IncrementalWsssp,
 };
 pub use kcore::{CoreState, KCore};
+pub use lpa::Lpa;
 pub use maxval::MaxValue;
 pub use pagerank::PageRank;
 pub use pagerank_dangling::DanglingPageRank;
 pub use sssp::{Sssp, WeightedSssp, UNREACHED};
+pub use triangles::Triangles;

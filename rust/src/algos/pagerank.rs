@@ -6,7 +6,7 @@
 //! iteration count (the paper uses 10) bounds the run.
 
 use crate::combine::SumCombiner;
-use crate::engine::{Context, Mode, NoAgg, VertexProgram};
+use crate::engine::{CombinedPlane, Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// PageRank program. Value = current rank.
@@ -33,6 +33,7 @@ impl VertexProgram for PageRank {
     type Message = f64;
     type Comb = SumCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Pull

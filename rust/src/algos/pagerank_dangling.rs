@@ -12,7 +12,7 @@
 //! [`Halt`]: crate::engine::Halt
 
 use crate::combine::SumCombiner;
-use crate::engine::{Context, Mode, SumAgg, VertexProgram};
+use crate::engine::{CombinedPlane, Context, Mode, SumAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// PageRank with uniform dangling-mass redistribution.
@@ -38,6 +38,7 @@ impl VertexProgram for DanglingPageRank {
     type Message = f64;
     type Comb = SumCombiner;
     type Agg = SumAgg<f64>;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Pull

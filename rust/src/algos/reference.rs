@@ -126,6 +126,65 @@ pub fn dijkstra(g: &Csr, source: VertexId) -> Vec<EdgeWeight> {
     dist
 }
 
+/// Serial synchronous label propagation with the same semantics as
+/// [`crate::algos::Lpa`]: `rounds` rounds; each round every vertex
+/// adopts the mode of its in-neighbours' previous-round labels (ties to
+/// the smallest label, via the shared [`mode_of_sorted`] core), keeping
+/// its label when it has no in-neighbours.
+///
+/// [`mode_of_sorted`]: crate::algos::lpa::mode_of_sorted
+pub fn lpa(g: &Csr, rounds: usize) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut labels: Vec<u32> = (0..n as u32).collect();
+    let mut multiset: Vec<u32> = Vec::new();
+    for _ in 0..rounds {
+        let next: Vec<u32> = g
+            .vertices()
+            .map(|v| {
+                multiset.clear();
+                multiset.extend(g.in_neighbors(v).iter().map(|&u| labels[u as usize]));
+                multiset.sort_unstable();
+                crate::algos::lpa::mode_of_sorted(&multiset).unwrap_or(labels[v as usize])
+            })
+            .collect();
+        labels = next;
+    }
+    labels
+}
+
+/// Serial per-vertex triangle counts with the same semantics as
+/// [`crate::algos::Triangles`]: for every wedge `w < u < x` (edge
+/// `w→u`, edge `u→x`), a closing edge `w ∈ N_out(x)` counts one
+/// triangle at each of the three corners. Exactly mirrors the
+/// vertex-centric enumeration (including its message multiplicities),
+/// so on the contract's simple undirected graphs it counts each
+/// triangle once per corner.
+pub fn triangles(g: &Csr) -> Vec<u64> {
+    let n = g.num_vertices();
+    let mut count = vec![0u64; n];
+    for u in g.vertices() {
+        let lows: Vec<VertexId> = g
+            .in_neighbors(u)
+            .iter()
+            .copied()
+            .filter(|&w| w < u)
+            .collect();
+        if lows.is_empty() {
+            continue;
+        }
+        for &x in g.out_neighbors(u).iter().filter(|&&x| x > u) {
+            for &w in &lows {
+                if g.out_neighbors(x).binary_search(&w).is_ok() {
+                    count[w as usize] += 1;
+                    count[u as usize] += 1;
+                    count[x as usize] += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +239,23 @@ mod tests {
         for &r in &pr {
             assert!((r - 0.05).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn lpa_zero_rounds_is_identity_and_star_converges_to_hub() {
+        let g = gen::star(5);
+        assert_eq!(lpa(&g, 0), vec![0, 1, 2, 3, 4]);
+        // Star: every leaf's only in-neighbour is the hub (0); the hub
+        // sees all leaves (distinct labels → tie → smallest).
+        let one = lpa(&g, 1);
+        assert_eq!(one[1..], [0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn triangles_on_k4_is_three_per_corner() {
+        let g = gen::complete(4);
+        assert_eq!(triangles(&g), vec![3, 3, 3, 3]);
+        assert!(triangles(&gen::ring(6)).iter().all(|&c| c == 0));
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! serial Dijkstra reference.
 
 use crate::combine::MinCombiner;
-use crate::engine::{Context, Mode, NoAgg, VertexProgram};
+use crate::engine::{CombinedPlane, Context, Mode, NoAgg, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 
 /// Distance value for unreached vertices.
@@ -42,6 +42,7 @@ impl VertexProgram for Sssp {
     type Message = u64;
     type Comb = MinCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Push
@@ -113,6 +114,7 @@ impl VertexProgram for WeightedSssp {
     type Message = f64;
     type Comb = MinCombiner;
     type Agg = NoAgg;
+    type Delivery = CombinedPlane;
 
     fn mode(&self) -> Mode {
         Mode::Push

@@ -77,6 +77,28 @@ macro_rules! impl_sum {
 
 impl_sum!(u32, u64, i32, i64, f32, f64);
 
+/// Placeholder combiner for log-plane programs.
+///
+/// [`LogPlane`](crate::combine::plane::LogPlane) delivery retains every
+/// message individually, so the program's `Comb` type is never invoked —
+/// but [`VertexProgram`](crate::engine::VertexProgram) still requires
+/// one. `NullCombiner` fills the slot and panics if anything actually
+/// calls it (which would mean a non-combinable program was run on the
+/// combined plane — a programming error worth failing loudly on, since
+/// silently folding a multiset algorithm's messages corrupts results).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullCombiner;
+
+impl<M: Copy + Send + Sync> Combiner<M> for NullCombiner {
+    fn combine(&self, _a: M, _b: M) -> M {
+        panic!(
+            "NullCombiner cannot combine: it is the log-plane placeholder \
+             (log delivery retains messages, it never folds them) — give \
+             combined-plane programs a real combiner"
+        )
+    }
+}
+
 /// A combiner defined by a plain function, with optionally-declared
 /// neutral element — this is the "user writes any arbitrary combination
 /// operation" path the paper's hybrid design enables.

@@ -16,13 +16,21 @@
 //! Strategies operate on [`slot::MsgSlot`]s, which are embedded either in
 //! an interleaved vertex record (baseline layout) or in an externalised
 //! hot array (§IV) — see [`crate::layout`].
+//!
+//! Slot + strategy together form the **combined delivery plane**
+//! ([`plane::CombinedPlane`]) — one of two pluggable planes. The other,
+//! [`plane::LogPlane`], retains every message in per-vertex append-only
+//! logs for the non-combinable algorithms (label propagation, triangle
+//! counting) no single-slot combine can express — see [`plane`].
 
 pub mod combiner;
+pub mod plane;
 pub mod slot;
 pub mod spinlock;
 pub mod strategy;
 
-pub use combiner::{Combiner, MaxCombiner, MinCombiner, SumCombiner};
+pub use combiner::{Combiner, MaxCombiner, MinCombiner, NullCombiner, SumCombiner};
+pub use plane::{CombinedPlane, DeliveryPlane, LogPlane, MessageLog};
 pub use slot::{MessageValue, MsgSlot};
 pub use spinlock::SpinLock;
 pub use strategy::Strategy;

@@ -1,0 +1,306 @@
+//! Pluggable message-delivery planes.
+//!
+//! The paper's machinery (one combinable [`MsgSlot`] per vertex, merged
+//! through a [`Strategy`]) assumes every algorithm's messages fold into a
+//! single slot via a commutative combine. A large class of vertex-centric
+//! workloads is **non-combinable** — label propagation needs the full
+//! multiset of neighbour labels to take a mode, triangle counting needs
+//! every candidate pair — and no combine operation can represent them in
+//! one word. This module generalises delivery behind the existing API:
+//!
+//! - [`CombinedPlane`] — the default: the existing `MsgSlot` +
+//!   `Strategy::{deliver, deliver_exclusive}` hybrid/lock/CAS machinery,
+//!   untouched and bit-identical to the pre-plane engine. Programs
+//!   receive the folded message as `compute`'s `msg` argument.
+//! - [`LogPlane`] — per-vertex append-only message logs: each worker
+//!   appends `(dst, msg)` pairs to its own segment buffer during the
+//!   compute phase (contention-free — the log-plane analogue of the
+//!   hybrid combiner's lock-free fast path), and the segments are merged
+//!   into a CSR-shaped per-vertex log at the superstep barrier. Programs
+//!   read the full multiset via `Context::recv()`.
+//!
+//! A program selects its plane with the [`VertexProgram::Delivery`]
+//! associated type; the two selector types carry no data — the runtime
+//! state of the log plane lives in a [`MessageLog`], built (and pooled,
+//! epoch-stamped, like vertex stores) by the `GraphSession`.
+//!
+//! Log order is **unspecified** (it depends on worker scheduling), so
+//! log-plane programs must fold `recv()` commutatively — the same
+//! discipline combiners already impose, minus the requirement that the
+//! fold compress into one message.
+//!
+//! [`MsgSlot`]: crate::combine::slot::MsgSlot
+//! [`Strategy`]: crate::combine::strategy::Strategy
+//! [`VertexProgram::Delivery`]: crate::engine::VertexProgram::Delivery
+
+use crate::combine::slot::MessageValue;
+use crate::graph::csr::VertexId;
+use crate::layout::SyncCell;
+use crate::util::CachePadded;
+
+/// Type-level selector for a program's message-delivery plane.
+///
+/// Implemented by exactly two types — [`CombinedPlane`] and
+/// [`LogPlane`] — and consumed by the engine as a compile-time constant,
+/// so the combined path monomorphises to exactly the pre-plane code.
+pub trait DeliveryPlane<M: MessageValue>: Send + Sync + 'static {
+    /// Whether this plane retains messages individually (log plane)
+    /// instead of folding them into one mailbox slot (combined plane).
+    /// The engine's only plane dispatch; reporting uses
+    /// [`DeliveryPlaneKind`](crate::metrics::DeliveryPlaneKind).
+    const IS_LOG: bool;
+}
+
+/// The combined plane: one [`MsgSlot`](crate::combine::slot::MsgSlot)
+/// per vertex, concurrent senders merged by the configured
+/// [`Strategy`](crate::combine::strategy::Strategy) — the paper's §III
+/// machinery, bit-identical to the engine before planes existed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CombinedPlane;
+
+impl<M: MessageValue> DeliveryPlane<M> for CombinedPlane {
+    const IS_LOG: bool = false;
+}
+
+/// The log plane: per-vertex append-only message logs, populated through
+/// per-worker segment buffers merged at the superstep barrier. Programs
+/// receive the full message multiset via `Context::recv()`. Push mode
+/// only (a pull-mode program publishes *one* outbox message per
+/// superstep, which is the combined plane's shape by construction).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LogPlane;
+
+impl<M: MessageValue> DeliveryPlane<M> for LogPlane {
+    const IS_LOG: bool = true;
+}
+
+/// One worker's append segment: `(destination, message)` pairs in send
+/// order. Written by exactly one worker during compute/flush, drained
+/// single-threaded at the barrier — the same phase discipline the
+/// partitioned engine's remote buffers use.
+pub type Segment<M> = Vec<(VertexId, M)>;
+
+/// Runtime state of the log plane for one run: per-worker segment
+/// buffers plus the merged per-vertex logs of the current superstep,
+/// stored CSR-style (one offsets array, one flat data array) so a
+/// vertex's inbox is a contiguous `&[M]`.
+///
+/// Sessions pool one `MessageLog` per message type and re-prime it with
+/// [`MessageLog::ensure_shape`] across runs (epoch-stamped like pooled
+/// vertex stores); all slabs keep their capacity.
+pub struct MessageLog<M: MessageValue> {
+    /// Per-worker append buffers, padded so two workers' headers never
+    /// share a cache line. Worker `tid` writes only `segments[tid]`.
+    segments: Vec<CachePadded<SyncCell<Segment<M>>>>,
+    /// `offsets[v]..offsets[v+1]` indexes `data` — the messages delivered
+    /// to `v` last superstep (read by this superstep's compute).
+    offsets: Vec<usize>,
+    /// Flat message payloads of the current superstep.
+    data: Vec<M>,
+    /// Scratch for building the next epoch (swapped in at the barrier).
+    next_offsets: Vec<usize>,
+    next_data: Vec<M>,
+    /// Per-vertex fill cursors reused across merges.
+    cursors: Vec<usize>,
+    /// Graph mutation epoch this log was last primed against (see
+    /// `graph/dynamic.rs`; diagnostic only — the log is fully cleared at
+    /// every checkout, so a stale tag never leaks state).
+    epoch_tag: u64,
+}
+
+impl<M: MessageValue> MessageLog<M> {
+    /// Empty log for `n` vertices and `workers` segment buffers.
+    pub fn new(n: usize, workers: usize) -> Self {
+        let mut log = MessageLog {
+            segments: Vec::new(),
+            offsets: vec![0; n + 1],
+            data: Vec::new(),
+            next_offsets: Vec::new(),
+            next_data: Vec::new(),
+            cursors: Vec::new(),
+            epoch_tag: 0,
+        };
+        log.ensure_shape(n, workers);
+        log
+    }
+
+    /// Re-prime for a fresh run: size to `n` vertices, guarantee at least
+    /// `workers` segments, clear every segment and both epoch buffers —
+    /// without shrinking any allocation. The post-state is
+    /// indistinguishable from a fresh [`MessageLog::new`].
+    pub fn ensure_shape(&mut self, n: usize, workers: usize) {
+        let workers = workers.max(1);
+        if self.segments.len() < workers {
+            self.segments
+                .resize_with(workers, || CachePadded::new(SyncCell::new(Vec::new())));
+        }
+        for seg in &mut self.segments {
+            seg.get_mut().clear();
+        }
+        self.offsets.clear();
+        self.offsets.resize(n + 1, 0);
+        self.data.clear();
+        self.next_offsets.clear();
+        self.next_data.clear();
+        self.cursors.clear();
+    }
+
+    /// Number of vertices this log is shaped for.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Worker segments available.
+    #[inline]
+    pub fn workers(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Worker `tid`'s append segment. Compute/flush phases only: each
+    /// worker writes its own segment exclusively (the interior
+    /// mutability is sound under the engine's phase discipline).
+    #[inline]
+    pub fn seg(&self, tid: usize) -> &SyncCell<Segment<M>> {
+        &self.segments[tid]
+    }
+
+    /// The messages delivered to `v` last superstep, in unspecified
+    /// order. Empty when nothing arrived.
+    #[inline]
+    pub fn inbox(&self, v: VertexId) -> &[M] {
+        let v = v as usize;
+        &self.data[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Messages currently buffered in worker segments (between a compute
+    /// phase and its merge; diagnostic/test support).
+    pub fn pending(&self) -> usize {
+        self.segments.iter().map(|s| s.get().len()).sum()
+    }
+
+    /// Merge every worker segment into the per-vertex logs of the next
+    /// superstep, clear the segments and swap epochs. Single-threaded
+    /// barrier phase. Returns the number of messages merged.
+    ///
+    /// Deterministic given a deterministic vertex→worker assignment
+    /// (worker order, then append order — mirroring
+    /// `RemoteBuffers::drain_for`); FCFS schedules may permute the log,
+    /// which is why `recv()` folds must be commutative.
+    pub fn merge_segments(&mut self) -> u64 {
+        let n = self.num_vertices();
+        self.next_offsets.clear();
+        self.next_offsets.resize(n + 1, 0);
+        for seg in &self.segments {
+            for &(dst, _) in seg.get().iter() {
+                self.next_offsets[dst as usize + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            self.next_offsets[i + 1] += self.next_offsets[i];
+        }
+        let total = self.next_offsets[n];
+        self.cursors.clear();
+        self.cursors.extend_from_slice(&self.next_offsets[..n]);
+        self.next_data.clear();
+        self.next_data.resize(total, M::from_bits(0));
+        for seg in &self.segments {
+            let buf = seg.get_mut();
+            for &(dst, m) in buf.iter() {
+                let c = &mut self.cursors[dst as usize];
+                self.next_data[*c] = m;
+                *c += 1;
+            }
+            buf.clear();
+        }
+        std::mem::swap(&mut self.offsets, &mut self.next_offsets);
+        std::mem::swap(&mut self.data, &mut self.next_data);
+        total as u64
+    }
+
+    /// The mutation epoch this log was last primed against.
+    #[inline]
+    pub fn epoch_tag(&self) -> u64 {
+        self.epoch_tag
+    }
+
+    /// Stamp the log with the mutation epoch it is being primed for.
+    pub fn set_epoch_tag(&mut self, epoch: u64) {
+        self.epoch_tag = epoch;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plane_selectors_expose_their_kind() {
+        assert!(!<CombinedPlane as DeliveryPlane<u64>>::IS_LOG);
+        assert!(<LogPlane as DeliveryPlane<u64>>::IS_LOG);
+    }
+
+    #[test]
+    fn merge_groups_messages_by_destination_in_worker_then_push_order() {
+        let mut log: MessageLog<u64> = MessageLog::new(4, 3);
+        log.seg(2).get_mut().push((1, 100));
+        log.seg(0).get_mut().push((1, 101));
+        log.seg(0).get_mut().push((3, 102));
+        log.seg(0).get_mut().push((1, 103));
+        log.seg(1).get_mut().push((0, 104));
+        assert_eq!(log.pending(), 5);
+        assert_eq!(log.merge_segments(), 5);
+        assert_eq!(log.pending(), 0, "segments drained");
+        assert_eq!(log.inbox(0), &[104]);
+        assert_eq!(log.inbox(1), &[101, 103, 100], "worker order, then push order");
+        assert_eq!(log.inbox(2), &[] as &[u64]);
+        assert_eq!(log.inbox(3), &[102]);
+    }
+
+    #[test]
+    fn merge_replaces_the_previous_epoch() {
+        let mut log: MessageLog<u32> = MessageLog::new(2, 1);
+        log.seg(0).get_mut().push((0, 7));
+        log.merge_segments();
+        assert_eq!(log.inbox(0), &[7]);
+        // Next superstep sends nothing to 0 — its inbox must empty out.
+        log.seg(0).get_mut().push((1, 9));
+        assert_eq!(log.merge_segments(), 1);
+        assert_eq!(log.inbox(0), &[] as &[u32]);
+        assert_eq!(log.inbox(1), &[9]);
+    }
+
+    #[test]
+    fn ensure_shape_resets_to_fresh_state_without_shrinking() {
+        let mut log: MessageLog<u64> = MessageLog::new(3, 2);
+        log.seg(1).get_mut().push((2, 5));
+        log.merge_segments();
+        log.seg(0).get_mut().push((0, 6));
+        log.set_epoch_tag(4);
+        log.ensure_shape(5, 4);
+        assert_eq!(log.num_vertices(), 5);
+        assert_eq!(log.workers(), 4);
+        assert_eq!(log.pending(), 0);
+        for v in 0..5 {
+            assert_eq!(log.inbox(v), &[] as &[u64], "v{v}");
+        }
+        assert_eq!(log.epoch_tag(), 4, "epoch tag survives re-priming");
+        // Shrinking the vertex count also works (pooled across graphs is
+        // not a thing today — sessions are per-graph — but the shape
+        // contract should not depend on growth only).
+        log.ensure_shape(2, 1);
+        assert_eq!(log.num_vertices(), 2);
+        assert!(log.workers() >= 1);
+    }
+
+    #[test]
+    fn float_messages_round_trip_through_the_log() {
+        let mut log: MessageLog<f64> = MessageLog::new(2, 1);
+        log.seg(0).get_mut().push((0, -0.0));
+        log.seg(0).get_mut().push((0, 2.5));
+        log.merge_segments();
+        assert_eq!(log.inbox(0).len(), 2);
+        assert_eq!(log.inbox(0)[0].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(log.inbox(0)[1], 2.5);
+    }
+}

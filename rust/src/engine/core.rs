@@ -24,6 +24,13 @@
 //!   3. **apply** — the old barrier: epoch swap, pull outbox clearing,
 //!      aggregator merge, convergence.
 //!
+//! Both substrates serve both **delivery planes** (`combine/plane.rs`):
+//! combined-plane sends run the strategy machinery above unchanged,
+//! while log-plane sends append `(dst, msg)` to the sending worker's
+//! segment (cross-shard ones batch-route through the same remote
+//! buffers and are appended by the flush task), and the barrier merges
+//! all segments into per-vertex logs served to `Context::recv`.
+//!
 //! The mode/bypass/substrate branches sit at superstep granularity,
 //! outside the per-vertex hot loop, and the store type is monomorphised
 //! so layout differences compile down to pointer arithmetic.
@@ -34,6 +41,7 @@
 //! [`ShardState`]) and hand those parts back after the run so the next
 //! run skips the allocations.
 
+use crate::combine::plane::{MessageLog, Segment};
 use crate::combine::{Combiner, MessageValue, Strategy};
 use crate::engine::session::Halt;
 use crate::engine::shard::ShardState;
@@ -41,7 +49,7 @@ use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, RunResult
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
 use crate::graph::partition::PartitionPlan;
 use crate::layout::{SyncCell, VertexStore};
-use crate::metrics::{HaltReason, RunMetrics, ScheduleFallback, SuperstepStats};
+use crate::metrics::{DeliveryPlaneKind, HaltReason, RunMetrics, ScheduleFallback, SuperstepStats};
 use crate::sched::{parallel_for, parallel_for_hinted, Schedule};
 use crate::util::bitset::{AtomicBitSet, BitSet};
 use crate::util::timer::Timer;
@@ -52,7 +60,7 @@ use std::time::Duration;
 
 /// Reusable allocations a [`crate::engine::GraphSession`] threads through
 /// consecutive runs.
-pub(crate) struct EngineSetup<S> {
+pub(crate) struct EngineSetup<S, M: MessageValue> {
     /// Value-initialised store (fresh-built or pool-recycled and reset).
     pub store: S,
     /// Whether `store` came out of the session pool.
@@ -64,6 +72,9 @@ pub(crate) struct EngineSetup<S> {
     /// Per-shard runtime state when the run is partitioned (plan,
     /// activity bit slabs, remote buffers), pooled by the session.
     pub partition: Option<ShardState>,
+    /// Log-plane mailbox state (`None` on combined-plane runs), pooled
+    /// and epoch-stamped by the session like the store.
+    pub log: Option<MessageLog<M>>,
 }
 
 /// The engine: graph + program + store + activity tracking.
@@ -93,6 +104,11 @@ pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     agg_prev: Option<AggValue<P>>,
     /// Per-shard runtime state (None on flat runs).
     partition: Option<ShardState>,
+    /// Log-plane mailbox state (None on combined-plane runs). When set,
+    /// sends append to per-worker segments instead of combining into
+    /// mailbox slots, and compute reads the merged log via
+    /// `Context::recv` — see `combine/plane.rs`.
+    log: Option<MessageLog<P::Message>>,
 }
 
 /// Shard routing for one vertex's context during partitioned scatter:
@@ -123,6 +139,12 @@ struct Ctx<'a, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     agg_prev: Option<&'a AggValue<P>>,
     /// Partitioned scatter: the shard-routing context (None = flat).
     route: Option<ShardRoute<'a>>,
+    /// Log-plane: this vertex's merged inbox from last superstep
+    /// (always empty on combined-plane runs).
+    inbox: &'a [P::Message],
+    /// Log-plane: this worker's append segment (None = combined plane,
+    /// where sends go through the strategy into mailbox slots).
+    log_seg: Option<&'a SyncCell<Segment<P::Message>>>,
     superstep: usize,
     v: VertexId,
     halted: bool,
@@ -181,13 +203,19 @@ where
              versions only support broadcast() — see paper §II"
         );
         self.msg_counter.fetch_add(1, Ordering::Relaxed);
-        match &self.route {
-            None => {
+        match (&self.route, self.log_seg) {
+            (None, None) => {
                 self.strategy
                     .deliver(self.store.next_slot(dst), msg, self.comb);
                 self.active_next.set(dst as usize);
             }
-            Some(r) => {
+            (None, Some(seg)) => {
+                // Log plane, flat: contention-free append to this
+                // worker's segment; merged at the barrier.
+                seg.get_mut().push((dst, msg));
+                self.active_next.set(dst as usize);
+            }
+            (Some(r), None) => {
                 let d = r.plan.shard_of(dst);
                 if d == r.shard {
                     // Shard-local: this worker owns the destination's
@@ -197,6 +225,21 @@ where
                     r.state.active.set_in(d, dst as usize);
                 } else {
                     // Cross-shard: batch for the flush phase.
+                    r.cross.fetch_add(1, Ordering::Relaxed);
+                    r.state.buffers.push(r.tid, d, (dst, msg.to_bits()));
+                }
+            }
+            (Some(r), Some(seg)) => {
+                let d = r.plan.shard_of(dst);
+                if d == r.shard {
+                    // Shard-local log append: same segment as flat (the
+                    // merge at the barrier is global either way).
+                    seg.get_mut().push((dst, msg));
+                    r.state.active.set_in(d, dst as usize);
+                } else {
+                    // Cross-shard log messages batch-route through the
+                    // same remote buffers as combined ones; the flush
+                    // task appends them to its own segment.
                     r.cross.fetch_add(1, Ordering::Relaxed);
                     r.state.buffers.push(r.tid, d, (dst, msg.to_bits()));
                 }
@@ -212,15 +255,22 @@ where
                 let nbrs = self.g.out_neighbors(self.v);
                 self.msg_counter
                     .fetch_add(nbrs.len() as u64, Ordering::Relaxed);
-                match &self.route {
-                    None => {
+                match (&self.route, self.log_seg) {
+                    (None, None) => {
                         for &dst in nbrs {
                             self.strategy
                                 .deliver(self.store.next_slot(dst), msg, self.comb);
                             self.active_next.set(dst as usize);
                         }
                     }
-                    Some(r) => {
+                    (None, Some(seg)) => {
+                        let buf = seg.get_mut();
+                        for &dst in nbrs {
+                            buf.push((dst, msg));
+                            self.active_next.set(dst as usize);
+                        }
+                    }
+                    (Some(r), None) => {
                         for &dst in nbrs {
                             let d = r.plan.shard_of(dst);
                             if d == r.shard {
@@ -229,6 +279,19 @@ where
                                     msg,
                                     self.comb,
                                 );
+                                r.state.active.set_in(d, dst as usize);
+                            } else {
+                                r.cross.fetch_add(1, Ordering::Relaxed);
+                                r.state.buffers.push(r.tid, d, (dst, msg.to_bits()));
+                            }
+                        }
+                    }
+                    (Some(r), Some(seg)) => {
+                        let buf = seg.get_mut();
+                        for &dst in nbrs {
+                            let d = r.plan.shard_of(dst);
+                            if d == r.shard {
+                                buf.push((dst, msg));
                                 r.state.active.set_in(d, dst as usize);
                             } else {
                                 r.cross.fetch_add(1, Ordering::Relaxed);
@@ -282,6 +345,22 @@ where
     fn aggregated(&self) -> Option<&AggValue<P>> {
         self.agg_prev
     }
+
+    #[inline]
+    fn recv(&self) -> &[P::Message] {
+        // Loud failure for the one silent misuse the plane API would
+        // otherwise allow: a multiset program left on the combined plane
+        // would see permanently empty inboxes and quietly return its
+        // init values (the inverse mistake — combined program on the
+        // log plane — already panics via NullCombiner).
+        assert!(
+            self.log_seg.is_some(),
+            "recv() requires a log-plane program; set `type Delivery = \
+             LogPlane` — combined-plane messages arrive pre-folded as \
+             compute's `msg` argument"
+        );
+        self.inbox
+    }
 }
 
 /// One-time stderr note for the documented EdgeCentric + bypass
@@ -312,7 +391,7 @@ where
         program: &'g P,
         cfg: EngineConfig,
         halt: Halt<AggValue<P>>,
-        setup: EngineSetup<S>,
+        setup: EngineSetup<S, P::Message>,
     ) -> Self {
         let EngineSetup {
             store,
@@ -320,13 +399,26 @@ where
             mut bitsets,
             scan_weights,
             partition,
+            log,
         } = setup;
         let comb = program.combiner();
         let agg = program.aggregator();
         let mode = program.mode();
         let n = g.num_vertices();
 
-        if mode == Mode::Push && cfg.strategy == Strategy::CasNeutral {
+        // The log plane is push-only: a pull-mode program publishes one
+        // outbox message per superstep, which is the combined plane's
+        // shape by construction (and the slot machinery already serves).
+        assert!(
+            log.is_none() || mode == Mode::Push,
+            "log-plane programs must use Mode::Push — pull single-broadcast \
+             publishes one combinable outbox message by design"
+        );
+
+        // CAS-neutral slot pre-loading only applies to the combined
+        // plane; log-plane sends never touch the slots (and the
+        // NullCombiner placeholder has no neutral element to load).
+        if mode == Mode::Push && cfg.strategy == Strategy::CasNeutral && log.is_none() {
             for v in g.vertices() {
                 cfg.strategy.reset_slot(store.cur_slot(v), &comb);
                 cfg.strategy.reset_slot(store.next_slot(v), &comb);
@@ -379,15 +471,25 @@ where
             scan_weights,
             agg_prev: None,
             partition,
+            log,
         }
     }
 
     /// Disassemble after a run so the session can pool the parts.
-    pub(crate) fn into_parts(self) -> (S, Vec<AtomicBitSet>, Option<ShardState>) {
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn into_parts(
+        self,
+    ) -> (
+        S,
+        Vec<AtomicBitSet>,
+        Option<ShardState>,
+        Option<MessageLog<P::Message>>,
+    ) {
         (
             self.store,
             vec![self.active_next, self.bcast_next, self.bcast_cur],
             self.partition,
+            self.log,
         )
     }
 
@@ -395,6 +497,7 @@ where
     /// partitioned `run_vertex` closures so the two substrates cannot
     /// silently diverge in what a program observes.
     #[inline]
+    #[allow(clippy::too_many_arguments)]
     fn make_ctx<'a>(
         &'a self,
         v: VertexId,
@@ -403,6 +506,8 @@ where
         agg_cell: &'a SyncCell<(AggValue<P>, bool)>,
         agg_prev: Option<&'a AggValue<P>>,
         route: Option<ShardRoute<'a>>,
+        inbox: &'a [P::Message],
+        log_seg: Option<&'a SyncCell<Segment<P::Message>>>,
     ) -> Ctx<'a, P, S> {
         Ctx {
             g: self.g,
@@ -417,6 +522,8 @@ where
             agg_cell,
             agg_prev,
             route,
+            inbox,
+            log_seg,
             superstep,
             v,
             halted: false,
@@ -504,6 +611,11 @@ where
         let total = Timer::start();
         let mut metrics = RunMetrics {
             store_reused: self.store_reused,
+            delivery_plane: if self.log.is_some() {
+                DeliveryPlaneKind::Log
+            } else {
+                DeliveryPlaneKind::Combined
+            },
             ..RunMetrics::default()
         };
         if let Some(state) = &self.partition {
@@ -544,6 +656,10 @@ where
         let counters: Vec<CachePadded<AtomicU64>> =
             (0..threads).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
         let pull_comb_counter = AtomicU64::new(0);
+        // Combined plane: payloads handed to compute (vertices whose
+        // mailbox held a message); the run-level difference against
+        // total sends/combines is what the combiner folded away.
+        let delivered_counter = AtomicU64::new(0);
         let neutral = self.agg.neutral();
         let agg_cells: Vec<CachePadded<SyncCell<(AggValue<P>, bool)>>> = (0..threads)
             .map(|_| CachePadded::new(SyncCell::new((neutral.clone(), false))))
@@ -609,8 +725,19 @@ where
 
                 let agg_cells = &agg_cells;
                 let agg_prev_now = self.agg_prev.as_ref();
+                let log_ref = self.log.as_ref();
+                let delivered_counter = &delivered_counter;
                 let run_vertex = |tid: usize, v: VertexId| {
-                    let msg = engine.collect_msg(v, pull_comb_counter, None);
+                    let (msg, inbox): (Option<P::Message>, &[P::Message]) = match log_ref {
+                        None => {
+                            let m = engine.collect_msg(v, pull_comb_counter, None);
+                            if m.is_some() {
+                                delivered_counter.fetch_add(1, Ordering::Relaxed);
+                            }
+                            (m, &[])
+                        }
+                        Some(l) => (None, l.inbox(v)),
+                    };
                     let mut ctx = engine.make_ctx(
                         v,
                         superstep_now,
@@ -618,6 +745,8 @@ where
                         &agg_cells[tid],
                         agg_prev_now,
                         None,
+                        inbox,
+                        log_ref.map(|l| l.seg(tid)),
                     );
                     engine.program.compute(&mut ctx, msg);
                     if !ctx.halted {
@@ -673,6 +802,11 @@ where
                 std::mem::swap(&mut self.bcast_cur, &mut self.bcast_next);
                 self.bcast_next.clear_all();
             }
+            if let Some(log) = self.log.as_mut() {
+                // Log plane: fold the worker segments into next
+                // superstep's per-vertex logs (every payload retained).
+                metrics.retained_messages += log.merge_segments();
+            }
             self.store.swap_epochs();
             let converged = self.merge_aggregators(&agg_cells, &neutral);
             let barrier_time = t_barrier.elapsed();
@@ -696,6 +830,14 @@ where
                 break;
             }
         }
+        if self.log.is_none() {
+            // Retained vs combined: on the combined plane, everything
+            // sent (push) or scanned into a fold (pull) minus what
+            // reached compute as a distinct payload was folded away.
+            metrics.combined_messages = metrics
+                .total_messages()
+                .saturating_sub(delivered_counter.load(Ordering::Relaxed));
+        }
     }
 
     /// The partitioned superstep loop: scatter / flush / apply over the
@@ -714,6 +856,7 @@ where
         let counters: Vec<CachePadded<AtomicU64>> =
             (0..threads).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
         let pull_comb_counter = AtomicU64::new(0);
+        let delivered_counter = AtomicU64::new(0);
         let cross_counter = AtomicU64::new(0);
         let neutral = self.agg.neutral();
         let agg_cells: Vec<CachePadded<SyncCell<(AggValue<P>, bool)>>> = (0..threads)
@@ -790,9 +933,23 @@ where
                 let superstep_now = superstep;
 
                 let plan: &PartitionPlan = &part_ref.plan;
+                let log_ref = self.log.as_ref();
+                let delivered_counter = &delivered_counter;
                 let run_vertex = |tid: usize, shard: usize, v: VertexId| {
-                    let msg =
-                        engine.collect_msg(v, pull_comb_counter, Some((plan, cross_counter)));
+                    let (msg, inbox): (Option<P::Message>, &[P::Message]) = match log_ref {
+                        None => {
+                            let m = engine.collect_msg(
+                                v,
+                                pull_comb_counter,
+                                Some((plan, cross_counter)),
+                            );
+                            if m.is_some() {
+                                delivered_counter.fetch_add(1, Ordering::Relaxed);
+                            }
+                            (m, &[])
+                        }
+                        Some(l) => (None, l.inbox(v)),
+                    };
                     let mut ctx = engine.make_ctx(
                         v,
                         superstep_now,
@@ -806,6 +963,8 @@ where
                             tid,
                             cross: cross_counter,
                         }),
+                        inbox,
+                        log_ref.map(|l| l.seg(tid)),
                     );
                     engine.program.compute(&mut ctx, msg);
                     if !ctx.halted {
@@ -871,6 +1030,7 @@ where
             if cross_pending > 0 {
                 let engine = &self;
                 let part_ref = &part;
+                let log_ref = self.log.as_ref();
                 let weights = flush_weights.as_ref().expect("push mode");
                 parallel_for_hinted(
                     threads,
@@ -882,14 +1042,22 @@ where
                         None
                     },
                     cross_pending as usize,
-                    |_tid, shard_range| {
+                    |tid, shard_range| {
                         for d in shard_range {
                             part_ref.buffers.drain_for(d, |(dst, bits)| {
-                                engine.cfg.strategy.deliver_exclusive(
-                                    engine.store.next_slot(dst),
-                                    <P::Message as MessageValue>::from_bits(bits),
-                                    &engine.comb,
-                                );
+                                let m = <P::Message as MessageValue>::from_bits(bits);
+                                match log_ref {
+                                    None => engine.cfg.strategy.deliver_exclusive(
+                                        engine.store.next_slot(dst),
+                                        m,
+                                        &engine.comb,
+                                    ),
+                                    // Log plane: the flush task appends
+                                    // the batched remote messages to its
+                                    // own segment; the barrier merge
+                                    // folds them into the logs.
+                                    Some(l) => l.seg(tid).get_mut().push((dst, m)),
+                                }
                                 part_ref.active.set_in(d, dst as usize);
                             });
                         }
@@ -906,6 +1074,9 @@ where
                 }
                 std::mem::swap(&mut part.bcast_cur, &mut part.bcast_next);
                 part.bcast_next.clear_all();
+            }
+            if let Some(log) = self.log.as_mut() {
+                metrics.retained_messages += log.merge_segments();
             }
             self.store.swap_epochs();
             let converged = self.merge_aggregators(&agg_cells, &neutral);
@@ -932,6 +1103,11 @@ where
                 metrics.halt_reason = HaltReason::Converged;
                 break;
             }
+        }
+        if self.log.is_none() {
+            metrics.combined_messages = metrics
+                .total_messages()
+                .saturating_sub(delivered_counter.load(Ordering::Relaxed));
         }
 
         self.partition = Some(part);

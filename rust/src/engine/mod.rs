@@ -28,6 +28,14 @@
 //! cached partition plans are patched instead of rebuilt (see
 //! [`epoch`]), and runs transparently see the merged base + delta view.
 //!
+//! Orthogonally to all of the above, a program chooses its **delivery
+//! plane** ([`VertexProgram::Delivery`]): [`CombinedPlane`] folds
+//! concurrent messages into one mailbox slot through the strategies
+//! above, while [`LogPlane`] retains every message in per-vertex
+//! append-only logs (per-worker segments merged at the barrier, read
+//! back via [`Context::recv`]) — unlocking non-combinable algorithms
+//! like label propagation and triangle counting.
+//!
 //! None of these switches appear in user code — the same program text runs
 //! under every configuration, which is the paper's programmability thesis.
 //! The v2 API extends the *user-visible* surface without breaking it:
@@ -42,6 +50,7 @@ pub mod session;
 pub(crate) mod shard;
 
 pub use agg::{AggPair, Aggregator, FnAgg, MaxAgg, MinAgg, NoAgg, SumAgg};
+pub use crate::combine::{CombinedPlane, DeliveryPlane, LogPlane};
 pub use crate::graph::partition::Partitioning;
 pub use epoch::EpochWatermark;
 pub use session::{GraphSession, Halt, RunOptions};
@@ -104,6 +113,21 @@ pub trait Context<V, M, A = ()> {
     /// calling this panics — the same constraint iPregel's
     /// single-broadcast versions impose at compile time).
     fn send(&mut self, dst: VertexId, msg: M);
+    /// All messages delivered to this vertex last superstep, for
+    /// log-plane programs ([`VertexProgram::Delivery`] = [`LogPlane`]).
+    /// The order is unspecified (it depends on worker scheduling), so
+    /// fold commutatively. The engine's combined-plane contexts panic
+    /// here (the payload arrives pre-folded as `compute`'s `msg`
+    /// argument instead — the same loud-failure style as calling
+    /// [`Context::send`] from a pull-mode program); the trait default
+    /// returns the empty slice for third-party contexts.
+    fn recv(&self) -> &[M] {
+        &[]
+    }
+    /// Iterator convenience over [`Context::recv`].
+    fn recv_iter(&self) -> std::slice::Iter<'_, M> {
+        self.recv().iter()
+    }
     /// Broadcast `msg` along all outgoing edges. In pull mode this is one
     /// lock-free store into the vertex's own outbox.
     fn broadcast(&mut self, msg: M);
@@ -126,10 +150,19 @@ pub trait VertexProgram: Send + Sync {
     type Value: Clone + Send + Sync + 'static;
     /// Message type.
     type Message: MessageValue;
-    /// Message combiner.
+    /// Message combiner. Log-plane programs, whose messages are never
+    /// folded, use the [`crate::combine::NullCombiner`] placeholder.
     type Comb: Combiner<Self::Message>;
     /// Global aggregator ([`NoAgg`] when the program aggregates nothing).
     type Agg: Aggregator;
+    /// Message-delivery plane: [`CombinedPlane`] (one combinable mailbox
+    /// slot per vertex — the paper's §III machinery and the right choice
+    /// whenever a commutative combine exists) or [`LogPlane`]
+    /// (per-vertex append-only logs; `compute` reads the full multiset
+    /// via [`Context::recv`] — for non-combinable algorithms like label
+    /// propagation or triangle counting). Log-plane programs must use
+    /// [`Mode::Push`].
+    type Delivery: DeliveryPlane<Self::Message>;
 
     /// Which communication mode this program uses.
     fn mode(&self) -> Mode;
@@ -253,17 +286,8 @@ pub struct RunResult<V> {
     pub metrics: RunMetrics,
 }
 
-/// Run `program` on `g` under `cfg` through a throwaway session.
-///
-/// Compatibility shim for the v1 free-function API: behaviour is
-/// unchanged, but every allocation is rebuilt per call. Long-lived
-/// services should hold a [`GraphSession`] instead and reuse it across
-/// runs.
-#[deprecated(
-    since = "0.2.0",
-    note = "use GraphSession::run — a session amortises mailbox/store/bitset \
-            allocations across runs and supports warm starts"
-)]
-pub fn run<P: VertexProgram>(g: &Csr, program: &P, cfg: EngineConfig) -> RunResult<P::Value> {
-    GraphSession::with_config(g, cfg).run(program)
-}
+// The v1 free-function `engine::run(g, program, cfg)` shim is gone: it
+// spent one release behind `#[deprecated]` (0.2.0). Use
+// `GraphSession::with_config(g, cfg).run(program)` — identical
+// behaviour, and a held session amortises mailbox/store/bitset
+// allocations across runs and supports warm starts.

@@ -9,7 +9,10 @@
 //!   instead of reallocated;
 //! - **activity bitsets** (active/broadcast sets) are recycled;
 //! - **scheduler state** (the degree-weight vectors edge-centric full
-//!   scans need) is computed once per session and shared by `Arc`.
+//!   scans need) is computed once per session and shared by `Arc`;
+//! - **delivery planes**: log-plane runs check a
+//!   [`MessageLog`](crate::combine::plane::MessageLog) out of a pool
+//!   keyed by message type, re-primed and epoch-stamped like stores.
 //!
 //! Per run, callers can override the session's [`EngineConfig`], install
 //! a composable [`Halt`] policy (superstep cap, aggregator-convergence
@@ -28,6 +31,7 @@
 //! let ranks = session.run(&PageRank::default());      // reuses pools
 //! ```
 
+use crate::combine::plane::{DeliveryPlane, MessageLog};
 use crate::engine::core::{Engine, EngineSetup};
 use crate::engine::epoch::{absorb_receipt, EpochWatermark};
 use crate::engine::shard::ShardState;
@@ -193,16 +197,14 @@ impl GraphHandle<'_> {
 
 /// A reusable execution session over one graph. See the [module
 /// docs](self) for the pooling model; construction is cheap (no
-/// allocation proportional to the graph), so short-lived sessions are
-/// fine too — that is exactly what the deprecated [`run`] shim does.
+/// allocation proportional to the graph), so throwaway
+/// `GraphSession::with_config(&g, cfg).run(&p)` one-liners are fine too.
 ///
 /// A session built with [`GraphSession::dynamic`] additionally owns a
 /// [`DynamicGraph`] and accepts [`GraphSession::apply_mutations`]
 /// between runs: the graph evolves in place under mutation epochs while
 /// the pools stay warm (plans patched, stores re-stamped — see
 /// `engine/epoch.rs`).
-///
-/// [`run`]: crate::engine::run
 pub struct GraphSession<'g> {
     g: GraphHandle<'g>,
     cfg: EngineConfig,
@@ -222,6 +224,10 @@ pub struct GraphSession<'g> {
     /// Pooled per-shard runtime state (activity bit slabs + remote
     /// buffers), recycled when a run uses the same plan again.
     shard_states: Mutex<Vec<ShardState>>,
+    /// Pooled log-plane mailbox state, keyed by concrete
+    /// `MessageLog<M>` type — the delivery-plane analogue of the store
+    /// pool (re-primed and epoch-stamped at checkout).
+    planes: Mutex<HashMap<TypeId, Box<dyn Any + Send>>>,
     runs: AtomicU64,
 }
 
@@ -259,6 +265,7 @@ impl<'g> GraphSession<'g> {
             in_degree_weights: Mutex::new(None),
             plans: Mutex::new(HashMap::new()),
             shard_states: Mutex::new(Vec::new()),
+            planes: Mutex::new(HashMap::new()),
             runs: AtomicU64::new(0),
         }
     }
@@ -337,6 +344,12 @@ impl<'g> GraphSession<'g> {
     /// Number of vertex stores currently parked in the pool (diagnostic).
     pub fn pooled_stores(&self) -> usize {
         self.stores.lock().expect("store pool poisoned").len()
+    }
+
+    /// Number of log-plane message logs currently parked in the pool
+    /// (diagnostic; one per message type that ran a log-plane program).
+    pub fn pooled_planes(&self) -> usize {
+        self.planes.lock().expect("plane pool poisoned").len()
     }
 
     /// Number of partition plans cached so far (diagnostic).
@@ -486,6 +499,35 @@ impl<'g> GraphSession<'g> {
             }
         };
 
+        // ---- Delivery plane: pool one MessageLog per message type ------
+        // (Combined-plane runs carry no extra state — their mailboxes
+        // are the store's slots, preserved bit-for-bit.)
+        let is_log = <P::Delivery as DeliveryPlane<P::Message>>::IS_LOG;
+        let (log, log_reused) = if is_log {
+            let key = TypeId::of::<MessageLog<P::Message>>();
+            let pooled: Option<MessageLog<P::Message>> = self
+                .planes
+                .lock()
+                .expect("plane pool poisoned")
+                .remove(&key)
+                .and_then(|b| b.downcast::<MessageLog<P::Message>>().ok())
+                .map(|b| *b);
+            match pooled {
+                Some(mut l) => {
+                    l.ensure_shape(n, cfg.threads.max(1));
+                    l.set_epoch_tag(graph_epoch);
+                    (Some(l), true)
+                }
+                None => {
+                    let mut l = MessageLog::new(n, cfg.threads.max(1));
+                    l.set_epoch_tag(graph_epoch);
+                    (Some(l), false)
+                }
+            }
+        } else {
+            (None, false)
+        };
+
         // ---- Bitsets: recycle up to the three the engine needs ---------
         // (Partitioned runs track activity per shard and never touch the
         // flat bitsets, so leave the pool alone.)
@@ -525,6 +567,7 @@ impl<'g> GraphSession<'g> {
                 bitsets: recycled,
                 scan_weights,
                 partition,
+                log,
             },
         );
         let mut result = engine.run();
@@ -532,13 +575,20 @@ impl<'g> GraphSession<'g> {
         result.metrics.delta_edges = g.delta_edge_count() as u64;
         result.metrics.delta_occupancy = g.delta_occupancy();
         result.metrics.store_epoch_refreshed = store_epoch_refreshed;
+        result.metrics.plane_reused = log_reused;
 
         // ---- Return the parts to the pools -----------------------------
-        let (store, bitsets, shard_state) = engine.into_parts();
+        let (store, bitsets, shard_state, log) = engine.into_parts();
         self.stores
             .lock()
             .expect("store pool poisoned")
             .insert(key, Box::new(store));
+        if let Some(l) = log {
+            self.planes
+                .lock()
+                .expect("plane pool poisoned")
+                .insert(TypeId::of::<MessageLog<P::Message>>(), Box::new(l));
+        }
         // Partitioned runs hand back zero-length placeholders — only
         // full-size bitsets are worth pooling.
         self.bitsets
@@ -662,6 +712,27 @@ mod tests {
         );
         let plan = crate::graph::partition::PartitionPlan::build(&g, 5);
         assert_eq!(m.cross_shard_messages, plan.total_cross());
+    }
+
+    #[test]
+    fn log_plane_state_pools_like_stores() {
+        use crate::algos::Lpa;
+        use crate::metrics::DeliveryPlaneKind;
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 9);
+        let session = GraphSession::new(&g);
+        let a = session.run(&Lpa { rounds: 3 });
+        assert_eq!(a.metrics.delivery_plane, DeliveryPlaneKind::Log);
+        assert!(!a.metrics.plane_reused);
+        assert_eq!(session.pooled_planes(), 1);
+        let b = session.run(&Lpa { rounds: 3 });
+        assert!(b.metrics.plane_reused, "second run must reuse the log");
+        assert_eq!(a.values, b.values, "pooled plane must be bit-invisible");
+        assert_eq!(session.pooled_planes(), 1);
+        // Combined-plane programs never touch the plane pool.
+        let c = session.run(&ConnectedComponents);
+        assert_eq!(c.metrics.delivery_plane, DeliveryPlaneKind::Combined);
+        assert!(!c.metrics.plane_reused);
+        assert_eq!(session.pooled_planes(), 1);
     }
 
     #[test]

@@ -31,7 +31,10 @@ use std::sync::Arc;
 
 /// A buffered cross-shard message: destination vertex plus the message's
 /// 64-bit representation ([`crate::combine::MessageValue`] bits), so one
-/// buffer type serves every program without generics.
+/// buffer type serves every program without generics. Both delivery
+/// planes route through it: combined messages are folded
+/// owner-exclusively at flush, log messages are appended to the flush
+/// task's `MessageLog` segment — same batching, different landing.
 pub(crate) type RemoteMsg = (VertexId, u64);
 
 /// Dense per-shard activity bits addressed by global vertex id.

@@ -91,6 +91,11 @@ impl VertexMeta {
 /// Storage of per-vertex state: user value `V`, cold metadata, and two
 /// epochs of message slots (`cur` = read by this superstep's compute,
 /// `next` = written by this superstep's sends; swapped at the barrier).
+///
+/// The slots are the **combined delivery plane's** mailboxes. Log-plane
+/// runs (`combine/plane.rs`) leave them untouched — their messages live
+/// in a session-pooled `MessageLog` instead — but the store's values,
+/// metadata and epoch flip serve both planes unchanged.
 pub trait VertexStore<V: Send, M: MessageValue>: Send + Sync {
     /// Build a store for graph `g`, initialising each value with `init`.
     fn build(g: &Csr, init: &mut dyn FnMut(VertexId) -> V) -> Self

@@ -12,10 +12,15 @@
 //!   ([`engine::Context::out_edge`]), typed composable aggregators
 //!   ([`engine::Aggregator`]) and composable termination
 //!   ([`engine::Halt`]);
+//! - **pluggable delivery planes** ([`combine::plane`]): the combined
+//!   plane (one foldable mailbox slot, the paper's §III machinery) and
+//!   the log plane (per-vertex append-only message logs read via
+//!   [`engine::Context::recv`]) — opening the non-combinable algorithm
+//!   class ([`algos::Lpa`] label propagation, [`algos::Triangles`]
+//!   per-vertex triangle counting) behind the same program API;
 //! - a long-lived [`engine::GraphSession`] that runs many programs over
-//!   one graph with pooled stores/mailboxes/bitsets, per-run config
-//!   overrides and warm starts (the deprecated free function
-//!   [`engine::run`] remains as a compatibility shim);
+//!   one graph with pooled stores/mailboxes/bitsets/delivery planes,
+//!   per-run config overrides and warm starts;
 //! - the paper's optimisations as composable components: hybrid
 //!   combiners ([`combine`]), externalised vertex layouts ([`layout`]),
 //!   edge-centric & dynamic scheduling ([`sched`]);

@@ -5,10 +5,13 @@
 //! ```text
 //! ipregel generate  [--tiny] [--dir data/graphs]          generate + cache catalog graphs
 //! ipregel info      <graph|name> [--dir …]                degree stats + histogram
-//! ipregel run       --algo pr|cc|sssp|wsssp|bfs <graph|name>  real engine run (GraphSession)
+//! ipregel run       --algo pr|cc|sssp|wsssp|bfs|lpa|triangles <graph|name>
+//!                   real engine run (GraphSession)
 //!                   [--threads N] [--schedule S] [--strategy S]
 //!                   [--layout aos|soa] [--bypass] [--shards none|K|cache[:bytes]]
-//!                   [--iterations N] [--source V]
+//!                   [--iterations N] [--source V] [--rounds R]
+//!                   (lpa and triangles are log-plane programs: full
+//!                    message multisets, no combiner — see DESIGN.md §2.6)
 //!                   [--mutate-batch N [--mutate-rounds R] [--mutate-seed S]]
 //!                     stream N-edge mutation batches through a DynamicGraph
 //!                     session and recompute incrementally (pr|cc|wsssp)
@@ -22,7 +25,7 @@
 //! Graphs are referenced by catalog name (`dblp-s`, `friendster-t`, …) or
 //! by path (`.ipg` binary / edge-list text).
 
-use ipregel::algos::{Bfs, ConnectedComponents, PageRank, Sssp, WeightedSssp};
+use ipregel::algos::{Bfs, ConnectedComponents, Lpa, PageRank, Sssp, Triangles, WeightedSssp};
 use ipregel::combine::Strategy;
 use ipregel::config::Opts;
 use ipregel::engine::{EngineConfig, GraphSession, Partitioning, VertexProgram};
@@ -150,7 +153,7 @@ fn engine_cfg(opts: &Opts) -> Result<EngineConfig> {
 
 const RUN_FLAGS: &[&str] = &[
     "algo", "threads", "schedule", "strategy", "layout", "bypass", "shards", "iterations",
-    "source", "max-supersteps", "dir", "mutate-batch", "mutate-rounds", "mutate-seed",
+    "source", "rounds", "max-supersteps", "dir", "mutate-batch", "mutate-rounds", "mutate-seed",
 ];
 
 fn print_run(label: &str, metrics: &RunMetrics) {
@@ -162,7 +165,9 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
     let arg = opts
         .positional
         .get(1)
-        .ok_or_else(|| err!("usage: ipregel run --algo pr|cc|sssp|wsssp|bfs <graph|name>"))?;
+        .ok_or_else(|| {
+            err!("usage: ipregel run --algo pr|cc|sssp|wsssp|bfs|lpa|triangles <graph|name>")
+        })?;
     let g = load_graph(arg, &graph_dir(opts))?;
     let cfg = engine_cfg(opts)?;
     let algo = opts.get_or("algo", "pr");
@@ -277,7 +282,46 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
                 println!("  reached {reached} vertices, weighted eccentricity {ecc:.3}");
             });
         }
-        other => bail!("--algo {other}: expected pr|cc|sssp|wsssp|bfs"),
+        "lpa" | "label-propagation" => {
+            let p = Lpa {
+                rounds: opts.get_num("rounds", Lpa::default().rounds)?,
+            };
+            go(&g, &p, cfg, simulated, "lpa", |vals| {
+                let mut labels = vals.to_vec();
+                labels.sort_unstable();
+                labels.dedup();
+                println!("  communities: {}", labels.len());
+            });
+        }
+        "triangles" | "tc" => {
+            // Triangles requires a simple undirected graph; catalog
+            // generators emit parallel edges, and duplicates would
+            // multiply wedge messages and credits. Rebuild the simple
+            // symmetric closure first (same as the test harness does).
+            let edges: Vec<(u32, u32)> = g.edges().collect();
+            let g = ipregel::graph::GraphBuilder::new(g.num_vertices())
+                .symmetric(true)
+                .dedup(true)
+                .drop_self_loops(true)
+                .edges(&edges)
+                .build();
+            eprintln!(
+                "triangles: counting on the simple symmetric closure \
+                 (|E|={} directed edges)",
+                g.num_edges()
+            );
+            go(&g, &Triangles, cfg, simulated, "triangles", |vals| {
+                let corners: u64 = vals.iter().sum();
+                let peak = vals.iter().enumerate().max_by_key(|(_, &c)| c);
+                println!(
+                    "  triangles: {} (max v{} with {})",
+                    corners / 3,
+                    peak.map(|(v, _)| v).unwrap_or(0),
+                    peak.map(|(_, &c)| c).unwrap_or(0)
+                );
+            });
+        }
+        other => bail!("--algo {other}: expected pr|cc|sssp|wsssp|bfs|lpa|triangles"),
     }
     Ok(())
 }

@@ -19,6 +19,25 @@ pub struct SuperstepStats {
     pub barrier_time: Duration,
 }
 
+/// Which message-delivery plane a run used (see `combine/plane.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeliveryPlaneKind {
+    /// One combinable mailbox slot per vertex (strategy machinery).
+    #[default]
+    Combined,
+    /// Per-vertex append-only message logs (`Context::recv`).
+    Log,
+}
+
+impl std::fmt::Display for DeliveryPlaneKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeliveryPlaneKind::Combined => write!(f, "combined"),
+            DeliveryPlaneKind::Log => write!(f, "log"),
+        }
+    }
+}
+
 /// Why a run stopped.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum HaltReason {
@@ -96,6 +115,23 @@ pub struct RunMetrics {
     /// Whether the pooled vertex store carried an older mutation-epoch
     /// tag and had to be re-primed (epoch-tagged invalidation).
     pub store_epoch_refreshed: bool,
+    /// Which delivery plane the run used: `Combined` (one foldable
+    /// mailbox slot per vertex) or `Log` (per-vertex append-only logs).
+    pub delivery_plane: DeliveryPlaneKind,
+    /// Log-plane runs: message payloads retained individually in the
+    /// per-vertex logs (every send survives to `Context::recv`). Always
+    /// 0 on combined-plane runs.
+    pub retained_messages: u64,
+    /// Combined-plane runs: message payloads the combiner folded away —
+    /// total sends (push) or combines (pull) minus the distinct payloads
+    /// handed to `compute`. Always 0 on log-plane runs, whose point is
+    /// that nothing is folded.
+    pub combined_messages: u64,
+    /// Whether a log-plane run recycled a pooled
+    /// [`MessageLog`](../combine/plane/struct.MessageLog.html) from its
+    /// session instead of allocating a fresh one (the plane analogue of
+    /// [`RunMetrics::store_reused`]).
+    pub plane_reused: bool,
 }
 
 impl RunMetrics {
@@ -139,6 +175,9 @@ impl RunMetrics {
                 " shards={} cross={} imbalance={:.2}",
                 self.shards, self.cross_shard_messages, self.shard_edge_imbalance
             ));
+        }
+        if self.delivery_plane == DeliveryPlaneKind::Log {
+            s.push_str(&format!(" plane=log retained={}", self.retained_messages));
         }
         if self.graph_epoch > 0 || self.delta_edges > 0 {
             s.push_str(&format!(
@@ -264,6 +303,22 @@ mod tests {
         let d = dynamic.summary();
         assert!(d.contains("epoch=3"));
         assert!(d.contains("delta=12"));
+    }
+
+    #[test]
+    fn log_plane_gets_its_own_summary_section() {
+        assert_eq!(DeliveryPlaneKind::default(), DeliveryPlaneKind::Combined);
+        assert_eq!(format!("{}", DeliveryPlaneKind::Log), "log");
+        let m = RunMetrics {
+            delivery_plane: DeliveryPlaneKind::Log,
+            retained_messages: 9,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("plane=log"));
+        assert!(s.contains("retained=9"));
+        // Combined runs (the default) show no plane section.
+        assert!(!RunMetrics::default().summary().contains("plane="));
     }
 
     #[test]

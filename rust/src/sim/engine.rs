@@ -11,6 +11,7 @@
 //! in `rust/tests/test_sim.rs` — the simulator may only differ in *time*,
 //! never in *answers*.
 
+use crate::combine::plane::DeliveryPlane;
 use crate::combine::{Combiner, Strategy};
 use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, VertexProgram};
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
@@ -32,6 +33,8 @@ struct ItemRec {
     combined: u32,
     /// Push: consumed a mailbox message.
     got_msg: bool,
+    /// Log plane: messages read from the vertex's inbox.
+    received: u32,
     /// Broadcast issued this superstep.
     did_broadcast: bool,
     /// Range into the explicit-send log.
@@ -66,8 +69,8 @@ pub struct SimEngine<'g, P: VertexProgram> {
 }
 
 /// Mutable per-superstep state shared with the context. Generic over the
-/// program's aggregated-value type.
-struct StepState<AV> {
+/// program's aggregated-value and message types.
+struct StepState<AV, M> {
     /// Push: messages received per recipient this superstep.
     counts: Vec<u32>,
     /// Push: recipients touched this superstep (for cheap reset).
@@ -78,6 +81,9 @@ struct StepState<AV> {
     bcast_next: BitSet,
     /// Explicit (non-broadcast) send destinations.
     sends_log: Vec<VertexId>,
+    /// Log plane: per-vertex messages being delivered this superstep
+    /// (rotated into the inbox at the barrier). Empty on combined runs.
+    log_next: Vec<Vec<M>>,
     /// Aggregator partial of the current superstep: (value, contributed?).
     agg_cur: (AV, bool),
 }
@@ -91,7 +97,11 @@ struct SimCtx<'a, P: VertexProgram> {
     agg_prev: Option<&'a AggValue<P>>,
     strategy: Strategy,
     mode: Mode,
-    step: &'a mut StepState<AggValue<P>>,
+    step: &'a mut StepState<AggValue<P>, P::Message>,
+    /// Log plane: this vertex's inbox from last superstep.
+    inbox: &'a [P::Message],
+    /// Whether the program runs on the log plane.
+    is_log: bool,
     superstep: usize,
     v: VertexId,
     halted: bool,
@@ -130,8 +140,12 @@ impl<'a, P: VertexProgram> Context<P::Value, P::Message, AggValue<P>> for SimCtx
             self.mode == Mode::Push,
             "send() requires a push-mode program"
         );
-        self.strategy
-            .deliver(self.store.next_slot(dst), msg, self.comb);
+        if self.is_log {
+            self.step.log_next[dst as usize].push(msg);
+        } else {
+            self.strategy
+                .deliver(self.store.next_slot(dst), msg, self.comb);
+        }
         self.step.record_delivery(dst);
         self.step.sends_log.push(dst);
     }
@@ -141,8 +155,12 @@ impl<'a, P: VertexProgram> Context<P::Value, P::Message, AggValue<P>> for SimCtx
         match self.mode {
             Mode::Push => {
                 for &dst in self.g.out_neighbors(self.v) {
-                    self.strategy
-                        .deliver(self.store.next_slot(dst), msg, self.comb);
+                    if self.is_log {
+                        self.step.log_next[dst as usize].push(msg);
+                    } else {
+                        self.strategy
+                            .deliver(self.store.next_slot(dst), msg, self.comb);
+                    }
                     self.step.record_delivery(dst);
                 }
             }
@@ -171,9 +189,19 @@ impl<'a, P: VertexProgram> Context<P::Value, P::Message, AggValue<P>> for SimCtx
     fn aggregated(&self) -> Option<&AggValue<P>> {
         self.agg_prev
     }
+
+    fn recv(&self) -> &[P::Message] {
+        assert!(
+            self.is_log,
+            "recv() requires a log-plane program; set `type Delivery = \
+             LogPlane` — combined-plane messages arrive pre-folded as \
+             compute's `msg` argument"
+        );
+        self.inbox
+    }
 }
 
-impl<AV: Clone> StepState<AV> {
+impl<AV: Clone, M> StepState<AV, M> {
     fn record_delivery(&mut self, dst: VertexId) {
         if self.counts[dst as usize] == 0 {
             self.touched.push(dst);
@@ -210,10 +238,16 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
         let comb = self.program.combiner();
         let agg = self.program.aggregator();
         let mode = self.program.mode();
+        let is_log = <P::Delivery as DeliveryPlane<P::Message>>::IS_LOG;
+        assert!(
+            !is_log || mode == Mode::Push,
+            "log-plane programs must use Mode::Push (same contract as the \
+             real engine)"
+        );
         let mut init = |v: VertexId| self.program.init(g, v);
         let mut store: SoaStore<P::Value, P::Message> = SoaStore::build(g, &mut init);
 
-        if mode == Mode::Push && cfg.strategy == Strategy::CasNeutral {
+        if mode == Mode::Push && cfg.strategy == Strategy::CasNeutral && !is_log {
             for v in g.vertices() {
                 cfg.strategy.reset_slot(store.cur_slot(v), &comb);
                 cfg.strategy.reset_slot(store.next_slot(v), &comb);
@@ -221,14 +255,27 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
         }
 
         let mut vm = VirtualMachine::new(cfg.threads);
-        let mut step: StepState<AggValue<P>> = StepState {
+        let mut step: StepState<AggValue<P>, P::Message> = StepState {
             counts: vec![0; n],
             touched: Vec::new(),
             active_next: BitSet::new(n),
             bcast_next: BitSet::new(n),
             sends_log: Vec::new(),
+            log_next: if is_log {
+                (0..n).map(|_| Vec::new()).collect()
+            } else {
+                Vec::new()
+            },
             agg_cur: (agg.neutral(), false),
         };
+        // Log plane: each vertex's inbox of the *current* superstep, and
+        // the owners filled last rotation (for O(touched) clearing).
+        let mut inbox_cur: Vec<Vec<P::Message>> = if is_log {
+            (0..n).map(|_| Vec::new()).collect()
+        } else {
+            Vec::new()
+        };
+        let mut prev_inbox_owners: Vec<VertexId> = Vec::new();
         for v in g.vertices() {
             if self.program.initially_active(g, v) {
                 step.active_next.set(v as usize);
@@ -275,6 +322,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             let mut pull_scanned_total = 0u64;
             for &v in &active {
                 let (msg, scanned, combined) = match mode {
+                    _ if is_log => (None, 0u32, 0u32),
                     Mode::Push => {
                         let slot = store.cur_slot(v);
                         let m = cfg.strategy.collect(slot, &comb);
@@ -302,6 +350,8 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 pull_scanned_total += scanned as u64;
                 pull_combined_total += combined as u64;
                 let got_msg = msg.is_some();
+                let inbox: &[P::Message] = if is_log { &inbox_cur[v as usize] } else { &[] };
+                let received = inbox.len() as u32;
                 let sends_start = step.sends_log.len() as u32;
                 let mut ctx: SimCtx<'_, P> = SimCtx {
                     g,
@@ -312,6 +362,8 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     strategy: cfg.strategy,
                     mode,
                     step: &mut step,
+                    inbox,
+                    is_log,
                     superstep,
                     v,
                     halted: false,
@@ -329,6 +381,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     scanned,
                     combined,
                     got_msg,
+                    received,
                     did_broadcast,
                     sends: (sends_start, sends_end),
                 });
@@ -352,6 +405,10 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     + push_mem
                     + cost.t_store
             };
+            // Log plane: a contention-free segment append replaces the
+            // synchronised slot delivery (same memory + activation terms,
+            // no lock/CAS term — the fold cost moves to the reader).
+            let log_append = cost.t_log_append + push_mem + cost.t_store;
 
             // Item costs over the *iterated* index space: the active list
             // (bypass) or the whole vertex range with a per-vertex flag
@@ -381,16 +438,20 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                         }
                     }
                     Mode::Push => {
-                        if it.got_msg {
+                        if is_log {
+                            // Sequential read of the inbox slice plus the
+                            // user's per-message fold.
+                            c += it.received as f64 * (cost.t_access_hit + cost.t_combine);
+                        } else if it.got_msg {
                             c += cost.t_store + cost.t_combine;
                         }
                         if it.did_broadcast {
                             for &dst in g.out_neighbors(it.v) {
-                                c += price_delivery(dst);
+                                c += if is_log { log_append } else { price_delivery(dst) };
                             }
                         }
                         for &dst in &step.sends_log[it.sends.0 as usize..it.sends.1 as usize] {
-                            c += price_delivery(dst);
+                            c += if is_log { log_append } else { price_delivery(dst) };
                         }
                     }
                 }
@@ -421,11 +482,18 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                         let exclusive = push_mem + cost.t_store + cost.t_combine;
                         let mut reprice = |dst: VertexId, shard_costs: &mut Vec<f64>| {
                             let d = plan.shard_of(dst);
+                            // What `active_costs` already charged per send.
+                            let paid = if is_log { log_append } else { price_delivery(dst) };
                             if d != s {
                                 cross_to[d] += 1;
-                                shard_costs[s] += cost.t_store - price_delivery(dst);
+                                shard_costs[s] += cost.t_store - paid;
                             } else {
-                                shard_costs[s] += exclusive - price_delivery(dst);
+                                // Intra-shard: owner-exclusive combine for
+                                // the combined plane; a log append is
+                                // already contention-free, so its price
+                                // does not change under sharding.
+                                let intra = if is_log { log_append } else { exclusive };
+                                shard_costs[s] += intra - paid;
                             }
                         };
                         if it.did_broadcast {
@@ -478,10 +546,15 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 // cross-shard messages owner-exclusively.
                 let total_cross: u64 = cross_to.iter().sum();
                 if total_cross > 0 {
-                    let flush_costs: Vec<f64> = cross_to
-                        .iter()
-                        .map(|&c| c as f64 * (cost.t_store + cost.t_combine))
-                        .collect();
+                    let per_flush = if is_log {
+                        // Drain a buffered message into the flush task's
+                        // log segment.
+                        cost.t_log_append + cost.t_store
+                    } else {
+                        cost.t_store + cost.t_combine
+                    };
+                    let flush_costs: Vec<f64> =
+                        cross_to.iter().map(|&c| c as f64 * per_flush).collect();
                     vm.region(
                         shard_sched,
                         &flush_costs,
@@ -548,6 +621,26 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 }
                 std::mem::swap(&mut bcast_cur, &mut step.bcast_next);
                 step.bcast_next.clear_all();
+            }
+            if is_log {
+                // The barrier merge walks every appended message three
+                // times (count pass, zero-fill of the flat data slab,
+                // scatter pass — see MessageLog::merge_segments) — the
+                // log plane's deferred delivery cost.
+                serial_ns += push_deliveries as f64 * 3.0 * cost.t_store;
+                // Rotate: consumed inboxes empty out, freshly delivered
+                // logs become next superstep's inboxes.
+                for &v in &prev_inbox_owners {
+                    inbox_cur[v as usize].clear();
+                }
+                prev_inbox_owners.clear();
+                for &d in &step.touched {
+                    std::mem::swap(
+                        &mut inbox_cur[d as usize],
+                        &mut step.log_next[d as usize],
+                    );
+                    prev_inbox_owners.push(d);
+                }
             }
             vm.serial(serial_ns);
 
@@ -661,6 +754,34 @@ mod tests {
             sim2.virtual_seconds,
             sim.virtual_seconds
         );
+    }
+
+    #[test]
+    fn sim_values_match_real_engine_on_log_plane_programs() {
+        use crate::algos::{Lpa, Triangles};
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 13);
+        let p = Lpa { rounds: 4 };
+        let real = GraphSession::new(&g).run(&p);
+        let sim = SimEngine::new(&g, &p, EngineConfig::default()).run();
+        assert_eq!(real.values, sim.values);
+        assert_eq!(sim.supersteps, real.metrics.num_supersteps());
+        assert_eq!(sim.messages, real.metrics.total_messages());
+
+        // Triangles under flat and partitioned pricing (values must be
+        // identical either way — only virtual time may differ).
+        let edges: Vec<(u32, u32)> = g.edges().collect();
+        let tg = crate::graph::GraphBuilder::new(g.num_vertices())
+            .symmetric(true)
+            .dedup(true)
+            .drop_self_loops(true)
+            .edges(&edges)
+            .build();
+        let real_tri = GraphSession::new(&tg).run(&Triangles);
+        for cfg in [EngineConfig::default(), EngineConfig::default().shards(4)] {
+            let sim = SimEngine::new(&tg, &Triangles, cfg).run();
+            assert_eq!(real_tri.values, sim.values);
+            assert!(sim.virtual_seconds > 0.0);
+        }
     }
 
     #[test]

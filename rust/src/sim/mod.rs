@@ -61,6 +61,11 @@ pub struct CostModel {
     pub t_chunk_claim: f64,
     /// Storing one word (activation bit, outbox clear, list append).
     pub t_store: f64,
+    /// Appending one message to a log-plane worker segment (payload
+    /// store + length bump; contention-free by construction, so no
+    /// lock/CAS term — the log plane's delivery cost is paid here and
+    /// in the serial barrier merge instead of in synchronisation).
+    pub t_log_append: f64,
     /// Per-superstep synchronisation (fork/join of the thread team).
     pub t_superstep_sync: f64,
     /// Mid-level (L2) cache capacity in bytes.
@@ -95,6 +100,7 @@ impl Default for CostModel {
             cas_retry_rate: 0.25,
             t_chunk_claim: 13.0,
             t_store: 1.0,
+            t_log_append: 2.0,
             t_superstep_sync: 5_000.0,
             l2_bytes: 1024.0 * 1024.0,
             t_l2_miss: 3.0,
@@ -228,6 +234,20 @@ mod tests {
         // thousands of CAS combines).
         let cas = m.delivery_cost(Strategy::CasNeutral, hub, threads, hub as u64);
         assert!((hybrid / cas - 1.0).abs() < 0.1, "hybrid {hybrid} cas {cas}");
+    }
+
+    #[test]
+    fn log_append_is_cheaper_than_any_synchronised_delivery() {
+        // The log plane's pitch: an uncontended segment append beats
+        // every slot-delivery design (it pays at the barrier merge
+        // instead, and in retained memory).
+        let m = CostModel::default();
+        for strat in [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+            assert!(
+                m.t_log_append < m.delivery_cost(strat, 1, 32, 1),
+                "{strat:?}"
+            );
+        }
     }
 
     #[test]

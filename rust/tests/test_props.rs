@@ -2,7 +2,7 @@
 //! configurations (seeded; replay any failure with the printed
 //! `QUICK_SEED`).
 
-use ipregel::algos::{reference, ConnectedComponents, PageRank, Sssp, WeightedSssp};
+use ipregel::algos::{reference, ConnectedComponents, Lpa, PageRank, Sssp, Triangles, WeightedSssp};
 use ipregel::combine::Strategy;
 use ipregel::engine::{EngineConfig, GraphSession};
 use ipregel::graph::dynamic::{DynamicGraph, MutationSet};
@@ -150,6 +150,93 @@ fn prop_weighted_sssp_matches_dijkstra() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_lpa_matches_serial_reference_across_engine_grid() {
+    // Label propagation is non-combinable (mode of the neighbour-label
+    // multiset): it runs on the log delivery plane. The engine must
+    // match the serial reference under every Strategy × Layout ×
+    // Schedule × Partitioning × bypass combination — including the
+    // partitioned substrate, where cross-shard log messages batch-route
+    // through the remote buffers.
+    quick::check("lpa vs serial reference", |rng| {
+        let g = random_graph(rng);
+        let cfg = random_cfg(rng);
+        let rounds = rng.below(5) as usize;
+        let p = Lpa { rounds };
+        let got = GraphSession::with_config(&g, cfg).run(&p);
+        let want = reference::lpa(&g, rounds);
+        if got.values != want {
+            return Err(format!("labels differ under {cfg:?} rounds {rounds}"));
+        }
+        // The log plane's defining property: nothing is folded.
+        let m = &got.metrics;
+        if m.retained_messages != m.total_messages() || m.combined_messages != 0 {
+            return Err(format!(
+                "log plane folded messages under {cfg:?}: retained {} of {}",
+                m.retained_messages,
+                m.total_messages()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_triangles_match_serial_reference_across_engine_grid() {
+    quick::check("triangles vs serial reference", |rng| {
+        // Simple undirected graph — the program's documented contract.
+        let n = 2 + rng.below(150) as usize;
+        let m = rng.below(3 * n as u64) as usize;
+        let edges = quick::random_edges(rng, n, m);
+        let g = GraphBuilder::new(n)
+            .symmetric(true)
+            .dedup(true)
+            .drop_self_loops(true)
+            .edges(&edges)
+            .build();
+        let cfg = random_cfg(rng);
+        let got = GraphSession::with_config(&g, cfg).run(&Triangles);
+        let want = reference::triangles(&g);
+        if got.values != want {
+            return Err(format!("counts differ under {cfg:?}"));
+        }
+        let total: u64 = got.values.iter().sum();
+        if total % 3 != 0 {
+            return Err(format!("corner total {total} not divisible by 3"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn log_plane_algos_match_references_on_catalog_graphs_flat_and_sharded() {
+    // The acceptance grid: lpa and triangles against their serial
+    // references on a catalog analogue, flat and partitioned.
+    let entry = ipregel::graph::catalog::find("dblp-t").expect("catalog entry");
+    let g = entry.generate();
+    let p = Lpa { rounds: 3 };
+    let want_lpa = reference::lpa(&g, 3);
+    for shards in [0usize, 6] {
+        let cfg = EngineConfig::default().threads(4).shards(shards);
+        let got = GraphSession::with_config(&g, cfg).run(&p);
+        assert_eq!(got.values, want_lpa, "lpa shards={shards}");
+    }
+    // Triangle counting runs on the simple symmetric closure.
+    let edges: Vec<(u32, u32)> = g.edges().collect();
+    let tg = GraphBuilder::new(g.num_vertices())
+        .symmetric(true)
+        .dedup(true)
+        .drop_self_loops(true)
+        .edges(&edges)
+        .build();
+    let want_tri = reference::triangles(&tg);
+    for shards in [0usize, 6] {
+        let cfg = EngineConfig::default().threads(4).shards(shards);
+        let got = GraphSession::with_config(&tg, cfg).run(&Triangles);
+        assert_eq!(got.values, want_tri, "triangles shards={shards}");
+    }
 }
 
 #[test]

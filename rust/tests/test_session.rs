@@ -1,14 +1,18 @@
 //! GraphSession integration tests: pooled-state reuse must be
 //! bit-invisible (reused runs give bit-identical results to fresh
 //! sessions), warm starts must actually save work, halt policies must
-//! fire, concurrent use must be safe, and the deprecated `engine::run`
-//! shim must behave exactly like a throwaway session.
+//! fire (including their composition edge cases), and concurrent use
+//! must be safe.
 
 use ipregel::algos::{
-    reference, ConnectedComponents, DanglingPageRank, KCore, PageRank, Sssp, WeightedSssp,
+    reference, ConnectedComponents, DanglingPageRank, KCore, PageRank, Sssp,
 };
-use ipregel::combine::Strategy;
-use ipregel::engine::{EngineConfig, GraphSession, Halt, RunOptions};
+use ipregel::combine::{MinCombiner, Strategy};
+use ipregel::engine::{
+    CombinedPlane, Context, EngineConfig, GraphSession, Halt, Mode, NoAgg, RunOptions,
+    VertexProgram,
+};
+use ipregel::graph::csr::{Csr, VertexId};
 use ipregel::graph::gen;
 use ipregel::layout::Layout;
 use ipregel::metrics::HaltReason;
@@ -193,24 +197,122 @@ fn halt_policies_compose_with_sessions() {
     );
 }
 
-#[test]
-#[allow(deprecated)]
-fn deprecated_run_shim_matches_session_exactly() {
-    let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 44);
-    let cfg = EngineConfig::default().threads(4).bypass(true);
-    let p = Sssp::from_hub(&g);
-    let via_shim = ipregel::engine::run(&g, &p, cfg);
-    let via_session = GraphSession::with_config(&g, cfg).run(&p);
-    assert_eq!(via_shim.values, via_session.values);
-    assert_eq!(
-        via_shim.metrics.num_supersteps(),
-        via_session.metrics.num_supersteps()
-    );
+/// A program that never activates: every vertex starts inactive and the
+/// user function would diverge if it ever ran — exercising the
+/// quiescence edge case of an empty initial frontier.
+struct Dormant;
 
-    let wg = gen::randomly_weighted(&g, 1.0, 2.0, 3);
-    let wp = WeightedSssp::from_hub(&wg);
-    let shim_w = ipregel::engine::run(&wg, &wp, cfg);
-    let session_w = GraphSession::with_config(&wg, cfg).run(&wp);
-    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
-    assert_eq!(bits(&shim_w.values), bits(&session_w.values));
+impl VertexProgram for Dormant {
+    type Value = u32;
+    type Message = u32;
+    type Comb = MinCombiner;
+    type Agg = NoAgg;
+    type Delivery = CombinedPlane;
+
+    fn mode(&self) -> Mode {
+        Mode::Push
+    }
+    fn combiner(&self) -> MinCombiner {
+        MinCombiner
+    }
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
+    }
+    fn init(&self, _g: &Csr, v: VertexId) -> u32 {
+        v
+    }
+    fn initially_active(&self, _g: &Csr, _v: VertexId) -> bool {
+        false
+    }
+    fn compute<C: Context<u32, u32>>(&self, _ctx: &mut C, _msg: Option<u32>) {
+        panic!("no vertex may ever run: the initial active set is empty");
+    }
+}
+
+#[test]
+fn zero_initially_active_vertices_quiesce_in_zero_supersteps() {
+    let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 3);
+    let session = GraphSession::new(&g);
+    for cfg in [
+        EngineConfig::default(),
+        EngineConfig::default().bypass(true),
+        EngineConfig::default().shards(4),
+        EngineConfig::default().shards(4).bypass(true),
+    ] {
+        let r = session.run_with(&Dormant, RunOptions::new().config(cfg));
+        assert_eq!(r.metrics.halt_reason, HaltReason::Quiescence, "{cfg:?}");
+        assert_eq!(r.metrics.num_supersteps(), 0, "{cfg:?}");
+        assert_eq!(r.metrics.total_messages(), 0, "{cfg:?}");
+        // Values are the init values, untouched.
+        assert_eq!(r.values, g.vertices().collect::<Vec<u32>>(), "{cfg:?}");
+    }
+    // A Halt policy on top changes nothing: quiescence fires first even
+    // with a zero-superstep cap or an always-true convergence predicate.
+    let r = session.run_with(
+        &Dormant,
+        RunOptions::new().halt(Halt::supersteps(0).and_converged(|_: Option<&()>, _| true)),
+    );
+    assert_eq!(r.metrics.halt_reason, HaltReason::Quiescence);
+    assert_eq!(r.metrics.num_supersteps(), 0);
+}
+
+#[test]
+fn halt_supersteps_and_converged_compose_first_to_fire_wins() {
+    let g = gen::path(300);
+    let session = GraphSession::new(&g);
+    let p = DanglingPageRank {
+        iterations: 400,
+        damping: 0.85,
+    };
+    // Tolerance loose enough that convergence fires well before the cap…
+    let tol = 1e-6;
+    let converged_first = session.run_with(
+        &p,
+        RunOptions::new().halt(
+            Halt::converged(move |a: Option<&f64>, b: Option<&f64>| {
+                matches!((a, b), (Some(x), Some(y)) if (x - y).abs() < tol)
+            })
+            .and_supersteps(350),
+        ),
+    );
+    assert_eq!(converged_first.metrics.halt_reason, HaltReason::Converged);
+    let converged_at = converged_first.metrics.num_supersteps();
+    assert!(converged_at < 350, "tolerance never fired: {converged_at}");
+
+    // …then a cap *below* the convergence superstep must win instead,
+    // with the same predicate installed.
+    let cap = converged_at - 1;
+    let capped = session.run_with(
+        &p,
+        RunOptions::new().halt(
+            Halt::converged(move |a: Option<&f64>, b: Option<&f64>| {
+                matches!((a, b), (Some(x), Some(y)) if (x - y).abs() < tol)
+            })
+            .and_supersteps(cap),
+        ),
+    );
+    assert_eq!(capped.metrics.halt_reason, HaltReason::SuperstepCap);
+    assert_eq!(capped.metrics.num_supersteps(), cap);
+
+    // and_supersteps composes by tightening: a later, looser cap cannot
+    // relax an earlier tight one (order must not matter).
+    let h: Halt<f64> = Halt::supersteps(7).and_supersteps(100);
+    assert_eq!(h.max_supersteps, Some(7));
+    let h2: Halt<f64> = Halt::supersteps(100).and_supersteps(7);
+    assert_eq!(h2.max_supersteps, Some(7));
+}
+
+#[test]
+fn converged_predicate_is_not_consulted_while_aggregator_stream_is_silent() {
+    // ConnectedComponents aggregates nothing, so an |a, b| a == b
+    // predicate would be (None, None)-true at the first barrier; the
+    // engine must keep it muzzled and run to the real fixpoint.
+    let g = gen::grid(12, 12);
+    let session = GraphSession::new(&g);
+    let r = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new().halt(Halt::converged(|a: Option<&()>, b: Option<&()>| a == b)),
+    );
+    assert_eq!(r.metrics.halt_reason, HaltReason::Quiescence);
+    assert_eq!(r.values, reference::connected_components(&g));
 }

@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Emit the committed bench baseline: run the three tracked benches in
+# BENCH_SMOKE mode and merge their JSON outputs into BENCH_baseline.json
+# at the repository root.
+#
+# Usage:  scripts/bench_baseline.sh [output-path]
+#
+# BENCH_SMOKE=1 keeps each bench to a small graph / few supersteps so
+# the baseline exercises every code path (flat vs sharded, dynamic vs
+# rebuild, the Table II switch grid) without measuring the clock for
+# minutes; drop the env var below for a full run.
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+out="${1:-$repo_root/BENCH_baseline.json}"
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+cd "$repo_root"
+# A bench whose smoke JSON already exists (e.g. produced by an earlier
+# CI step) can be reused instead of re-run: point BENCH_TABLE2_JSON /
+# BENCH_PARTITION_JSON / BENCH_DYNAMIC_JSON at the file.
+reuse_for() {
+  case "$1" in
+    bench_table2) echo "${BENCH_TABLE2_JSON:-}" ;;
+    bench_partition) echo "${BENCH_PARTITION_JSON:-}" ;;
+    bench_dynamic) echo "${BENCH_DYNAMIC_JSON:-}" ;;
+  esac
+}
+for bench in bench_table2 bench_partition bench_dynamic; do
+  reuse="$(reuse_for "$bench")"
+  if [ -n "$reuse" ] && [ -f "$reuse" ]; then
+    echo "== $bench (reusing $reuse) ==" >&2
+    cp "$reuse" "$tmp/$bench.json"
+  else
+    echo "== $bench ==" >&2
+    BENCH_SMOKE=1 BENCH_OUT="$tmp/$bench.json" cargo bench --bench "$bench"
+  fi
+done
+
+# Merge: one top-level object keyed by bench name, with provenance.
+{
+  echo '{'
+  echo "  \"generated_by\": \"scripts/bench_baseline.sh\","
+  echo "  \"rustc\": \"$(rustc --version)\","
+  echo "  \"smoke\": true,"
+  first=1
+  for bench in bench_table2 bench_partition bench_dynamic; do
+    [ "$first" = 1 ] || echo ','
+    first=0
+    printf '  "%s": ' "$bench"
+    sed 's/^/  /' "$tmp/$bench.json" | sed '1s/^  //'
+  done
+  echo '}'
+} >"$out"
+
+echo "wrote $out" >&2
