@@ -1,0 +1,286 @@
+//! Adaptive-tuner bench: adaptive runs vs a grid of fixed configurations
+//! per algorithm, emitting `BENCH_adaptive.json`. The headline claim
+//! under test: an adaptive run is never (meaningfully) slower than the
+//! best fixed configuration, and its decision trace proves it switched
+//! modes mid-run rather than lucking into one good fixed choice.
+//!
+//! Run: `cargo bench --bench bench_adaptive`
+//!      `BENCH_SMOKE=1 cargo bench --bench bench_adaptive`  (CI smoke:
+//!       small catalog-analogue graph — exercises the adaptive path and
+//!       the parity/trace assertions, not the clock)
+//!      `BENCH_OUT=path.json` overrides the output location.
+
+use ipregel::algos::{Bfs, ConnectedComponents, PageRank, Sssp};
+use ipregel::combine::Strategy;
+use ipregel::engine::{EngineConfig, GraphSession, Halt, RunOptions, VertexProgram};
+use ipregel::graph::csr::Csr;
+use ipregel::graph::gen;
+use ipregel::metrics::RunMetrics;
+use ipregel::sched::Schedule;
+use ipregel::util::timer::fmt_duration;
+use std::fmt::Write as _;
+
+struct Row {
+    algo: &'static str,
+    config: String,
+    millis: f64,
+    supersteps: usize,
+    messages: u64,
+    switches: usize,
+    modes: usize,
+}
+
+/// Best-of-`reps` wall time for one (program, config) pair.
+fn bench_one<P: VertexProgram>(
+    session: &GraphSession<'_>,
+    p: &P,
+    cfg: EngineConfig,
+    halt: &Halt<ipregel::engine::AggValue<P>>,
+    reps: usize,
+) -> (RunMetrics, Vec<P::Value>, f64) {
+    let mut best: Option<(RunMetrics, Vec<P::Value>, f64)> = None;
+    for _ in 0..reps.max(1) {
+        let r = session.run_with(p, RunOptions::new().config(cfg).halt(halt.clone()));
+        let ms = r.metrics.total_time.as_secs_f64() * 1e3;
+        let better = match &best {
+            None => true,
+            Some((_, _, b)) => ms < *b,
+        };
+        if better {
+            best = Some((r.metrics, r.values, ms));
+        }
+    }
+    best.unwrap()
+}
+
+fn json_escape_free(s: &str) -> &str {
+    debug_assert!(!s.contains('"') && !s.contains('\\'));
+    s
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_adaptive.json".to_string());
+
+    // Catalog-analogue shape (RMAT with Graph500 quadrants); the full
+    // run scales it up, the smoke keeps CI fast.
+    let (g, reps): (Csr, usize) = if smoke {
+        (gen::rmat(10, 6, 0.57, 0.19, 0.19, 7), 1)
+    } else {
+        (gen::rmat(14, 8, 0.57, 0.19, 0.19, 7), 3)
+    };
+    eprintln!(
+        "== bench_adaptive ({}): |V|={} |E|={} ==",
+        if smoke { "SMOKE" } else { "full" },
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    let threads = 4usize;
+    let base = EngineConfig::default().threads(threads);
+    let session = GraphSession::with_config(&g, base);
+
+    // The fixed grid the adaptive run competes against: each config is
+    // the "right" one for a different phase shape.
+    let fixed: Vec<(&'static str, EngineConfig)> = vec![
+        ("static-lock-scan", base),
+        ("static-lock-list", base.bypass(true)),
+        (
+            "dynamic-hybrid-list",
+            base.schedule(Schedule::Dynamic { chunk: 256 })
+                .strategy(Strategy::Hybrid)
+                .bypass(true),
+        ),
+        (
+            "edge-hybrid-scan",
+            base.schedule(Schedule::EdgeCentric).strategy(Strategy::Hybrid),
+        ),
+    ];
+
+    fn fmt_ms(ms: f64) -> String {
+        fmt_duration(std::time::Duration::from_secs_f64(ms / 1e3))
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut ratios: Vec<(&'static str, f64)> = Vec::new();
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_algo<P: VertexProgram>(
+        session: &GraphSession<'_>,
+        name: &'static str,
+        p: &P,
+        fixed: &[(&'static str, EngineConfig)],
+        base: EngineConfig,
+        halt: &Halt<ipregel::engine::AggValue<P>>,
+        reps: usize,
+        rows: &mut Vec<Row>,
+        ratios: &mut Vec<(&'static str, f64)>,
+    ) where
+        P::Value: PartialEq + std::fmt::Debug,
+    {
+        let mut best_fixed_ms = f64::INFINITY;
+        let mut reference: Option<Vec<P::Value>> = None;
+        for (label, cfg) in fixed {
+            let (m, values, ms) = bench_one(session, p, *cfg, halt, reps);
+            eprintln!(
+                "  {:<6} {:<20} {} ({})",
+                name,
+                label,
+                m.summary(),
+                fmt_ms(ms)
+            );
+            match &reference {
+                None => reference = Some(values),
+                Some(want) => assert_eq!(&values, want, "{name}/{label}: fixed configs diverge"),
+            }
+            best_fixed_ms = best_fixed_ms.min(ms);
+            rows.push(Row {
+                algo: name,
+                config: (*label).to_string(),
+                millis: ms,
+                supersteps: m.num_supersteps(),
+                messages: m.total_messages(),
+                switches: 0,
+                modes: 0,
+            });
+        }
+        let (m, values, ms) = bench_one(session, p, base.adaptive(true), halt, reps);
+        eprintln!(
+            "  {:<6} {:<20} {} ({}; vs best fixed {})",
+            name,
+            "adaptive",
+            m.summary(),
+            fmt_ms(ms),
+            fmt_ms(best_fixed_ms)
+        );
+        assert_eq!(
+            &values,
+            reference.as_ref().expect("fixed rows ran"),
+            "{name}: adaptive diverged from fixed configs"
+        );
+        ratios.push((name, ms / best_fixed_ms));
+        rows.push(Row {
+            algo: name,
+            config: "adaptive".to_string(),
+            millis: ms,
+            supersteps: m.num_supersteps(),
+            messages: m.total_messages(),
+            switches: m.tuner_switches(),
+            modes: m.tuner_modes(),
+        });
+    }
+
+    let halt_q: Halt<()> = Halt::quiescence();
+    let halt_pr: Halt<()> = Halt::supersteps(if smoke { 5 } else { 10 });
+    run_algo(
+        &session,
+        "bfs",
+        &Bfs {
+            root: g.max_out_degree_vertex(),
+        },
+        &fixed,
+        base,
+        &halt_q,
+        reps,
+        &mut rows,
+        &mut ratios,
+    );
+    run_algo(
+        &session,
+        "pr",
+        &PageRank::default(),
+        &fixed,
+        base,
+        &halt_pr,
+        reps,
+        &mut rows,
+        &mut ratios,
+    );
+    run_algo(
+        &session,
+        "cc",
+        &ConnectedComponents,
+        &fixed,
+        base,
+        &halt_q,
+        reps,
+        &mut rows,
+        &mut ratios,
+    );
+    run_algo(
+        &session,
+        "sssp",
+        &Sssp::from_hub(&g),
+        &fixed,
+        base,
+        &halt_q,
+        reps,
+        &mut rows,
+        &mut ratios,
+    );
+
+    // ---- Emit BENCH_adaptive.json ----------------------------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(j, "  \"bench\": \"adaptive\",");
+    let _ = writeln!(j, "  \"smoke\": {},", smoke);
+    let _ = writeln!(
+        j,
+        "  \"graph\": {{\"vertices\": {}, \"edges\": {}}},",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let _ = writeln!(j, "  \"threads\": {},", threads);
+    j.push_str("  \"adaptive_vs_best_fixed\": {\n");
+    for (i, (name, ratio)) in ratios.iter().enumerate() {
+        let _ = write!(j, "    \"{}\": {:.4}", json_escape_free(name), ratio);
+        j.push_str(if i + 1 < ratios.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  },\n");
+    j.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"algo\": \"{}\", \"config\": \"{}\", \"millis\": {:.3}, \
+             \"supersteps\": {}, \"messages\": {}, \"tuner_switches\": {}, \
+             \"tuner_modes\": {}}}",
+            json_escape_free(r.algo),
+            json_escape_free(&r.config),
+            r.millis,
+            r.supersteps,
+            r.messages,
+            r.switches,
+            r.modes
+        );
+        j.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ]\n}\n");
+
+    std::fs::write(&out_path, &j).expect("writing BENCH_adaptive.json");
+    eprintln!("wrote {out_path} ({} result rows)", rows.len());
+
+    // Sanity: the adaptive BFS row must have actually switched modes
+    // (≥ 2 distinct (schedule, strategy, bypass) tuples) — the whole
+    // point of the controller, asserted here AND in test_adaptive.rs.
+    let bfs_adaptive = rows
+        .iter()
+        .find(|r| r.algo == "bfs" && r.config == "adaptive")
+        .expect("bfs adaptive row");
+    assert!(
+        bfs_adaptive.modes >= 2,
+        "adaptive BFS selected only {} mode(s)",
+        bfs_adaptive.modes
+    );
+    // Message totals are knob-independent: every config of an algorithm
+    // must agree (the bench-level echo of the bit-identity contract).
+    for algo in ["bfs", "pr", "cc", "sssp"] {
+        let mut totals = rows.iter().filter(|r| r.algo == algo).map(|r| r.messages);
+        let first = totals.next().expect("rows exist");
+        assert!(
+            totals.all(|m| m == first),
+            "{algo}: message totals diverge across configs"
+        );
+    }
+    eprintln!("parity checks passed");
+}

@@ -33,4 +33,4 @@ pub use combiner::{Combiner, MaxCombiner, MinCombiner, NullCombiner, SumCombiner
 pub use plane::{CombinedPlane, DeliveryPlane, LogPlane, MessageLog};
 pub use slot::{MessageValue, MsgSlot};
 pub use spinlock::SpinLock;
-pub use strategy::Strategy;
+pub use strategy::{ContentionProbe, Strategy};

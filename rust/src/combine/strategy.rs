@@ -8,9 +8,56 @@
 
 use crate::combine::combiner::Combiner;
 use crate::combine::slot::{MessageValue, MsgSlot};
+use crate::combine::spinlock::SpinLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live contention counters for one worker's deliveries, drained once per
+/// superstep by the adaptive tuner (`engine/tune.rs`).
+///
+/// The probe is **opt-in per delivery call**: the plain
+/// [`Strategy::deliver`] path takes no probe argument and compiles to
+/// exactly the pre-probe code, so fixed-config runs pay nothing. Adaptive
+/// runs hand each worker its own cache-padded probe, so the counters
+/// themselves never become the contention they measure.
+#[derive(Debug, Default)]
+pub struct ContentionProbe {
+    /// CAS attempts that lost the race and had to re-load + re-combine
+    /// (the hybrid/CAS designs' contention signal).
+    pub cas_retries: AtomicU64,
+    /// Lock acquisitions that found the lock held and had to spin (the
+    /// lock design's — and the hybrid first-push's — contention signal).
+    pub lock_contended: AtomicU64,
+}
+
+impl ContentionProbe {
+    /// Fresh probe with zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drain both counters, returning `(cas_retries, lock_contended)`.
+    pub fn take(&self) -> (u64, u64) {
+        (
+            self.cas_retries.swap(0, Ordering::Relaxed),
+            self.lock_contended.swap(0, Ordering::Relaxed),
+        )
+    }
+}
+
+/// Acquire `lock`, counting a contended acquisition into `probe`.
+#[inline]
+fn acquire_probed(lock: &SpinLock, probe: Option<&ContentionProbe>) {
+    if lock.try_acquire() {
+        return;
+    }
+    if let Some(p) = probe {
+        p.lock_contended.fetch_add(1, Ordering::Relaxed);
+    }
+    lock.acquire();
+}
 
 /// Which synchronisation design delivers messages into mailboxes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Strategy {
     /// Acquire the vertex lock around every check+combine (§III "lock").
     Lock,
@@ -44,9 +91,29 @@ impl Strategy {
         combiner: &C,
     ) {
         match self {
-            Strategy::Lock => deliver_lock(slot, msg, combiner),
-            Strategy::CasNeutral => deliver_cas_neutral(slot, msg, combiner),
-            Strategy::Hybrid => deliver_hybrid(slot, msg, combiner),
+            Strategy::Lock => deliver_lock(slot, msg, combiner, None),
+            Strategy::CasNeutral => deliver_cas_neutral(slot, msg, combiner, None),
+            Strategy::Hybrid => deliver_hybrid(slot, msg, combiner, None),
+        }
+    }
+
+    /// [`Strategy::deliver`] with live contention accounting: CAS retries
+    /// and contended lock acquisitions are counted into `probe`. Same
+    /// delivered value, same synchronisation — only the bookkeeping
+    /// differs. Adaptive runs (`engine/tune.rs`) call this with one probe
+    /// per worker; everything else stays on the probe-free path.
+    #[inline]
+    pub fn deliver_probed<M: MessageValue, C: Combiner<M>>(
+        self,
+        slot: &MsgSlot<M>,
+        msg: M,
+        combiner: &C,
+        probe: &ContentionProbe,
+    ) {
+        match self {
+            Strategy::Lock => deliver_lock(slot, msg, combiner, Some(probe)),
+            Strategy::CasNeutral => deliver_cas_neutral(slot, msg, combiner, Some(probe)),
+            Strategy::Hybrid => deliver_hybrid(slot, msg, combiner, Some(probe)),
         }
     }
 
@@ -123,8 +190,17 @@ impl Strategy {
 /// Classic lock design: hold the vertex lock across the whole
 /// check-combine-store sequence.
 #[inline]
-fn deliver_lock<M: MessageValue, C: Combiner<M>>(slot: &MsgSlot<M>, msg: M, combiner: &C) {
-    slot.lock().acquire();
+fn deliver_lock<M: MessageValue, C: Combiner<M>>(
+    slot: &MsgSlot<M>,
+    msg: M,
+    combiner: &C,
+    probe: Option<&ContentionProbe>,
+) {
+    match probe {
+        // Probe-free path: literally the pre-probe code.
+        None => slot.lock().acquire(),
+        Some(_) => acquire_probed(slot.lock(), probe),
+    }
     if slot.has_msg() {
         let merged = combiner.combine(slot.load_msg(), msg);
         slot.store_msg(merged);
@@ -136,18 +212,32 @@ fn deliver_lock<M: MessageValue, C: Combiner<M>>(slot: &MsgSlot<M>, msg: M, comb
 
 /// Pure CAS design against a pre-loaded neutral element.
 #[inline]
-fn deliver_cas_neutral<M: MessageValue, C: Combiner<M>>(slot: &MsgSlot<M>, msg: M, combiner: &C) {
+fn deliver_cas_neutral<M: MessageValue, C: Combiner<M>>(
+    slot: &MsgSlot<M>,
+    msg: M,
+    combiner: &C,
+    probe: Option<&ContentionProbe>,
+) {
     let mut old = slot.load_msg();
+    let mut retries = 0u64;
     loop {
         let new = combiner.combine(old, msg);
         // Identical-value fast path: storing the same bits is a no-op
         // (paper Fig. 1 line 6 applies the same short-circuit).
         if new.to_bits() == old.to_bits() {
-            return;
+            break;
         }
         match slot.cas_msg(old, new) {
-            Ok(()) => return,
-            Err(observed) => old = observed,
+            Ok(()) => break,
+            Err(observed) => {
+                old = observed;
+                retries += 1;
+            }
+        }
+    }
+    if retries > 0 {
+        if let Some(p) = probe {
+            p.cas_retries.fetch_add(retries, Ordering::Relaxed);
         }
     }
 }
@@ -168,16 +258,24 @@ fn deliver_cas_neutral<M: MessageValue, C: Combiner<M>>(slot: &MsgSlot<M>, msg: 
 ///       unlock(dst)
 /// ```
 #[inline]
-fn deliver_hybrid<M: MessageValue, C: Combiner<M>>(slot: &MsgSlot<M>, msg: M, combiner: &C) {
+fn deliver_hybrid<M: MessageValue, C: Combiner<M>>(
+    slot: &MsgSlot<M>,
+    msg: M,
+    combiner: &C,
+    probe: Option<&ContentionProbe>,
+) {
     if slot.has_msg() {
-        apply_cas(slot, msg, combiner);
+        apply_cas(slot, msg, combiner, probe);
     } else {
-        slot.lock().acquire();
+        match probe {
+            None => slot.lock().acquire(),
+            Some(_) => acquire_probed(slot.lock(), probe),
+        }
         if slot.has_msg() {
             // Another thread won the first push while we waited: the
             // mailbox value is guaranteed set, so drop the lock and CAS.
             slot.lock().release();
-            apply_cas(slot, msg, combiner);
+            apply_cas(slot, msg, combiner, probe);
         } else {
             slot.store_first(msg);
             slot.lock().release();
@@ -187,17 +285,31 @@ fn deliver_hybrid<M: MessageValue, C: Combiner<M>>(slot: &MsgSlot<M>, msg: M, co
 
 /// Paper Fig. 1 `apply_cas`: retry until our contribution lands.
 #[inline]
-fn apply_cas<M: MessageValue, C: Combiner<M>>(slot: &MsgSlot<M>, msg: M, combiner: &C) {
+fn apply_cas<M: MessageValue, C: Combiner<M>>(
+    slot: &MsgSlot<M>,
+    msg: M,
+    combiner: &C,
+    probe: Option<&ContentionProbe>,
+) {
     let mut old = slot.load_msg();
+    let mut retries = 0u64;
     loop {
         let new = combiner.combine(old, msg);
         if new.to_bits() == old.to_bits() {
             // Combination is a no-op (e.g. min with a larger value).
-            return;
+            break;
         }
         match slot.cas_msg(old, new) {
-            Ok(()) => return,
-            Err(observed) => old = observed,
+            Ok(()) => break,
+            Err(observed) => {
+                old = observed;
+                retries += 1;
+            }
+        }
+    }
+    if retries > 0 {
+        if let Some(p) = probe {
+            p.cas_retries.fetch_add(retries, Ordering::Relaxed);
         }
     }
 }
@@ -379,6 +491,65 @@ mod tests {
                 |t, i| (t + 1) as u64 * 3 + i as u64 % 7 + 1,
                 |all| all.iter().sum(),
             );
+        }
+    }
+
+    #[test]
+    fn probed_delivery_matches_unprobed_and_counts_nothing_serially() {
+        // Serial deliveries never contend: the probe must stay zero and
+        // the folded value must match the probe-free path exactly.
+        for strat in all_strategies() {
+            let c = MinCombiner;
+            let plain: MsgSlot<u64> = MsgSlot::new();
+            let probed: MsgSlot<u64> = MsgSlot::new();
+            let probe = ContentionProbe::new();
+            strat.reset_slot(&plain, &c);
+            strat.reset_slot(&probed, &c);
+            for m in [50u64, 20, 90, 30] {
+                strat.deliver(&plain, m, &c);
+                strat.deliver_probed(&probed, m, &c, &probe);
+            }
+            assert_eq!(
+                strat.collect(&plain, &c),
+                strat.collect(&probed, &c),
+                "{strat:?}"
+            );
+            assert_eq!(probe.take(), (0, 0), "{strat:?}: serial = uncontended");
+        }
+    }
+
+    #[test]
+    fn probed_delivery_preserves_every_contribution_under_contention() {
+        // The probe must never alter delivery semantics: a contended sum
+        // through deliver_probed keeps every contribution, and take()
+        // drains the counters.
+        for strat in all_strategies() {
+            let slot: Arc<MsgSlot<u64>> = Arc::new(MsgSlot::new());
+            let probe: Arc<ContentionProbe> = Arc::new(ContentionProbe::new());
+            let c = SumCombiner;
+            strat.reset_slot(&slot, &c);
+            let threads = 8;
+            let per = 2000u64;
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let slot = Arc::clone(&slot);
+                    let probe = Arc::clone(&probe);
+                    std::thread::spawn(move || {
+                        for i in 0..per {
+                            strat.deliver_probed(&slot, t * 7 + i % 5 + 1, &c, &probe);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let want: u64 = (0..threads)
+                .map(|t| (0..per).map(|i| t * 7 + i % 5 + 1).sum::<u64>())
+                .sum();
+            assert_eq!(strat.collect(&slot, &c), Some(want), "{strat:?}");
+            let _ = probe.take();
+            assert_eq!(probe.take(), (0, 0), "take() drains");
         }
     }
 

@@ -42,9 +42,10 @@
 //! run skips the allocations.
 
 use crate::combine::plane::{MessageLog, Segment};
-use crate::combine::{Combiner, MessageValue, Strategy};
+use crate::combine::{Combiner, ContentionProbe, MessageValue, Strategy};
 use crate::engine::session::Halt;
 use crate::engine::shard::ShardState;
+use crate::engine::tune::{AdaptiveTuner, StepPlan, TunerState};
 use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, RunResult, VertexProgram};
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
 use crate::graph::partition::PartitionPlan;
@@ -75,6 +76,9 @@ pub(crate) struct EngineSetup<S, M: MessageValue> {
     /// Log-plane mailbox state (`None` on combined-plane runs), pooled
     /// and epoch-stamped by the session like the store.
     pub log: Option<MessageLog<M>>,
+    /// Adaptive superstep controller (`None` on fixed-config runs); its
+    /// probe/trace state is pooled by the session like stores/planes.
+    pub tuner: Option<AdaptiveTuner>,
 }
 
 /// The engine: graph + program + store + activity tracking.
@@ -109,6 +113,10 @@ pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     /// mailbox slots, and compute reads the merged log via
     /// `Context::recv` — see `combine/plane.rs`.
     log: Option<MessageLog<P::Message>>,
+    /// Adaptive superstep controller (None on fixed-config runs): hands
+    /// both loops a fresh [`StepPlan`] at each superstep top and absorbs
+    /// the barrier's signals — see `engine/tune.rs`.
+    tuner: Option<AdaptiveTuner>,
 }
 
 /// Shard routing for one vertex's context during partitioned scatter:
@@ -129,7 +137,12 @@ struct Ctx<'a, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     store: &'a S,
     comb: &'a P::Comb,
     agg: &'a P::Agg,
+    /// This superstep's combining strategy (the config's, or the
+    /// adaptive tuner's per-superstep re-selection within Lock/Hybrid).
     strategy: Strategy,
+    /// Adaptive runs: this worker's contention probe (None = fixed
+    /// config, probe-free delivery path).
+    probe: Option<&'a ContentionProbe>,
     mode: Mode,
     active_next: &'a AtomicBitSet,
     bcast_next: &'a AtomicBitSet,
@@ -148,6 +161,23 @@ struct Ctx<'a, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     superstep: usize,
     v: VertexId,
     halted: bool,
+}
+
+impl<'a, P, S> Ctx<'a, P, S>
+where
+    P: VertexProgram,
+    S: VertexStore<P::Value, P::Message>,
+{
+    /// Synchronised delivery into a shared slot, routed through the
+    /// contention probe when the run is adaptive. Fixed-config runs take
+    /// the `None` arm — exactly the pre-tuner code path.
+    #[inline]
+    fn deliver_shared(&self, slot: &crate::combine::MsgSlot<P::Message>, msg: P::Message) {
+        match self.probe {
+            None => self.strategy.deliver(slot, msg, self.comb),
+            Some(p) => self.strategy.deliver_probed(slot, msg, self.comb, p),
+        }
+    }
 }
 
 impl<'a, P, S> Context<P::Value, P::Message, AggValue<P>> for Ctx<'a, P, S>
@@ -205,8 +235,7 @@ where
         self.msg_counter.fetch_add(1, Ordering::Relaxed);
         match (&self.route, self.log_seg) {
             (None, None) => {
-                self.strategy
-                    .deliver(self.store.next_slot(dst), msg, self.comb);
+                self.deliver_shared(self.store.next_slot(dst), msg);
                 self.active_next.set(dst as usize);
             }
             (None, Some(seg)) => {
@@ -258,8 +287,7 @@ where
                 match (&self.route, self.log_seg) {
                     (None, None) => {
                         for &dst in nbrs {
-                            self.strategy
-                                .deliver(self.store.next_slot(dst), msg, self.comb);
+                            self.deliver_shared(self.store.next_slot(dst), msg);
                             self.active_next.set(dst as usize);
                         }
                     }
@@ -363,6 +391,40 @@ where
     }
 }
 
+/// Adaptive superstep preamble shared verbatim by the flat and
+/// partitioned loops (they must stay in lock-step for the
+/// adaptive ≡ fixed trace contract): run the termination checks on the
+/// live frontier count, obtain the superstep's knob plan, and surface
+/// the EdgeCentric + bypass rebuild fallback if the tuner selected that
+/// combination. `None` means halt — `metrics.halt_reason` is already
+/// set and the caller breaks its loop.
+fn adaptive_step(
+    tuner: &mut AdaptiveTuner,
+    superstep: usize,
+    active_now: usize,
+    n: usize,
+    max_supersteps: usize,
+    metrics: &mut RunMetrics,
+) -> Option<StepPlan> {
+    if active_now == 0 {
+        metrics.halt_reason = HaltReason::Quiescence;
+        return None;
+    }
+    if superstep >= max_supersteps {
+        metrics.halt_reason = HaltReason::SuperstepCap;
+        return None;
+    }
+    let step = tuner.decide(superstep, active_now, n);
+    if step.schedule == Schedule::EdgeCentric && step.bypass && metrics.schedule_fallback.is_none()
+    {
+        // The tuner priced the per-superstep weight rebuild in; surface
+        // it the same way fixed configs do.
+        metrics.schedule_fallback = Some(ScheduleFallback::EdgeCentricBypassRebuild);
+        warn_edge_centric_bypass_once();
+    }
+    Some(step)
+}
+
 /// One-time stderr note for the documented EdgeCentric + bypass
 /// fallback (see [`Schedule::EdgeCentric`] and
 /// [`ScheduleFallback::EdgeCentricBypassRebuild`]).
@@ -400,6 +462,7 @@ where
             scan_weights,
             partition,
             log,
+            tuner,
         } = setup;
         let comb = program.combiner();
         let agg = program.aggregator();
@@ -472,6 +535,7 @@ where
             agg_prev: None,
             partition,
             log,
+            tuner,
         }
     }
 
@@ -484,12 +548,14 @@ where
         Vec<AtomicBitSet>,
         Option<ShardState>,
         Option<MessageLog<P::Message>>,
+        Option<TunerState>,
     ) {
         (
             self.store,
             vec![self.active_next, self.bcast_next, self.bcast_cur],
             self.partition,
             self.log,
+            self.tuner.map(AdaptiveTuner::into_state),
         )
     }
 
@@ -502,6 +568,8 @@ where
         &'a self,
         v: VertexId,
         superstep: usize,
+        strategy: Strategy,
+        probe: Option<&'a ContentionProbe>,
         msg_counter: &'a AtomicU64,
         agg_cell: &'a SyncCell<(AggValue<P>, bool)>,
         agg_prev: Option<&'a AggValue<P>>,
@@ -514,7 +582,8 @@ where
             store: &self.store,
             comb: &self.comb,
             agg: &self.agg,
-            strategy: self.cfg.strategy,
+            strategy,
+            probe,
             mode: self.mode,
             active_next: &self.active_next,
             bcast_next: &self.bcast_next,
@@ -533,6 +602,11 @@ where
     /// Combined incoming message for `v` at superstep start. `cross`
     /// (partitioned pull runs) classifies each combined contribution by
     /// the owner map and accumulates foreign-outbox combines.
+    ///
+    /// Reads with the *configured* strategy even on adaptive runs: Lock
+    /// and Hybrid (the only pair the tuner moves between) share one slot
+    /// discipline and one `collect` path, and CasNeutral — whose collect
+    /// differs — is never entered or left adaptively.
     #[inline]
     fn collect_msg(
         &self,
@@ -611,6 +685,7 @@ where
         let total = Timer::start();
         let mut metrics = RunMetrics {
             store_reused: self.store_reused,
+            adaptive: self.tuner.is_some(),
             delivery_plane: if self.log.is_some() {
                 DeliveryPlaneKind::Log
             } else {
@@ -635,6 +710,9 @@ where
             self.run_partitioned(&mut metrics, max_supersteps);
         } else {
             self.run_flat(&mut metrics, max_supersteps);
+        }
+        if let Some(t) = self.tuner.as_mut() {
+            metrics.tuner_decisions = t.take_trace();
         }
 
         metrics.total_time = total.elapsed();
@@ -666,9 +744,28 @@ where
             .collect();
 
         let mut superstep = 0usize;
+        let mut delivered_total = 0u64;
         loop {
+            // ---- Per-superstep knob plan --------------------------------
+            // Fixed-config runs use the config verbatim; adaptive runs
+            // re-decide schedule/strategy/bypass from live signals (see
+            // engine/tune.rs — results stay bit-identical either way).
+            // The adaptive path counts the frontier (its primary signal)
+            // and runs the termination checks BEFORE deciding, so the
+            // trace holds exactly one decision per executed superstep.
+            let step = match self.tuner.as_mut() {
+                Some(t) => {
+                    let active_now = self.active_next.count();
+                    match adaptive_step(t, superstep, active_now, n, max_supersteps, metrics) {
+                        Some(s) => s,
+                        None => break,
+                    }
+                }
+                None => StepPlan::of(&self.cfg),
+            };
+
             // ---- Snapshot this superstep's active set -------------------
-            let active_list: Option<Vec<VertexId>> = if self.cfg.bypass {
+            let active_list: Option<Vec<VertexId>> = if step.bypass {
                 Some(
                     self.active_next
                         .iter()
@@ -678,7 +775,7 @@ where
             } else {
                 None
             };
-            let active_scan = if self.cfg.bypass {
+            let active_scan = if step.bypass {
                 None
             } else {
                 Some(self.active_next.snapshot())
@@ -711,7 +808,7 @@ where
                 // paper attributes to selection-bypass benchmarks — the
                 // documented fallback surfaced in
                 // `RunMetrics::schedule_fallback`).
-                let bypass_weights: Option<Vec<u64>> = match (&active_list, self.cfg.schedule) {
+                let bypass_weights: Option<Vec<u64>> = match (&active_list, step.schedule) {
                     (Some(list), Schedule::EdgeCentric) => Some(
                         list.iter()
                             .map(|&v| match self.mode {
@@ -726,6 +823,7 @@ where
                 let agg_cells = &agg_cells;
                 let agg_prev_now = self.agg_prev.as_ref();
                 let log_ref = self.log.as_ref();
+                let probes = self.tuner.as_ref().map(|t| t.probes());
                 let delivered_counter = &delivered_counter;
                 let run_vertex = |tid: usize, v: VertexId| {
                     let (msg, inbox): (Option<P::Message>, &[P::Message]) = match log_ref {
@@ -741,6 +839,8 @@ where
                     let mut ctx = engine.make_ctx(
                         v,
                         superstep_now,
+                        step.strategy,
+                        probes.map(|ps| &*ps[tid]),
                         &counters[tid],
                         &agg_cells[tid],
                         agg_prev_now,
@@ -760,7 +860,7 @@ where
                         parallel_for(
                             threads,
                             list.len(),
-                            self.cfg.schedule,
+                            step.schedule,
                             bypass_weights.as_deref(),
                             |tid, range| {
                                 for i in range {
@@ -775,7 +875,7 @@ where
                         parallel_for(
                             threads,
                             n,
-                            self.cfg.schedule,
+                            step.schedule,
                             self.scan_weights.as_ref().map(|w| w.as_slice()),
                             |tid, range| {
                                 for i in range {
@@ -816,6 +916,12 @@ where
                 .map(|c| c.swap(0, Ordering::Relaxed))
                 .sum::<u64>()
                 + pull_comb_counter.swap(0, Ordering::Relaxed);
+            let delivered_step = delivered_counter.swap(0, Ordering::Relaxed);
+            delivered_total += delivered_step;
+            if let Some(t) = self.tuner.as_mut() {
+                // Flat runs have no flush phase: imbalance is neutral.
+                t.observe(messages, delivered_step, 1.0);
+            }
 
             metrics.supersteps.push(SuperstepStats {
                 active_vertices: active_count,
@@ -836,7 +942,7 @@ where
             // reached compute as a distinct payload was folded away.
             metrics.combined_messages = metrics
                 .total_messages()
-                .saturating_sub(delivered_counter.load(Ordering::Relaxed));
+                .saturating_sub(delivered_total);
         }
     }
 
@@ -849,9 +955,9 @@ where
             .partition
             .take()
             .expect("run_partitioned requires shard state");
+        let n = self.g.num_vertices();
         let n_shards = part.plan.num_shards();
         let threads = self.cfg.threads.max(1);
-        let shard_sched = self.cfg.schedule.for_shards();
 
         let counters: Vec<CachePadded<AtomicU64>> =
             (0..threads).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
@@ -864,9 +970,23 @@ where
             .collect();
 
         let mut superstep = 0usize;
+        let mut delivered_total = 0u64;
         loop {
+            // ---- Per-superstep knob plan (see run_flat / engine/tune.rs)
+            let step = match self.tuner.as_mut() {
+                Some(t) => {
+                    let active_now = part.active.count();
+                    match adaptive_step(t, superstep, active_now, n, max_supersteps, metrics) {
+                        Some(s) => s,
+                        None => break,
+                    }
+                }
+                None => StepPlan::of(&self.cfg),
+            };
+            let shard_sched = step.schedule.for_shards();
+
             // ---- Snapshot each shard's active set ----------------------
-            let shard_lists: Option<Vec<Vec<VertexId>>> = if self.cfg.bypass {
+            let shard_lists: Option<Vec<Vec<VertexId>>> = if step.bypass {
                 Some(
                     (0..n_shards)
                         .map(|s| part.active.iter_shard(s).collect())
@@ -875,7 +995,7 @@ where
             } else {
                 None
             };
-            let shard_scans: Option<Vec<BitSet>> = if self.cfg.bypass {
+            let shard_scans: Option<Vec<BitSet>> = if step.bypass {
                 None
             } else {
                 Some((0..n_shards).map(|s| part.active.snapshot_shard(s)).collect())
@@ -898,7 +1018,7 @@ where
             // Edge-centric shard weights: static shard edge totals for
             // scans, active-degree sums (rebuilt per superstep — the
             // documented bypass fallback) for bypass runs.
-            let scatter_weights: Option<Vec<u64>> = if self.cfg.schedule == Schedule::EdgeCentric {
+            let scatter_weights: Option<Vec<u64>> = if step.schedule == Schedule::EdgeCentric {
                 Some(match &shard_lists {
                     Some(lists) => lists
                         .iter()
@@ -934,6 +1054,7 @@ where
 
                 let plan: &PartitionPlan = &part_ref.plan;
                 let log_ref = self.log.as_ref();
+                let probes = self.tuner.as_ref().map(|t| t.probes());
                 let delivered_counter = &delivered_counter;
                 let run_vertex = |tid: usize, shard: usize, v: VertexId| {
                     let (msg, inbox): (Option<P::Message>, &[P::Message]) = match log_ref {
@@ -953,6 +1074,8 @@ where
                     let mut ctx = engine.make_ctx(
                         v,
                         superstep_now,
+                        step.strategy,
+                        probes.map(|ps| &*ps[tid]),
                         &counters[tid],
                         &agg_cells[tid],
                         agg_prev_now,
@@ -1027,6 +1150,15 @@ where
                 Some(w) => w.iter().sum(),
                 None => 0,
             };
+            // Max-over-mean flush load: the tuner's shard-skew signal
+            // (1.0 = balanced, nothing pending, or pull mode).
+            let flush_imbalance = match &flush_weights {
+                Some(w) if cross_pending > 0 => {
+                    let max = w.iter().copied().max().unwrap_or(0) as f64;
+                    max * n_shards as f64 / cross_pending as f64
+                }
+                _ => 1.0,
+            };
             if cross_pending > 0 {
                 let engine = &self;
                 let part_ref = &part;
@@ -1047,7 +1179,10 @@ where
                             part_ref.buffers.drain_for(d, |(dst, bits)| {
                                 let m = <P::Message as MessageValue>::from_bits(bits);
                                 match log_ref {
-                                    None => engine.cfg.strategy.deliver_exclusive(
+                                    // Owner-exclusive: Lock and Hybrid
+                                    // share one fold here, so the tuner's
+                                    // per-superstep strategy is safe.
+                                    None => step.strategy.deliver_exclusive(
                                         engine.store.next_slot(dst),
                                         m,
                                         &engine.comb,
@@ -1090,6 +1225,11 @@ where
             let cross_step = cross_counter.swap(0, Ordering::Relaxed);
             metrics.cross_shard_messages += cross_step;
             metrics.intra_shard_messages += messages - cross_step;
+            let delivered_step = delivered_counter.swap(0, Ordering::Relaxed);
+            delivered_total += delivered_step;
+            if let Some(t) = self.tuner.as_mut() {
+                t.observe(messages, delivered_step, flush_imbalance);
+            }
 
             metrics.supersteps.push(SuperstepStats {
                 active_vertices: active_count,
@@ -1107,7 +1247,7 @@ where
         if self.log.is_none() {
             metrics.combined_messages = metrics
                 .total_messages()
-                .saturating_sub(delivered_counter.load(Ordering::Relaxed));
+                .saturating_sub(delivered_total);
         }
 
         self.partition = Some(part);

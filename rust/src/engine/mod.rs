@@ -19,7 +19,11 @@
 //! - **partitioning** ([`Partitioning`]): shard the graph into
 //!   cache-sized, edge-balanced subgraphs executed scatter/flush/apply
 //!   with buffered cross-shard message routing — bit-identical to flat
-//!   execution, `Partitioning::None` preserving the flat path.
+//!   execution, `Partitioning::None` preserving the flat path;
+//! - **adaptive tuning** (`EngineConfig::adaptive`, [`tune`]): re-decide
+//!   schedule / strategy / bypass at every superstep barrier from live
+//!   signals, with hysteresis and a recorded decision trace —
+//!   bit-identical to every fixed configuration.
 //!
 //! Sessions may also bind to a **mutable** graph
 //! ([`GraphSession::dynamic`] over a
@@ -48,12 +52,14 @@ pub(crate) mod core;
 pub mod epoch;
 pub mod session;
 pub(crate) mod shard;
+pub mod tune;
 
 pub use agg::{AggPair, Aggregator, FnAgg, MaxAgg, MinAgg, NoAgg, SumAgg};
 pub use crate::combine::{CombinedPlane, DeliveryPlane, LogPlane};
 pub use crate::graph::partition::Partitioning;
 pub use epoch::EpochWatermark;
 pub use session::{GraphSession, Halt, RunOptions};
+pub use tune::{AdaptiveTuner, DecisionTable, StepPlan};
 
 use crate::combine::{Combiner, MessageValue, Strategy};
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
@@ -207,6 +213,15 @@ pub struct EngineConfig {
     /// edge-balanced shards with buffered cross-shard routing
     /// ([`Partitioning::None`] preserves the flat engine bit-for-bit).
     pub partitioning: Partitioning,
+    /// Adaptive superstep tuning: re-decide schedule / strategy /
+    /// bypass at every barrier from live signals ([`tune`]). The
+    /// configured values above become the starting plan and the
+    /// vertex-centric fallback; results stay bit-identical to any fixed
+    /// configuration, and the per-superstep choices are recorded in
+    /// [`RunMetrics::tuner_decisions`].
+    ///
+    /// [`RunMetrics::tuner_decisions`]: crate::metrics::RunMetrics::tuner_decisions
+    pub adaptive: bool,
     /// Safety cap on supersteps.
     pub max_supersteps: usize,
 }
@@ -220,6 +235,7 @@ impl Default for EngineConfig {
             layout: Layout::Interleaved,
             bypass: false,
             partitioning: Partitioning::None,
+            adaptive: false,
             max_supersteps: 100_000,
         }
     }
@@ -270,6 +286,11 @@ impl EngineConfig {
         };
         self
     }
+    /// Enable/disable adaptive superstep tuning ([`tune`]).
+    pub fn adaptive(mut self, a: bool) -> Self {
+        self.adaptive = a;
+        self
+    }
     /// Cap the number of supersteps.
     pub fn max_supersteps(mut self, n: usize) -> Self {
         self.max_supersteps = n;
@@ -285,9 +306,3 @@ pub struct RunResult<V> {
     /// Per-superstep and whole-run statistics.
     pub metrics: RunMetrics,
 }
-
-// The v1 free-function `engine::run(g, program, cfg)` shim is gone: it
-// spent one release behind `#[deprecated]` (0.2.0). Use
-// `GraphSession::with_config(g, cfg).run(program)` — identical
-// behaviour, and a held session amortises mailbox/store/bitset
-// allocations across runs and supports warm starts.

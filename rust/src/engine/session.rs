@@ -35,6 +35,7 @@ use crate::combine::plane::{DeliveryPlane, MessageLog};
 use crate::engine::core::{Engine, EngineSetup};
 use crate::engine::epoch::{absorb_receipt, EpochWatermark};
 use crate::engine::shard::ShardState;
+use crate::engine::tune::{AdaptiveTuner, TunerState};
 use crate::engine::{AggValue, EngineConfig, Mode, RunResult, VertexProgram};
 use crate::graph::csr::{Csr, VertexId};
 use crate::graph::dynamic::{DynamicGraph, MutationReceipt, MutationSet};
@@ -228,6 +229,9 @@ pub struct GraphSession<'g> {
     /// `MessageLog<M>` type — the delivery-plane analogue of the store
     /// pool (re-primed and epoch-stamped at checkout).
     planes: Mutex<HashMap<TypeId, Box<dyn Any + Send>>>,
+    /// Pooled adaptive-tuner state (per-worker contention probes + trace
+    /// buffers), recycled across adaptive runs like stores/planes.
+    tuners: Mutex<Vec<TunerState>>,
     runs: AtomicU64,
 }
 
@@ -266,6 +270,7 @@ impl<'g> GraphSession<'g> {
             plans: Mutex::new(HashMap::new()),
             shard_states: Mutex::new(Vec::new()),
             planes: Mutex::new(HashMap::new()),
+            tuners: Mutex::new(Vec::new()),
             runs: AtomicU64::new(0),
         }
     }
@@ -355,6 +360,12 @@ impl<'g> GraphSession<'g> {
     /// Number of partition plans cached so far (diagnostic).
     pub fn cached_plans(&self) -> usize {
         self.plans.lock().expect("plan cache poisoned").len()
+    }
+
+    /// Number of adaptive-tuner state bundles currently parked in the
+    /// pool (diagnostic).
+    pub fn pooled_tuners(&self) -> usize {
+        self.tuners.lock().expect("tuner pool poisoned").len()
     }
 
     /// The partition plan for `shards` shards, built on first use and
@@ -549,11 +560,36 @@ impl<'g> GraphSession<'g> {
 
         // Full-scan edge-centric weights are only consulted by the flat
         // substrate (the partitioned scatter weighs whole shards from the
-        // plan instead).
-        let scan_weights = if cfg.schedule.needs_weights() && !cfg.bypass && partition.is_none() {
+        // plan instead). Adaptive flat runs always get them, so the tuner
+        // can switch scan-mode supersteps onto the edge-centric cut
+        // without a per-superstep rebuild.
+        let scan_weights = if partition.is_none()
+            && ((cfg.schedule.needs_weights() && !cfg.bypass) || cfg.adaptive)
+        {
             Some(self.degree_weights(program.mode()))
         } else {
             None
+        };
+
+        // ---- Adaptive tuner: pool the probe/trace state like stores ----
+        let (tuner, tuner_reused) = if cfg.adaptive {
+            let pooled = self.tuners.lock().expect("tuner pool poisoned").pop();
+            let reused = pooled.is_some();
+            let state = pooled.unwrap_or_default();
+            (
+                Some(AdaptiveTuner::new(
+                    &cfg,
+                    program.mode(),
+                    is_log,
+                    partition.is_some(),
+                    scan_weights.is_some(),
+                    state,
+                    cfg.threads.max(1),
+                )),
+                reused,
+            )
+        } else {
+            (None, false)
         };
 
         let mut engine = Engine::with_setup(
@@ -568,6 +604,7 @@ impl<'g> GraphSession<'g> {
                 scan_weights,
                 partition,
                 log,
+                tuner,
             },
         );
         let mut result = engine.run();
@@ -576,9 +613,10 @@ impl<'g> GraphSession<'g> {
         result.metrics.delta_occupancy = g.delta_occupancy();
         result.metrics.store_epoch_refreshed = store_epoch_refreshed;
         result.metrics.plane_reused = log_reused;
+        result.metrics.tuner_reused = tuner_reused;
 
         // ---- Return the parts to the pools -----------------------------
-        let (store, bitsets, shard_state, log) = engine.into_parts();
+        let (store, bitsets, shard_state, log, tuner_state) = engine.into_parts();
         self.stores
             .lock()
             .expect("store pool poisoned")
@@ -600,6 +638,9 @@ impl<'g> GraphSession<'g> {
                 .lock()
                 .expect("shard pool poisoned")
                 .push(st);
+        }
+        if let Some(ts) = tuner_state {
+            self.tuners.lock().expect("tuner pool poisoned").push(ts);
         }
         self.runs.fetch_add(1, Ordering::Relaxed);
         result
@@ -733,6 +774,31 @@ mod tests {
         assert_eq!(c.metrics.delivery_plane, DeliveryPlaneKind::Combined);
         assert!(!c.metrics.plane_reused);
         assert_eq!(session.pooled_planes(), 1);
+    }
+
+    #[test]
+    fn adaptive_runs_pool_tuner_state_like_stores() {
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 3);
+        let session = GraphSession::new(&g);
+        let cfg = session.config().adaptive(true);
+        let a = session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        assert!(a.metrics.adaptive);
+        assert!(!a.metrics.tuner_reused);
+        assert_eq!(
+            a.metrics.tuner_decisions.len(),
+            a.metrics.num_supersteps(),
+            "one decision per superstep"
+        );
+        assert_eq!(session.pooled_tuners(), 1);
+        let b = session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        assert!(b.metrics.tuner_reused, "second adaptive run recycles the state");
+        assert_eq!(a.values, b.values, "pooled tuner state must be bit-invisible");
+        assert_eq!(session.pooled_tuners(), 1);
+        // Fixed-config runs bypass the pool and record no decisions.
+        let c = session.run(&ConnectedComponents);
+        assert!(!c.metrics.adaptive);
+        assert!(c.metrics.tuner_decisions.is_empty());
+        assert_eq!(session.pooled_tuners(), 1);
     }
 
     #[test]

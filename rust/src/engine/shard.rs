@@ -70,8 +70,8 @@ impl ShardedBits {
         self.sets[s].set(v - self.plan.cuts()[s]);
     }
 
-    /// Total set bits across all shards (quiescent only; test support).
-    #[cfg(test)]
+    /// Total set bits across all shards (quiescent only — the adaptive
+    /// tuner reads the frontier size here at the superstep top).
     pub fn count(&self) -> usize {
         self.sets.iter().map(|b| b.count()).sum()
     }

@@ -1,0 +1,672 @@
+//! The adaptive superstep tuner: one controller, re-deciding the
+//! engine's execution knobs at every barrier.
+//!
+//! The paper's central observation is that vertex-centric workloads are
+//! irregular **across supersteps**: frontier density, message volume and
+//! mailbox contention swing by orders of magnitude within a single run
+//! (a BFS starts at one vertex, peaks at most of the graph, and drains
+//! back to a trickle). Yet the engine's knobs — [`Schedule`] dispatch,
+//! combining [`Strategy`], dense-frontier bypass — are fixed once per
+//! run at config time, so every fixed configuration is wrong for *some*
+//! phase of the run. [`AdaptiveTuner`] closes that loop: each superstep
+//! it reads cheap live signals (frontier density, messages per active
+//! vertex, mailbox fan-in, [`ContentionProbe`] counters, cross-shard
+//! flush imbalance) and re-selects, for the next superstep only:
+//!
+//! - **(a) vertex- vs edge-centric dispatch** — edge-centric cuts when
+//!   per-vertex work is message-dominated, the configured vertex-centric
+//!   policy otherwise (plus an FCFS upgrade under heavy flush skew on
+//!   the sharded substrate);
+//! - **(b) the combining strategy** — the paper's hybrid combiner when
+//!   fan-in or measured contention justify its lock-free combining, the
+//!   plain lock design when mailboxes are effectively private. The tuner
+//!   only moves between [`Strategy::Lock`] and [`Strategy::Hybrid`],
+//!   whose slot disciplines are interchangeable mid-run;
+//!   [`Strategy::CasNeutral`] changes the mailbox *representation*
+//!   (pre-loaded neutral element, no empty flag) and is therefore never
+//!   entered or left adaptively;
+//! - **(c) dense-frontier bypass** — the explicit active list while the
+//!   frontier is sparse, the full scan once it is dense enough that list
+//!   maintenance costs more than the activity checks it saves.
+//!
+//! **Bit-identity.** Every knob the tuner touches is an *execution*
+//! knob: none of them changes which vertices run, what they observe, or
+//! what gets delivered (the Strategy × Layout × Schedule × Partitioning
+//! parity grid pins this for fixed configs, and
+//! `rust/tests/test_adaptive.rs` extends the grid to adaptive runs).
+//! Adaptive runs therefore produce bit-identical values *and* identical
+//! superstep traces to any fixed configuration.
+//!
+//! **Hysteresis.** Each knob has a two-sided threshold band (switch up
+//! at `hi`, down at `lo`, hold in between) plus a per-knob dwell
+//! counter: after a switch the knob is frozen for
+//! [`DecisionTable::dwell`] supersteps. A signal oscillating around a
+//! single threshold therefore cannot make the tuner flip-flop.
+//!
+//! **Calibration.** The thresholds live in a [`DecisionTable`] derived
+//! from the virtual testbed's [`CostModel`]
+//! ([`DecisionTable::from_cost_model`]) — the same constants that price
+//! simulated runs decide real ones, so the simulator
+//! ([`crate::sim::SimEngine`] with `EngineConfig::adaptive`) and the
+//! real engine share one decision table and their traces can be
+//! compared like for like.
+
+use crate::combine::{ContentionProbe, Strategy};
+use crate::engine::{EngineConfig, Mode};
+use crate::metrics::TunerDecision;
+use crate::sched::{Schedule, DEFAULT_CHUNK};
+use crate::sim::CostModel;
+use crate::util::CachePadded;
+
+/// The knob selection for one superstep. Fixed-config runs use
+/// [`StepPlan::of`] (the `EngineConfig` verbatim) every superstep;
+/// adaptive runs get a fresh plan from [`AdaptiveTuner::decide`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepPlan {
+    /// Work-distribution policy for this superstep.
+    pub schedule: Schedule,
+    /// Mailbox synchronisation design for this superstep.
+    pub strategy: Strategy,
+    /// Explicit active list (`true`) vs full scan (`false`).
+    pub bypass: bool,
+}
+
+impl StepPlan {
+    /// The fixed plan an `EngineConfig` describes.
+    pub fn of(cfg: &EngineConfig) -> StepPlan {
+        StepPlan {
+            schedule: cfg.schedule,
+            strategy: cfg.strategy,
+            bypass: cfg.bypass,
+        }
+    }
+}
+
+/// Calibrated decision thresholds shared by the real engine and the
+/// simulator. Derive one from a [`CostModel`] (the calibration path) or
+/// take [`DecisionTable::default`], which is
+/// `from_cost_model(&CostModel::default())` — the compiled-in constants
+/// measured by `ipregel calibrate`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecisionTable {
+    /// Frontier density at/above which the full scan replaces the active
+    /// list (dense-frontier bypass-off).
+    pub scan_density_hi: f64,
+    /// Frontier density at/below which the active list replaces the full
+    /// scan. Strictly below [`DecisionTable::scan_density_hi`] — the gap
+    /// is the hysteresis band.
+    pub list_density_lo: f64,
+    /// Messages per active vertex at/above which edge-centric dispatch
+    /// wins (per-vertex work is edge-dominated, so vertex-count cuts
+    /// misbalance).
+    pub edge_msgs_hi: f64,
+    /// Messages per active vertex at/below which the vertex-centric
+    /// policy returns.
+    pub edge_msgs_lo: f64,
+    /// Mean mailbox fan-in at/above which the hybrid combiner's
+    /// amortised first-push beats the lock design.
+    pub fanin_hybrid_hi: f64,
+    /// Mean mailbox fan-in at/below which the plain lock design is
+    /// selected (no fan-in to amortise over).
+    pub fanin_lock_lo: f64,
+    /// Measured (CAS retries + contended lock acquisitions) per message
+    /// above which the tuner treats mailboxes as contended regardless of
+    /// mean fan-in (a few hub vertices can be hammered while the mean
+    /// stays low).
+    pub contention_hi: f64,
+    /// Max-over-mean cross-shard flush load above which shard dispatch
+    /// is upgraded from static to FCFS claiming.
+    pub flush_imbalance_hi: f64,
+    /// Supersteps a knob is frozen after switching (anti-flip-flop).
+    pub dwell: usize,
+}
+
+impl DecisionTable {
+    /// Derive thresholds from the virtual testbed's cost constants, so
+    /// the simulator and the real engine decide from one table.
+    pub fn from_cost_model(c: &CostModel) -> DecisionTable {
+        // Bypass break-even: maintaining the active list costs one store
+        // per activation; scanning costs half a hot access per visited
+        // vertex (the sim's activity-check price). The list wins while
+        //   density * t_store < (1 - density) * 0.5 * t_access_hit.
+        let scan_check = 0.5 * c.t_access_hit;
+        let d_star = scan_check / (c.t_store + scan_check);
+        let scan_density_hi = (d_star * 1.25).min(0.9);
+        let list_density_lo = (d_star * 0.75).max(0.05);
+
+        // Strategy break-even: smallest mailbox fan-in where the hybrid
+        // combiner (one locked first push amortised over c-1 CAS
+        // combines) beats the lock design by a 5% margin, in the
+        // hub-degenerate contention scenario `delivery_cost` models.
+        // No break-even up to 64 means this model says hybrid never
+        // pays: leave the threshold at infinity so fan-in alone can
+        // never select it (measured contention still can).
+        let mut fanin_hybrid_hi = f64::INFINITY;
+        for cand in 2u32..=64 {
+            let lock = c.delivery_cost(Strategy::Lock, cand, 32, cand as u64);
+            let hybrid = c.delivery_cost(Strategy::Hybrid, cand, 32, cand as u64);
+            if hybrid * 1.05 < lock {
+                fanin_hybrid_hi = cand as f64;
+                break;
+            }
+        }
+        let fanin_lock_lo = 1.0 + (fanin_hybrid_hi - 1.0) * 0.5;
+
+        // Edge-centric break-even: degree-weighted cuts pay roughly two
+        // stores per item (prefix sum + cut search) and only help when
+        // the work they balance — per-message combine + store — dwarfs
+        // the fixed per-vertex overhead they cannot balance.
+        let edge_msgs_hi = (2.0 * c.t_vertex / (c.t_combine + c.t_store)).max(2.0);
+        let edge_msgs_lo = edge_msgs_hi * 0.5;
+
+        DecisionTable {
+            scan_density_hi,
+            list_density_lo,
+            edge_msgs_hi,
+            edge_msgs_lo,
+            fanin_hybrid_hi,
+            fanin_lock_lo,
+            // One retry in twenty deliveries: the point where the
+            // expected retry overhead stops being measurement noise.
+            contention_hi: 0.05,
+            // FCFS shard claiming pays one chunk-claim per shard; a 1.5×
+            // max-over-mean flush skew reliably buys that back.
+            flush_imbalance_hi: 1.5,
+            dwell: 2,
+        }
+    }
+}
+
+impl Default for DecisionTable {
+    fn default() -> Self {
+        Self::from_cost_model(&CostModel::default())
+    }
+}
+
+/// The pooled allocation bundle behind an [`AdaptiveTuner`]: per-worker
+/// contention probes and the decision-trace buffer. Sessions pool one
+/// per [`crate::engine::GraphSession`] and recycle it across adaptive
+/// runs, exactly like stores and delivery planes.
+#[derive(Default)]
+pub struct TunerState {
+    /// One probe per worker, cache-padded so the counters never become
+    /// the contention they measure.
+    probes: Vec<CachePadded<ContentionProbe>>,
+    /// Decision trace of the current run, drained into
+    /// `RunMetrics::tuner_decisions` at run end.
+    trace: Vec<TunerDecision>,
+}
+
+impl TunerState {
+    /// Grow to at least `workers` probes (never shrinks — pooled state
+    /// serves any smaller run).
+    fn ensure_workers(&mut self, workers: usize) {
+        if self.probes.len() < workers {
+            self.probes
+                .resize_with(workers, || CachePadded::new(ContentionProbe::new()));
+        }
+    }
+
+    /// Re-prime for a fresh run: clear the trace, zero every probe.
+    fn reset(&mut self) {
+        self.trace.clear();
+        for p in &self.probes {
+            let _ = p.take();
+        }
+    }
+}
+
+/// The per-run adaptive controller. Owned by the engine for the duration
+/// of one run; its [`TunerState`] goes back to the session pool
+/// afterwards. See the [module docs](self) for the decision model.
+pub struct AdaptiveTuner {
+    table: DecisionTable,
+    /// The configured plan — superstep 0's plan (no live signals exist
+    /// before the first barrier) and the anchor the trace is read
+    /// against.
+    base: StepPlan,
+    /// The vertex-centric policy the schedule knob falls back to (the
+    /// configured schedule, or dynamic chunking when the config itself
+    /// is edge-centric).
+    vertex_schedule: Schedule,
+    cur: StepPlan,
+    /// Whether the strategy knob may move (push-mode, combined-plane,
+    /// non-CasNeutral runs only — see the module docs).
+    strategy_tunable: bool,
+    /// Whether edge-centric full scans have precomputed degree weights
+    /// available (flat substrate; the sharded scatter always weighs
+    /// whole shards from the plan).
+    can_edge_scan: bool,
+    partitioned: bool,
+    // Per-knob dwell counters (supersteps left before the knob may move).
+    cool_bypass: usize,
+    cool_schedule: usize,
+    cool_strategy: usize,
+    // Signals observed at the previous barrier.
+    last_messages: u64,
+    /// Messages of the superstep before last — the send generation whose
+    /// consumers `last_delivered` counted (a send is consumed one
+    /// superstep after it is made, so the fan-in quotient must pair
+    /// across that one-superstep lag).
+    prev_messages: u64,
+    last_delivered: u64,
+    last_contention: u64,
+    last_flush_imbalance: f64,
+    /// Active count of the superstep currently executing (denominator
+    /// for the next decision's messages-per-active signal).
+    last_active: usize,
+    seen_barrier: bool,
+    state: TunerState,
+}
+
+impl AdaptiveTuner {
+    /// Controller for one run. `workers` sizes the probe array;
+    /// `can_edge_scan` reports whether flat full scans have cached
+    /// degree weights (sessions always provide them on adaptive flat
+    /// runs; the guard keeps a mis-assembled engine from panicking in
+    /// `Schedule::chunks`).
+    pub(crate) fn new(
+        cfg: &EngineConfig,
+        mode: Mode,
+        is_log: bool,
+        partitioned: bool,
+        can_edge_scan: bool,
+        mut state: TunerState,
+        workers: usize,
+    ) -> AdaptiveTuner {
+        state.ensure_workers(workers);
+        state.reset();
+        let base = StepPlan::of(cfg);
+        AdaptiveTuner {
+            table: DecisionTable::default(),
+            base,
+            vertex_schedule: match cfg.schedule {
+                Schedule::EdgeCentric => Schedule::Dynamic {
+                    chunk: DEFAULT_CHUNK,
+                },
+                s => s,
+            },
+            cur: base,
+            strategy_tunable: mode == Mode::Push && !is_log && cfg.strategy != Strategy::CasNeutral,
+            can_edge_scan,
+            partitioned,
+            cool_bypass: 0,
+            cool_schedule: 0,
+            cool_strategy: 0,
+            last_messages: 0,
+            prev_messages: 0,
+            last_delivered: 0,
+            last_contention: 0,
+            last_flush_imbalance: 1.0,
+            last_active: 0,
+            seen_barrier: false,
+            state,
+        }
+    }
+
+    /// Override the decision table (e.g. with thresholds derived from a
+    /// freshly calibrated or deliberately skewed cost model).
+    pub(crate) fn with_table(mut self, table: DecisionTable) -> AdaptiveTuner {
+        self.table = table;
+        self
+    }
+
+    /// The per-worker contention probes (engine hands `probes()[tid]` to
+    /// each worker's context).
+    pub(crate) fn probes(&self) -> &[CachePadded<ContentionProbe>] {
+        &self.state.probes
+    }
+
+    /// Select the plan for the superstep about to run. `active` is the
+    /// frontier size (known before compute), `n` the vertex count; every
+    /// other signal comes from the previous barrier's
+    /// [`AdaptiveTuner::observe`].
+    pub(crate) fn decide(&mut self, superstep: usize, active: usize, n: usize) -> StepPlan {
+        let density = active as f64 / n.max(1) as f64;
+        let msgs_per_active = if self.seen_barrier && self.last_active > 0 {
+            self.last_messages as f64 / self.last_active as f64
+        } else {
+            0.0
+        };
+        // Generation-matched fan-in: `last_delivered` counts the
+        // recipients that consumed the superstep-before-last's sends
+        // (`prev_messages`) — dividing this superstep's send volume by
+        // last superstep's consumers would wildly overestimate fan-in
+        // while the frontier grows.
+        let fan_in = if self.seen_barrier && self.last_delivered > 0 && self.prev_messages > 0 {
+            self.prev_messages as f64 / self.last_delivered as f64
+        } else {
+            0.0
+        };
+        let contention_per_msg = if self.seen_barrier && self.last_messages > 0 {
+            self.last_contention as f64 / self.last_messages as f64
+        } else {
+            0.0
+        };
+
+        let mut plan = self.cur;
+        if self.seen_barrier {
+            self.cool_bypass = self.cool_bypass.saturating_sub(1);
+            self.cool_schedule = self.cool_schedule.saturating_sub(1);
+            self.cool_strategy = self.cool_strategy.saturating_sub(1);
+
+            // (c) dense-frontier bypass: two-sided density band.
+            if self.cool_bypass == 0 {
+                let want = if density >= self.table.scan_density_hi {
+                    false
+                } else if density <= self.table.list_density_lo {
+                    true
+                } else {
+                    plan.bypass
+                };
+                if want != plan.bypass {
+                    plan.bypass = want;
+                    self.cool_bypass = self.table.dwell;
+                }
+            }
+
+            // (a) vertex- vs edge-centric dispatch. Edge-centric full
+            // scans need precomputed weights; in list mode the weights
+            // are rebuilt from the (sparse) active list — the documented
+            // §V-A fallback, cheap exactly when the tuner would pick it.
+            if self.cool_schedule == 0 {
+                let edge_ok = self.partitioned || plan.bypass || self.can_edge_scan;
+                let mut want = if msgs_per_active >= self.table.edge_msgs_hi && edge_ok {
+                    Schedule::EdgeCentric
+                } else if msgs_per_active <= self.table.edge_msgs_lo {
+                    self.vertex_schedule
+                } else {
+                    plan.schedule
+                };
+                // Heavy cross-shard flush skew: static shard assignment
+                // strands workers behind one hot destination shard —
+                // upgrade to FCFS claiming.
+                if self.partitioned
+                    && want == Schedule::Static
+                    && self.last_flush_imbalance >= self.table.flush_imbalance_hi
+                {
+                    want = Schedule::Dynamic {
+                        chunk: DEFAULT_CHUNK,
+                    };
+                }
+                if want != plan.schedule {
+                    plan.schedule = want;
+                    self.cool_schedule = self.table.dwell;
+                }
+            }
+
+            // (b) lock vs hybrid combining.
+            if self.strategy_tunable && self.cool_strategy == 0 {
+                let contended = contention_per_msg >= self.table.contention_hi;
+                let want = if fan_in >= self.table.fanin_hybrid_hi || contended {
+                    Strategy::Hybrid
+                } else if fan_in > 0.0 && fan_in <= self.table.fanin_lock_lo && !contended {
+                    Strategy::Lock
+                } else {
+                    plan.strategy
+                };
+                if want != plan.strategy {
+                    plan.strategy = want;
+                    self.cool_strategy = self.table.dwell;
+                }
+            }
+        }
+
+        let switched = self
+            .state
+            .trace
+            .last()
+            .is_some_and(|d| d.mode() != (plan.schedule, plan.strategy, plan.bypass));
+        self.state.trace.push(TunerDecision {
+            superstep,
+            schedule: plan.schedule,
+            strategy: plan.strategy,
+            bypass: plan.bypass,
+            frontier_density: density,
+            msgs_per_active,
+            fan_in,
+            contention_per_msg,
+            flush_imbalance: self.last_flush_imbalance,
+            switched,
+        });
+        self.cur = plan;
+        self.last_active = active;
+        plan
+    }
+
+    /// Feed the just-finished superstep's signals back at the barrier:
+    /// total messages, recipients that consumed a payload, and the
+    /// cross-shard flush max-over-mean (1.0 when flat or nothing
+    /// flushed). Drains the per-worker contention probes.
+    pub(crate) fn observe(&mut self, messages: u64, delivered: u64, flush_imbalance: f64) {
+        let mut contention = 0u64;
+        for p in &self.state.probes {
+            let (retries, contended) = p.take();
+            contention += retries + contended;
+        }
+        self.prev_messages = self.last_messages;
+        self.last_messages = messages;
+        self.last_delivered = delivered;
+        self.last_contention = contention;
+        self.last_flush_imbalance = flush_imbalance;
+        self.seen_barrier = true;
+    }
+
+    /// Drain the decision trace (into `RunMetrics::tuner_decisions`).
+    pub(crate) fn take_trace(&mut self) -> Vec<TunerDecision> {
+        std::mem::take(&mut self.state.trace)
+    }
+
+    /// Disassemble into the poolable state bundle.
+    pub(crate) fn into_state(self) -> TunerState {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tuner(cfg: &EngineConfig) -> AdaptiveTuner {
+        AdaptiveTuner::new(cfg, Mode::Push, false, false, true, TunerState::default(), 2)
+    }
+
+    #[test]
+    fn default_table_is_the_sim_cost_models_table() {
+        // The calibration contract: the engine's default thresholds ARE
+        // the simulator's — one decision table.
+        assert_eq!(
+            DecisionTable::default(),
+            DecisionTable::from_cost_model(&CostModel::default())
+        );
+        let t = DecisionTable::default();
+        assert!(t.list_density_lo < t.scan_density_hi, "hysteresis band");
+        assert!(t.edge_msgs_lo < t.edge_msgs_hi);
+        assert!(t.fanin_lock_lo < t.fanin_hybrid_hi);
+        assert!(t.dwell >= 1);
+    }
+
+    #[test]
+    fn superstep_zero_runs_the_configured_plan() {
+        let cfg = EngineConfig::default().bypass(false);
+        let mut t = tuner(&cfg);
+        // 1 active vertex out of 1000 — far below the list threshold, but
+        // there are no live signals yet: the base plan applies verbatim.
+        let plan = t.decide(0, 1, 1000);
+        assert_eq!(plan, StepPlan::of(&cfg));
+        assert!(!t.take_trace()[0].switched);
+    }
+
+    #[test]
+    fn sparse_frontier_switches_to_the_active_list_after_first_barrier() {
+        let cfg = EngineConfig::default().bypass(false);
+        let mut t = tuner(&cfg);
+        t.decide(0, 1, 1000);
+        t.observe(10, 10, 1.0);
+        let plan = t.decide(1, 5, 1000);
+        assert!(plan.bypass, "density 0.005 is deep in list territory");
+        let trace = t.take_trace();
+        assert!(trace[1].switched);
+        assert_eq!(trace[1].superstep, 1);
+    }
+
+    #[test]
+    fn dense_frontier_switches_to_the_full_scan() {
+        let cfg = EngineConfig::default().bypass(true);
+        let mut t = tuner(&cfg);
+        t.decide(0, 900, 1000);
+        t.observe(1000, 900, 1.0);
+        let plan = t.decide(1, 950, 1000);
+        assert!(!plan.bypass, "density 0.95 is scan territory");
+    }
+
+    #[test]
+    fn hysteresis_band_holds_the_previous_choice() {
+        let cfg = EngineConfig::default().bypass(true);
+        let table = DecisionTable::default();
+        let mid = (table.scan_density_hi + table.list_density_lo) / 2.0;
+        let mut t = tuner(&cfg);
+        t.decide(0, 10, 1000);
+        for s in 1..6 {
+            t.observe(10, 10, 1.0);
+            let plan = t.decide(s, (mid * 1000.0) as usize, 1000);
+            assert!(plan.bypass, "mid-band density must not move the knob");
+        }
+        assert_eq!(t.take_trace().iter().filter(|d| d.switched).count(), 0);
+    }
+
+    #[test]
+    fn dwell_freezes_a_knob_after_a_switch() {
+        let cfg = EngineConfig::default().bypass(false);
+        let mut t = tuner(&cfg);
+        t.decide(0, 1, 1000);
+        t.observe(10, 10, 1.0);
+        let p1 = t.decide(1, 5, 1000);
+        assert!(p1.bypass, "sparse: switch to list");
+        // Immediately dense again — but the knob just moved and must
+        // dwell, then move only after the cooldown expires.
+        t.observe(10, 10, 1.0);
+        let p2 = t.decide(2, 950, 1000);
+        assert!(p2.bypass, "dwell holds the switch");
+        t.observe(10, 10, 1.0);
+        let p3 = t.decide(3, 950, 1000);
+        assert!(!p3.bypass, "cooldown expired: dense wins");
+    }
+
+    #[test]
+    fn high_fan_in_selects_hybrid_and_low_fan_in_returns_to_lock() {
+        let cfg = EngineConfig::default(); // Strategy::Lock base
+        let mut t = tuner(&cfg);
+        t.decide(0, 500, 1000);
+        // Superstep 0 sent 5000 messages; nothing consumed yet, so the
+        // fan-in signal is still silent and the strategy must hold.
+        t.observe(5000, 0, 1.0);
+        let plan = t.decide(1, 500, 1000);
+        assert_eq!(plan.strategy, Strategy::Lock, "no consumers observed yet");
+        // Superstep 1: 500 recipients consumed those 5000 sends —
+        // generation-matched fan-in 10 ≫ threshold.
+        t.observe(5000, 500, 1.0);
+        let plan = t.decide(2, 500, 1000);
+        assert_eq!(plan.strategy, Strategy::Hybrid);
+        // Fan-in collapses to 1: after the dwell, lock returns.
+        for s in 3..6 {
+            t.observe(500, 500, 1.0);
+            t.decide(s, 500, 1000);
+        }
+        assert_eq!(t.cur.strategy, Strategy::Lock);
+    }
+
+    #[test]
+    fn cas_neutral_strategy_is_never_touched() {
+        let cfg = EngineConfig::default().strategy(Strategy::CasNeutral);
+        let mut t = tuner(&cfg);
+        t.decide(0, 500, 1000);
+        t.observe(50_000, 0, 1.0);
+        t.decide(1, 500, 1000);
+        t.observe(50_000, 500, 1.0); // generation-matched fan-in 100
+        let plan = t.decide(2, 500, 1000);
+        assert_eq!(
+            plan.strategy,
+            Strategy::CasNeutral,
+            "CasNeutral changes the slot representation; the tuner must not leave it"
+        );
+    }
+
+    #[test]
+    fn message_heavy_supersteps_select_edge_centric_dispatch() {
+        let cfg = EngineConfig::default();
+        let mut t = tuner(&cfg);
+        t.decide(0, 100, 1000);
+        // 100 active sent 5000 messages: 50 msgs/active ≫ edge_msgs_hi.
+        t.observe(5000, 800, 1.0);
+        let plan = t.decide(1, 800, 1000);
+        assert_eq!(plan.schedule, Schedule::EdgeCentric);
+        // Message volume collapses: vertex-centric returns post-dwell.
+        for s in 2..6 {
+            t.observe(100, 100, 1.0);
+            t.decide(s, 100, 1000);
+        }
+        assert_eq!(t.cur.schedule, Schedule::Static);
+    }
+
+    #[test]
+    fn edge_centric_scan_requires_weights() {
+        let cfg = EngineConfig::default().bypass(false);
+        let mut t = AdaptiveTuner::new(
+            &cfg,
+            Mode::Push,
+            false,
+            false,
+            /* can_edge_scan = */ false,
+            TunerState::default(),
+            1,
+        );
+        // Density in the hold band keeps scan mode; message-heavy load
+        // wants edge-centric — but scans have no weights, so the knob
+        // must stay put.
+        t.decide(0, 500, 1000);
+        t.observe(50_000, 500, 1.0);
+        let plan = t.decide(1, 500, 1000);
+        assert!(!plan.bypass);
+        assert_ne!(plan.schedule, Schedule::EdgeCentric);
+    }
+
+    #[test]
+    fn flush_skew_upgrades_static_shard_dispatch_to_fcfs() {
+        let cfg = EngineConfig::default();
+        let mut t = AdaptiveTuner::new(
+            &cfg,
+            Mode::Push,
+            false,
+            /* partitioned = */ true,
+            true,
+            TunerState::default(),
+            2,
+        );
+        t.decide(0, 500, 1000);
+        t.observe(1000, 900, /* flush imbalance */ 3.0);
+        let plan = t.decide(1, 500, 1000);
+        assert_eq!(
+            plan.schedule,
+            Schedule::Dynamic {
+                chunk: DEFAULT_CHUNK
+            }
+        );
+        let trace = t.take_trace();
+        assert_eq!(trace[1].flush_imbalance, 3.0, "signal lands in the trace");
+    }
+
+    #[test]
+    fn pooled_state_is_reset_at_checkout() {
+        let cfg = EngineConfig::default();
+        let mut t = tuner(&cfg);
+        t.decide(0, 1, 10);
+        t.probes()[0].cas_retries.fetch_add(5, std::sync::atomic::Ordering::Relaxed);
+        let state = t.into_state();
+        assert!(!state.trace.is_empty());
+        let t2 = AdaptiveTuner::new(&cfg, Mode::Push, false, false, true, state, 4);
+        assert_eq!(t2.state.trace.len(), 0, "trace cleared");
+        assert_eq!(t2.probes().len(), 4, "probe array grown to the run's workers");
+        assert_eq!(t2.probes()[0].take(), (0, 0), "probes zeroed");
+    }
+}

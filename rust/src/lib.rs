@@ -24,6 +24,14 @@
 //! - the paper's optimisations as composable components: hybrid
 //!   combiners ([`combine`]), externalised vertex layouts ([`layout`]),
 //!   edge-centric & dynamic scheduling ([`sched`]);
+//! - an **adaptive superstep tuner** ([`engine::tune`]): a per-barrier
+//!   controller re-selecting schedule / combining strategy /
+//!   dense-frontier bypass from live signals (frontier density, message
+//!   volume, contention probes, flush imbalance) with hysteresis,
+//!   thresholds calibrated from the simulator's cost model, and a
+//!   per-superstep decision trace in
+//!   [`metrics::RunMetrics::tuner_decisions`] — bit-identical results
+//!   to any fixed configuration;
 //! - a **partitioned execution substrate**
 //!   ([`engine::Partitioning`], [`graph::partition`]): cache-sized,
 //!   edge-balanced shards executed scatter/flush/apply with

@@ -9,6 +9,9 @@
 //!                   real engine run (GraphSession)
 //!                   [--threads N] [--schedule S] [--strategy S]
 //!                   [--layout aos|soa] [--bypass] [--shards none|K|cache[:bytes]]
+//!                   [--adaptive]  re-decide schedule/strategy/bypass each
+//!                                 superstep from live signals (prints the
+//!                                 per-switch decision trace)
 //!                   [--iterations N] [--source V] [--rounds R]
 //!                   (lpa and triangles are log-plane programs: full
 //!                    message multisets, no combiner — see DESIGN.md §2.6)
@@ -148,16 +151,41 @@ fn engine_cfg(opts: &Opts) -> Result<EngineConfig> {
         .layout(layout)
         .bypass(opts.flag("bypass"))
         .partitioning(partitioning)
+        .adaptive(opts.flag("adaptive"))
         .max_supersteps(opts.get_num("max-supersteps", 100_000usize)?))
 }
 
 const RUN_FLAGS: &[&str] = &[
-    "algo", "threads", "schedule", "strategy", "layout", "bypass", "shards", "iterations",
-    "source", "rounds", "max-supersteps", "dir", "mutate-batch", "mutate-rounds", "mutate-seed",
+    "algo", "threads", "schedule", "strategy", "layout", "bypass", "shards", "adaptive",
+    "iterations", "source", "rounds", "max-supersteps", "dir", "mutate-batch", "mutate-rounds",
+    "mutate-seed",
 ];
 
 fn print_run(label: &str, metrics: &RunMetrics) {
     println!("{label}: {}", metrics.summary());
+    if metrics.adaptive {
+        print_tuner_trace(&metrics.tuner_decisions);
+    }
+}
+
+/// Compact per-switch trace of an adaptive run: one line per superstep
+/// whose knob plan changed, with the signals that drove the choice.
+fn print_tuner_trace(decisions: &[ipregel::metrics::TunerDecision]) {
+    for d in decisions.iter().filter(|d| d.switched || d.superstep == 0) {
+        println!(
+            "  tuner s{}: {:?} / {:?} / {} (density {:.3}, msgs/active {:.1}, \
+             fan-in {:.2}, contention {:.4}, flush-imb {:.2})",
+            d.superstep,
+            d.schedule,
+            d.strategy,
+            if d.bypass { "list" } else { "scan" },
+            d.frontier_density,
+            d.msgs_per_active,
+            d.fan_in,
+            d.contention_per_msg,
+            d.flush_imbalance,
+        );
+    }
 }
 
 fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
@@ -215,6 +243,9 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
                 r.mean_imbalance,
                 fmt_duration(r.wall)
             );
+            if !r.decisions.is_empty() {
+                print_tuner_trace(&r.decisions);
+            }
             show(&r.values);
         } else {
             let r = GraphSession::with_config(g, cfg).run(p);

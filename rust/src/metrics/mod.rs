@@ -1,5 +1,7 @@
 //! Run metrics: per-superstep statistics and whole-run summaries.
 
+use crate::combine::Strategy;
+use crate::sched::Schedule;
 use std::time::Duration;
 
 /// Statistics for one superstep.
@@ -78,6 +80,68 @@ impl std::fmt::Display for ScheduleFallback {
     }
 }
 
+/// One superstep's knob selection by the adaptive tuner
+/// (`engine/tune.rs`), together with the live signals it decided on.
+/// Recorded into [`RunMetrics::tuner_decisions`] so mode switching is a
+/// testable artefact, not a benchmark anecdote.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TunerDecision {
+    /// Superstep this plan applied to.
+    pub superstep: usize,
+    /// Work-distribution policy selected for the superstep.
+    pub schedule: Schedule,
+    /// Mailbox synchronisation design selected for the superstep.
+    pub strategy: Strategy,
+    /// Whether the superstep iterated the explicit active list (`true`)
+    /// or full-scanned with a per-vertex activity check (`false`).
+    pub bypass: bool,
+    /// Active vertices / total vertices at superstep start.
+    pub frontier_density: f64,
+    /// Previous superstep's messages per active vertex (0 before the
+    /// first barrier).
+    pub msgs_per_active: f64,
+    /// Mean mailbox fan-in of the most recently consumed send
+    /// generation: the sends of superstep `k-1` divided by the
+    /// recipients that consumed them during superstep `k` (a send is
+    /// consumed one superstep after it is made, so the quotient pairs
+    /// across that lag; 0 until both sides have been observed).
+    pub fan_in: f64,
+    /// Previous superstep's (CAS retries + contended lock acquisitions)
+    /// per message, from the per-worker [`ContentionProbe`]s (always 0 on
+    /// simulator replays, which have no live probes).
+    ///
+    /// [`ContentionProbe`]: crate::combine::ContentionProbe
+    pub contention_per_msg: f64,
+    /// Previous superstep's max-over-mean cross-shard flush load (1.0 =
+    /// balanced or not partitioned).
+    pub flush_imbalance: f64,
+    /// Whether this plan differs from the previous superstep's.
+    pub switched: bool,
+}
+
+impl TunerDecision {
+    /// The (schedule, strategy, bypass) knob tuple — the "mode" whose
+    /// distinct count the adaptive acceptance tests assert on.
+    pub fn mode(&self) -> (Schedule, Strategy, bool) {
+        (self.schedule, self.strategy, self.bypass)
+    }
+}
+
+/// Distinct (schedule, strategy, bypass) modes in a decision trace —
+/// the quantity the adaptive acceptance tests assert on. Shared by
+/// [`RunMetrics::tuner_modes`] and the simulator's
+/// `SimReport::decisions` consumers so "mode" means one thing
+/// everywhere.
+pub fn distinct_modes(trace: &[TunerDecision]) -> usize {
+    let mut seen: Vec<(Schedule, Strategy, bool)> = Vec::new();
+    for d in trace {
+        if !seen.contains(&d.mode()) {
+            seen.push(d.mode());
+        }
+    }
+    seen.len()
+}
+
 /// Whole-run metrics returned by every engine.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -132,6 +196,15 @@ pub struct RunMetrics {
     /// session instead of allocating a fresh one (the plane analogue of
     /// [`RunMetrics::store_reused`]).
     pub plane_reused: bool,
+    /// Whether the run re-decided its Schedule/Strategy/bypass knobs at
+    /// every superstep barrier (`EngineConfig::adaptive`).
+    pub adaptive: bool,
+    /// Whether an adaptive run recycled pooled tuner state (per-worker
+    /// contention probes + trace buffer) from its session.
+    pub tuner_reused: bool,
+    /// Adaptive runs: one entry per superstep — the knob plan applied and
+    /// the signals that chose it. Empty on fixed-config runs.
+    pub tuner_decisions: Vec<TunerDecision>,
 }
 
 impl RunMetrics {
@@ -160,6 +233,18 @@ impl RunMetrics {
         self.supersteps.iter().map(|s| s.active_vertices as u64).sum()
     }
 
+    /// Adaptive runs: supersteps whose knob plan differed from the
+    /// previous superstep's (0 on fixed-config runs).
+    pub fn tuner_switches(&self) -> usize {
+        self.tuner_decisions.iter().filter(|d| d.switched).count()
+    }
+
+    /// Adaptive runs: distinct (schedule, strategy, bypass) modes the
+    /// tuner selected across the run (0 on fixed-config runs).
+    pub fn tuner_modes(&self) -> usize {
+        distinct_modes(&self.tuner_decisions)
+    }
+
     /// Compact single-line summary.
     pub fn summary(&self) -> String {
         let mut s = format!(
@@ -185,6 +270,13 @@ impl RunMetrics {
                 self.graph_epoch,
                 self.delta_edges,
                 self.delta_occupancy * 100.0
+            ));
+        }
+        if self.adaptive {
+            s.push_str(&format!(
+                " adaptive switches={} modes={}",
+                self.tuner_switches(),
+                self.tuner_modes()
             ));
         }
         if let Some(fb) = &self.schedule_fallback {
@@ -319,6 +411,35 @@ mod tests {
         assert!(s.contains("retained=9"));
         // Combined runs (the default) show no plane section.
         assert!(!RunMetrics::default().summary().contains("plane="));
+    }
+
+    #[test]
+    fn adaptive_runs_get_a_tuner_summary_section() {
+        let d = |superstep: usize, bypass: bool, switched: bool| TunerDecision {
+            superstep,
+            schedule: Schedule::Static,
+            strategy: Strategy::Lock,
+            bypass,
+            frontier_density: 0.1,
+            msgs_per_active: 1.0,
+            fan_in: 1.0,
+            contention_per_msg: 0.0,
+            flush_imbalance: 1.0,
+            switched,
+        };
+        let m = RunMetrics {
+            adaptive: true,
+            tuner_decisions: vec![d(0, false, false), d(1, true, true), d(2, true, false)],
+            ..Default::default()
+        };
+        assert_eq!(m.tuner_switches(), 1);
+        assert_eq!(m.tuner_modes(), 2, "scan and list variants of the same knobs");
+        assert_eq!(m.tuner_decisions[1].mode(), (Schedule::Static, Strategy::Lock, true));
+        let s = m.summary();
+        assert!(s.contains("adaptive switches=1 modes=2"));
+        // Fixed-config runs show no adaptive section and count no modes.
+        assert!(!RunMetrics::default().summary().contains("adaptive"));
+        assert_eq!(RunMetrics::default().tuner_modes(), 0);
     }
 
     #[test]

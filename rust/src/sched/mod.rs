@@ -29,7 +29,7 @@ pub use pool::{parallel_for, parallel_for_hinted};
 pub const DEFAULT_CHUNK: usize = 256;
 
 /// A work-distribution policy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Schedule {
     /// Equal item counts per thread (baseline).
     Static,

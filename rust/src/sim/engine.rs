@@ -13,10 +13,12 @@
 
 use crate::combine::plane::DeliveryPlane;
 use crate::combine::{Combiner, Strategy};
+use crate::engine::tune::{AdaptiveTuner, DecisionTable, StepPlan, TunerState};
 use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, VertexProgram};
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
 use crate::graph::partition::PartitionPlan;
 use crate::layout::{SoaStore, VertexStore};
+use crate::metrics::TunerDecision;
 use crate::sim::machine::VirtualMachine;
 use crate::sim::CostModel;
 use crate::util::bitset::BitSet;
@@ -56,6 +58,12 @@ pub struct SimReport<V> {
     pub messages: u64,
     /// Mean imbalance (makespan / mean busy) across compute regions.
     pub mean_imbalance: f64,
+    /// Adaptive runs (`EngineConfig::adaptive`): the per-superstep knob
+    /// trace, decided from the same [`DecisionTable`] the real engine
+    /// uses — derived here from *this simulator's* cost model, so a
+    /// recalibrated model re-decides both worlds consistently. Empty on
+    /// fixed-config simulations.
+    pub decisions: Vec<TunerDecision>,
 }
 
 /// Serial instrumented engine. Construct with the *same*
@@ -283,15 +291,18 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
         }
         let mut bcast_cur = BitSet::new(n);
 
-        // Scan-mode edge-centric weights: full degree vector, built once.
-        let scan_weights: Option<Vec<u64>> = if cfg.schedule.needs_weights() && !cfg.bypass {
-            Some(match mode {
-                Mode::Push => g.out_degrees_u64(),
-                Mode::Pull => g.in_degrees_u64(),
-            })
-        } else {
-            None
-        };
+        // Scan-mode edge-centric weights: full degree vector, built once
+        // (adaptive runs always get one, mirroring the session, so the
+        // tuner may select edge-centric scans).
+        let scan_weights: Option<Vec<u64>> =
+            if (cfg.schedule.needs_weights() && !cfg.bypass) || cfg.adaptive {
+                Some(match mode {
+                    Mode::Push => g.out_degrees_u64(),
+                    Mode::Pull => g.in_degrees_u64(),
+                })
+            } else {
+                None
+            };
 
         // Partitioned substrate: the same plan the real engine would
         // build. Values are unaffected (pass A delivers for real either
@@ -299,6 +310,27 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
         let plan: Option<PartitionPlan> = match cfg.partitioning.resolve(n) {
             0 => None,
             s => Some(PartitionPlan::build(g, s)),
+        };
+
+        // Adaptive replay: the same controller the real engine runs,
+        // with thresholds derived from THIS simulator's cost model (the
+        // shared decision table) and no live probes (one serial thread
+        // never contends, so the contention signal is honestly zero).
+        let mut tuner: Option<AdaptiveTuner> = if cfg.adaptive {
+            Some(
+                AdaptiveTuner::new(
+                    cfg,
+                    mode,
+                    is_log,
+                    plan.is_some(),
+                    scan_weights.is_some(),
+                    TunerState::default(),
+                    0,
+                )
+                .with_table(DecisionTable::from_cost_model(cost)),
+            )
+        } else {
+            None
         };
 
         let mut agg_prev: Option<AggValue<P>> = None;
@@ -312,6 +344,13 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             if active.is_empty() || superstep >= cfg.max_supersteps {
                 break;
             }
+            // Per-superstep knob plan: the adaptive controller re-decides
+            // schedule/strategy/bypass for *pricing* (execution below is
+            // serial and value-identical under every knob).
+            let knobs = match tuner.as_mut() {
+                Some(t) => t.decide(superstep, active.len(), n),
+                None => StepPlan::of(cfg),
+            };
             step.active_next.clear_all();
             step.touched.clear();
             step.sends_log.clear();
@@ -401,7 +440,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
 
             let price_delivery = |dst: VertexId| -> f64 {
                 let c = step.counts[dst as usize].max(1);
-                cost.delivery_cost(cfg.strategy, c, cfg.threads, push_deliveries)
+                cost.delivery_cost(knobs.strategy, c, cfg.threads, push_deliveries)
                     + push_mem
                     + cost.t_store
             };
@@ -459,6 +498,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             }
 
             // ---- Dispatch to the virtual machine ----------------------
+            let mut flush_imb = 1.0f64;
             let stats = if let Some(plan) = &plan {
                 // Partitioned scatter: whole shards are the dispatch
                 // unit. Each shard's cost is the sum of its active items
@@ -506,7 +546,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                         }
                     }
                 }
-                if !cfg.bypass {
+                if !knobs.bypass {
                     let mut active_in = vec![0usize; shards];
                     for it in &items {
                         active_in[plan.shard_of(it.v)] += 1;
@@ -516,9 +556,9 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                             (plan.shard_len(s) - active_in[s]) as f64 * cost.t_access_hit * 0.5;
                     }
                 }
-                let shard_sched = cfg.schedule.for_shards();
+                let shard_sched = knobs.schedule.for_shards();
                 let shard_weights: Option<Vec<u64>> = if shard_sched.needs_weights() {
-                    Some(if cfg.bypass {
+                    Some(if knobs.bypass {
                         let mut w = vec![0u64; shards];
                         for it in &items {
                             w[plan.shard_of(it.v)] += match mode {
@@ -546,6 +586,9 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 // cross-shard messages owner-exclusively.
                 let total_cross: u64 = cross_to.iter().sum();
                 if total_cross > 0 {
+                    flush_imb = cross_to.iter().copied().max().unwrap_or(0) as f64
+                        * shards as f64
+                        / total_cross as f64;
                     let per_flush = if is_log {
                         // Drain a buffered message into the flush task's
                         // log segment.
@@ -567,8 +610,8 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     );
                 }
                 scatter
-            } else if cfg.bypass {
-                let weights: Option<Vec<u64>> = if cfg.schedule.needs_weights() {
+            } else if knobs.bypass {
+                let weights: Option<Vec<u64>> = if knobs.schedule.needs_weights() {
                     Some(
                         active
                             .iter()
@@ -582,7 +625,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     None
                 };
                 vm.region(
-                    cfg.schedule,
+                    knobs.schedule,
                     &active_costs,
                     weights.as_deref(),
                     cost.t_chunk_claim,
@@ -595,7 +638,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     full[it.v as usize] = c;
                 }
                 vm.region(
-                    cfg.schedule,
+                    knobs.schedule,
                     &full,
                     scan_weights.as_deref(),
                     cost.t_chunk_claim,
@@ -606,9 +649,9 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
 
             // ---- Barrier: serial bookkeeping charged to the clock ------
             let mut serial_ns = cost.t_superstep_sync;
-            if cfg.bypass {
+            if knobs.bypass {
                 serial_ns += step.active_next.count() as f64 * cost.t_store;
-                if cfg.schedule.needs_weights() {
+                if knobs.schedule.needs_weights() {
                     // §V-A overhead: edge-centric + bypass rebuilds the
                     // weight prefix every superstep.
                     serial_ns += active.len() as f64 * 2.0 * cost.t_store;
@@ -644,6 +687,13 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             }
             vm.serial(serial_ns);
 
+            // Feed the barrier's signals back to the adaptive controller
+            // (mirrors the real engine's observe call).
+            if let Some(t) = tuner.as_mut() {
+                let delivered = items.iter().filter(|it| it.got_msg).count() as u64;
+                t.observe(push_deliveries + pull_combined_total, delivered, flush_imb);
+            }
+
             // Reset recipient counts (touched list keeps this O(touched)).
             for &d in &step.touched {
                 step.counts[d as usize] = 0;
@@ -667,6 +717,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             } else {
                 1.0
             },
+            decisions: tuner.as_mut().map(|t| t.take_trace()).unwrap_or_default(),
         }
     }
 }
@@ -781,6 +832,32 @@ mod tests {
             let sim = SimEngine::new(&tg, &Triangles, cfg).run();
             assert_eq!(real_tri.values, sim.values);
             assert!(sim.virtual_seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn adaptive_sim_is_value_identical_and_records_its_decisions() {
+        use crate::algos::Bfs;
+        let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 5);
+        let p = Bfs {
+            root: g.max_out_degree_vertex(),
+        };
+        for base in [EngineConfig::default(), EngineConfig::default().shards(4)] {
+            let fixed = SimEngine::new(&g, &p, base).run();
+            let adaptive = SimEngine::new(&g, &p, base.adaptive(true)).run();
+            assert_eq!(fixed.values, adaptive.values, "values are knob-independent");
+            assert_eq!(fixed.supersteps, adaptive.supersteps);
+            assert_eq!(fixed.messages, adaptive.messages);
+            assert!(fixed.decisions.is_empty(), "fixed sims record no trace");
+            assert_eq!(adaptive.decisions.len(), adaptive.supersteps);
+            // Single-root BFS starts at one vertex: the density rule must
+            // move at least one knob, giving ≥ 2 distinct modes.
+            assert!(
+                crate::metrics::distinct_modes(&adaptive.decisions) >= 2,
+                "expected mode switching, got {:?}",
+                adaptive.decisions
+            );
+            assert!(adaptive.decisions.iter().any(|d| d.switched));
         }
     }
 

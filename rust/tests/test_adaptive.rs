@@ -1,0 +1,311 @@
+//! Adaptive-tuner integration tests.
+//!
+//! Two contracts:
+//!
+//! 1. **Bit-identity** — adaptive runs produce bit-identical values AND
+//!    identical superstep traces (active counts, message totals, halt
+//!    reason) to the same config run fixed, across the Strategy × Layout
+//!    × Schedule × Partitioning × bypass grid. Every knob the tuner
+//!    moves is an execution knob; none may change what programs observe.
+//! 2. **It actually adapts** — a single-source BFS on a catalog analogue
+//!    must record ≥ 2 distinct (schedule, strategy, bypass) modes in its
+//!    decision trace, switch at least once mid-run, and never flip-flop
+//!    (per-knob dwell ≥ `DecisionTable::dwell` supersteps).
+
+use ipregel::algos::{Bfs, ConnectedComponents, Lpa, PageRank, Sssp};
+use ipregel::combine::Strategy;
+use ipregel::engine::{DecisionTable, EngineConfig, GraphSession, RunOptions};
+use ipregel::graph::catalog;
+use ipregel::graph::gen;
+use ipregel::layout::Layout;
+use ipregel::metrics::{distinct_modes, RunMetrics, TunerDecision};
+use ipregel::sched::Schedule;
+
+/// The dblp analogue at CI scale (BA, 4 954 vertices) — generated
+/// directly, no disk cache involved.
+fn catalog_analogue() -> ipregel::graph::csr::Csr {
+    catalog::catalog_tiny()[0].generate()
+}
+
+fn assert_same_trace(fixed: &RunMetrics, adaptive: &RunMetrics, what: &str) {
+    assert_eq!(
+        fixed.num_supersteps(),
+        adaptive.num_supersteps(),
+        "{what}: superstep count"
+    );
+    for (i, (a, b)) in fixed
+        .supersteps
+        .iter()
+        .zip(adaptive.supersteps.iter())
+        .enumerate()
+    {
+        assert_eq!(
+            a.active_vertices, b.active_vertices,
+            "{what}: active count at superstep {i}"
+        );
+        assert_eq!(a.messages, b.messages, "{what}: messages at superstep {i}");
+    }
+    assert_eq!(fixed.halt_reason, adaptive.halt_reason, "{what}: halt reason");
+}
+
+#[test]
+fn adaptive_bit_identical_to_fixed_across_the_grid() {
+    let g = gen::rmat(8, 5, 0.57, 0.19, 0.19, 2);
+    let session = GraphSession::new(&g);
+    for &strategy in &[Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+        for &layout in &[Layout::Interleaved, Layout::Externalised] {
+            for &schedule in &[Schedule::Static, Schedule::EdgeCentric] {
+                for &bypass in &[false, true] {
+                    for &shards in &[0usize, 3] {
+                        let cfg = EngineConfig::default()
+                            .threads(4)
+                            .strategy(strategy)
+                            .layout(layout)
+                            .schedule(schedule)
+                            .bypass(bypass)
+                            .shards(shards);
+                        let what = format!("{cfg:?}");
+
+                        let fixed =
+                            session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+                        let adaptive = session.run_with(
+                            &ConnectedComponents,
+                            RunOptions::new().config(cfg.adaptive(true)),
+                        );
+                        assert_eq!(adaptive.values, fixed.values, "cc values under {what}");
+                        assert_same_trace(
+                            &fixed.metrics,
+                            &adaptive.metrics,
+                            &format!("cc under {what}"),
+                        );
+
+                        let p = Sssp::from_hub(&g);
+                        let fixed = session.run_with(&p, RunOptions::new().config(cfg));
+                        let adaptive =
+                            session.run_with(&p, RunOptions::new().config(cfg.adaptive(true)));
+                        assert_eq!(adaptive.values, fixed.values, "sssp values under {what}");
+                        assert_same_trace(
+                            &fixed.metrics,
+                            &adaptive.metrics,
+                            &format!("sssp under {what}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_pagerank_is_bitwise_identical_flat_and_sharded() {
+    // Pull mode folds in-neighbour outboxes in deterministic order, so
+    // even f64 ranks must match bit for bit.
+    let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 7);
+    let session = GraphSession::new(&g);
+    for cfg in [
+        EngineConfig::default(),
+        EngineConfig::default().bypass(true),
+        EngineConfig::default().shards(4),
+    ] {
+        let fixed = session.run_with(&PageRank::default(), RunOptions::new().config(cfg));
+        let adaptive = session.run_with(
+            &PageRank::default(),
+            RunOptions::new().config(cfg.adaptive(true)),
+        );
+        assert_eq!(adaptive.values, fixed.values, "under {cfg:?}");
+        assert_same_trace(&fixed.metrics, &adaptive.metrics, &format!("{cfg:?}"));
+    }
+}
+
+#[test]
+fn adaptive_bfs_on_catalog_analogue_switches_modes() {
+    let g = catalog_analogue();
+    let root = g.max_out_degree_vertex();
+    let p = Bfs { root };
+    let session = GraphSession::new(&g);
+
+    let fixed = session.run(&p);
+    let adaptive = session.run_with(
+        &p,
+        RunOptions::new().config(session.config().adaptive(true)),
+    );
+    assert_eq!(adaptive.values, fixed.values, "adaptive BFS must stay exact");
+    assert_same_trace(&fixed.metrics, &adaptive.metrics, "bfs on dblp-t");
+
+    let trace = &adaptive.metrics.tuner_decisions;
+    assert_eq!(
+        trace.len(),
+        adaptive.metrics.num_supersteps(),
+        "one decision per superstep"
+    );
+    // The acceptance bar: a single-source BFS sweeps sparse → dense →
+    // sparse, so the trace must show at least two distinct modes and at
+    // least one mid-run switch.
+    assert!(
+        distinct_modes(trace) >= 2,
+        "expected >= 2 distinct modes, trace: {trace:?}"
+    );
+    assert!(
+        trace.iter().any(|d| d.switched),
+        "expected a mid-run switch, trace: {trace:?}"
+    );
+    // Superstep 0 runs the configured plan verbatim (no signals yet).
+    assert_eq!(
+        trace[0].mode(),
+        (Schedule::Static, Strategy::Lock, false),
+        "superstep 0 is the configured base plan"
+    );
+    // The single-vertex frontier must have pushed superstep 1 onto the
+    // active list (density 1/|V| is far below any list threshold).
+    assert!(trace[1].bypass, "sparse frontier must select the list");
+}
+
+#[test]
+fn adaptive_bfs_switches_on_the_sharded_substrate_too() {
+    let g = catalog_analogue();
+    let root = g.max_out_degree_vertex();
+    let p = Bfs { root };
+    let session = GraphSession::new(&g);
+    let cfg = session.config().shards(4);
+    let fixed = session.run_with(&p, RunOptions::new().config(cfg));
+    let adaptive = session.run_with(&p, RunOptions::new().config(cfg.adaptive(true)));
+    assert_eq!(adaptive.values, fixed.values);
+    assert_same_trace(&fixed.metrics, &adaptive.metrics, "sharded bfs");
+    assert!(distinct_modes(&adaptive.metrics.tuner_decisions) >= 2);
+    // The flush-imbalance signal is only defined here: every decision
+    // must carry a finite, >= 1.0 reading.
+    for d in &adaptive.metrics.tuner_decisions {
+        assert!(d.flush_imbalance >= 1.0, "{d:?}");
+    }
+}
+
+#[test]
+fn tuner_never_flip_flops_within_the_dwell_window() {
+    let dwell = DecisionTable::default().dwell;
+    let g = catalog_analogue();
+    let p = Bfs {
+        root: g.max_out_degree_vertex(),
+    };
+    let session = GraphSession::new(&g);
+    let r = session.run_with(
+        &p,
+        RunOptions::new().config(session.config().adaptive(true)),
+    );
+    let trace = &r.metrics.tuner_decisions;
+    // For each knob: once it changes at superstep i, it must hold its new
+    // value for at least `dwell` decisions.
+    let knobs: [fn(&TunerDecision) -> u64; 3] = [
+        |d| d.bypass as u64,
+        |d| match d.schedule {
+            Schedule::Static => 0,
+            Schedule::Dynamic { .. } => 1,
+            Schedule::Guided { .. } => 2,
+            Schedule::EdgeCentric => 3,
+        },
+        |d| match d.strategy {
+            Strategy::Lock => 0,
+            Strategy::CasNeutral => 1,
+            Strategy::Hybrid => 2,
+        },
+    ];
+    for knob in knobs {
+        let mut last_change: Option<usize> = None;
+        for i in 1..trace.len() {
+            if knob(&trace[i]) != knob(&trace[i - 1]) {
+                if let Some(prev) = last_change {
+                    assert!(
+                        i - prev >= dwell,
+                        "knob changed at {prev} and again at {i} (dwell {dwell}): {trace:?}"
+                    );
+                }
+                last_change = Some(i);
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_composes_with_log_plane_and_cas_neutral() {
+    // Log plane: the strategy knob is frozen (no combiner to combine
+    // with), but bypass/schedule still adapt and results stay exact.
+    let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 9);
+    let session = GraphSession::new(&g);
+    let p = Lpa { rounds: 4 };
+    let fixed = session.run(&p);
+    let adaptive = session.run_with(
+        &p,
+        RunOptions::new().config(session.config().adaptive(true)),
+    );
+    assert_eq!(adaptive.values, fixed.values, "adaptive LPA");
+    for d in &adaptive.metrics.tuner_decisions {
+        assert_eq!(d.strategy, Strategy::Lock, "log plane never re-selects strategy");
+    }
+
+    // CasNeutral changes the slot representation: the tuner must never
+    // leave it, under any signal.
+    let cfg = session.config().strategy(Strategy::CasNeutral).adaptive(true);
+    let p = Sssp::from_hub(&g);
+    let r = session.run_with(&p, RunOptions::new().config(cfg));
+    let want = session.run(&p);
+    assert_eq!(r.values, want.values);
+    for d in &r.metrics.tuner_decisions {
+        assert_eq!(d.strategy, Strategy::CasNeutral, "{d:?}");
+    }
+}
+
+#[test]
+fn adaptive_runs_from_an_edge_centric_base_fall_back_to_dynamic_chunks() {
+    // When the configured schedule is itself edge-centric, the tuner's
+    // vertex-centric alternative is dynamic chunking — the run must stay
+    // exact and the trace must only ever hold those two policies.
+    let g = catalog_analogue();
+    let p = Bfs {
+        root: g.max_out_degree_vertex(),
+    };
+    let session = GraphSession::new(&g);
+    let cfg = session.config().schedule(Schedule::EdgeCentric).adaptive(true);
+    let fixed = session.run_with(
+        &p,
+        RunOptions::new().config(session.config().schedule(Schedule::EdgeCentric)),
+    );
+    let r = session.run_with(&p, RunOptions::new().config(cfg));
+    assert_eq!(r.values, fixed.values);
+    for d in &r.metrics.tuner_decisions {
+        assert!(
+            matches!(
+                d.schedule,
+                Schedule::EdgeCentric | Schedule::Dynamic { .. }
+            ),
+            "{d:?}"
+        );
+    }
+}
+
+#[test]
+fn adaptive_and_fixed_agree_under_warm_start_and_dynamic_graphs() {
+    use ipregel::graph::dynamic::{DynamicGraph, MutationSet};
+    let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 21);
+    let cfg = EngineConfig::default().shards(3);
+    let mut session =
+        GraphSession::dynamic_with_config(DynamicGraph::with_spill_threshold(g, 1_000_000), cfg);
+    let cold = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new().config(cfg.adaptive(true)),
+    );
+    let mut m = MutationSet::new();
+    m.insert_undirected(0, 77);
+    m.insert_undirected(3, 91);
+    session.apply_mutations(&m).unwrap();
+    let adaptive = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new()
+            .config(cfg.adaptive(true))
+            .warm_start(&cold.values),
+    );
+    let fixed = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new().config(cfg).warm_start(&cold.values),
+    );
+    assert_eq!(adaptive.values, fixed.values);
+    assert_same_trace(&fixed.metrics, &adaptive.metrics, "warm dynamic cc");
+}

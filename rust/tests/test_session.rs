@@ -316,3 +316,75 @@ fn converged_predicate_is_not_consulted_while_aggregator_stream_is_silent() {
     assert_eq!(r.metrics.halt_reason, HaltReason::Quiescence);
     assert_eq!(r.values, reference::connected_components(&g));
 }
+
+#[test]
+fn message_log_pool_keys_by_message_type_and_survives_epoch_bumps() {
+    use ipregel::algos::{Lpa, Triangles};
+    use ipregel::graph::GraphBuilder;
+
+    // Triangles requires a simple symmetric graph; LPA runs on anything.
+    // Build one graph both can share so the pool genuinely alternates.
+    let raw = gen::rmat(7, 4, 0.57, 0.19, 0.19, 33);
+    let edges: Vec<(u32, u32)> = raw.edges().collect();
+    let g = GraphBuilder::new(raw.num_vertices())
+        .symmetric(true)
+        .dedup(true)
+        .drop_self_loops(true)
+        .edges(&edges)
+        .build();
+
+    // Lpa messages are u32, Triangles messages are u64: TypeId keying
+    // must give each its own pooled MessageLog — a shared slot would
+    // hand one program the other's log shape.
+    let session = GraphSession::new(&g);
+    let l1 = session.run(&Lpa { rounds: 3 });
+    assert!(!l1.metrics.plane_reused);
+    assert_eq!(session.pooled_planes(), 1);
+    let t1 = session.run(&Triangles);
+    assert!(
+        !t1.metrics.plane_reused,
+        "different message type must not reuse the u32 log"
+    );
+    assert_eq!(session.pooled_planes(), 2, "one pooled log per message type");
+    let l2 = session.run(&Lpa { rounds: 3 });
+    let t2 = session.run(&Triangles);
+    assert!(l2.metrics.plane_reused && t2.metrics.plane_reused);
+    assert_eq!(l2.values, l1.values, "pooled u32 log must be bit-invisible");
+    assert_eq!(t2.values, t1.values, "pooled u64 log must be bit-invisible");
+    assert_eq!(session.pooled_planes(), 2);
+}
+
+#[test]
+fn pooled_message_log_is_not_stale_across_a_graph_mutation_epoch() {
+    use ipregel::algos::Lpa;
+    use ipregel::graph::dynamic::{DynamicGraph, MutationSet};
+
+    let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 41);
+    let mut session = GraphSession::dynamic_with_config(
+        DynamicGraph::with_spill_threshold(g, 1_000_000),
+        EngineConfig::default(),
+    );
+    let p = Lpa { rounds: 4 };
+    let before = session.run(&p);
+    assert_eq!(before.metrics.graph_epoch, 0);
+
+    // Bump the mutation epoch; the pooled log was primed against epoch 0
+    // and must be checked out clean, not replayed.
+    let mut m = MutationSet::new();
+    m.insert_undirected(0, 50);
+    m.insert_undirected(3, 97);
+    let receipt = session.apply_mutations(&m).unwrap();
+    assert_eq!(receipt.epoch, 1);
+
+    let after = session.run(&p);
+    assert_eq!(after.metrics.graph_epoch, 1);
+    assert!(after.metrics.plane_reused, "same message type: pool hit");
+
+    // Ground truth: a throwaway session over the compacted rebuild.
+    let rebuilt = session.graph().rebuilt();
+    let want = GraphSession::new(&rebuilt).run(&p);
+    assert_eq!(
+        after.values, want.values,
+        "a stale-epoch or dirty pooled log would diverge here"
+    );
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Emit the committed bench baseline: run the three tracked benches in
+# Emit the committed bench baseline: run the four tracked benches in
 # BENCH_SMOKE mode and merge their JSON outputs into BENCH_baseline.json
 # at the repository root.
 #
@@ -25,9 +25,10 @@ reuse_for() {
     bench_table2) echo "${BENCH_TABLE2_JSON:-}" ;;
     bench_partition) echo "${BENCH_PARTITION_JSON:-}" ;;
     bench_dynamic) echo "${BENCH_DYNAMIC_JSON:-}" ;;
+    bench_adaptive) echo "${BENCH_ADAPTIVE_JSON:-}" ;;
   esac
 }
-for bench in bench_table2 bench_partition bench_dynamic; do
+for bench in bench_table2 bench_partition bench_dynamic bench_adaptive; do
   reuse="$(reuse_for "$bench")"
   if [ -n "$reuse" ] && [ -f "$reuse" ]; then
     echo "== $bench (reusing $reuse) ==" >&2
@@ -45,7 +46,7 @@ done
   echo "  \"rustc\": \"$(rustc --version)\","
   echo "  \"smoke\": true,"
   first=1
-  for bench in bench_table2 bench_partition bench_dynamic; do
+  for bench in bench_table2 bench_partition bench_dynamic bench_adaptive; do
     [ "$first" = 1 ] || echo ','
     first=0
     printf '  "%s": ' "$bench"
