@@ -1,0 +1,234 @@
+//! The atomic-ordering manifest (`rust/audit/orderings.toml`).
+//!
+//! Every atomic `Ordering` use in the tree must be covered by a manifest
+//! entry naming the file, the enclosing symbol, the orderings that
+//! symbol is allowed to use, and a one-line rationale. The audit fails
+//! on any use outside the manifest — adding or strengthening an ordering
+//! is a reviewed, documented act, never a drive-by.
+//!
+//! The format is the `[[site]]` array-of-tables subset of TOML, parsed
+//! in-tree (the build is offline and dependency-free):
+//!
+//! ```toml
+//! [[site]]
+//! file = "src/combine/slot.rs"
+//! symbol = "store_first"
+//! orderings = ["SeqCst"]
+//! why = "store msg then flag: a true flag must imply a visible message"
+//! ```
+
+use std::collections::HashMap;
+
+/// One `[[site]]` entry.
+#[derive(Debug, Clone, Default)]
+pub struct Site {
+    /// Crate-relative path, e.g. `src/combine/slot.rs`.
+    pub file: String,
+    /// Enclosing `fn` name (or `*` to cover a whole file).
+    pub symbol: String,
+    /// Allowed ordering variant names.
+    pub orderings: Vec<String>,
+    /// One-line rationale.
+    pub why: String,
+    /// 1-based line in the manifest (diagnostics).
+    pub line: usize,
+}
+
+/// Parsed manifest with a by-(file, symbol) index.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub sites: Vec<Site>,
+}
+
+impl Manifest {
+    /// Parse the manifest text. Errors carry 1-based line numbers.
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let mut sites: Vec<Site> = Vec::new();
+        let mut cur: Option<Site> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "[[site]]" {
+                if let Some(s) = cur.take() {
+                    Self::finish(s, &mut sites)?;
+                }
+                cur = Some(Site {
+                    line: lineno,
+                    ..Site::default()
+                });
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(format!("manifest line {lineno}: expected `key = value`"));
+            };
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            let site = cur
+                .as_mut()
+                .ok_or_else(|| format!("manifest line {lineno}: `{key}` outside a [[site]]"))?;
+            match key {
+                "file" => site.file = parse_str(val, lineno)?,
+                "symbol" => site.symbol = parse_str(val, lineno)?,
+                "why" => site.why = parse_str(val, lineno)?,
+                "orderings" => site.orderings = parse_str_array(val, lineno)?,
+                other => {
+                    return Err(format!("manifest line {lineno}: unknown key `{other}`"));
+                }
+            }
+        }
+        if let Some(s) = cur.take() {
+            Self::finish(s, &mut sites)?;
+        }
+        Ok(Manifest { sites })
+    }
+
+    fn finish(s: Site, sites: &mut Vec<Site>) -> Result<(), String> {
+        if s.file.is_empty() || s.symbol.is_empty() || s.orderings.is_empty() || s.why.is_empty() {
+            return Err(format!(
+                "manifest [[site]] at line {}: `file`, `symbol`, `orderings` and `why` \
+                 are all required",
+                s.line
+            ));
+        }
+        sites.push(s);
+        Ok(())
+    }
+
+    /// Allowed orderings for (`file`, `symbol`), merging exact-symbol and
+    /// whole-file (`symbol = "*"`) entries. `None` when uncovered.
+    pub fn allowed(&self, file: &str, symbol: &str) -> Option<Vec<&str>> {
+        let mut found = false;
+        let mut allowed: Vec<&str> = Vec::new();
+        for s in &self.sites {
+            if s.file == file && (s.symbol == symbol || s.symbol == "*") {
+                found = true;
+                allowed.extend(s.orderings.iter().map(|o| o.as_str()));
+            }
+        }
+        found.then_some(allowed)
+    }
+
+    /// Index of sites that matched nothing during a run (stale entries).
+    pub fn coverage_tracker(&self) -> CoverageTracker {
+        CoverageTracker {
+            used: vec![false; self.sites.len()],
+        }
+    }
+
+    /// Mark every site matching (`file`, `symbol`) as used.
+    pub fn mark_used(&self, tracker: &mut CoverageTracker, file: &str, symbol: &str) {
+        for (i, s) in self.sites.iter().enumerate() {
+            if s.file == file && (s.symbol == symbol || s.symbol == "*") {
+                tracker.used[i] = true;
+            }
+        }
+    }
+
+    /// Group sites per file (used by the CLI summary).
+    pub fn per_file_counts(&self) -> HashMap<&str, usize> {
+        let mut m: HashMap<&str, usize> = HashMap::new();
+        for s in &self.sites {
+            *m.entry(s.file.as_str()).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+/// Which manifest sites were matched by at least one scanned use.
+pub struct CoverageTracker {
+    used: Vec<bool>,
+}
+
+impl CoverageTracker {
+    /// Sites never matched (candidates for deletion).
+    pub fn unused<'m>(&self, m: &'m Manifest) -> Vec<&'m Site> {
+        m.sites
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.used[*i])
+            .map(|(_, s)| s)
+            .collect()
+    }
+}
+
+fn parse_str(val: &str, lineno: usize) -> Result<String, String> {
+    let v = val.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(format!("manifest line {lineno}: expected a quoted string, got `{v}`"))
+    }
+}
+
+fn parse_str_array(val: &str, lineno: usize) -> Result<Vec<String>, String> {
+    let v = val.trim();
+    if !(v.starts_with('[') && v.ends_with(']')) {
+        return Err(format!("manifest line {lineno}: expected `[ … ]`, got `{v}`"));
+    }
+    let inner = &v[1..v.len() - 1];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        out.push(parse_str(p, lineno)?);
+    }
+    if out.is_empty() {
+        return Err(format!("manifest line {lineno}: empty orderings array"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+[[site]]
+file = "src/a.rs"
+symbol = "store"
+orderings = ["SeqCst", "Release"]
+why = "publication"
+
+[[site]]
+file = "src/a.rs"
+symbol = "*"
+orderings = ["Relaxed"]
+why = "whole-file fallback"
+"#;
+
+    #[test]
+    fn parses_sites_and_merges_wildcards() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.sites.len(), 2);
+        let a = m.allowed("src/a.rs", "store").unwrap();
+        assert!(a.contains(&"SeqCst") && a.contains(&"Release") && a.contains(&"Relaxed"));
+        let b = m.allowed("src/a.rs", "other_fn").unwrap();
+        assert_eq!(b, vec!["Relaxed"]);
+        assert!(m.allowed("src/b.rs", "store").is_none());
+    }
+
+    #[test]
+    fn coverage_tracks_unused_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let mut t = m.coverage_tracker();
+        m.mark_used(&mut t, "src/a.rs", "store");
+        let unused = t.unused(&m);
+        assert_eq!(unused.len(), 1);
+        assert_eq!(unused[0].symbol, "*");
+    }
+
+    #[test]
+    fn missing_fields_are_rejected() {
+        let bad = "[[site]]\nfile = \"src/a.rs\"\nsymbol = \"f\"\nwhy = \"w\"\n";
+        assert!(Manifest::parse(bad).is_err());
+        let worse = "file = \"src/a.rs\"\n";
+        assert!(Manifest::parse(worse).is_err());
+        assert!(Manifest::parse("[[site]]\nfile = oops\n").is_err());
+    }
+}

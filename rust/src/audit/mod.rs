@@ -1,0 +1,469 @@
+//! `pallas-audit` — the repository's own concurrency-correctness
+//! static analyzer (`ipregel audit`, gated in CI).
+//!
+//! The hybrid combiner couples lock-free and lock-based combination; one
+//! wrong atomic ordering or unjustified `unsafe` silently corrupts
+//! results instead of crashing. This module walks the crate's own source
+//! (zero dependencies — the scanner is in [`scan`], the ordering
+//! manifest in [`manifest`]) and enforces four declared invariants:
+//!
+//! 1. **`unsafe` needs `SAFETY:`** — every `unsafe` block/impl/fn must
+//!    be preceded by (or carry) a comment containing `SAFETY:` stating
+//!    why it is sound.
+//! 2. **atomic orderings are manifested** — every `Ordering::…` use
+//!    must be covered by `rust/audit/orderings.toml`, which names the
+//!    file, enclosing symbol, allowed orderings and a one-line
+//!    rationale. An ordering the manifest doesn't allow is a violation;
+//!    a manifest entry nothing uses is a warning (stale).
+//! 3. **no `static mut`** — mutable statics are banned outright.
+//! 4. **no `unwrap()/expect()` in engine/combine hot paths** — the
+//!    scatter/deliver/collect paths must not panic per-message; the
+//!    escape hatch is an `// audit:allow(panic): why` comment for
+//!    phase-level invariants.
+//!
+//! Diagnostics print as `file:line: rule: message` and the CLI exits
+//! non-zero on any violation.
+
+pub mod manifest;
+pub mod scan;
+
+use manifest::{CoverageTracker, Manifest};
+use scan::CtxLine;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The atomic ordering variants rule 2 tracks (`cmp::Ordering`'s
+/// variants deliberately excluded).
+const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Files subject to the no-panic rule (rule 4): the per-message scatter,
+/// deliver and collect paths plus the substrate they run on.
+const PANIC_DENY: [&str; 11] = [
+    "src/engine/core.rs",
+    "src/engine/shard.rs",
+    "src/combine/strategy.rs",
+    "src/combine/slot.rs",
+    "src/combine/spinlock.rs",
+    "src/combine/plane.rs",
+    "src/combine/combiner.rs",
+    "src/layout/aos.rs",
+    "src/layout/soa.rs",
+    "src/layout/store.rs",
+    "src/sched/pool.rs",
+];
+
+/// Which invariant a diagnostic belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AuditRule {
+    UnsafeNeedsSafety,
+    UnlistedOrdering,
+    StaticMut,
+    PanicInHotPath,
+    StaleManifestEntry,
+}
+
+impl AuditRule {
+    /// Stable rule id used in diagnostics and asserted by tests.
+    pub fn id(self) -> &'static str {
+        match self {
+            AuditRule::UnsafeNeedsSafety => "unsafe-needs-safety",
+            AuditRule::UnlistedOrdering => "unlisted-ordering",
+            AuditRule::StaticMut => "static-mut",
+            AuditRule::PanicInHotPath => "panic-in-hot-path",
+            AuditRule::StaleManifestEntry => "stale-manifest-entry",
+        }
+    }
+}
+
+/// One finding, printed as `file:line: rule: message`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: AuditRule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {}",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.message
+        )
+    }
+}
+
+/// The audit's outcome over a tree (or a set of in-memory sources).
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    /// Hard failures (exit non-zero).
+    pub violations: Vec<Diagnostic>,
+    /// Advisories (stale manifest entries); never fail the run.
+    pub warnings: Vec<Diagnostic>,
+    pub files_scanned: usize,
+    pub unsafe_sites: usize,
+    pub ordering_uses: usize,
+}
+
+impl AuditReport {
+    /// True when the tree satisfies every invariant.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable summary (diagnostics first, totals last).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.violations {
+            out.push_str(&format!("{d}\n"));
+        }
+        for d in &self.warnings {
+            out.push_str(&format!("warning: {d}\n"));
+        }
+        out.push_str(&format!(
+            "pallas-audit: {} files, {} unsafe sites, {} ordering uses — {} violation(s), \
+             {} warning(s)\n",
+            self.files_scanned,
+            self.unsafe_sites,
+            self.ordering_uses,
+            self.violations.len(),
+            self.warnings.len(),
+        ));
+        out
+    }
+}
+
+/// Audit a set of `(relative_path, source_text)` pairs against a parsed
+/// manifest. This is the engine behind both the CLI (which reads the
+/// tree from disk) and the fixture tests (which feed snippets).
+pub fn audit_sources(sources: &[(String, String)], manifest: &Manifest) -> AuditReport {
+    let mut report = AuditReport {
+        files_scanned: sources.len(),
+        ..AuditReport::default()
+    };
+    let mut tracker = manifest.coverage_tracker();
+    for (rel, text) in sources {
+        audit_one(rel, text, manifest, &mut tracker, &mut report);
+    }
+    for stale in tracker.unused(manifest) {
+        report.warnings.push(Diagnostic {
+            file: "audit/orderings.toml".to_string(),
+            line: stale.line,
+            rule: AuditRule::StaleManifestEntry,
+            message: format!(
+                "manifest entry {}:{} matched no ordering use — delete it?",
+                stale.file, stale.symbol
+            ),
+        });
+    }
+    report
+}
+
+fn audit_one(
+    rel: &str,
+    text: &str,
+    manifest: &Manifest,
+    tracker: &mut CoverageTracker,
+    report: &mut AuditReport,
+) {
+    let lines = scan::annotate(scan::strip(text));
+    let in_tests_dir = rel.starts_with("tests/") || rel.starts_with("benches/");
+    let panic_ruled = PANIC_DENY.contains(&rel);
+    for (idx, ctx) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = ctx.line.code.as_str();
+
+        // Rule 1: unsafe needs a SAFETY: justification.
+        if scan::find_word(code, "unsafe").is_some() {
+            report.unsafe_sites += 1;
+            if !comment_justified(&lines, idx, "SAFETY:") {
+                report.violations.push(Diagnostic {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: AuditRule::UnsafeNeedsSafety,
+                    message: "`unsafe` without a `// SAFETY:` justification on or above it"
+                        .to_string(),
+                });
+            }
+        }
+
+        // Rule 2: every atomic ordering use is in the manifest.
+        let mut from = 0;
+        while let Some(pos) = code[from..].find("Ordering::") {
+            let at = from + pos;
+            from = at + "Ordering::".len();
+            let rest = &code[from..];
+            let variant: String = rest
+                .chars()
+                .take_while(|&c| c.is_alphanumeric() || c == '_')
+                .collect();
+            if !ATOMIC_ORDERINGS.contains(&variant.as_str()) {
+                continue; // cmp::Ordering or something else entirely
+            }
+            report.ordering_uses += 1;
+            let symbol = ctx.in_fn.clone().unwrap_or_else(|| "(top-level)".to_string());
+            manifest.mark_used(tracker, rel, &symbol);
+            let allowed = manifest.allowed(rel, &symbol);
+            let permitted = allowed
+                .as_ref()
+                .is_some_and(|a| a.iter().any(|o| *o == variant));
+            if !permitted {
+                let detail = match allowed {
+                    Some(a) => format!("manifest allows only {:?} here", a),
+                    None => "no manifest entry covers this site".to_string(),
+                };
+                report.violations.push(Diagnostic {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: AuditRule::UnlistedOrdering,
+                    message: format!(
+                        "`Ordering::{variant}` in `{symbol}` is not sanctioned — {detail} \
+                         (add a [[site]] with a rationale to audit/orderings.toml)"
+                    ),
+                });
+            }
+        }
+
+        // Rule 3: no mutable statics, anywhere, ever.
+        if let Some(at) = scan::find_word(code, "static") {
+            let rest = code[at + "static".len()..].trim_start();
+            if rest.starts_with("mut")
+                && !rest["mut".len()..]
+                    .chars()
+                    .next()
+                    .is_some_and(|c| c.is_alphanumeric() || c == '_')
+            {
+                report.violations.push(Diagnostic {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: AuditRule::StaticMut,
+                    message: "`static mut` is banned — use an atomic or interior \
+                              mutability with a documented discipline"
+                        .to_string(),
+                });
+            }
+        }
+
+        // Rule 4: no per-message panics in the hot paths.
+        if panic_ruled && !ctx.in_test_mod && !in_tests_dir {
+            let hit = if code.contains(".unwrap()") {
+                Some("unwrap()")
+            } else if code.contains(".expect(") {
+                Some("expect(…)")
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                if !comment_justified(&lines, idx, "audit:allow(panic)") {
+                    report.violations.push(Diagnostic {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: AuditRule::PanicInHotPath,
+                        message: format!(
+                            "`{what}` in an engine/combine hot path — return an error, \
+                             or annotate a phase-level invariant with \
+                             `// audit:allow(panic): why`"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Does line `idx` carry `needle` in its own comment, or in the block of
+/// comment-only lines immediately above it?
+fn comment_justified(lines: &[CtxLine], idx: usize, needle: &str) -> bool {
+    if lines[idx].line.comment.contains(needle) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j].line;
+        if !l.code.trim().is_empty() {
+            return false; // real code interrupts the comment block
+        }
+        if l.comment.contains(needle) {
+            return true;
+        }
+        if l.comment.is_empty() {
+            return false; // blank line ends the block
+        }
+    }
+    false
+}
+
+/// Walk `root` (the crate directory) and audit `src/`, `tests/` and
+/// `benches/` against the manifest at `manifest_path`.
+pub fn audit_tree(root: &Path, manifest_path: &Path) -> Result<AuditReport, String> {
+    let manifest_text = std::fs::read_to_string(manifest_path)
+        .map_err(|e| format!("reading {}: {e}", manifest_path.display()))?;
+    let manifest = Manifest::parse(&manifest_text)?;
+    let mut sources: Vec<(String, String)> = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, root, &mut sources)?;
+        }
+    }
+    if sources.is_empty() {
+        return Err(format!(
+            "no .rs files under {} — is this the crate root?",
+            root.display()
+        ));
+    }
+    sources.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(audit_sources(&sources, &manifest))
+}
+
+fn collect_rs(
+    dir: &Path,
+    root: &Path,
+    out: &mut Vec<(String, String)>,
+) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|e| e.to_string())?
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("reading {}: {e}", path.display()))?;
+            out.push((rel, text));
+        }
+    }
+    Ok(())
+}
+
+/// Locate the crate root from an invocation directory: accepts either
+/// the repository root (which holds `rust/`) or the crate dir itself.
+pub fn resolve_root(given: Option<&str>) -> PathBuf {
+    let base = PathBuf::from(given.unwrap_or("."));
+    if base.join("src").is_dir() && base.join("audit").is_dir() {
+        return base;
+    }
+    let nested = base.join("rust");
+    if nested.join("src").is_dir() {
+        return nested;
+    }
+    base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_for(entries: &str) -> Manifest {
+        Manifest::parse(entries).unwrap()
+    }
+
+    fn run_on(rel: &str, src: &str, manifest: &Manifest) -> AuditReport {
+        audit_sources(&[(rel.to_string(), src.to_string())], manifest)
+    }
+
+    #[test]
+    fn clean_source_passes() {
+        let m = manifest_for("");
+        let r = run_on("src/x.rs", "fn f() { let a = 1; }\n", &m);
+        assert!(r.ok(), "{}", r.render());
+    }
+
+    #[test]
+    fn unsafe_without_safety_is_flagged_and_with_safety_passes() {
+        let m = manifest_for("");
+        let bad = "fn f() {\n    unsafe { core(); }\n}\n";
+        let r = run_on("src/x.rs", bad, &m);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, AuditRule::UnsafeNeedsSafety);
+        assert_eq!(r.violations[0].line, 2);
+
+        let good = "fn f() {\n    // SAFETY: single-threaded here.\n    unsafe { core(); }\n}\n";
+        assert!(run_on("src/x.rs", good, &m).ok());
+    }
+
+    #[test]
+    fn ordering_must_be_manifested() {
+        let m = manifest_for(
+            "[[site]]\nfile = \"src/x.rs\"\nsymbol = \"f\"\norderings = [\"SeqCst\"]\n\
+             why = \"publication\"\n",
+        );
+        let ok = "fn f() { a.store(1, Ordering::SeqCst); }\n";
+        assert!(run_on("src/x.rs", ok, &m).ok());
+        let bad = "fn f() { a.store(1, Ordering::Relaxed); }\n";
+        let r = run_on("src/x.rs", bad, &m);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, AuditRule::UnlistedOrdering);
+    }
+
+    #[test]
+    fn cmp_ordering_is_ignored() {
+        let m = manifest_for("");
+        let src = "fn f() { if c == std::cmp::Ordering::Less { g(); } }\n";
+        let r = run_on("src/x.rs", src, &m);
+        assert!(r.ok());
+        assert_eq!(r.ordering_uses, 0);
+    }
+
+    #[test]
+    fn static_mut_is_banned() {
+        let m = manifest_for("");
+        let r = run_on("src/x.rs", "static mut COUNTER: u64 = 0;\n", &m);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, AuditRule::StaticMut);
+        // `static` alone is fine.
+        assert!(run_on("src/x.rs", "static OK: u64 = 0;\n", &m).ok());
+    }
+
+    #[test]
+    fn panics_banned_only_in_hot_paths_and_allowable() {
+        let m = manifest_for("");
+        let src = "fn f() { x.unwrap(); }\n";
+        // Hot-path file: violation.
+        let r = run_on("src/combine/slot.rs", src, &m);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, AuditRule::PanicInHotPath);
+        // Non-hot file: fine.
+        assert!(run_on("src/exp/table.rs", src, &m).ok());
+        // Escape hatch.
+        let allowed =
+            "fn f() {\n    // audit:allow(panic): setup-time invariant.\n    x.unwrap();\n}\n";
+        assert!(run_on("src/combine/slot.rs", allowed, &m).ok());
+        // Test modules are exempt.
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(run_on("src/combine/slot.rs", test_src, &m).ok());
+        // unwrap_or is not unwrap.
+        assert!(run_on("src/combine/slot.rs", "fn f() { x.unwrap_or(3); }\n", &m).ok());
+    }
+
+    #[test]
+    fn literals_do_not_trip_rules() {
+        let m = manifest_for("");
+        let src = "fn f() { let s = \"unsafe static mut Ordering::Relaxed .unwrap()\"; }\n";
+        let r = run_on("src/combine/slot.rs", src, &m);
+        assert!(r.ok(), "{}", r.render());
+    }
+
+    #[test]
+    fn stale_manifest_entries_warn_but_do_not_fail() {
+        let m = manifest_for(
+            "[[site]]\nfile = \"src/gone.rs\"\nsymbol = \"f\"\norderings = [\"SeqCst\"]\n\
+             why = \"stale\"\n",
+        );
+        let r = run_on("src/x.rs", "fn f() { let a = 1; }\n", &m);
+        assert!(r.ok());
+        assert_eq!(r.warnings.len(), 1);
+        assert_eq!(r.warnings[0].rule, AuditRule::StaleManifestEntry);
+    }
+}

@@ -1,0 +1,431 @@
+//! Comment/string-aware Rust source scanning for `pallas-audit`.
+//!
+//! The analyzer's rules operate on *code text* with comments and string
+//! literals separated out — `unsafe` inside a doc string must not count
+//! as an unsafe site, and a `SAFETY:` justification must only count when
+//! it appears in a real comment. Full parsing is out of scope (and out
+//! of budget — the build is dependency-free); instead this module runs a
+//! small state machine good enough for the repository's own idioms:
+//!
+//! - line (`//`) and nested block (`/* */`) comments, captured per line;
+//! - plain, raw (`r#"…"#`) and byte string literals, blanked out;
+//! - char literals vs. lifetimes (`'a'` vs. `'static`), by lookahead;
+//! - per-line brace depth, enclosing `fn` name and `#[cfg(test)] mod`
+//!   membership, tracked by [`annotate`].
+
+/// One physical source line, split into code and comment text. String
+/// and char literal *contents* are blanked from `code` (delimiters kept)
+/// so rule patterns never match inside literals.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code text with literal contents blanked.
+    pub code: String,
+    /// Comment text (both `//…` and the parts of `/*…*/` on this line).
+    pub comment: String,
+}
+
+/// A [`Line`] plus structural context assigned by [`annotate`].
+#[derive(Debug, Clone)]
+pub struct CtxLine {
+    pub line: Line,
+    /// Name of the innermost enclosing `fn`, if any.
+    pub in_fn: Option<String>,
+    /// Inside a `#[cfg(test)] mod … { }` body.
+    pub in_test_mod: bool,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+/// Split `source` into per-line code/comment text.
+pub fn strip(source: &str) -> Vec<Line> {
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut st = State::Code;
+    let b: Vec<char> = source.chars().collect();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            // Line comments end at the newline; other states span lines.
+            if st == State::LineComment {
+                st = State::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Code => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    // Raw-string heads were consumed below, so a bare
+                    // quote is always a plain string start.
+                    cur.code.push('"');
+                    st = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&b, i) {
+                    // Possible literal head: r"…", r#"…"#, br"…", b"…".
+                    let raw_from = match c {
+                        'r' => Some(i + 1),
+                        _ if b.get(i + 1) == Some(&'r') => Some(i + 2),
+                        _ => None,
+                    };
+                    let raw = raw_from.and_then(|mut j| {
+                        let mut hashes = 0u32;
+                        while b.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        (b.get(j) == Some(&'"')).then_some((j, hashes))
+                    });
+                    if let Some((open, hashes)) = raw {
+                        cur.code.push('"');
+                        st = State::RawStr(hashes);
+                        i = open + 1;
+                    } else if c == 'b' && b.get(i + 1) == Some(&'"') {
+                        // b"…" plain byte string
+                        cur.code.push(c);
+                        cur.code.push('"');
+                        st = State::Str;
+                        i += 2;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal or lifetime? `'\…` and `'x'` are
+                    // literals; anything else (e.g. `'static`) is a
+                    // lifetime and stays plain code.
+                    if next == Some('\\') || (b.get(i + 2) == Some(&'\'') && next != Some('\'')) {
+                        cur.code.push('\'');
+                        st = State::Char;
+                        i += 1;
+                    } else {
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Skip the escaped char — but a line-continuation
+                    // (`\` + newline) still ends the physical line, or
+                    // every later line number would be off by one.
+                    if b.get(i + 1) == Some(&'\n') {
+                        lines.push(std::mem::take(&mut cur));
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    // Closing needs `"` followed by `hashes` hashes.
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if b.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        cur.code.push('"');
+                        st = State::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if c == '\\' {
+                    if b.get(i + 1) == Some(&'\n') {
+                        lines.push(std::mem::take(&mut cur));
+                    }
+                    i += 2;
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Is the char before `b[i]` part of an identifier (so `b[i]` cannot
+/// start a literal prefix like `r"…"`)?
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// Is `text[at]` the start of the standalone word `word`?
+fn word_at(text: &str, at: usize, word: &str) -> bool {
+    if !text[at..].starts_with(word) {
+        return false;
+    }
+    let before_ok = at == 0
+        || !text[..at]
+            .chars()
+            .next_back()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_');
+    let after = text[at + word.len()..].chars().next();
+    before_ok && !after.is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Find the standalone word `word` in `text`.
+pub fn find_word(text: &str, word: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(pos) = text[from..].find(word) {
+        let at = from + pos;
+        if word_at(text, at, word) {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+/// Annotate stripped lines with enclosing-`fn` and test-mod context.
+pub fn annotate(lines: Vec<Line>) -> Vec<CtxLine> {
+    let mut out: Vec<CtxLine> = Vec::with_capacity(lines.len());
+    // Stack of (depth_after_open, fn_name) for enclosing functions, and
+    // the depths at which `#[cfg(test)] mod` bodies opened.
+    let mut fn_stack: Vec<(i32, String)> = Vec::new();
+    let mut test_depths: Vec<i32> = Vec::new();
+    let mut depth: i32 = 0;
+    // `fn name` seen, waiting for its `{` (or cancelled by `;`).
+    let mut pending_fn: Option<String> = None;
+    // `#[cfg(test)]` seen, arming the next `mod … {`.
+    let mut pending_test_attr = false;
+    let mut pending_test_mod = false;
+
+    for line in lines {
+        let code = line.code.clone();
+        if code.contains("#[cfg(test)]") {
+            pending_test_attr = true;
+        }
+        // Detect `fn <name>` declarations (not `Fn(` bounds / `fn(`
+        // pointer types — those are never followed by an identifier).
+        let mut from = 0;
+        while let Some(pos) = code[from..].find("fn") {
+            let at = from + pos;
+            from = at + 1;
+            if !word_at(&code, at, "fn") {
+                continue;
+            }
+            let rest = code[at + 2..].trim_start();
+            let name: String = rest
+                .chars()
+                .take_while(|&c| c.is_alphanumeric() || c == '_')
+                .collect();
+            if !name.is_empty() {
+                pending_fn = Some(name);
+                break;
+            }
+        }
+        if pending_test_attr {
+            if let Some(at) = find_word(&code, "mod") {
+                let rest = code[at + 3..].trim_start();
+                if rest.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_') {
+                    pending_test_mod = true;
+                    pending_test_attr = false;
+                }
+            }
+        }
+        let in_fn = fn_stack.last().map(|(_, n)| n.clone()).or_else(|| {
+            // A signature spanning lines attributes its own lines to the
+            // declared fn as well.
+            pending_fn.clone()
+        });
+        let in_test = !test_depths.is_empty() || pending_test_mod;
+        out.push(CtxLine {
+            line,
+            in_fn,
+            in_test_mod: in_test,
+        });
+        // Brace accounting after emitting the line's context.
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if let Some(name) = pending_fn.take() {
+                        fn_stack.push((depth, name));
+                    }
+                    if pending_test_mod {
+                        test_depths.push(depth);
+                        pending_test_mod = false;
+                    }
+                }
+                '}' => {
+                    while fn_stack.last().is_some_and(|(d, _)| *d >= depth) {
+                        fn_stack.pop();
+                    }
+                    while test_depths.last().is_some_and(|d| *d >= depth) {
+                        test_depths.pop();
+                    }
+                    depth -= 1;
+                }
+                ';' => {
+                    // Trait method declarations carry no body.
+                    if pending_fn.is_some() {
+                        pending_fn = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let src = "let a = 1; // trailing note\n/* block\nspans lines */ let b = 2;\n";
+        let ls = strip(src);
+        assert_eq!(ls.len(), 3);
+        assert!(ls[0].code.contains("let a = 1;"));
+        assert!(ls[0].comment.contains("trailing note"));
+        assert!(!ls[0].code.contains("trailing"));
+        assert!(ls[1].comment.contains("block"));
+        assert!(ls[2].code.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn blanks_string_contents_including_raw_strings() {
+        let src = "let s = \"unsafe { }\"; let r = r#\"static mut X\"#; let t = 'x';\n";
+        let ls = strip(src);
+        assert!(!ls[0].code.contains("unsafe"));
+        assert!(!ls[0].code.contains("static mut"));
+        assert!(ls[0].code.contains("let s ="));
+        assert!(ls[0].code.contains("let r ="));
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let src = "fn f<'a>(x: &'a str) -> &'static str { x }\n";
+        let ls = strip(src);
+        assert!(ls[0].code.contains("'static str"), "{:?}", ls[0].code);
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let src = "let s = \"a\\\"unsafe\"; let x = 1;\n";
+        let ls = strip(src);
+        assert!(!ls[0].code.contains("unsafe"));
+        assert!(ls[0].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn line_continuation_in_string_keeps_line_numbers() {
+        // `"\` at end of line escapes the newline *inside the literal*,
+        // but the physical line still ends — diagnostics on later lines
+        // must not shift (regression: the escape skip used to swallow
+        // the newline entirely).
+        let src = "let s = \"a\\\nb\";\nlet t = 2;\n";
+        let ls = strip(src);
+        assert_eq!(ls.len(), 3);
+        assert!(ls[2].code.contains("let t = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ let z = 3;\n";
+        let ls = strip(src);
+        assert!(ls[0].code.contains("let z = 3;"));
+        assert!(ls[0].comment.contains("outer"));
+    }
+
+    #[test]
+    fn annotates_enclosing_fn_and_test_mods() {
+        let src = "\
+fn alpha() {\n\
+    let x = 1;\n\
+}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    fn beta() {\n\
+        let y = 2;\n\
+    }\n\
+}\n\
+fn gamma() {}\n";
+        let ls = annotate(strip(src));
+        assert_eq!(ls[1].in_fn.as_deref(), Some("alpha"));
+        assert!(!ls[1].in_test_mod);
+        assert_eq!(ls[6].in_fn.as_deref(), Some("beta"));
+        assert!(ls[6].in_test_mod);
+        assert_eq!(ls[9].in_fn.as_deref(), Some("gamma"));
+        assert!(!ls[9].in_test_mod);
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_declarations() {
+        let src = "fn outer(cb: fn(usize) -> u64, f: impl Fn(u32)) {\n    let q = 1;\n}\n";
+        let ls = annotate(strip(src));
+        // The *first* `fn` wins as the declaration; the type positions
+        // must not override it.
+        assert_eq!(ls[1].in_fn.as_deref(), Some("outer"));
+    }
+
+    #[test]
+    fn word_find_respects_boundaries() {
+        assert!(find_word("static mut X", "static").is_some());
+        assert!(find_word("thread_static mut", "static").is_none());
+        assert!(find_word("statically", "static").is_none());
+    }
+}

@@ -9,6 +9,9 @@ use crate::combine::spinlock::SpinLock;
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
+#[cfg(feature = "race-check")]
+use crate::util::shadow::{self, Site};
+
 /// Message types storable in a mailbox slot: plain-old-data with a
 /// round-trippable 64-bit representation.
 pub trait MessageValue: Copy + Send + Sync + 'static {
@@ -93,6 +96,13 @@ pub struct MsgSlot<M: MessageValue> {
     has_msg: AtomicBool,
     /// Per-vertex lock for the lock strategy and the hybrid first-push.
     lock: SpinLock,
+    /// Last-accessor record for the logical race checker. The flag-ordered
+    /// protocol ops (`has_msg`/`load_msg`/`cas_msg`) are deliberately NOT
+    /// instrumented — concurrent use of those is the hybrid combiner
+    /// working as designed; the checker guards the ops whose soundness
+    /// rests on phase discipline or the slot's own lock.
+    #[cfg(feature = "race-check")]
+    shadow: shadow::ShadowCell,
     _marker: PhantomData<M>,
 }
 
@@ -109,6 +119,8 @@ impl<M: MessageValue> MsgSlot<M> {
             msg: AtomicU64::new(0),
             has_msg: AtomicBool::new(false),
             lock: SpinLock::new(),
+            #[cfg(feature = "race-check")]
+            shadow: shadow::ShadowCell::new(),
             _marker: PhantomData,
         }
     }
@@ -138,6 +150,9 @@ impl<M: MessageValue> MsgSlot<M> {
     /// "full memory barrier in-between", here provided by SeqCst stores).
     #[inline]
     pub fn store_first(&self, msg: M) {
+        #[cfg(feature = "race-check")]
+        self.shadow
+            .on_write(Site::SlotStoreFirst, self.lock.held_by_current_thread());
         self.msg.store(msg.to_bits(), Ordering::SeqCst);
         self.has_msg.store(true, Ordering::SeqCst);
     }
@@ -146,6 +161,9 @@ impl<M: MessageValue> MsgSlot<M> {
     /// the neutral-element CAS strategy, which has no flag).
     #[inline]
     pub fn store_msg(&self, msg: M) {
+        #[cfg(feature = "race-check")]
+        self.shadow
+            .on_write(Site::SlotStoreMsg, self.lock.held_by_current_thread());
         self.msg.store(msg.to_bits(), Ordering::SeqCst);
     }
 
@@ -167,6 +185,9 @@ impl<M: MessageValue> MsgSlot<M> {
     /// Take the message and reset the slot (superstep boundary; the
     /// engine guarantees no concurrent senders at this point).
     pub fn take(&self) -> Option<M> {
+        #[cfg(feature = "race-check")]
+        self.shadow
+            .on_write(Site::SlotTake, self.lock.held_by_current_thread());
         if self.has_msg.load(Ordering::SeqCst) {
             let m = M::from_bits(self.msg.load(Ordering::SeqCst));
             self.has_msg.store(false, Ordering::SeqCst);
@@ -178,6 +199,8 @@ impl<M: MessageValue> MsgSlot<M> {
 
     /// Non-destructive read (pull-based versions peek neighbours' slots).
     pub fn peek(&self) -> Option<M> {
+        #[cfg(feature = "race-check")]
+        self.shadow.on_read(Site::SlotPeek);
         if self.has_msg.load(Ordering::SeqCst) {
             Some(M::from_bits(self.msg.load(Ordering::SeqCst)))
         } else {
@@ -195,6 +218,8 @@ impl<M: MessageValue> MsgSlot<M> {
     /// the inner pull loop cost ~15% of PR's runtime (EXPERIMENTS.md).
     #[inline]
     pub fn peek_scan(&self) -> Option<M> {
+        #[cfg(feature = "race-check")]
+        self.shadow.on_read(Site::SlotPeekScan);
         if self.has_msg.load(Ordering::Relaxed) {
             Some(M::from_bits(self.msg.load(Ordering::Relaxed)))
         } else {
@@ -204,6 +229,9 @@ impl<M: MessageValue> MsgSlot<M> {
 
     /// Reset without reading.
     pub fn clear(&self) {
+        #[cfg(feature = "race-check")]
+        self.shadow
+            .on_write(Site::SlotClear, self.lock.held_by_current_thread());
         self.has_msg.store(false, Ordering::SeqCst);
     }
 }
@@ -254,6 +282,9 @@ mod tests {
         assert_eq!(s.load_msg(), 20);
     }
 
+    // The shadow record adds 8 bytes per slot, so the compactness
+    // guarantee only holds in real (non-checker) builds.
+    #[cfg(not(feature = "race-check"))]
     #[test]
     fn slot_is_compact() {
         // lock(1) + flag(1) + padding + msg(8) — must stay within 16 bytes

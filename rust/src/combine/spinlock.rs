@@ -31,6 +31,13 @@ impl SpinLock {
     /// Spin until the lock is held by the caller.
     #[inline]
     pub fn acquire(&self) {
+        // Checked before spinning: a recursive acquire would otherwise
+        // spin forever without ever reaching a checkable state.
+        #[cfg(feature = "race-check")]
+        assert!(
+            !self.held_by_current_thread(),
+            "race-check: recursive SpinLock::acquire would self-deadlock"
+        );
         loop {
             // Test-and-set fast path.
             if self
@@ -38,6 +45,8 @@ impl SpinLock {
                 .compare_exchange_weak(false, true, Ordering::Acquire, Ordering::Relaxed)
                 .is_ok()
             {
+                #[cfg(feature = "race-check")]
+                crate::util::shadow::lock_acquired(self as *const SpinLock as usize);
                 return;
             }
             // Test loop: spin on a plain load to avoid cache-line
@@ -51,15 +60,33 @@ impl SpinLock {
     /// Try once; true on success.
     #[inline]
     pub fn try_acquire(&self) -> bool {
-        self.locked
+        let won = self
+            .locked
             .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
-            .is_ok()
+            .is_ok();
+        #[cfg(feature = "race-check")]
+        if won {
+            crate::util::shadow::lock_acquired(self as *const SpinLock as usize);
+        }
+        won
     }
 
     /// Release a held lock.
     #[inline]
     pub fn release(&self) {
+        // Ownership is checked before the store so a release-by-non-owner
+        // panics instead of silently unlocking someone else's section.
+        #[cfg(feature = "race-check")]
+        crate::util::shadow::lock_released(self as *const SpinLock as usize);
         self.locked.store(false, Ordering::Release);
+    }
+
+    /// Does the calling thread hold this lock? (Checker bookkeeping —
+    /// the lock itself records no owner.)
+    #[cfg(feature = "race-check")]
+    #[inline]
+    pub fn held_by_current_thread(&self) -> bool {
+        crate::util::shadow::lock_held(self as *const SpinLock as usize)
     }
 
     /// Run `f` under the lock.
@@ -103,6 +130,8 @@ mod tests {
             lock: SpinLock,
             counter: std::cell::UnsafeCell<u64>,
         }
+        // SAFETY: every access to `counter` happens inside `lock.with`,
+        // so no two threads ever touch the cell concurrently.
         unsafe impl Sync for Shared {}
         let s = Arc::new(Shared {
             lock: SpinLock::new(),
@@ -115,6 +144,8 @@ mod tests {
                 let s = Arc::clone(&s);
                 std::thread::spawn(move || {
                     for _ in 0..INCS {
+                        // SAFETY: the increment runs under `lock`, the
+                        // sole synchroniser for `counter`.
                         s.lock.with(|| unsafe { *s.counter.get() += 1 });
                     }
                 })
@@ -123,6 +154,7 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+        // SAFETY: all writer threads joined above; this read is exclusive.
         assert_eq!(unsafe { *s.counter.get() }, (THREADS * INCS) as u64);
     }
 }

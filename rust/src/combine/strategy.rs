@@ -158,6 +158,9 @@ impl Strategy {
             Strategy::CasNeutral => {
                 let n = combiner
                     .neutral()
+                    // audit:allow(panic): configuration invariant checked
+                    // once per superstep, not per message — CasNeutral is
+                    // only selectable with a neutral-element combiner.
                     .expect("CasNeutral strategy requires a combiner with a neutral element");
                 // Flag stays true forever; emptiness is value == neutral.
                 slot.store_first(n);
@@ -175,6 +178,8 @@ impl Strategy {
         match self {
             Strategy::Lock | Strategy::Hybrid => slot.take(),
             Strategy::CasNeutral => {
+                // audit:allow(panic): same configuration invariant as in
+                // `reset_slot` — unreachable for engine-constructed runs.
                 let n = combiner.neutral().expect("neutral required");
                 let v = slot.load_msg();
                 if v.to_bits() == n.to_bits() {
@@ -320,6 +325,14 @@ mod tests {
     use crate::combine::combiner::{FnCombiner, MinCombiner, SumCombiner};
     use std::sync::Arc;
 
+    /// Announce to the race checker the happens-before edges these tests
+    /// create through raw `thread::spawn`/`join` (outside the engine's
+    /// phase brackets). No-op in normal builds.
+    fn shadow_sync() {
+        #[cfg(feature = "race-check")]
+        crate::util::shadow::sync_point();
+    }
+
     fn all_strategies() -> [Strategy; 3] {
         [Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid]
     }
@@ -440,6 +453,7 @@ mod tests {
     ) {
         let slot: Arc<MsgSlot<u64>> = Arc::new(MsgSlot::new());
         strat.reset_slot(&slot, &c);
+        shadow_sync(); // spawn edge: setup writes precede the workers
         let mut all: Vec<u64> = Vec::new();
         for t in 0..threads {
             for i in 0..msgs_per_thread {
@@ -459,6 +473,7 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+        shadow_sync(); // join edge: worker writes precede the collect
         let got = strat.collect(&slot, &c).expect("message must survive");
         assert_eq!(got, expected(&all), "{strat:?}");
     }
@@ -528,6 +543,7 @@ mod tests {
             let probe: Arc<ContentionProbe> = Arc::new(ContentionProbe::new());
             let c = SumCombiner;
             strat.reset_slot(&slot, &c);
+            shadow_sync();
             let threads = 8;
             let per = 2000u64;
             let handles: Vec<_> = (0..threads)
@@ -544,6 +560,7 @@ mod tests {
             for h in handles {
                 h.join().unwrap();
             }
+            shadow_sync();
             let want: u64 = (0..threads)
                 .map(|t| (0..per).map(|i| t * 7 + i % 5 + 1).sum::<u64>())
                 .sum();
@@ -562,6 +579,7 @@ mod tests {
             let slot: Arc<MsgSlot<u64>> = Arc::new(MsgSlot::new());
             let c = SumCombiner;
             Strategy::Hybrid.reset_slot(&slot, &c);
+            shadow_sync();
             let handles: Vec<_> = (0..4)
                 .map(|t| {
                     let slot = Arc::clone(&slot);
@@ -573,6 +591,7 @@ mod tests {
             for h in handles {
                 h.join().unwrap();
             }
+            shadow_sync();
             let expected: u64 = (0..4).map(|t| 10 + t + round % 3).sum();
             assert_eq!(Strategy::Hybrid.collect(&slot, &c), Some(expected));
         }

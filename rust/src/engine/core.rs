@@ -954,6 +954,8 @@ where
         let mut part = self
             .partition
             .take()
+            // audit:allow(panic): construction invariant — `Engine::run`
+            // dispatches here only when `with_setup` installed shard state.
             .expect("run_partitioned requires shard state");
         let n = self.g.num_vertices();
         let n_shards = part.plan.num_shards();
@@ -1163,6 +1165,9 @@ where
                 let engine = &self;
                 let part_ref = &part;
                 let log_ref = self.log.as_ref();
+                // audit:allow(panic): phase invariant — `cross_pending`
+                // is only non-zero in push mode, which always builds
+                // flush weights at superstep start.
                 let weights = flush_weights.as_ref().expect("push mode");
                 parallel_for_hinted(
                     threads,

@@ -464,6 +464,10 @@ impl<'g> GraphSession<'g> {
             };
             Some(match pooled {
                 Some(mut st) => {
+                    // The pool mutex ordered the previous owner's writes
+                    // before this checkout — tell the race checker.
+                    #[cfg(feature = "race-check")]
+                    crate::util::shadow::sync_point();
                     st.reset();
                     st
                 }
@@ -482,6 +486,10 @@ impl<'g> GraphSession<'g> {
             .map(|b| *b);
         let (store, store_reused, store_epoch_refreshed) = match pooled {
             Some(mut s) => {
+                // Pool-mutex handover is a sync point the race checker
+                // cannot see on its own (see `util::shadow`).
+                #[cfg(feature = "race-check")]
+                crate::util::shadow::sync_point();
                 // Epoch-tagged invalidation: a pooled store primed
                 // against an older mutation epoch is still *shaped*
                 // right (the vertex set never moves), but its contents
@@ -525,6 +533,9 @@ impl<'g> GraphSession<'g> {
                 .map(|b| *b);
             match pooled {
                 Some(mut l) => {
+                    // Pool-mutex handover sync point (as for stores above).
+                    #[cfg(feature = "race-check")]
+                    crate::util::shadow::sync_point();
                     l.ensure_shape(n, cfg.threads.max(1));
                     l.set_epoch_tag(graph_epoch);
                     (Some(l), true)

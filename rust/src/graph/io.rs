@@ -204,6 +204,9 @@ fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
 fn write_u32_slice<W: Write>(w: &mut W, xs: &[u32]) -> std::io::Result<()> {
     // Bulk write via byte reinterpretation (LE hosts; portable fallback
     // would loop, but every deployment target here is little-endian x86).
+    // SAFETY: `xs` is a live, initialised slice; viewing its memory as
+    // `len * 4` bytes stays in bounds, `u8` has no alignment or validity
+    // requirements, and the view is read-only for the borrow's duration.
     let bytes = unsafe {
         std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
     };
@@ -212,6 +215,9 @@ fn write_u32_slice<W: Write>(w: &mut W, xs: &[u32]) -> std::io::Result<()> {
 
 fn read_u32_vec<R: Read>(r: &mut R, len: usize) -> std::io::Result<Vec<u32>> {
     let mut out = vec![0u32; len];
+    // SAFETY: `out` owns `len * 4` initialised bytes; the `&mut [u8]`
+    // view is in bounds, uniquely borrowed from `out`, and any byte
+    // pattern `read_exact` writes is a valid `u32` (LE host format).
     let bytes = unsafe {
         std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, len * 4)
     };
@@ -220,6 +226,8 @@ fn read_u32_vec<R: Read>(r: &mut R, len: usize) -> std::io::Result<Vec<u32>> {
 }
 
 fn write_f64_slice<W: Write>(w: &mut W, xs: &[f64]) -> std::io::Result<()> {
+    // SAFETY: as in `write_u32_slice` — in-bounds read-only byte view of
+    // a live slice; `u8` imposes no alignment or validity constraints.
     let bytes = unsafe {
         std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 8)
     };
@@ -228,6 +236,8 @@ fn write_f64_slice<W: Write>(w: &mut W, xs: &[f64]) -> std::io::Result<()> {
 
 fn read_f64_vec<R: Read>(r: &mut R, len: usize) -> std::io::Result<Vec<f64>> {
     let mut out = vec![0f64; len];
+    // SAFETY: as in `read_u32_vec` — unique in-bounds byte view of the
+    // owned buffer; every 8-byte pattern is a valid `f64` bit pattern.
     let bytes = unsafe {
         std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, len * 8)
     };

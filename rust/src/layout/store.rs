@@ -27,15 +27,31 @@ impl Layout {
 /// Interior-mutable cell for per-vertex user values. The engine guarantees
 /// each vertex is computed by exactly one thread per superstep, which makes
 /// the unsynchronised access sound (same discipline iPregel's C code uses).
-#[repr(transparent)]
-pub struct SyncCell<T>(UnsafeCell<T>);
+/// With `--features race-check` every access is recorded in a shadow cell
+/// and that discipline is enforced at runtime (see `util::shadow`), at the
+/// cost of the transparent layout.
+#[cfg_attr(not(feature = "race-check"), repr(transparent))]
+pub struct SyncCell<T> {
+    inner: UnsafeCell<T>,
+    #[cfg(feature = "race-check")]
+    shadow: crate::util::shadow::ShadowCell,
+}
 
+// SAFETY: `SyncCell` hands out unsynchronised references, which is sound
+// only under the engine's phase discipline — at most one thread accesses a
+// given cell per parallel phase, and phases are separated by scope joins
+// (documented above; machine-checked under `race-check`). `T: Send` is
+// required because cells move between threads across phases.
 unsafe impl<T: Send> Sync for SyncCell<T> {}
 
 impl<T> SyncCell<T> {
     /// Wrap a value.
     pub fn new(v: T) -> Self {
-        SyncCell(UnsafeCell::new(v))
+        SyncCell {
+            inner: UnsafeCell::new(v),
+            #[cfg(feature = "race-check")]
+            shadow: crate::util::shadow::ShadowCell::new(),
+        }
     }
 
     /// Shared read. Sound while no thread holds `get_mut` on the same
@@ -43,14 +59,26 @@ impl<T> SyncCell<T> {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub fn get(&self) -> &T {
-        unsafe { &*self.0.get() }
+        #[cfg(feature = "race-check")]
+        self.shadow.on_read(crate::util::shadow::Site::CellGet);
+        // SAFETY: shared reads are only issued in phases where no thread
+        // writes this cell (enforced by the shadow record under
+        // `race-check`), so no `&mut` aliases the returned `&T`.
+        unsafe { &*self.inner.get() }
     }
 
     /// Exclusive write handle (engine-enforced exclusivity per vertex).
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub fn get_mut(&self) -> &mut T {
-        unsafe { &mut *self.0.get() }
+        #[cfg(feature = "race-check")]
+        self.shadow
+            .on_write(crate::util::shadow::Site::CellGetMut, false);
+        // SAFETY: the engine assigns each vertex to exactly one thread per
+        // phase, so this is the only live reference to the cell for the
+        // duration of the phase (enforced by the shadow record under
+        // `race-check`).
+        unsafe { &mut *self.inner.get() }
     }
 }
 

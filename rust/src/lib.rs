@@ -57,6 +57,7 @@
 //! - the experiment harness ([`exp`]) regenerating Tables I and II.
 
 pub mod algos;
+pub mod audit;
 pub mod combine;
 pub mod config;
 pub mod engine;

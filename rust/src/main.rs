@@ -23,6 +23,10 @@
 //! ipregel table2    [--tiny] [--dir …] [--bench pr,cc,sssp] [--threads 32]
 //! ipregel calibrate                                        measure cost-model constants
 //! ipregel accel     --algo pr|cc|sssp <graph|name>        PJRT dense-block backend
+//! ipregel audit     [--root DIR] [--manifest FILE]        pallas-audit: static
+//!                   concurrency-correctness pass over this repo's own source
+//!                   (SAFETY coverage, ordering manifest, static-mut ban,
+//!                    hot-path panic ban); non-zero exit on violations
 //! ```
 //!
 //! Graphs are referenced by catalog name (`dblp-s`, `friendster-t`, …) or
@@ -68,6 +72,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
         "table2" => cmd_table2(&opts),
         "calibrate" => cmd_calibrate(&opts),
         "accel" => cmd_accel(&opts),
+        "audit" => cmd_audit(&opts),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -77,7 +82,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
 }
 
 const HELP: &str = "ipregel — vertex-centric graph processing (iPregel reproduction)\n\
-  generate | info | run | sim | table1 | table2 | calibrate | accel | help\n\
+  generate | info | run | sim | table1 | table2 | calibrate | accel | audit | help\n\
   See README.md for full usage.";
 
 fn graph_dir(opts: &Opts) -> PathBuf {
@@ -573,6 +578,22 @@ fn cmd_calibrate(opts: &Opts) -> Result<()> {
     println!("{}", c.render());
     println!("\nderived cost model:\n{:#?}", c.to_cost_model());
     Ok(())
+}
+
+fn cmd_audit(opts: &Opts) -> Result<()> {
+    opts.ensure_known(&["root", "manifest"])?;
+    let root = ipregel::audit::resolve_root(opts.get("root"));
+    let manifest = opts
+        .get("manifest")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| root.join("audit/orderings.toml"));
+    let report = ipregel::audit::audit_tree(&root, &manifest).map_err(|e| err!("{e}"))?;
+    print!("{}", report.render());
+    if report.ok() {
+        Ok(())
+    } else {
+        bail!("pallas-audit found {} violation(s)", report.violations.len())
+    }
 }
 
 fn cmd_accel(opts: &Opts) -> Result<()> {

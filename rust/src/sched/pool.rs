@@ -51,6 +51,12 @@ pub fn parallel_for_hinted<F>(
     if n == 0 {
         return;
     }
+    // Race-check epoch bracket: every parallel region (including the
+    // inline serial path — uniformity keeps the epoch algebra trivial)
+    // gets a fresh phase on entry, and the serial code after the scope
+    // join gets one on drop. See `util::shadow`.
+    #[cfg(feature = "race-check")]
+    let _phase = crate::util::shadow::PhaseGuard::enter();
     let chunks = sched.chunks(n, threads, weights);
     // Adaptive serial cutoff (§Perf L3): spawning + joining the team
     // costs ~75 µs on this host, which dwarfs the work when the active

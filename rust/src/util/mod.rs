@@ -10,6 +10,8 @@ pub mod error;
 pub mod prefix;
 pub mod quick;
 pub mod rng;
+#[cfg(feature = "race-check")]
+pub mod shadow;
 pub mod timer;
 
 /// Pads and aligns a value to 128 bytes so neighbouring instances never

@@ -1,0 +1,333 @@
+//! Shadow-state logical race checker (compiled only with
+//! `--features race-check`).
+//!
+//! The engine's memory discipline is *phase-based*: unsynchronised access
+//! to a cell is sound because at most one thread touches it per parallel
+//! phase, and phases are separated by `thread::scope` joins (see
+//! DESIGN.md §2.8). That discipline is invisible to the compiler, so this
+//! module makes it *checkable*: every instrumented cell carries a packed
+//! record of its last accessor — `{phase, thread, access-kind, site}` —
+//! and each new access compares itself against that record. Two accesses
+//! conflict when they land in the **same phase** from **different
+//! threads** and at least one of them is an unsynchronised write (or one
+//! side is lock-guarded while the other bypasses the lock). A conflict is
+//! a violated engine invariant, never a tolerable data race, so the
+//! checker panics with both sites.
+//!
+//! ## Phase epochs
+//!
+//! A global counter is bumped at entry *and* exit of every
+//! [`parallel_for_hinted`](crate::sched::pool::parallel_for_hinted)
+//! region, so each parallel region — and each serial stretch between
+//! regions — gets its own epoch. The counter is monotonic; any two
+//! accesses separated by a real synchronisation point therefore observe
+//! different epochs and can never falsely conflict. Cross-run handover of
+//! pooled state through a session `Mutex` is a synchronisation point the
+//! pool hooks announce via [`sync_point`].
+//!
+//! ## What it detects (and what it can't)
+//!
+//! Detection is *record-based*, not temporal: two sequential accesses in
+//! the same epoch conflict exactly like truly simultaneous ones. That
+//! makes seeded-bug tests deterministic — no timing window to hit. The
+//! cost is the usual last-writer limitation: a cell remembers one prior
+//! access (reads never overwrite a same-thread write record, so the
+//! common write-then-read pattern stays visible). Under concurrent
+//! engine runs the global counter advances while a region is in flight,
+//! which can only split an epoch (missed detection), never merge two
+//! (false alarm).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// Record layout (one `AtomicU64` per instrumented cell):
+//   bits 63..24  phase epoch (40 bits, monotonic)
+//   bits 23..8   thread id   (16 bits; reuse across 65 536 spawns is
+//                             harmless — ids can only collide across
+//                             different epochs)
+//   bits  7..2   site id     (6 bits, diagnostic only)
+//   bits  1..0   access kind
+const PHASE_SHIFT: u32 = 24;
+const TID_SHIFT: u32 = 8;
+const TID_MASK: u64 = 0xFFFF;
+const SITE_SHIFT: u32 = 2;
+const SITE_MASK: u64 = 0x3F;
+const KIND_MASK: u64 = 0b11;
+
+const KIND_NONE: u64 = 0;
+const KIND_READ: u64 = 1;
+const KIND_WRITE_UNSYNC: u64 = 2;
+const KIND_WRITE_SYNC: u64 = 3;
+
+/// Instrumented access sites, packed into the record for diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Site {
+    None = 0,
+    SlotStoreFirst = 1,
+    SlotStoreMsg = 2,
+    SlotTake = 3,
+    SlotClear = 4,
+    SlotPeek = 5,
+    SlotPeekScan = 6,
+    CellGet = 7,
+    CellGetMut = 8,
+}
+
+impl Site {
+    fn from_bits(b: u64) -> Site {
+        match b {
+            1 => Site::SlotStoreFirst,
+            2 => Site::SlotStoreMsg,
+            3 => Site::SlotTake,
+            4 => Site::SlotClear,
+            5 => Site::SlotPeek,
+            6 => Site::SlotPeekScan,
+            7 => Site::CellGet,
+            8 => Site::CellGetMut,
+            _ => Site::None,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Site::None => "(none)",
+            Site::SlotStoreFirst => "MsgSlot::store_first",
+            Site::SlotStoreMsg => "MsgSlot::store_msg",
+            Site::SlotTake => "MsgSlot::take",
+            Site::SlotClear => "MsgSlot::clear",
+            Site::SlotPeek => "MsgSlot::peek",
+            Site::SlotPeekScan => "MsgSlot::peek_scan",
+            Site::CellGet => "SyncCell::get",
+            Site::CellGetMut => "SyncCell::get_mut",
+        }
+    }
+}
+
+fn kind_name(k: u64) -> &'static str {
+    match k {
+        KIND_READ => "unsynchronised read",
+        KIND_WRITE_UNSYNC => "unsynchronised write",
+        KIND_WRITE_SYNC => "lock-guarded write",
+        _ => "(none)",
+    }
+}
+
+/// Global phase epoch. Starts at 1 so a zeroed record (phase 0,
+/// `KIND_NONE`) can never alias a live access.
+static PHASE: AtomicU64 = AtomicU64::new(1);
+/// Thread-id well; each OS thread draws one lazily.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::SeqCst) & TID_MASK;
+    /// Stack of `SpinLock` addresses the current thread holds.
+    static HELD_LOCKS: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+}
+
+/// This thread's checker id.
+pub fn thread_id() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Current phase epoch.
+pub fn current_phase() -> u64 {
+    PHASE.load(Ordering::SeqCst)
+}
+
+/// Advance the global phase epoch: call where real synchronisation
+/// happens that the checker cannot see (scope joins are covered by
+/// [`PhaseGuard`]; session pools call this at checkout because the pool
+/// `Mutex` orders the previous owner's writes before ours).
+pub fn sync_point() {
+    PHASE.fetch_add(1, Ordering::SeqCst);
+}
+
+/// RAII phase bracket for a parallel region: entry gives the region a
+/// fresh epoch, drop (after the scope join) gives the following serial
+/// stretch one too.
+pub struct PhaseGuard(());
+
+impl PhaseGuard {
+    pub fn enter() -> PhaseGuard {
+        sync_point();
+        PhaseGuard(())
+    }
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        sync_point();
+    }
+}
+
+/// Record that the current thread acquired the `SpinLock` at `addr`.
+/// Panics on recursive acquisition — the engine's spin locks are not
+/// re-entrant, so a nested acquire is a guaranteed self-deadlock.
+pub fn lock_acquired(addr: usize) {
+    HELD_LOCKS.with(|h| {
+        let mut held = h.borrow_mut();
+        assert!(
+            !held.contains(&addr),
+            "race-check: recursive SpinLock acquisition (thread {} already \
+             holds the lock at {addr:#x}) — this deadlocks outside the checker",
+            thread_id(),
+        );
+        held.push(addr);
+    });
+}
+
+/// Record that the current thread released the `SpinLock` at `addr`.
+/// Panics when this thread does not hold it — an unlock-by-non-owner is
+/// a protocol violation even when it happens to "work".
+pub fn lock_released(addr: usize) {
+    HELD_LOCKS.with(|h| {
+        let mut held = h.borrow_mut();
+        match held.iter().rposition(|&a| a == addr) {
+            Some(i) => {
+                held.remove(i);
+            }
+            None => panic!(
+                "race-check: SpinLock at {addr:#x} released by thread {} \
+                 which does not hold it",
+                thread_id(),
+            ),
+        }
+    });
+}
+
+/// Does the current thread hold the `SpinLock` at `addr`?
+pub fn lock_held(addr: usize) -> bool {
+    HELD_LOCKS.with(|h| h.borrow().contains(&addr))
+}
+
+#[inline]
+fn pack(phase: u64, tid: u64, site: Site, kind: u64) -> u64 {
+    (phase << PHASE_SHIFT)
+        | ((tid & TID_MASK) << TID_SHIFT)
+        | ((site as u64 & SITE_MASK) << SITE_SHIFT)
+        | (kind & KIND_MASK)
+}
+
+/// Per-cell shadow record. Embed one next to each protected cell (the
+/// owning struct's field is itself `#[cfg(feature = "race-check")]`-gated,
+/// so release builds carry no trace of it).
+pub struct ShadowCell {
+    record: AtomicU64,
+}
+
+impl Default for ShadowCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShadowCell {
+    pub const fn new() -> ShadowCell {
+        ShadowCell {
+            record: AtomicU64::new(0),
+        }
+    }
+
+    /// Record an unsynchronised read of the cell.
+    #[inline]
+    pub fn on_read(&self, site: Site) {
+        self.on_access(site, KIND_READ);
+    }
+
+    /// Record a write: `synced` when the caller holds the cell's own
+    /// lock (the checker then only flags cross-discipline overlap).
+    #[inline]
+    pub fn on_write(&self, site: Site, synced: bool) {
+        self.on_access(site, if synced { KIND_WRITE_SYNC } else { KIND_WRITE_UNSYNC });
+    }
+
+    fn on_access(&self, site: Site, kind: u64) {
+        let phase = current_phase();
+        let tid = thread_id();
+        let old = self.record.load(Ordering::SeqCst);
+        let (ophase, otid) = (old >> PHASE_SHIFT, (old >> TID_SHIFT) & TID_MASK);
+        let (osite, okind) = (Site::from_bits((old >> SITE_SHIFT) & SITE_MASK), old & KIND_MASK);
+        if okind != KIND_NONE && ophase == phase && otid != tid {
+            // Benign combinations: both sides read, or both sides hold
+            // the cell's lock. Everything else breaks the discipline.
+            let benign = (okind == KIND_READ && kind == KIND_READ)
+                || (okind == KIND_WRITE_SYNC && kind == KIND_WRITE_SYNC);
+            assert!(
+                benign,
+                "race-check: same-phase conflicting access in phase {phase}: \
+                 {} via {} by thread {otid} overlaps {} via {} by thread {tid}",
+                kind_name(okind),
+                osite.name(),
+                kind_name(kind),
+                Site::name(site),
+            );
+        }
+        // Writes dominate reads within a phase: keep a same-thread write
+        // record visible so a later cross-thread read still trips on it.
+        if kind == KIND_READ
+            && ophase == phase
+            && otid == tid
+            && (okind == KIND_WRITE_UNSYNC || okind == KIND_WRITE_SYNC)
+        {
+            return;
+        }
+        self.record.store(pack(phase, tid, site, kind), Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_are_monotonic() {
+        let a = current_phase();
+        sync_point();
+        let b = current_phase();
+        assert!(b > a);
+        {
+            let _g = PhaseGuard::enter();
+            assert!(current_phase() > b);
+        }
+        assert!(current_phase() > b + 1, "drop bumps again");
+    }
+
+    #[test]
+    fn same_thread_never_conflicts() {
+        let c = ShadowCell::new();
+        c.on_write(Site::CellGetMut, false);
+        c.on_read(Site::CellGet);
+        c.on_write(Site::SlotStoreFirst, false);
+        c.on_write(Site::SlotStoreMsg, true);
+    }
+
+    #[test]
+    fn lock_stack_tracks_ownership() {
+        assert!(!lock_held(0x10));
+        lock_acquired(0x10);
+        assert!(lock_held(0x10));
+        lock_released(0x10);
+        assert!(!lock_held(0x10));
+    }
+
+    #[test]
+    fn read_does_not_erase_same_thread_write_record() {
+        // Other tests in this binary bump the global phase concurrently;
+        // retention only applies within one phase, so retry until the
+        // write/read pair lands in a stable phase.
+        for _ in 0..64 {
+            let c = ShadowCell::new();
+            let p0 = current_phase();
+            c.on_write(Site::CellGetMut, false);
+            c.on_read(Site::CellGet);
+            if current_phase() == p0 {
+                // The record must still be the write — the kind bits say so.
+                let raw = c.record.load(Ordering::SeqCst);
+                assert_eq!(raw & KIND_MASK, KIND_WRITE_UNSYNC);
+                return;
+            }
+        }
+        panic!("no stable phase across 64 attempts");
+    }
+}

@@ -1,0 +1,198 @@
+//! Integration tests for `pallas-audit` (the `ipregel audit` subcommand).
+//!
+//! Two halves:
+//!   1. **Self-audit**: the shipped tree must satisfy every invariant
+//!      against the shipped manifest — this is the same gate CI runs.
+//!   2. **Known-bad fixtures**: seeded violations must produce the
+//!      expected rule at the expected file:line, so we know the analyzer
+//!      actually fires (a checker that never fails checks nothing).
+
+use ipregel::audit::manifest::Manifest;
+use ipregel::audit::{audit_sources, audit_tree, AuditRule};
+use std::path::Path;
+
+fn crate_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn shipped_tree_passes_the_shipped_manifest() {
+    let root = crate_root();
+    let report = audit_tree(root, &root.join("audit/orderings.toml")).unwrap();
+    assert!(
+        report.ok(),
+        "pallas-audit violations in the shipped tree:\n{}",
+        report.render()
+    );
+    assert!(
+        report.warnings.is_empty(),
+        "stale manifest entries:\n{}",
+        report.render()
+    );
+    // Sanity: the audit actually saw the tree, not an empty dir.
+    assert!(report.files_scanned > 20, "only {} files", report.files_scanned);
+    assert!(report.unsafe_sites >= 11, "only {} unsafe", report.unsafe_sites);
+    assert!(report.ordering_uses >= 50, "only {} orderings", report.ordering_uses);
+}
+
+#[test]
+fn missing_manifest_is_a_readable_error() {
+    let root = crate_root();
+    let err = audit_tree(root, &root.join("audit/nope.toml")).unwrap_err();
+    assert!(err.contains("nope.toml"), "unhelpful error: {err}");
+}
+
+fn run_fixture(rel: &str, src: &str) -> ipregel::audit::AuditReport {
+    audit_sources(&[(rel.to_string(), src.to_string())], &Manifest::default())
+}
+
+#[test]
+fn fixture_unsafe_without_safety_names_file_and_line() {
+    let src = "\
+pub fn fill(dst: &mut [u8]) {
+    let p = dst.as_mut_ptr();
+    unsafe { std::ptr::write_bytes(p, 0, dst.len()) };
+}
+";
+    let r = run_fixture("src/fixture.rs", src);
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+    let d = &r.violations[0];
+    assert_eq!(d.rule, AuditRule::UnsafeNeedsSafety);
+    assert_eq!((d.file.as_str(), d.line), ("src/fixture.rs", 3));
+}
+
+#[test]
+fn fixture_safety_comment_may_be_a_multi_line_paragraph() {
+    let src = "\
+pub fn fill(dst: &mut [u8]) {
+    let p = dst.as_mut_ptr();
+    // SAFETY: `p` comes from a live &mut slice, the write stays within
+    // `dst.len()` bytes, and zero is a valid value for u8 — so the
+    // write touches only memory we exclusively borrow.
+    unsafe { std::ptr::write_bytes(p, 0, dst.len()) };
+}
+";
+    let r = run_fixture("src/fixture.rs", src);
+    assert!(r.ok(), "{}", r.render());
+}
+
+#[test]
+fn fixture_unlisted_ordering_is_flagged_with_symbol() {
+    let m = Manifest::parse(
+        "[[site]]\nfile = \"src/fixture.rs\"\nsymbol = \"publish\"\n\
+         orderings = [\"Release\"]\nwhy = \"publication store\"\n",
+    )
+    .unwrap();
+    let src = "\
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn publish(a: &AtomicU64) {
+    a.store(1, Ordering::Relaxed);
+}
+";
+    let r = audit_sources(&[("src/fixture.rs".to_string(), src.to_string())], &m);
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+    let d = &r.violations[0];
+    assert_eq!(d.rule, AuditRule::UnlistedOrdering);
+    assert_eq!((d.file.as_str(), d.line), ("src/fixture.rs", 3));
+    assert!(d.message.contains("publish"), "no symbol in: {}", d.message);
+    assert!(d.message.contains("Release"), "no allowed list in: {}", d.message);
+}
+
+#[test]
+fn fixture_uncovered_file_reports_missing_entry() {
+    let src = "\
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(a: &AtomicU64) {
+    a.fetch_add(1, Ordering::SeqCst);
+}
+";
+    let r = run_fixture("src/fixture.rs", src);
+    assert_eq!(r.violations.len(), 1);
+    assert_eq!(r.violations[0].rule, AuditRule::UnlistedOrdering);
+    assert!(r.violations[0].message.contains("no manifest entry"));
+}
+
+#[test]
+fn fixture_static_mut_is_flagged() {
+    let src = "static mut GLOBAL_SCRATCH: [u64; 4] = [0; 4];\n";
+    let r = run_fixture("src/fixture.rs", src);
+    assert_eq!(r.violations.len(), 1);
+    let d = &r.violations[0];
+    assert_eq!(d.rule, AuditRule::StaticMut);
+    assert_eq!(d.line, 1);
+}
+
+#[test]
+fn fixture_unwrap_in_hot_path_is_flagged_only_there() {
+    let src = "\
+pub fn collect(v: Option<u64>) -> u64 {
+    v.unwrap()
+}
+";
+    // Deny-listed file: violation at the unwrap line.
+    let r = run_fixture("src/combine/strategy.rs", src);
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+    let d = &r.violations[0];
+    assert_eq!(d.rule, AuditRule::PanicInHotPath);
+    assert_eq!(d.line, 2);
+    // The same code outside the hot paths is fine.
+    assert!(run_fixture("src/exp/fixture.rs", src).ok());
+    // And the escape hatch silences it when justified.
+    let allowed = "\
+pub fn collect(v: Option<u64>) -> u64 {
+    // audit:allow(panic): configuration invariant validated at startup.
+    v.unwrap()
+}
+";
+    assert!(run_fixture("src/combine/strategy.rs", allowed).ok());
+}
+
+#[test]
+fn fixture_strings_and_comments_never_trip_rules() {
+    let src = r##"
+pub fn describe() -> &'static str {
+    // unsafe static mut Ordering::Relaxed .unwrap() — commentary only
+    "unsafe { static mut X } Ordering::AcqRel .unwrap() .expect(msg)"
+}
+pub fn raw() -> &'static str {
+    r#"static mut Y: u8 = 0; Ordering::SeqCst"#
+}
+"##;
+    let r = run_fixture("src/combine/slot.rs", src);
+    assert!(r.ok(), "{}", r.render());
+    assert_eq!(r.ordering_uses, 0);
+}
+
+#[test]
+fn fixture_stale_manifest_entry_warns_with_manifest_line() {
+    let m = Manifest::parse(
+        "# stale site below\n[[site]]\nfile = \"src/gone.rs\"\nsymbol = \"f\"\n\
+         orderings = [\"SeqCst\"]\nwhy = \"obsolete\"\n",
+    )
+    .unwrap();
+    let r = audit_sources(&[("src/live.rs".to_string(), "fn f() {}\n".to_string())], &m);
+    assert!(r.ok());
+    assert_eq!(r.warnings.len(), 1);
+    let w = &r.warnings[0];
+    assert_eq!(w.rule, AuditRule::StaleManifestEntry);
+    assert_eq!(w.file, "audit/orderings.toml");
+    assert_eq!(w.line, 2, "should point at the [[site]] header line");
+}
+
+#[test]
+fn fixture_test_modules_are_exempt_from_the_panic_rule() {
+    let src = "\
+pub fn real(v: Option<u64>) -> Option<u64> {
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        super::real(Some(3)).unwrap();
+    }
+}
+";
+    assert!(run_fixture("src/combine/slot.rs", src).ok());
+}
