@@ -1,0 +1,269 @@
+//! Scatter memory-system bench: fixed shard dispatch vs work-stealing vs
+//! the full memory pass (stealing + deep prefetch pipeline) per
+//! algorithm, emitting `BENCH_scatter.json`. The headline claim under
+//! test: on an irregular catalog-analogue graph the stealing dispatch is
+//! never (meaningfully) slower than fixed cuts, and the full pass is
+//! value-identical to both — the memory knobs buy locality and balance,
+//! never answers.
+//!
+//! Run: `cargo bench --bench bench_scatter`
+//!      `BENCH_SMOKE=1 cargo bench --bench bench_scatter`  (CI smoke:
+//!       small graph — exercises stealing, the pipeline and the parity
+//!       assertions, not the clock)
+//!      `BENCH_OUT=path.json` overrides the output location.
+//!
+//! A/B of the prefetch *hints* themselves is a compile-time axis: rerun
+//! with `--features no-prefetch` and diff the JSON.
+
+use ipregel::algos::{Bfs, ConnectedComponents, PageRank, Sssp};
+use ipregel::engine::{EngineConfig, GraphSession, Halt, RunOptions, VertexProgram};
+use ipregel::graph::csr::Csr;
+use ipregel::graph::gen;
+use ipregel::metrics::RunMetrics;
+use ipregel::util::timer::fmt_duration;
+use std::fmt::Write as _;
+
+struct Row {
+    algo: &'static str,
+    config: String,
+    millis: f64,
+    supersteps: usize,
+    messages: u64,
+    steals: u64,
+    lanes_scanned: u64,
+}
+
+/// Best-of-`reps` wall time for one (program, config) pair.
+fn bench_one<P: VertexProgram>(
+    session: &GraphSession<'_>,
+    p: &P,
+    cfg: EngineConfig,
+    halt: &Halt<ipregel::engine::AggValue<P>>,
+    reps: usize,
+) -> (RunMetrics, Vec<P::Value>, f64) {
+    let mut best: Option<(RunMetrics, Vec<P::Value>, f64)> = None;
+    for _ in 0..reps.max(1) {
+        let r = session.run_with(p, RunOptions::new().config(cfg).halt(halt.clone()));
+        let ms = r.metrics.total_time.as_secs_f64() * 1e3;
+        let better = match &best {
+            None => true,
+            Some((_, _, b)) => ms < *b,
+        };
+        if better {
+            best = Some((r.metrics, r.values, ms));
+        }
+    }
+    best.unwrap()
+}
+
+fn json_escape_free(s: &str) -> &str {
+    debug_assert!(!s.contains('"') && !s.contains('\\'));
+    s
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_scatter.json".to_string());
+
+    // Largest catalog-analogue shape (RMAT, Graph500 quadrants): the
+    // skew is the point — power-law shard weights are what stealing and
+    // the prefetch pipeline exist to absorb.
+    let (g, reps): (Csr, usize) = if smoke {
+        (gen::rmat(10, 6, 0.57, 0.19, 0.19, 7), 1)
+    } else {
+        (gen::rmat(14, 8, 0.57, 0.19, 0.19, 7), 3)
+    };
+    eprintln!(
+        "== bench_scatter ({}): |V|={} |E|={} ==",
+        if smoke { "SMOKE" } else { "full" },
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    let threads = 4usize;
+    let shards = if smoke { 16 } else { 64 };
+    // Sharded list-driven scatter is the hot loop under test; the grid
+    // below toggles only the memory knobs on top of it.
+    let base = EngineConfig::default().threads(threads).shards(shards).bypass(true);
+    let session = GraphSession::with_config(&g, base);
+
+    let grid: Vec<(&'static str, EngineConfig)> = vec![
+        ("fixed", base),
+        ("steal", base.steal(true)),
+        ("deep-pipeline", base.pipeline_depth(32)),
+        ("full-pass", base.steal(true).pipeline_depth(32)),
+    ];
+
+    fn fmt_ms(ms: f64) -> String {
+        fmt_duration(std::time::Duration::from_secs_f64(ms / 1e3))
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut ratios: Vec<(&'static str, f64)> = Vec::new();
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_algo<P: VertexProgram>(
+        session: &GraphSession<'_>,
+        name: &'static str,
+        p: &P,
+        grid: &[(&'static str, EngineConfig)],
+        halt: &Halt<ipregel::engine::AggValue<P>>,
+        reps: usize,
+        rows: &mut Vec<Row>,
+        ratios: &mut Vec<(&'static str, f64)>,
+    ) where
+        P::Value: PartialEq + std::fmt::Debug,
+    {
+        let mut fixed_ms = f64::NAN;
+        let mut full_ms = f64::NAN;
+        let mut reference: Option<Vec<P::Value>> = None;
+        for (label, cfg) in grid {
+            let (m, values, ms) = bench_one(session, p, *cfg, halt, reps);
+            eprintln!(
+                "  {:<6} {:<14} {} ({}; steals {})",
+                name,
+                label,
+                m.summary(),
+                fmt_ms(ms),
+                m.steals
+            );
+            match &reference {
+                None => reference = Some(values),
+                Some(want) => {
+                    assert_eq!(&values, want, "{name}/{label}: memory knobs changed answers")
+                }
+            }
+            match *label {
+                "fixed" => fixed_ms = ms,
+                "full-pass" => full_ms = ms,
+                _ => {}
+            }
+            rows.push(Row {
+                algo: name,
+                config: (*label).to_string(),
+                millis: ms,
+                supersteps: m.num_supersteps(),
+                messages: m.total_messages(),
+                steals: m.steals,
+                lanes_scanned: m.vector_lanes_scanned,
+            });
+        }
+        ratios.push((name, full_ms / fixed_ms));
+        eprintln!(
+            "  {:<6} full-pass/fixed = {:.3}",
+            name,
+            full_ms / fixed_ms
+        );
+    }
+
+    let halt_q: Halt<()> = Halt::quiescence();
+    let halt_pr: Halt<()> = Halt::supersteps(if smoke { 5 } else { 10 });
+    run_algo(
+        &session,
+        "bfs",
+        &Bfs {
+            root: g.max_out_degree_vertex(),
+        },
+        &grid,
+        &halt_q,
+        reps,
+        &mut rows,
+        &mut ratios,
+    );
+    run_algo(
+        &session,
+        "pr",
+        &PageRank::default(),
+        &grid,
+        &halt_pr,
+        reps,
+        &mut rows,
+        &mut ratios,
+    );
+    run_algo(
+        &session,
+        "cc",
+        &ConnectedComponents,
+        &grid,
+        &halt_q,
+        reps,
+        &mut rows,
+        &mut ratios,
+    );
+    run_algo(
+        &session,
+        "sssp",
+        &Sssp::from_hub(&g),
+        &grid,
+        &halt_q,
+        reps,
+        &mut rows,
+        &mut ratios,
+    );
+
+    // ---- Emit BENCH_scatter.json -----------------------------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(j, "  \"bench\": \"scatter\",");
+    let _ = writeln!(j, "  \"smoke\": {},", smoke);
+    let _ = writeln!(
+        j,
+        "  \"graph\": {{\"vertices\": {}, \"edges\": {}}},",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let _ = writeln!(j, "  \"threads\": {},", threads);
+    let _ = writeln!(j, "  \"shards\": {},", shards);
+    let _ = writeln!(
+        j,
+        "  \"prefetch\": {},",
+        !cfg!(feature = "no-prefetch")
+    );
+    j.push_str("  \"full_pass_vs_fixed\": {\n");
+    for (i, (name, ratio)) in ratios.iter().enumerate() {
+        let _ = write!(j, "    \"{}\": {:.4}", json_escape_free(name), ratio);
+        j.push_str(if i + 1 < ratios.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  },\n");
+    j.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"algo\": \"{}\", \"config\": \"{}\", \"millis\": {:.3}, \
+             \"supersteps\": {}, \"messages\": {}, \"steals\": {}, \
+             \"vector_lanes_scanned\": {}}}",
+            json_escape_free(r.algo),
+            json_escape_free(&r.config),
+            r.millis,
+            r.supersteps,
+            r.messages,
+            r.steals,
+            r.lanes_scanned
+        );
+        j.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ]\n}\n");
+
+    std::fs::write(&out_path, &j).expect("writing BENCH_scatter.json");
+    eprintln!("wrote {out_path} ({} result rows)", rows.len());
+
+    // Parity echoes of the test_scatter.rs contracts, cheap enough to
+    // keep in the bench itself:
+    //  - message totals are knob-independent per algorithm;
+    //  - non-stealing rows never record a steal;
+    //  - PageRank's pull gather reports lane traffic only if its
+    //    combiner is a monoid (f64 sum is not — so zero).
+    for algo in ["bfs", "pr", "cc", "sssp"] {
+        let mut totals = rows.iter().filter(|r| r.algo == algo).map(|r| r.messages);
+        let first = totals.next().expect("rows exist");
+        assert!(
+            totals.all(|m| m == first),
+            "{algo}: message totals diverge across configs"
+        );
+    }
+    for r in rows.iter().filter(|r| r.config == "fixed" || r.config == "deep-pipeline") {
+        assert_eq!(r.steals, 0, "{}/{}: steals without stealing", r.algo, r.config);
+    }
+    eprintln!("parity checks passed");
+}

@@ -38,7 +38,7 @@ const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", 
 
 /// Files subject to the no-panic rule (rule 4): the per-message scatter,
 /// deliver and collect paths plus the substrate they run on.
-const PANIC_DENY: [&str; 11] = [
+const PANIC_DENY: [&str; 13] = [
     "src/engine/core.rs",
     "src/engine/shard.rs",
     "src/combine/strategy.rs",
@@ -46,10 +46,12 @@ const PANIC_DENY: [&str; 11] = [
     "src/combine/spinlock.rs",
     "src/combine/plane.rs",
     "src/combine/combiner.rs",
+    "src/combine/vector.rs",
     "src/layout/aos.rs",
     "src/layout/soa.rs",
     "src/layout/store.rs",
     "src/sched/pool.rs",
+    "src/sched/steal.rs",
 ];
 
 /// Which invariant a diagnostic belongs to.

@@ -4,6 +4,22 @@
 //! (Pregel's message-reduction hook). It must be commutative and
 //! associative — the engine combines in arbitrary interleavings.
 
+/// The handful of monoids the engine recognises *structurally*, enabling
+/// reassociated (vector/unrolled) combining on the dense-bypass path
+/// (DESIGN.md §2.9). Declaring a kind asserts the operation is **exactly**
+/// associative and commutative over its message type — true for integer
+/// min/max/sum (wrapping add is associative), false for float sums, which
+/// is why the float `SumCombiner` impls decline to declare one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MonoidKind {
+    /// `combine == min`, neutral is the type's maximum.
+    Min,
+    /// `combine == max`, neutral is the type's minimum.
+    Max,
+    /// `combine == +` (exact: integer or bitwise), neutral is zero.
+    Sum,
+}
+
 /// A commutative, associative merge of two messages.
 pub trait Combiner<M>: Send + Sync {
     /// Combine `a` and `b` into a single message.
@@ -13,6 +29,16 @@ pub trait Combiner<M>: Send + Sync {
     /// (`combine(n, x) == x`). Required by the pure-CAS strategy; the
     /// hybrid strategy works without one — that is precisely its point.
     fn neutral(&self) -> Option<M> {
+        None
+    }
+
+    /// Declare this combiner an *exact* monoid of a known kind, licensing
+    /// the engine to reassociate reductions (4-lane unrolled gather,
+    /// SIMD slot ranges — see [`crate::combine::vector`]). Only return
+    /// `Some` when `combine` is bit-exactly associative + commutative
+    /// **and** `neutral()` is a two-sided identity; float sums must stay
+    /// `None` or lane order changes the result bits.
+    fn monoid_kind(&self) -> Option<MonoidKind> {
         None
     }
 }
@@ -29,8 +55,12 @@ pub struct MaxCombiner;
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SumCombiner;
 
+// The `$exact` flag marks types whose min/max/sum are *bit-exactly*
+// associative: true for the integers, false for floats (min/max on floats
+// are order-sensitive around NaN, and float sum reassociation changes
+// result bits), so only the integer impls declare a `MonoidKind`.
 macro_rules! impl_minmax {
-    ($($t:ty => $max:expr, $min:expr);* $(;)?) => {$(
+    ($($t:ty => $max:expr, $min:expr, $exact:literal);* $(;)?) => {$(
         impl Combiner<$t> for MinCombiner {
             #[inline]
             fn combine(&self, a: $t, b: $t) -> $t {
@@ -38,6 +68,9 @@ macro_rules! impl_minmax {
             }
             fn neutral(&self) -> Option<$t> {
                 Some($max)
+            }
+            fn monoid_kind(&self) -> Option<MonoidKind> {
+                if $exact { Some(MonoidKind::Min) } else { None }
             }
         }
         impl Combiner<$t> for MaxCombiner {
@@ -48,21 +81,24 @@ macro_rules! impl_minmax {
             fn neutral(&self) -> Option<$t> {
                 Some($min)
             }
+            fn monoid_kind(&self) -> Option<MonoidKind> {
+                if $exact { Some(MonoidKind::Max) } else { None }
+            }
         }
     )*};
 }
 
 impl_minmax! {
-    u32 => u32::MAX, u32::MIN;
-    u64 => u64::MAX, u64::MIN;
-    i32 => i32::MAX, i32::MIN;
-    i64 => i64::MAX, i64::MIN;
-    f32 => f32::INFINITY, f32::NEG_INFINITY;
-    f64 => f64::INFINITY, f64::NEG_INFINITY;
+    u32 => u32::MAX, u32::MIN, true;
+    u64 => u64::MAX, u64::MIN, true;
+    i32 => i32::MAX, i32::MIN, true;
+    i64 => i64::MAX, i64::MIN, true;
+    f32 => f32::INFINITY, f32::NEG_INFINITY, false;
+    f64 => f64::INFINITY, f64::NEG_INFINITY, false;
 }
 
 macro_rules! impl_sum {
-    ($($t:ty),*) => {$(
+    ($($t:ty => $exact:literal),* $(,)?) => {$(
         impl Combiner<$t> for SumCombiner {
             #[inline]
             fn combine(&self, a: $t, b: $t) -> $t {
@@ -71,11 +107,21 @@ macro_rules! impl_sum {
             fn neutral(&self) -> Option<$t> {
                 Some(0 as $t)
             }
+            fn monoid_kind(&self) -> Option<MonoidKind> {
+                if $exact { Some(MonoidKind::Sum) } else { None }
+            }
         }
     )*};
 }
 
-impl_sum!(u32, u64, i32, i64, f32, f64);
+impl_sum! {
+    u32 => true,
+    u64 => true,
+    i32 => true,
+    i64 => true,
+    f32 => false,
+    f64 => false,
+}
 
 /// Placeholder combiner for log-plane programs.
 ///
@@ -105,17 +151,30 @@ impl<M: Copy + Send + Sync> Combiner<M> for NullCombiner {
 pub struct FnCombiner<M, F: Fn(M, M) -> M + Send + Sync> {
     f: F,
     neutral: Option<M>,
+    monoid: Option<MonoidKind>,
 }
 
 impl<M: Copy + Send + Sync, F: Fn(M, M) -> M + Send + Sync> FnCombiner<M, F> {
     /// Combiner from a closure, no neutral element declared.
     pub fn new(f: F) -> Self {
-        FnCombiner { f, neutral: None }
+        FnCombiner {
+            f,
+            neutral: None,
+            monoid: None,
+        }
     }
 
     /// Declare a neutral element (enables the pure-CAS strategy).
     pub fn with_neutral(mut self, n: M) -> Self {
         self.neutral = Some(n);
+        self
+    }
+
+    /// Declare the closure an exact monoid of `kind` (enables vector
+    /// combining — see [`Combiner::monoid_kind`] for the contract the
+    /// caller is vouching for).
+    pub fn with_monoid(mut self, kind: MonoidKind) -> Self {
+        self.monoid = Some(kind);
         self
     }
 }
@@ -128,6 +187,10 @@ impl<M: Copy + Send + Sync, F: Fn(M, M) -> M + Send + Sync> Combiner<M> for FnCo
 
     fn neutral(&self) -> Option<M> {
         self.neutral
+    }
+
+    fn monoid_kind(&self) -> Option<MonoidKind> {
+        self.monoid
     }
 }
 
@@ -163,7 +226,23 @@ mod tests {
         let c = FnCombiner::new(|a: u32, b: u32| a ^ b).with_neutral(0);
         assert_eq!(c.combine(0b101, 0b011), 0b110);
         assert_eq!(c.neutral(), Some(0));
+        assert_eq!(c.monoid_kind(), None, "monoids are opt-in for closures");
         let no_neutral = FnCombiner::new(|a: u32, b: u32| a.min(b) + 1);
         assert_eq!(no_neutral.neutral(), None);
+    }
+
+    #[test]
+    fn monoid_kinds_only_on_exact_impls() {
+        assert_eq!(Combiner::<u64>::monoid_kind(&MinCombiner), Some(MonoidKind::Min));
+        assert_eq!(Combiner::<u32>::monoid_kind(&MaxCombiner), Some(MonoidKind::Max));
+        assert_eq!(Combiner::<i64>::monoid_kind(&SumCombiner), Some(MonoidKind::Sum));
+        // Float reassociation changes bits: no monoid declared.
+        assert_eq!(Combiner::<f64>::monoid_kind(&SumCombiner), None);
+        assert_eq!(Combiner::<f32>::monoid_kind(&MinCombiner), None);
+        // Closures opt in explicitly.
+        let c = FnCombiner::new(|a: u64, b: u64| a.wrapping_add(b))
+            .with_neutral(0)
+            .with_monoid(MonoidKind::Sum);
+        assert_eq!(c.monoid_kind(), Some(MonoidKind::Sum));
     }
 }

@@ -28,8 +28,9 @@ pub mod plane;
 pub mod slot;
 pub mod spinlock;
 pub mod strategy;
+pub mod vector;
 
-pub use combiner::{Combiner, MaxCombiner, MinCombiner, NullCombiner, SumCombiner};
+pub use combiner::{Combiner, MaxCombiner, MinCombiner, MonoidKind, NullCombiner, SumCombiner};
 pub use plane::{CombinedPlane, DeliveryPlane, LogPlane, MessageLog};
 pub use slot::{MessageValue, MsgSlot};
 pub use spinlock::SpinLock;

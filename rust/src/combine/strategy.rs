@@ -126,6 +126,13 @@ impl Strategy {
     /// value [`Strategy::deliver`] would, including the CAS-neutral
     /// design's value-is-neutral emptiness convention, so partitioned
     /// runs stay bit-identical to flat runs.
+    ///
+    /// For known-monoid combiners (see [`Combiner::monoid_kind`]) the
+    /// engine may instead fold the same message set through the
+    /// lane-parallel gather of `combine::vector` — the exactness of the
+    /// monoid laws (associativity + commutativity over the exact integer
+    /// domain) makes that reduction value-identical to this left fold,
+    /// a contract pinned by the tests below.
     #[inline]
     pub fn deliver_exclusive<M: MessageValue, C: Combiner<M>>(
         self,
@@ -431,6 +438,39 @@ mod tests {
             }
             assert_eq!(strat.collect(&owned, &c), Some(12), "{strat:?}");
         }
+    }
+
+    #[test]
+    fn vector_reduction_matches_exclusive_delivery_for_monoids() {
+        use crate::combine::vector::reduce_gather;
+        // The §2.9 lane-parallel gather must fold to the exact value the
+        // scalar delivery path produces for every monoid combiner and
+        // every strategy — the bit-identity contract of the vector pass.
+        let msgs: Vec<u64> = (0..37).map(|i| (i * 2654435761u64) % 1000 + 1).collect();
+        for strat in all_strategies() {
+            let c = MinCombiner;
+            assert!(c.monoid_kind().is_some(), "MinCombiner declares its monoid");
+            let slot: MsgSlot<u64> = MsgSlot::new();
+            strat.reset_slot(&slot, &c);
+            for &m in &msgs {
+                strat.deliver_exclusive(&slot, m, &c);
+            }
+            let (acc, found) =
+                reduce_gather(msgs.len(), &c, c.neutral().unwrap(), &mut |i| Some(msgs[i]));
+            assert_eq!(found, msgs.len() as u64);
+            assert_eq!(strat.collect(&slot, &c), acc, "{strat:?}");
+        }
+        // Sum over signed values (adversarial for a wrong end-merge).
+        let vals: Vec<i64> = (0..29).map(|i| (i as i64 % 11) - 5).collect();
+        let c = SumCombiner;
+        let slot: MsgSlot<i64> = MsgSlot::new();
+        Strategy::Hybrid.reset_slot(&slot, &c);
+        for &m in &vals {
+            Strategy::Hybrid.deliver_exclusive(&slot, m, &c);
+        }
+        let (acc, _) =
+            reduce_gather(vals.len(), &c, c.neutral().unwrap(), &mut |i| Some(vals[i]));
+        assert_eq!(Strategy::Hybrid.collect(&slot, &c), acc);
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Vectorised combining for known monoids (DESIGN.md §2.9).
+//!
+//! The scalar engine folds messages one at a time in source order. When
+//! the combiner declares itself an exact [`MonoidKind`] (integer
+//! min/max/sum — see [`Combiner::monoid_kind`] for the contract), the
+//! fold may be *reassociated*: split across independent accumulator
+//! lanes that the compiler can keep in registers (and, for contiguous
+//! `u64` ranges, in SIMD registers), then merged once at the end. For an
+//! exact monoid every association and commutation of the same multiset
+//! yields bit-identical results, so this is a pure speed transform — the
+//! bit-identity grid in `tests/test_scatter.rs` holds it to that.
+//!
+//! Two kernels:
+//!
+//! - [`reduce_gather`] — the engine's Pull-mode shape: values arrive
+//!   through a gather closure (slot peeks down a CSR row), most of which
+//!   may be empty. Four accumulator lanes, unrolled by four, absent
+//!   values replaced by the neutral element (a two-sided identity, so
+//!   substitution does not change the fold).
+//! - [`reduce_slice_u64`] — contiguous `u64` ranges (degree/weight sums,
+//!   dense slot ranges). Same four-lane shape; on `x86_64` the Sum case
+//!   additionally uses baseline SSE2 (`_mm_add_epi64`), behind
+//!   `cfg(target_arch)` with a bit-identical scalar fallback everywhere
+//!   else — integer lane sums commute exactly.
+
+use crate::combine::combiner::{Combiner, MonoidKind};
+
+/// Accumulator lanes in the unrolled reduction loops. Four `u64`s fill
+/// one cache line half / one SSE2 pair per two lanes; wide enough to
+/// hide combine latency, narrow enough to stay in registers on every
+/// target.
+pub const LANES: usize = 4;
+
+/// Fewer gathered values than this and lane setup costs more than it
+/// saves; the engine's Pull path falls back to the scalar fold below it.
+pub const VECTOR_GATHER_MIN: usize = 8;
+
+/// Reduce `get(0..n)` through `comb` across [`LANES`] accumulator lanes.
+///
+/// `neutral` **must** be a two-sided identity of `comb` (the caller has
+/// already checked `comb.monoid_kind().is_some()` and unwrapped
+/// `comb.neutral()`), so empty gather positions fold in as no-ops.
+/// Returns the folded value (`None` when every position was empty) and
+/// the number of non-empty positions.
+///
+/// The end-merge is the fixed tree `((a0·a1)·(a2·a3))`; for an exact
+/// monoid the whole reduction is bit-identical to the sequential
+/// left-fold the scalar path performs.
+#[inline]
+pub fn reduce_gather<M, C, G>(n: usize, comb: &C, neutral: M, mut get: G) -> (Option<M>, u64)
+where
+    M: Copy,
+    C: Combiner<M> + ?Sized,
+    G: FnMut(usize) -> Option<M>,
+{
+    let mut acc = [neutral; LANES];
+    let mut found = 0u64;
+    let mut i = 0;
+    while i + LANES <= n {
+        // Manually unrolled: the four lanes carry independent dependency
+        // chains, so the loads (slot peeks) overlap instead of
+        // serialising behind one accumulator.
+        for lane in 0..LANES {
+            if let Some(m) = get(i + lane) {
+                acc[lane] = comb.combine(acc[lane], m);
+                found += 1;
+            }
+        }
+        i += LANES;
+    }
+    while i < n {
+        if let Some(m) = get(i) {
+            acc[i % LANES] = comb.combine(acc[i % LANES], m);
+            found += 1;
+        }
+        i += 1;
+    }
+    if found == 0 {
+        return (None, 0);
+    }
+    let lo = comb.combine(acc[0], acc[1]);
+    let hi = comb.combine(acc[2], acc[3]);
+    (Some(comb.combine(lo, hi)), found)
+}
+
+#[inline]
+fn scalar_kind(kind: MonoidKind, a: u64, b: u64) -> u64 {
+    match kind {
+        MonoidKind::Min => a.min(b),
+        MonoidKind::Max => a.max(b),
+        MonoidKind::Sum => a.wrapping_add(b),
+    }
+}
+
+fn neutral_kind(kind: MonoidKind) -> u64 {
+    match kind {
+        MonoidKind::Min => u64::MAX,
+        MonoidKind::Max => u64::MIN,
+        MonoidKind::Sum => 0,
+    }
+}
+
+/// Reduce a contiguous `u64` slice under `kind`. Returns the neutral
+/// element for an empty slice.
+///
+/// Sum on `x86_64` runs through SSE2 `_mm_add_epi64` (baseline for the
+/// target, no feature detection needed); min/max have no unsigned-64
+/// SIMD instruction before AVX-512, so they take the four-lane scalar
+/// unroll everywhere. Wrapping integer addition is exactly associative
+/// and commutative, so every path returns identical bits.
+pub fn reduce_slice_u64(xs: &[u64], kind: MonoidKind) -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    if kind == MonoidKind::Sum && xs.len() >= 2 * LANES {
+        return sum_slice_sse2(xs);
+    }
+    let neutral = neutral_kind(kind);
+    let mut acc = [neutral; LANES];
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in &mut chunks {
+        for lane in 0..LANES {
+            acc[lane] = scalar_kind(kind, acc[lane], c[lane]);
+        }
+    }
+    let mut out = scalar_kind(
+        kind,
+        scalar_kind(kind, acc[0], acc[1]),
+        scalar_kind(kind, acc[2], acc[3]),
+    );
+    for &x in chunks.remainder() {
+        out = scalar_kind(kind, out, x);
+    }
+    out
+}
+
+/// SSE2 wrapping sum of a `u64` slice (callers guarantee
+/// `len >= 2 * LANES`).
+#[cfg(target_arch = "x86_64")]
+fn sum_slice_sse2(xs: &[u64]) -> u64 {
+    use core::arch::x86_64::{__m128i, _mm_add_epi64, _mm_loadu_si128, _mm_setzero_si128};
+    let mut chunks = xs.chunks_exact(LANES);
+    // SAFETY: `_mm_setzero_si128`/`_mm_add_epi64`/`_mm_loadu_si128` are
+    // SSE2, part of the x86_64 baseline, so calling them needs no runtime
+    // feature check; every `_mm_loadu_si128` reads 16 bytes from inside a
+    // `chunks_exact(4)` block of the `u64` slice (32 bytes, properly
+    // initialised), and the unaligned-load intrinsic has no alignment
+    // requirement.
+    unsafe {
+        let mut v0: __m128i = _mm_setzero_si128();
+        let mut v1: __m128i = _mm_setzero_si128();
+        for c in &mut chunks {
+            v0 = _mm_add_epi64(v0, _mm_loadu_si128(c.as_ptr() as *const __m128i));
+            v1 = _mm_add_epi64(v1, _mm_loadu_si128(c.as_ptr().add(2) as *const __m128i));
+        }
+        let v = _mm_add_epi64(v0, v1);
+        let mut lanes = [0u64; 2];
+        core::ptr::copy_nonoverlapping(&v as *const __m128i as *const u64, lanes.as_mut_ptr(), 2);
+        let mut out = lanes[0].wrapping_add(lanes[1]);
+        for &x in chunks.remainder() {
+            out = out.wrapping_add(x);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combine::combiner::{MinCombiner, SumCombiner};
+    use crate::util::quick;
+
+    #[test]
+    fn gather_matches_sequential_fold() {
+        // Sparse gather: ~half the positions empty.
+        let vals: Vec<Option<u64>> = (0..100u64)
+            .map(|i| if i % 3 == 0 { None } else { Some(i * 17) })
+            .collect();
+        let (got, n) = reduce_gather(vals.len(), &MinCombiner, u64::MAX, |i| vals[i]);
+        let seq = vals.iter().flatten().fold(None, |a: Option<u64>, &b| {
+            Some(a.map_or(b, |a| MinCombiner.combine(a, b)))
+        });
+        assert_eq!(got, seq);
+        assert_eq!(n, vals.iter().flatten().count() as u64);
+    }
+
+    #[test]
+    fn gather_of_all_empty_is_none() {
+        let (got, n) = reduce_gather(64, &SumCombiner, 0u64, |_| None::<u64>);
+        assert_eq!(got, None);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn gather_handles_short_and_ragged_lengths() {
+        for n in 0..20usize {
+            let vals: Vec<u64> = (0..n as u64).map(|i| i + 1).collect();
+            let (got, cnt) = reduce_gather(n, &SumCombiner, 0u64, |i| Some(vals[i]));
+            let want: u64 = vals.iter().sum();
+            assert_eq!(cnt as usize, n);
+            assert_eq!(got, if n == 0 { None } else { Some(want) }, "n={n}");
+        }
+    }
+
+    #[test]
+    fn slice_kernels_match_sequential_for_all_kinds() {
+        quick::check("vector slice reduce", |rng| {
+            let n = rng.below(300) as usize;
+            let xs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            for kind in [MonoidKind::Min, MonoidKind::Max, MonoidKind::Sum] {
+                let want = xs
+                    .iter()
+                    .fold(neutral_kind(kind), |a, &b| scalar_kind(kind, a, b));
+                let got = reduce_slice_u64(&xs, kind);
+                if got != want {
+                    return Err(format!("{kind:?} over {n} items: {got} != {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_slice_reduces_to_neutral() {
+        assert_eq!(reduce_slice_u64(&[], MonoidKind::Min), u64::MAX);
+        assert_eq!(reduce_slice_u64(&[], MonoidKind::Max), 0);
+        assert_eq!(reduce_slice_u64(&[], MonoidKind::Sum), 0);
+    }
+}

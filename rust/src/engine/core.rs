@@ -42,7 +42,8 @@
 //! run skips the allocations.
 
 use crate::combine::plane::{MessageLog, Segment};
-use crate::combine::{Combiner, ContentionProbe, MessageValue, Strategy};
+use crate::combine::vector::{reduce_gather, reduce_slice_u64, VECTOR_GATHER_MIN};
+use crate::combine::{Combiner, ContentionProbe, MessageValue, MonoidKind, Strategy};
 use crate::engine::session::Halt;
 use crate::engine::shard::ShardState;
 use crate::engine::tune::{AdaptiveTuner, StepPlan, TunerState};
@@ -51,7 +52,7 @@ use crate::graph::csr::{Csr, EdgeWeight, VertexId};
 use crate::graph::partition::PartitionPlan;
 use crate::layout::{SyncCell, VertexStore};
 use crate::metrics::{DeliveryPlaneKind, HaltReason, RunMetrics, ScheduleFallback, SuperstepStats};
-use crate::sched::{parallel_for, parallel_for_hinted, Schedule};
+use crate::sched::{parallel_for, parallel_for_hinted, steal_execute, Schedule};
 use crate::util::bitset::{AtomicBitSet, BitSet};
 use crate::util::timer::Timer;
 use crate::util::CachePadded;
@@ -79,6 +80,11 @@ pub(crate) struct EngineSetup<S, M: MessageValue> {
     /// Adaptive superstep controller (`None` on fixed-config runs); its
     /// probe/trace state is pooled by the session like stores/planes.
     pub tuner: Option<AdaptiveTuner>,
+    /// Pooled scratch for per-superstep edge-centric weight rebuilds (the
+    /// `EdgeCentricBypassRebuild` fallback): the weights still have to be
+    /// recomputed from each superstep's active list, but the vector they
+    /// land in is session-owned, so the fallback stops allocating.
+    pub cut_scratch: Vec<u64>,
 }
 
 /// The engine: graph + program + store + activity tracking.
@@ -117,6 +123,8 @@ pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     /// both loops a fresh [`StepPlan`] at each superstep top and absorbs
     /// the barrier's signals — see `engine/tune.rs`.
     tuner: Option<AdaptiveTuner>,
+    /// Pooled edge-centric rebuild scratch (see [`EngineSetup`]).
+    cut_scratch: Vec<u64>,
 }
 
 /// Shard routing for one vertex's context during partitioned scatter:
@@ -128,6 +136,54 @@ struct ShardRoute<'a> {
     shard: usize,
     tid: usize,
     cross: &'a AtomicU64,
+}
+
+/// Per-run counters behind the tuner's `lane_utilisation` signal: gather
+/// positions scanned by the vectorised Pull kernel
+/// ([`reduce_gather`], DESIGN.md §2.9) and how many actually held a
+/// message. Swapped out at every barrier and accumulated into
+/// [`RunMetrics`]; their ratio tells the tuner whether wide rows are
+/// dense (lanes earning their keep) or sparse (prefetch window should
+/// widen instead).
+struct LaneCounters {
+    scanned: AtomicU64,
+    useful: AtomicU64,
+}
+
+impl LaneCounters {
+    fn new() -> Self {
+        LaneCounters {
+            scanned: AtomicU64::new(0),
+            useful: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one vectorised gather over `scanned` positions, `useful`
+    /// of which held a message.
+    #[inline]
+    fn add(&self, scanned: u64, useful: u64) {
+        self.scanned.fetch_add(scanned, Ordering::Relaxed);
+        self.useful.fetch_add(useful, Ordering::Relaxed);
+    }
+
+    /// Drain this superstep's counts (barrier only — workers are joined).
+    fn take(&self) -> (u64, u64) {
+        (
+            self.scanned.swap(0, Ordering::Relaxed),
+            self.useful.swap(0, Ordering::Relaxed),
+        )
+    }
+
+    /// Useful-per-scanned ratio; neutral `1.0` when the kernel never ran
+    /// this superstep (short rows, inexact combiner, push mode) so the
+    /// tuner's depth knob holds still.
+    fn ratio(scanned: u64, useful: u64) -> f64 {
+        if scanned == 0 {
+            1.0
+        } else {
+            useful as f64 / scanned as f64
+        }
+    }
 }
 
 /// Per-vertex context implementation. Holds only shared references plus
@@ -463,6 +519,7 @@ where
             partition,
             log,
             tuner,
+            cut_scratch,
         } = setup;
         let comb = program.combiner();
         let agg = program.aggregator();
@@ -536,6 +593,7 @@ where
             partition,
             log,
             tuner,
+            cut_scratch,
         }
     }
 
@@ -549,6 +607,7 @@ where
         Option<ShardState>,
         Option<MessageLog<P::Message>>,
         Option<TunerState>,
+        Vec<u64>,
     ) {
         (
             self.store,
@@ -556,6 +615,7 @@ where
             self.partition,
             self.log,
             self.tuner.map(AdaptiveTuner::into_state),
+            self.cut_scratch,
         )
     }
 
@@ -599,9 +659,40 @@ where
         }
     }
 
+    /// Prefetch the head of `v`'s CSR row — the neighbour list the vertex
+    /// is about to walk (out-row in push, in-row in pull). This is the
+    /// row half of the staged scatter pipeline (DESIGN.md §2.9): the
+    /// dense-list loops call it `pipeline_depth` vertices ahead of the
+    /// cursor, and `collect_msg` prefetches the destination slots the
+    /// same distance ahead inside the row. No-op off `x86_64` or under
+    /// the `no-prefetch` feature.
+    #[inline]
+    #[allow(unused_variables)]
+    fn prefetch_row(&self, v: Option<&VertexId>) {
+        #[cfg(all(target_arch = "x86_64", not(feature = "no-prefetch")))]
+        if let Some(&v) = v {
+            let row = match self.mode {
+                Mode::Push => self.g.out_neighbors(v),
+                Mode::Pull => self.g.in_neighbors(v),
+            };
+            if let Some(first) = row.first() {
+                // SAFETY: prefetch is only a hint.
+                unsafe {
+                    std::arch::x86_64::_mm_prefetch(
+                        first as *const VertexId as *const i8,
+                        std::arch::x86_64::_MM_HINT_T0,
+                    );
+                }
+            }
+        }
+    }
+
     /// Combined incoming message for `v` at superstep start. `cross`
     /// (partitioned pull runs) classifies each combined contribution by
-    /// the owner map and accumulates foreign-outbox combines.
+    /// the owner map and accumulates foreign-outbox combines. `depth` is
+    /// the superstep's pipeline depth (how many slots ahead the pull
+    /// scan prefetches); `lanes` feeds the vector kernel's utilisation
+    /// back to the tuner.
     ///
     /// Reads with the *configured* strategy even on adaptive runs: Lock
     /// and Hybrid (the only pair the tuner moves between) share one slot
@@ -613,6 +704,8 @@ where
         v: VertexId,
         msgs_done: &AtomicU64,
         cross: Option<(&PartitionPlan, &AtomicU64)>,
+        depth: usize,
+        lanes: &LaneCounters,
     ) -> Option<P::Message> {
         match self.mode {
             Mode::Push => {
@@ -625,11 +718,14 @@ where
                 m
             }
             Mode::Pull => {
+                #[cfg(not(all(target_arch = "x86_64", not(feature = "no-prefetch"))))]
+                let _ = depth;
                 // Combine in-neighbours' outboxes locally — the lock-free
                 // pull loop whose memory behaviour §IV optimises. The
                 // neighbour list reveals the access pattern iterations in
-                // advance, so software-prefetch the slot 8 ahead
-                // (§Perf L3 — see EXPERIMENTS.md).
+                // advance, so software-prefetch the slot `depth` ahead
+                // (§Perf L3 — see EXPERIMENTS.md; depth is the tuner's
+                // pipeline knob, default 8).
                 let in_nbrs = self.g.in_neighbors(v);
                 // Cross-classification by shard *bounds*, not per-source
                 // owner-map loads: `v`'s shard range is fixed for the whole
@@ -639,12 +735,10 @@ where
                     let r = plan.shard_range(plan.shard_of(v));
                     (r.start as VertexId, r.end as VertexId)
                 });
-                let mut acc: Option<P::Message> = None;
-                let mut combined = 0u64;
                 let mut crossed = 0u64;
-                for (i, &src) in in_nbrs.iter().enumerate() {
+                let mut gather = |i: usize| {
                     #[cfg(all(target_arch = "x86_64", not(feature = "no-prefetch")))]
-                    if let Some(&ahead) = in_nbrs.get(i + 8) {
+                    if let Some(&ahead) = in_nbrs.get(i + depth) {
                         // SAFETY: prefetch is only a hint.
                         unsafe {
                             std::arch::x86_64::_mm_prefetch(
@@ -653,19 +747,49 @@ where
                             );
                         }
                     }
-                    if let Some(m) = self.store.cur_slot(src).peek_scan() {
-                        combined += 1;
+                    let src = in_nbrs[i];
+                    let m = self.store.cur_slot(src).peek_scan();
+                    if m.is_some() {
                         if let Some((lo, hi)) = my_bounds {
                             if src < lo || src >= hi {
                                 crossed += 1;
                             }
                         }
-                        acc = Some(match acc {
-                            None => m,
-                            Some(a) => self.comb.combine(a, m),
-                        });
                     }
-                }
+                    m
+                };
+                // Vectorised gather (DESIGN.md §2.9): an exact monoid with
+                // a neutral element licenses reassociating the fold across
+                // accumulator lanes, so long rows take the 4-lane unrolled
+                // kernel. Short rows and inexact combiners keep the scalar
+                // left-fold; the monoid contract makes both paths return
+                // identical bits.
+                let vector_neutral = match self.comb.monoid_kind() {
+                    Some(_) if in_nbrs.len() >= VECTOR_GATHER_MIN => self.comb.neutral(),
+                    _ => None,
+                };
+                let (acc, combined) = match vector_neutral {
+                    Some(neutral) => {
+                        let (acc, found) =
+                            reduce_gather(in_nbrs.len(), &self.comb, neutral, &mut gather);
+                        lanes.add(in_nbrs.len() as u64, found);
+                        (acc, found)
+                    }
+                    None => {
+                        let mut acc: Option<P::Message> = None;
+                        let mut combined = 0u64;
+                        for i in 0..in_nbrs.len() {
+                            if let Some(m) = gather(i) {
+                                combined += 1;
+                                acc = Some(match acc {
+                                    None => m,
+                                    Some(a) => self.comb.combine(a, m),
+                                });
+                            }
+                        }
+                        (acc, combined)
+                    }
+                };
                 if combined > 0 {
                     msgs_done.fetch_add(combined, Ordering::Relaxed);
                 }
@@ -742,6 +866,11 @@ where
         let agg_cells: Vec<CachePadded<SyncCell<(AggValue<P>, bool)>>> = (0..threads)
             .map(|_| CachePadded::new(SyncCell::new((neutral.clone(), false))))
             .collect();
+        let lane_counters = LaneCounters::new();
+        // Session-pooled scratch for the edge-centric bypass weight
+        // rebuild (weights change every superstep; the allocation should
+        // not) — handed back to the pool at the end of the run.
+        let mut scratch = std::mem::take(&mut self.cut_scratch);
 
         let mut superstep = 0usize;
         let mut delivered_total = 0u64;
@@ -763,6 +892,7 @@ where
                 }
                 None => StepPlan::of(&self.cfg),
             };
+            let depth = step.effective_pipeline_depth();
 
             // ---- Snapshot this superstep's active set -------------------
             let active_list: Option<Vec<VertexId>> = if step.bypass {
@@ -807,16 +937,17 @@ where
                 // superstep from the active list (the §V-A overhead the
                 // paper attributes to selection-bypass benchmarks — the
                 // documented fallback surfaced in
-                // `RunMetrics::schedule_fallback`).
-                let bypass_weights: Option<Vec<u64>> = match (&active_list, step.schedule) {
-                    (Some(list), Schedule::EdgeCentric) => Some(
-                        list.iter()
-                            .map(|&v| match self.mode {
-                                Mode::Push => self.g.out_degree(v) as u64,
-                                Mode::Pull => self.g.in_degree(v) as u64,
-                            })
-                            .collect(),
-                    ),
+                // `RunMetrics::schedule_fallback`), into the pooled
+                // scratch so the rebuild stops allocating.
+                let bypass_weights: Option<&[u64]> = match (&active_list, step.schedule) {
+                    (Some(list), Schedule::EdgeCentric) => {
+                        scratch.clear();
+                        scratch.extend(list.iter().map(|&v| match self.mode {
+                            Mode::Push => self.g.out_degree(v) as u64,
+                            Mode::Pull => self.g.in_degree(v) as u64,
+                        }));
+                        Some(scratch.as_slice())
+                    }
                     _ => None,
                 };
 
@@ -825,10 +956,11 @@ where
                 let log_ref = self.log.as_ref();
                 let probes = self.tuner.as_ref().map(|t| t.probes());
                 let delivered_counter = &delivered_counter;
+                let lanes = &lane_counters;
                 let run_vertex = |tid: usize, v: VertexId| {
                     let (msg, inbox): (Option<P::Message>, &[P::Message]) = match log_ref {
                         None => {
-                            let m = engine.collect_msg(v, pull_comb_counter, None);
+                            let m = engine.collect_msg(v, pull_comb_counter, None, depth, lanes);
                             if m.is_some() {
                                 delivered_counter.fetch_add(1, Ordering::Relaxed);
                             }
@@ -856,14 +988,17 @@ where
 
                 match (&active_list, &active_scan) {
                     (Some(list), _) => {
-                        // Selection bypass: iterate the dense active list.
+                        // Selection bypass: iterate the dense active list,
+                        // prefetching the CSR row `depth` vertices ahead
+                        // (the list reveals the walk order in advance).
                         parallel_for(
                             threads,
                             list.len(),
                             step.schedule,
-                            bypass_weights.as_deref(),
+                            bypass_weights,
                             |tid, range| {
                                 for i in range {
+                                    engine.prefetch_row(list.get(i + depth));
                                     run_vertex(tid, list[i]);
                                 }
                             },
@@ -918,9 +1053,19 @@ where
                 + pull_comb_counter.swap(0, Ordering::Relaxed);
             let delivered_step = delivered_counter.swap(0, Ordering::Relaxed);
             delivered_total += delivered_step;
+            let (lanes_scanned, lanes_useful) = lane_counters.take();
+            metrics.vector_lanes_scanned += lanes_scanned;
+            metrics.vector_lanes_useful += lanes_useful;
             if let Some(t) = self.tuner.as_mut() {
-                // Flat runs have no flush phase: imbalance is neutral.
-                t.observe(messages, delivered_step, 1.0);
+                // Flat runs have no flush phase or shard deques: imbalance
+                // is neutral and steals are zero by construction.
+                t.observe(
+                    messages,
+                    delivered_step,
+                    1.0,
+                    0,
+                    LaneCounters::ratio(lanes_scanned, lanes_useful),
+                );
             }
 
             metrics.supersteps.push(SuperstepStats {
@@ -936,6 +1081,7 @@ where
                 break;
             }
         }
+        self.cut_scratch = scratch;
         if self.log.is_none() {
             // Retained vs combined: on the combined plane, everything
             // sent (push) or scanned into a fold (pull) minus what
@@ -970,6 +1116,10 @@ where
         let agg_cells: Vec<CachePadded<SyncCell<(AggValue<P>, bool)>>> = (0..threads)
             .map(|_| CachePadded::new(SyncCell::new((neutral.clone(), false))))
             .collect();
+        let lane_counters = LaneCounters::new();
+        // Session-pooled scratch for the edge-centric bypass weight
+        // rebuild (see run_flat) — handed back at the end of the run.
+        let mut scratch = std::mem::take(&mut self.cut_scratch);
 
         let mut superstep = 0usize;
         let mut delivered_total = 0u64;
@@ -986,6 +1136,8 @@ where
                 None => StepPlan::of(&self.cfg),
             };
             let shard_sched = step.schedule.for_shards();
+            let depth = step.effective_pipeline_depth();
+            let mut steals_step = 0u64;
 
             // ---- Snapshot each shard's active set ----------------------
             let shard_lists: Option<Vec<Vec<VertexId>>> = if step.bypass {
@@ -1018,24 +1170,27 @@ where
             part.active.clear_all();
 
             // Edge-centric shard weights: static shard edge totals for
-            // scans, active-degree sums (rebuilt per superstep — the
-            // documented bypass fallback) for bypass runs.
-            let scatter_weights: Option<Vec<u64>> = if step.schedule == Schedule::EdgeCentric {
+            // scans (borrowed straight from the plan — the old path
+            // copied them into a fresh Vec every superstep), active-degree
+            // sums for bypass runs (rebuilt per superstep into the pooled
+            // scratch — the documented bypass fallback).
+            let scatter_weights: Option<&[u64]> = if step.schedule == Schedule::EdgeCentric {
                 Some(match &shard_lists {
-                    Some(lists) => lists
-                        .iter()
-                        .map(|l| {
+                    Some(lists) => {
+                        scratch.clear();
+                        scratch.extend(lists.iter().map(|l| {
                             l.iter()
                                 .map(|&v| match self.mode {
                                     Mode::Push => self.g.out_degree(v) as u64,
                                     Mode::Pull => self.g.in_degree(v) as u64,
                                 })
-                                .sum()
-                        })
-                        .collect(),
+                                .sum::<u64>()
+                        }));
+                        scratch.as_slice()
+                    }
                     None => match self.mode {
-                        Mode::Push => part.plan.out_edges().to_vec(),
-                        Mode::Pull => part.plan.in_edges().to_vec(),
+                        Mode::Push => part.plan.out_edges(),
+                        Mode::Pull => part.plan.in_edges(),
                     },
                 })
             } else {
@@ -1058,6 +1213,7 @@ where
                 let log_ref = self.log.as_ref();
                 let probes = self.tuner.as_ref().map(|t| t.probes());
                 let delivered_counter = &delivered_counter;
+                let lanes = &lane_counters;
                 let run_vertex = |tid: usize, shard: usize, v: VertexId| {
                     let (msg, inbox): (Option<P::Message>, &[P::Message]) = match log_ref {
                         None => {
@@ -1065,6 +1221,8 @@ where
                                 v,
                                 pull_comb_counter,
                                 Some((plan, cross_counter)),
+                                depth,
+                                lanes,
                             );
                             if m.is_some() {
                                 delivered_counter.fetch_add(1, Ordering::Relaxed);
@@ -1099,39 +1257,63 @@ where
 
                 let shard_lists = &shard_lists;
                 let shard_scans = &shard_scans;
-                parallel_for_hinted(
-                    threads,
-                    n_shards,
-                    shard_sched,
-                    scatter_weights.as_deref(),
-                    active_count,
-                    |tid, shard_range| {
-                        for s in shard_range {
-                            match (shard_lists, shard_scans) {
-                                (Some(lists), _) => {
-                                    for &v in &lists[s] {
-                                        run_vertex(tid, s, v);
-                                    }
-                                }
-                                (_, Some(scans)) => {
-                                    // Full scan semantics, per shard: every
-                                    // vertex pays the activity check, as in
-                                    // the flat scan — the §II baseline cost
-                                    // the bypass knob exists to remove (and
-                                    // what the sim prices for this path).
-                                    let range = part_ref.plan.shard_range(s);
-                                    let base = range.start;
-                                    for i in 0..range.len() {
-                                        if scans[s].get(i) {
-                                            run_vertex(tid, s, (base + i) as VertexId);
-                                        }
-                                    }
-                                }
-                                _ => unreachable!(),
+                let scatter_shard = |tid: usize, s: usize| {
+                    match (shard_lists, shard_scans) {
+                        (Some(lists), _) => {
+                            // Dense per-shard list: prefetch the CSR row
+                            // `depth` vertices ahead of the cursor (the
+                            // list reveals the walk order in advance).
+                            for (j, &v) in lists[s].iter().enumerate() {
+                                engine.prefetch_row(lists[s].get(j + depth));
+                                run_vertex(tid, s, v);
                             }
                         }
-                    },
-                );
+                        (_, Some(scans)) => {
+                            // Full scan semantics, per shard: every
+                            // vertex pays the activity check, as in
+                            // the flat scan — the §II baseline cost
+                            // the bypass knob exists to remove (and
+                            // what the sim prices for this path).
+                            let range = part_ref.plan.shard_range(s);
+                            let base = range.start;
+                            for i in 0..range.len() {
+                                if scans[s].get(i) {
+                                    run_vertex(tid, s, (base + i) as VertexId);
+                                }
+                            }
+                        }
+                        _ => unreachable!(),
+                    }
+                };
+                if self.cfg.steal {
+                    // Work-stealing dispatch (DESIGN.md §2.9): shards seed
+                    // per-worker deques — weight-balanced when edge-centric
+                    // weights exist — and a drained worker steals from the
+                    // most-loaded peer instead of idling at the flush
+                    // barrier. Intra-shard owner exclusivity is preserved:
+                    // a stolen shard runs on exactly one worker.
+                    steals_step += steal_execute(
+                        threads,
+                        n_shards,
+                        scatter_weights,
+                        step.effective_steal_chunk(),
+                        active_count,
+                        &scatter_shard,
+                    );
+                } else {
+                    parallel_for_hinted(
+                        threads,
+                        n_shards,
+                        shard_sched,
+                        scatter_weights,
+                        active_count,
+                        |tid, shard_range| {
+                            for s in shard_range {
+                                scatter_shard(tid, s);
+                            }
+                        },
+                    );
+                }
             }
             let compute_time = t_scatter.elapsed();
 
@@ -1140,16 +1322,14 @@ where
             // skip even the pending scan on pull workloads.)
             let t_flush = Timer::start();
             let flush_weights: Option<Vec<u64>> = if self.mode == Mode::Push {
-                Some(
-                    (0..n_shards)
-                        .map(|d| part.buffers.pending_for(d) as u64)
-                        .collect(),
-                )
+                Some(part.buffers.pending_weights())
             } else {
                 None
             };
             let cross_pending: u64 = match &flush_weights {
-                Some(w) => w.iter().sum(),
+                // Dense u64 range: the §2.9 slice kernel (SSE2 sum on
+                // x86_64, bit-identical scalar unroll elsewhere).
+                Some(w) => reduce_slice_u64(w, MonoidKind::Sum),
                 None => 0,
             };
             // Max-over-mean flush load: the tuner's shard-skew signal
@@ -1169,40 +1349,57 @@ where
                 // is only non-zero in push mode, which always builds
                 // flush weights at superstep start.
                 let weights = flush_weights.as_ref().expect("push mode");
-                parallel_for_hinted(
-                    threads,
-                    n_shards,
-                    shard_sched,
-                    if shard_sched.needs_weights() {
-                        Some(weights.as_slice())
-                    } else {
-                        None
-                    },
-                    cross_pending as usize,
-                    |tid, shard_range| {
-                        for d in shard_range {
-                            part_ref.buffers.drain_for(d, |(dst, bits)| {
-                                let m = <P::Message as MessageValue>::from_bits(bits);
-                                match log_ref {
-                                    // Owner-exclusive: Lock and Hybrid
-                                    // share one fold here, so the tuner's
-                                    // per-superstep strategy is safe.
-                                    None => step.strategy.deliver_exclusive(
-                                        engine.store.next_slot(dst),
-                                        m,
-                                        &engine.comb,
-                                    ),
-                                    // Log plane: the flush task appends
-                                    // the batched remote messages to its
-                                    // own segment; the barrier merge
-                                    // folds them into the logs.
-                                    Some(l) => l.seg(tid).get_mut().push((dst, m)),
-                                }
-                                part_ref.active.set_in(d, dst as usize);
-                            });
+                let flush_shard = |tid: usize, d: usize| {
+                    part_ref.buffers.drain_for(d, |(dst, bits)| {
+                        let m = <P::Message as MessageValue>::from_bits(bits);
+                        match log_ref {
+                            // Owner-exclusive: Lock and Hybrid
+                            // share one fold here, so the tuner's
+                            // per-superstep strategy is safe.
+                            None => step.strategy.deliver_exclusive(
+                                engine.store.next_slot(dst),
+                                m,
+                                &engine.comb,
+                            ),
+                            // Log plane: the flush task appends
+                            // the batched remote messages to its
+                            // own segment; the barrier merge
+                            // folds them into the logs.
+                            Some(l) => l.seg(tid).get_mut().push((dst, m)),
                         }
-                    },
-                );
+                        part_ref.active.set_in(d, dst as usize);
+                    });
+                };
+                if self.cfg.steal {
+                    // Stealing drains destination shards too: the pending
+                    // counts seed the deques, so a worker stuck behind one
+                    // hot destination hands its remaining shards to peers.
+                    steals_step += steal_execute(
+                        threads,
+                        n_shards,
+                        Some(weights.as_slice()),
+                        step.effective_steal_chunk(),
+                        cross_pending as usize,
+                        &flush_shard,
+                    );
+                } else {
+                    parallel_for_hinted(
+                        threads,
+                        n_shards,
+                        shard_sched,
+                        if shard_sched.needs_weights() {
+                            Some(weights.as_slice())
+                        } else {
+                            None
+                        },
+                        cross_pending as usize,
+                        |tid, shard_range| {
+                            for d in shard_range {
+                                flush_shard(tid, d);
+                            }
+                        },
+                    );
+                }
             }
             let flush_time = t_flush.elapsed();
 
@@ -1232,8 +1429,18 @@ where
             metrics.intra_shard_messages += messages - cross_step;
             let delivered_step = delivered_counter.swap(0, Ordering::Relaxed);
             delivered_total += delivered_step;
+            metrics.steals += steals_step;
+            let (lanes_scanned, lanes_useful) = lane_counters.take();
+            metrics.vector_lanes_scanned += lanes_scanned;
+            metrics.vector_lanes_useful += lanes_useful;
             if let Some(t) = self.tuner.as_mut() {
-                t.observe(messages, delivered_step, flush_imbalance);
+                t.observe(
+                    messages,
+                    delivered_step,
+                    flush_imbalance,
+                    steals_step,
+                    LaneCounters::ratio(lanes_scanned, lanes_useful),
+                );
             }
 
             metrics.supersteps.push(SuperstepStats {
@@ -1249,6 +1456,7 @@ where
                 break;
             }
         }
+        self.cut_scratch = scratch;
         if self.log.is_none() {
             metrics.combined_messages = metrics
                 .total_messages()

@@ -222,6 +222,18 @@ pub struct EngineConfig {
     ///
     /// [`RunMetrics::tuner_decisions`]: crate::metrics::RunMetrics::tuner_decisions
     pub adaptive: bool,
+    /// Work-stealing shard dispatch: replace the fixed shard-chunk
+    /// assignment of the partitioned scatter/flush loops with per-worker
+    /// deques ([`crate::sched::steal`]) so drained workers steal from
+    /// the most-loaded peer instead of idling at the barrier. Execution
+    /// placement only — results and traces stay bit-identical. Ignored
+    /// on the flat substrate.
+    pub steal: bool,
+    /// Software-prefetch look-ahead (vertices) in the scatter/gather hot
+    /// loops; `0` (the default) means auto — [`tune::DEFAULT_PIPELINE_DEPTH`],
+    /// or the tuner's per-superstep choice on adaptive runs. Compiled
+    /// out entirely under `--features no-prefetch`.
+    pub pipeline_depth: usize,
     /// Safety cap on supersteps.
     pub max_supersteps: usize,
 }
@@ -236,6 +248,8 @@ impl Default for EngineConfig {
             bypass: false,
             partitioning: Partitioning::None,
             adaptive: false,
+            steal: false,
+            pipeline_depth: 0,
             max_supersteps: 100_000,
         }
     }
@@ -289,6 +303,16 @@ impl EngineConfig {
     /// Enable/disable adaptive superstep tuning ([`tune`]).
     pub fn adaptive(mut self, a: bool) -> Self {
         self.adaptive = a;
+        self
+    }
+    /// Enable/disable work-stealing shard dispatch.
+    pub fn steal(mut self, s: bool) -> Self {
+        self.steal = s;
+        self
+    }
+    /// Set the prefetch pipeline depth (`0` = auto).
+    pub fn pipeline_depth(mut self, d: usize) -> Self {
+        self.pipeline_depth = d;
         self
     }
     /// Cap the number of supersteps.

@@ -232,6 +232,11 @@ pub struct GraphSession<'g> {
     /// Pooled adaptive-tuner state (per-worker contention probes + trace
     /// buffers), recycled across adaptive runs like stores/planes.
     tuners: Mutex<Vec<TunerState>>,
+    /// Pooled edge-centric rebuild scratch vectors: the
+    /// `EdgeCentricBypassRebuild` fallback recomputes weights every
+    /// superstep, but the vector they land in is recycled here instead
+    /// of reallocated per superstep (pooled like stores/planes).
+    cut_scratches: Mutex<Vec<Vec<u64>>>,
     runs: AtomicU64,
 }
 
@@ -271,6 +276,7 @@ impl<'g> GraphSession<'g> {
             shard_states: Mutex::new(Vec::new()),
             planes: Mutex::new(HashMap::new()),
             tuners: Mutex::new(Vec::new()),
+            cut_scratches: Mutex::new(Vec::new()),
             runs: AtomicU64::new(0),
         }
     }
@@ -603,6 +609,15 @@ impl<'g> GraphSession<'g> {
             (None, false)
         };
 
+        // Edge-centric rebuild scratch: plain data, fully rewritten
+        // before every read, so checkout needs no epoch stamping.
+        let cut_scratch = self
+            .cut_scratches
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or_default();
+
         let mut engine = Engine::with_setup(
             g,
             program,
@@ -616,6 +631,7 @@ impl<'g> GraphSession<'g> {
                 partition,
                 log,
                 tuner,
+                cut_scratch,
             },
         );
         let mut result = engine.run();
@@ -627,7 +643,7 @@ impl<'g> GraphSession<'g> {
         result.metrics.tuner_reused = tuner_reused;
 
         // ---- Return the parts to the pools -----------------------------
-        let (store, bitsets, shard_state, log, tuner_state) = engine.into_parts();
+        let (store, bitsets, shard_state, log, tuner_state, cut_scratch) = engine.into_parts();
         self.stores
             .lock()
             .expect("store pool poisoned")
@@ -653,6 +669,10 @@ impl<'g> GraphSession<'g> {
         if let Some(ts) = tuner_state {
             self.tuners.lock().expect("tuner pool poisoned").push(ts);
         }
+        self.cut_scratches
+            .lock()
+            .expect("scratch pool poisoned")
+            .push(cut_scratch);
         self.runs.fetch_add(1, Ordering::Relaxed);
         result
     }

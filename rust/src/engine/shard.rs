@@ -148,6 +148,15 @@ impl RemoteBuffers {
         (0..self.workers).map(|w| self.cell(w, d).get().len()).sum()
     }
 
+    /// Per-destination-shard pending counts, in shard order (between
+    /// phases). One vector serves both flush-dispatch weighting and
+    /// steal-queue seeding, replacing per-shard `pending_for` loops.
+    pub fn pending_weights(&self) -> Vec<u64> {
+        (0..self.shards)
+            .map(|d| self.pending_for(d) as u64)
+            .collect()
+    }
+
     /// Drain every worker's buffer for destination shard `d` through
     /// `deliver`, in worker order then push order (deterministic).
     /// Flush phase only: exactly one task owns each destination shard.
@@ -266,6 +275,7 @@ mod tests {
         bufs.push(1, 0, (13, 103));
         assert_eq!(bufs.pending_for(1), 3);
         assert_eq!(bufs.pending_for(0), 1);
+        assert_eq!(bufs.pending_weights(), vec![1, 3]);
         let mut seen = Vec::new();
         bufs.drain_for(1, |m| seen.push(m));
         assert_eq!(seen, vec![(11, 101), (12, 102), (10, 100)]);

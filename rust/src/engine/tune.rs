@@ -69,7 +69,22 @@ pub struct StepPlan {
     pub strategy: Strategy,
     /// Explicit active list (`true`) vs full scan (`false`).
     pub bypass: bool,
+    /// Software-prefetch look-ahead (vertices) in the scatter/gather hot
+    /// loops; `0` means "auto" ([`DEFAULT_PIPELINE_DEPTH`], or the
+    /// tuner's table value on adaptive runs). A pure memory-system knob:
+    /// prefetch hints never change results.
+    pub pipeline_depth: usize,
+    /// Successive single-item steals per steal episode under
+    /// work-stealing shard dispatch; `0` means "auto" (1, or the tuner's
+    /// table value). Execution-placement only — see
+    /// [`crate::sched::steal`].
+    pub steal_chunk: usize,
 }
+
+/// Prefetch look-ahead used when [`StepPlan::pipeline_depth`] is left on
+/// auto — the depth the pre-tunable engine hard-coded in its Pull-mode
+/// slot prefetch.
+pub const DEFAULT_PIPELINE_DEPTH: usize = 8;
 
 impl StepPlan {
     /// The fixed plan an `EngineConfig` describes.
@@ -78,7 +93,23 @@ impl StepPlan {
             schedule: cfg.schedule,
             strategy: cfg.strategy,
             bypass: cfg.bypass,
+            pipeline_depth: cfg.pipeline_depth,
+            steal_chunk: 0,
         }
+    }
+
+    /// The prefetch depth to actually use (resolves auto).
+    pub fn effective_pipeline_depth(&self) -> usize {
+        if self.pipeline_depth == 0 {
+            DEFAULT_PIPELINE_DEPTH
+        } else {
+            self.pipeline_depth
+        }
+    }
+
+    /// The steal-episode length to actually use (resolves auto).
+    pub fn effective_steal_chunk(&self) -> usize {
+        self.steal_chunk.max(1)
     }
 }
 
@@ -117,6 +148,16 @@ pub struct DecisionTable {
     /// Max-over-mean cross-shard flush load above which shard dispatch
     /// is upgraded from static to FCFS claiming.
     pub flush_imbalance_hi: f64,
+    /// Prefetch look-ahead (vertices) the memory model recommends: deep
+    /// enough to cover one full cache-miss latency with hot-access work.
+    pub pipeline_depth: usize,
+    /// Single-item steals per steal episode: enough to amortise one
+    /// steal's claim cost against per-item work.
+    pub steal_chunk: usize,
+    /// Vector-gather lane utilisation (useful lanes / scanned lanes)
+    /// below which the prefetch window is widened — mostly-empty lanes
+    /// mean the gather is ranging over cold, sparse rows.
+    pub lane_util_lo: f64,
     /// Supersteps a knob is frozen after switching (anti-flip-flop).
     pub dwell: usize,
 }
@@ -172,6 +213,14 @@ impl DecisionTable {
             // FCFS shard claiming pays one chunk-claim per shard; a 1.5×
             // max-over-mean flush skew reliably buys that back.
             flush_imbalance_hi: 1.5,
+            // Cover one miss latency with hot-access work, doubled
+            // because roughly every other prefetched line is already
+            // resident on the dense paths this knob serves.
+            pipeline_depth: (((c.t_miss / c.t_access_hit).ceil() as usize) * 2).clamp(2, 32),
+            // One steal claim (CAS + fence) per `chunk` items of
+            // per-vertex work keeps steal overhead under t_vertex.
+            steal_chunk: ((c.t_steal / c.t_vertex).ceil() as usize).clamp(1, 8),
+            lane_util_lo: 0.25,
             dwell: 2,
         }
     }
@@ -238,10 +287,17 @@ pub struct AdaptiveTuner {
     /// whole shards from the plan).
     can_edge_scan: bool,
     partitioned: bool,
+    /// Whether the pipeline-depth knob is on auto (config left it 0);
+    /// an explicit `--pipeline-depth` pins it for the whole run.
+    auto_depth: bool,
+    /// Whether work-stealing dispatch is on (`EngineConfig::steal`): the
+    /// steal-granularity knob only means anything then.
+    steal_enabled: bool,
     // Per-knob dwell counters (supersteps left before the knob may move).
     cool_bypass: usize,
     cool_schedule: usize,
     cool_strategy: usize,
+    cool_depth: usize,
     // Signals observed at the previous barrier.
     last_messages: u64,
     /// Messages of the superstep before last — the send generation whose
@@ -252,6 +308,13 @@ pub struct AdaptiveTuner {
     last_delivered: u64,
     last_contention: u64,
     last_flush_imbalance: f64,
+    /// Successful steals in the previous superstep (0 when stealing is
+    /// off): steals mean the seeded cut misjudged the load, so episodes
+    /// are lengthened to amortise the victim scans.
+    last_steals: u64,
+    /// Vector-gather lane utilisation of the previous superstep (1.0
+    /// until a gather runs): sparse lanes widen the prefetch window.
+    last_lane_util: f64,
     /// Active count of the superstep currently executing (denominator
     /// for the next decision's messages-per-active signal).
     last_active: usize,
@@ -290,14 +353,19 @@ impl AdaptiveTuner {
             strategy_tunable: mode == Mode::Push && !is_log && cfg.strategy != Strategy::CasNeutral,
             can_edge_scan,
             partitioned,
+            auto_depth: cfg.pipeline_depth == 0,
+            steal_enabled: cfg.steal,
             cool_bypass: 0,
             cool_schedule: 0,
             cool_strategy: 0,
+            cool_depth: 0,
             last_messages: 0,
             prev_messages: 0,
             last_delivered: 0,
             last_contention: 0,
             last_flush_imbalance: 1.0,
+            last_steals: 0,
+            last_lane_util: 1.0,
             last_active: 0,
             seen_barrier: false,
             state,
@@ -349,6 +417,7 @@ impl AdaptiveTuner {
             self.cool_bypass = self.cool_bypass.saturating_sub(1);
             self.cool_schedule = self.cool_schedule.saturating_sub(1);
             self.cool_strategy = self.cool_strategy.saturating_sub(1);
+            self.cool_depth = self.cool_depth.saturating_sub(1);
 
             // (c) dense-frontier bypass: two-sided density band.
             if self.cool_bypass == 0 {
@@ -395,6 +464,33 @@ impl AdaptiveTuner {
                 }
             }
 
+            // (d) memory-system knobs. Value-safe by construction
+            // (prefetch hints and execution placement only), so no
+            // bit-identity stakes — just throughput.
+            if self.auto_depth && self.cool_depth == 0 {
+                // Base depth from the memory model; widen it while the
+                // vector gather reports mostly-empty lanes (sparse cold
+                // rows need a longer window to hide their misses).
+                let mut want = self.table.pipeline_depth;
+                if self.last_lane_util < self.table.lane_util_lo {
+                    want = (want * 2).min(32);
+                }
+                if want != plan.pipeline_depth {
+                    plan.pipeline_depth = want;
+                    self.cool_depth = self.table.dwell;
+                }
+            }
+            if self.steal_enabled {
+                // Steals observed: the seeded cut misjudged this phase's
+                // load, so lengthen the episodes to amortise the victim
+                // scans. No dwell — the knob is contention-free to move.
+                let mut want = self.table.steal_chunk;
+                if self.last_steals > 0 {
+                    want = (want * 2).min(16);
+                }
+                plan.steal_chunk = want;
+            }
+
             // (b) lock vs hybrid combining.
             if self.strategy_tunable && self.cool_strategy == 0 {
                 let contended = contention_per_msg >= self.table.contention_hi;
@@ -427,6 +523,10 @@ impl AdaptiveTuner {
             fan_in,
             contention_per_msg,
             flush_imbalance: self.last_flush_imbalance,
+            steals: self.last_steals,
+            lane_utilisation: self.last_lane_util,
+            pipeline_depth: plan.effective_pipeline_depth(),
+            steal_chunk: plan.effective_steal_chunk(),
             switched,
         });
         self.cur = plan;
@@ -435,10 +535,19 @@ impl AdaptiveTuner {
     }
 
     /// Feed the just-finished superstep's signals back at the barrier:
-    /// total messages, recipients that consumed a payload, and the
+    /// total messages, recipients that consumed a payload, the
     /// cross-shard flush max-over-mean (1.0 when flat or nothing
-    /// flushed). Drains the per-worker contention probes.
-    pub(crate) fn observe(&mut self, messages: u64, delivered: u64, flush_imbalance: f64) {
+    /// flushed), successful steals (0 when stealing is off), and
+    /// vector-gather lane utilisation (1.0 when no gather ran). Drains
+    /// the per-worker contention probes.
+    pub(crate) fn observe(
+        &mut self,
+        messages: u64,
+        delivered: u64,
+        flush_imbalance: f64,
+        steals: u64,
+        lane_utilisation: f64,
+    ) {
         let mut contention = 0u64;
         for p in &self.state.probes {
             let (retries, contended) = p.take();
@@ -449,6 +558,8 @@ impl AdaptiveTuner {
         self.last_delivered = delivered;
         self.last_contention = contention;
         self.last_flush_imbalance = flush_imbalance;
+        self.last_steals = steals;
+        self.last_lane_util = lane_utilisation;
         self.seen_barrier = true;
     }
 
@@ -502,7 +613,7 @@ mod tests {
         let cfg = EngineConfig::default().bypass(false);
         let mut t = tuner(&cfg);
         t.decide(0, 1, 1000);
-        t.observe(10, 10, 1.0);
+        t.observe(10, 10, 1.0, 0, 1.0);
         let plan = t.decide(1, 5, 1000);
         assert!(plan.bypass, "density 0.005 is deep in list territory");
         let trace = t.take_trace();
@@ -515,7 +626,7 @@ mod tests {
         let cfg = EngineConfig::default().bypass(true);
         let mut t = tuner(&cfg);
         t.decide(0, 900, 1000);
-        t.observe(1000, 900, 1.0);
+        t.observe(1000, 900, 1.0, 0, 1.0);
         let plan = t.decide(1, 950, 1000);
         assert!(!plan.bypass, "density 0.95 is scan territory");
     }
@@ -528,7 +639,7 @@ mod tests {
         let mut t = tuner(&cfg);
         t.decide(0, 10, 1000);
         for s in 1..6 {
-            t.observe(10, 10, 1.0);
+            t.observe(10, 10, 1.0, 0, 1.0);
             let plan = t.decide(s, (mid * 1000.0) as usize, 1000);
             assert!(plan.bypass, "mid-band density must not move the knob");
         }
@@ -540,15 +651,15 @@ mod tests {
         let cfg = EngineConfig::default().bypass(false);
         let mut t = tuner(&cfg);
         t.decide(0, 1, 1000);
-        t.observe(10, 10, 1.0);
+        t.observe(10, 10, 1.0, 0, 1.0);
         let p1 = t.decide(1, 5, 1000);
         assert!(p1.bypass, "sparse: switch to list");
         // Immediately dense again — but the knob just moved and must
         // dwell, then move only after the cooldown expires.
-        t.observe(10, 10, 1.0);
+        t.observe(10, 10, 1.0, 0, 1.0);
         let p2 = t.decide(2, 950, 1000);
         assert!(p2.bypass, "dwell holds the switch");
-        t.observe(10, 10, 1.0);
+        t.observe(10, 10, 1.0, 0, 1.0);
         let p3 = t.decide(3, 950, 1000);
         assert!(!p3.bypass, "cooldown expired: dense wins");
     }
@@ -560,17 +671,17 @@ mod tests {
         t.decide(0, 500, 1000);
         // Superstep 0 sent 5000 messages; nothing consumed yet, so the
         // fan-in signal is still silent and the strategy must hold.
-        t.observe(5000, 0, 1.0);
+        t.observe(5000, 0, 1.0, 0, 1.0);
         let plan = t.decide(1, 500, 1000);
         assert_eq!(plan.strategy, Strategy::Lock, "no consumers observed yet");
         // Superstep 1: 500 recipients consumed those 5000 sends —
         // generation-matched fan-in 10 ≫ threshold.
-        t.observe(5000, 500, 1.0);
+        t.observe(5000, 500, 1.0, 0, 1.0);
         let plan = t.decide(2, 500, 1000);
         assert_eq!(plan.strategy, Strategy::Hybrid);
         // Fan-in collapses to 1: after the dwell, lock returns.
         for s in 3..6 {
-            t.observe(500, 500, 1.0);
+            t.observe(500, 500, 1.0, 0, 1.0);
             t.decide(s, 500, 1000);
         }
         assert_eq!(t.cur.strategy, Strategy::Lock);
@@ -581,9 +692,9 @@ mod tests {
         let cfg = EngineConfig::default().strategy(Strategy::CasNeutral);
         let mut t = tuner(&cfg);
         t.decide(0, 500, 1000);
-        t.observe(50_000, 0, 1.0);
+        t.observe(50_000, 0, 1.0, 0, 1.0);
         t.decide(1, 500, 1000);
-        t.observe(50_000, 500, 1.0); // generation-matched fan-in 100
+        t.observe(50_000, 500, 1.0, 0, 1.0); // generation-matched fan-in 100
         let plan = t.decide(2, 500, 1000);
         assert_eq!(
             plan.strategy,
@@ -598,12 +709,12 @@ mod tests {
         let mut t = tuner(&cfg);
         t.decide(0, 100, 1000);
         // 100 active sent 5000 messages: 50 msgs/active ≫ edge_msgs_hi.
-        t.observe(5000, 800, 1.0);
+        t.observe(5000, 800, 1.0, 0, 1.0);
         let plan = t.decide(1, 800, 1000);
         assert_eq!(plan.schedule, Schedule::EdgeCentric);
         // Message volume collapses: vertex-centric returns post-dwell.
         for s in 2..6 {
-            t.observe(100, 100, 1.0);
+            t.observe(100, 100, 1.0, 0, 1.0);
             t.decide(s, 100, 1000);
         }
         assert_eq!(t.cur.schedule, Schedule::Static);
@@ -625,7 +736,7 @@ mod tests {
         // wants edge-centric — but scans have no weights, so the knob
         // must stay put.
         t.decide(0, 500, 1000);
-        t.observe(50_000, 500, 1.0);
+        t.observe(50_000, 500, 1.0, 0, 1.0);
         let plan = t.decide(1, 500, 1000);
         assert!(!plan.bypass);
         assert_ne!(plan.schedule, Schedule::EdgeCentric);
@@ -644,7 +755,7 @@ mod tests {
             2,
         );
         t.decide(0, 500, 1000);
-        t.observe(1000, 900, /* flush imbalance */ 3.0);
+        t.observe(1000, 900, /* flush imbalance */ 3.0, 0, 1.0);
         let plan = t.decide(1, 500, 1000);
         assert_eq!(
             plan.schedule,
@@ -654,6 +765,66 @@ mod tests {
         );
         let trace = t.take_trace();
         assert_eq!(trace[1].flush_imbalance, 3.0, "signal lands in the trace");
+    }
+
+    #[test]
+    fn memory_knobs_follow_the_table_after_first_barrier() {
+        let cfg = EngineConfig::default().steal(true);
+        let table = DecisionTable::default();
+        let mut t = tuner(&cfg);
+        // Superstep 0: the configured plan verbatim — knobs on auto.
+        let p0 = t.decide(0, 500, 1000);
+        assert_eq!(p0.pipeline_depth, 0);
+        assert_eq!(p0.steal_chunk, 0);
+        assert_eq!(p0.effective_pipeline_depth(), DEFAULT_PIPELINE_DEPTH);
+        assert_eq!(p0.effective_steal_chunk(), 1);
+        // After a barrier the table values land.
+        t.observe(100, 100, 1.0, 0, 1.0);
+        let p1 = t.decide(1, 500, 1000);
+        assert_eq!(p1.pipeline_depth, table.pipeline_depth);
+        assert_eq!(p1.steal_chunk, table.steal_chunk);
+    }
+
+    #[test]
+    fn sparse_lanes_widen_the_prefetch_window() {
+        let cfg = EngineConfig::default();
+        let table = DecisionTable::default();
+        let mut t = tuner(&cfg);
+        t.decide(0, 500, 1000);
+        // Lane utilisation far below the floor: depth doubles (capped).
+        t.observe(100, 100, 1.0, 0, 0.05);
+        let plan = t.decide(1, 500, 1000);
+        assert_eq!(plan.pipeline_depth, (table.pipeline_depth * 2).min(32));
+        // Dwell holds the widened window even after lanes fill back up.
+        t.observe(100, 100, 1.0, 0, 1.0);
+        let plan = t.decide(2, 500, 1000);
+        assert_eq!(plan.pipeline_depth, (table.pipeline_depth * 2).min(32));
+    }
+
+    #[test]
+    fn observed_steals_lengthen_the_episode() {
+        let cfg = EngineConfig::default().steal(true);
+        let table = DecisionTable::default();
+        let mut t = tuner(&cfg);
+        t.decide(0, 500, 1000);
+        t.observe(100, 100, 1.0, /* steals */ 7, 1.0);
+        let plan = t.decide(1, 500, 1000);
+        assert_eq!(plan.steal_chunk, (table.steal_chunk * 2).min(16));
+        // Steals stop: back to the table value.
+        t.observe(100, 100, 1.0, 0, 1.0);
+        let plan = t.decide(2, 500, 1000);
+        assert_eq!(plan.steal_chunk, table.steal_chunk);
+    }
+
+    #[test]
+    fn explicit_pipeline_depth_pins_the_knob() {
+        let cfg = EngineConfig::default().pipeline_depth(3);
+        let mut t = tuner(&cfg);
+        let p0 = t.decide(0, 500, 1000);
+        assert_eq!(p0.effective_pipeline_depth(), 3);
+        t.observe(100, 100, 1.0, 0, 0.01); // would widen on auto
+        let p1 = t.decide(1, 500, 1000);
+        assert_eq!(p1.pipeline_depth, 3, "explicit depth is never retuned");
     }
 
     #[test]

@@ -9,6 +9,11 @@
 //!                   real engine run (GraphSession)
 //!                   [--threads N] [--schedule S] [--strategy S]
 //!                   [--layout aos|soa] [--bypass] [--shards none|K|cache[:bytes]]
+//!                   [--steal]  work-stealing shard execution: drained
+//!                              workers claim shards from the most-loaded
+//!                              peer during scatter and flush
+//!                   [--pipeline-depth N]  prefetch N vertices ahead in
+//!                              the scatter/gather hot loops (0 = auto)
 //!                   [--adaptive]  re-decide schedule/strategy/bypass each
 //!                                 superstep from live signals (prints the
 //!                                 per-switch decision trace)
@@ -156,14 +161,16 @@ fn engine_cfg(opts: &Opts) -> Result<EngineConfig> {
         .layout(layout)
         .bypass(opts.flag("bypass"))
         .partitioning(partitioning)
+        .steal(opts.flag("steal"))
+        .pipeline_depth(opts.get_num("pipeline-depth", 0usize)?)
         .adaptive(opts.flag("adaptive"))
         .max_supersteps(opts.get_num("max-supersteps", 100_000usize)?))
 }
 
 const RUN_FLAGS: &[&str] = &[
     "algo", "threads", "schedule", "strategy", "layout", "bypass", "shards", "adaptive",
-    "iterations", "source", "rounds", "max-supersteps", "dir", "mutate-batch", "mutate-rounds",
-    "mutate-seed",
+    "steal", "pipeline-depth", "iterations", "source", "rounds", "max-supersteps", "dir",
+    "mutate-batch", "mutate-rounds", "mutate-seed",
 ];
 
 fn print_run(label: &str, metrics: &RunMetrics) {
@@ -178,17 +185,22 @@ fn print_run(label: &str, metrics: &RunMetrics) {
 fn print_tuner_trace(decisions: &[ipregel::metrics::TunerDecision]) {
     for d in decisions.iter().filter(|d| d.switched || d.superstep == 0) {
         println!(
-            "  tuner s{}: {:?} / {:?} / {} (density {:.3}, msgs/active {:.1}, \
-             fan-in {:.2}, contention {:.4}, flush-imb {:.2})",
+            "  tuner s{}: {:?} / {:?} / {} / depth {} chunk {} (density {:.3}, \
+             msgs/active {:.1}, fan-in {:.2}, contention {:.4}, flush-imb {:.2}, \
+             steals {}, lanes {:.2})",
             d.superstep,
             d.schedule,
             d.strategy,
             if d.bypass { "list" } else { "scan" },
+            d.pipeline_depth,
+            d.steal_chunk,
             d.frontier_density,
             d.msgs_per_active,
             d.fan_in,
             d.contention_per_msg,
             d.flush_imbalance,
+            d.steals,
+            d.lane_utilisation,
         );
     }
 }

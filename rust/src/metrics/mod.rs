@@ -115,6 +115,17 @@ pub struct TunerDecision {
     /// Previous superstep's max-over-mean cross-shard flush load (1.0 =
     /// balanced or not partitioned).
     pub flush_imbalance: f64,
+    /// Previous superstep's successful work steals (0 when stealing is
+    /// off or no worker drained early).
+    pub steals: u64,
+    /// Previous superstep's vector-gather lane utilisation: useful lanes
+    /// over scanned lanes (1.0 when no vector gather ran).
+    pub lane_utilisation: f64,
+    /// Prefetch look-ahead selected for this superstep (resolved, never
+    /// the 0 = auto sentinel).
+    pub pipeline_depth: usize,
+    /// Steal-episode length selected for this superstep (resolved).
+    pub steal_chunk: usize,
     /// Whether this plan differs from the previous superstep's.
     pub switched: bool,
 }
@@ -205,6 +216,15 @@ pub struct RunMetrics {
     /// Adaptive runs: one entry per superstep — the knob plan applied and
     /// the signals that chose it. Empty on fixed-config runs.
     pub tuner_decisions: Vec<TunerDecision>,
+    /// Successful work steals across the run (work-stealing shard
+    /// dispatch only — 0 under fixed dispatch or flat execution).
+    pub steals: u64,
+    /// Vector-gather lanes scanned across the run (monoid Pull combines
+    /// only; 0 when the vector path never engaged).
+    pub vector_lanes_scanned: u64,
+    /// Of [`RunMetrics::vector_lanes_scanned`], lanes that carried a
+    /// message (the utilisation numerator).
+    pub vector_lanes_useful: u64,
 }
 
 impl RunMetrics {
@@ -277,6 +297,15 @@ impl RunMetrics {
                 " adaptive switches={} modes={}",
                 self.tuner_switches(),
                 self.tuner_modes()
+            ));
+        }
+        if self.steals > 0 {
+            s.push_str(&format!(" steals={}", self.steals));
+        }
+        if self.vector_lanes_scanned > 0 {
+            s.push_str(&format!(
+                " lanes={}/{}",
+                self.vector_lanes_useful, self.vector_lanes_scanned
             ));
         }
         if let Some(fb) = &self.schedule_fallback {
@@ -425,6 +454,10 @@ mod tests {
             fan_in: 1.0,
             contention_per_msg: 0.0,
             flush_imbalance: 1.0,
+            steals: 0,
+            lane_utilisation: 1.0,
+            pipeline_depth: 8,
+            steal_chunk: 1,
             switched,
         };
         let m = RunMetrics {
@@ -440,6 +473,22 @@ mod tests {
         // Fixed-config runs show no adaptive section and count no modes.
         assert!(!RunMetrics::default().summary().contains("adaptive"));
         assert_eq!(RunMetrics::default().tuner_modes(), 0);
+    }
+
+    #[test]
+    fn steal_and_lane_sections_appear_only_when_nonzero() {
+        let m = RunMetrics {
+            steals: 12,
+            vector_lanes_scanned: 100,
+            vector_lanes_useful: 40,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("steals=12"));
+        assert!(s.contains("lanes=40/100"));
+        let quiet = RunMetrics::default().summary();
+        assert!(!quiet.contains("steals="));
+        assert!(!quiet.contains("lanes="));
     }
 
     #[test]

@@ -19,11 +19,13 @@
 //! the distribution semantics of real runs.
 
 pub mod pool;
+pub mod steal;
 
 use crate::util::prefix::{balanced_cuts, exclusive_prefix_sum};
 use std::ops::Range;
 
 pub use pool::{parallel_for, parallel_for_hinted};
+pub use steal::{steal_execute, StealSet};
 
 /// Default dynamic chunk size — the paper's empirically determined 256.
 pub const DEFAULT_CHUNK: usize = 256;

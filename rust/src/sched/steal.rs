@@ -1,0 +1,406 @@
+//! Work-stealing shard queues for the partitioned scatter loop.
+//!
+//! [`parallel_for_hinted`] hands each worker a fixed chunk list (or an
+//! FCFS cursor); under partitioned execution the dispatch unit is a
+//! *shard*, and shard weights are only estimates — a worker whose shards
+//! finish early idles at the flush barrier while a peer grinds through a
+//! heavy tail. [`steal_execute`] replaces that dispatch with per-worker
+//! deques of shard indices: each worker drains its own queue from the
+//! bottom, and a drained worker *steals* single items from the top of the
+//! most-loaded peer's queue instead of idling (DESIGN.md §2.9).
+//!
+//! ## Protocol (Chase–Lev, specialised to index ranges)
+//!
+//! The classic Chase–Lev deque stores items in a growable ring buffer.
+//! Here the item *is* its index: worker `w` owns the contiguous range
+//! `cuts[w]..cuts[w+1]` of shard ids, so the queue needs no buffer at
+//! all — just the two cursors:
+//!
+//! ```text
+//! start ≤ top ≤ bottom           (queue holds top..bottom)
+//! owner  pops  at bottom (LIFO side, uncontended fast path)
+//! thieves CAS  at top    (FIFO side, one item per CAS)
+//! ```
+//!
+//! Because the "buffer" is the immutable index range itself, the classic
+//! read-after-reuse hazard (a thief reading a slot the owner already
+//! overwrote) cannot occur: a successful CAS on `top` *is* ownership of
+//! index `t`, full stop. The orderings are the textbook ones and are
+//! sanctioned in `audit/orderings.toml`:
+//!
+//! - owner pop: `bottom` store Relaxed, then `fence(SeqCst)`, then `top`
+//!   load Relaxed — the fence makes the pop visible to any thief whose
+//!   own fence follows, so owner and thief can never both claim the last
+//!   item without one of them seeing the other's cursor;
+//! - last-item tie: both sides race a SeqCst CAS on `top`; exactly one
+//!   wins;
+//! - thief: Acquire loads of both cursors around a `fence(SeqCst)`, then
+//!   the SeqCst CAS.
+//!
+//! Multi-item steals (CAS `top` forward by k) were considered and
+//! rejected: the owner only defends the single `bottom` item in the
+//! tie-break CAS, so a k-item claim could overlap items the owner pops
+//! concurrently — double execution. Instead, steal *granularity* is a
+//! loop of single-item CASes per steal episode
+//! ([`steal_execute`]'s `steal_chunk`), which amortises the victim scan
+//! without weakening the protocol.
+//!
+//! Under `--features race-check` every item carries a [`ShadowCell`];
+//! executing it records a same-phase unsynchronised write, so an item
+//! executed twice in one phase — the only way this protocol can fail —
+//! panics deterministically (see `tests/test_race.rs`).
+
+use crate::util::prefix::{balanced_cuts, exclusive_prefix_sum};
+use crate::util::CachePadded;
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+
+#[cfg(feature = "race-check")]
+use crate::util::shadow::{PhaseGuard, ShadowCell, Site};
+
+/// One worker's deque over its contiguous index range. The range never
+/// grows, so `start` is immutable and only the two cursors are shared.
+struct StealQueue {
+    /// Lower bound of this worker's range; `top` never moves below it.
+    start: usize,
+    /// Steal side: first unclaimed index. Monotonically non-decreasing.
+    top: AtomicUsize,
+    /// Owner side: one past the last unclaimed index.
+    bottom: AtomicUsize,
+}
+
+/// A set of per-worker stealing deques partitioning `0..n`.
+///
+/// Construction seeds worker `w` with `cuts[w]..cuts[w+1]`, where the
+/// cuts come from [`balanced_cuts`] over the item weights (equal item
+/// counts when no weights are given) — the same cut the fixed dispatch
+/// would use, so with zero steals the assignment is identical.
+pub struct StealSet {
+    queues: Vec<CachePadded<StealQueue>>,
+    /// Per-worker successful-steal counters (Relaxed: statistics only).
+    steals: Vec<CachePadded<AtomicU64>>,
+    /// One shadow cell per item: execution is an unsynchronised write,
+    /// so a double-executed item trips the race checker.
+    #[cfg(feature = "race-check")]
+    shadows: Vec<ShadowCell>,
+}
+
+impl StealSet {
+    /// Partition `0..n` across `workers` deques, weighted by `weights`
+    /// when given (item → work units, e.g. active edge counts per shard).
+    pub fn new(n: usize, workers: usize, weights: Option<&[u64]>) -> StealSet {
+        let workers = workers.max(1);
+        let cuts = match weights {
+            Some(w) => {
+                debug_assert_eq!(w.len(), n);
+                balanced_cuts(&exclusive_prefix_sum(w), workers)
+            }
+            None => (0..=workers).map(|t| n * t / workers).collect(),
+        };
+        let queues = (0..workers)
+            .map(|w| {
+                CachePadded::new(StealQueue {
+                    start: cuts[w],
+                    top: AtomicUsize::new(cuts[w]),
+                    bottom: AtomicUsize::new(cuts[w + 1]),
+                })
+            })
+            .collect();
+        StealSet {
+            queues,
+            steals: (0..workers)
+                .map(|_| CachePadded::new(AtomicU64::new(0)))
+                .collect(),
+            #[cfg(feature = "race-check")]
+            shadows: (0..n).map(|_| ShadowCell::new()).collect(),
+        }
+    }
+
+    /// Number of worker deques.
+    pub fn workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Owner pop from the bottom of worker `w`'s own deque.
+    pub fn take(&self, w: usize) -> Option<usize> {
+        let q = &self.queues[w];
+        let b = q.bottom.load(Ordering::Relaxed);
+        if b == q.start {
+            return None; // empty, and thieves cannot make it emptier
+        }
+        let b = b - 1;
+        // Publish the claim of index b, then look at the steal cursor.
+        // The SeqCst fence pairs with the thief's fence: whichever side's
+        // fence is later sees the other's cursor update, so both claiming
+        // item b unobserved is impossible.
+        q.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = q.top.load(Ordering::Relaxed);
+        if t < b {
+            // More than one item remained: b is uncontended.
+            return Some(b);
+        }
+        // Restore bottom either way: the queue is empty after this pop
+        // attempt, and top must stay ≤ bottom for thieves' range checks.
+        q.bottom.store(b + 1, Ordering::Relaxed);
+        if t == b {
+            // Last item: race any thief for it via the top cursor.
+            if q.top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(b);
+            }
+        }
+        None
+    }
+
+    /// Thief-side single-item claim from the top of `victim`'s deque.
+    pub fn steal_from(&self, thief: usize, victim: usize) -> Option<usize> {
+        let q = &self.queues[victim];
+        let t = q.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = q.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return None; // empty (or the owner is mid-pop on the last item)
+        }
+        if q.top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+        {
+            self.steals[thief].fetch_add(1, Ordering::Relaxed);
+            return Some(t);
+        }
+        None
+    }
+
+    /// The peer of `w` with the most unclaimed items, or `None` when all
+    /// peers look empty. A load-time estimate — the answer can be stale
+    /// by the time the steal lands, which only costs a failed CAS.
+    pub fn most_loaded(&self, w: usize) -> Option<usize> {
+        let mut best = None;
+        let mut best_len = 0usize;
+        for (v, q) in self.queues.iter().enumerate() {
+            if v == w {
+                continue;
+            }
+            let len = q
+                .bottom
+                .load(Ordering::Relaxed)
+                .saturating_sub(q.top.load(Ordering::Relaxed));
+            if len > best_len {
+                best_len = len;
+                best = Some(v);
+            }
+        }
+        best
+    }
+
+    /// Record that item `i` is about to execute. Under `race-check` this
+    /// is an unsynchronised write to the item's shadow cell: exactly one
+    /// execution per phase is legal, so a protocol violation (double
+    /// claim) panics with both sites.
+    #[inline]
+    #[allow(unused_variables)]
+    pub fn mark_execute(&self, i: usize) {
+        #[cfg(feature = "race-check")]
+        self.shadows[i].on_write(Site::StealItem, false);
+    }
+
+    /// Total successful steals across all workers.
+    pub fn steals_total(&self) -> u64 {
+        self.steals
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+/// Below this many items the thread-spawn cost dominates: run serially
+/// (mirrors `sched::pool`'s cutoff so the two dispatchers agree).
+const SERIAL_CUTOFF: usize = 4096;
+
+/// Execute `body(worker, item)` for every item in `0..n` on `threads`
+/// workers with work stealing, returning the number of successful steals.
+///
+/// Seeding matches the fixed dispatch: worker `w` starts with the
+/// weight-balanced range `cuts[w]..cuts[w+1]` and drains it bottom-up
+/// (i.e. in *descending* index order — order within a worker is
+/// unspecified, exactly as under FCFS schedules). A drained worker runs
+/// steal episodes: up to `steal_chunk` single-item steals from the
+/// currently most-loaded peer, executing each immediately, and exits
+/// when an episode yields nothing.
+///
+/// `work_hint` gates the serial cutoff (pass the number of *active*
+/// items so near-empty supersteps skip the spawns, like
+/// `parallel_for_hinted`).
+pub fn steal_execute<F>(
+    threads: usize,
+    n: usize,
+    weights: Option<&[u64]>,
+    steal_chunk: usize,
+    work_hint: usize,
+    body: F,
+) -> u64
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.max(1);
+    if n == 0 {
+        return 0;
+    }
+    #[cfg(feature = "race-check")]
+    let _phase = PhaseGuard::enter();
+    if threads == 1 || work_hint < SERIAL_CUTOFF {
+        for i in 0..n {
+            body(0, i);
+        }
+        return 0;
+    }
+    let set = StealSet::new(n, threads, weights);
+    let chunk = steal_chunk.max(1);
+    let set_ref = &set;
+    let body_ref = &body;
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            scope.spawn(move || {
+                loop {
+                    // Drain own deque first: uncontended fast path.
+                    while let Some(i) = set_ref.take(w) {
+                        set_ref.mark_execute(i);
+                        body_ref(w, i);
+                    }
+                    // Steal episode: up to `chunk` items from the most
+                    // loaded peer, re-picking the victim per item so a
+                    // raced-away queue redirects the episode.
+                    let mut stole = false;
+                    for _ in 0..chunk {
+                        let Some(v) = set_ref.most_loaded(w) else { break };
+                        if let Some(i) = set_ref.steal_from(w, v) {
+                            set_ref.mark_execute(i);
+                            body_ref(w, i);
+                            stole = true;
+                        } else if !stole {
+                            // Lost the race and have stolen nothing yet:
+                            // retry the scan rather than giving up on a
+                            // single failed CAS.
+                            if set_ref.most_loaded(w).is_none() {
+                                break;
+                            }
+                        }
+                    }
+                    if !stole {
+                        // Own queue empty and nothing stealable: even if
+                        // a peer still *executes* items, none are
+                        // unclaimed — the region is drained for us.
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    set.steals_total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn serial_owner_drains_in_descending_order() {
+        let set = StealSet::new(5, 1, None);
+        let mut got = Vec::new();
+        while let Some(i) = set.take(0) {
+            got.push(i);
+        }
+        assert_eq!(got, vec![4, 3, 2, 1, 0]);
+        assert_eq!(set.take(0), None);
+        assert_eq!(set.steals_total(), 0);
+    }
+
+    #[test]
+    fn seeding_matches_balanced_cuts() {
+        // Weights concentrate on item 3: cuts should isolate it.
+        let w = [1u64, 1, 1, 97];
+        let set = StealSet::new(4, 2, Some(&w));
+        // Worker 0 gets 0..3, worker 1 gets 3..4 (97% of the weight).
+        let mut own0 = Vec::new();
+        while let Some(i) = set.take(0) {
+            own0.push(i);
+        }
+        assert_eq!(own0, vec![2, 1, 0]);
+        assert_eq!(set.take(1), Some(3));
+        assert_eq!(set.take(1), None);
+    }
+
+    #[test]
+    fn thief_takes_from_the_top() {
+        let set = StealSet::new(4, 2, None); // w0: 0..2, w1: 2..4
+        assert_eq!(set.steal_from(1, 0), Some(0));
+        assert_eq!(set.steal_from(1, 0), Some(1));
+        assert_eq!(set.steal_from(1, 0), None);
+        assert_eq!(set.steals_total(), 2);
+        // Owner still owns its (now empty) queue.
+        assert_eq!(set.take(0), None);
+    }
+
+    #[test]
+    fn most_loaded_picks_the_longest_peer_queue() {
+        let w = [1u64, 1, 1, 1, 1, 1, 1, 1]; // equal → cuts 0..4, 4..8
+        let set = StealSet::new(8, 2, Some(&w));
+        assert_eq!(set.most_loaded(0), Some(1));
+        set.take(1);
+        set.take(1);
+        set.take(1);
+        set.take(1);
+        assert_eq!(set.most_loaded(0), None, "peer drained");
+        assert_eq!(set.most_loaded(1), Some(0));
+    }
+
+    #[test]
+    fn every_item_executes_exactly_once_under_contention() {
+        // 2 workers, all weight in worker 0's range: worker 1 must steal.
+        let n = 8192usize;
+        let mut w = vec![0u64; n];
+        for x in w.iter_mut().take(n / 8) {
+            *x = 1000;
+        }
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let steals = steal_execute(4, n, Some(&w), 2, n, |_t, i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "item {i} execution count");
+        }
+        // Three workers start (almost) empty; they must have stolen.
+        assert!(steals > 0, "expected at least one steal");
+    }
+
+    #[test]
+    fn serial_cutoff_runs_in_order_with_zero_steals() {
+        let order = std::sync::Mutex::new(Vec::new());
+        let steals = steal_execute(8, 64, None, 4, 64, |t, i| {
+            assert_eq!(t, 0);
+            order.lock().unwrap().push(i);
+        });
+        assert_eq!(steals, 0);
+        assert_eq!(*order.lock().unwrap(), (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_range_is_a_no_op() {
+        assert_eq!(steal_execute(4, 0, None, 1, 0, |_, _| panic!("no items")), 0);
+    }
+
+    #[test]
+    fn more_workers_than_items_leaves_tail_queues_empty() {
+        let counts: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        // work_hint ≥ cutoff forces the parallel path even for 3 items.
+        let _ = steal_execute(8, 3, None, 1, SERIAL_CUTOFF, |_t, i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for c in &counts {
+            assert_eq!(c.load(Ordering::Relaxed), 1);
+        }
+    }
+}

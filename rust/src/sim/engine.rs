@@ -12,6 +12,7 @@
 //! never in *answers*.
 
 use crate::combine::plane::DeliveryPlane;
+use crate::combine::vector::{LANES, VECTOR_GATHER_MIN};
 use crate::combine::{Combiner, Strategy};
 use crate::engine::tune::{AdaptiveTuner, DecisionTable, StepPlan, TunerState};
 use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, VertexProgram};
@@ -333,6 +334,11 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             None
         };
 
+        // Vector dense-bypass combining (§2.9): known-monoid combiners
+        // fold long pull rows through LANES accumulators, shortening the
+        // combine dependency chain by the lane width.
+        let monoid = comb.monoid_kind().is_some();
+
         let mut agg_prev: Option<AggValue<P>> = None;
         let mut superstep = 0usize;
         let mut total_messages = 0u64;
@@ -431,9 +437,12 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             total_messages += push_deliveries + pull_combined_total;
 
             let stride = cost.layout_stride(cfg.layout);
-            // Pull working set: slots the scans touch.
+            // Pull working set: slots the scans touch. The staged
+            // prefetch pipeline (§2.9) issues slot loads `depth` vertices
+            // ahead, discounting the miss portion by its coverage.
             let ws_pull = (pull_scanned_total.min(n as u64)) as f64 * stride;
-            let pull_access = cost.random_access(ws_pull);
+            let pull_access =
+                cost.prefetched_access(ws_pull, knobs.effective_pipeline_depth());
             // Push working set: recipient slots written.
             let ws_push = step.touched.len() as f64 * stride;
             let push_mem = cost.random_access(ws_push) - cost.t_access_hit;
@@ -469,7 +478,14 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 }
                 match mode {
                     Mode::Pull => {
-                        c += it.scanned as f64 * pull_access + it.combined as f64 * cost.t_combine;
+                        // Rows past the gather threshold vectorise when
+                        // the combiner is a known monoid.
+                        let t_comb = if monoid && it.scanned as usize >= VECTOR_GATHER_MIN {
+                            cost.t_combine / LANES as f64
+                        } else {
+                            cost.t_combine
+                        };
+                        c += it.scanned as f64 * pull_access + it.combined as f64 * t_comb;
                         if it.did_broadcast {
                             // Outbox store + activation of out-neighbours.
                             c += cost.t_store
@@ -499,6 +515,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
 
             // ---- Dispatch to the virtual machine ----------------------
             let mut flush_imb = 1.0f64;
+            let mut est_steals = 0u64;
             let stats = if let Some(plan) = &plan {
                 // Partitioned scatter: whole shards are the dispatch
                 // unit. Each shard's cost is the sum of its active items
@@ -576,12 +593,21 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 } else {
                     None
                 };
-                let scatter = vm.region(
+                let mut scatter = vm.region(
                     shard_sched,
                     &shard_costs,
                     shard_weights.as_deref(),
                     cost.t_chunk_claim,
                 );
+                if cfg.steal {
+                    // Work-stealing scatter (§2.9): drained workers
+                    // migrate whole shards from the most-loaded peer.
+                    let max_shard = shard_costs.iter().copied().fold(0.0, f64::max);
+                    let (re, st) =
+                        vm.steal_rebalance(scatter, max_shard, shards, cost.t_steal);
+                    scatter = re;
+                    est_steals += st;
+                }
                 // Flush: destination shards drain their buffered
                 // cross-shard messages owner-exclusively.
                 let total_cross: u64 = cross_to.iter().sum();
@@ -598,7 +624,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     };
                     let flush_costs: Vec<f64> =
                         cross_to.iter().map(|&c| c as f64 * per_flush).collect();
-                    vm.region(
+                    let flush = vm.region(
                         shard_sched,
                         &flush_costs,
                         if shard_sched.needs_weights() {
@@ -608,6 +634,15 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                         },
                         cost.t_chunk_claim,
                     );
+                    if cfg.steal {
+                        // The flush barrier is where stealing pays most:
+                        // a few hot destination shards strand their
+                        // drainers while the rest of the team idles.
+                        let max_flush = flush_costs.iter().copied().fold(0.0, f64::max);
+                        let (_, st) =
+                            vm.steal_rebalance(flush, max_flush, shards, cost.t_steal);
+                        est_steals += st;
+                    }
                 }
                 scatter
             } else if knobs.bypass {
@@ -691,7 +726,22 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
             // (mirrors the real engine's observe call).
             if let Some(t) = tuner.as_mut() {
                 let delivered = items.iter().filter(|it| it.got_msg).count() as u64;
-                t.observe(push_deliveries + pull_combined_total, delivered, flush_imb);
+                // Serial analogue of the engine's LaneCounters: the
+                // fraction of scanned pull slots that held a message,
+                // 1.0 when nothing vectorises (same convention as
+                // LaneCounters::ratio).
+                let lane_util = if monoid && pull_scanned_total > 0 {
+                    pull_combined_total as f64 / pull_scanned_total as f64
+                } else {
+                    1.0
+                };
+                t.observe(
+                    push_deliveries + pull_combined_total,
+                    delivered,
+                    flush_imb,
+                    est_steals,
+                    lane_util,
+                );
             }
 
             // Reset recipient counts (touched list keeps this O(touched)).
@@ -859,6 +909,26 @@ mod tests {
             );
             assert!(adaptive.decisions.iter().any(|d| d.switched));
         }
+    }
+
+    #[test]
+    fn stealing_sim_is_value_identical_and_never_slower() {
+        // Skewed push workload on a static shard split: stealing can
+        // only migrate work, never change answers — and the rebalanced
+        // makespan is capped at the fixed one by construction.
+        let g = gen::rmat(11, 16, 0.57, 0.19, 0.19, 6);
+        let p = Sssp::from_hub(&g);
+        let cfg = EngineConfig::default().threads(32).bypass(true).shards(64);
+        let fixed = SimEngine::new(&g, &p, cfg).run();
+        let steal = SimEngine::new(&g, &p, cfg.steal(true)).run();
+        assert_eq!(fixed.values, steal.values);
+        assert_eq!(fixed.supersteps, steal.supersteps);
+        assert!(
+            steal.virtual_seconds <= fixed.virtual_seconds,
+            "steal {} vs fixed {}",
+            steal.virtual_seconds,
+            fixed.virtual_seconds
+        );
     }
 
     #[test]

@@ -70,6 +70,51 @@ impl VirtualMachine {
         }
     }
 
+    /// Re-price an already-charged region as if work-stealing had run
+    /// over it (see `sched/steal.rs`): drained workers claim whole items
+    /// from the most-loaded peer, so the makespan contracts toward the
+    /// ideal per-thread mean — floored by the largest indivisible item,
+    /// since a single shard never splits across thieves — plus the claim
+    /// traffic the steals add (`t_steal` per migrated item, amortised
+    /// across the team because thieves CAS concurrently). Refunds the
+    /// recovered time from the global clock and returns the adjusted
+    /// stats together with the estimated steal count.
+    pub fn steal_rebalance(
+        &mut self,
+        stats: RegionStats,
+        max_item: f64,
+        items: usize,
+        t_steal: f64,
+    ) -> (RegionStats, u64) {
+        if stats.makespan_ns <= 0.0 || items == 0 {
+            return (stats, 0);
+        }
+        let mean = stats.busy_ns / self.threads as f64;
+        let balanced = mean.max(max_item);
+        if balanced >= stats.makespan_ns {
+            return (stats, 0);
+        }
+        // Items that must migrate: the fraction of the region's time the
+        // original assignment stranded on overloaded workers, expressed
+        // in items. Deterministic — the real engine reports measured
+        // steal counts; the model only needs the same order of magnitude
+        // so the tuner's episode-length rule fires consistently.
+        let est = ((1.0 - balanced / stats.makespan_ns) * items as f64).ceil() as u64;
+        let makespan =
+            (balanced + est as f64 * t_steal / self.threads as f64).min(stats.makespan_ns);
+        self.clock_ns -= stats.makespan_ns - makespan;
+        let busy = stats.busy_ns + est as f64 * t_steal;
+        let mean = busy / self.threads as f64;
+        (
+            RegionStats {
+                makespan_ns: makespan,
+                imbalance: if mean > 0.0 { makespan / mean } else { 1.0 },
+                busy_ns: busy,
+            },
+            est,
+        )
+    }
+
     /// Charge a serial section (runs on one thread while others wait).
     pub fn serial(&mut self, ns: f64) {
         self.clock_ns += ns;
@@ -148,6 +193,34 @@ mod tests {
         let mut vm_big = VirtualMachine::new(8);
         let big = vm_big.region(Schedule::Dynamic { chunk: 256 }, &costs, None, 25.0);
         assert!(big.makespan_ns < small.makespan_ns);
+    }
+
+    #[test]
+    fn steal_rebalance_recovers_skew_but_not_below_the_largest_item() {
+        // One hot shard on a static split: stealing lets idle threads
+        // drain the rest, but the hot shard itself is indivisible.
+        let costs = vec![1000.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0];
+        let mut vm = VirtualMachine::new(4);
+        let st = vm.region(Schedule::Static, &costs, None, 0.0);
+        let before = vm.clock_ns;
+        let (re, steals) = vm.steal_rebalance(st, 1000.0, costs.len(), 6.0);
+        assert!(re.makespan_ns >= 1000.0, "floored by the hot shard");
+        assert!(re.makespan_ns < st.makespan_ns, "but strictly recovers");
+        assert!(steals > 0, "migration happened");
+        assert!(vm.clock_ns < before, "recovered time refunded");
+        assert!(re.imbalance <= st.imbalance + 1e-9);
+    }
+
+    #[test]
+    fn steal_rebalance_is_a_no_op_on_balanced_regions() {
+        let costs = vec![5.0; 64];
+        let mut vm = VirtualMachine::new(4);
+        let st = vm.region(Schedule::Static, &costs, None, 0.0);
+        let before = vm.clock_ns;
+        let (re, steals) = vm.steal_rebalance(st, 5.0, costs.len(), 6.0);
+        assert_eq!(steals, 0, "nothing to migrate");
+        assert!((re.makespan_ns - st.makespan_ns).abs() < 1e-9);
+        assert_eq!(vm.clock_ns, before);
     }
 
     #[test]

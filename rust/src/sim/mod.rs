@@ -59,6 +59,11 @@ pub struct CostModel {
     pub cas_retry_rate: f64,
     /// Claiming one FCFS chunk from the shared atomic counter.
     pub t_chunk_claim: f64,
+    /// Claiming one stolen work item from a peer's deque: a CAS on the
+    /// victim's top cursor plus the seq-cst fence the Chase-Lev protocol
+    /// needs (see `sched/steal.rs`). Priced between a bare CAS and a
+    /// chunk claim — the steal also drags the victim's cursor line over.
+    pub t_steal: f64,
     /// Storing one word (activation bit, outbox clear, list append).
     pub t_store: f64,
     /// Appending one message to a log-plane worker segment (payload
@@ -99,6 +104,7 @@ impl Default for CostModel {
             t_cas_retry: 3.5,
             cas_retry_rate: 0.25,
             t_chunk_claim: 13.0,
+            t_steal: 6.0,
             t_store: 1.0,
             t_log_append: 2.0,
             t_superstep_sync: 5_000.0,
@@ -137,6 +143,29 @@ impl CostModel {
         self.t_access_hit
             + Self::capacity_miss(ws_bytes, self.l2_bytes) * self.t_l2_miss
             + Self::capacity_miss(ws_bytes, self.llc_bytes) * self.t_miss
+    }
+
+    /// Fraction of the capacity-miss penalty hidden by a software
+    /// prefetch pipeline issuing `depth` slots ahead (the staged scatter
+    /// pipeline of `engine/core.rs`, DESIGN §2.9). Each in-flight
+    /// prefetch overlaps roughly one hit-time of useful work with the
+    /// outstanding miss, and coverage saturates smoothly below 1.0 —
+    /// the prefetch stream competes for the same bandwidth the demand
+    /// stream needs, so it can never hide the miss entirely (which also
+    /// keeps the layout orderings of §IV intact under any depth).
+    #[inline]
+    pub fn prefetch_cover(&self, depth: usize) -> f64 {
+        let ahead = depth as f64 * self.t_access_hit;
+        ahead / (ahead + self.t_miss)
+    }
+
+    /// [`Self::random_access`] under a prefetch pipeline of `depth`:
+    /// the hit term is untouched, the miss terms shrink by the coverage
+    /// fraction.
+    #[inline]
+    pub fn prefetched_access(&self, ws_bytes: f64, depth: usize) -> f64 {
+        let miss = self.random_access(ws_bytes) - self.t_access_hit;
+        self.t_access_hit + miss * (1.0 - self.prefetch_cover(depth))
     }
 
     /// Effective per-vertex hot-data stride for a layout: how many bytes
@@ -203,6 +232,24 @@ mod tests {
         assert!(m.miss_rate(1e6) <= m.miss_rate(1e8));
         assert!(m.miss_rate(1e6) < 0.05);
         assert!(m.miss_rate(1e10) > 0.9);
+    }
+
+    #[test]
+    fn prefetch_cover_deepens_monotonically_but_never_hides_everything() {
+        let m = CostModel::default();
+        assert_eq!(m.prefetch_cover(0), 0.0, "no pipeline, no cover");
+        assert!(m.prefetch_cover(4) < m.prefetch_cover(8));
+        assert!(m.prefetch_cover(8) < m.prefetch_cover(32));
+        assert!(m.prefetch_cover(1024) < 1.0, "bandwidth bound");
+        // A DRAM-bound working set stays more expensive than a resident
+        // one at every depth — prefetch discounts misses, it does not
+        // erase the layout/working-set distinctions the model is for.
+        let hot = 64.0 * 1024.0;
+        let cold = 1e9;
+        for d in [0, 8, 32] {
+            assert!(m.prefetched_access(cold, d) > m.prefetched_access(hot, d));
+        }
+        assert!(m.prefetched_access(cold, 8) < m.random_access(cold));
     }
 
     #[test]

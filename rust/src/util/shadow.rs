@@ -72,6 +72,10 @@ pub enum Site {
     SlotPeekScan = 6,
     CellGet = 7,
     CellGetMut = 8,
+    /// A work-stealing deque item's execution (`StealSet::mark_execute`):
+    /// each item must execute exactly once per phase, so a double claim
+    /// shows up as a same-phase write/write conflict.
+    StealItem = 9,
 }
 
 impl Site {
@@ -85,6 +89,7 @@ impl Site {
             6 => Site::SlotPeekScan,
             7 => Site::CellGet,
             8 => Site::CellGetMut,
+            9 => Site::StealItem,
             _ => Site::None,
         }
     }
@@ -100,6 +105,7 @@ impl Site {
             Site::SlotPeekScan => "MsgSlot::peek_scan",
             Site::CellGet => "SyncCell::get",
             Site::CellGetMut => "SyncCell::get_mut",
+            Site::StealItem => "StealSet::execute",
         }
     }
 }

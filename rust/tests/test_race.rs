@@ -90,6 +90,72 @@ fn seeded_cell_double_write_is_detected() {
 }
 
 #[test]
+fn seeded_deque_double_execution_is_detected() {
+    let _g = quiet();
+    shadow::sync_point();
+    // The only way the Chase-Lev protocol can fail is an item claimed
+    // twice in one phase; its shadow cell must turn that into a panic.
+    let set = Arc::new(ipregel::sched::StealSet::new(4, 2, None));
+    let (s1, s2) = (Arc::clone(&set), Arc::clone(&set));
+    assert!(
+        !spawned_panics(move || s1.mark_execute(1)),
+        "first execution is legal"
+    );
+    assert!(
+        spawned_panics(move || s2.mark_execute(1)),
+        "same-phase double execution of one item must panic"
+    );
+}
+
+#[test]
+fn steal_handoff_is_legal() {
+    let _g = quiet();
+    shadow::sync_point();
+    // Owner drains its own deque, a thief then claims the peer's items:
+    // every index executes exactly once, so the checker must stay silent
+    // even though two threads touch the set in the same phase.
+    let set = Arc::new(ipregel::sched::StealSet::new(8, 2, None)); // w0: 0..4, w1: 4..8
+    let a = Arc::clone(&set);
+    assert!(!spawned_panics(move || {
+        while let Some(i) = a.take(0) {
+            a.mark_execute(i);
+        }
+    }));
+    let b = Arc::clone(&set);
+    assert!(
+        !spawned_panics(move || {
+            while let Some(i) = b.steal_from(0, 1) {
+                b.mark_execute(i);
+            }
+        }),
+        "stolen items are exclusively owned — a handoff is not a race"
+    );
+    assert!(set.steals_total() > 0, "the thief did steal");
+}
+
+#[test]
+fn instrumented_steal_execute_is_race_free() {
+    let _g = quiet();
+    shadow::sync_point();
+    // Real contention: skewed weights force three near-empty workers to
+    // steal from the loaded one, with every execution shadow-tracked.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let n = 8192usize;
+    let mut w = vec![0u64; n];
+    for x in w.iter_mut().take(n / 8) {
+        *x = 1000;
+    }
+    let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let steals = ipregel::sched::steal_execute(4, n, Some(&w), 2, n, |_t, i| {
+        counts[i].fetch_add(1, Ordering::Relaxed);
+    });
+    for (i, c) in counts.iter().enumerate() {
+        assert_eq!(c.load(Ordering::Relaxed), 1, "item {i} executed once");
+    }
+    assert!(steals > 0, "the skew forced at least one steal");
+}
+
+#[test]
 fn lock_synchronised_writers_are_legal() {
     let _g = quiet();
     shadow::sync_point();
@@ -177,6 +243,17 @@ fn parity_grid_is_race_free_and_correct() {
             }
         }
     }
+
+    // Work-stealing dispatch under full instrumentation: whole shards
+    // may move between workers; per-item exclusivity must hold and the
+    // answers must not move.
+    let steal_cfg = EngineConfig::default()
+        .threads(4)
+        .shards(4)
+        .bypass(true)
+        .steal(true);
+    let sp = session.run_with(&sssp, RunOptions::new().config(steal_cfg));
+    assert_eq!(sp.values, sssp_want, "sssp under stealing");
 
     // Log-plane coverage: Lpa routes full message multisets through
     // MessageLog segments (SyncCell-backed, so fully instrumented).

@@ -1,0 +1,245 @@
+//! Memory-system pass acceptance suite (DESIGN.md §2.9).
+//!
+//! Three contracts:
+//!
+//! 1. **Bit-identity** — work-stealing shard execution and any prefetch
+//!    pipeline depth produce bit-identical values AND identical superstep
+//!    traces to the fixed dispatch, across the Strategy × Layout ×
+//!    Schedule × Partitioning grid. Stealing moves *whole shards* between
+//!    workers; owner-exclusivity inside a shard is untouched, so nothing
+//!    a program observes may change.
+//! 2. **Vector gather exactness** — pull-mode monoid combiners fold
+//!    through the lane-parallel gather of `combine::vector`; results must
+//!    equal a serial scalar fixpoint, and the lane counters must prove
+//!    the vector path actually ran.
+//! 3. **Stealing actually steals** — a seeded shard imbalance (all edge
+//!    weight in a few shards, scan work in many weightless ones) must
+//!    record at least one steal in `RunMetrics::steals`.
+
+use ipregel::algos::{ConnectedComponents, Sssp};
+use ipregel::combine::{MinCombiner, Strategy};
+use ipregel::engine::{
+    CombinedPlane, Context, EngineConfig, GraphSession, Mode, NoAgg, RunOptions, VertexProgram,
+};
+use ipregel::graph::csr::{Csr, VertexId};
+use ipregel::graph::{gen, GraphBuilder};
+use ipregel::layout::Layout;
+use ipregel::metrics::RunMetrics;
+use ipregel::sched::Schedule;
+
+fn assert_same_trace(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.num_supersteps(), b.num_supersteps(), "{what}: superstep count");
+    for (i, (x, y)) in a.supersteps.iter().zip(b.supersteps.iter()).enumerate() {
+        assert_eq!(
+            x.active_vertices, y.active_vertices,
+            "{what}: active count at superstep {i}"
+        );
+        assert_eq!(x.messages, y.messages, "{what}: messages at superstep {i}");
+    }
+    assert_eq!(a.halt_reason, b.halt_reason, "{what}: halt reason");
+}
+
+#[test]
+fn memory_pass_is_bit_identical_across_the_grid() {
+    let g = gen::rmat(8, 5, 0.57, 0.19, 0.19, 2);
+    let session = GraphSession::new(&g);
+    for &strategy in &[Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+        for &layout in &[Layout::Interleaved, Layout::Externalised] {
+            for &schedule in &[Schedule::Static, Schedule::EdgeCentric] {
+                for &shards in &[0usize, 3] {
+                    let base = EngineConfig::default()
+                        .threads(4)
+                        .strategy(strategy)
+                        .layout(layout)
+                        .schedule(schedule)
+                        .bypass(true)
+                        .shards(shards);
+                    // Every memory knob, alone and combined: stealing,
+                    // shallow and deep prefetch pipelines.
+                    let variants = [
+                        base.steal(true),
+                        base.pipeline_depth(1),
+                        base.pipeline_depth(64),
+                        base.steal(true).pipeline_depth(4),
+                    ];
+                    let p = Sssp::from_hub(&g);
+                    let cc_ref =
+                        session.run_with(&ConnectedComponents, RunOptions::new().config(base));
+                    let sssp_ref = session.run_with(&p, RunOptions::new().config(base));
+                    for v in variants {
+                        let what = format!("{v:?}");
+                        let cc =
+                            session.run_with(&ConnectedComponents, RunOptions::new().config(v));
+                        assert_eq!(cc.values, cc_ref.values, "cc values under {what}");
+                        assert_same_trace(
+                            &cc_ref.metrics,
+                            &cc.metrics,
+                            &format!("cc under {what}"),
+                        );
+                        let sp = session.run_with(&p, RunOptions::new().config(v));
+                        assert_eq!(sp.values, sssp_ref.values, "sssp values under {what}");
+                        assert_same_trace(
+                            &sssp_ref.metrics,
+                            &sp.metrics,
+                            &format!("sssp under {what}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pull-mode minimum-label propagation: the vector-gather workhorse.
+/// Every vertex converges to the smallest label reachable along reverse
+/// edges — exact integer min, so any fold order gives the same bits.
+struct PullMinLabel;
+
+impl VertexProgram for PullMinLabel {
+    type Value = u64;
+    type Message = u64;
+    type Comb = MinCombiner;
+    type Agg = NoAgg;
+    type Delivery = CombinedPlane;
+
+    fn mode(&self) -> Mode {
+        Mode::Pull
+    }
+
+    fn combiner(&self) -> MinCombiner {
+        MinCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
+    }
+
+    fn init(&self, _g: &Csr, v: VertexId) -> u64 {
+        v as u64
+    }
+
+    fn compute<C: Context<u64, u64>>(&self, ctx: &mut C, msg: Option<u64>) {
+        let grew = if ctx.superstep() == 0 {
+            true
+        } else if let Some(m) = msg {
+            if m < *ctx.value() {
+                *ctx.value_mut() = m;
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        if grew {
+            let v = *ctx.value();
+            ctx.broadcast(v);
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// Serial fixpoint of the same propagation: repeatedly take the min of
+/// in-neighbour labels until nothing changes.
+fn pull_min_reference(g: &Csr) -> Vec<u64> {
+    let mut label: Vec<u64> = (0..g.num_vertices() as u64).collect();
+    loop {
+        let prev = label.clone();
+        let mut changed = false;
+        for v in g.vertices() {
+            if let Some(m) = g.in_neighbors(v).iter().map(|&s| prev[s as usize]).min() {
+                if m < label[v as usize] {
+                    label[v as usize] = m;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            return label;
+        }
+    }
+}
+
+#[test]
+fn vector_gather_matches_the_scalar_fixpoint_and_proves_it_ran() {
+    // Mean degree 16: plenty of in-rows past VECTOR_GATHER_MIN, so the
+    // lane-parallel gather engages on most vertices.
+    let g = gen::rmat(9, 16, 0.57, 0.19, 0.19, 11);
+    let want = pull_min_reference(&g);
+    let session = GraphSession::new(&g);
+    let mut traces: Vec<RunMetrics> = Vec::new();
+    for cfg in [
+        EngineConfig::default().threads(4),
+        EngineConfig::default().threads(4).pipeline_depth(2),
+        EngineConfig::default().threads(4).shards(4).steal(true),
+        EngineConfig::default().threads(1),
+    ] {
+        let r = session.run_with(&PullMinLabel, RunOptions::new().config(cfg));
+        assert_eq!(r.values, want, "pull-min under {cfg:?}");
+        assert!(
+            r.metrics.vector_lanes_scanned > 0,
+            "vector gather must actually run under {cfg:?}"
+        );
+        assert!(
+            r.metrics.vector_lanes_useful <= r.metrics.vector_lanes_scanned,
+            "utilisation is a fraction under {cfg:?}"
+        );
+        traces.push(r.metrics);
+    }
+    for t in &traces[1..] {
+        assert_same_trace(&traces[0], t, "pull-min config sweep");
+        assert_eq!(
+            t.vector_lanes_scanned, traces[0].vector_lanes_scanned,
+            "lane accounting is schedule-independent"
+        );
+    }
+}
+
+#[test]
+fn seeded_shard_imbalance_forces_steals_and_metrics_record_them() {
+    // 64 rings of 64 vertices hold ALL the edge weight in the first 4 of
+    // 64 shards; 60 shards of isolated vertices carry scan work but zero
+    // weight. Weight-balanced cuts therefore strand the weightless
+    // shards on one worker, whose peers drain their single heavy shard
+    // and must steal. 65 536 active vertices at superstep 0 clears the
+    // serial cutoff, so the stealing path genuinely engages.
+    let n = 65_536usize;
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for r in 0..64u32 {
+        let base = r * 64;
+        for i in 0..64u32 {
+            edges.push((base + i, base + (i + 1) % 64));
+        }
+    }
+    let g = GraphBuilder::new(n).symmetric(true).edges(&edges).build();
+    let fixed_cfg = EngineConfig::default().threads(4).shards(64);
+    let steal_cfg = fixed_cfg.steal(true);
+    let session = GraphSession::new(&g);
+    let fixed = session.run_with(&ConnectedComponents, RunOptions::new().config(fixed_cfg));
+    let stolen = session.run_with(&ConnectedComponents, RunOptions::new().config(steal_cfg));
+    assert_eq!(stolen.values, fixed.values, "stealing never changes answers");
+    assert_same_trace(&fixed.metrics, &stolen.metrics, "seeded imbalance cc");
+    assert_eq!(fixed.metrics.steals, 0, "fixed dispatch records no steals");
+    assert!(
+        stolen.metrics.steals >= 1,
+        "seeded imbalance must migrate at least one shard (got {})",
+        stolen.metrics.steals
+    );
+}
+
+#[test]
+fn flat_runs_ignore_the_steal_flag_and_record_zero() {
+    // Stealing dispatches shards; without a partition plan there is
+    // nothing to steal and the flag must be inert.
+    let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 3);
+    let session = GraphSession::new(&g);
+    let base = EngineConfig::default().threads(4).bypass(true);
+    let a = session.run_with(&ConnectedComponents, RunOptions::new().config(base));
+    let b = session.run_with(
+        &ConnectedComponents,
+        RunOptions::new().config(base.steal(true)),
+    );
+    assert_eq!(a.values, b.values);
+    assert_same_trace(&a.metrics, &b.metrics, "flat steal flag");
+    assert_eq!(b.metrics.steals, 0);
+}

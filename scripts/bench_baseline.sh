@@ -26,9 +26,10 @@ reuse_for() {
     bench_partition) echo "${BENCH_PARTITION_JSON:-}" ;;
     bench_dynamic) echo "${BENCH_DYNAMIC_JSON:-}" ;;
     bench_adaptive) echo "${BENCH_ADAPTIVE_JSON:-}" ;;
+    bench_scatter) echo "${BENCH_SCATTER_JSON:-}" ;;
   esac
 }
-for bench in bench_table2 bench_partition bench_dynamic bench_adaptive; do
+for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter; do
   reuse="$(reuse_for "$bench")"
   if [ -n "$reuse" ] && [ -f "$reuse" ]; then
     echo "== $bench (reusing $reuse) ==" >&2
@@ -46,7 +47,7 @@ done
   echo "  \"rustc\": \"$(rustc --version)\","
   echo "  \"smoke\": true,"
   first=1
-  for bench in bench_table2 bench_partition bench_dynamic bench_adaptive; do
+  for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter; do
     [ "$first" = 1 ] || echo ','
     first=0
     printf '  "%s": ' "$bench"
