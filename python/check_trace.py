@@ -1,0 +1,39 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file emitted by `ipregel run
+--trace-out` (see DESIGN.md §2.10): parseable JSON, the shapes Perfetto
+expects, and per-lane span sanity. Exits non-zero on the first failure.
+
+Usage: python3 python/check_trace.py TRACE.json
+"""
+import json
+import sys
+
+
+def check(path):
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    assert isinstance(events, list) and events, "empty traceEvents"
+    phases = {e["ph"] for e in events}
+    assert phases <= {"X", "i", "C", "M"}, f"unexpected phases {phases}"
+    assert all(e.get("pid") == 1 for e in events), "single-process trace"
+    names = {e["args"]["name"] for e in events if e["ph"] == "M"}
+    assert "ipregel run" in names and "engine" in names, f"metadata lanes: {names}"
+    spans = [e for e in events if e["ph"] == "X"]
+    assert spans, "no spans"
+    for e in spans:
+        assert e["dur"] >= 0 and e["ts"] >= 0, f"negative time in {e}"
+        assert e["cat"] in ("phase", "shard"), f"bad span category {e}"
+        assert "superstep" in e["args"], f"span without superstep {e}"
+    for e in (e for e in events if e["ph"] == "i"):
+        assert e["s"] == "t", f"instants are thread-scoped, got {e}"
+    counters = {e["name"] for e in events if e["ph"] == "C"}
+    assert counters == {"shard-skew", "contention", "messages"} or not counters, counters
+    return len(events)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        sys.exit(__doc__)
+    n = check(sys.argv[1])
+    print(f"{sys.argv[1]}: OK ({n} events)")

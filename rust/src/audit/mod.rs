@@ -38,7 +38,7 @@ const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", 
 
 /// Files subject to the no-panic rule (rule 4): the per-message scatter,
 /// deliver and collect paths plus the substrate they run on.
-const PANIC_DENY: [&str; 13] = [
+const PANIC_DENY: [&str; 14] = [
     "src/engine/core.rs",
     "src/engine/shard.rs",
     "src/combine/strategy.rs",
@@ -52,6 +52,7 @@ const PANIC_DENY: [&str; 13] = [
     "src/layout/store.rs",
     "src/sched/pool.rs",
     "src/sched/steal.rs",
+    "src/trace/buf.rs",
 ];
 
 /// Which invariant a diagnostic belongs to.

@@ -42,6 +42,17 @@ impl ContentionProbe {
             self.lock_contended.swap(0, Ordering::Relaxed),
         )
     }
+
+    /// Read both counters without draining them, returning
+    /// `(cas_retries, lock_contended)`. The observability plane samples
+    /// the tuner's probes at each barrier *before* `observe` drains
+    /// them, so tracing never perturbs the signals the tuner acts on.
+    pub fn peek(&self) -> (u64, u64) {
+        (
+            self.cas_retries.load(Ordering::Relaxed),
+            self.lock_contended.load(Ordering::Relaxed),
+        )
+    }
 }
 
 /// Acquire `lock`, counting a contended acquisition into `probe`.

@@ -52,7 +52,8 @@ use crate::graph::csr::{Csr, EdgeWeight, VertexId};
 use crate::graph::partition::PartitionPlan;
 use crate::layout::{SyncCell, VertexStore};
 use crate::metrics::{DeliveryPlaneKind, HaltReason, RunMetrics, ScheduleFallback, SuperstepStats};
-use crate::sched::{parallel_for, parallel_for_hinted, steal_execute, Schedule};
+use crate::sched::{parallel_for, parallel_for_hinted, steal_execute_tagged, Schedule};
+use crate::trace::{BarrierSignals, InstantKind, Phase, TraceBuffers};
 use crate::util::bitset::{AtomicBitSet, BitSet};
 use crate::util::timer::Timer;
 use crate::util::CachePadded;
@@ -85,6 +86,10 @@ pub(crate) struct EngineSetup<S, M: MessageValue> {
     /// recomputed from each superstep's active list, but the vector they
     /// land in is session-owned, so the fallback stops allocating.
     pub cut_scratch: Vec<u64>,
+    /// Observability-plane recorder (`None` when the run is untraced or
+    /// the `no-trace` feature is on), pooled by the session like tuner
+    /// state — see `trace/buf.rs`.
+    pub trace: Option<TraceBuffers>,
 }
 
 /// The engine: graph + program + store + activity tracking.
@@ -125,6 +130,11 @@ pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     tuner: Option<AdaptiveTuner>,
     /// Pooled edge-centric rebuild scratch (see [`EngineSetup`]).
     cut_scratch: Vec<u64>,
+    /// Observability-plane recorder (None = untraced run). Recording
+    /// sites sit behind `if let Some(..)` so untraced runs pay one
+    /// branch per phase, and the `no-trace` feature makes this constant
+    /// `None` so those sites are statically dead.
+    trace: Option<TraceBuffers>,
 }
 
 /// Shard routing for one vertex's context during partitioned scatter:
@@ -481,6 +491,43 @@ fn adaptive_step(
     Some(step)
 }
 
+/// Non-destructive sum over a probe array — the trace plane samples the
+/// tuner's probes at the barrier *before* its draining `observe`, so
+/// tracing never perturbs the signals the tuner acts on.
+fn sum_probe_peeks(probes: &[CachePadded<ContentionProbe>]) -> (u64, u64) {
+    let mut cas = 0u64;
+    let mut lock = 0u64;
+    for p in probes {
+        let (c, l) = p.peek();
+        cas += c;
+        lock += l;
+    }
+    (cas, lock)
+}
+
+/// Messages per receiving vertex this superstep (0.0 when nothing was
+/// delivered — log-plane runs count fan-in at the merge instead).
+fn fan_in_ratio(messages: u64, delivered: u64) -> f64 {
+    if delivered > 0 {
+        messages as f64 / delivered as f64
+    } else {
+        0.0
+    }
+}
+
+/// Rendered `schedule/strategy/iteration` triple of a superstep's
+/// [`StepPlan`] — the label carried by the trace plane's tuner-decision
+/// instants (one per executed superstep on adaptive runs). Shared with
+/// the simulator so real and virtual traces agree on labels.
+pub(crate) fn step_mode_label(step: &StepPlan) -> String {
+    format!(
+        "{:?}/{:?}/{}",
+        step.schedule,
+        step.strategy,
+        if step.bypass { "list" } else { "scan" }
+    )
+}
+
 /// One-time stderr note for the documented EdgeCentric + bypass
 /// fallback (see [`Schedule::EdgeCentric`] and
 /// [`ScheduleFallback::EdgeCentricBypassRebuild`]).
@@ -520,6 +567,7 @@ where
             log,
             tuner,
             cut_scratch,
+            trace,
         } = setup;
         let comb = program.combiner();
         let agg = program.aggregator();
@@ -594,6 +642,7 @@ where
             log,
             tuner,
             cut_scratch,
+            trace,
         }
     }
 
@@ -608,6 +657,7 @@ where
         Option<MessageLog<P::Message>>,
         Option<TunerState>,
         Vec<u64>,
+        Option<TraceBuffers>,
     ) {
         (
             self.store,
@@ -616,6 +666,7 @@ where
             self.log,
             self.tuner.map(AdaptiveTuner::into_state),
             self.cut_scratch,
+            self.trace,
         )
     }
 
@@ -838,6 +889,15 @@ where
         if let Some(t) = self.tuner.as_mut() {
             metrics.tuner_decisions = t.take_trace();
         }
+        if let Some(tr) = self.trace.as_mut() {
+            // Harvest the observability plane: the finished event trace
+            // and the measured per-shard timing vector (the engine's
+            // answer to the paper's NUMA-placement question — where did
+            // the time actually go, shard by shard).
+            let (trace, shard_times) = tr.take_run();
+            metrics.shard_times = shard_times;
+            metrics.trace = Some(trace);
+        }
 
         metrics.total_time = total.elapsed();
         let values = self
@@ -893,6 +953,17 @@ where
                 None => StepPlan::of(&self.cfg),
             };
             let depth = step.effective_pipeline_depth();
+            if self.tuner.is_some() {
+                if let Some(tr) = self.trace.as_ref() {
+                    tr.instant(
+                        tr.engine_lane(),
+                        superstep,
+                        InstantKind::TunerDecision {
+                            mode: step_mode_label(&step),
+                        },
+                    );
+                }
+            }
 
             // ---- Snapshot this superstep's active set -------------------
             let active_list: Option<Vec<VertexId>> = if step.bypass {
@@ -927,6 +998,7 @@ where
 
             // ---- Compute phase -----------------------------------------
             let t_compute = Timer::start();
+            let c0 = self.trace.as_ref().map(|tr| tr.now_ns());
             {
                 let engine = &self;
                 let counters = &counters;
@@ -954,7 +1026,16 @@ where
                 let agg_cells = &agg_cells;
                 let agg_prev_now = self.agg_prev.as_ref();
                 let log_ref = self.log.as_ref();
-                let probes = self.tuner.as_ref().map(|t| t.probes());
+                let trace_ref = self.trace.as_ref();
+                // Traced non-adaptive runs route delivery through the
+                // trace plane's own probes so contention is measured
+                // either way (`deliver_probed` only counts — values stay
+                // bit-identical to the probe-free path).
+                let probes = self
+                    .tuner
+                    .as_ref()
+                    .map(|t| t.probes())
+                    .or_else(|| trace_ref.map(|tr| tr.probes()));
                 let delivered_counter = &delivered_counter;
                 let lanes = &lane_counters;
                 let run_vertex = |tid: usize, v: VertexId| {
@@ -997,9 +1078,13 @@ where
                             step.schedule,
                             bypass_weights,
                             |tid, range| {
+                                let t0 = trace_ref.map(|tr| tr.now_ns());
                                 for i in range {
                                     engine.prefetch_row(list.get(i + depth));
                                     run_vertex(tid, list[i]);
+                                }
+                                if let (Some(tr), Some(t0)) = (trace_ref, t0) {
+                                    tr.span(tid, superstep_now, Phase::Compute, None, t0, tr.now_ns());
                                 }
                             },
                         );
@@ -1013,10 +1098,14 @@ where
                             step.schedule,
                             self.scan_weights.as_ref().map(|w| w.as_slice()),
                             |tid, range| {
+                                let t0 = trace_ref.map(|tr| tr.now_ns());
                                 for i in range {
                                     if bits.get(i) {
                                         run_vertex(tid, i as VertexId);
                                     }
+                                }
+                                if let (Some(tr), Some(t0)) = (trace_ref, t0) {
+                                    tr.span(tid, superstep_now, Phase::Compute, None, t0, tr.now_ns());
                                 }
                             },
                         );
@@ -1025,9 +1114,13 @@ where
                 }
             }
             let compute_time = t_compute.elapsed();
+            if let (Some(tr), Some(c0)) = (self.trace.as_ref(), c0) {
+                tr.span(tr.engine_lane(), superstep, Phase::Compute, None, c0, tr.now_ns());
+            }
 
             // ---- Barrier phase -----------------------------------------
             let t_barrier = Timer::start();
+            let b0 = self.trace.as_ref().map(|tr| tr.now_ns());
             if self.mode == Mode::Pull {
                 // Clear outboxes consumed this superstep, then rotate the
                 // broadcaster sets.
@@ -1045,6 +1138,9 @@ where
             self.store.swap_epochs();
             let converged = self.merge_aggregators(&agg_cells, &neutral);
             let barrier_time = t_barrier.elapsed();
+            if let (Some(tr), Some(b0)) = (self.trace.as_ref(), b0) {
+                tr.span(tr.engine_lane(), superstep, Phase::Barrier, None, b0, tr.now_ns());
+            }
 
             let messages = counters
                 .iter()
@@ -1056,6 +1152,22 @@ where
             let (lanes_scanned, lanes_useful) = lane_counters.take();
             metrics.vector_lanes_scanned += lanes_scanned;
             metrics.vector_lanes_useful += lanes_useful;
+            if let Some(tr) = self.trace.as_mut() {
+                // Seal the superstep's events before `observe` drains the
+                // probes the sample reads (peeked, so the tuner still
+                // sees the full counts — decisions stay bit-identical).
+                let (cas_retries, lock_contended) = match self.tuner.as_ref() {
+                    Some(t) => sum_probe_peeks(t.probes()),
+                    None => tr.take_probe_counts(),
+                };
+                tr.drain_barrier(BarrierSignals {
+                    superstep,
+                    fan_in: fan_in_ratio(messages, delivered_step),
+                    cas_retries,
+                    lock_contended,
+                    lane_utilisation: LaneCounters::ratio(lanes_scanned, lanes_useful),
+                });
+            }
             if let Some(t) = self.tuner.as_mut() {
                 // Flat runs have no flush phase or shard deques: imbalance
                 // is neutral and steals are zero by construction.
@@ -1138,6 +1250,17 @@ where
             let shard_sched = step.schedule.for_shards();
             let depth = step.effective_pipeline_depth();
             let mut steals_step = 0u64;
+            if self.tuner.is_some() {
+                if let Some(tr) = self.trace.as_ref() {
+                    tr.instant(
+                        tr.engine_lane(),
+                        superstep,
+                        InstantKind::TunerDecision {
+                            mode: step_mode_label(&step),
+                        },
+                    );
+                }
+            }
 
             // ---- Snapshot each shard's active set ----------------------
             let shard_lists: Option<Vec<Vec<VertexId>>> = if step.bypass {
@@ -1199,6 +1322,7 @@ where
 
             // ---- Scatter phase -----------------------------------------
             let t_scatter = Timer::start();
+            let s0 = self.trace.as_ref().map(|tr| tr.now_ns());
             {
                 let engine = &self;
                 let part_ref = &part;
@@ -1211,7 +1335,14 @@ where
 
                 let plan: &PartitionPlan = &part_ref.plan;
                 let log_ref = self.log.as_ref();
-                let probes = self.tuner.as_ref().map(|t| t.probes());
+                let trace_ref = self.trace.as_ref();
+                // As in run_flat: traced non-adaptive runs measure
+                // contention through the trace plane's own probes.
+                let probes = self
+                    .tuner
+                    .as_ref()
+                    .map(|t| t.probes())
+                    .or_else(|| trace_ref.map(|tr| tr.probes()));
                 let delivered_counter = &delivered_counter;
                 let lanes = &lane_counters;
                 let run_vertex = |tid: usize, shard: usize, v: VertexId| {
@@ -1257,7 +1388,13 @@ where
 
                 let shard_lists = &shard_lists;
                 let shard_scans = &shard_scans;
-                let scatter_shard = |tid: usize, s: usize| {
+                let scatter_shard = |tid: usize, s: usize, stolen: bool| {
+                    if stolen {
+                        if let Some(tr) = trace_ref {
+                            tr.instant(tid, superstep_now, InstantKind::Steal { shard: s as u32 });
+                        }
+                    }
+                    let t0 = trace_ref.map(|tr| tr.now_ns());
                     match (shard_lists, shard_scans) {
                         (Some(lists), _) => {
                             // Dense per-shard list: prefetch the CSR row
@@ -1284,6 +1421,16 @@ where
                         }
                         _ => unreachable!(),
                     }
+                    if let (Some(tr), Some(t0)) = (trace_ref, t0) {
+                        tr.span(
+                            tid,
+                            superstep_now,
+                            Phase::Scatter,
+                            Some((s as u32, stolen)),
+                            t0,
+                            tr.now_ns(),
+                        );
+                    }
                 };
                 if self.cfg.steal {
                     // Work-stealing dispatch (DESIGN.md §2.9): shards seed
@@ -1291,8 +1438,10 @@ where
                     // weights exist — and a drained worker steals from the
                     // most-loaded peer instead of idling at the flush
                     // barrier. Intra-shard owner exclusivity is preserved:
-                    // a stolen shard runs on exactly one worker.
-                    steals_step += steal_execute(
+                    // a stolen shard runs on exactly one worker. The
+                    // tagged variant tells the body which shards migrated
+                    // so the trace can attribute them.
+                    steals_step += steal_execute_tagged(
                         threads,
                         n_shards,
                         scatter_weights,
@@ -1309,18 +1458,22 @@ where
                         active_count,
                         |tid, shard_range| {
                             for s in shard_range {
-                                scatter_shard(tid, s);
+                                scatter_shard(tid, s, false);
                             }
                         },
                     );
                 }
             }
             let compute_time = t_scatter.elapsed();
+            if let (Some(tr), Some(s0)) = (self.trace.as_ref(), s0) {
+                tr.span(tr.engine_lane(), superstep, Phase::Scatter, None, s0, tr.now_ns());
+            }
 
             // ---- Flush phase: drain remote buffers shard-at-a-time -----
             // (Push mode only — pull never writes a remote buffer, so
             // skip even the pending scan on pull workloads.)
             let t_flush = Timer::start();
+            let f0 = self.trace.as_ref().map(|tr| tr.now_ns());
             let flush_weights: Option<Vec<u64>> = if self.mode == Mode::Push {
                 Some(part.buffers.pending_weights())
             } else {
@@ -1345,11 +1498,19 @@ where
                 let engine = &self;
                 let part_ref = &part;
                 let log_ref = self.log.as_ref();
+                let trace_ref = self.trace.as_ref();
+                let superstep_now = superstep;
                 // audit:allow(panic): phase invariant — `cross_pending`
                 // is only non-zero in push mode, which always builds
                 // flush weights at superstep start.
                 let weights = flush_weights.as_ref().expect("push mode");
-                let flush_shard = |tid: usize, d: usize| {
+                let flush_shard = |tid: usize, d: usize, stolen: bool| {
+                    if stolen {
+                        if let Some(tr) = trace_ref {
+                            tr.instant(tid, superstep_now, InstantKind::Steal { shard: d as u32 });
+                        }
+                    }
+                    let t0 = trace_ref.map(|tr| tr.now_ns());
                     part_ref.buffers.drain_for(d, |(dst, bits)| {
                         let m = <P::Message as MessageValue>::from_bits(bits);
                         match log_ref {
@@ -1369,12 +1530,22 @@ where
                         }
                         part_ref.active.set_in(d, dst as usize);
                     });
+                    if let (Some(tr), Some(t0)) = (trace_ref, t0) {
+                        tr.span(
+                            tid,
+                            superstep_now,
+                            Phase::Flush,
+                            Some((d as u32, stolen)),
+                            t0,
+                            tr.now_ns(),
+                        );
+                    }
                 };
                 if self.cfg.steal {
                     // Stealing drains destination shards too: the pending
                     // counts seed the deques, so a worker stuck behind one
                     // hot destination hands its remaining shards to peers.
-                    steals_step += steal_execute(
+                    steals_step += steal_execute_tagged(
                         threads,
                         n_shards,
                         Some(weights.as_slice()),
@@ -1395,16 +1566,20 @@ where
                         cross_pending as usize,
                         |tid, shard_range| {
                             for d in shard_range {
-                                flush_shard(tid, d);
+                                flush_shard(tid, d, false);
                             }
                         },
                     );
                 }
             }
             let flush_time = t_flush.elapsed();
+            if let (Some(tr), Some(f0)) = (self.trace.as_ref(), f0) {
+                tr.span(tr.engine_lane(), superstep, Phase::Flush, None, f0, tr.now_ns());
+            }
 
             // ---- Apply phase (barrier) ---------------------------------
             let t_apply = Timer::start();
+            let a0 = self.trace.as_ref().map(|tr| tr.now_ns());
             if self.mode == Mode::Pull {
                 for v in part.bcast_cur.iter_all() {
                     self.store.cur_slot(v).clear();
@@ -1418,6 +1593,9 @@ where
             self.store.swap_epochs();
             let converged = self.merge_aggregators(&agg_cells, &neutral);
             let barrier_time = t_apply.elapsed();
+            if let (Some(tr), Some(a0)) = (self.trace.as_ref(), a0) {
+                tr.span(tr.engine_lane(), superstep, Phase::Apply, None, a0, tr.now_ns());
+            }
 
             let messages = counters
                 .iter()
@@ -1433,6 +1611,21 @@ where
             let (lanes_scanned, lanes_useful) = lane_counters.take();
             metrics.vector_lanes_scanned += lanes_scanned;
             metrics.vector_lanes_useful += lanes_useful;
+            if let Some(tr) = self.trace.as_mut() {
+                // Seal the superstep before `observe` drains the probes
+                // (see run_flat — peeks keep the tuner's view intact).
+                let (cas_retries, lock_contended) = match self.tuner.as_ref() {
+                    Some(t) => sum_probe_peeks(t.probes()),
+                    None => tr.take_probe_counts(),
+                };
+                tr.drain_barrier(BarrierSignals {
+                    superstep,
+                    fan_in: fan_in_ratio(messages, delivered_step),
+                    cas_retries,
+                    lock_contended,
+                    lane_utilisation: LaneCounters::ratio(lanes_scanned, lanes_useful),
+                });
+            }
             if let Some(t) = self.tuner.as_mut() {
                 t.observe(
                     messages,

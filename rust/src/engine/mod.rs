@@ -236,6 +236,16 @@ pub struct EngineConfig {
     pub pipeline_depth: usize,
     /// Safety cap on supersteps.
     pub max_supersteps: usize,
+    /// Record an execution trace ([`crate::trace`]): per-worker phase
+    /// spans, per-shard spans with steal attribution, tuner/steal/epoch
+    /// instants and per-superstep irregularity samples, attached to
+    /// [`RunMetrics::trace`] and rendered by `--trace-summary` /
+    /// `--trace-out`. Off (the default) costs nothing on the hot path;
+    /// the `no-trace` feature compiles the recording out entirely.
+    /// Values and superstep traces are bit-identical either way.
+    ///
+    /// [`RunMetrics::trace`]: crate::metrics::RunMetrics::trace
+    pub trace: bool,
 }
 
 impl Default for EngineConfig {
@@ -251,6 +261,7 @@ impl Default for EngineConfig {
             steal: false,
             pipeline_depth: 0,
             max_supersteps: 100_000,
+            trace: false,
         }
     }
 }
@@ -318,6 +329,11 @@ impl EngineConfig {
     /// Cap the number of supersteps.
     pub fn max_supersteps(mut self, n: usize) -> Self {
         self.max_supersteps = n;
+        self
+    }
+    /// Enable/disable execution tracing ([`crate::trace`]).
+    pub fn trace(mut self, t: bool) -> Self {
+        self.trace = t;
         self
     }
 }

@@ -41,6 +41,7 @@ use crate::graph::csr::{Csr, VertexId};
 use crate::graph::dynamic::{DynamicGraph, MutationReceipt, MutationSet};
 use crate::graph::partition::PartitionPlan;
 use crate::layout::{AosStore, Layout, SoaStore, VertexStore};
+use crate::trace::TraceBuffers;
 use crate::util::bitset::AtomicBitSet;
 use crate::util::error::Result;
 use crate::bail;
@@ -237,6 +238,11 @@ pub struct GraphSession<'g> {
     /// superstep, but the vector they land in is recycled here instead
     /// of reallocated per superstep (pooled like stores/planes).
     cut_scratches: Mutex<Vec<Vec<u64>>>,
+    /// Pooled observability-plane recorders (per-lane event segments +
+    /// contention probes), recycled across traced runs like tuner state.
+    /// Always empty under the `no-trace` feature (checkout returns
+    /// `None`, so nothing is ever handed back).
+    traces: Mutex<Vec<TraceBuffers>>,
     runs: AtomicU64,
 }
 
@@ -277,6 +283,7 @@ impl<'g> GraphSession<'g> {
             planes: Mutex::new(HashMap::new()),
             tuners: Mutex::new(Vec::new()),
             cut_scratches: Mutex::new(Vec::new()),
+            traces: Mutex::new(Vec::new()),
             runs: AtomicU64::new(0),
         }
     }
@@ -372,6 +379,12 @@ impl<'g> GraphSession<'g> {
     /// pool (diagnostic).
     pub fn pooled_tuners(&self) -> usize {
         self.tuners.lock().expect("tuner pool poisoned").len()
+    }
+
+    /// Number of observability-plane recorders currently parked in the
+    /// pool (diagnostic; always 0 under the `no-trace` feature).
+    pub fn pooled_traces(&self) -> usize {
+        self.traces.lock().expect("trace pool poisoned").len()
     }
 
     /// The partition plan for `shards` shards, built on first use and
@@ -618,6 +631,17 @@ impl<'g> GraphSession<'g> {
             .pop()
             .unwrap_or_default();
 
+        // ---- Observability plane: pool the recorder like tuner state ---
+        // (`checkout` resets segments/probes and re-stamps the clock; it
+        // is the `no-trace` feature's compile-out gate and returns `None`
+        // there, so the pool never grows.)
+        let trace = if cfg.trace {
+            let pooled = self.traces.lock().expect("trace pool poisoned").pop();
+            TraceBuffers::checkout(pooled, cfg.threads.max(1))
+        } else {
+            None
+        };
+
         let mut engine = Engine::with_setup(
             g,
             program,
@@ -632,6 +656,7 @@ impl<'g> GraphSession<'g> {
                 log,
                 tuner,
                 cut_scratch,
+                trace,
             },
         );
         let mut result = engine.run();
@@ -641,9 +666,16 @@ impl<'g> GraphSession<'g> {
         result.metrics.store_epoch_refreshed = store_epoch_refreshed;
         result.metrics.plane_reused = log_reused;
         result.metrics.tuner_reused = tuner_reused;
+        if let Some(tr) = result.metrics.trace.as_mut() {
+            // Stamp the graph's mutation state onto the timeline — the
+            // session owns that knowledge (mutation is a between-runs
+            // affair the engine never sees).
+            tr.note_epoch(graph_epoch, g.delta_edge_count() as u64);
+        }
 
         // ---- Return the parts to the pools -----------------------------
-        let (store, bitsets, shard_state, log, tuner_state, cut_scratch) = engine.into_parts();
+        let (store, bitsets, shard_state, log, tuner_state, cut_scratch, trace_buf) =
+            engine.into_parts();
         self.stores
             .lock()
             .expect("store pool poisoned")
@@ -673,6 +705,9 @@ impl<'g> GraphSession<'g> {
             .lock()
             .expect("scratch pool poisoned")
             .push(cut_scratch);
+        if let Some(tb) = trace_buf {
+            self.traces.lock().expect("trace pool poisoned").push(tb);
+        }
         self.runs.fetch_add(1, Ordering::Relaxed);
         result
     }

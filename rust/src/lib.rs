@@ -51,6 +51,12 @@
 //!   paper-analogue catalog;
 //! - a calibrated virtual-testbed simulator ([`sim`]) reproducing the
 //!   paper's 32-thread results on this single-core machine;
+//! - an **irregularity observability plane** ([`trace`]): per-worker
+//!   phase timelines, per-shard spans with steal attribution,
+//!   per-superstep skew/contention/fan-in samples, exported as Chrome
+//!   trace-event JSON (`--trace-out`, Perfetto-loadable) or a terminal
+//!   summary (`--trace-summary`) — emitted identically by the real
+//!   engine and the simulator's virtual clock;
 //! - a PJRT runtime ([`runtime`]) executing AOT-compiled JAX/Pallas
 //!   superstep kernels for the dense-block accelerated path (behind the
 //!   `pjrt` cargo feature; a stub otherwise);
@@ -68,6 +74,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 pub use engine::{EngineConfig, GraphSession, Halt, RunOptions, VertexProgram};

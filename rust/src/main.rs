@@ -17,6 +17,10 @@
 //!                   [--adaptive]  re-decide schedule/strategy/bypass each
 //!                                 superstep from live signals (prints the
 //!                                 per-switch decision trace)
+//!                   [--trace-summary]  per-superstep phase/skew histogram
+//!                              rendering of the observability plane
+//!                   [--trace-out FILE]  write the run's Chrome trace-event
+//!                              JSON (load in Perfetto / chrome://tracing)
 //!                   [--iterations N] [--source V] [--rounds R]
 //!                   (lpa and triangles are log-plane programs: full
 //!                    message multisets, no combiner — see DESIGN.md §2.6)
@@ -164,14 +168,46 @@ fn engine_cfg(opts: &Opts) -> Result<EngineConfig> {
         .steal(opts.flag("steal"))
         .pipeline_depth(opts.get_num("pipeline-depth", 0usize)?)
         .adaptive(opts.flag("adaptive"))
+        .trace(opts.flag("trace-summary") || opts.get("trace-out").is_some())
         .max_supersteps(opts.get_num("max-supersteps", 100_000usize)?))
 }
 
 const RUN_FLAGS: &[&str] = &[
     "algo", "threads", "schedule", "strategy", "layout", "bypass", "shards", "adaptive",
     "steal", "pipeline-depth", "iterations", "source", "rounds", "max-supersteps", "dir",
-    "mutate-batch", "mutate-rounds", "mutate-seed",
+    "mutate-batch", "mutate-rounds", "mutate-seed", "trace-summary", "trace-out",
 ];
+
+/// `--trace-summary` / `--trace-out FILE`, resolved once per `run`/`sim`.
+struct TraceSinks<'a> {
+    summary: bool,
+    out: Option<&'a Path>,
+}
+
+/// Render/write a finished [`ipregel::trace::RunTrace`] to the requested
+/// sinks. A `None` trace with sinks requested means the binary was built
+/// with `--features no-trace`; say so instead of silently dropping it.
+fn emit_trace(trace: Option<&ipregel::trace::RunTrace>, sinks: &TraceSinks<'_>) -> Result<()> {
+    let Some(tr) = trace else {
+        if sinks.summary || sinks.out.is_some() {
+            eprintln!("trace: no events recorded (built with --features no-trace?)");
+        }
+        return Ok(());
+    };
+    if sinks.summary {
+        print!("{}", ipregel::trace::render_summary(tr, 5));
+    }
+    if let Some(path) = sinks.out {
+        std::fs::write(path, ipregel::trace::chrome_trace_json(tr))
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        eprintln!(
+            "trace: wrote {} events to {} (load in Perfetto / chrome://tracing)",
+            tr.events.len(),
+            path.display()
+        );
+    }
+    Ok(())
+}
 
 fn print_run(label: &str, metrics: &RunMetrics) {
     println!("{label}: {}", metrics.summary());
@@ -217,9 +253,18 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
     let cfg = engine_cfg(opts)?;
     let algo = opts.get_or("algo", "pr");
 
+    let trace_out = opts.get("trace-out").map(PathBuf::from);
+    let sinks = TraceSinks {
+        summary: opts.flag("trace-summary"),
+        out: trace_out.as_deref(),
+    };
+
     if opts.get("mutate-batch").is_some() {
         if simulated {
             bail!("--mutate-batch drives the real engine; drop `sim`");
+        }
+        if sinks.summary || sinks.out.is_some() {
+            bail!("--trace-summary/--trace-out cover single runs; drop --mutate-batch");
         }
         let source = match opts.get("source") {
             Some(s) => Some(
@@ -246,8 +291,9 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
         cfg: EngineConfig,
         simulated: bool,
         label: &str,
+        sinks: &TraceSinks<'_>,
         show: impl Fn(&[P::Value]),
-    ) {
+    ) -> Result<()> {
         if simulated {
             let r = SimEngine::new(g, p, cfg).run();
             println!(
@@ -263,12 +309,15 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
             if !r.decisions.is_empty() {
                 print_tuner_trace(&r.decisions);
             }
+            emit_trace(r.trace.as_ref(), sinks)?;
             show(&r.values);
         } else {
             let r = GraphSession::with_config(g, cfg).run(p);
             print_run(label, &r.metrics);
+            emit_trace(r.metrics.trace.as_ref(), sinks)?;
             show(&r.values);
         }
+        Ok(())
     }
 
     match algo.as_str() {
@@ -277,7 +326,7 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
                 iterations: opts.get_num("iterations", 10usize)?,
                 damping: 0.85,
             };
-            go(&g, &p, cfg, simulated, "pagerank", |vals| {
+            go(&g, &p, cfg, simulated, "pagerank", &sinks, |vals| {
                 let mut idx: Vec<usize> = (0..vals.len()).collect();
                 idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
                 let top: Vec<String> = idx
@@ -286,20 +335,20 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
                     .map(|&v| format!("v{v}={:.3e}", vals[v]))
                     .collect();
                 println!("  top ranks: {}", top.join(" "));
-            });
+            })?;
         }
         "cc" => {
-            go(&g, &ConnectedComponents, cfg, simulated, "cc", |vals| {
+            go(&g, &ConnectedComponents, cfg, simulated, "cc", &sinks, |vals| {
                 let mut labels = vals.to_vec();
                 labels.sort_unstable();
                 labels.dedup();
                 println!("  components: {}", labels.len());
-            });
+            })?;
         }
         "sssp" => {
             let source = opts.get_num("source", g.max_out_degree_vertex())?;
             let p = Sssp { source };
-            go(&g, &p, cfg, simulated, "sssp", |vals| {
+            go(&g, &p, cfg, simulated, "sssp", &sinks, |vals| {
                 let reached = vals.iter().filter(|&&d| d != u64::MAX).count();
                 let ecc = vals
                     .iter()
@@ -308,38 +357,38 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
                     .copied()
                     .unwrap_or(0);
                 println!("  reached {reached} vertices, eccentricity {ecc}");
-            });
+            })?;
         }
         "bfs" => {
             let root = opts.get_num("source", g.max_out_degree_vertex())?;
             let p = Bfs { root };
-            go(&g, &p, cfg, simulated, "bfs", |vals| {
+            go(&g, &p, cfg, simulated, "bfs", &sinks, |vals| {
                 let reached = vals.iter().filter(|s| s.level != u32::MAX).count();
                 println!("  reached {reached} vertices");
-            });
+            })?;
         }
         "wsssp" | "weighted-sssp" => {
             let source = opts.get_num("source", g.max_out_degree_vertex())?;
             let p = WeightedSssp { source };
-            go(&g, &p, cfg, simulated, "weighted-sssp", |vals| {
+            go(&g, &p, cfg, simulated, "weighted-sssp", &sinks, |vals| {
                 let reached = vals.iter().filter(|d| d.is_finite()).count();
                 let ecc = vals
                     .iter()
                     .filter(|d| d.is_finite())
                     .fold(0.0f64, |a, &b| a.max(b));
                 println!("  reached {reached} vertices, weighted eccentricity {ecc:.3}");
-            });
+            })?;
         }
         "lpa" | "label-propagation" => {
             let p = Lpa {
                 rounds: opts.get_num("rounds", Lpa::default().rounds)?,
             };
-            go(&g, &p, cfg, simulated, "lpa", |vals| {
+            go(&g, &p, cfg, simulated, "lpa", &sinks, |vals| {
                 let mut labels = vals.to_vec();
                 labels.sort_unstable();
                 labels.dedup();
                 println!("  communities: {}", labels.len());
-            });
+            })?;
         }
         "triangles" | "tc" => {
             // Triangles requires a simple undirected graph; catalog
@@ -358,7 +407,7 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
                  (|E|={} directed edges)",
                 g.num_edges()
             );
-            go(&g, &Triangles, cfg, simulated, "triangles", |vals| {
+            go(&g, &Triangles, cfg, simulated, "triangles", &sinks, |vals| {
                 let corners: u64 = vals.iter().sum();
                 let peak = vals.iter().enumerate().max_by_key(|(_, &c)| c);
                 println!(
@@ -367,7 +416,7 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
                     peak.map(|(v, _)| v).unwrap_or(0),
                     peak.map(|(_, &c)| c).unwrap_or(0)
                 );
-            });
+            })?;
         }
         other => bail!("--algo {other}: expected pr|cc|sssp|wsssp|bfs|lpa|triangles"),
     }

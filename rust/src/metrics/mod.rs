@@ -225,6 +225,18 @@ pub struct RunMetrics {
     /// Of [`RunMetrics::vector_lanes_scanned`], lanes that carried a
     /// message (the utilisation numerator).
     pub vector_lanes_useful: u64,
+    /// Traced partitioned runs: cumulative *measured* execution time per
+    /// shard (scatter + flush spans), indexed by shard id — the timing
+    /// vector NUMA-aware placement consumes, as opposed to the edge-count
+    /// estimates the deque cuts start from. Empty on untraced or flat
+    /// runs.
+    pub shard_times: Vec<Duration>,
+    /// The run's event trace when [`EngineConfig::trace`] was set (and
+    /// the `no-trace` feature is off): what `--trace-out` serialises and
+    /// `--trace-summary` renders.
+    ///
+    /// [`EngineConfig::trace`]: crate::engine::EngineConfig::trace
+    pub trace: Option<crate::trace::RunTrace>,
 }
 
 impl RunMetrics {
@@ -276,9 +288,16 @@ impl RunMetrics {
             crate::util::timer::fmt_duration(self.total_time),
         );
         if self.shards > 0 {
+            // Partitioned runs always print flush time and steal count —
+            // explicit zeros included — so this line and a trace summary
+            // of the same run never disagree on which fields exist.
             s.push_str(&format!(
-                " shards={} cross={} imbalance={:.2}",
-                self.shards, self.cross_shard_messages, self.shard_edge_imbalance
+                " shards={} cross={} imbalance={:.2} flush={} steals={}",
+                self.shards,
+                self.cross_shard_messages,
+                self.shard_edge_imbalance,
+                crate::util::timer::fmt_duration(self.flush_time()),
+                self.steals
             ));
         }
         if self.delivery_plane == DeliveryPlaneKind::Log {
@@ -299,7 +318,9 @@ impl RunMetrics {
                 self.tuner_modes()
             ));
         }
-        if self.steals > 0 {
+        if self.shards == 0 && self.steals > 0 {
+            // Flat runs cannot steal, but defensively keep the section
+            // for any metrics assembled by hand.
             s.push_str(&format!(" steals={}", self.steals));
         }
         if self.vector_lanes_scanned > 0 {
@@ -413,6 +434,10 @@ mod tests {
         let s = sharded.summary();
         assert!(s.contains("shards=8"));
         assert!(s.contains("cross=42"));
+        // Partitioned runs print flush/steals even when zero, so the
+        // summary and a trace summary never disagree on field presence.
+        assert!(s.contains("flush="), "explicit flush on partitioned runs: {s}");
+        assert!(s.contains("steals=0"), "explicit zero steals: {s}");
         assert!(s.contains("fallback="));
         assert!(!s.contains("epoch="), "static run omits the epoch section");
         let dynamic = RunMetrics {

@@ -25,7 +25,7 @@ use crate::util::prefix::{balanced_cuts, exclusive_prefix_sum};
 use std::ops::Range;
 
 pub use pool::{parallel_for, parallel_for_hinted};
-pub use steal::{steal_execute, StealSet};
+pub use steal::{steal_execute, steal_execute_tagged, StealSet};
 
 /// Default dynamic chunk size — the paper's empirically determined 256.
 pub const DEFAULT_CHUNK: usize = 256;

@@ -244,6 +244,27 @@ pub fn steal_execute<F>(
 where
     F: Fn(usize, usize) + Sync,
 {
+    steal_execute_tagged(threads, n, weights, steal_chunk, work_hint, move |w, i, _| {
+        body(w, i)
+    })
+}
+
+/// [`steal_execute`] with provenance: `body(worker, item, stolen)`
+/// receives `stolen = true` exactly when the item was claimed from a
+/// peer's deque, so callers (the observability plane) can attribute
+/// migrated work without a second counting pass. The `stolen = true`
+/// call count equals the returned steal total.
+pub fn steal_execute_tagged<F>(
+    threads: usize,
+    n: usize,
+    weights: Option<&[u64]>,
+    steal_chunk: usize,
+    work_hint: usize,
+    body: F,
+) -> u64
+where
+    F: Fn(usize, usize, bool) + Sync,
+{
     let threads = threads.max(1);
     if n == 0 {
         return 0;
@@ -252,7 +273,7 @@ where
     let _phase = PhaseGuard::enter();
     if threads == 1 || work_hint < SERIAL_CUTOFF {
         for i in 0..n {
-            body(0, i);
+            body(0, i, false);
         }
         return 0;
     }
@@ -267,7 +288,7 @@ where
                     // Drain own deque first: uncontended fast path.
                     while let Some(i) = set_ref.take(w) {
                         set_ref.mark_execute(i);
-                        body_ref(w, i);
+                        body_ref(w, i, false);
                     }
                     // Steal episode: up to `chunk` items from the most
                     // loaded peer, re-picking the victim per item so a
@@ -277,7 +298,7 @@ where
                         let Some(v) = set_ref.most_loaded(w) else { break };
                         if let Some(i) = set_ref.steal_from(w, v) {
                             set_ref.mark_execute(i);
-                            body_ref(w, i);
+                            body_ref(w, i, true);
                             stole = true;
                         } else if !stole {
                             // Lost the race and have stolen nothing yet:

@@ -14,6 +14,7 @@
 use crate::combine::plane::DeliveryPlane;
 use crate::combine::vector::{LANES, VECTOR_GATHER_MIN};
 use crate::combine::{Combiner, Strategy};
+use crate::engine::core::step_mode_label;
 use crate::engine::tune::{AdaptiveTuner, DecisionTable, StepPlan, TunerState};
 use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, VertexProgram};
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
@@ -22,6 +23,7 @@ use crate::layout::{SoaStore, VertexStore};
 use crate::metrics::TunerDecision;
 use crate::sim::machine::VirtualMachine;
 use crate::sim::CostModel;
+use crate::trace::{Event, InstantKind, Phase, RunTrace};
 use crate::util::bitset::BitSet;
 use crate::util::timer::Timer;
 use std::time::Duration;
@@ -65,6 +67,14 @@ pub struct SimReport<V> {
     /// recalibrated model re-decides both worlds consistently. Empty on
     /// fixed-config simulations.
     pub decisions: Vec<TunerDecision>,
+    /// Observability-plane trace over the *virtual* timeline
+    /// (`EngineConfig::trace`; `None` when untraced or under the
+    /// `no-trace` feature): per-worker region spans from the machine's
+    /// modelled per-thread busy times, engine-lane barrier spans, tuner
+    /// and steal instants, and one per-superstep [`Event::Counter`]
+    /// sample — the same schema the real engine emits, so both open
+    /// side-by-side in Perfetto.
+    pub trace: Option<RunTrace>,
 }
 
 /// Serial instrumented engine. Construct with the *same*
@@ -210,6 +220,53 @@ impl<'a, P: VertexProgram> Context<P::Value, P::Message, AggValue<P>> for SimCtx
     }
 }
 
+/// Append per-worker spans `[t0, t0 + busy]` for every virtual thread a
+/// region assignment kept busy (idle lanes emit nothing — an empty lane
+/// on the timeline *is* the imbalance the plane visualises). `t0` is the
+/// virtual clock at region entry; per-thread busy times come from
+/// [`VirtualMachine::region_profile`].
+fn emit_worker_spans(
+    trace: &mut Option<RunTrace>,
+    superstep: usize,
+    phase: Phase,
+    t0: f64,
+    tclock: &[f64],
+) {
+    let Some(tr) = trace.as_mut() else { return };
+    for (w, &busy) in tclock.iter().enumerate() {
+        if busy > 0.0 {
+            tr.events.push(Event::Span {
+                tid: w as u32,
+                superstep: superstep as u32,
+                phase,
+                shard: None,
+                start_ns: t0 as u64,
+                end_ns: (t0 + busy) as u64,
+            });
+        }
+    }
+}
+
+/// Append one engine-lane span over the virtual interval `[t0, t1]`.
+fn emit_engine_span(
+    trace: &mut Option<RunTrace>,
+    superstep: usize,
+    phase: Phase,
+    t0: f64,
+    t1: f64,
+) {
+    let Some(tr) = trace.as_mut() else { return };
+    let tid = tr.engine_lane();
+    tr.events.push(Event::Span {
+        tid,
+        superstep: superstep as u32,
+        phase,
+        shard: None,
+        start_ns: t0 as u64,
+        end_ns: t1 as u64,
+    });
+}
+
 impl<AV: Clone, M> StepState<AV, M> {
     fn record_delivery(&mut self, dst: VertexId) {
         if self.counts[dst as usize] == 0 {
@@ -264,6 +321,9 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
         }
 
         let mut vm = VirtualMachine::new(cfg.threads);
+        // Observability plane over the virtual clock (`for_run` is the
+        // `no-trace` compile-out gate — constant `None` there).
+        let mut trace = RunTrace::for_run(cfg.trace, cfg.threads.max(1));
         let mut step: StepState<AggValue<P>, P::Message> = StepState {
             counts: vec![0; n],
             touched: Vec::new(),
@@ -357,6 +417,19 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 Some(t) => t.decide(superstep, active.len(), n),
                 None => StepPlan::of(cfg),
             };
+            if tuner.is_some() {
+                if let Some(tr) = trace.as_mut() {
+                    let tid = tr.engine_lane();
+                    tr.events.push(Event::Instant {
+                        tid,
+                        superstep: superstep as u32,
+                        kind: InstantKind::TunerDecision {
+                            mode: step_mode_label(&knobs),
+                        },
+                        ts_ns: vm.clock_ns as u64,
+                    });
+                }
+            }
             step.active_next.clear_all();
             step.touched.clear();
             step.sends_log.clear();
@@ -593,12 +666,17 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 } else {
                     None
                 };
-                let mut scatter = vm.region(
+                let t0 = vm.clock_ns;
+                let (mut scatter, scatter_tclock) = vm.region_profile(
                     shard_sched,
                     &shard_costs,
                     shard_weights.as_deref(),
                     cost.t_chunk_claim,
                 );
+                // Spans show the modelled pre-steal assignment; steal
+                // migration appears as instants (the rebalance model
+                // estimates counts, not per-thread reassignments).
+                emit_worker_spans(&mut trace, superstep, Phase::Scatter, t0, &scatter_tclock);
                 if cfg.steal {
                     // Work-stealing scatter (§2.9): drained workers
                     // migrate whole shards from the most-loaded peer.
@@ -624,7 +702,8 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     };
                     let flush_costs: Vec<f64> =
                         cross_to.iter().map(|&c| c as f64 * per_flush).collect();
-                    let flush = vm.region(
+                    let t0f = vm.clock_ns;
+                    let (flush, flush_tclock) = vm.region_profile(
                         shard_sched,
                         &flush_costs,
                         if shard_sched.needs_weights() {
@@ -634,6 +713,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                         },
                         cost.t_chunk_claim,
                     );
+                    emit_worker_spans(&mut trace, superstep, Phase::Flush, t0f, &flush_tclock);
                     if cfg.steal {
                         // The flush barrier is where stealing pays most:
                         // a few hot destination shards strand their
@@ -659,12 +739,15 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 } else {
                     None
                 };
-                vm.region(
+                let t0 = vm.clock_ns;
+                let (stats, tclock) = vm.region_profile(
                     knobs.schedule,
                     &active_costs,
                     weights.as_deref(),
                     cost.t_chunk_claim,
-                )
+                );
+                emit_worker_spans(&mut trace, superstep, Phase::Compute, t0, &tclock);
+                stats
             } else {
                 // Scan: expand costs to the full range; inactive vertices
                 // still pay the activity check.
@@ -672,15 +755,36 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 for (it, &c) in items.iter().zip(&active_costs) {
                     full[it.v as usize] = c;
                 }
-                vm.region(
+                let t0 = vm.clock_ns;
+                let (stats, tclock) = vm.region_profile(
                     knobs.schedule,
                     &full,
                     scan_weights.as_deref(),
                     cost.t_chunk_claim,
-                )
+                );
+                emit_worker_spans(&mut trace, superstep, Phase::Compute, t0, &tclock);
+                stats
             };
             imbalance_sum += stats.imbalance;
             regions += 1;
+            if est_steals > 0 {
+                if let Some(tr) = trace.as_mut() {
+                    // One instant per estimated migrated shard, on the
+                    // engine lane with `shard: 0` — the rebalance model
+                    // knows *how many* shards move, not which (the real
+                    // engine's instants carry true shard ids and lanes).
+                    let tid = tr.engine_lane();
+                    let ts_ns = vm.clock_ns as u64;
+                    for _ in 0..est_steals {
+                        tr.events.push(Event::Instant {
+                            tid,
+                            superstep: superstep as u32,
+                            kind: InstantKind::Steal { shard: 0 },
+                            ts_ns,
+                        });
+                    }
+                }
+            }
 
             // ---- Barrier: serial bookkeeping charged to the clock ------
             let mut serial_ns = cost.t_superstep_sync;
@@ -720,21 +824,29 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     prev_inbox_owners.push(d);
                 }
             }
+            let b0 = vm.clock_ns;
             vm.serial(serial_ns);
+            emit_engine_span(
+                &mut trace,
+                superstep,
+                if plan.is_some() { Phase::Apply } else { Phase::Barrier },
+                b0,
+                vm.clock_ns,
+            );
 
-            // Feed the barrier's signals back to the adaptive controller
-            // (mirrors the real engine's observe call).
+            // Barrier signals, shared by the adaptive controller's
+            // observe (mirroring the real engine) and the trace sample.
+            let delivered = items.iter().filter(|it| it.got_msg).count() as u64;
+            // Serial analogue of the engine's LaneCounters: the
+            // fraction of scanned pull slots that held a message,
+            // 1.0 when nothing vectorises (same convention as
+            // LaneCounters::ratio).
+            let lane_util = if monoid && pull_scanned_total > 0 {
+                pull_combined_total as f64 / pull_scanned_total as f64
+            } else {
+                1.0
+            };
             if let Some(t) = tuner.as_mut() {
-                let delivered = items.iter().filter(|it| it.got_msg).count() as u64;
-                // Serial analogue of the engine's LaneCounters: the
-                // fraction of scanned pull slots that held a message,
-                // 1.0 when nothing vectorises (same convention as
-                // LaneCounters::ratio).
-                let lane_util = if monoid && pull_scanned_total > 0 {
-                    pull_combined_total as f64 / pull_scanned_total as f64
-                } else {
-                    1.0
-                };
                 t.observe(
                     push_deliveries + pull_combined_total,
                     delivered,
@@ -742,6 +854,26 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                     est_steals,
                     lane_util,
                 );
+            }
+            if let Some(tr) = trace.as_mut() {
+                let messages = push_deliveries + pull_combined_total;
+                tr.events.push(Event::Counter {
+                    superstep: superstep as u32,
+                    ts_ns: vm.clock_ns as u64,
+                    // Modelled region imbalance stands in for the real
+                    // engine's measured shard-time skew; one serial
+                    // thread never contends, so the probe counts are
+                    // honestly zero.
+                    skew: stats.imbalance,
+                    fan_in: if delivered > 0 {
+                        messages as f64 / delivered as f64
+                    } else {
+                        0.0
+                    },
+                    cas_retries: 0,
+                    lock_contended: 0,
+                    lane_utilisation: lane_util,
+                });
             }
 
             // Reset recipient counts (touched list keeps this O(touched)).
@@ -768,6 +900,7 @@ impl<'g, P: VertexProgram> SimEngine<'g, P> {
                 1.0
             },
             decisions: tuner.as_mut().map(|t| t.take_trace()).unwrap_or_default(),
+            trace,
         }
     }
 }

@@ -37,6 +37,20 @@ impl VirtualMachine {
         weights: Option<&[u64]>,
         t_chunk_claim: f64,
     ) -> RegionStats {
+        self.region_profile(sched, costs, weights, t_chunk_claim).0
+    }
+
+    /// [`VirtualMachine::region`] exposing the per-thread busy times the
+    /// assignment produced (ns, one entry per virtual thread) — the
+    /// observability plane turns them into per-worker spans on the
+    /// virtual timeline.
+    pub fn region_profile(
+        &mut self,
+        sched: Schedule,
+        costs: &[f64],
+        weights: Option<&[u64]>,
+        t_chunk_claim: f64,
+    ) -> (RegionStats, Vec<f64>) {
         let n = costs.len();
         let mut tclock = vec![0.0f64; self.threads];
         if n > 0 {
@@ -63,11 +77,14 @@ impl VirtualMachine {
         let busy: f64 = tclock.iter().sum();
         let mean = busy / self.threads as f64;
         self.clock_ns += makespan;
-        RegionStats {
-            makespan_ns: makespan,
-            imbalance: if mean > 0.0 { makespan / mean } else { 1.0 },
-            busy_ns: busy,
-        }
+        (
+            RegionStats {
+                makespan_ns: makespan,
+                imbalance: if mean > 0.0 { makespan / mean } else { 1.0 },
+                busy_ns: busy,
+            },
+            tclock,
+        )
     }
 
     /// Re-price an already-charged region as if work-stealing had run

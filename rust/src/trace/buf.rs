@@ -1,0 +1,356 @@
+//! Hot-path trace recording: per-worker append segments drained at
+//! barriers (DESIGN.md §2.10).
+//!
+//! Same discipline as `MessageLog`'s segments: each worker appends to
+//! its own pre-sized, cache-padded buffer — owner-exclusive during a
+//! parallel phase, so recording takes no lock and (until a segment
+//! outgrows its reservation) no allocation — and the coordinator drains
+//! every segment single-threaded at the barrier, the only point where
+//! the phase discipline guarantees no worker is writing. One extra lane
+//! past the workers carries the engine's own serial sections.
+//!
+//! This file is on the audit's PANIC_DENY list (it is called from the
+//! scatter/flush hot loops) and deliberately carries **no atomics**: the
+//! scope-join barrier at the end of each phase publishes the segments,
+//! exactly as it publishes message-log segments.
+//!
+//! The `no-trace` feature compiles tracing out: [`TraceBuffers::checkout`]
+//! (and `RunTrace::for_run`, the simulator's gate) become constant
+//! `None`, so every recording site — all behind `if let Some(..)` — is
+//! statically dead and the subsystem reduces to inert type definitions.
+
+use crate::combine::strategy::ContentionProbe;
+use crate::layout::store::SyncCell;
+use crate::trace::event::{Event, InstantKind, Phase, RunTrace};
+use crate::util::CachePadded;
+use std::time::{Duration, Instant};
+
+/// Events reserved per lane segment at checkout: enough for every phase
+/// span, shard span and steal instant of a few hundred supersteps
+/// without reallocating mid-phase.
+const SEG_RESERVE: usize = 4096;
+
+/// The per-superstep signals the engine hands to [`TraceBuffers::drain_barrier`];
+/// shard-time skew is computed from the drained spans themselves.
+#[derive(Clone, Copy, Debug)]
+pub struct BarrierSignals {
+    /// Superstep being sealed.
+    pub superstep: usize,
+    /// Messages per receiving vertex this superstep.
+    pub fan_in: f64,
+    /// CAS retries this superstep (peeked from the contention probes
+    /// *before* the tuner's draining `observe`).
+    pub cas_retries: u64,
+    /// Contended lock acquisitions this superstep, ditto.
+    pub lock_contended: u64,
+    /// Useful fraction of scanned vector lanes.
+    pub lane_utilisation: f64,
+}
+
+/// Pooled per-run trace recorder: `workers + 1` append lanes, a probe
+/// array for non-adaptive runs, and the drained event accumulation.
+/// Checked out of the session pool per traced run (like tuner state) and
+/// returned after [`TraceBuffers::take_run`] empties it.
+pub struct TraceBuffers {
+    /// Run-start anchor; all timestamps are ns since this.
+    start: Instant,
+    /// Worker-lane count (lane `workers` is the engine lane).
+    workers: usize,
+    /// Append segments, one per lane, owner-exclusive during phases.
+    segs: Vec<CachePadded<SyncCell<Vec<Event>>>>,
+    /// Contention probes the trace plane owns so non-adaptive traced
+    /// runs still measure CAS/lock traffic (adaptive runs share the
+    /// tuner's probes instead, peeked before its draining `observe`).
+    probes: Vec<CachePadded<ContentionProbe>>,
+    /// Events drained so far, in barrier order.
+    drained: Vec<Event>,
+    /// Cumulative measured execution time per shard — the vector
+    /// `RunMetrics::shard_times` hands to NUMA placement.
+    shard_times: Vec<Duration>,
+    /// Scratch: this superstep's per-shard span time (ns).
+    step_shard_ns: Vec<u64>,
+    /// Scratch: shards with a non-zero entry in `step_shard_ns`.
+    touched_shards: Vec<usize>,
+}
+
+impl Default for TraceBuffers {
+    fn default() -> Self {
+        TraceBuffers {
+            start: Instant::now(),
+            workers: 0,
+            segs: Vec::new(),
+            probes: Vec::new(),
+            drained: Vec::new(),
+            shard_times: Vec::new(),
+            step_shard_ns: Vec::new(),
+            touched_shards: Vec::new(),
+        }
+    }
+}
+
+impl TraceBuffers {
+    /// Check a recorder out for a run: recycle `pooled` when the session
+    /// has one, else build fresh; size for `workers` lanes, clear every
+    /// buffer, re-stamp the run-start anchor. Compiled to a constant
+    /// `None` under `no-trace`.
+    pub fn checkout(pooled: Option<TraceBuffers>, workers: usize) -> Option<TraceBuffers> {
+        #[cfg(feature = "no-trace")]
+        {
+            let _ = (pooled, workers);
+            None
+        }
+        #[cfg(not(feature = "no-trace"))]
+        {
+            let mut b = pooled.unwrap_or_default();
+            b.reset(workers);
+            Some(b)
+        }
+    }
+
+    /// Size for `workers` lanes and clear all state (capacity is kept —
+    /// the point of pooling).
+    pub fn reset(&mut self, workers: usize) {
+        let workers = workers.max(1);
+        self.workers = workers;
+        while self.segs.len() < workers + 1 {
+            self.segs.push(CachePadded::new(SyncCell::new(Vec::new())));
+        }
+        while self.probes.len() < workers {
+            self.probes.push(CachePadded::new(ContentionProbe::new()));
+        }
+        for seg in &self.segs {
+            let s = seg.get_mut();
+            s.clear();
+            s.reserve(SEG_RESERVE);
+        }
+        for p in &self.probes {
+            p.take();
+        }
+        self.drained.clear();
+        self.shard_times.clear();
+        self.step_shard_ns.clear();
+        self.touched_shards.clear();
+        self.start = Instant::now();
+    }
+
+    /// Nanoseconds since the run-start anchor.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    /// The engine lane's index (one past the last worker).
+    #[inline]
+    pub fn engine_lane(&self) -> usize {
+        self.workers
+    }
+
+    /// Owner-exclusive append to lane `tid` (hot path: no lock, and no
+    /// allocation while the segment stays within its reservation).
+    #[inline]
+    pub fn push(&self, tid: usize, ev: Event) {
+        self.segs[tid].get_mut().push(ev);
+    }
+
+    /// Record a finished interval on lane `tid`.
+    #[inline]
+    pub fn span(
+        &self,
+        tid: usize,
+        superstep: usize,
+        phase: Phase,
+        shard: Option<(u32, bool)>,
+        start_ns: u64,
+        end_ns: u64,
+    ) {
+        self.push(
+            tid,
+            Event::Span {
+                tid: tid as u32,
+                superstep: superstep as u32,
+                phase,
+                shard,
+                start_ns,
+                end_ns,
+            },
+        );
+    }
+
+    /// Record a point event on lane `tid`, stamped now.
+    #[inline]
+    pub fn instant(&self, tid: usize, superstep: usize, kind: InstantKind) {
+        let ts_ns = self.now_ns();
+        self.push(
+            tid,
+            Event::Instant {
+                tid: tid as u32,
+                superstep: superstep as u32,
+                kind,
+                ts_ns,
+            },
+        );
+    }
+
+    /// The trace plane's own contention probes (handed to the delivery
+    /// path on traced non-adaptive runs).
+    pub fn probes(&self) -> &[CachePadded<ContentionProbe>] {
+        &self.probes
+    }
+
+    /// Drain-and-sum this plane's probes (non-adaptive runs; adaptive
+    /// runs peek the tuner's probes instead).
+    pub fn take_probe_counts(&self) -> (u64, u64) {
+        let mut cas = 0u64;
+        let mut lock = 0u64;
+        for p in &self.probes {
+            let (c, l) = p.take();
+            cas += c;
+            lock += l;
+        }
+        (cas, lock)
+    }
+
+    /// Barrier drain — the only point the segments may be read: move
+    /// every lane's events into the run accumulation, fold this
+    /// superstep's shard spans into the cumulative per-shard times,
+    /// compute the measured shard-time skew, and seal the superstep with
+    /// one [`Event::Counter`] sample.
+    pub fn drain_barrier(&mut self, sig: BarrierSignals) {
+        let cur = sig.superstep as u32;
+        for seg in &self.segs {
+            let s = seg.get_mut();
+            for ev in s.drain(..) {
+                if let Event::Span {
+                    superstep,
+                    shard: Some((shard, _)),
+                    start_ns,
+                    end_ns,
+                    ..
+                } = &ev
+                {
+                    if *superstep == cur {
+                        let shard = *shard as usize;
+                        let dur = end_ns.saturating_sub(*start_ns);
+                        if self.shard_times.len() <= shard {
+                            self.shard_times.resize(shard + 1, Duration::ZERO);
+                            self.step_shard_ns.resize(shard + 1, 0);
+                        }
+                        self.shard_times[shard] += Duration::from_nanos(dur);
+                        if dur > 0 {
+                            if self.step_shard_ns[shard] == 0 {
+                                self.touched_shards.push(shard);
+                            }
+                            self.step_shard_ns[shard] += dur;
+                        }
+                    }
+                }
+                self.drained.push(ev);
+            }
+        }
+        let mut max = 0u64;
+        let mut sum = 0u64;
+        for &s in &self.touched_shards {
+            let ns = self.step_shard_ns[s];
+            max = max.max(ns);
+            sum += ns;
+        }
+        let skew = if sum > 0 {
+            max as f64 * self.touched_shards.len() as f64 / sum as f64
+        } else {
+            1.0
+        };
+        for &s in &self.touched_shards {
+            self.step_shard_ns[s] = 0;
+        }
+        self.touched_shards.clear();
+        self.drained.push(Event::Counter {
+            superstep: cur,
+            ts_ns: self.now_ns(),
+            skew,
+            fan_in: sig.fan_in,
+            cas_retries: sig.cas_retries,
+            lock_contended: sig.lock_contended,
+            lane_utilisation: sig.lane_utilisation,
+        });
+    }
+
+    /// End of run: sweep any straggler events out of the segments and
+    /// hand the finished trace plus the measured per-shard timing vector
+    /// to the caller, leaving this recorder empty for the pool.
+    pub fn take_run(&mut self) -> (RunTrace, Vec<Duration>) {
+        for seg in &self.segs {
+            self.drained.append(seg.get_mut());
+        }
+        (
+            RunTrace {
+                workers: self.workers,
+                events: std::mem::take(&mut self.drained),
+            },
+            std::mem::take(&mut self.shard_times),
+        )
+    }
+}
+
+#[cfg(all(test, not(feature = "no-trace")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drain_computes_skew_from_shard_spans_and_accumulates_shard_times() {
+        let mut b = TraceBuffers::checkout(None, 2).expect("tracing enabled");
+        // Worker 0 runs shard 0 for 300ns, worker 1 runs shard 1 for
+        // 100ns: skew = 300 / mean(200) = 1.5.
+        b.span(0, 0, Phase::Scatter, Some((0, false)), 0, 300);
+        b.span(1, 0, Phase::Scatter, Some((1, true)), 0, 100);
+        b.drain_barrier(BarrierSignals {
+            superstep: 0,
+            fan_in: 2.0,
+            cas_retries: 7,
+            lock_contended: 1,
+            lane_utilisation: 1.0,
+        });
+        // Second superstep only touches shard 1.
+        b.span(0, 1, Phase::Scatter, Some((1, false)), 400, 450);
+        b.drain_barrier(BarrierSignals {
+            superstep: 1,
+            fan_in: 1.0,
+            cas_retries: 0,
+            lock_contended: 0,
+            lane_utilisation: 1.0,
+        });
+        let (trace, shard_times) = b.take_run();
+        assert_eq!(trace.workers, 2);
+        assert_eq!(shard_times, vec![Duration::from_nanos(300), Duration::from_nanos(150)]);
+        let skews: Vec<f64> = trace
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Counter { skew, .. } => Some(*skew),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(skews.len(), 2);
+        assert!((skews[0] - 1.5).abs() < 1e-12, "skew {}", skews[0]);
+        assert!((skews[1] - 1.0).abs() < 1e-12, "single shard is balanced");
+        // Recorder is empty and reusable after take_run.
+        let (empty, times) = b.take_run();
+        assert!(empty.events.is_empty());
+        assert!(times.is_empty());
+    }
+
+    #[test]
+    fn pooled_checkout_resets_and_regrows() {
+        let mut b = TraceBuffers::checkout(None, 1).expect("tracing enabled");
+        b.instant(0, 0, InstantKind::Steal { shard: 3 });
+        b.probes()[0].cas_retries.fetch_add(5, std::sync::atomic::Ordering::Relaxed);
+        // Return dirty (as the engine would never do, but checkout must
+        // cope), then check out wider.
+        let b2 = TraceBuffers::checkout(Some(b), 4).expect("tracing enabled");
+        assert_eq!(b2.engine_lane(), 4);
+        assert_eq!(b2.probes().len(), 4);
+        assert_eq!(b2.take_probe_counts(), (0, 0), "probes cleared at checkout");
+        let mut b2 = b2;
+        let (trace, _) = b2.take_run();
+        assert!(trace.events.is_empty(), "segments cleared at checkout");
+    }
+}

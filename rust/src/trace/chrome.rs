@@ -1,0 +1,234 @@
+//! Chrome trace-event JSON sink: serialises a [`RunTrace`] into the
+//! format `chrome://tracing` and Perfetto load directly.
+//!
+//! Hand-rolled like every other JSON emitter in the tree (the build is
+//! dependency-free). One process (`pid` 1) per run; one `tid` per worker
+//! lane plus the engine lane; spans as `"ph":"X"` complete events with
+//! microsecond `ts`/`dur`, instants as thread-scoped `"ph":"i"`, and the
+//! per-superstep irregularity sample as three `"ph":"C"` counter tracks
+//! (`shard-skew`, `contention`, `messages`).
+
+use crate::trace::event::{Event, InstantKind, RunTrace};
+use std::fmt::Write as _;
+
+/// Trace-event `ts`/`dur` are microseconds; ours are nanoseconds.
+fn us(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+/// JSON has no NaN/Infinity; clamp the (already finite by construction)
+/// counter values defensively.
+fn fin(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Minimal string escape for the mode strings we embed (they are built
+/// from `Debug` renderings of field-less enum variants, but escape
+/// anyway so the emitter is safe for any input).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn push_event(out: &mut String, first: &mut bool, body: &str) {
+    if *first {
+        *first = false;
+    } else {
+        out.push_str(",\n");
+    }
+    out.push_str("  ");
+    out.push_str(body);
+}
+
+/// Serialise `trace` as a Chrome trace-event JSON document.
+pub fn chrome_trace_json(trace: &RunTrace) -> String {
+    let mut out = String::with_capacity(trace.events.len() * 144 + 1024);
+    out.push_str("{\"traceEvents\":[\n");
+    let mut first = true;
+
+    // Metadata: name the process and every lane so Perfetto's track
+    // labels read "worker 0..n-1" / "engine" instead of bare tids.
+    push_event(
+        &mut out,
+        &mut first,
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\
+         \"args\":{\"name\":\"ipregel run\"}}",
+    );
+    for w in 0..trace.workers {
+        push_event(
+            &mut out,
+            &mut first,
+            &format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{w},\
+                 \"args\":{{\"name\":\"worker {w}\"}}}}"
+            ),
+        );
+    }
+    push_event(
+        &mut out,
+        &mut first,
+        &format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+             \"args\":{{\"name\":\"engine\"}}}}",
+            trace.workers
+        ),
+    );
+
+    for ev in &trace.events {
+        let body = match ev {
+            Event::Span {
+                tid,
+                superstep,
+                phase,
+                shard,
+                start_ns,
+                end_ns,
+            } => {
+                let dur = end_ns.saturating_sub(*start_ns);
+                match shard {
+                    Some((shard, stolen)) => format!(
+                        "{{\"name\":\"{}\",\"cat\":\"shard\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3},\
+                         \"args\":{{\"superstep\":{superstep},\"shard\":{shard},\
+                         \"stolen\":{stolen}}}}}",
+                        phase.name(),
+                        us(*start_ns),
+                        us(dur),
+                    ),
+                    None => format!(
+                        "{{\"name\":\"{}\",\"cat\":\"phase\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3},\
+                         \"args\":{{\"superstep\":{superstep}}}}}",
+                        phase.name(),
+                        us(*start_ns),
+                        us(dur),
+                    ),
+                }
+            }
+            Event::Instant {
+                tid,
+                superstep,
+                kind,
+                ts_ns,
+            } => {
+                let args = match kind {
+                    InstantKind::TunerDecision { mode } => {
+                        format!("\"superstep\":{superstep},\"mode\":\"{}\"", esc(mode))
+                    }
+                    InstantKind::Steal { shard } => {
+                        format!("\"superstep\":{superstep},\"shard\":{shard}")
+                    }
+                    InstantKind::EpochBump { epoch } | InstantKind::Compaction { epoch } => {
+                        format!("\"superstep\":{superstep},\"epoch\":{epoch}")
+                    }
+                };
+                format!(
+                    "{{\"name\":\"{}\",\"cat\":\"instant\",\"ph\":\"i\",\"s\":\"t\",\
+                     \"pid\":1,\"tid\":{tid},\"ts\":{:.3},\"args\":{{{args}}}}}",
+                    kind.name(),
+                    us(*ts_ns),
+                )
+            }
+            Event::Counter {
+                superstep: _,
+                ts_ns,
+                skew,
+                fan_in,
+                cas_retries,
+                lock_contended,
+                lane_utilisation,
+            } => {
+                // Three counter tracks per sample, rendered as one body
+                // (push_event separates events with commas, so join the
+                // three objects here).
+                let ts = us(*ts_ns);
+                format!(
+                    "{{\"name\":\"shard-skew\",\"ph\":\"C\",\"pid\":1,\"ts\":{ts:.3},\
+                     \"args\":{{\"max_over_mean\":{:.4}}}}},\n  \
+                     {{\"name\":\"contention\",\"ph\":\"C\",\"pid\":1,\"ts\":{ts:.3},\
+                     \"args\":{{\"cas_retries\":{cas_retries},\
+                     \"lock_contended\":{lock_contended}}}}},\n  \
+                     {{\"name\":\"messages\",\"ph\":\"C\",\"pid\":1,\"ts\":{ts:.3},\
+                     \"args\":{{\"fan_in\":{:.4},\"lane_utilisation\":{:.4}}}}}",
+                    fin(*skew),
+                    fin(*fan_in),
+                    fin(*lane_utilisation),
+                )
+            }
+        };
+        push_event(&mut out, &mut first, &body);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::Phase;
+
+    #[test]
+    fn emits_all_event_shapes_with_escapes() {
+        let trace = RunTrace {
+            workers: 2,
+            events: vec![
+                Event::Span {
+                    tid: 0,
+                    superstep: 0,
+                    phase: Phase::Scatter,
+                    shard: Some((3, true)),
+                    start_ns: 1_500,
+                    end_ns: 4_500,
+                },
+                Event::Span {
+                    tid: 2,
+                    superstep: 0,
+                    phase: Phase::Apply,
+                    shard: None,
+                    start_ns: 5_000,
+                    end_ns: 6_000,
+                },
+                Event::Instant {
+                    tid: 2,
+                    superstep: 0,
+                    kind: InstantKind::TunerDecision {
+                        mode: "a\"b\\c".to_string(),
+                    },
+                    ts_ns: 1_000,
+                },
+                Event::Counter {
+                    superstep: 0,
+                    ts_ns: 6_000,
+                    skew: 1.5,
+                    fan_in: f64::NAN,
+                    cas_retries: 7,
+                    lock_contended: 0,
+                    lane_utilisation: 0.5,
+                },
+            ],
+        };
+        let j = chrome_trace_json(&trace);
+        assert!(j.starts_with("{\"traceEvents\":[\n"));
+        assert!(j.trim_end().ends_with("]}"));
+        assert!(j.contains("\"name\":\"scatter\"") && j.contains("\"stolen\":true"));
+        assert!(j.contains("\"ts\":1.500") && j.contains("\"dur\":3.000"), "{j}");
+        assert!(j.contains("\"name\":\"worker 1\"") && j.contains("\"name\":\"engine\""));
+        assert!(j.contains("a\\\"b\\\\c"), "mode string escaped");
+        assert!(j.contains("\"fan_in\":0.0000"), "NaN clamped to a JSON number");
+        assert!(j.contains("\"name\":\"shard-skew\"") && j.contains("\"cas_retries\":7"));
+    }
+}

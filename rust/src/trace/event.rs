@@ -1,0 +1,221 @@
+//! Event taxonomy of the observability plane (DESIGN.md §2.10).
+//!
+//! Three shapes cover everything the engine and the simulator emit:
+//!
+//! * [`Event::Span`] — a timed interval on one lane: a whole phase on a
+//!   worker (scatter / flush / apply / compute / barrier) or, with
+//!   `shard: Some(..)`, the execution of one shard including whether the
+//!   lane *stole* it from another worker's deque.
+//! * [`Event::Instant`] — a point event: a tuner decision, a steal
+//!   episode, a mutation-epoch bump, a delta-log compaction.
+//! * [`Event::Counter`] — one per-superstep sample of the irregularity
+//!   signals the paper is about: shard-time skew, message fan-in,
+//!   CAS-retry / lock-contention counts from the [`ContentionProbe`]s,
+//!   and vector-lane utilisation.
+//!
+//! Timestamps are nanoseconds since the start of the run — wall-clock in
+//! the real engine, the [`VirtualMachine`](crate::sim::machine::VirtualMachine)
+//! clock in the simulator — so a real trace and a sim trace of the same
+//! configuration share one schema and open side-by-side in Perfetto.
+//!
+//! [`ContentionProbe`]: crate::combine::strategy::ContentionProbe
+
+/// Which part of a superstep a span covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Flat engine: the single fused compute phase.
+    Compute,
+    /// Partitioned engine: owner-exclusive per-shard scatter.
+    Scatter,
+    /// Partitioned engine: owner-exclusive drain of the cross-shard
+    /// remote buffers.
+    Flush,
+    /// Partitioned engine: the serial barrier section (epoch swap,
+    /// aggregator merge, log rotation).
+    Apply,
+    /// Flat engine: the serial barrier section.
+    Barrier,
+}
+
+impl Phase {
+    /// Stable lower-case name (trace-event `name` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Scatter => "scatter",
+            Phase::Flush => "flush",
+            Phase::Apply => "apply",
+            Phase::Barrier => "barrier",
+        }
+    }
+}
+
+/// What a point event marks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InstantKind {
+    /// The adaptive tuner (re-)selected the superstep's knobs.
+    TunerDecision {
+        /// Rendered `schedule/strategy/iteration` triple of the chosen
+        /// [`StepPlan`](crate::engine::tune::StepPlan).
+        mode: String,
+    },
+    /// A worker stole the given shard from another worker's deque. One
+    /// instant per successful steal — the count always matches
+    /// [`RunMetrics::steals`](crate::metrics::RunMetrics::steals).
+    Steal {
+        /// The migrated shard.
+        shard: u32,
+    },
+    /// The run executed against a mutated graph (delta overlay present).
+    EpochBump {
+        /// The graph's mutation epoch.
+        epoch: u64,
+    },
+    /// The run executed against a freshly compacted graph (non-zero
+    /// epoch, empty overlay).
+    Compaction {
+        /// The graph's mutation epoch.
+        epoch: u64,
+    },
+}
+
+impl InstantKind {
+    /// Stable name (trace-event `name` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            InstantKind::TunerDecision { .. } => "tuner-decision",
+            InstantKind::Steal { .. } => "steal",
+            InstantKind::EpochBump { .. } => "epoch-bump",
+            InstantKind::Compaction { .. } => "compaction",
+        }
+    }
+}
+
+/// One trace event. `tid` is a worker index; the lane one past the last
+/// worker ([`RunTrace::engine_lane`]) carries the engine's own serial
+/// sections and whole-phase wall spans.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A timed interval on lane `tid`.
+    Span {
+        /// Lane the interval ran on.
+        tid: u32,
+        /// Superstep it belongs to.
+        superstep: u32,
+        /// Phase it belongs to.
+        phase: Phase,
+        /// `Some((shard, stolen))` for per-shard execution spans;
+        /// `None` for whole-phase spans.
+        shard: Option<(u32, bool)>,
+        /// Start, ns since run start.
+        start_ns: u64,
+        /// End, ns since run start.
+        end_ns: u64,
+    },
+    /// A point event on lane `tid`.
+    Instant {
+        /// Lane the event fired on.
+        tid: u32,
+        /// Superstep it belongs to.
+        superstep: u32,
+        /// What happened.
+        kind: InstantKind,
+        /// Timestamp, ns since run start.
+        ts_ns: u64,
+    },
+    /// Per-superstep irregularity sample, recorded at the barrier.
+    Counter {
+        /// Superstep the sample summarises.
+        superstep: u32,
+        /// Timestamp (the barrier), ns since run start.
+        ts_ns: u64,
+        /// Max-over-mean of the measured per-shard execution times this
+        /// superstep (1.0 when balanced, or when the run has no shard
+        /// spans — the flat engine).
+        skew: f64,
+        /// Messages per receiving vertex this superstep.
+        fan_in: f64,
+        /// CAS retries observed by the contention probes this superstep.
+        cas_retries: u64,
+        /// Lock acquisitions that had to spin, ditto.
+        lock_contended: u64,
+        /// Useful fraction of scanned vector lanes (1.0 when nothing
+        /// vectorised — same convention as `LaneCounters::ratio`).
+        lane_utilisation: f64,
+    },
+}
+
+/// A finished run's event trace: what `--trace-out` serialises and
+/// `--trace-summary` renders. Attached to
+/// [`RunMetrics::trace`](crate::metrics::RunMetrics::trace) when
+/// [`EngineConfig::trace`](crate::engine::EngineConfig) is set.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunTrace {
+    /// Worker-lane count; lane `workers` is the engine lane.
+    pub workers: usize,
+    /// All events, in per-lane append order (not globally sorted —
+    /// Chrome trace-event consumers do not require it).
+    pub events: Vec<Event>,
+}
+
+impl RunTrace {
+    /// An empty trace for `workers` worker lanes when `enabled`, `None`
+    /// otherwise. Compiled to a constant `None` under the `no-trace`
+    /// feature — the simulator's gate (the real engine gates through
+    /// [`TraceBuffers::checkout`](crate::trace::buf::TraceBuffers::checkout)).
+    pub fn for_run(enabled: bool, workers: usize) -> Option<RunTrace> {
+        #[cfg(feature = "no-trace")]
+        {
+            let _ = (enabled, workers);
+            None
+        }
+        #[cfg(not(feature = "no-trace"))]
+        {
+            if enabled {
+                Some(RunTrace {
+                    workers,
+                    events: Vec::new(),
+                })
+            } else {
+                None
+            }
+        }
+    }
+
+    /// The lane carrying engine-serial sections and whole-phase spans.
+    pub fn engine_lane(&self) -> u32 {
+        self.workers as u32
+    }
+
+    /// Number of steal instants in the trace (tested against
+    /// [`RunMetrics::steals`](crate::metrics::RunMetrics::steals)).
+    pub fn steal_instants(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, Event::Instant { kind: InstantKind::Steal { .. }, .. }))
+            .count()
+    }
+
+    /// Record the graph's mutation state as instants at the head of the
+    /// timeline: an epoch bump when the run saw a non-zero epoch, a
+    /// compaction marker when that epoch's delta overlay was empty
+    /// (compaction folds the overlay into the base CSR). Called by the
+    /// session after the run — graph mutation is a between-runs affair.
+    pub fn note_epoch(&mut self, epoch: u64, delta_edges: u64) {
+        if epoch == 0 {
+            return;
+        }
+        let tid = self.engine_lane();
+        let kind = if delta_edges == 0 {
+            InstantKind::Compaction { epoch }
+        } else {
+            InstantKind::EpochBump { epoch }
+        };
+        self.events.push(Event::Instant {
+            tid,
+            superstep: 0,
+            kind,
+            ts_ns: 0,
+        });
+    }
+}

@@ -1,0 +1,34 @@
+//! Irregularity observability plane (DESIGN.md §2.10).
+//!
+//! The paper's thesis is that vertex-centric workloads are irregular in
+//! ways aggregate timings hide — per-superstep skew, fine-grain
+//! synchronisation, unpredictable access patterns. This module makes
+//! that irregularity *visible*: the engine (and the cost-model
+//! simulator, over its virtual clock) records per-worker phase spans,
+//! per-shard execution spans with owner-vs-stolen attribution, instants
+//! for tuner decisions / steals / graph epochs, and one per-superstep
+//! sample of skew, fan-in, contention and lane utilisation.
+//!
+//! Structure:
+//! * [`event`] — the event taxonomy and the finished [`RunTrace`];
+//! * [`buf`] — hot-path recording: per-worker append segments
+//!   (`MessageLog` discipline), drained only at barriers, pooled by the
+//!   session;
+//! * [`chrome`] — `--trace-out`: Chrome trace-event JSON for Perfetto;
+//! * [`summary`] — `--trace-summary`: per-superstep terminal rendering.
+//!
+//! Tracing is runtime-opt-in (`EngineConfig::trace`, zero overhead when
+//! off) and can be compiled out entirely with the `no-trace` feature,
+//! which turns the two construction gates ([`TraceBuffers::checkout`],
+//! [`RunTrace::for_run`]) into constant `None` so every recording site
+//! is statically dead.
+
+pub mod buf;
+pub mod chrome;
+pub mod event;
+pub mod summary;
+
+pub use buf::{BarrierSignals, TraceBuffers};
+pub use chrome::chrome_trace_json;
+pub use event::{Event, InstantKind, Phase, RunTrace};
+pub use summary::render_summary;

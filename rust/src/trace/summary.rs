@@ -1,0 +1,217 @@
+//! Human sink for a [`RunTrace`]: the `--trace-summary` rendering.
+//!
+//! One line per superstep — engine-lane phase wall times plus the
+//! irregularity sample — and, per superstep, the top-k slowest shards by
+//! measured execution time with their steal attribution. The same
+//! numbers `--trace-out` ships to Perfetto, compressed for a terminal.
+
+use crate::trace::event::{Event, InstantKind, Phase, RunTrace};
+use crate::util::timer::fmt_duration;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Fixed render order for phase wall times.
+const PHASES: [Phase; 5] = [
+    Phase::Compute,
+    Phase::Scatter,
+    Phase::Flush,
+    Phase::Apply,
+    Phase::Barrier,
+];
+
+fn phase_idx(p: Phase) -> usize {
+    match p {
+        Phase::Compute => 0,
+        Phase::Scatter => 1,
+        Phase::Flush => 2,
+        Phase::Apply => 3,
+        Phase::Barrier => 4,
+    }
+}
+
+#[derive(Default)]
+struct StepAgg {
+    /// Engine-lane wall ns per phase (indexed by `phase_idx`).
+    phase_ns: [u64; 5],
+    /// Per-shard measured ns + times stolen this superstep.
+    shards: BTreeMap<u32, (u64, u32)>,
+    steals: u64,
+    mode: Option<String>,
+    /// (skew, fan_in, cas, lock, lanes) from the barrier sample.
+    sample: Option<(f64, f64, u64, u64, f64)>,
+}
+
+fn ns(d: u64) -> String {
+    fmt_duration(Duration::from_nanos(d))
+}
+
+/// Render `trace` as a per-superstep text summary listing the `top_k`
+/// slowest shards of each superstep.
+pub fn render_summary(trace: &RunTrace, top_k: usize) -> String {
+    let engine = trace.engine_lane();
+    let mut steps: BTreeMap<u32, StepAgg> = BTreeMap::new();
+    let mut epoch_note: Option<String> = None;
+    for ev in &trace.events {
+        match ev {
+            Event::Span {
+                tid,
+                superstep,
+                phase,
+                shard,
+                start_ns,
+                end_ns,
+            } => {
+                let agg = steps.entry(*superstep).or_default();
+                let dur = end_ns.saturating_sub(*start_ns);
+                match shard {
+                    Some((shard, stolen)) => {
+                        let e = agg.shards.entry(*shard).or_insert((0, 0));
+                        e.0 += dur;
+                        e.1 += u32::from(*stolen);
+                    }
+                    None if *tid == engine => agg.phase_ns[phase_idx(*phase)] += dur,
+                    None => {}
+                }
+            }
+            Event::Instant {
+                superstep, kind, ..
+            } => {
+                let agg = steps.entry(*superstep).or_default();
+                match kind {
+                    InstantKind::Steal { .. } => agg.steals += 1,
+                    InstantKind::TunerDecision { mode } => agg.mode = Some(mode.clone()),
+                    InstantKind::EpochBump { epoch } => {
+                        epoch_note = Some(format!("graph epoch {epoch} (delta overlay live)"));
+                    }
+                    InstantKind::Compaction { epoch } => {
+                        epoch_note = Some(format!("graph epoch {epoch} (freshly compacted)"));
+                    }
+                }
+            }
+            Event::Counter {
+                superstep,
+                skew,
+                fan_in,
+                cas_retries,
+                lock_contended,
+                lane_utilisation,
+                ..
+            } => {
+                steps.entry(*superstep).or_default().sample =
+                    Some((*skew, *fan_in, *cas_retries, *lock_contended, *lane_utilisation));
+            }
+        }
+    }
+
+    let total_steals: u64 = steps.values().map(|s| s.steals).sum();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== trace summary: {} workers, {} supersteps, {} steals ==",
+        trace.workers,
+        steps.len(),
+        total_steals
+    );
+    if let Some(note) = epoch_note {
+        let _ = writeln!(out, "   {note}");
+    }
+    for (step, agg) in &steps {
+        let _ = write!(out, "step {step:>3} ");
+        for p in PHASES {
+            let d = agg.phase_ns[phase_idx(p)];
+            if d > 0 {
+                let _ = write!(out, " {} {}", p.name(), ns(d));
+            }
+        }
+        if let Some((skew, fan_in, cas, lock, lanes)) = agg.sample {
+            let _ = write!(
+                out,
+                " | skew {skew:.2} fan-in {fan_in:.2} cas {cas} lock {lock} lanes {lanes:.2}"
+            );
+        }
+        if agg.steals > 0 {
+            let _ = write!(out, " | steals {}", agg.steals);
+        }
+        if let Some(mode) = &agg.mode {
+            let _ = write!(out, " | mode {mode}");
+        }
+        out.push('\n');
+        if !agg.shards.is_empty() && top_k > 0 {
+            let mut by_time: Vec<(u32, u64, u32)> =
+                agg.shards.iter().map(|(&s, &(d, st))| (s, d, st)).collect();
+            by_time.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            let _ = write!(out, "         slowest shards:");
+            for (i, (s, d, st)) in by_time.iter().take(top_k).enumerate() {
+                let sep = if i == 0 { " " } else { ", " };
+                let _ = write!(out, "{sep}#{s} {}", ns(*d));
+                if *st > 0 {
+                    let _ = write!(out, " (stolen {st}x)");
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_ranks_shards_and_reports_signals() {
+        let trace = RunTrace {
+            workers: 2,
+            events: vec![
+                Event::Span {
+                    tid: 2,
+                    superstep: 0,
+                    phase: Phase::Scatter,
+                    shard: None,
+                    start_ns: 0,
+                    end_ns: 1_000_000,
+                },
+                Event::Span {
+                    tid: 0,
+                    superstep: 0,
+                    phase: Phase::Scatter,
+                    shard: Some((5, false)),
+                    start_ns: 0,
+                    end_ns: 900_000,
+                },
+                Event::Span {
+                    tid: 1,
+                    superstep: 0,
+                    phase: Phase::Scatter,
+                    shard: Some((2, true)),
+                    start_ns: 0,
+                    end_ns: 100_000,
+                },
+                Event::Instant {
+                    tid: 1,
+                    superstep: 0,
+                    kind: InstantKind::Steal { shard: 2 },
+                    ts_ns: 10,
+                },
+                Event::Counter {
+                    superstep: 0,
+                    ts_ns: 1_000_000,
+                    skew: 1.8,
+                    fan_in: 1.2,
+                    cas_retries: 4,
+                    lock_contended: 0,
+                    lane_utilisation: 1.0,
+                },
+            ],
+        };
+        let s = render_summary(&trace, 2);
+        assert!(s.contains("2 workers, 1 supersteps, 1 steals"), "{s}");
+        assert!(s.contains("skew 1.80"), "{s}");
+        let five = s.find("#5").expect("slowest shard listed");
+        let two = s.find("#2").expect("stolen shard listed");
+        assert!(five < two, "shards ranked by time:\n{s}");
+        assert!(s.contains("(stolen 1x)"), "{s}");
+        assert!(s.contains("steals 1"), "{s}");
+    }
+}

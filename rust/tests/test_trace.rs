@@ -1,0 +1,314 @@
+//! Observability-plane integration tests (DESIGN.md §2.10).
+//!
+//! The plane's contract is threefold: tracing must be *transparent*
+//! (bit-identical results and superstep counts with tracing on or off,
+//! across the whole configuration grid), *faithful* (spans nest and
+//! order like the phases that produced them; steal instants agree with
+//! the engine's measured steal counter), and *portable* (the Chrome
+//! trace-event export is structurally sound, and the simulator emits
+//! the same schema over its virtual clock).
+
+#[cfg(not(feature = "no-trace"))]
+mod traced {
+    use ipregel::algos::{ConnectedComponents, PageRank, Sssp};
+    use ipregel::combine::Strategy;
+    use ipregel::engine::{EngineConfig, GraphSession, Partitioning, RunOptions};
+    use ipregel::graph::gen;
+    use ipregel::layout::Layout;
+    use ipregel::sched::Schedule;
+    use ipregel::sim::SimEngine;
+    use ipregel::trace::{chrome_trace_json, render_summary, Event, InstantKind, Phase};
+    use std::collections::BTreeMap;
+
+    /// Strategy × Layout × Schedule × Partitioning — the grid the
+    /// transparency claim is tested over (steal rides on the sharded
+    /// configurations, adaptive is exercised separately).
+    fn grid() -> Vec<EngineConfig> {
+        let mut cfgs = Vec::new();
+        for &strategy in &[Strategy::Lock, Strategy::CasNeutral, Strategy::Hybrid] {
+            for &layout in &[Layout::Interleaved, Layout::Externalised] {
+                for &schedule in &[Schedule::Static, Schedule::Dynamic { chunk: 32 }] {
+                    for &(partitioning, steal) in &[
+                        (Partitioning::None, false),
+                        (Partitioning::Shards(8), false),
+                        (Partitioning::Shards(8), true),
+                    ] {
+                        cfgs.push(
+                            EngineConfig::default()
+                                .threads(4)
+                                .strategy(strategy)
+                                .layout(layout)
+                                .schedule(schedule)
+                                .partitioning(partitioning)
+                                .steal(steal),
+                        );
+                    }
+                }
+            }
+        }
+        cfgs
+    }
+
+    #[test]
+    fn tracing_is_bit_transparent_across_the_grid() {
+        let g = gen::rmat(9, 6, 0.57, 0.19, 0.19, 11);
+        let session = GraphSession::new(&g);
+        let p = PageRank::default();
+        for cfg in grid() {
+            let plain = session.run_with(&p, RunOptions::new().config(cfg));
+            let traced = session.run_with(&p, RunOptions::new().config(cfg.trace(true)));
+            assert_eq!(plain.values, traced.values, "values drift under {cfg:?}");
+            assert_eq!(
+                plain.metrics.num_supersteps(),
+                traced.metrics.num_supersteps(),
+                "superstep drift under {cfg:?}"
+            );
+            assert_eq!(
+                plain.metrics.total_messages(),
+                traced.metrics.total_messages(),
+                "message drift under {cfg:?}"
+            );
+            assert!(plain.metrics.trace.is_none(), "untraced run carries a trace");
+            let tr = traced.metrics.trace.as_ref().expect("traced run lost its trace");
+            assert_eq!(tr.workers, 4, "one lane per worker under {cfg:?}");
+            assert!(!tr.events.is_empty(), "empty trace under {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn tracing_is_transparent_under_the_adaptive_tuner() {
+        let g = gen::barabasi_albert(800, 4, 5);
+        let session = GraphSession::new(&g);
+        let p = Sssp::from_hub(&g);
+        for &partitioning in &[Partitioning::None, Partitioning::Shards(8)] {
+            let cfg = EngineConfig::default()
+                .threads(4)
+                .adaptive(true)
+                .steal(true)
+                .partitioning(partitioning)
+                .bypass(true);
+            let plain = session.run_with(&p, RunOptions::new().config(cfg));
+            let traced = session.run_with(&p, RunOptions::new().config(cfg.trace(true)));
+            assert_eq!(plain.values, traced.values, "{partitioning:?}");
+            assert_eq!(
+                plain.metrics.num_supersteps(),
+                traced.metrics.num_supersteps(),
+                "{partitioning:?}"
+            );
+            // The tuner's decision stream must be identical too: the trace
+            // plane peeks the contention probes, it never drains them.
+            assert_eq!(
+                plain.metrics.tuner_decisions.len(),
+                traced.metrics.tuner_decisions.len(),
+                "{partitioning:?}"
+            );
+            let tr = traced.metrics.trace.as_ref().expect("trace");
+            let decisions = tr
+                .events
+                .iter()
+                .filter(|e| {
+                    matches!(e, Event::Instant { kind: InstantKind::TunerDecision { .. }, .. })
+                })
+                .count();
+            assert_eq!(
+                decisions,
+                traced.metrics.tuner_decisions.len(),
+                "one tuner instant per decision {partitioning:?}"
+            );
+        }
+    }
+
+    /// Per-superstep span layout of a partitioned run: every worker
+    /// scatter span ends before any flush span starts, every flush span
+    /// ends before the apply span starts, and spans on one lane never
+    /// overlap.
+    #[test]
+    fn partitioned_phases_are_ordered_and_lanes_are_sequential() {
+        let g = gen::rmat(9, 6, 0.57, 0.19, 0.19, 23);
+        let cfg = EngineConfig::default()
+            .threads(4)
+            .partitioning(Partitioning::Shards(8))
+            .trace(true);
+        let r = GraphSession::with_config(&g, cfg).run(&PageRank::default());
+        let tr = r.metrics.trace.as_ref().expect("trace");
+
+        let mut by_step: BTreeMap<u32, Vec<(Phase, u64, u64)>> = BTreeMap::new();
+        let mut by_lane: BTreeMap<u32, Vec<(u64, u64)>> = BTreeMap::new();
+        for ev in &tr.events {
+            if let Event::Span { tid, superstep, phase, start_ns, end_ns, .. } = ev {
+                assert!(end_ns >= start_ns, "negative span");
+                assert!(*tid <= tr.engine_lane(), "unknown lane {tid}");
+                by_step.entry(*superstep).or_default().push((*phase, *start_ns, *end_ns));
+                by_lane.entry(*tid).or_default().push((*start_ns, *end_ns));
+            }
+        }
+        assert!(!by_step.is_empty());
+        for (step, spans) in &by_step {
+            let max_end = |p: Phase| spans.iter().filter(|s| s.0 == p).map(|s| s.2).max();
+            let min_start = |p: Phase| spans.iter().filter(|s| s.0 == p).map(|s| s.1).min();
+            if let (Some(se), Some(fs)) = (max_end(Phase::Scatter), min_start(Phase::Flush)) {
+                assert!(se <= fs, "step {step}: scatter ends {se} after flush starts {fs}");
+            }
+            if let (Some(fe), Some(aps)) = (max_end(Phase::Flush), min_start(Phase::Apply)) {
+                assert!(fe <= aps, "step {step}: flush ends {fe} after apply starts {aps}");
+            }
+        }
+        for (lane, spans) in by_lane.iter_mut() {
+            spans.sort_unstable();
+            for w in spans.windows(2) {
+                assert!(
+                    w[1].0 >= w[0].1,
+                    "lane {lane}: overlapping spans {:?} and {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+        // One irregularity sample per superstep, and measured shard times
+        // feed the metrics-side NUMA vector.
+        let counters = tr.events.iter().filter(|e| matches!(e, Event::Counter { .. })).count();
+        assert_eq!(counters, r.metrics.num_supersteps(), "one sample per superstep");
+        assert_eq!(r.metrics.shard_times.len(), 8, "measured per-shard times");
+        assert!(r.metrics.shard_times.iter().any(|d| d.as_nanos() > 0));
+    }
+
+    /// Steal attribution: every stolen-shard execution records exactly
+    /// one instant, so the trace's steal count equals the engine's
+    /// measured counter for the same run.
+    #[test]
+    fn steal_instants_match_the_measured_steal_counter() {
+        // Star graph: one hot shard, so stealing reliably has material.
+        let g = gen::star(4000);
+        let cfg = EngineConfig::default()
+            .threads(4)
+            .partitioning(Partitioning::Shards(8))
+            .steal(true)
+            .trace(true);
+        let r = GraphSession::with_config(&g, cfg).run(&ConnectedComponents);
+        let tr = r.metrics.trace.as_ref().expect("trace");
+        assert_eq!(
+            tr.steal_instants() as u64,
+            r.metrics.steals,
+            "steal instants vs RunMetrics::steals"
+        );
+        let stolen_spans = tr
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::Span { shard: Some((_, true)), .. }))
+            .count();
+        assert_eq!(stolen_spans as u64, r.metrics.steals, "stolen spans vs steals");
+    }
+
+    #[test]
+    fn chrome_export_is_structurally_sound() {
+        let g = gen::rmat(8, 5, 0.57, 0.19, 0.19, 7);
+        let cfg = EngineConfig::default()
+            .threads(4)
+            .partitioning(Partitioning::Shards(4))
+            .steal(true)
+            .adaptive(true)
+            .trace(true);
+        let r = GraphSession::with_config(&g, cfg).run(&PageRank::default());
+        let tr = r.metrics.trace.as_ref().expect("trace");
+        let j = chrome_trace_json(tr);
+        assert!(j.starts_with("{\"traceEvents\":[\n"));
+        assert!(j.trim_end().ends_with("]}"));
+        // Balanced structure (mode strings contain only balanced braces)
+        // and strictly finite numbers — Perfetto rejects NaN/Infinity.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!(!j.contains("NaN") && !j.contains("inf"), "non-finite number leaked");
+        // One metadata record per lane plus the process record.
+        let meta = j.matches("\"ph\":\"M\"").count();
+        assert_eq!(meta, tr.workers + 2);
+        assert!(j.contains("\"name\":\"engine\""));
+        assert!(j.contains("\"name\":\"shard-skew\""));
+        // The summary sink renders the same trace.
+        let s = render_summary(tr, 3);
+        assert!(s.starts_with("== trace summary: 4 workers"));
+        assert!(s.contains("slowest shards:"), "{s}");
+    }
+
+    /// The simulator emits the same schema over its virtual clock, and
+    /// the plane must not perturb the virtual time it reports.
+    #[test]
+    fn sim_emits_the_same_schema_on_the_virtual_clock() {
+        let g = gen::rmat(8, 5, 0.57, 0.19, 0.19, 19);
+        let p = PageRank::default();
+        for &partitioning in &[Partitioning::None, Partitioning::Shards(8)] {
+            let cfg = EngineConfig::default()
+                .threads(8)
+                .partitioning(partitioning)
+                .steal(true);
+            let plain = SimEngine::new(&g, &p, cfg).run();
+            let traced = SimEngine::new(&g, &p, cfg.trace(true)).run();
+            assert!(plain.trace.is_none());
+            assert_eq!(plain.values, traced.values, "{partitioning:?}");
+            assert_eq!(plain.supersteps, traced.supersteps, "{partitioning:?}");
+            assert_eq!(
+                plain.virtual_seconds, traced.virtual_seconds,
+                "trace perturbed the virtual clock {partitioning:?}"
+            );
+            let tr = traced.trace.as_ref().expect("sim trace");
+            assert_eq!(tr.workers, 8);
+            let spans = tr.events.iter().filter(|e| matches!(e, Event::Span { .. })).count();
+            assert!(spans > 0, "sim emitted no spans {partitioning:?}");
+            let counters =
+                tr.events.iter().filter(|e| matches!(e, Event::Counter { .. })).count();
+            assert_eq!(counters, traced.supersteps, "one sample per virtual superstep");
+            // Virtual spans respect lane bounds and the virtual clock's
+            // monotonicity, so both sinks accept them unchanged.
+            for ev in &tr.events {
+                if let Event::Span { tid, start_ns, end_ns, .. } = ev {
+                    assert!(*tid <= tr.engine_lane());
+                    assert!(end_ns >= start_ns);
+                }
+            }
+            let j = chrome_trace_json(tr);
+            assert_eq!(j.matches('{').count(), j.matches('}').count());
+            assert!(render_summary(tr, 2).starts_with("== trace summary"));
+        }
+    }
+
+    /// Session pooling: trace buffers checked out per traced run return
+    /// to the pool afterwards, so a session alternating traced/untraced
+    /// runs allocates one buffer set, not one per run.
+    #[test]
+    fn session_pools_trace_buffers_across_runs() {
+        let g = gen::barabasi_albert(400, 3, 3);
+        let session = GraphSession::new(&g);
+        let p = ConnectedComponents;
+        assert_eq!(session.pooled_traces(), 0);
+        let base = EngineConfig::default().threads(4);
+        for _ in 0..3 {
+            let traced = session.run_with(&p, RunOptions::new().config(base.trace(true)));
+            assert!(traced.metrics.trace.is_some());
+            let plain = session.run_with(&p, RunOptions::new().config(base));
+            assert!(plain.metrics.trace.is_none());
+            assert_eq!(session.pooled_traces(), 1, "buffers recycled, not re-allocated");
+        }
+    }
+}
+
+/// `--features no-trace` compiles the plane out: the construction gates
+/// return `None`, so a run *requesting* tracing still yields no trace.
+#[cfg(feature = "no-trace")]
+mod compiled_out {
+    use ipregel::algos::PageRank;
+    use ipregel::engine::{EngineConfig, GraphSession};
+    use ipregel::graph::gen;
+    use ipregel::sim::SimEngine;
+    use ipregel::trace::RunTrace;
+
+    #[test]
+    fn no_trace_feature_disables_collection_entirely() {
+        let g = gen::rmat(8, 5, 0.57, 0.19, 0.19, 7);
+        let cfg = EngineConfig::default().threads(4).trace(true);
+        let r = GraphSession::with_config(&g, cfg).run(&PageRank::default());
+        assert!(r.metrics.trace.is_none());
+        assert!(r.metrics.shard_times.is_empty());
+        let sim = SimEngine::new(&g, &PageRank::default(), cfg).run();
+        assert!(sim.trace.is_none());
+        assert!(RunTrace::for_run(true, 4).is_none());
+    }
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Emit the committed bench baseline: run the four tracked benches in
+# Emit the committed bench baseline: run the tracked benches in
 # BENCH_SMOKE mode and merge their JSON outputs into BENCH_baseline.json
 # at the repository root.
 #
@@ -27,9 +27,10 @@ reuse_for() {
     bench_dynamic) echo "${BENCH_DYNAMIC_JSON:-}" ;;
     bench_adaptive) echo "${BENCH_ADAPTIVE_JSON:-}" ;;
     bench_scatter) echo "${BENCH_SCATTER_JSON:-}" ;;
+    bench_trace) echo "${BENCH_TRACE_JSON:-}" ;;
   esac
 }
-for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter; do
+for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter bench_trace; do
   reuse="$(reuse_for "$bench")"
   if [ -n "$reuse" ] && [ -f "$reuse" ]; then
     echo "== $bench (reusing $reuse) ==" >&2
@@ -47,7 +48,7 @@ done
   echo "  \"rustc\": \"$(rustc --version)\","
   echo "  \"smoke\": true,"
   first=1
-  for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter; do
+  for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter bench_trace; do
     [ "$first" = 1 ] || echo ','
     first=0
     printf '  "%s": ' "$bench"
