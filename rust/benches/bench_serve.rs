@@ -1,0 +1,295 @@
+//! Serving-layer tail-latency bench: a seeded stream of bounded
+//! interactive queries (ego-net BFS / point SSSP) measured on an idle
+//! [`QueryServer`], then again with a whole-graph batch PageRank
+//! contending at the admission gate — emitting `BENCH_serve.json`. The
+//! headline numbers: p50/p99 small-query latency in both phases (the
+//! tail amplification multi-tenancy costs), query throughput, and the
+//! pool-hit rate proving concurrent queries share warm stores. Answers
+//! are asserted bit-identical to solo runs in both phases.
+//!
+//! Run: `cargo bench --bench bench_serve`
+//!      `BENCH_SMOKE=1 cargo bench --bench bench_serve`   (CI smoke)
+//!      `BENCH_OUT=path.json` overrides the output location.
+
+use ipregel::algos::query::{EgoNetBfs, PointSssp};
+use ipregel::algos::PageRank;
+use ipregel::engine::{EngineConfig, GraphSession};
+use ipregel::graph::csr::Csr;
+use ipregel::graph::gen;
+use ipregel::metrics::LatencyStats;
+use ipregel::serve::{AdmissionController, QueryServer, QuerySpec};
+use ipregel::util::rng::Rng;
+use ipregel::util::timer::{fmt_duration, Timer};
+use std::fmt::Write as _;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One workload item: a root and which of the two query programs to run.
+#[derive(Clone, Copy)]
+struct Item {
+    root: u32,
+    point_sssp: bool,
+}
+
+struct Phase {
+    label: &'static str,
+    stats: LatencyStats,
+    wall: Duration,
+    batch_supersteps: usize,
+    batch_millis: f64,
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn json_escape_free(s: &str) -> &str {
+    debug_assert!(!s.contains('"') && !s.contains('\\'));
+    s
+}
+
+/// Drain the workload from `submitters` threads against `server`,
+/// optionally alongside a batch PageRank, asserting every answer matches
+/// its solo ground truth. Returns the phase's latency stats.
+#[allow(clippy::too_many_arguments)]
+fn run_phase(
+    label: &'static str,
+    server: &QueryServer,
+    workload: &[Item],
+    expected: &[Vec<u64>],
+    expected_sssp: &[Vec<f64>],
+    submitters: usize,
+    radius: u64,
+    batch: Option<&PageRank>,
+) -> Phase {
+    let next = Mutex::new(0usize);
+    let latencies = Mutex::new(Vec::new());
+    let batch_out = Mutex::new((0usize, 0.0f64));
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        if let Some(p) = batch {
+            let batch_out = &batch_out;
+            s.spawn(move || {
+                let r = server
+                    .execute(p, &QuerySpec::batch())
+                    .expect("admission queue is unbounded");
+                *batch_out.lock().unwrap() = (r.query.supersteps, ms(r.query.run_time));
+            });
+        }
+        for _ in 0..submitters.max(1) {
+            let (next, latencies) = (&next, &latencies);
+            s.spawn(move || loop {
+                let i = {
+                    let mut ix = next.lock().unwrap();
+                    let i = *ix;
+                    *ix += 1;
+                    i
+                };
+                let Some(&item) = workload.get(i) else {
+                    break;
+                };
+                let spec = QuerySpec::interactive();
+                let latency = if item.point_sssp {
+                    let r = server
+                        .execute(
+                            &PointSssp {
+                                source: item.root,
+                                cutoff: radius as f64,
+                            },
+                            &spec,
+                        )
+                        .expect("admission queue is unbounded");
+                    assert_eq!(
+                        r.values, expected_sssp[i],
+                        "{label}: served point-sssp diverged from solo (query {i})"
+                    );
+                    r.query.latency
+                } else {
+                    let r = server
+                        .execute(
+                            &EgoNetBfs {
+                                root: item.root,
+                                radius,
+                            },
+                            &spec,
+                        )
+                        .expect("admission queue is unbounded");
+                    assert_eq!(
+                        r.values, expected[i],
+                        "{label}: served ego-net diverged from solo (query {i})"
+                    );
+                    r.query.latency
+                };
+                latencies.lock().unwrap().push(latency);
+            });
+        }
+    });
+    let wall = t.elapsed();
+    let (batch_supersteps, batch_millis) = batch_out.into_inner().unwrap();
+    Phase {
+        label,
+        stats: LatencyStats::from_durations(&latencies.into_inner().unwrap()),
+        wall,
+        batch_supersteps,
+        batch_millis,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+
+    let (g, queries): (Csr, usize) = if smoke {
+        (gen::rmat(10, 6, 0.57, 0.19, 0.19, 7), 24)
+    } else {
+        (gen::rmat(13, 8, 0.57, 0.19, 0.19, 7), 96)
+    };
+    let threads = 4usize;
+    let gate = 4usize;
+    let radius = 2u64;
+    let batch_iterations = if smoke { 5 } else { 20 };
+    eprintln!(
+        "== bench_serve ({}): |V|={} |E|={} {} queries, gate {} ==",
+        if smoke { "SMOKE" } else { "full" },
+        g.num_vertices(),
+        g.num_edges(),
+        queries,
+        gate
+    );
+
+    let n = g.num_vertices() as u64;
+    let mut rng = Rng::new(0x5E44E);
+    let workload: Vec<Item> = (0..queries)
+        .map(|i| Item {
+            root: rng.below(n) as u32,
+            point_sssp: i % 2 == 1,
+        })
+        .collect();
+
+    // Solo ground truth for every workload item, from a quiet session.
+    let cfg = EngineConfig::default().threads(threads);
+    let solo_graph = g.rebuilt();
+    let solo = GraphSession::with_config(&solo_graph, cfg);
+    let mut expected: Vec<Vec<u64>> = Vec::with_capacity(queries);
+    let mut expected_sssp: Vec<Vec<f64>> = Vec::with_capacity(queries);
+    for item in &workload {
+        if item.point_sssp {
+            expected.push(Vec::new());
+            expected_sssp.push(
+                solo.run(&PointSssp {
+                    source: item.root,
+                    cutoff: radius as f64,
+                })
+                .values,
+            );
+        } else {
+            expected.push(
+                solo.run(&EgoNetBfs {
+                    root: item.root,
+                    radius,
+                })
+                .values,
+            );
+            expected_sssp.push(Vec::new());
+        }
+    }
+
+    let server = QueryServer::with_config(g, cfg, AdmissionController::new(gate));
+    let pr = PageRank {
+        iterations: batch_iterations,
+        damping: 0.85,
+    };
+    let phases = [
+        run_phase(
+            "idle", &server, &workload, &expected, &expected_sssp, gate, radius, None,
+        ),
+        run_phase(
+            "with-batch",
+            &server,
+            &workload,
+            &expected,
+            &expected_sssp,
+            gate,
+            radius,
+            Some(&pr),
+        ),
+    ];
+    for p in &phases {
+        eprintln!(
+            "  {:<10} {} queries: p50 {} p99 {} max {} ({:.1} q/s)",
+            p.label,
+            p.stats.count,
+            fmt_duration(p.stats.p50()),
+            fmt_duration(p.stats.p99()),
+            fmt_duration(p.stats.max()),
+            p.stats.count as f64 / p.wall.as_secs_f64().max(1e-9),
+        );
+    }
+    let pool = server.pool_stats();
+
+    // ---- Emit BENCH_serve.json -------------------------------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(j, "  \"bench\": \"serve\",");
+    let _ = writeln!(j, "  \"smoke\": {},", smoke);
+    let _ = writeln!(
+        j,
+        "  \"graph\": {{\"vertices\": {}, \"edges\": {}}},",
+        server.snapshot().session().graph().num_vertices(),
+        server.snapshot().session().graph().num_edges()
+    );
+    let _ = writeln!(j, "  \"threads\": {},", threads);
+    let _ = writeln!(j, "  \"gate\": {},", gate);
+    let _ = writeln!(j, "  \"queries_per_phase\": {},", queries);
+    let _ = writeln!(
+        j,
+        "  \"p99_tail_amplification\": {:.4},",
+        phases[1].stats.p99_ns as f64 / (phases[0].stats.p99_ns as f64).max(1.0)
+    );
+    let _ = writeln!(
+        j,
+        "  \"pool\": {{\"store_checkouts\": {}, \"store_hits\": {}}},",
+        pool.store_checkouts, pool.store_hits
+    );
+    j.push_str("  \"phases\": [\n");
+    for (i, p) in phases.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"phase\": \"{}\", \"queries\": {}, \"p50_ms\": {:.4}, \
+             \"p99_ms\": {:.4}, \"mean_ms\": {:.4}, \"max_ms\": {:.4}, \
+             \"qps\": {:.2}, \"batch_supersteps\": {}, \"batch_millis\": {:.3}}}",
+            json_escape_free(p.label),
+            p.stats.count,
+            ms(p.stats.p50()),
+            ms(p.stats.p99()),
+            ms(p.stats.mean()),
+            ms(p.stats.max()),
+            p.stats.count as f64 / p.wall.as_secs_f64().max(1e-9),
+            p.batch_supersteps,
+            p.batch_millis
+        );
+        j.push_str(if i + 1 < phases.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ]\n}\n");
+
+    std::fs::write(&out_path, &j).expect("writing BENCH_serve.json");
+    eprintln!("wrote {out_path} ({} phases)", phases.len());
+
+    // Acceptance gates (smoke only, where CI runs them). Values parity
+    // was asserted inline per query; these pin the serving plumbing.
+    if smoke {
+        for p in &phases {
+            assert_eq!(p.stats.count, queries, "{}: lost queries", p.label);
+        }
+        assert!(
+            phases[1].batch_supersteps > 0,
+            "the contended phase's batch run never ran"
+        );
+        assert!(
+            pool.store_hits > 0,
+            "concurrent queries never hit the store pool"
+        );
+        assert_eq!(server.queries_completed() as usize, 2 * queries + 1);
+    }
+    eprintln!("parity checks passed");
+}

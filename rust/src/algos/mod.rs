@@ -8,7 +8,10 @@
 //! ([`DanglingPageRank`]), and warm-started, epoch-validated incremental
 //! recomputation over evolving graphs ([`IncrementalCc`],
 //! [`IncrementalWsssp`], [`DeltaPageRank`] — see
-//! [`incremental`]), and two **non-combinable** programs that need the
+//! [`incremental`]), bounded-scope serving queries whose frontier is
+//! local to the query rather than the graph ([`EgoNetBfs`],
+//! [`PointSssp`], [`top_k_deltas`] — see [`query`] and `serve/`), and
+//! two **non-combinable** programs that need the
 //! log delivery plane's full message multisets ([`Lpa`] label
 //! propagation and [`Triangles`] per-vertex triangle counting — see
 //! `combine/plane.rs`). Per the paper's programmability thesis, **no
@@ -24,6 +27,7 @@ pub mod lpa;
 pub mod maxval;
 pub mod pagerank;
 pub mod pagerank_dangling;
+pub mod query;
 pub mod reference;
 pub mod sssp;
 pub mod triangles;
@@ -39,5 +43,6 @@ pub use lpa::Lpa;
 pub use maxval::MaxValue;
 pub use pagerank::PageRank;
 pub use pagerank_dangling::DanglingPageRank;
+pub use query::{top_k_deltas, EgoNetBfs, PointSssp};
 pub use sssp::{Sssp, WeightedSssp, UNREACHED};
 pub use triangles::Triangles;

@@ -1,0 +1,270 @@
+//! Bounded-scope query programs for the serving layer (`serve/`).
+//!
+//! The Table II benchmarks sweep whole graphs; a serving workload is
+//! dominated by *point lookups* — "the 2-hop neighbourhood of this
+//! vertex", "everything within cost 6 of this depot", "which ranks moved
+//! most since the last batch". These programs are the bounded-scope
+//! twins of [`crate::algos::Bfs`] / [`crate::algos::WeightedSssp`] /
+//! [`crate::algos::PageRank`]: identical propagation rules, plus one
+//! scope bound that keeps the frontier (and therefore latency) local to
+//! the query instead of proportional to the graph.
+//!
+//! Per the paper's programmability thesis the bound lives in the
+//! *algorithm* (a radius/cutoff test before broadcasting), never in the
+//! engine: the same `compute` text runs under every engine
+//! configuration, so a served query is bit-identical to the same program
+//! run solo — the invariant `rust/tests/test_serve.rs` pins down.
+
+use crate::combine::MinCombiner;
+use crate::engine::{CombinedPlane, Context, Mode, NoAgg, VertexProgram};
+use crate::graph::csr::{Csr, VertexId};
+
+/// Level value for vertices outside the ego net (shared with
+/// [`crate::algos::UNREACHED`] — both are BFS levels).
+pub const OUTSIDE: u64 = u64::MAX;
+
+/// Ego-network BFS: levels out to `radius` hops from `root`, [`OUTSIDE`]
+/// beyond. The frontier dies after `radius` waves no matter how large
+/// the graph is, so the superstep count — and the token bill the serving
+/// layer charges — is bounded by the query, not the graph.
+#[derive(Clone, Copy, Debug)]
+pub struct EgoNetBfs {
+    /// Ego vertex.
+    pub root: VertexId,
+    /// Hop bound: vertices at level ≤ `radius` are inside the net.
+    pub radius: u64,
+}
+
+impl VertexProgram for EgoNetBfs {
+    type Value = u64;
+    type Message = u64;
+    type Comb = MinCombiner;
+    type Agg = NoAgg;
+    type Delivery = CombinedPlane;
+
+    fn mode(&self) -> Mode {
+        Mode::Push
+    }
+
+    fn combiner(&self) -> MinCombiner {
+        MinCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
+    }
+
+    fn init(&self, _g: &Csr, v: VertexId) -> u64 {
+        if v == self.root {
+            0
+        } else {
+            OUTSIDE
+        }
+    }
+
+    fn initially_active(&self, _g: &Csr, v: VertexId) -> bool {
+        v == self.root
+    }
+
+    fn compute<C: Context<u64, u64>>(&self, ctx: &mut C, msg: Option<u64>) {
+        let improved = if ctx.superstep() == 0 && ctx.id() == self.root {
+            true
+        } else if let Some(m) = msg {
+            if m < *ctx.value() {
+                *ctx.value_mut() = m;
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        // The scope bound: the wave stops at the radius. Everything else
+        // is Sssp::compute verbatim.
+        if improved && *ctx.value() < self.radius {
+            let next = *ctx.value() + 1;
+            ctx.broadcast(next);
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// Point-to-region shortest paths: weighted distances from `source` out
+/// to cost `cutoff`, `f64::INFINITY` beyond. With non-negative weights
+/// every prefix of a shortest path is itself shortest, so truncating
+/// relaxation at the cutoff loses nothing inside the region — the
+/// reference check below is literally Dijkstra with far entries masked.
+#[derive(Clone, Copy, Debug)]
+pub struct PointSssp {
+    /// Query origin.
+    pub source: VertexId,
+    /// Cost bound: distances ≤ `cutoff` are reported exactly.
+    pub cutoff: f64,
+}
+
+impl VertexProgram for PointSssp {
+    type Value = f64;
+    type Message = f64;
+    type Comb = MinCombiner;
+    type Agg = NoAgg;
+    type Delivery = CombinedPlane;
+
+    fn mode(&self) -> Mode {
+        Mode::Push
+    }
+
+    fn combiner(&self) -> MinCombiner {
+        MinCombiner
+    }
+
+    fn aggregator(&self) -> NoAgg {
+        NoAgg
+    }
+
+    fn init(&self, _g: &Csr, v: VertexId) -> f64 {
+        if v == self.source {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn initially_active(&self, _g: &Csr, v: VertexId) -> bool {
+        v == self.source
+    }
+
+    fn compute<C: Context<f64, f64>>(&self, ctx: &mut C, msg: Option<f64>) {
+        let improved = if ctx.superstep() == 0 && ctx.id() == self.source {
+            true
+        } else if let Some(m) = msg {
+            if m < *ctx.value() {
+                *ctx.value_mut() = m;
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        if improved {
+            let dist = *ctx.value();
+            for i in 0..ctx.out_degree() {
+                let (dst, w) = ctx.out_edge(i);
+                let next = dist + w;
+                // The scope bound: labels past the cutoff are never sent.
+                if next <= self.cutoff {
+                    ctx.send(dst, next);
+                }
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// The `k` vertices whose PageRank moved most between two rank vectors
+/// (e.g. before/after a mutation batch), ranked by `|new - old|`
+/// descending, ties broken by vertex id. The serving layer's "what
+/// changed" query: two short PageRank runs plus this O(n log n) scan.
+pub fn top_k_deltas(old: &[f64], new: &[f64], k: usize) -> Vec<(VertexId, f64)> {
+    let n = old.len().min(new.len());
+    let mut deltas: Vec<(VertexId, f64)> = (0..n)
+        .map(|v| (v as VertexId, (new[v] - old[v]).abs()))
+        .collect();
+    deltas.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    deltas.truncate(k);
+    deltas
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::reference;
+    use crate::engine::{EngineConfig, GraphSession, RunOptions};
+    use crate::graph::gen;
+
+    /// Serial reference: full BFS levels with everything past `radius`
+    /// masked to [`OUTSIDE`].
+    fn ego_reference(g: &Csr, root: VertexId, radius: u64) -> Vec<u64> {
+        reference::bfs_levels(g, root)
+            .into_iter()
+            .map(|l| if l <= radius { l } else { OUTSIDE })
+            .collect()
+    }
+
+    /// Serial reference: Dijkstra with far entries masked to infinity.
+    fn point_reference(g: &Csr, source: VertexId, cutoff: f64) -> Vec<f64> {
+        reference::dijkstra(g, source)
+            .into_iter()
+            .map(|d| if d <= cutoff { d } else { f64::INFINITY })
+            .collect()
+    }
+
+    #[test]
+    fn ego_net_matches_truncated_bfs() {
+        let g = gen::rmat(9, 4, 0.57, 0.19, 0.19, 31);
+        let root = g.max_out_degree_vertex();
+        for radius in [0u64, 1, 2, 3] {
+            let want = ego_reference(&g, root, radius);
+            let got = GraphSession::new(&g).run(&EgoNetBfs { root, radius });
+            assert_eq!(got.values, want, "radius {radius}");
+            // The wave bound: radius + a final echo-only superstep at most.
+            assert!(
+                got.metrics.num_supersteps() as u64 <= radius + 2,
+                "radius {radius}: {} supersteps",
+                got.metrics.num_supersteps()
+            );
+        }
+    }
+
+    #[test]
+    fn ego_net_radius_zero_is_just_the_root() {
+        let g = gen::path(6);
+        let got = GraphSession::new(&g).run(&EgoNetBfs { root: 2, radius: 0 });
+        let want: Vec<u64> = (0..6).map(|v| if v == 2 { 0 } else { OUTSIDE }).collect();
+        assert_eq!(got.values, want);
+    }
+
+    #[test]
+    fn point_sssp_matches_truncated_dijkstra() {
+        for seed in [3u64, 11] {
+            let base = gen::rmat(8, 4, 0.57, 0.19, 0.19, seed);
+            let g = gen::randomly_weighted(&base, 0.25, 8.0, seed ^ 0x5EED);
+            let source = g.max_out_degree_vertex();
+            for cutoff in [0.5, 4.0, 16.0] {
+                let want = point_reference(&g, source, cutoff);
+                let got = GraphSession::new(&g).run_with(
+                    &PointSssp { source, cutoff },
+                    RunOptions::new()
+                        .config(EngineConfig::default().threads(4).bypass(true)),
+                );
+                for v in g.vertices() {
+                    let (a, b) = (got.values[v as usize], want[v as usize]);
+                    assert!(
+                        (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-9,
+                        "seed {seed} cutoff {cutoff} v{v}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_deltas_ranks_by_magnitude_then_id() {
+        let old = [0.25, 0.25, 0.25, 0.25];
+        let new = [0.10, 0.30, 0.40, 0.20];
+        let got = top_k_deltas(&old, &new, 3);
+        assert_eq!(got.len(), 3);
+        // |Δ| = [0.15, 0.05, 0.15, 0.05]: the two 0.15s lead, id order.
+        assert_eq!(got[0].0, 0);
+        assert!((got[0].1 - 0.15).abs() < 1e-12);
+        assert_eq!(got[1].0, 2);
+        assert_eq!(got[2].0, 1);
+        let got_tie = top_k_deltas(&[0.0, 0.0], &[0.5, 0.5], 2);
+        assert_eq!(got_tie[0].0, 0, "ties break by vertex id");
+        assert_eq!(got_tie[1].0, 1);
+    }
+}

@@ -37,8 +37,10 @@ use std::path::{Path, PathBuf};
 const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
 
 /// Files subject to the no-panic rule (rule 4): the per-message scatter,
-/// deliver and collect paths plus the substrate they run on.
-const PANIC_DENY: [&str; 14] = [
+/// deliver and collect paths plus the substrate they run on, and the
+/// serving-loop policy arithmetic that must never unwind mid-slice.
+const PANIC_DENY: [&str; 15] = [
+    "src/serve/sched.rs",
     "src/engine/core.rs",
     "src/engine/shard.rs",
     "src/combine/strategy.rs",

@@ -90,6 +90,10 @@ pub(crate) struct EngineSetup<S, M: MessageValue> {
     /// the `no-trace` feature is on), pooled by the session like tuner
     /// state — see `trace/buf.rs`.
     pub trace: Option<TraceBuffers>,
+    /// Serving-layer context tag ([`crate::engine::RunOptions::tag`]):
+    /// stamped into [`RunMetrics`] and, on traced runs, emitted as a
+    /// `QueryContext` instant so interleaved traces stay attributable.
+    pub query_tag: Option<u64>,
 }
 
 /// The engine: graph + program + store + activity tracking.
@@ -135,6 +139,8 @@ pub struct Engine<'g, P: VertexProgram, S: VertexStore<P::Value, P::Message>> {
     /// branch per phase, and the `no-trace` feature makes this constant
     /// `None` so those sites are statically dead.
     trace: Option<TraceBuffers>,
+    /// Serving-layer context tag (see [`EngineSetup::query_tag`]).
+    query_tag: Option<u64>,
 }
 
 /// Shard routing for one vertex's context during partitioned scatter:
@@ -568,6 +574,7 @@ where
             tuner,
             cut_scratch,
             trace,
+            query_tag,
         } = setup;
         let comb = program.combiner();
         let agg = program.aggregator();
@@ -643,6 +650,7 @@ where
             tuner,
             cut_scratch,
             trace,
+            query_tag,
         }
     }
 
@@ -881,6 +889,14 @@ where
             .max_supersteps
             .map_or(self.cfg.max_supersteps, |h| h.min(self.cfg.max_supersteps));
 
+        // Serving-layer attribution: stamp the context tag into the
+        // metrics, and mark the trace before superstep 0 so interleaved
+        // Chrome traces can be sliced per query.
+        metrics.query_tag = self.query_tag;
+        if let (Some(tr), Some(tag)) = (self.trace.as_ref(), self.query_tag) {
+            tr.instant(tr.engine_lane(), 0, InstantKind::QueryContext { tag });
+        }
+
         if self.partition.is_some() {
             self.run_partitioned(&mut metrics, max_supersteps);
         } else {
@@ -934,6 +950,11 @@ where
 
         let mut superstep = 0usize;
         let mut delivered_total = 0u64;
+        // Per-query token budget (serving layer): cumulative messages +
+        // activations, checked at the barrier tail. `None` (every solo
+        // run) never enters the check, so the solo path is untouched.
+        let max_tokens = self.halt.max_tokens;
+        let mut tokens_used = 0u64;
         loop {
             // ---- Per-superstep knob plan --------------------------------
             // Fixed-config runs use the config verbatim; adaptive runs
@@ -1192,6 +1213,13 @@ where
                 metrics.halt_reason = HaltReason::Converged;
                 break;
             }
+            tokens_used += messages + active_count as u64;
+            if let Some(cap) = max_tokens {
+                if tokens_used >= cap {
+                    metrics.halt_reason = HaltReason::BudgetExhausted;
+                    break;
+                }
+            }
         }
         self.cut_scratch = scratch;
         if self.log.is_none() {
@@ -1235,6 +1263,10 @@ where
 
         let mut superstep = 0usize;
         let mut delivered_total = 0u64;
+        // Per-query token budget — see run_flat; identical semantics so
+        // budget-halted runs stay substrate-agnostic.
+        let max_tokens = self.halt.max_tokens;
+        let mut tokens_used = 0u64;
         loop {
             // ---- Per-superstep knob plan (see run_flat / engine/tune.rs)
             let step = match self.tuner.as_mut() {
@@ -1647,6 +1679,13 @@ where
             if converged {
                 metrics.halt_reason = HaltReason::Converged;
                 break;
+            }
+            tokens_used += messages + active_count as u64;
+            if let Some(cap) = max_tokens {
+                if tokens_used >= cap {
+                    metrics.halt_reason = HaltReason::BudgetExhausted;
+                    break;
+                }
             }
         }
         self.cut_scratch = scratch;

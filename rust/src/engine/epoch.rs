@@ -26,6 +26,13 @@
 //!   ([`crate::algos::incremental`]) refuse warm-start values whose
 //!   epoch doesn't chain to the current graph epoch.
 //!
+//! The serving layer (`serve/`) adds **epoch pinning** on top:
+//! a concurrent reader takes an [`EpochPin`] on the epoch its snapshot
+//! reflects, a writer applies mutations and publishes a *new* snapshot
+//! without waiting for pins to drain (snapshot isolation by
+//! copy-on-mutate), and [`EpochPins`] is the refcount registry that
+//! makes the pinned population observable.
+//!
 //! [`GraphSession`]: crate::engine::GraphSession
 //! [`MutationReceipt`]: crate::graph::dynamic::MutationReceipt
 
@@ -33,7 +40,7 @@ use crate::engine::shard::ShardState;
 use crate::graph::dynamic::MutationReceipt;
 use crate::graph::partition::PartitionPlan;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// A session's current epoch position, for callers that coordinate
 /// warm-start state across mutations (see
@@ -46,6 +53,102 @@ pub struct EpochWatermark {
     pub delta_edges: usize,
     /// `delta_edges / num_edges` at this instant.
     pub delta_occupancy: f64,
+}
+
+/// Refcount registry of pinned mutation epochs: which epochs have live
+/// readers, and how many. Writers never consult it to *block* — the
+/// serving layer publishes new snapshots by pointer swap and old
+/// snapshots stay alive for exactly as long as their pins (plus the
+/// `Arc`s holding them) do — but it makes the pinned population
+/// observable: tests assert on it, and a garbage-collection pass can ask
+/// for the oldest epoch still pinned before retiring a snapshot.
+#[derive(Debug, Default)]
+pub struct EpochPins {
+    /// epoch → live pin count. A `Mutex<HashMap>` rather than atomics:
+    /// pin/unpin happens once per query, not per vertex, so contention
+    /// is admission-rate, never hot-path.
+    counts: Mutex<HashMap<u64, usize>>,
+}
+
+impl EpochPins {
+    /// Fresh registry with nothing pinned.
+    pub fn new() -> Arc<EpochPins> {
+        Arc::new(EpochPins::default())
+    }
+
+    /// Pin `epoch`: the returned RAII guard holds the count up until it
+    /// is dropped.
+    pub fn pin(self: &Arc<EpochPins>, epoch: u64) -> EpochPin {
+        let mut counts = self.counts.lock().expect("epoch pins poisoned");
+        *counts.entry(epoch).or_insert(0) += 1;
+        drop(counts);
+        EpochPin {
+            registry: Arc::clone(self),
+            epoch,
+        }
+    }
+
+    /// Live pins on `epoch`.
+    pub fn pinned_readers(&self, epoch: u64) -> usize {
+        self.counts
+            .lock()
+            .expect("epoch pins poisoned")
+            .get(&epoch)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// The oldest epoch with at least one live pin, if any — the
+    /// retirement horizon for snapshot garbage collection.
+    pub fn oldest_pinned(&self) -> Option<u64> {
+        self.counts
+            .lock()
+            .expect("epoch pins poisoned")
+            .keys()
+            .min()
+            .copied()
+    }
+
+    /// Total live pins across all epochs.
+    pub fn total_pinned(&self) -> usize {
+        self.counts
+            .lock()
+            .expect("epoch pins poisoned")
+            .values()
+            .sum()
+    }
+}
+
+/// RAII guard for one reader's pin on one mutation epoch (see
+/// [`EpochPins::pin`]). Dropping it releases the pin; the map entry is
+/// removed when its count reaches zero so [`EpochPins::oldest_pinned`]
+/// never reports a dead epoch.
+#[derive(Debug)]
+pub struct EpochPin {
+    registry: Arc<EpochPins>,
+    epoch: u64,
+}
+
+impl EpochPin {
+    /// The pinned epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+impl Drop for EpochPin {
+    fn drop(&mut self) {
+        // A poisoned registry means a panic mid-pin elsewhere; don't
+        // double-panic in drop — the process is going down anyway.
+        if let Ok(mut counts) = self.registry.counts.lock() {
+            if let Some(c) = counts.get_mut(&self.epoch) {
+                *c -= 1;
+                if *c == 0 {
+                    counts.remove(&self.epoch);
+                }
+            }
+        }
+    }
 }
 
 /// Bring the session's partition caches up to `receipt`'s epoch:
@@ -123,6 +226,46 @@ mod tests {
         absorb_receipt(&mut plans, &mut states, &receipt);
         assert!(plans.is_empty());
         assert!(states.is_empty());
+    }
+
+    #[test]
+    fn epoch_pins_refcount_and_release() {
+        let pins = EpochPins::new();
+        assert_eq!(pins.oldest_pinned(), None);
+        let a = pins.pin(3);
+        let b = pins.pin(3);
+        let c = pins.pin(7);
+        assert_eq!(a.epoch(), 3);
+        assert_eq!(pins.pinned_readers(3), 2);
+        assert_eq!(pins.pinned_readers(7), 1);
+        assert_eq!(pins.pinned_readers(99), 0);
+        assert_eq!(pins.oldest_pinned(), Some(3));
+        assert_eq!(pins.total_pinned(), 3);
+        drop(a);
+        assert_eq!(pins.pinned_readers(3), 1);
+        drop(b);
+        assert_eq!(pins.pinned_readers(3), 0);
+        assert_eq!(pins.oldest_pinned(), Some(7), "dead epochs drop out");
+        drop(c);
+        assert_eq!(pins.oldest_pinned(), None);
+        assert_eq!(pins.total_pinned(), 0);
+    }
+
+    #[test]
+    fn epoch_pins_are_send_across_threads() {
+        let pins = EpochPins::new();
+        let guard = pins.pin(1);
+        std::thread::scope(|s| {
+            let p = Arc::clone(&pins);
+            s.spawn(move || {
+                let inner = p.pin(2);
+                assert_eq!(p.pinned_readers(2), 1);
+                drop(inner);
+            });
+        });
+        assert_eq!(pins.pinned_readers(2), 0);
+        assert_eq!(pins.pinned_readers(1), 1);
+        drop(guard);
     }
 
     #[test]

@@ -57,8 +57,8 @@ pub mod tune;
 pub use agg::{AggPair, Aggregator, FnAgg, MaxAgg, MinAgg, NoAgg, SumAgg};
 pub use crate::combine::{CombinedPlane, DeliveryPlane, LogPlane};
 pub use crate::graph::partition::Partitioning;
-pub use epoch::EpochWatermark;
-pub use session::{GraphSession, Halt, RunOptions};
+pub use epoch::{EpochPin, EpochPins, EpochWatermark};
+pub use session::{GraphSession, Halt, PoolStats, RunOptions};
 pub use tune::{AdaptiveTuner, DecisionTable, StepPlan};
 
 use crate::combine::{Combiner, MessageValue, Strategy};

@@ -70,6 +70,14 @@ pub struct Halt<A> {
     /// [`HaltReason::Converged`]: crate::metrics::HaltReason::Converged
     #[allow(clippy::type_complexity)]
     pub converged: Option<Arc<dyn Fn(Option<&A>, Option<&A>) -> bool + Send + Sync>>,
+    /// Token budget for this run: cumulative work units (each superstep
+    /// contributes its messages plus its activations), checked at every
+    /// superstep barrier. Crossing the cap stops the run with
+    /// [`HaltReason::BudgetExhausted`]. `None` (the default) leaves the
+    /// solo-run path untouched — no accounting branch fires.
+    ///
+    /// [`HaltReason::BudgetExhausted`]: crate::metrics::HaltReason::BudgetExhausted
+    pub max_tokens: Option<u64>,
 }
 
 impl<A> Default for Halt<A> {
@@ -77,6 +85,7 @@ impl<A> Default for Halt<A> {
         Halt {
             max_supersteps: None,
             converged: None,
+            max_tokens: None,
         }
     }
 }
@@ -86,6 +95,7 @@ impl<A> Clone for Halt<A> {
         Halt {
             max_supersteps: self.max_supersteps,
             converged: self.converged.clone(),
+            max_tokens: self.max_tokens,
         }
     }
 }
@@ -127,6 +137,21 @@ impl<A> Halt<A> {
         self.converged = Some(Arc::new(pred));
         self
     }
+
+    /// Halt when the cumulative work-token count (messages + activations
+    /// per superstep) crosses `n`.
+    pub fn tokens(n: u64) -> Self {
+        Self::default().and_tokens(n)
+    }
+
+    /// Add (or tighten) a token budget.
+    pub fn and_tokens(mut self, n: u64) -> Self {
+        self.max_tokens = Some(match self.max_tokens {
+            Some(old) => old.min(n),
+            None => n,
+        });
+        self
+    }
 }
 
 /// Per-run options for [`GraphSession::run_with`].
@@ -139,6 +164,12 @@ pub struct RunOptions<'a, P: VertexProgram> {
     /// [`VertexProgram::init`] — the warm-start path. Must hold exactly
     /// one value per vertex.
     pub warm_start: Option<&'a [P::Value]>,
+    /// Serving-layer context tag: echoed into
+    /// [`RunMetrics::query_tag`](crate::metrics::RunMetrics::query_tag)
+    /// and, on traced runs, emitted as a `query-context` instant at the
+    /// head of the timeline so interleaved multi-tenant runs stay
+    /// attributable. `None` (the default) changes nothing.
+    pub query_tag: Option<u64>,
 }
 
 impl<'a, P: VertexProgram> Default for RunOptions<'a, P> {
@@ -147,6 +178,7 @@ impl<'a, P: VertexProgram> Default for RunOptions<'a, P> {
             config: None,
             halt: Halt::default(),
             warm_start: None,
+            query_tag: None,
         }
     }
 }
@@ -172,6 +204,12 @@ impl<'a, P: VertexProgram> RunOptions<'a, P> {
     /// Warm-start vertex values from `values` (one per vertex).
     pub fn warm_start(mut self, values: &'a [P::Value]) -> Self {
         self.warm_start = Some(values);
+        self
+    }
+
+    /// Attach a serving-layer context tag to this run.
+    pub fn tag(mut self, tag: u64) -> Self {
+        self.query_tag = Some(tag);
         self
     }
 }
@@ -210,10 +248,12 @@ impl GraphHandle<'_> {
 pub struct GraphSession<'g> {
     g: GraphHandle<'g>,
     cfg: EngineConfig,
-    /// Pooled vertex stores, keyed by concrete store type. One store per
-    /// type: when concurrent runs of the same type overlap, the extras
-    /// build fresh and the last one back wins the pool slot.
-    stores: Mutex<HashMap<TypeId, Box<dyn Any + Send>>>,
+    /// Pooled vertex stores, keyed by concrete store type — a keyed
+    /// **multi-checkout** pool: each key parks every store ever handed
+    /// back, so N concurrent runs of the same type each pop their own
+    /// warm store (first N-1 finishers re-park them; only a pool-empty
+    /// checkout builds fresh).
+    stores: Mutex<HashMap<TypeId, Vec<Box<dyn Any + Send>>>>,
     /// Recycled activity bitsets (all sized to this graph).
     bitsets: Mutex<Vec<AtomicBitSet>>,
     /// Out-/in-degree weight vectors for edge-centric full scans,
@@ -228,8 +268,8 @@ pub struct GraphSession<'g> {
     shard_states: Mutex<Vec<ShardState>>,
     /// Pooled log-plane mailbox state, keyed by concrete
     /// `MessageLog<M>` type — the delivery-plane analogue of the store
-    /// pool (re-primed and epoch-stamped at checkout).
-    planes: Mutex<HashMap<TypeId, Box<dyn Any + Send>>>,
+    /// pool (multi-checkout, re-primed and epoch-stamped at checkout).
+    planes: Mutex<HashMap<TypeId, Vec<Box<dyn Any + Send>>>>,
     /// Pooled adaptive-tuner state (per-worker contention probes + trace
     /// buffers), recycled across adaptive runs like stores/planes.
     tuners: Mutex<Vec<TunerState>>,
@@ -244,6 +284,25 @@ pub struct GraphSession<'g> {
     /// `None`, so nothing is ever handed back).
     traces: Mutex<Vec<TraceBuffers>>,
     runs: AtomicU64,
+    /// Checkout/hit accounting for the store and plane pools — the
+    /// counters the serving tests use to prove N concurrent queries were
+    /// served from shared warm state rather than N cold builds.
+    pool_stats: Mutex<PoolStats>,
+}
+
+/// Cumulative pool-checkout accounting for one [`GraphSession`]
+/// (see [`GraphSession::pool_stats`]). A *hit* is a checkout satisfied
+/// from the pool; `checkouts - hits` is the number of cold builds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Vertex-store checkouts (one per run).
+    pub store_checkouts: u64,
+    /// Vertex-store checkouts served from the pool.
+    pub store_hits: u64,
+    /// Log-plane checkouts (one per log-plane run).
+    pub plane_checkouts: u64,
+    /// Log-plane checkouts served from the pool.
+    pub plane_hits: u64,
 }
 
 impl<'g> GraphSession<'g> {
@@ -285,6 +344,7 @@ impl<'g> GraphSession<'g> {
             cut_scratches: Mutex::new(Vec::new()),
             traces: Mutex::new(Vec::new()),
             runs: AtomicU64::new(0),
+            pool_stats: Mutex::new(PoolStats::default()),
         }
     }
 
@@ -359,15 +419,32 @@ impl<'g> GraphSession<'g> {
         self.runs.load(Ordering::Relaxed)
     }
 
-    /// Number of vertex stores currently parked in the pool (diagnostic).
+    /// Number of store *types* with at least one store currently parked
+    /// in the pool (diagnostic; serial sessions park at most one per
+    /// type, so this matches the pre-multi-checkout count).
     pub fn pooled_stores(&self) -> usize {
-        self.stores.lock().expect("store pool poisoned").len()
+        self.stores
+            .lock()
+            .expect("store pool poisoned")
+            .values()
+            .filter(|v| !v.is_empty())
+            .count()
     }
 
-    /// Number of log-plane message logs currently parked in the pool
-    /// (diagnostic; one per message type that ran a log-plane program).
+    /// Number of message *types* with at least one log-plane mailbox
+    /// currently parked in the pool (diagnostic).
     pub fn pooled_planes(&self) -> usize {
-        self.planes.lock().expect("plane pool poisoned").len()
+        self.planes
+            .lock()
+            .expect("plane pool poisoned")
+            .values()
+            .filter(|v| !v.is_empty())
+            .count()
+    }
+
+    /// Cumulative pool-checkout accounting (see [`PoolStats`]).
+    pub fn pool_stats(&self) -> PoolStats {
+        *self.pool_stats.lock().expect("pool stats poisoned")
     }
 
     /// Number of partition plans cached so far (diagnostic).
@@ -500,9 +577,15 @@ impl<'g> GraphSession<'g> {
             .stores
             .lock()
             .expect("store pool poisoned")
-            .remove(&key)
+            .get_mut(&key)
+            .and_then(|v| v.pop())
             .and_then(|b| b.downcast::<S>().ok())
             .map(|b| *b);
+        {
+            let mut stats = self.pool_stats.lock().expect("pool stats poisoned");
+            stats.store_checkouts += 1;
+            stats.store_hits += u64::from(pooled.is_some());
+        }
         let (store, store_reused, store_epoch_refreshed) = match pooled {
             Some(mut s) => {
                 // Pool-mutex handover is a sync point the race checker
@@ -547,9 +630,15 @@ impl<'g> GraphSession<'g> {
                 .planes
                 .lock()
                 .expect("plane pool poisoned")
-                .remove(&key)
+                .get_mut(&key)
+                .and_then(|v| v.pop())
                 .and_then(|b| b.downcast::<MessageLog<P::Message>>().ok())
                 .map(|b| *b);
+            {
+                let mut stats = self.pool_stats.lock().expect("pool stats poisoned");
+                stats.plane_checkouts += 1;
+                stats.plane_hits += u64::from(pooled.is_some());
+            }
             match pooled {
                 Some(mut l) => {
                     // Pool-mutex handover sync point (as for stores above).
@@ -657,6 +746,7 @@ impl<'g> GraphSession<'g> {
                 tuner,
                 cut_scratch,
                 trace,
+                query_tag: opts.query_tag,
             },
         );
         let mut result = engine.run();
@@ -679,12 +769,16 @@ impl<'g> GraphSession<'g> {
         self.stores
             .lock()
             .expect("store pool poisoned")
-            .insert(key, Box::new(store));
+            .entry(key)
+            .or_default()
+            .push(Box::new(store));
         if let Some(l) = log {
             self.planes
                 .lock()
                 .expect("plane pool poisoned")
-                .insert(TypeId::of::<MessageLog<P::Message>>(), Box::new(l));
+                .entry(TypeId::of::<MessageLog<P::Message>>())
+                .or_default()
+                .push(Box::new(l));
         }
         // Partitioned runs hand back zero-length placeholders — only
         // full-size bitsets are worth pooling.
@@ -780,6 +874,41 @@ mod tests {
         assert!(h.converged.is_some());
         let cloned = h.clone();
         assert_eq!(cloned.max_supersteps, Some(5));
+        let t: Halt<f64> = Halt::tokens(1000).and_tokens(200).and_supersteps(7);
+        assert_eq!(t.max_tokens, Some(200), "and_tokens tightens");
+        assert_eq!(t.max_supersteps, Some(7));
+        assert_eq!(t.clone().max_tokens, Some(200));
+        assert_eq!(Halt::<f64>::quiescence().max_tokens, None);
+    }
+
+    #[test]
+    fn multi_checkout_pool_parks_every_store() {
+        // Serial session: each finished run parks its store, so two
+        // concurrent-style checkouts after two runs both hit the pool.
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 3);
+        let session = GraphSession::new(&g);
+        session.run(&ConnectedComponents);
+        let s = session.pool_stats();
+        assert_eq!((s.store_checkouts, s.store_hits), (1, 0), "cold first run");
+        session.run(&ConnectedComponents);
+        let s = session.pool_stats();
+        assert_eq!((s.store_checkouts, s.store_hits), (2, 1), "warm second run");
+        // Concurrent same-type runs: both pop independently; afterwards
+        // the key parks two stores but still counts once per type.
+        let solo = session.run(&ConnectedComponents).values;
+        std::thread::scope(|scope| {
+            let s1 = scope.spawn(|| session.run(&ConnectedComponents).values);
+            let s2 = scope.spawn(|| session.run(&ConnectedComponents).values);
+            assert_eq!(s1.join().expect("run thread"), solo);
+            assert_eq!(s2.join().expect("run thread"), solo);
+        });
+        assert_eq!(session.pooled_stores(), 1, "one type, regardless of depth");
+        // Both parked stores are reusable: the next two checkouts hit.
+        let before = session.pool_stats();
+        session.run(&ConnectedComponents);
+        session.run(&ConnectedComponents);
+        let after = session.pool_stats();
+        assert_eq!(after.store_hits - before.store_hits, 2);
     }
 
     #[test]

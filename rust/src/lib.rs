@@ -57,6 +57,14 @@
 //!   trace-event JSON (`--trace-out`, Perfetto-loadable) or a terminal
 //!   summary (`--trace-summary`) — emitted identically by the real
 //!   engine and the simulator's virtual clock;
+//! - a **multi-tenant serving layer** ([`serve`]): a [`serve::QueryServer`]
+//!   admitting many concurrent context-tagged runs over one shared
+//!   (optionally dynamic) graph, with priority admission, per-query
+//!   superstep/token budgets, snapshot isolation by copy-on-mutate over
+//!   the mutation epochs ([`engine::epoch::EpochPins`]), bounded-scope
+//!   query programs ([`algos::query`]) and per-query p50/p99 tail-latency
+//!   metrics ([`metrics::LatencyStats`]) — every served run bit-identical
+//!   to the same program run solo;
 //! - a PJRT runtime ([`runtime`]) executing AOT-compiled JAX/Pallas
 //!   superstep kernels for the dense-block accelerated path (behind the
 //!   `pjrt` cargo feature; a stub otherwise);
@@ -73,6 +81,7 @@ pub mod layout;
 pub mod metrics;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod trace;
 pub mod util;

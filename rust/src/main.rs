@@ -36,6 +36,16 @@
 //!                   concurrency-correctness pass over this repo's own source
 //!                   (SAFETY coverage, ordering manifest, static-mut ban,
 //!                    hot-path panic ban); non-zero exit on violations
+//! ipregel serve     <graph|name>  multi-tenant serving demo: a seeded
+//!                   stream of bounded interactive queries (ego-net BFS /
+//!                   point SSSP) served twice — idle, then alongside a
+//!                   concurrent batch PageRank — printing per-phase
+//!                   p50/p99 latency, throughput and pool-reuse counters
+//!                   [--queries N] [--concurrency K] [--seed S]
+//!                   [--radius R] [--iterations N]  batch PageRank length
+//!                   [--mutate-batch N]  end with a snapshot-isolation
+//!                     demo: pin, mutate, time-travel read vs current
+//!                   (engine switches as for `run`)
 //! ```
 //!
 //! Graphs are referenced by catalog name (`dblp-s`, `friendster-t`, …) or
@@ -82,6 +92,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
         "calibrate" => cmd_calibrate(&opts),
         "accel" => cmd_accel(&opts),
         "audit" => cmd_audit(&opts),
+        "serve" => cmd_serve(&opts),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -91,7 +102,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
 }
 
 const HELP: &str = "ipregel — vertex-centric graph processing (iPregel reproduction)\n\
-  generate | info | run | sim | table1 | table2 | calibrate | accel | audit | help\n\
+  generate | info | run | sim | table1 | table2 | calibrate | accel | audit | serve | help\n\
   See README.md for full usage.";
 
 fn graph_dir(opts: &Opts) -> PathBuf {
@@ -655,6 +666,248 @@ fn cmd_audit(opts: &Opts) -> Result<()> {
     } else {
         bail!("pallas-audit found {} violation(s)", report.violations.len())
     }
+}
+
+const SERVE_FLAGS: &[&str] = &[
+    "threads", "schedule", "strategy", "layout", "bypass", "shards", "steal",
+    "pipeline-depth", "adaptive", "max-supersteps", "dir", "queries", "concurrency",
+    "seed", "radius", "iterations", "mutate-batch",
+];
+
+/// `serve <graph|name>`: stand up a [`ipregel::serve::QueryServer`] and
+/// measure a seeded stream of bounded interactive queries twice — on an
+/// idle server, then with a concurrent batch PageRank grinding through
+/// the admission gate — so the tail-latency cost of multi-tenancy is one
+/// table. Thread split between the classes comes from the simulator's
+/// calibrated cost model ([`InterleavePolicy::from_cost_model`]), and
+/// `--mutate-batch N` closes with a snapshot-isolation demo: pin the
+/// current epoch, mutate, then compare a time-travel read against the
+/// republished graph.
+fn cmd_serve(opts: &Opts) -> Result<()> {
+    use ipregel::algos::query::{EgoNetBfs, PointSssp};
+    use ipregel::graph::dynamic::MutationSet;
+    use ipregel::metrics::{LatencyStats, TablePrinter};
+    use ipregel::serve::{
+        AdmissionController, InterleavePolicy, QueryServer, QueryShape, QuerySpec,
+        SuperstepShape,
+    };
+    use ipregel::sim::CostModel;
+    use ipregel::util::rng::Rng;
+    use ipregel::util::timer::Timer;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    opts.ensure_known(SERVE_FLAGS)?;
+    let arg = opts.positional.get(1).ok_or_else(|| {
+        err!("usage: ipregel serve <graph|name> [--queries N] [--concurrency K]")
+    })?;
+    let g = load_graph(arg, &graph_dir(opts))?;
+    let cfg = engine_cfg(opts)?;
+    let queries = opts.get_num("queries", 32usize)?;
+    let concurrency = opts.get_num("concurrency", 4usize)?;
+    let seed = opts.get_num("seed", 42u64)?;
+    let radius = opts.get_num("radius", 2u64)?;
+    let iterations = opts.get_num("iterations", 10usize)?;
+    let mutate = opts.get_num("mutate-batch", 0usize)?;
+
+    let n = g.num_vertices();
+    if n < 2 {
+        bail!("serve needs at least 2 vertices to target queries (graph has {n})");
+    }
+    let edges = g.num_edges() as u64;
+
+    // Calibrate the interleave policy from the cost model before the
+    // server takes ownership of the graph. The small-query shape is a
+    // geometric frontier-growth estimate from the mean degree; it only
+    // has to be the right order of magnitude to size the thread split.
+    let avg_deg = (edges / n as u64).max(1);
+    let small = QueryShape {
+        waves: radius as usize + 1,
+        active_per_wave: avg_deg.saturating_mul(avg_deg).min(n as u64),
+        messages_per_wave: avg_deg
+            .saturating_mul(avg_deg)
+            .saturating_mul(avg_deg)
+            .min(edges),
+    };
+    let policy = InterleavePolicy::from_cost_model(
+        &CostModel::default(),
+        cfg.threads,
+        SuperstepShape {
+            active: n as u64,
+            messages: edges,
+        },
+        small,
+        2.0,
+    );
+    println!(
+        "interleave policy (cost-model calibrated, team of {}): slice {} supersteps, \
+         reserve {} interactive / {} batch threads",
+        cfg.threads,
+        policy.slice_supersteps,
+        policy.reserved_interactive_threads,
+        policy.batch_threads,
+    );
+
+    // Fixed seeded workload, reused verbatim in both phases so the only
+    // difference the table shows is the concurrent batch run.
+    let mut rng = Rng::new(seed);
+    let workload: Vec<(u32, bool)> = (0..queries)
+        .map(|i| (rng.below(n as u64) as u32, i % 2 == 1))
+        .collect();
+
+    let server = QueryServer::with_config(g, cfg, AdmissionController::new(concurrency));
+    println!(
+        "serving {queries} interactive queries (ego-net bfs / point sssp, radius {radius}) \
+         over {n} vertices, admission gate of {concurrency}"
+    );
+
+    // One phase: drain the workload from `concurrency` submitter threads,
+    // optionally alongside a batch PageRank competing at the gate.
+    let run_phase = |with_batch: bool| {
+        let next = Mutex::new(0usize);
+        let latencies = Mutex::new(Vec::new());
+        let batch_out = Mutex::new(None);
+        let t = Timer::start();
+        std::thread::scope(|s| {
+            if with_batch {
+                s.spawn(|| {
+                    let p = PageRank {
+                        iterations,
+                        damping: 0.85,
+                    };
+                    let spec = QuerySpec::batch().config(cfg.threads(policy.batch_threads));
+                    let r = server
+                        .execute(&p, &spec)
+                        .expect("admission queue is unbounded");
+                    *batch_out.lock().unwrap() = Some((r.query.supersteps, r.query.run_time));
+                });
+            }
+            for _ in 0..concurrency.max(1) {
+                s.spawn(|| loop {
+                    let i = {
+                        let mut ix = next.lock().unwrap();
+                        let i = *ix;
+                        *ix += 1;
+                        i
+                    };
+                    let Some(&(root, point_sssp)) = workload.get(i) else {
+                        break;
+                    };
+                    // Under contention, interactive queries run on the
+                    // calibrated reserved slice of the team.
+                    let icfg = if with_batch && policy.reserved_interactive_threads > 0 {
+                        cfg.threads(policy.reserved_interactive_threads)
+                    } else {
+                        cfg
+                    };
+                    let spec = QuerySpec::interactive().config(icfg);
+                    let latency = if point_sssp {
+                        let p = PointSssp {
+                            source: root,
+                            cutoff: radius as f64,
+                        };
+                        server
+                            .execute(&p, &spec)
+                            .expect("admission queue is unbounded")
+                            .query
+                            .latency
+                    } else {
+                        let p = EgoNetBfs { root, radius };
+                        server
+                            .execute(&p, &spec)
+                            .expect("admission queue is unbounded")
+                            .query
+                            .latency
+                    };
+                    latencies.lock().unwrap().push(latency);
+                });
+            }
+        });
+        let wall = t.elapsed();
+        let stats = LatencyStats::from_durations(&latencies.into_inner().unwrap());
+        (stats, batch_out.into_inner().unwrap(), wall)
+    };
+
+    let (idle, _, idle_wall) = run_phase(false);
+    let (contended, batch, contended_wall) = run_phase(true);
+
+    let mut table = TablePrinter::new(&["phase", "queries", "p50", "p99", "mean", "max", "qps"]);
+    let row = |label: &str, st: &LatencyStats, wall: Duration| {
+        vec![
+            label.to_string(),
+            st.count.to_string(),
+            fmt_duration(st.p50()),
+            fmt_duration(st.p99()),
+            fmt_duration(st.mean()),
+            fmt_duration(st.max()),
+            format!("{:.1}", st.count as f64 / wall.as_secs_f64().max(1e-9)),
+        ]
+    };
+    table.row(row("idle", &idle, idle_wall));
+    table.row(row("with-batch", &contended, contended_wall));
+    println!("{}", table.render());
+    if let Some((steps, run_time)) = batch {
+        println!(
+            "batch pagerank ({iterations} iterations): {steps} supersteps in {} \
+             ({:.1} supersteps/s) on {} threads",
+            fmt_duration(run_time),
+            steps as f64 / run_time.as_secs_f64().max(1e-9),
+            policy.batch_threads,
+        );
+    }
+    let pool = server.pool_stats();
+    println!(
+        "pool: {} store checkouts, {} served warm from the pool; {} queries through \
+         a gate of {} ({} permits granted)",
+        pool.store_checkouts,
+        pool.store_hits,
+        server.queries_completed(),
+        concurrency,
+        server.admission().admitted(),
+    );
+
+    if mutate > 0 {
+        let pinned = server.pin_current();
+        let mut m = MutationSet::new();
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        while m.inserts().len() < 2 * mutate {
+            let s = rng.below(n as u64) as u32;
+            let d = rng.below(n as u64) as u32;
+            if s != d {
+                m.insert_undirected(s, d);
+            }
+        }
+        let receipt = server.apply_mutations(&m);
+        println!(
+            "mutation: epoch {} -> {} (+{} directed edges); pinned reader still at \
+             epoch {} ({} pin)",
+            receipt.from_epoch,
+            receipt.epoch,
+            receipt.inserted,
+            pinned.epoch(),
+            server.pinned_readers(pinned.epoch()),
+        );
+        let (root, _) = workload[0];
+        let p = EgoNetBfs { root, radius };
+        let old = server
+            .execute_on(&pinned, &p, &QuerySpec::interactive())
+            .expect("admission queue is unbounded");
+        let new = server
+            .execute(&p, &QuerySpec::interactive())
+            .expect("admission queue is unbounded");
+        let changed = old
+            .values
+            .iter()
+            .zip(&new.values)
+            .filter(|(a, b)| a != b)
+            .count();
+        println!(
+            "time-travel read: ego-net of v{root} at epoch {} vs epoch {} differs at \
+             {changed} vertices",
+            old.query.epoch, new.query.epoch,
+        );
+    }
+    Ok(())
 }
 
 fn cmd_accel(opts: &Opts) -> Result<()> {

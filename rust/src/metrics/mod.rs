@@ -52,6 +52,14 @@ pub enum HaltReason {
     SuperstepCap,
     /// The per-run convergence predicate fired.
     Converged,
+    /// The per-run token budget ([`Halt::max_tokens`]) ran out: the
+    /// cumulative work units (messages + activations per superstep)
+    /// crossed the cap at a barrier. Distinct from [`SuperstepCap`] so a
+    /// serving layer can tell "ran long" from "did too much work".
+    ///
+    /// [`Halt::max_tokens`]: ../engine/session/struct.Halt.html
+    /// [`SuperstepCap`]: HaltReason::SuperstepCap
+    BudgetExhausted,
 }
 
 /// A documented scheduling fallback the engine applied because the
@@ -237,6 +245,10 @@ pub struct RunMetrics {
     ///
     /// [`EngineConfig::trace`]: crate::engine::EngineConfig::trace
     pub trace: Option<crate::trace::RunTrace>,
+    /// Serving-layer context tag (`RunOptions::tag`) this run carried,
+    /// echoed so multiplexed runs stay attributable. `None` on plain
+    /// batch runs.
+    pub query_tag: Option<u64>,
 }
 
 impl RunMetrics {
@@ -332,7 +344,108 @@ impl RunMetrics {
         if let Some(fb) = &self.schedule_fallback {
             s.push_str(&format!(" fallback=[{fb}]"));
         }
+        if let Some(tag) = self.query_tag {
+            s.push_str(&format!(" tag={tag}"));
+        }
         s
+    }
+}
+
+/// Per-query record emitted by the serving layer (`serve/`): one entry
+/// per admitted query, pairing the engine's [`RunMetrics`] view with the
+/// serving-side timings the engine cannot see (queue wait, end-to-end
+/// latency) and the admission identity (tag, priority class).
+#[derive(Clone, Debug)]
+pub struct QueryMetrics {
+    /// Server-assigned query id (admission order).
+    pub id: u64,
+    /// Caller-chosen context tag (threaded into trace instants and
+    /// [`RunMetrics::query_tag`]).
+    pub tag: u64,
+    /// Priority-class label (`"interactive"` / `"batch"`).
+    pub class: &'static str,
+    /// Time spent queued in admission before the run started.
+    pub queue_wait: Duration,
+    /// Engine run time ([`RunMetrics::total_time`]).
+    pub run_time: Duration,
+    /// End-to-end latency: queue wait + run time.
+    pub latency: Duration,
+    /// Supersteps the run executed.
+    pub supersteps: usize,
+    /// Why the run stopped (budget exhaustion included).
+    pub halt_reason: HaltReason,
+    /// Graph mutation epoch the query's snapshot was pinned to.
+    pub epoch: u64,
+    /// Whether the run was served from a pooled (warm) vertex store.
+    pub store_reused: bool,
+}
+
+/// Order statistics over a set of latencies — the serving layer's
+/// tail-latency view (p50/p99 are the numbers `ipregel serve` and
+/// `bench_serve` report).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    /// Sample count.
+    pub count: usize,
+    /// Median, nanoseconds.
+    pub p50_ns: u64,
+    /// 99th percentile, nanoseconds.
+    pub p99_ns: u64,
+    /// Arithmetic mean, nanoseconds.
+    pub mean_ns: u64,
+    /// Maximum, nanoseconds.
+    pub max_ns: u64,
+}
+
+impl LatencyStats {
+    /// Stats over raw nanosecond samples. Empty input yields all zeros.
+    pub fn from_nanos(samples: &[u64]) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_unstable();
+        // Nearest-rank percentile: ceil(p/100 * n) - 1, clamped — p50 of
+        // a single sample is that sample, p99 of < 100 samples is max.
+        let rank = |p: u64| -> u64 {
+            let n = sorted.len() as u64;
+            let idx = (p * n).div_ceil(100).saturating_sub(1).min(n - 1);
+            sorted[idx as usize]
+        };
+        let sum: u128 = sorted.iter().map(|&s| s as u128).sum();
+        LatencyStats {
+            count: sorted.len(),
+            p50_ns: rank(50),
+            p99_ns: rank(99),
+            mean_ns: (sum / sorted.len() as u128) as u64,
+            max_ns: sorted[sorted.len() - 1],
+        }
+    }
+
+    /// Stats over [`Duration`] samples.
+    pub fn from_durations(samples: &[Duration]) -> LatencyStats {
+        let ns: Vec<u64> = samples.iter().map(|d| d.as_nanos() as u64).collect();
+        LatencyStats::from_nanos(&ns)
+    }
+
+    /// Median as a [`Duration`].
+    pub fn p50(&self) -> Duration {
+        Duration::from_nanos(self.p50_ns)
+    }
+
+    /// 99th percentile as a [`Duration`].
+    pub fn p99(&self) -> Duration {
+        Duration::from_nanos(self.p99_ns)
+    }
+
+    /// Mean as a [`Duration`].
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns)
+    }
+
+    /// Maximum as a [`Duration`].
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
     }
 }
 
@@ -514,6 +627,40 @@ mod tests {
         let quiet = RunMetrics::default().summary();
         assert!(!quiet.contains("steals="));
         assert!(!quiet.contains("lanes="));
+    }
+
+    #[test]
+    fn latency_stats_order_statistics() {
+        assert_eq!(LatencyStats::from_nanos(&[]), LatencyStats::default());
+        let one = LatencyStats::from_nanos(&[7]);
+        assert_eq!((one.count, one.p50_ns, one.p99_ns, one.max_ns), (1, 7, 7, 7));
+        // 1..=100: nearest-rank p50 is the 50th sample, p99 the 99th.
+        let samples: Vec<u64> = (1..=100).collect();
+        let s = LatencyStats::from_nanos(&samples);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50_ns, 50);
+        assert_eq!(s.p99_ns, 99);
+        assert_eq!(s.mean_ns, 50); // (5050 / 100) truncated
+        assert_eq!(s.max_ns, 100);
+        // Under 100 samples the p99 collapses to the max.
+        let few = LatencyStats::from_nanos(&[10, 30, 20]);
+        assert_eq!(few.p99_ns, 30);
+        assert_eq!(few.p50_ns, 20);
+        let d = LatencyStats::from_durations(&[Duration::from_micros(3)]);
+        assert_eq!(d.p50(), Duration::from_micros(3));
+    }
+
+    #[test]
+    fn budget_and_tag_surface_in_metrics() {
+        let m = RunMetrics {
+            halt_reason: HaltReason::BudgetExhausted,
+            query_tag: Some(17),
+            ..Default::default()
+        };
+        assert_eq!(m.halt_reason, HaltReason::BudgetExhausted);
+        assert!(m.summary().contains("tag=17"));
+        // Untagged batch runs keep their summary unchanged.
+        assert!(!RunMetrics::default().summary().contains("tag="));
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! The admission gate: bounds in-flight runs and lets interactive
+//! queries overtake queued batch work.
+//!
+//! A `Mutex<state> + Condvar` turnstile rather than anything lock-free:
+//! admission happens once per *query*, not per vertex, so the gate is
+//! admission-rate code — the hot loops below it never see it. Fairness
+//! is priority-then-wakeup-order: a batch waiter is never admitted while
+//! an interactive waiter is queued; within a class, wakeup order is the
+//! platform condvar's (FIFO on the common platforms, not guaranteed).
+
+use crate::serve::handle::Priority;
+use std::sync::{Condvar, Mutex};
+
+/// Why a submission was turned away at the gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The bounded wait queue is full — shed load instead of queueing.
+    QueueFull,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull => f.write_str("admission queue full"),
+        }
+    }
+}
+
+#[derive(Default)]
+struct GateState {
+    /// Runs currently holding a permit.
+    running: usize,
+    /// Interactive waiters blocked in [`AdmissionController::admit`] —
+    /// while non-zero, batch waiters stay blocked even with free slots.
+    waiting_interactive: usize,
+    /// All waiters, both classes (the queue-cap census).
+    waiting_total: usize,
+    /// Total permits ever granted (monotone; for observability).
+    admitted: u64,
+}
+
+/// Concurrency gate for a [`crate::serve::QueryServer`]: at most
+/// `max_concurrent` runs in flight, interactive-first admission, and an
+/// optional bound on the wait queue (load shedding).
+pub struct AdmissionController {
+    max_concurrent: usize,
+    max_queued: Option<usize>,
+    state: Mutex<GateState>,
+    turnstile: Condvar,
+}
+
+impl AdmissionController {
+    /// Gate admitting up to `max_concurrent` (≥ 1 enforced) concurrent
+    /// runs, with an unbounded wait queue.
+    pub fn new(max_concurrent: usize) -> Self {
+        AdmissionController {
+            max_concurrent: max_concurrent.max(1),
+            max_queued: None,
+            state: Mutex::new(GateState::default()),
+            turnstile: Condvar::new(),
+        }
+    }
+
+    /// Bound the wait queue: a submission arriving with `n` queries
+    /// already waiting gets [`AdmitError::QueueFull`] instead of a slot.
+    pub fn with_queue_cap(mut self, n: usize) -> Self {
+        self.max_queued = Some(n);
+        self
+    }
+
+    /// Block until a slot frees (interactive waiters first), returning
+    /// the RAII permit whose drop releases the slot.
+    ///
+    /// # Errors
+    /// [`AdmitError::QueueFull`] when the wait queue is at its cap.
+    pub fn admit(&self, priority: Priority) -> Result<AdmitPermit<'_>, AdmitError> {
+        let mut st = self.state.lock().expect("admission gate poisoned");
+        let can_enter = |st: &GateState| {
+            st.running < self.max_concurrent
+                && (priority == Priority::Interactive || st.waiting_interactive == 0)
+        };
+        if !can_enter(&st) {
+            if let Some(cap) = self.max_queued {
+                if st.waiting_total >= cap {
+                    return Err(AdmitError::QueueFull);
+                }
+            }
+            st.waiting_total += 1;
+            if priority == Priority::Interactive {
+                st.waiting_interactive += 1;
+            }
+            while !can_enter(&st) {
+                st = self
+                    .turnstile
+                    .wait(st)
+                    .expect("admission gate poisoned");
+            }
+            st.waiting_total -= 1;
+            if priority == Priority::Interactive {
+                st.waiting_interactive -= 1;
+            }
+        }
+        st.running += 1;
+        st.admitted += 1;
+        drop(st);
+        Ok(AdmitPermit { gate: self })
+    }
+
+    /// Runs currently holding a permit.
+    pub fn running(&self) -> usize {
+        self.state.lock().expect("admission gate poisoned").running
+    }
+
+    /// Queries currently blocked at the gate.
+    pub fn waiting(&self) -> usize {
+        self.state
+            .lock()
+            .expect("admission gate poisoned")
+            .waiting_total
+    }
+
+    /// Total permits ever granted.
+    pub fn admitted(&self) -> u64 {
+        self.state.lock().expect("admission gate poisoned").admitted
+    }
+
+    /// The concurrency bound this gate enforces.
+    pub fn max_concurrent(&self) -> usize {
+        self.max_concurrent
+    }
+}
+
+/// RAII admission permit: one in-flight run slot, released (and the
+/// turnstile woken) on drop — including the unwind path, so a panicking
+/// query cannot leak its slot.
+pub struct AdmitPermit<'a> {
+    gate: &'a AdmissionController,
+}
+
+impl Drop for AdmitPermit<'_> {
+    fn drop(&mut self) {
+        // Don't double-panic on a poisoned gate during unwind.
+        if let Ok(mut st) = self.gate.state.lock() {
+            st.running -= 1;
+        }
+        self.gate.turnstile.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn permits_bound_concurrency() {
+        let gate = Arc::new(AdmissionController::new(2));
+        // (live, peak) under one lock — observed concurrency census.
+        let census = Arc::new(Mutex::new((0usize, 0usize)));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let (gate, census) = (Arc::clone(&gate), Arc::clone(&census));
+                s.spawn(move || {
+                    let permit = gate.admit(Priority::Batch).unwrap();
+                    {
+                        let mut c = census.lock().unwrap();
+                        c.0 += 1;
+                        c.1 = c.1.max(c.0);
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    census.lock().unwrap().0 -= 1;
+                    drop(permit);
+                });
+            }
+        });
+        let peak = census.lock().unwrap().1;
+        assert!(peak <= 2, "peak {peak}");
+        assert_eq!(gate.admitted(), 8);
+        assert_eq!(gate.running(), 0);
+        assert_eq!(gate.waiting(), 0);
+    }
+
+    #[test]
+    fn interactive_overtakes_queued_batch() {
+        let gate = AdmissionController::new(1);
+        let holder = gate.admit(Priority::Batch).unwrap();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        std::thread::scope(|s| {
+            let batch_order = Arc::clone(&order);
+            let gate_ref = &gate;
+            s.spawn(move || {
+                let p = gate_ref.admit(Priority::Batch).unwrap();
+                batch_order.lock().unwrap().push("batch");
+                drop(p);
+            });
+            // Let the batch waiter park first, then queue interactive.
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            let inter_order = Arc::clone(&order);
+            s.spawn(move || {
+                let p = gate_ref.admit(Priority::Interactive).unwrap();
+                inter_order.lock().unwrap().push("interactive");
+                drop(p);
+            });
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            assert_eq!(gate.waiting(), 2);
+            drop(holder);
+        });
+        let order = order.lock().unwrap();
+        assert_eq!(
+            order.as_slice(),
+            ["interactive", "batch"],
+            "interactive waiter admitted first"
+        );
+    }
+
+    #[test]
+    fn queue_cap_sheds_load() {
+        let gate = AdmissionController::new(1).with_queue_cap(0);
+        let holder = gate.admit(Priority::Interactive).unwrap();
+        assert_eq!(
+            gate.admit(Priority::Interactive).err(),
+            Some(AdmitError::QueueFull)
+        );
+        drop(holder);
+        // Slot free again: admission succeeds without queueing.
+        assert!(gate.admit(Priority::Batch).is_ok());
+    }
+}

@@ -1,0 +1,186 @@
+//! Per-query types: priority class, budgets, the submitted spec and the
+//! returned response.
+
+use crate::engine::{EngineConfig, Halt};
+use crate::metrics::{QueryMetrics, RunMetrics};
+
+/// Admission priority class. [`Priority::Interactive`] queries overtake
+/// queued [`Priority::Batch`] work at the admission gate — the knob that
+/// keeps point-lookup tail latency bounded while a whole-graph run is
+/// in flight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive: admitted ahead of any queued batch work.
+    Interactive,
+    /// Throughput work: yields the admission gate to interactive queries.
+    Batch,
+}
+
+impl Priority {
+    /// Stable label for metrics/tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Per-query resource caps, lowered into the engine's [`Halt`] policy.
+/// Exhaustion stops the run at a superstep barrier with
+/// [`crate::metrics::HaltReason::BudgetExhausted`] (tokens) or
+/// [`crate::metrics::HaltReason::SuperstepCap`] (supersteps); either way
+/// the run completes normally — partial values are returned and every
+/// pooled resource is handed back, so an exhausted query cannot poison
+/// the server for its neighbours.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueryBudget {
+    /// Cap on supersteps (composes with the engine config's own cap).
+    pub max_supersteps: Option<usize>,
+    /// Cap on cumulative work tokens (messages + activations per
+    /// superstep — see [`Halt::tokens`]).
+    pub max_tokens: Option<u64>,
+}
+
+impl QueryBudget {
+    /// No caps: the query runs to its own termination.
+    pub fn unbounded() -> Self {
+        Self::default()
+    }
+
+    /// Cap supersteps at `n`.
+    pub fn supersteps(n: usize) -> Self {
+        QueryBudget {
+            max_supersteps: Some(n),
+            ..Self::default()
+        }
+    }
+
+    /// Cap work tokens at `n`.
+    pub fn tokens(n: u64) -> Self {
+        QueryBudget {
+            max_tokens: Some(n),
+            ..Self::default()
+        }
+    }
+
+    /// Add (or tighten) a superstep cap.
+    pub fn and_supersteps(mut self, n: usize) -> Self {
+        self.max_supersteps = Some(self.max_supersteps.map_or(n, |old| old.min(n)));
+        self
+    }
+
+    /// Add (or tighten) a token cap.
+    pub fn and_tokens(mut self, n: u64) -> Self {
+        self.max_tokens = Some(self.max_tokens.map_or(n, |old| old.min(n)));
+        self
+    }
+
+    /// Lower the budget into an engine [`Halt`] policy.
+    pub fn to_halt<A>(&self) -> Halt<A> {
+        let mut halt = Halt::default();
+        if let Some(n) = self.max_supersteps {
+            halt = halt.and_supersteps(n);
+        }
+        if let Some(n) = self.max_tokens {
+            halt = halt.and_tokens(n);
+        }
+        halt
+    }
+}
+
+/// One query submission: priority, budgets, an optional per-query engine
+/// configuration (a served query may want fewer threads or a different
+/// substrate than the session default) and an optional explicit context
+/// tag (defaults to the server-assigned query id).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuerySpec {
+    /// Explicit context tag; `None` uses the server-assigned query id.
+    pub tag: Option<u64>,
+    /// Admission class.
+    pub priority: Option<Priority>,
+    /// Engine configuration override for this query.
+    pub config: Option<EngineConfig>,
+    /// Resource caps.
+    pub budget: QueryBudget,
+}
+
+impl QuerySpec {
+    /// An unbounded interactive query with the session's default config.
+    pub fn interactive() -> Self {
+        QuerySpec {
+            priority: Some(Priority::Interactive),
+            ..Self::default()
+        }
+    }
+
+    /// An unbounded batch run with the session's default config.
+    pub fn batch() -> Self {
+        QuerySpec {
+            priority: Some(Priority::Batch),
+            ..Self::default()
+        }
+    }
+
+    /// The effective priority ([`Priority::Interactive`] by default —
+    /// a bare spec is a point query, not a batch job).
+    pub fn class(&self) -> Priority {
+        self.priority.unwrap_or(Priority::Interactive)
+    }
+
+    /// Attach an explicit context tag.
+    pub fn tag(mut self, tag: u64) -> Self {
+        self.tag = Some(tag);
+        self
+    }
+
+    /// Override the engine configuration for this query.
+    pub fn config(mut self, cfg: EngineConfig) -> Self {
+        self.config = Some(cfg);
+        self
+    }
+
+    /// Attach resource caps.
+    pub fn budget(mut self, budget: QueryBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+}
+
+/// What a served query returns: the run's values and full
+/// [`RunMetrics`], plus the serving-layer [`QueryMetrics`] (queue wait,
+/// end-to-end latency, pinned epoch, pool provenance).
+#[derive(Clone, Debug)]
+pub struct QueryResponse<V> {
+    /// Final vertex values (partial if a budget fired).
+    pub values: Vec<V>,
+    /// The engine's own run metrics.
+    pub metrics: RunMetrics,
+    /// The serving layer's per-query record.
+    pub query: QueryMetrics,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_lowers_into_halt() {
+        let b = QueryBudget::supersteps(9).and_tokens(500).and_tokens(200);
+        let h: Halt<()> = b.to_halt();
+        assert_eq!(h.max_supersteps, Some(9));
+        assert_eq!(h.max_tokens, Some(200));
+        let h: Halt<()> = QueryBudget::unbounded().to_halt();
+        assert_eq!(h.max_supersteps, None);
+        assert_eq!(h.max_tokens, None);
+    }
+
+    #[test]
+    fn spec_defaults_are_interactive_and_unbounded() {
+        let s = QuerySpec::default();
+        assert_eq!(s.class(), Priority::Interactive);
+        assert_eq!(s.budget, QueryBudget::unbounded());
+        assert_eq!(QuerySpec::batch().class(), Priority::Batch);
+        assert_eq!(Priority::Batch.name(), "batch");
+    }
+}

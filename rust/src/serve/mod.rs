@@ -1,0 +1,47 @@
+//! The multi-tenant serving layer: many concurrent, context-tagged
+//! queries over one shared — optionally evolving — graph.
+//!
+//! Everything below this module is built for *one run at a time*; a
+//! serving workload is the opposite shape: a stream of small
+//! bounded-scope queries (ego-net BFS, point SSSP, top-k rank deltas —
+//! [`crate::algos::query`]) arriving while occasional whole-graph batch
+//! runs grind through their supersteps, all against the same graph, all
+//! wanting predictable tail latency. This module adds that front-end
+//! without touching any algorithm (the paper's programmability thesis
+//! extends to serving: the same `compute` text runs solo or served,
+//! bit-for-bit):
+//!
+//! - [`QueryServer`] — admits queries against a shared
+//!   [`crate::engine::GraphSession`]; `run_with(&self, ..)` is already
+//!   re-entrant, so N queries execute concurrently over one pooled
+//!   session (the keyed multi-checkout pools of `engine/session.rs`
+//!   hand each its own warm store);
+//! - [`AdmissionController`] — bounds in-flight runs and lets
+//!   [`Priority::Interactive`] queries overtake queued
+//!   [`Priority::Batch`] work;
+//! - [`QueryBudget`] — per-query superstep and work-token caps, lowered
+//!   into the engine's [`crate::engine::Halt`] so exhaustion surfaces as
+//!   [`crate::metrics::HaltReason::BudgetExhausted`] without poisoning
+//!   any pool;
+//! - **snapshot isolation** — the server owns a master
+//!   [`crate::graph::dynamic::DynamicGraph`] plus an immutable published
+//!   [`Snapshot`]; [`QueryServer::apply_mutations`] builds the next
+//!   snapshot copy-on-mutate and swaps a pointer, so readers pinned to
+//!   the old epoch ([`crate::engine::epoch::EpochPins`]) never block the
+//!   writer and never observe a half-applied batch;
+//! - [`InterleavePolicy`] — slices batch runs into bounded superstep
+//!   quanta between which interactive queries drain, with the quantum
+//!   priced from the simulator's calibrated [`crate::sim::CostModel`];
+//! - per-query [`crate::metrics::QueryMetrics`] and
+//!   [`crate::metrics::LatencyStats`] (p50/p99) — the numbers the
+//!   `ipregel serve` CLI mode and `bench_serve` report.
+
+pub mod admission;
+pub mod handle;
+pub mod sched;
+pub mod server;
+
+pub use admission::{AdmissionController, AdmitError, AdmitPermit};
+pub use handle::{Priority, QueryBudget, QueryResponse, QuerySpec};
+pub use sched::{InterleavePolicy, QueryShape, SuperstepShape};
+pub use server::{PinnedSnapshot, QueryServer, Snapshot};

@@ -1,0 +1,197 @@
+//! The interleaving policy: how a batch run shares the machine with a
+//! stream of interactive queries.
+//!
+//! Two mechanisms, both calibrated from the simulator's
+//! [`CostModel`] rather than guessed:
+//!
+//! 1. **Slicing** — a batch run executes at most
+//!    [`InterleavePolicy::slice_supersteps`] supersteps per admission
+//!    permit, then re-enters the gate (where interactive waiters
+//!    overtake it — `serve/admission.rs`). The quantum is priced so a
+//!    queued interactive query waits a bounded multiple of its *own*
+//!    cost, not an unbounded fraction of the batch run's.
+//!    **Opt-in per query**: several benchmark programs branch on
+//!    `superstep() == 0` (PageRank's init wave, SSSP's seed), so a
+//!    warm-started continuation is not bit-identical for them — the
+//!    default policy therefore interleaves by admission priority and
+//!    thread partitioning only, and slicing is reserved for programs
+//!    whose compute is superstep-oblivious.
+//! 2. **Thread partitioning** — reserve
+//!    [`InterleavePolicy::reserved_interactive_threads`] of the team for
+//!    interactive queries and hand the batch run the rest, sized at the
+//!    cost model's diminishing-returns point: small queries are
+//!    superstep-sync-bound, so a few threads serve them at near-full
+//!    speed while the batch run keeps the bulk.
+//!
+//! This file is on the `ipregel audit` panic-deny list: policy
+//! arithmetic runs inside the serving loop and must never unwind.
+
+use crate::sim::CostModel;
+
+/// Shape of one batch-run superstep, for pricing: how many vertices
+/// compute and how many messages fly.
+#[derive(Clone, Copy, Debug)]
+pub struct SuperstepShape {
+    /// Active vertices per superstep.
+    pub active: u64,
+    /// Messages delivered per superstep.
+    pub messages: u64,
+}
+
+/// Shape of a bounded interactive query, for pricing.
+#[derive(Clone, Copy, Debug)]
+pub struct QueryShape {
+    /// Supersteps (an ego-net's radius + 1, a point SSSP's wave count).
+    pub waves: usize,
+    /// Active vertices per wave.
+    pub active_per_wave: u64,
+    /// Messages per wave.
+    pub messages_per_wave: u64,
+}
+
+/// The calibrated interleaving policy (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InterleavePolicy {
+    /// Batch-run supersteps per admission permit (slicing quantum);
+    /// `usize::MAX` disables slicing.
+    pub slice_supersteps: usize,
+    /// Threads reserved for interactive queries while a batch run holds
+    /// the rest.
+    pub reserved_interactive_threads: usize,
+    /// Threads the batch run keeps (`team - reserved`, floored at 1).
+    pub batch_threads: usize,
+}
+
+impl InterleavePolicy {
+    /// Fixed policy, no cost model consulted.
+    pub fn fixed(slice_supersteps: usize, reserved: usize, team: usize) -> InterleavePolicy {
+        let team = team.max(1);
+        let reserved = reserved.min(team.saturating_sub(1));
+        InterleavePolicy {
+            slice_supersteps: slice_supersteps.max(1),
+            reserved_interactive_threads: reserved,
+            batch_threads: (team - reserved).max(1),
+        }
+    }
+
+    /// Calibrate from the simulator's cost model:
+    ///
+    /// - the **slice** is the largest number of batch supersteps whose
+    ///   virtual cost stays under `slack ×` the small query's own cost —
+    ///   a query that arrives mid-slice waits, in expectation, half
+    ///   that, so its queueing delay is a bounded multiple of its
+    ///   service time (clamped to `1..=64`);
+    /// - the **reservation** is the smallest thread count that serves
+    ///   the small query within 2× its full-team cost (small queries
+    ///   are sync-bound, so this is typically 1-2 threads), capped at
+    ///   half the team so the batch run always keeps a majority.
+    pub fn from_cost_model(
+        m: &CostModel,
+        team: usize,
+        large: SuperstepShape,
+        small: QueryShape,
+        slack: f64,
+    ) -> InterleavePolicy {
+        let team = team.max(1);
+        let big_step = m.plain_superstep(large.active, large.messages, team);
+        let small_cost = m.query_cost(
+            small.waves,
+            small.active_per_wave,
+            small.messages_per_wave,
+            team,
+        );
+        let slack = if slack.is_finite() && slack > 0.0 { slack } else { 1.0 };
+        let raw = (slack * small_cost / big_step).floor();
+        let slice = if raw.is_finite() && raw >= 1.0 {
+            (raw as usize).min(64)
+        } else {
+            1
+        };
+
+        let mut reserved = 0usize;
+        if team > 1 {
+            let budget = 2.0 * small_cost;
+            for r in 1..=(team / 2).max(1) {
+                reserved = r;
+                let at_r = m.query_cost(
+                    small.waves,
+                    small.active_per_wave,
+                    small.messages_per_wave,
+                    r,
+                );
+                if at_r <= budget {
+                    break;
+                }
+            }
+            reserved = reserved.min(team - 1);
+        }
+        InterleavePolicy {
+            slice_supersteps: slice,
+            reserved_interactive_threads: reserved,
+            batch_threads: (team - reserved).max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LARGE: SuperstepShape = SuperstepShape {
+        active: 1_000_000,
+        messages: 8_000_000,
+    };
+    const SMALL: QueryShape = QueryShape {
+        waves: 4,
+        active_per_wave: 1_000,
+        messages_per_wave: 2_000,
+    };
+
+    #[test]
+    fn fixed_policy_clamps_sanely() {
+        let p = InterleavePolicy::fixed(0, 99, 8);
+        assert_eq!(p.slice_supersteps, 1);
+        assert_eq!(p.reserved_interactive_threads, 7);
+        assert_eq!(p.batch_threads, 1);
+        let solo = InterleavePolicy::fixed(4, 2, 1);
+        assert_eq!(solo.reserved_interactive_threads, 0);
+        assert_eq!(solo.batch_threads, 1);
+    }
+
+    #[test]
+    fn calibration_bounds_the_slice_by_query_cost() {
+        let m = CostModel::default();
+        let p = InterleavePolicy::from_cost_model(&m, 32, LARGE, SMALL, 2.0);
+        assert!(p.slice_supersteps >= 1);
+        // The defining inequality: slice × big_step ≤ slack × small_cost
+        // (unless clamped up to the minimum slice of 1).
+        let big = m.plain_superstep(LARGE.active, LARGE.messages, 32);
+        let small = m.query_cost(SMALL.waves, SMALL.active_per_wave, SMALL.messages_per_wave, 32);
+        if p.slice_supersteps > 1 {
+            assert!(p.slice_supersteps as f64 * big <= 2.0 * small + big);
+        }
+        // A heavier big step can only shrink the slice.
+        let heavier = SuperstepShape {
+            active: LARGE.active * 10,
+            messages: LARGE.messages * 10,
+        };
+        let p2 = InterleavePolicy::from_cost_model(&m, 32, heavier, SMALL, 2.0);
+        assert!(p2.slice_supersteps <= p.slice_supersteps);
+    }
+
+    #[test]
+    fn reservation_is_small_because_queries_are_sync_bound() {
+        let m = CostModel::default();
+        let p = InterleavePolicy::from_cost_model(&m, 32, LARGE, SMALL, 2.0);
+        assert!(p.reserved_interactive_threads >= 1);
+        assert!(
+            p.reserved_interactive_threads <= 16,
+            "batch keeps the majority: {p:?}"
+        );
+        assert_eq!(p.batch_threads, 32 - p.reserved_interactive_threads);
+        // One-thread teams reserve nothing.
+        let solo = InterleavePolicy::from_cost_model(&m, 1, LARGE, SMALL, 2.0);
+        assert_eq!(solo.reserved_interactive_threads, 0);
+        assert_eq!(solo.batch_threads, 1);
+    }
+}

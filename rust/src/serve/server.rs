@@ -1,0 +1,386 @@
+//! The [`QueryServer`]: concurrent context-tagged runs over one shared
+//! graph, with snapshot isolation against a single writer.
+//!
+//! **Read path.** The server publishes an immutable [`Snapshot`] — a
+//! mutation epoch plus a [`GraphSession`] owning a compacted copy of the
+//! graph at that epoch. `GraphSession::run_with` takes `&self`, so any
+//! number of admitted queries run concurrently over one snapshot, each
+//! popping its own warm store from the session's keyed multi-checkout
+//! pools. A query *pins* its snapshot's epoch
+//! ([`crate::engine::EpochPins`]) for its duration; the `Arc` it holds
+//! keeps the snapshot alive even if the server republishes mid-run.
+//!
+//! **Write path (copy-on-mutate).** [`QueryServer::apply_mutations`]
+//! applies the batch to the server's private master
+//! [`DynamicGraph`] — never read by queries — then builds a fresh
+//! session over the rebuilt CSR and swaps the published `Arc` pointer.
+//! Writers never wait for pinned readers; pinned readers keep seeing
+//! exactly the epoch they pinned. The cost is a graph copy per batch
+//! (acceptable at serving mutation rates) in exchange for zero reader
+//! stalls and trivially-auditable isolation.
+//!
+//! Solo-path guarantee: a served query is the same `run_with` call a
+//! solo caller would make — same config, same halt, same store pooling —
+//! so values *and* per-superstep traces are bit-identical to a solo run
+//! over the same graph (`rust/tests/test_serve.rs` pins this down).
+
+use crate::engine::epoch::{EpochPin, EpochPins};
+use crate::engine::{EngineConfig, GraphSession, PoolStats, RunOptions, VertexProgram};
+use crate::graph::csr::Csr;
+use crate::graph::dynamic::{DynamicGraph, MutationReceipt, MutationSet};
+use crate::metrics::{LatencyStats, QueryMetrics};
+use crate::serve::admission::{AdmissionController, AdmitError, AdmitPermit};
+use crate::serve::handle::{Priority, QueryResponse, QuerySpec};
+use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default concurrent-run bound for [`QueryServer::new`].
+const DEFAULT_MAX_CONCURRENT: usize = 8;
+
+/// One published graph state: a mutation epoch and a session over an
+/// immutable copy of the graph as of that epoch. Shared by `Arc`; a
+/// snapshot is never mutated after publication.
+pub struct Snapshot {
+    epoch: u64,
+    session: GraphSession<'static>,
+}
+
+impl Snapshot {
+    /// The mutation epoch this snapshot reflects.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The shared session queries run against.
+    pub fn session(&self) -> &GraphSession<'static> {
+        &self.session
+    }
+}
+
+/// A snapshot held open by an explicit reader pin: the snapshot stays
+/// retrievable (and its epoch observable via
+/// [`QueryServer::pinned_readers`]) until this guard drops, regardless
+/// of how many batches the writer publishes meanwhile.
+pub struct PinnedSnapshot {
+    snapshot: Arc<Snapshot>,
+    pin: EpochPin,
+}
+
+impl PinnedSnapshot {
+    /// The pinned epoch.
+    pub fn epoch(&self) -> u64 {
+        self.pin.epoch()
+    }
+
+    /// The pinned snapshot's session.
+    pub fn session(&self) -> &GraphSession<'static> {
+        self.snapshot.session()
+    }
+}
+
+/// The serving front-end (see module docs).
+pub struct QueryServer {
+    /// The writer's private graph — queries never read it.
+    master: Mutex<DynamicGraph>,
+    /// The published snapshot; readers clone the `Arc` and drop the lock.
+    snapshot: Mutex<Arc<Snapshot>>,
+    /// Refcounts of reader-pinned epochs.
+    pins: Arc<EpochPins>,
+    /// The admission gate.
+    admission: AdmissionController,
+    /// Session default config, reused for every republished snapshot.
+    cfg: EngineConfig,
+    /// Query-id allocator. Relaxed: ids only need uniqueness, and the
+    /// admission mutex orders everything else a query observes.
+    next_id: AtomicU64,
+    /// Queries fully served. Relaxed: a statistic, read after joins.
+    completed: AtomicU64,
+    /// Every served query's [`QueryMetrics`], in completion order.
+    log: Mutex<Vec<QueryMetrics>>,
+}
+
+impl QueryServer {
+    /// Server over `g` with default engine config and admission bound.
+    pub fn new(g: Csr) -> QueryServer {
+        Self::with_config(
+            g,
+            EngineConfig::default(),
+            AdmissionController::new(DEFAULT_MAX_CONCURRENT),
+        )
+    }
+
+    /// Server over `g` with an explicit session config and admission
+    /// gate. The config becomes the default for every query (a
+    /// [`QuerySpec::config`] overrides it per query) and is inherited by
+    /// every snapshot republished after a mutation batch.
+    pub fn with_config(g: Csr, cfg: EngineConfig, admission: AdmissionController) -> QueryServer {
+        let master = DynamicGraph::new(g);
+        let snapshot = Arc::new(Snapshot {
+            epoch: master.epoch(),
+            session: GraphSession::dynamic_with_config(
+                DynamicGraph::new(master.graph().rebuilt()),
+                cfg,
+            ),
+        });
+        QueryServer {
+            master: Mutex::new(master),
+            snapshot: Mutex::new(snapshot),
+            pins: EpochPins::new(),
+            admission,
+            cfg,
+            next_id: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The currently published snapshot.
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        Arc::clone(&self.snapshot.lock().expect("snapshot poisoned"))
+    }
+
+    /// The currently published mutation epoch.
+    pub fn epoch(&self) -> u64 {
+        self.snapshot().epoch
+    }
+
+    /// Pin the current snapshot: the returned guard keeps it (and its
+    /// epoch's pin count) alive across any number of mutation batches.
+    pub fn pin_current(&self) -> PinnedSnapshot {
+        let snapshot = self.snapshot();
+        let pin = self.pins.pin(snapshot.epoch);
+        PinnedSnapshot { snapshot, pin }
+    }
+
+    /// Serve one query against the current snapshot: admit (interactive
+    /// overtakes queued batch), pin the snapshot's epoch, run, release.
+    ///
+    /// # Errors
+    /// [`AdmitError::QueueFull`] when the gate's wait queue is capped
+    /// and full.
+    pub fn execute<P: VertexProgram>(
+        &self,
+        program: &P,
+        spec: &QuerySpec,
+    ) -> Result<QueryResponse<P::Value>, AdmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let t_queue = Timer::start();
+        let permit = self.admission.admit(spec.class())?;
+        let queue_wait = t_queue.elapsed();
+        // Pin *after* admission: a query stuck at the gate must not hold
+        // an old epoch open.
+        let snapshot = self.snapshot();
+        let pin = self.pins.pin(snapshot.epoch);
+        self.run_admitted(program, spec, id, queue_wait, &snapshot, pin, permit)
+    }
+
+    /// Serve one query against an explicitly pinned snapshot — the
+    /// time-travel read path: `pinned` may be epochs behind the
+    /// published state.
+    ///
+    /// # Errors
+    /// [`AdmitError::QueueFull`] as for [`QueryServer::execute`].
+    pub fn execute_on<P: VertexProgram>(
+        &self,
+        pinned: &PinnedSnapshot,
+        program: &P,
+        spec: &QuerySpec,
+    ) -> Result<QueryResponse<P::Value>, AdmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let t_queue = Timer::start();
+        let permit = self.admission.admit(spec.class())?;
+        let queue_wait = t_queue.elapsed();
+        let pin = self.pins.pin(pinned.snapshot.epoch);
+        self.run_admitted(program, spec, id, queue_wait, &pinned.snapshot, pin, permit)
+    }
+
+    /// The admitted tail shared by both execute paths: run with the
+    /// spec's config/budget/tag, record [`QueryMetrics`], release the
+    /// permit (dropping it wakes the gate) and the epoch pin.
+    #[allow(clippy::too_many_arguments)]
+    fn run_admitted<P: VertexProgram>(
+        &self,
+        program: &P,
+        spec: &QuerySpec,
+        id: u64,
+        queue_wait: std::time::Duration,
+        snapshot: &Arc<Snapshot>,
+        pin: EpochPin,
+        permit: AdmitPermit<'_>,
+    ) -> Result<QueryResponse<P::Value>, AdmitError> {
+        let tag = spec.tag.unwrap_or(id);
+        let mut opts = RunOptions::new().halt(spec.budget.to_halt()).tag(tag);
+        if let Some(cfg) = spec.config {
+            opts = opts.config(cfg);
+        }
+        let t_run = Timer::start();
+        let result = snapshot.session.run_with(program, opts);
+        let run_time = t_run.elapsed();
+        drop(permit);
+        drop(pin);
+        let query = QueryMetrics {
+            id,
+            tag,
+            class: spec.class().name(),
+            queue_wait,
+            run_time,
+            latency: queue_wait + run_time,
+            supersteps: result.metrics.num_supersteps(),
+            halt_reason: result.metrics.halt_reason,
+            epoch: snapshot.epoch,
+            store_reused: result.metrics.store_reused,
+        };
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.log
+            .lock()
+            .expect("query log poisoned")
+            .push(query.clone());
+        Ok(QueryResponse {
+            values: result.values,
+            metrics: result.metrics,
+            query,
+        })
+    }
+
+    /// Apply one mutation batch and publish the next snapshot
+    /// (copy-on-mutate). Takes `&self`: the master mutex serialises
+    /// writers against each other only — in-flight readers keep their
+    /// pinned snapshots and are never waited on.
+    pub fn apply_mutations(&self, m: &MutationSet) -> MutationReceipt {
+        let mut master = self.master.lock().expect("master graph poisoned");
+        let receipt = master.apply(m);
+        let next = Arc::new(Snapshot {
+            epoch: master.epoch(),
+            session: GraphSession::dynamic_with_config(
+                DynamicGraph::new(master.graph().rebuilt()),
+                self.cfg,
+            ),
+        });
+        // Swap the pointer while still holding the master lock so
+        // published epochs are monotone even across racing writers.
+        *self.snapshot.lock().expect("snapshot poisoned") = next;
+        receipt
+    }
+
+    /// Live reader pins on `epoch`.
+    pub fn pinned_readers(&self, epoch: u64) -> usize {
+        self.pins.pinned_readers(epoch)
+    }
+
+    /// The oldest epoch still pinned by a reader, if any.
+    pub fn oldest_pinned(&self) -> Option<u64> {
+        self.pins.oldest_pinned()
+    }
+
+    /// The admission gate (for observability: running/waiting counts).
+    pub fn admission(&self) -> &AdmissionController {
+        &self.admission
+    }
+
+    /// Pool checkout/hit counters of the *current* snapshot's session —
+    /// the evidence that concurrent queries share warm stores.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.snapshot().session.pool_stats()
+    }
+
+    /// Engine runs completed by the current snapshot's session.
+    pub fn runs_completed(&self) -> u64 {
+        self.snapshot().session.runs_completed()
+    }
+
+    /// Queries fully served over the server's lifetime (all snapshots).
+    pub fn queries_completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Copy of the per-query metrics log, in completion order.
+    pub fn query_log(&self) -> Vec<QueryMetrics> {
+        self.log.lock().expect("query log poisoned").clone()
+    }
+
+    /// End-to-end latency order statistics over served queries,
+    /// optionally restricted to one priority class.
+    pub fn latency_stats(&self, class: Option<Priority>) -> LatencyStats {
+        let log = self.log.lock().expect("query log poisoned");
+        let samples: Vec<std::time::Duration> = log
+            .iter()
+            .filter(|q| class.map_or(true, |c| q.class == c.name()))
+            .map(|q| q.latency)
+            .collect();
+        LatencyStats::from_durations(&samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::query::EgoNetBfs;
+    use crate::algos::ConnectedComponents;
+    use crate::graph::gen;
+    use crate::metrics::HaltReason;
+
+    #[test]
+    fn serves_and_logs_a_query() {
+        let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 7);
+        let server = QueryServer::new(g.rebuilt());
+        let solo = GraphSession::new(&g).run(&ConnectedComponents);
+        let got = server
+            .execute(&ConnectedComponents, &QuerySpec::interactive())
+            .unwrap();
+        assert_eq!(got.values, solo.values);
+        assert_eq!(got.query.epoch, 0);
+        assert_eq!(got.query.class, "interactive");
+        assert_eq!(got.metrics.query_tag, Some(got.query.tag));
+        assert_eq!(server.queries_completed(), 1);
+        assert_eq!(server.query_log().len(), 1);
+        assert_eq!(server.latency_stats(None).count, 1);
+        assert_eq!(server.latency_stats(Some(Priority::Batch)).count, 0);
+    }
+
+    #[test]
+    fn mutation_publishes_new_epoch_without_waiting_for_pins() {
+        let g = gen::ring(32);
+        let server = QueryServer::new(g);
+        let pinned = server.pin_current();
+        assert_eq!(server.pinned_readers(0), 1);
+        let mut m = MutationSet::new();
+        m.insert_undirected(0, 16);
+        let receipt = server.apply_mutations(&m);
+        assert_eq!(receipt.epoch, 1);
+        assert_eq!(server.epoch(), 1, "writer published without blocking");
+        assert_eq!(pinned.epoch(), 0, "reader still on its pinned epoch");
+        assert_eq!(server.oldest_pinned(), Some(0));
+        drop(pinned);
+        assert_eq!(server.oldest_pinned(), None);
+    }
+
+    #[test]
+    fn budget_exhaustion_is_a_clean_halt() {
+        let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 11);
+        let server = QueryServer::new(g);
+        let spec = QuerySpec::interactive().budget(crate::serve::QueryBudget::tokens(1));
+        let got = server.execute(&ConnectedComponents, &spec).unwrap();
+        assert_eq!(got.query.halt_reason, HaltReason::BudgetExhausted);
+        // The pool survives: a fresh unbounded query converges normally.
+        let again = server
+            .execute(&ConnectedComponents, &QuerySpec::interactive())
+            .unwrap();
+        assert_eq!(again.query.halt_reason, HaltReason::Quiescence);
+        assert!(again.query.store_reused, "exhausted run handed its store back");
+    }
+
+    #[test]
+    fn explicit_tag_beats_assigned_id() {
+        let g = gen::grid(6, 6);
+        let server = QueryServer::new(g);
+        let got = server
+            .execute(
+                &EgoNetBfs { root: 0, radius: 2 },
+                &QuerySpec::interactive().tag(0xBEEF),
+            )
+            .unwrap();
+        assert_eq!(got.query.tag, 0xBEEF);
+        assert_eq!(got.metrics.query_tag, Some(0xBEEF));
+    }
+}

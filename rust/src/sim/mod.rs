@@ -201,6 +201,35 @@ impl CostModel {
     ///   *uncontended* edge over Lock (one atomic op vs a lock pair) is
     ///   what grows with the graph's edge count, the paper's §VII-A
     ///   explanation.
+    /// Virtual duration of one balanced combined-plane push superstep:
+    /// `active` vertices computed and `messages` delivered (priced at the
+    /// uncontended CAS + combine each), spread across `threads`, plus the
+    /// team synchronisation. The serving layer's pricing unit: the
+    /// interleave policy (`serve/sched.rs`) slices large runs so that a
+    /// queued interactive query waits a bounded number of *these* —
+    /// calibrated from the same constants the Table II simulations use.
+    #[inline]
+    pub fn plain_superstep(&self, active: u64, messages: u64, threads: usize) -> f64 {
+        let work = active as f64 * self.t_vertex
+            + messages as f64 * (self.t_cas + self.t_combine);
+        work / threads.max(1) as f64 + self.t_superstep_sync
+    }
+
+    /// Virtual cost of a bounded-scope query: `waves` supersteps of
+    /// roughly `active_per_wave` vertices and `messages_per_wave`
+    /// deliveries each (an ego-net BFS's wave count is its radius; a
+    /// point SSSP's tracks its cutoff).
+    #[inline]
+    pub fn query_cost(
+        &self,
+        waves: usize,
+        active_per_wave: u64,
+        messages_per_wave: u64,
+        threads: usize,
+    ) -> f64 {
+        waves as f64 * self.plain_superstep(active_per_wave, messages_per_wave, threads)
+    }
+
     #[inline]
     pub fn delivery_cost(&self, strategy: Strategy, c: u32, threads: usize, total: u64) -> f64 {
         debug_assert!(c >= 1);
@@ -295,6 +324,22 @@ mod tests {
                 "{strat:?}"
             );
         }
+    }
+
+    #[test]
+    fn superstep_pricing_scales_with_work_and_threads() {
+        let m = CostModel::default();
+        // More work costs more; more threads cost less (down to the sync
+        // floor, which no thread count removes).
+        assert!(m.plain_superstep(1_000, 2_000, 8) < m.plain_superstep(1_000_000, 8_000_000, 8));
+        assert!(m.plain_superstep(1_000_000, 8_000_000, 32) < m.plain_superstep(1_000_000, 8_000_000, 4));
+        assert!(m.plain_superstep(0, 0, 32) >= m.t_superstep_sync);
+        // A query is its waves, exactly.
+        let one = m.plain_superstep(500, 1_500, 8);
+        assert!((m.query_cost(4, 500, 1_500, 8) - 4.0 * one).abs() < 1e-9);
+        // The serving premise in model terms: a bounded ego-net query is
+        // orders of magnitude cheaper than one full-graph sweep superstep.
+        assert!(m.query_cost(3, 1_000, 2_000, 32) < m.plain_superstep(10_000_000, 80_000_000, 32));
     }
 
     #[test]

@@ -135,6 +135,9 @@ pub fn chrome_trace_json(trace: &RunTrace) -> String {
                     InstantKind::EpochBump { epoch } | InstantKind::Compaction { epoch } => {
                         format!("\"superstep\":{superstep},\"epoch\":{epoch}")
                     }
+                    InstantKind::QueryContext { tag } => {
+                        format!("\"superstep\":{superstep},\"tag\":{tag}")
+                    }
                 };
                 format!(
                     "{{\"name\":\"{}\",\"cat\":\"instant\",\"ph\":\"i\",\"s\":\"t\",\

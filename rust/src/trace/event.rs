@@ -77,6 +77,14 @@ pub enum InstantKind {
         /// The graph's mutation epoch.
         epoch: u64,
     },
+    /// The run carried a serving-layer context tag
+    /// (`RunOptions::tag`): emitted once at the head of the timeline so
+    /// interleaved multi-tenant runs stay attributable in a merged
+    /// trace. The software analogue of a hardware context id.
+    QueryContext {
+        /// The caller-chosen context tag.
+        tag: u64,
+    },
 }
 
 impl InstantKind {
@@ -87,6 +95,7 @@ impl InstantKind {
             InstantKind::Steal { .. } => "steal",
             InstantKind::EpochBump { .. } => "epoch-bump",
             InstantKind::Compaction { .. } => "compaction",
+            InstantKind::QueryContext { .. } => "query-context",
         }
     }
 }

@@ -52,6 +52,7 @@ pub fn render_summary(trace: &RunTrace, top_k: usize) -> String {
     let engine = trace.engine_lane();
     let mut steps: BTreeMap<u32, StepAgg> = BTreeMap::new();
     let mut epoch_note: Option<String> = None;
+    let mut context_note: Option<String> = None;
     for ev in &trace.events {
         match ev {
             Event::Span {
@@ -87,6 +88,9 @@ pub fn render_summary(trace: &RunTrace, top_k: usize) -> String {
                     InstantKind::Compaction { epoch } => {
                         epoch_note = Some(format!("graph epoch {epoch} (freshly compacted)"));
                     }
+                    InstantKind::QueryContext { tag } => {
+                        context_note = Some(format!("query context tag {tag}"));
+                    }
                 }
             }
             Event::Counter {
@@ -114,6 +118,9 @@ pub fn render_summary(trace: &RunTrace, top_k: usize) -> String {
         total_steals
     );
     if let Some(note) = epoch_note {
+        let _ = writeln!(out, "   {note}");
+    }
+    if let Some(note) = context_note {
         let _ = writeln!(out, "   {note}");
     }
     for (step, agg) in &steps {

@@ -1,0 +1,271 @@
+//! Serving-layer integration tests: the multi-tenancy contract.
+//!
+//! Four families, matching the acceptance criteria:
+//!
+//! 1. **Bit-identity** — N concurrent served queries (with a whole-graph
+//!    batch run contending at the gate) return exactly what solo runs
+//!    over the same graph return: values *and* per-superstep
+//!    (active, messages) traces, across flat/sharded × adaptive on/off.
+//!    The serving layer is a front-end; it never perturbs the engine.
+//! 2. **Budget isolation** — a query that exhausts its token or
+//!    superstep budget halts with its own distinct [`HaltReason`] and
+//!    hands every pooled resource back; its neighbours are unaffected.
+//! 3. **Snapshot isolation** — a reader pinned to an epoch sees exactly
+//!    that epoch's graph while (and after) a writer publishes mutations;
+//!    the writer never waits for the pin.
+//! 4. **Pool sharing** — concurrent same-shaped queries provably share
+//!    warm vertex stores through the session's multi-checkout pools.
+
+use ipregel::algos::query::{EgoNetBfs, PointSssp};
+use ipregel::algos::{ConnectedComponents, PageRank};
+use ipregel::engine::{EngineConfig, GraphSession};
+use ipregel::graph::dynamic::{DynamicGraph, MutationSet};
+use ipregel::graph::gen;
+use ipregel::metrics::{HaltReason, RunMetrics};
+use ipregel::serve::{AdmissionController, QueryBudget, QueryServer, QuerySpec};
+use std::sync::Mutex;
+
+/// The per-superstep trace the bit-identity contract covers: semantic
+/// counts only (wall-clock fields are obviously run-specific).
+fn step_trace(m: &RunMetrics) -> Vec<(usize, u64)> {
+    m.supersteps
+        .iter()
+        .map(|s| (s.active_vertices, s.messages))
+        .collect()
+}
+
+#[test]
+fn concurrent_queries_are_bit_identical_to_solo_runs() {
+    let base = gen::rmat(8, 4, 0.57, 0.19, 0.19, 23);
+    let solo_graph = base.rebuilt();
+    let roots: [u32; 4] = [0, 7, 99, 148];
+    for &shards in &[0usize, 3] {
+        for &adaptive in &[false, true] {
+            let cfg = EngineConfig::default()
+                .threads(3)
+                .shards(shards)
+                .adaptive(adaptive);
+            let ctx = format!("shards {shards} adaptive {adaptive}");
+
+            // Solo ground truth: one quiet session, one run per query.
+            let solo = GraphSession::with_config(&solo_graph, cfg);
+            let expect_ego: Vec<_> = roots
+                .iter()
+                .map(|&root| {
+                    let out = solo.run(&EgoNetBfs { root, radius: 2 });
+                    (out.values, step_trace(&out.metrics))
+                })
+                .collect();
+            let expect_sssp: Vec<_> = roots
+                .iter()
+                .map(|&source| {
+                    let out = solo.run(&PointSssp {
+                        source,
+                        cutoff: 3.0,
+                    });
+                    (out.values, step_trace(&out.metrics))
+                })
+                .collect();
+            let expect_cc = solo.run(&ConnectedComponents);
+
+            // Served: all small queries in flight at once, plus a
+            // whole-graph batch run contending at the admission gate.
+            let server =
+                QueryServer::with_config(base.rebuilt(), cfg, AdmissionController::new(8));
+            let got_ego: Mutex<Vec<(usize, Vec<u64>, Vec<(usize, u64)>)>> =
+                Mutex::new(Vec::new());
+            let got_sssp: Mutex<Vec<(usize, Vec<f64>, Vec<(usize, u64)>)>> =
+                Mutex::new(Vec::new());
+            std::thread::scope(|s| {
+                let server = &server;
+                s.spawn(move || {
+                    let r = server
+                        .execute(
+                            &PageRank {
+                                iterations: 5,
+                                damping: 0.85,
+                            },
+                            &QuerySpec::batch().config(cfg),
+                        )
+                        .unwrap();
+                    assert!(r.metrics.num_supersteps() > 0);
+                });
+                for (i, &root) in roots.iter().enumerate() {
+                    let got_ego = &got_ego;
+                    s.spawn(move || {
+                        let r = server
+                            .execute(
+                                &EgoNetBfs { root, radius: 2 },
+                                &QuerySpec::interactive().config(cfg),
+                            )
+                            .unwrap();
+                        got_ego
+                            .lock()
+                            .unwrap()
+                            .push((i, r.values, step_trace(&r.metrics)));
+                    });
+                    let got_sssp = &got_sssp;
+                    s.spawn(move || {
+                        let r = server
+                            .execute(
+                                &PointSssp {
+                                    source: root,
+                                    cutoff: 3.0,
+                                },
+                                &QuerySpec::interactive().config(cfg),
+                            )
+                            .unwrap();
+                        got_sssp
+                            .lock()
+                            .unwrap()
+                            .push((i, r.values, step_trace(&r.metrics)));
+                    });
+                }
+            });
+            for (i, values, trace) in got_ego.into_inner().unwrap() {
+                assert_eq!(values, expect_ego[i].0, "ego-net values, root {i} ({ctx})");
+                assert_eq!(trace, expect_ego[i].1, "ego-net trace, root {i} ({ctx})");
+            }
+            for (i, values, trace) in got_sssp.into_inner().unwrap() {
+                assert_eq!(values, expect_sssp[i].0, "point-sssp values, root {i} ({ctx})");
+                assert_eq!(trace, expect_sssp[i].1, "point-sssp trace, root {i} ({ctx})");
+            }
+            // And a served whole-graph run matches its solo twin too.
+            let served_cc = server
+                .execute(&ConnectedComponents, &QuerySpec::batch().config(cfg))
+                .unwrap();
+            assert_eq!(served_cc.values, expect_cc.values, "cc values ({ctx})");
+            assert_eq!(
+                step_trace(&served_cc.metrics),
+                step_trace(&expect_cc.metrics),
+                "cc trace ({ctx})"
+            );
+        }
+    }
+}
+
+#[test]
+fn budget_exhaustion_is_isolated_per_query() {
+    let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 5);
+    let solo = GraphSession::new(&g).run(&ConnectedComponents);
+    let server = QueryServer::new(g.rebuilt());
+
+    let starved = server
+        .execute(
+            &ConnectedComponents,
+            &QuerySpec::interactive().budget(QueryBudget::tokens(1)),
+        )
+        .unwrap();
+    assert_eq!(starved.query.halt_reason, HaltReason::BudgetExhausted);
+    assert!(
+        starved.metrics.num_supersteps() < solo.metrics.num_supersteps(),
+        "the token budget actually cut the run short"
+    );
+
+    let capped = server
+        .execute(
+            &ConnectedComponents,
+            &QuerySpec::interactive().budget(QueryBudget::supersteps(1)),
+        )
+        .unwrap();
+    assert_eq!(
+        capped.query.halt_reason,
+        HaltReason::SuperstepCap,
+        "each budget axis surfaces its own distinct reason"
+    );
+
+    // The pool is not poisoned: an unbounded rerun on the same server
+    // converges to the solo answer, on a store a budgeted run handed back.
+    let full = server
+        .execute(&ConnectedComponents, &QuerySpec::interactive())
+        .unwrap();
+    assert_eq!(full.query.halt_reason, HaltReason::Quiescence);
+    assert_eq!(full.values, solo.values);
+    assert!(full.query.store_reused, "exhausted runs returned their stores");
+    assert_eq!(server.queries_completed(), 3);
+}
+
+#[test]
+fn pinned_readers_see_the_premutation_snapshot() {
+    let pre = gen::path(8);
+    let probe = EgoNetBfs { root: 0, radius: 8 };
+
+    // Ground truth on both sides of the mutation, from scratch sessions.
+    let pre_expect = GraphSession::new(&pre).run(&probe).values;
+    let mut m = MutationSet::new();
+    m.insert_undirected(0, 7);
+    let mut shadow = DynamicGraph::new(pre.rebuilt());
+    shadow.apply(&m);
+    let post_graph = shadow.graph().rebuilt();
+    let post_expect = GraphSession::new(&post_graph).run(&probe).values;
+    assert_ne!(pre_expect, post_expect, "the mutation must be observable");
+
+    let server = QueryServer::new(pre.rebuilt());
+    let pinned = server.pin_current();
+    assert_eq!(server.pinned_readers(0), 1);
+
+    // The writer publishes while the pinned reader is mid-flight; the
+    // reader's answer is the pinned epoch's regardless of who wins.
+    std::thread::scope(|s| {
+        let (server, pinned, probe) = (&server, &pinned, &probe);
+        let reader = s.spawn(move || {
+            server
+                .execute_on(pinned, probe, &QuerySpec::interactive())
+                .unwrap()
+        });
+        let receipt = server.apply_mutations(&m);
+        assert_eq!(receipt.epoch, 1, "writer published without blocking");
+        let old = reader.join().unwrap();
+        assert_eq!(old.values, pre_expect, "pinned read = pre-mutation snapshot");
+        assert_eq!(old.query.epoch, 0);
+    });
+
+    // Fresh queries see the new epoch; the pin still time-travels.
+    assert_eq!(server.epoch(), 1);
+    let fresh = server
+        .execute(&probe, &QuerySpec::interactive())
+        .unwrap();
+    assert_eq!(fresh.values, post_expect);
+    assert_eq!(fresh.query.epoch, 1);
+    let old_again = server
+        .execute_on(&pinned, &probe, &QuerySpec::interactive())
+        .unwrap();
+    assert_eq!(old_again.values, pre_expect);
+    assert_eq!(old_again.query.epoch, 0);
+    assert_eq!(server.oldest_pinned(), Some(0));
+    drop(pinned);
+    assert_eq!(server.oldest_pinned(), None, "dropping the pin retires the epoch");
+}
+
+#[test]
+fn concurrent_queries_share_pooled_stores() {
+    let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 13);
+    let cfg = EngineConfig::default().threads(2);
+    let solo = GraphSession::with_config(&g, cfg).run(&ConnectedComponents);
+    let expect = &solo.values;
+
+    // A gate of 2 bounds live stores at 2, so at least 6 of the 8
+    // checkouts below must be served warm from the pool.
+    let server = QueryServer::with_config(g.rebuilt(), cfg, AdmissionController::new(2));
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let server = &server;
+            s.spawn(move || {
+                let r = server
+                    .execute(&ConnectedComponents, &QuerySpec::interactive())
+                    .unwrap();
+                assert_eq!(&r.values, expect);
+            });
+        }
+    });
+    assert_eq!(server.queries_completed(), 8);
+    assert_eq!(server.runs_completed(), 8);
+    let pool = server.pool_stats();
+    assert_eq!(pool.store_checkouts, 8);
+    assert!(
+        pool.store_hits >= 6,
+        "shared stores: only {} of {} checkouts hit the pool",
+        pool.store_hits,
+        pool.store_checkouts
+    );
+}
