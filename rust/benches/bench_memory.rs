@@ -1,0 +1,207 @@
+//! Memory-plane bench: raw CSR slabs vs compressed varint row blocks vs
+//! the out-of-core arena, per algorithm, emitting `BENCH_memory.json`.
+//! The headline claims under test: delta-gap compression of the sorted
+//! rows buys at least 1.5x on the scale-free catalog analogues, the
+//! out-of-core arena runs with a bounded resident set, and neither
+//! backing changes a single answer (bit-identity is asserted per run,
+//! not assumed).
+//!
+//! Run: `cargo bench --bench bench_memory`            (friendster-s analogue)
+//!      `BENCH_SMOKE=1 cargo bench --bench bench_memory`  (CI smoke:
+//!       friendster-t analogue — exercises decode, streaming, eviction
+//!       and the parity assertions, not the clock)
+//!      `BENCH_OUT=path.json` overrides the output location.
+
+use ipregel::algos::{ConnectedComponents, PageRank, Sssp};
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions, VertexProgram};
+use ipregel::graph::csr::Csr;
+use ipregel::graph::{gen, io, RowPlaneStats, RowPolicy};
+use ipregel::util::timer::fmt_duration;
+use std::fmt::Write as _;
+
+struct Row {
+    algo: &'static str,
+    backing: &'static str,
+    millis: f64,
+    supersteps: usize,
+    decodes: u64,
+    row_faults: u64,
+    evictions: u64,
+    resident_kib: u64,
+}
+
+fn bench_one<P: VertexProgram>(
+    session: &GraphSession<'_>,
+    p: &P,
+    cfg: EngineConfig,
+    reps: usize,
+) -> (usize, Option<RowPlaneStats>, Vec<P::Value>, f64) {
+    let mut best: Option<(usize, Option<RowPlaneStats>, Vec<P::Value>, f64)> = None;
+    for _ in 0..reps.max(1) {
+        let r = session.run_with(p, RunOptions::new().config(cfg));
+        let ms = r.metrics.total_time.as_secs_f64() * 1e3;
+        if best.as_ref().map_or(true, |(_, _, _, b)| ms < *b) {
+            best = Some((
+                r.metrics.num_supersteps(),
+                r.metrics.row_plane.clone(),
+                r.values,
+                ms,
+            ));
+        }
+    }
+    best.unwrap()
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_memory.json".to_string());
+
+    // Catalog analogues (RMAT, Graph500 quadrants): friendster-t for the
+    // smoke tier, friendster-s for the full clock — the scale-free skew
+    // is the point, hub rows are where delta-gap coding earns its ratio.
+    let (name, g, reps): (&str, Csr, usize) = if smoke {
+        ("friendster-t", gen::rmat(10, 6, 0.57, 0.19, 0.19, 7), 1)
+    } else {
+        ("friendster-s", gen::rmat(14, 8, 0.57, 0.19, 0.19, 7), 3)
+    };
+    let block = if smoke { 64 } else { 1024 };
+    eprintln!(
+        "== bench_memory ({}, {name}): |V|={} |E|={} block={} ==",
+        if smoke { "SMOKE" } else { "full" },
+        g.num_vertices(),
+        g.num_edges(),
+        block
+    );
+
+    let dir = std::env::temp_dir().join(format!("ipregel_bench_mem_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench scratch dir");
+    let raw_bytes = g.memory_bytes();
+
+    let compressed = g.clone().compress(block);
+    let external = io::externalize(&g, &dir.join("arena.ipgc"), block)
+        .expect("externalising the bench graph");
+    // Bounded working set: the out-of-core tier streams under a budget
+    // of 1/4 of the blocks, so eviction pressure is part of the clock.
+    let budget = (external.row_plane().expect("external plane").num_blocks() / 4).max(1);
+    external.row_plane().expect("external plane").set_policy(RowPolicy {
+        resident_blocks: Some(budget),
+        cold_rounds: None,
+    });
+    let ratio = compressed
+        .row_plane()
+        .expect("compressed plane")
+        .stats()
+        .compression_ratio();
+    eprintln!(
+        "  compression ratio {ratio:.2}x ({} raw adjacency bytes), oocore budget {budget} blocks",
+        raw_bytes
+    );
+    assert!(
+        ratio >= 1.5,
+        "{name}: compression ratio {ratio:.2} below the 1.5x floor"
+    );
+
+    let cfg = EngineConfig::default().threads(4);
+    let backings: Vec<(&'static str, &Csr)> =
+        vec![("raw", &g), ("compressed", &compressed), ("external", &external)];
+
+    let mut rows: Vec<Row> = Vec::new();
+    fn run_algo<P: VertexProgram>(
+        name: &'static str,
+        p: &P,
+        backings: &[(&'static str, &Csr)],
+        cfg: EngineConfig,
+        reps: usize,
+        rows: &mut Vec<Row>,
+    ) where
+        P::Value: PartialEq + std::fmt::Debug,
+    {
+        let mut reference: Option<Vec<P::Value>> = None;
+        for (label, gb) in backings {
+            let session = GraphSession::new(gb);
+            let (supersteps, rp, values, ms) = bench_one(&session, p, cfg, reps);
+            match &reference {
+                None => reference = Some(values),
+                Some(want) => {
+                    assert_eq!(&values, want, "{name}/{label}: row backing changed answers")
+                }
+            }
+            let (decodes, row_faults, evictions, resident_kib) = rp
+                .as_ref()
+                .map(|s| (s.decodes, s.row_faults, s.evictions, s.resident_bytes / 1024))
+                .unwrap_or_default();
+            eprintln!(
+                "  {:<5} {:<10} {} supersteps in {} (decodes {decodes}, \
+                 faults {row_faults}, evictions {evictions}, resident {resident_kib} KiB)",
+                name,
+                label,
+                supersteps,
+                fmt_duration(std::time::Duration::from_secs_f64(ms / 1e3)),
+            );
+            rows.push(Row {
+                algo: name,
+                backing: label,
+                millis: ms,
+                supersteps,
+                decodes,
+                row_faults,
+                evictions,
+                resident_kib,
+            });
+        }
+    }
+
+    run_algo("pr", &PageRank::default(), &backings, cfg, reps, &mut rows);
+    run_algo("cc", &ConnectedComponents, &backings, cfg, reps, &mut rows);
+    run_algo("sssp", &Sssp::from_hub(&g), &backings, cfg, reps, &mut rows);
+
+    // Residency contracts, cheap enough to assert in the bench itself:
+    // the compressed tier decodes, the external tier streams (faults
+    // exceed one cold pass) and actually evicts under its budget.
+    for r in &rows {
+        match r.backing {
+            "raw" => assert_eq!(r.decodes, 0, "{}: raw runs must not decode", r.algo),
+            _ => assert!(r.decodes > 0, "{}/{}: nothing decoded", r.algo, r.backing),
+        }
+    }
+    let pr_ext = rows
+        .iter()
+        .find(|r| r.algo == "pr" && r.backing == "external")
+        .expect("external pr row");
+    assert!(pr_ext.evictions > 0, "oocore budget never evicted");
+
+    // ---- Emit BENCH_memory.json ------------------------------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(j, "  \"bench\": \"memory\",");
+    let _ = writeln!(j, "  \"smoke\": {},", smoke);
+    let _ = writeln!(j, "  \"graph\": \"{name}\",");
+    let _ = writeln!(
+        j,
+        "  \"shape\": {{\"vertices\": {}, \"edges\": {}}},",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let _ = writeln!(j, "  \"block_size\": {},", block);
+    let _ = writeln!(j, "  \"resident_budget_blocks\": {},", budget);
+    let _ = writeln!(j, "  \"raw_bytes\": {},", raw_bytes);
+    let _ = writeln!(j, "  \"compression_ratio\": {:.4},", ratio);
+    j.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"algo\": \"{}\", \"backing\": \"{}\", \"millis\": {:.3}, \
+             \"supersteps\": {}, \"decodes\": {}, \"row_faults\": {}, \
+             \"evictions\": {}, \"resident_kib\": {}}}",
+            r.algo, r.backing, r.millis, r.supersteps, r.decodes, r.row_faults,
+            r.evictions, r.resident_kib
+        );
+        j.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &j).expect("writing BENCH_memory.json");
+    eprintln!("wrote {out_path} ({} result rows)", rows.len());
+    std::fs::remove_dir_all(&dir).ok();
+    eprintln!("parity checks passed");
+}

@@ -50,6 +50,7 @@ use crate::engine::tune::{AdaptiveTuner, StepPlan, TunerState};
 use crate::engine::{AggValue, Aggregator, Context, EngineConfig, Mode, RunResult, VertexProgram};
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
 use crate::graph::partition::PartitionPlan;
+use crate::graph::rows::Dir as RowDir;
 use crate::layout::{SyncCell, VertexStore};
 use crate::metrics::{DeliveryPlaneKind, HaltReason, RunMetrics, ScheduleFallback, SuperstepStats};
 use crate::sched::{parallel_for, parallel_for_hinted, steal_execute_tagged, Schedule};
@@ -897,10 +898,24 @@ where
             tr.instant(tr.engine_lane(), 0, InstantKind::QueryContext { tag });
         }
 
+        // Row-plane run fencing: mark this run active (barrier-time
+        // eviction requires exclusivity — serving-layer queries share one
+        // plane) and snapshot the counters so metrics report this run's
+        // delta rather than plane lifetime totals.
+        let plane_start = self.g.row_plane().map(|p| {
+            p.run_enter();
+            p.stats()
+        });
+
         if self.partition.is_some() {
             self.run_partitioned(&mut metrics, max_supersteps);
         } else {
             self.run_flat(&mut metrics, max_supersteps);
+        }
+
+        if let (Some(start), Some(p)) = (&plane_start, self.g.row_plane()) {
+            metrics.row_plane = Some(p.stats().delta_from(start));
+            p.run_exit();
         }
         if let Some(t) = self.tuner.as_mut() {
             metrics.tuner_decisions = t.take_trace();
@@ -1158,6 +1173,11 @@ where
             }
             self.store.swap_epochs();
             let converged = self.merge_aggregators(&agg_cells, &neutral);
+            if let Some(p) = self.g.row_plane() {
+                // Workers are joined between supersteps: the plane may
+                // apply its eviction policy (run-exclusive; graph/rows.rs).
+                p.barrier_advise();
+            }
             let barrier_time = t_barrier.elapsed();
             if let (Some(tr), Some(b0)) = (self.trace.as_ref(), b0) {
                 tr.span(tr.engine_lane(), superstep, Phase::Barrier, None, b0, tr.now_ns());
@@ -1420,11 +1440,26 @@ where
 
                 let shard_lists = &shard_lists;
                 let shard_scans = &shard_scans;
+                // Row-plane staging: the direction this superstep's
+                // scatter walks (push reads out-rows, pull reads in-rows).
+                let plane_ref = self.g.row_plane();
+                let pin_dir = match self.mode {
+                    Mode::Push => RowDir::Out,
+                    Mode::Pull => RowDir::In,
+                };
                 let scatter_shard = |tid: usize, s: usize, stolen: bool| {
                     if stolen {
                         if let Some(tr) = trace_ref {
                             tr.instant(tid, superstep_now, InstantKind::Steal { shard: s as u32 });
                         }
+                    }
+                    if let Some(p) = plane_ref {
+                        // Decode every block the shard's vertex range
+                        // touches before walking it, so the per-vertex
+                        // loop only ever takes the READY fast path
+                        // (stats label these `staged_blocks`).
+                        let r = plan.shard_range(s);
+                        p.pin_range(pin_dir, r.start, r.end);
                     }
                     let t0 = trace_ref.map(|tr| tr.now_ns());
                     match (shard_lists, shard_scans) {
@@ -1624,6 +1659,11 @@ where
             }
             self.store.swap_epochs();
             let converged = self.merge_aggregators(&agg_cells, &neutral);
+            if let Some(p) = self.g.row_plane() {
+                // Workers are joined at the apply barrier: the plane may
+                // apply its eviction policy (run-exclusive; graph/rows.rs).
+                p.barrier_advise();
+            }
             let barrier_time = t_apply.elapsed();
             if let (Some(tr), Some(a0)) = (self.trace.as_ref(), a0) {
                 tr.span(tr.engine_lane(), superstep, Phase::Apply, None, a0, tr.now_ns());

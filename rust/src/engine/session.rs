@@ -711,6 +711,22 @@ impl<'g> GraphSession<'g> {
             (None, false)
         };
 
+        // Row-plane retention: adaptive runs hand the plane the decision
+        // table's cold-block band, so compressed-scratch residency is
+        // governed by the same calibrated constants as every other knob.
+        // An explicit policy (CLI `--resident-blocks`/`--cold-rounds` or
+        // `set_policy`) wins; fixed-config runs never touch the plane.
+        if cfg.adaptive {
+            if let Some(p) = g.row_plane() {
+                let mut pol = p.policy();
+                if pol.cold_rounds.is_none() {
+                    pol.cold_rounds =
+                        Some(crate::engine::tune::DecisionTable::default().row_cold_rounds);
+                    p.set_policy(pol);
+                }
+            }
+        }
+
         // Edge-centric rebuild scratch: plain data, fully rewritten
         // before every read, so checkout needs no epoch stamping.
         let cut_scratch = self
@@ -994,6 +1010,32 @@ mod tests {
         assert!(!c.metrics.adaptive);
         assert!(c.metrics.tuner_decisions.is_empty());
         assert_eq!(session.pooled_tuners(), 1);
+    }
+
+    #[test]
+    fn adaptive_runs_set_the_planes_retention_policy_from_the_table() {
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 3).compress(64);
+        let plane = g.row_plane().expect("compressed");
+        assert_eq!(plane.policy().cold_rounds, None);
+        let session = GraphSession::new(&g);
+        // Fixed-config runs leave the plane's policy alone.
+        let fixed = session.run(&ConnectedComponents);
+        assert_eq!(plane.policy().cold_rounds, None);
+        // Adaptive runs install the decision table's retention band…
+        let cfg = session.config().adaptive(true);
+        let adapt = session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        assert_eq!(
+            plane.policy().cold_rounds,
+            Some(crate::engine::DecisionTable::default().row_cold_rounds)
+        );
+        assert_eq!(fixed.values, adapt.values, "policy is bit-invisible");
+        // …but never override an explicit one.
+        plane.set_policy(crate::graph::RowPolicy {
+            cold_rounds: Some(1),
+            ..Default::default()
+        });
+        session.run_with(&ConnectedComponents, RunOptions::new().config(cfg));
+        assert_eq!(plane.policy().cold_rounds, Some(1));
     }
 
     #[test]

@@ -158,6 +158,11 @@ pub struct DecisionTable {
     /// below which the prefetch window is widened — mostly-empty lanes
     /// mean the gather is ranging over cold, sparse rows.
     pub lane_util_lo: f64,
+    /// Consecutive untouched barriers a decoded row block survives
+    /// before the compressed row plane recycles its scratch
+    /// ([`crate::graph::RowPolicy::cold_rounds`]). Derived from the
+    /// decode price: expensive decodes earn longer residency.
+    pub row_cold_rounds: u32,
     /// Supersteps a knob is frozen after switching (anti-flip-flop).
     pub dwell: usize,
 }
@@ -221,6 +226,12 @@ impl DecisionTable {
             // per-vertex work keeps steal overhead under t_vertex.
             steal_chunk: ((c.t_steal / c.t_vertex).ceil() as usize).clamp(1, 8),
             lane_util_lo: 0.25,
+            // Cold-block retention break-even: holding a decoded block
+            // for one more barrier costs roughly its cache footprint
+            // (a handful of misses when the frontier sweeps past);
+            // evicting too early re-pays the block fault. Retain for
+            // fault / (4 misses) barriers, banded to [2, 8].
+            row_cold_rounds: ((c.t_row_fault / (4.0 * c.t_miss)).ceil() as u32).clamp(2, 8),
             dwell: 2,
         }
     }
@@ -595,6 +606,7 @@ mod tests {
         assert!(t.edge_msgs_lo < t.edge_msgs_hi);
         assert!(t.fanin_lock_lo < t.fanin_hybrid_hi);
         assert!(t.dwell >= 1);
+        assert!((2..=8).contains(&t.row_cold_rounds), "retention band");
     }
 
     #[test]

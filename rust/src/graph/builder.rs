@@ -212,6 +212,7 @@ impl GraphBuilder {
             out_weights: None,
             in_weights: None,
             overlay: None,
+            rows: None,
         }
     }
 
@@ -308,6 +309,7 @@ impl GraphBuilder {
             out_weights: Some(out_weights),
             in_weights: Some(in_weights),
             overlay: None,
+            rows: None,
         }
     }
 }

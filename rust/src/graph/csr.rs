@@ -23,8 +23,19 @@
 //! overlay first, so consumers transparently see the mutated graph; a
 //! `Csr` without an overlay behaves exactly as before (one well-predicted
 //! `Option` branch per row access).
+//!
+//! Adjacency storage itself is pluggable (DESIGN.md §2.12): a `Csr` may
+//! hand its target slabs to a [`crate::graph::rows::RowPlane`] — delta-gap
+//! varint blocks held in RAM ([`Csr::compress`]) or streamed from an
+//! on-disk arena (`graph/io.rs::externalize`). Offsets always stay raw
+//! (degrees and row slicing are O(1) under every backing), and accessors
+//! consult overlay → plane → raw slab in that order, so the engine's hot
+//! loops still iterate plain slices.
+
+use std::sync::Arc;
 
 use crate::graph::dynamic::DeltaOverlay;
+use crate::graph::rows::{Dir, RowMode, RowPlane, RowSpec};
 
 /// Vertex identifier type used throughout the framework.
 pub type VertexId = u32;
@@ -34,17 +45,20 @@ pub type EdgeWeight = f64;
 
 /// An immutable directed graph in CSR form with both adjacency directions
 /// and optional per-edge weights.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Csr {
     /// `out_offsets[v]..out_offsets[v+1]` indexes `out_targets`.
     pub out_offsets: Vec<usize>,
-    /// Flattened outgoing neighbour lists.
+    /// Flattened outgoing neighbour lists (empty when a row plane holds
+    /// the adjacency — see [`Csr::compress`]).
     pub out_targets: Vec<VertexId>,
     /// `in_offsets[v]..in_offsets[v+1]` indexes `in_sources`.
     pub in_offsets: Vec<usize>,
-    /// Flattened incoming neighbour lists.
+    /// Flattened incoming neighbour lists (empty under a row plane).
     pub in_sources: Vec<VertexId>,
     /// Weight of `out_targets[i]`'s edge, when the graph is weighted.
+    /// External weighted arenas serve weights from the plane instead
+    /// (this stays `None`; see [`Csr::has_weights`]).
     pub out_weights: Option<Vec<EdgeWeight>>,
     /// Weight of `in_sources[i]`'s edge, when the graph is weighted.
     pub in_weights: Option<Vec<EdgeWeight>>,
@@ -52,6 +66,32 @@ pub struct Csr {
     /// [`crate::graph::dynamic::DynamicGraph`] holds uncompacted
     /// mutations. `None` on every statically built graph.
     pub(crate) overlay: Option<Box<DeltaOverlay>>,
+    /// Non-raw adjacency backing (compressed blob / on-disk arena).
+    /// `Arc`-shared so serving-layer snapshots clone without copying the
+    /// encoded bytes or the residency state. `None` = raw slabs.
+    pub(crate) rows: Option<Arc<RowPlane>>,
+}
+
+/// `PartialEq` is structural on the raw fields and *descriptive* on the
+/// plane (mode, block size, geometry, encoded size): two clones sharing
+/// one plane compare equal, and a compressed graph never equals its raw
+/// original (the slabs moved into the plane).
+impl PartialEq for Csr {
+    fn eq(&self, other: &Self) -> bool {
+        let key = |c: &Csr| {
+            c.rows
+                .as_ref()
+                .map(|p| (p.mode(), p.block_size(), p.num_blocks(), p.stats().encoded_bytes))
+        };
+        self.out_offsets == other.out_offsets
+            && self.out_targets == other.out_targets
+            && self.in_offsets == other.in_offsets
+            && self.in_sources == other.in_sources
+            && self.out_weights == other.out_weights
+            && self.in_weights == other.in_weights
+            && self.overlay == other.overlay
+            && key(self) == key(other)
+    }
 }
 
 impl Csr {
@@ -64,14 +104,20 @@ impl Csr {
     /// Number of directed edges (merged view: base plus overlay delta).
     #[inline]
     pub fn num_edges(&self) -> usize {
+        let base = match &self.rows {
+            Some(p) => p.base_edges(Dir::Out) as usize,
+            None => self.out_targets.len(),
+        };
         let delta = self.overlay.as_ref().map_or(0, |o| o.edge_delta());
-        (self.out_targets.len() as isize + delta) as usize
+        (base as isize + delta) as usize
     }
 
-    /// Whether edges carry weights.
+    /// Whether edges carry weights (raw slabs, or an external weighted
+    /// arena serving them from the plane's blocks).
     #[inline]
     pub fn has_weights(&self) -> bool {
         self.out_weights.is_some()
+            || self.rows.as_ref().is_some_and(|p| p.weights_in_blocks())
     }
 
     /// Out-degree of `v`.
@@ -106,8 +152,12 @@ impl Csr {
                 return &r.targets;
             }
         }
-        let v = v as usize;
-        &self.out_targets[self.out_offsets[v]..self.out_offsets[v + 1]]
+        let vi = v as usize;
+        let (s, e) = (self.out_offsets[vi], self.out_offsets[vi + 1]);
+        match &self.rows {
+            Some(p) => p.row(Dir::Out, v, s, e),
+            None => &self.out_targets[s..e],
+        }
     }
 
     /// Incoming neighbours of `v`.
@@ -118,40 +168,53 @@ impl Csr {
                 return &r.targets;
             }
         }
-        let v = v as usize;
-        &self.in_sources[self.in_offsets[v]..self.in_offsets[v + 1]]
+        let vi = v as usize;
+        let (s, e) = (self.in_offsets[vi], self.in_offsets[vi + 1]);
+        match &self.rows {
+            Some(p) => p.row(Dir::In, v, s, e),
+            None => &self.in_sources[s..e],
+        }
     }
 
     /// Weights of `v`'s outgoing edges (parallel to
     /// [`Csr::out_neighbors`]); `None` on unweighted graphs.
     #[inline]
     pub fn out_weights_of(&self, v: VertexId) -> Option<&[EdgeWeight]> {
-        self.out_weights.as_ref()?; // unweighted graphs report None
+        if !self.has_weights() {
+            return None;
+        }
         if let Some(ov) = &self.overlay {
             if let Some(r) = ov.out_row(v) {
                 return Some(&r.weights);
             }
         }
-        let v = v as usize;
-        self.out_weights
-            .as_ref()
-            .map(|w| &w[self.out_offsets[v]..self.out_offsets[v + 1]])
+        let vi = v as usize;
+        let (s, e) = (self.out_offsets[vi], self.out_offsets[vi + 1]);
+        match &self.out_weights {
+            Some(w) => Some(&w[s..e]),
+            // Weighted with no raw slab ⇒ an external arena serves them.
+            None => self.rows.as_ref().map(|p| p.row_weights(Dir::Out, v, s, e)),
+        }
     }
 
     /// Weights of `v`'s incoming edges (parallel to
     /// [`Csr::in_neighbors`]); `None` on unweighted graphs.
     #[inline]
     pub fn in_weights_of(&self, v: VertexId) -> Option<&[EdgeWeight]> {
-        self.in_weights.as_ref()?; // unweighted graphs report None
+        if !self.has_weights() {
+            return None;
+        }
         if let Some(ov) = &self.overlay {
             if let Some(r) = ov.in_row(v) {
                 return Some(&r.weights);
             }
         }
-        let v = v as usize;
-        self.in_weights
-            .as_ref()
-            .map(|w| &w[self.in_offsets[v]..self.in_offsets[v + 1]])
+        let vi = v as usize;
+        let (s, e) = (self.in_offsets[vi], self.in_offsets[vi + 1]);
+        match &self.in_weights {
+            Some(w) => Some(&w[s..e]),
+            None => self.rows.as_ref().map(|p| p.row_weights(Dir::In, v, s, e)),
+        }
     }
 
     /// The `i`-th outgoing edge of `v` as `(target, weight)`; weight is
@@ -164,11 +227,18 @@ impl Csr {
                 return (r.targets[i], w);
             }
         }
-        let base = self.out_offsets[v as usize];
-        let dst = self.out_targets[base + i];
+        let vi = v as usize;
+        let (s, e) = (self.out_offsets[vi], self.out_offsets[vi + 1]);
+        let dst = match &self.rows {
+            Some(p) => p.row(Dir::Out, v, s, e)[i],
+            None => self.out_targets[s + i],
+        };
         let w = match &self.out_weights {
-            Some(ws) => ws[base + i],
-            None => 1.0,
+            Some(ws) => ws[s + i],
+            None => match &self.rows {
+                Some(p) if p.weights_in_blocks() => p.row_weights(Dir::Out, v, s, e)[i],
+                _ => 1.0,
+            },
         };
         (dst, w)
     }
@@ -182,11 +252,18 @@ impl Csr {
                 return (r.targets[i], w);
             }
         }
-        let base = self.in_offsets[v as usize];
-        let src = self.in_sources[base + i];
+        let vi = v as usize;
+        let (s, e) = (self.in_offsets[vi], self.in_offsets[vi + 1]);
+        let src = match &self.rows {
+            Some(p) => p.row(Dir::In, v, s, e)[i],
+            None => self.in_sources[s + i],
+        };
         let w = match &self.in_weights {
-            Some(ws) => ws[base + i],
-            None => 1.0,
+            Some(ws) => ws[s + i],
+            None => match &self.rows {
+                Some(p) if p.weights_in_blocks() => p.row_weights(Dir::In, v, s, e)[i],
+                _ => 1.0,
+            },
         };
         (src, w)
     }
@@ -235,6 +312,116 @@ impl Csr {
     /// Number of vertices whose adjacency is currently overlaid.
     pub fn overlaid_vertices(&self) -> usize {
         self.overlay.as_ref().map_or(0, |o| o.overlaid_vertices())
+    }
+
+    // ------------------------------------------------ row-storage plane
+
+    /// The attached row plane, if adjacency is compressed/external.
+    #[inline]
+    pub fn row_plane(&self) -> Option<&RowPlane> {
+        self.rows.as_deref()
+    }
+
+    /// Move the adjacency slabs into an in-RAM compressed
+    /// [`RowPlane`] (delta-gap varint blocks of `block_size` vertices;
+    /// see `graph/rows.rs`). Offsets and weight slabs stay raw; the
+    /// target slabs are dropped. No-op if a plane is already attached.
+    /// Compact any live overlay first — compressing under uncompacted
+    /// mutations would freeze a stale base.
+    pub fn compress(mut self, block_size: usize) -> Csr {
+        assert!(
+            self.overlay.is_none(),
+            "compress a compacted graph — a live delta overlay would shadow the plane"
+        );
+        if self.rows.is_some() {
+            return self;
+        }
+        let plane = RowPlane::new_compressed(
+            &self.out_offsets,
+            &self.out_targets,
+            &self.in_offsets,
+            &self.in_sources,
+            block_size,
+        );
+        self.out_targets = Vec::new();
+        self.in_sources = Vec::new();
+        self.rows = Some(Arc::new(plane));
+        self
+    }
+
+    /// Attach a plane built elsewhere (`graph/io.rs::externalize` /
+    /// `open_external`). The caller has already emptied or never
+    /// populated the slabs the plane replaces.
+    pub(crate) fn with_plane(mut self, plane: RowPlane) -> Csr {
+        self.rows = Some(Arc::new(plane));
+        self
+    }
+
+    /// Decode every row back into raw slabs, dropping the plane — the
+    /// inverse of [`Csr::compress`], used by compaction and the
+    /// bit-identity tests. Weights served from an external arena are
+    /// materialised into raw slabs too.
+    pub fn decompressed(&self) -> Csr {
+        let Some(p) = self.rows.as_deref() else {
+            return self.clone();
+        };
+        let n = self.num_vertices();
+        let mut out_targets = Vec::with_capacity(p.base_edges(Dir::Out) as usize);
+        let mut in_sources = Vec::with_capacity(p.base_edges(Dir::In) as usize);
+        let mut out_w: Vec<EdgeWeight> = Vec::new();
+        let mut in_w: Vec<EdgeWeight> = Vec::new();
+        for vi in 0..n {
+            let v = vi as VertexId;
+            let (os, oe) = (self.out_offsets[vi], self.out_offsets[vi + 1]);
+            let (is_, ie) = (self.in_offsets[vi], self.in_offsets[vi + 1]);
+            out_targets.extend_from_slice(p.row(Dir::Out, v, os, oe));
+            in_sources.extend_from_slice(p.row(Dir::In, v, is_, ie));
+            if p.weights_in_blocks() {
+                out_w.extend_from_slice(p.row_weights(Dir::Out, v, os, oe));
+                in_w.extend_from_slice(p.row_weights(Dir::In, v, is_, ie));
+            }
+        }
+        let (out_weights, in_weights) = if p.weights_in_blocks() {
+            (Some(out_w), Some(in_w))
+        } else {
+            (self.out_weights.clone(), self.in_weights.clone())
+        };
+        Csr {
+            out_offsets: self.out_offsets.clone(),
+            out_targets,
+            in_offsets: self.in_offsets.clone(),
+            in_sources,
+            out_weights,
+            in_weights,
+            overlay: self.overlay.clone(),
+            rows: None,
+        }
+    }
+
+    /// Reapplicable description of the current backing (`None` = raw).
+    /// `DynamicGraph::compact` captures this before rebuilding and
+    /// restores it with [`Csr::with_backing`].
+    pub fn backing_spec(&self) -> Option<RowSpec> {
+        self.rows.as_ref().map(|p| p.spec())
+    }
+
+    /// Re-apply a captured backing to a raw graph: compress in place, or
+    /// rewrite the external arena at its recorded path (fresh inode, so
+    /// snapshot readers holding the old file keep their bytes).
+    pub fn with_backing(self, spec: &RowSpec) -> crate::util::error::Result<Csr> {
+        let g = match spec.mode {
+            RowMode::Compressed => self.compress(spec.block_size),
+            RowMode::External => {
+                let Some(path) = spec.path.as_ref() else {
+                    return Err(crate::err!("external backing spec lacks an arena path"));
+                };
+                crate::graph::io::externalize(&self, path, spec.block_size)?
+            }
+        };
+        if let Some(p) = g.row_plane() {
+            p.set_policy(spec.policy);
+        }
+        Ok(g)
     }
 
     /// Rebuild this graph's merged view from scratch through the
@@ -310,11 +497,22 @@ impl Csr {
                 .in_weights
                 .as_ref()
                 .map_or(0, |w| w.len() * std::mem::size_of::<EdgeWeight>());
+        // Plane-backed graphs pay the encoded blob (compressed mode only —
+        // external blobs live on disk) plus whatever blocks are resident.
+        let plane_bytes = self.rows.as_ref().map_or(0, |p| {
+            let s = p.stats();
+            let blob = match p.mode() {
+                RowMode::Compressed => s.encoded_bytes,
+                RowMode::External => 0,
+            };
+            (blob + s.resident_bytes) as usize
+        });
         self.out_offsets.len() * std::mem::size_of::<usize>()
             + self.in_offsets.len() * std::mem::size_of::<usize>()
             + self.out_targets.len() * std::mem::size_of::<VertexId>()
             + self.in_sources.len() * std::mem::size_of::<VertexId>()
             + weight_bytes
+            + plane_bytes
             + self.overlay.as_ref().map_or(0, |o| o.memory_bytes())
     }
 
@@ -324,9 +522,18 @@ impl Csr {
     /// (when present) are consistent between directions.
     pub fn validate(&self) -> Result<(), String> {
         let n = self.num_vertices();
+        // Base edge counts regardless of backing (raw slabs are empty
+        // under a plane; the plane knows its encoded totals).
+        let (out_base, in_base) = match self.rows.as_deref() {
+            Some(p) => (
+                p.base_edges(Dir::Out) as usize,
+                p.base_edges(Dir::In) as usize,
+            ),
+            None => (self.out_targets.len(), self.in_sources.len()),
+        };
         for (name, offs, adj_len) in [
-            ("out", &self.out_offsets, self.out_targets.len()),
-            ("in", &self.in_offsets, self.in_sources.len()),
+            ("out", &self.out_offsets, out_base),
+            ("in", &self.in_offsets, in_base),
         ] {
             if offs.is_empty() {
                 return Err(format!("{name}_offsets empty"));
@@ -338,22 +545,42 @@ impl Csr {
                 return Err(format!("{name}_offsets not monotone"));
             }
         }
-        if self.out_targets.iter().any(|&t| (t as usize) >= n) {
-            return Err("out target out of range".into());
+        match self.rows.as_deref() {
+            None => {
+                if self.out_targets.iter().any(|&t| (t as usize) >= n) {
+                    return Err("out target out of range".into());
+                }
+                if self.in_sources.iter().any(|&s| (s as usize) >= n) {
+                    return Err("in source out of range".into());
+                }
+            }
+            Some(p) => {
+                if !self.out_targets.is_empty() || !self.in_sources.is_empty() {
+                    return Err("plane-backed graph still holds raw adjacency slabs".into());
+                }
+                for vi in 0..n {
+                    let v = vi as VertexId;
+                    let (s, e) = (self.out_offsets[vi], self.out_offsets[vi + 1]);
+                    if p.row(Dir::Out, v, s, e).iter().any(|&t| (t as usize) >= n) {
+                        return Err("out target out of range (plane)".into());
+                    }
+                    let (s, e) = (self.in_offsets[vi], self.in_offsets[vi + 1]);
+                    if p.row(Dir::In, v, s, e).iter().any(|&t| (t as usize) >= n) {
+                        return Err("in source out of range (plane)".into());
+                    }
+                }
+            }
         }
-        if self.in_sources.iter().any(|&s| (s as usize) >= n) {
-            return Err("in source out of range".into());
-        }
-        if self.out_targets.len() != self.in_sources.len() {
+        if out_base != in_base {
             return Err("edge count mismatch between directions".into());
         }
         match (&self.out_weights, &self.in_weights) {
             (None, None) => {}
             (Some(ow), Some(iw)) => {
-                if ow.len() != self.out_targets.len() {
+                if ow.len() != out_base {
                     return Err("out_weights length mismatch".into());
                 }
-                if iw.len() != self.in_sources.len() {
+                if iw.len() != in_base {
                     return Err("in_weights length mismatch".into());
                 }
                 if ow.iter().chain(iw.iter()).any(|w| !w.is_finite()) {

@@ -467,10 +467,14 @@ impl DynamicGraph {
             );
         }
 
-        // Weight promotion before anything reads `has_weights`.
+        // Weight promotion before anything reads `has_weights`. Sized
+        // from the offset totals, not the target slabs — under a row
+        // plane the raw slabs are empty but the base edge count is not.
         if m.has_weighted_inserts() && !self.csr.has_weights() {
-            self.csr.out_weights = Some(vec![1.0; self.csr.out_targets.len()]);
-            self.csr.in_weights = Some(vec![1.0; self.csr.in_sources.len()]);
+            let out_base = *self.csr.out_offsets.last().expect("offsets non-empty");
+            let in_base = *self.csr.in_offsets.last().expect("offsets non-empty");
+            self.csr.out_weights = Some(vec![1.0; out_base]);
+            self.csr.in_weights = Some(vec![1.0; in_base]);
             if let Some(ov) = &mut self.csr.overlay {
                 ov.promote_rows();
             }
@@ -479,19 +483,7 @@ impl DynamicGraph {
         if self.csr.overlay.is_none() {
             self.csr.overlay = Some(Box::new(DeltaOverlay::new(n)));
         }
-        // Split the borrow at field granularity: base arrays are read,
-        // the overlay is rewritten.
-        let Csr {
-            out_offsets,
-            out_targets,
-            in_offsets,
-            in_sources,
-            out_weights,
-            in_weights,
-            overlay,
-        } = &mut self.csr;
-        let weighted = out_weights.is_some();
-        let ov = overlay.as_mut().expect("overlay just ensured");
+        let weighted = self.csr.has_weights();
 
         // ---- Out side: rows keyed by src (removals recorded here; the
         // in side applies the identical edits keyed by dst, so its
@@ -504,18 +496,7 @@ impl DynamicGraph {
             by_src.entry(s).or_default().1.push(d);
         }
         let mut removed: Vec<(VertexId, VertexId)> = Vec::new();
-        rewrite_rows(
-            &by_src,
-            ov,
-            true,
-            BaseSide {
-                offsets: out_offsets,
-                adjacency: out_targets,
-                weights: out_weights,
-            },
-            weighted,
-            Some(&mut removed),
-        );
+        rewrite_rows(&mut self.csr, &by_src, true, weighted, Some(&mut removed));
 
         // ---- In side: same edits keyed by dst ------------------------
         let mut by_dst: BTreeMap<VertexId, RowEdits> = BTreeMap::new();
@@ -525,19 +506,9 @@ impl DynamicGraph {
         for &(s, d) in m.deletes() {
             by_dst.entry(d).or_default().1.push(s);
         }
-        rewrite_rows(
-            &by_dst,
-            ov,
-            false,
-            BaseSide {
-                offsets: in_offsets,
-                adjacency: in_sources,
-                weights: in_weights,
-            },
-            weighted,
-            None,
-        );
+        rewrite_rows(&mut self.csr, &by_dst, false, weighted, None);
 
+        let ov = self.csr.overlay.as_mut().expect("overlay just ensured");
         ov.edge_delta += m.inserts().len() as isize - removed.len() as isize;
         ov.delta_edges += m.inserts().len() + removed.len();
         self.epoch += 1;
@@ -559,25 +530,28 @@ impl DynamicGraph {
 
     /// Fold the overlay back into a fresh base CSR via
     /// [`Csr::rebuilt`] (O(V + E); the logical graph — and thus every
-    /// run result — is unchanged). Returns whether anything was
-    /// compacted.
+    /// run result — is unchanged), then re-apply any row-plane backing
+    /// the graph carried: compress in place, or rewrite the external
+    /// arena at its recorded path (fresh inode, so serving-layer
+    /// snapshot readers keep their old bytes — see `graph/io.rs`).
+    /// Returns whether anything was compacted.
     pub fn compact(&mut self) -> bool {
         if self.csr.overlay.is_none() {
             return false;
         }
         let t = Timer::start();
-        self.csr = self.csr.rebuilt();
+        let spec = self.csr.backing_spec();
+        let mut g = self.csr.rebuilt();
+        if let Some(spec) = &spec {
+            g = g
+                .with_backing(spec)
+                .expect("re-applying row backing after compaction");
+        }
+        self.csr = g;
         self.compactions += 1;
         self.compaction_time += t.elapsed();
         true
     }
-}
-
-/// One direction's base CSR arrays, bundled for [`rewrite_rows`].
-struct BaseSide<'a> {
-    offsets: &'a [usize],
-    adjacency: &'a [VertexId],
-    weights: &'a Option<Vec<EdgeWeight>>,
 }
 
 /// Apply one side's staged row edits to the overlay: for each dirty
@@ -585,18 +559,19 @@ struct BaseSide<'a> {
 /// actually-removed instances as `(key, target)` when asked), append
 /// insertions, and store the result in rebuild order. Shared by the
 /// out side (keyed by src) and the in side (keyed by dst) so the two
-/// CSR views cannot drift apart.
+/// CSR views cannot drift apart. Row snapshots go through the `Csr`
+/// accessors (overlay → row plane → raw slab), so mutation is
+/// backing-agnostic: compressed and out-of-core graphs mutate exactly
+/// like raw ones.
 fn rewrite_rows(
+    g: &mut Csr,
     edits: &BTreeMap<VertexId, RowEdits>,
-    ov: &mut DeltaOverlay,
     out: bool,
-    base: BaseSide<'_>,
     weighted: bool,
     mut removed: Option<&mut Vec<(VertexId, VertexId)>>,
 ) {
     for (&key, (ins, dels)) in edits {
-        let ov_row = if out { ov.out_row(key) } else { ov.in_row(key) };
-        let mut row = snapshot_row(ov_row, base.offsets, base.adjacency, base.weights, key as usize);
+        let mut row = snapshot_row(g, out, key);
         for &t in dels.iter() {
             let before = row.len();
             row.retain(|&(x, _)| x != t);
@@ -608,42 +583,25 @@ fn rewrite_rows(
         }
         row.extend(ins.iter().copied());
         sort_row(&mut row, weighted);
-        ov.set_row(out, key, row, weighted);
+        g.overlay
+            .as_mut()
+            .expect("overlay ensured by apply")
+            .set_row(out, key, row, weighted);
     }
 }
 
 /// Current merged row of one vertex as owned `(neighbour, weight)`
-/// pairs: the overlay row when present, else the base CSR slice.
-fn snapshot_row(
-    ov_row: Option<&OverlayRow>,
-    offsets: &[usize],
-    adjacency: &[VertexId],
-    weights: &Option<Vec<EdgeWeight>>,
-    v: usize,
-) -> Vec<(VertexId, EdgeWeight)> {
-    match ov_row {
-        Some(r) => {
-            if r.weights.is_empty() {
-                r.targets.iter().map(|&t| (t, 1.0)).collect()
-            } else {
-                r.targets
-                    .iter()
-                    .zip(&r.weights)
-                    .map(|(&t, &w)| (t, w))
-                    .collect()
-            }
-        }
-        None => {
-            let range = offsets[v]..offsets[v + 1];
-            match weights {
-                Some(ws) => adjacency[range.clone()]
-                    .iter()
-                    .zip(&ws[range])
-                    .map(|(&t, &w)| (t, w))
-                    .collect(),
-                None => adjacency[range].iter().map(|&t| (t, 1.0)).collect(),
-            }
-        }
+/// pairs, read through the merged accessors (weight `1.0` throughout on
+/// unweighted graphs).
+fn snapshot_row(g: &Csr, out: bool, v: VertexId) -> Vec<(VertexId, EdgeWeight)> {
+    let (nbrs, ws) = if out {
+        (g.out_neighbors(v), g.out_weights_of(v))
+    } else {
+        (g.in_neighbors(v), g.in_weights_of(v))
+    };
+    match ws {
+        Some(ws) => nbrs.iter().zip(ws).map(|(&t, &w)| (t, w)).collect(),
+        None => nbrs.iter().map(|&t| (t, 1.0)).collect(),
     }
 }
 
@@ -835,6 +793,37 @@ mod tests {
         let mut m = MutationSet::new();
         m.insert(0, 99);
         dg.apply(&m);
+    }
+
+    #[test]
+    fn mutations_over_compressed_backing_match_rebuild() {
+        let g = gen::ring(8).compress(3);
+        let mut dg = DynamicGraph::with_spill_threshold(g, 1_000_000);
+        let mut m = MutationSet::new();
+        m.insert(0, 4);
+        m.delete(0, 1);
+        let r = dg.apply(&m);
+        assert_eq!(r.removed, vec![(0, 1)]);
+        assert_eq!(dg.graph().out_neighbors(0), &[4, 7]);
+        dg.graph().validate().unwrap();
+        assert_rows_match(dg.graph(), &rebuild(dg.graph()));
+    }
+
+    #[test]
+    fn compaction_restores_compressed_backing() {
+        let g = gen::ring(8).compress(4);
+        let mut dg = DynamicGraph::with_spill_threshold(g, 1);
+        let mut m = MutationSet::new();
+        m.insert(1, 5);
+        let r = dg.apply(&m);
+        assert!(r.compacted);
+        let p = dg.graph().row_plane().expect("backing restored");
+        assert_eq!(p.mode(), crate::graph::RowMode::Compressed);
+        assert_eq!(p.block_size(), 4);
+        assert!(!dg.graph().has_overlay());
+        assert_eq!(dg.graph().out_neighbors(1), &[0, 2, 5]);
+        dg.graph().validate().unwrap();
+        assert_rows_match(dg.graph(), &rebuild(dg.graph()));
     }
 
     #[test]

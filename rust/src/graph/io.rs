@@ -6,6 +6,7 @@
 
 use crate::graph::builder::GraphBuilder;
 use crate::graph::csr::{Csr, EdgeWeight, VertexId};
+use crate::graph::rows::{self, Arena, RowPlane, Span};
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -16,6 +17,11 @@ const MAGIC: &[u8; 8] = b"IPGRAPH1";
 /// array. Unweighted graphs keep writing the v1 format so existing caches
 /// stay byte-identical; the reader accepts both.
 const MAGIC2: &[u8; 8] = b"IPGRAPH2";
+/// Out-of-core arena format (DESIGN.md §2.12): raw offsets up front, then
+/// per-block spans over a delta-gap varint adjacency blob, then the raw
+/// weight slabs. The blob is *not* loaded at open — `open_external` wraps
+/// the file in a [`rows::RowPlane`] arena and blocks stream in on demand.
+const MAGICC: &[u8; 8] = b"IPGRAPHC";
 
 /// Write a SNAP-style edge list: `# comment` lines then `src\tdst` pairs,
 /// with a third `weight` column on weighted graphs.
@@ -177,18 +183,200 @@ pub fn read_binary(path: &Path) -> Result<Csr> {
         out_weights,
         in_weights,
         overlay: None,
+        rows: None,
     };
     g.validate()
         .map_err(|e| err!("{}: corrupt graph: {e}", path.display()))?;
     Ok(g)
 }
 
-/// Load a graph by extension: `.ipg` binary, anything else edge-list text.
+/// Load a graph by extension: `.ipg` binary, `.ipgc` out-of-core arena,
+/// anything else edge-list text.
 pub fn load(path: &Path, symmetric_text: bool) -> Result<Csr> {
     match path.extension().and_then(|e| e.to_str()) {
         Some("ipg") => read_binary(path),
+        Some("ipgc") => open_external(path),
         _ => read_edge_list(path, symmetric_text),
     }
+}
+
+// ------------------------------------------------- out-of-core arenas
+//
+// IPGRAPHC layout (all integers little-endian u64):
+//
+//   magic "IPGRAPHC"
+//   flags                  bit 0 = weighted
+//   block_size             vertices per block
+//   n, m                   vertex / base-edge counts
+//   out_offsets            (n+1) × u64
+//   in_offsets             (n+1) × u64
+//   spans                  2·num_blocks × (offset, len), blob-relative;
+//                          out blocks first, then in blocks
+//   blob_len
+//   blob                   concatenated encoded blocks (rows.rs codec)
+//   out_weights, in_weights  m × f64 each, weighted arenas only
+//
+// num_blocks = ceil(n / block_size) is derived, not stored. The reader
+// rebases spans to absolute file offsets for the arena's positional
+// reads; weights are streamed per block from the raw slabs at the tail
+// (the plane serves them — `weights_in_blocks`).
+
+/// Write the out-of-core arena file for a **raw** graph (no overlay, no
+/// plane — `externalize` handles the general case). The target is
+/// removed first so a fresh inode backs the new bytes: serving-layer
+/// snapshot readers holding the old `File` keep reading the old
+/// (unlinked) arena, never a half-rewritten one.
+pub fn write_external(g: &Csr, path: &Path, block_size: usize) -> Result<()> {
+    if g.has_overlay() {
+        bail!(
+            "{}: cannot externalise a graph with a live delta overlay — \
+             compact the DynamicGraph first",
+            path.display()
+        );
+    }
+    if g.row_plane().is_some() {
+        bail!(
+            "{}: write_external expects raw slabs — decompress first \
+             (externalize does this for you)",
+            path.display()
+        );
+    }
+    let block_size = block_size.max(1);
+    let n = g.num_vertices();
+    let m = g.out_targets.len();
+    let num_blocks = n.div_ceil(block_size);
+    let mut blob = Vec::new();
+    let (mut spans, _) =
+        rows::encode_blocks(&g.out_offsets, &g.out_targets, block_size, num_blocks, &mut blob);
+    let (in_spans, _) =
+        rows::encode_blocks(&g.in_offsets, &g.in_sources, block_size, num_blocks, &mut blob);
+    spans.extend(in_spans);
+
+    std::fs::remove_file(path).ok();
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGICC)?;
+    write_u64(&mut w, u64::from(g.has_weights()))?;
+    write_u64(&mut w, block_size as u64)?;
+    write_u64(&mut w, n as u64)?;
+    write_u64(&mut w, m as u64)?;
+    for off in g.out_offsets.iter().chain(g.in_offsets.iter()) {
+        write_u64(&mut w, *off as u64)?;
+    }
+    for s in &spans {
+        write_u64(&mut w, s.offset)?;
+        write_u64(&mut w, s.len)?;
+    }
+    write_u64(&mut w, blob.len() as u64)?;
+    w.write_all(&blob)?;
+    if let (Some(ow), Some(iw)) = (&g.out_weights, &g.in_weights) {
+        write_f64_slice(&mut w, ow)?;
+        write_f64_slice(&mut w, iw)?;
+    }
+    Ok(())
+}
+
+/// Open an IPGRAPHC arena: offsets load into RAM, adjacency (and
+/// weights) stay on disk behind the plane's residency machinery. Only
+/// structural header checks run here — a full `validate()` would decode
+/// every block, defeating the point of out-of-core.
+pub fn open_external(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGICC {
+        bail!("{}: not an ipgraph arena file", path.display());
+    }
+    let weighted = read_u64(&mut r)? != 0;
+    let block_size = read_u64(&mut r)? as usize;
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    if block_size == 0 {
+        bail!("{}: zero block size", path.display());
+    }
+    let num_blocks = n.div_ceil(block_size);
+    let mut out_offsets = vec![0usize; n + 1];
+    for o in &mut out_offsets {
+        *o = read_u64(&mut r)? as usize;
+    }
+    let mut in_offsets = vec![0usize; n + 1];
+    for o in &mut in_offsets {
+        *o = read_u64(&mut r)? as usize;
+    }
+    let mut spans = Vec::with_capacity(2 * num_blocks);
+    for _ in 0..2 * num_blocks {
+        let offset = read_u64(&mut r)?;
+        let len = read_u64(&mut r)?;
+        spans.push(Span { offset, len });
+    }
+    let blob_len = read_u64(&mut r)?;
+    for (name, offs) in [("out", &out_offsets), ("in", &in_offsets)] {
+        if offs[0] != 0 || *offs.last().unwrap() != m || offs.windows(2).any(|w| w[0] > w[1]) {
+            bail!("{}: corrupt {name}_offsets", path.display());
+        }
+    }
+    if spans.iter().any(|s| s.offset + s.len > blob_len) {
+        bail!("{}: block span exceeds blob", path.display());
+    }
+    // Rebase blob-relative spans to absolute file offsets for the
+    // arena's positional reads.
+    let blob_base = (8 + 8 * 4 + 16 * (n + 1) + 16 * 2 * num_blocks + 8) as u64;
+    for s in &mut spans {
+        s.offset += blob_base;
+    }
+    let wbase = if weighted {
+        let w0 = blob_base + blob_len;
+        [w0, w0 + (m * std::mem::size_of::<EdgeWeight>()) as u64]
+    } else {
+        [0, 0]
+    };
+    let out_first: Vec<u64> = (0..=num_blocks)
+        .map(|b| out_offsets[(b * block_size).min(n)] as u64)
+        .collect();
+    let in_first: Vec<u64> = (0..=num_blocks)
+        .map(|b| in_offsets[(b * block_size).min(n)] as u64)
+        .collect();
+    let file = r.into_inner();
+    let plane = RowPlane::new_external(
+        Arena::new(file, path.to_path_buf()),
+        block_size,
+        n,
+        weighted,
+        spans,
+        [out_first, in_first],
+        wbase,
+        blob_len,
+    );
+    Ok(Csr {
+        out_offsets,
+        out_targets: Vec::new(),
+        in_offsets,
+        in_sources: Vec::new(),
+        out_weights: None,
+        in_weights: None,
+        overlay: None,
+        rows: None,
+    }
+    .with_plane(plane))
+}
+
+/// Externalise `g` to an on-disk arena at `path` and return the
+/// out-of-core view (write + reopen, so the returned graph exercises the
+/// exact read path every later open uses). Accepts raw or plane-backed
+/// inputs; a live overlay must be compacted first.
+pub fn externalize(g: &Csr, path: &Path, block_size: usize) -> Result<Csr> {
+    let decoded;
+    let src = if g.row_plane().is_some() {
+        decoded = g.decompressed();
+        &decoded
+    } else {
+        g
+    };
+    write_external(src, path, block_size)?;
+    open_external(path)
 }
 
 fn write_u64<W: Write>(w: &mut W, v: u64) -> std::io::Result<()> {
@@ -370,5 +558,155 @@ mod tests {
         assert_eq!(load(&pt, false).unwrap().num_edges(), g.num_edges());
         std::fs::remove_file(&pb).ok();
         std::fs::remove_file(&pt).ok();
+    }
+
+    // ------------------------------------------- out-of-core arena tests
+
+    /// Every row of the opened arena, streamed through the plane, matches
+    /// the raw slabs of the source graph.
+    fn assert_same_rows(raw: &Csr, ext: &Csr) {
+        assert_eq!(raw.num_vertices(), ext.num_vertices());
+        assert_eq!(raw.num_edges(), ext.num_edges());
+        assert_eq!(raw.has_weights(), ext.has_weights());
+        for v in 0..raw.num_vertices() as VertexId {
+            assert_eq!(raw.out_neighbors(v), ext.out_neighbors(v), "out v={v}");
+            assert_eq!(raw.in_neighbors(v), ext.in_neighbors(v), "in v={v}");
+            assert_eq!(raw.out_weights_of(v), ext.out_weights_of(v), "ow v={v}");
+            assert_eq!(raw.in_weights_of(v), ext.in_weights_of(v), "iw v={v}");
+        }
+    }
+
+    #[test]
+    fn external_roundtrip_random_graph() {
+        // RMAT leaves isolated vertices, so empty rows are covered too.
+        let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 2);
+        let p = tmp("rand.ipgc");
+        for bs in [1, 7, 64, 4096] {
+            let g2 = externalize(&g, &p, bs).unwrap();
+            assert_eq!(g2.row_plane().unwrap().mode(), crate::graph::RowMode::External);
+            assert_same_rows(&g, &g2);
+            assert_eq!(g2.decompressed(), g);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn external_roundtrip_star_max_degree_row() {
+        // One hub holding every edge: a single row larger than any block's
+        // vertex span, plus n-1 degree-one rows.
+        let n = 257u32;
+        let mut gb = crate::graph::GraphBuilder::new(n as usize);
+        for v in 1..n {
+            gb.push_edge(0, v);
+        }
+        let g = gb.build();
+        let p = tmp("star.ipgc");
+        let g2 = externalize(&g, &p, 16).unwrap();
+        assert_same_rows(&g, &g2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn external_roundtrip_weighted() {
+        let base = gen::barabasi_albert(200, 3, 9);
+        let g = gen::randomly_weighted(&base, 0.5, 4.5, 11);
+        let p = tmp("w.ipgc");
+        let g2 = externalize(&g, &p, 32).unwrap();
+        // Weights come out of arena blocks, not raw slabs.
+        assert!(g2.row_plane().unwrap().weights_in_blocks());
+        assert!(g2.out_weights.is_none());
+        assert_same_rows(&g, &g2);
+        assert_eq!(g2.decompressed(), g);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_dispatches_ipgc_extension() {
+        let g = gen::ring(10);
+        let p = tmp("d2.ipgc");
+        write_external(&g, &p, 4).unwrap();
+        let g2 = load(&p, false).unwrap();
+        assert!(g2.row_plane().is_some());
+        assert_same_rows(&g, &g2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn external_rejects_bad_magic_and_truncation() {
+        let p = tmp("bad.ipgc");
+        std::fs::write(&p, b"NOTMAGIC????????").unwrap();
+        assert!(open_external(&p).is_err());
+        let g = gen::ring(12);
+        write_external(&g, &p, 4).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() / 2]).unwrap();
+        assert!(open_external(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Byte-for-byte golden pin of the row codec: varint degree prefix,
+    /// then zigzag-LEB128 gaps with the first value absolute. Any codec
+    /// change breaks every existing arena/compressed blob — this test is
+    /// the tripwire.
+    #[test]
+    fn golden_row_codec_bytes() {
+        let rows: [&[VertexId]; 5] = [&[1, 2], &[2], &[], &[0, 1, 2, 4], &[3]];
+        let mut buf = Vec::new();
+        for r in rows {
+            rows::encode_row(&mut buf, r);
+        }
+        let expected: [u8; 13] = [
+            2, 2, 2, // deg 2; zz(1) zz(1)
+            1, 4, // deg 1; zz(2)
+            0, // deg 0
+            4, 0, 2, 2, 4, // deg 4; zz(0) zz(1) zz(1) zz(2)
+            1, 6, // deg 1; zz(3)
+        ];
+        assert_eq!(buf, expected);
+    }
+
+    /// Full-file golden pin of the IPGRAPHC layout for a 3-cycle with
+    /// block_size 2. The expected bytes are written out header field by
+    /// header field, independent of the writer under test.
+    #[test]
+    fn golden_external_file_bytes() {
+        let g = crate::graph::GraphBuilder::new(3)
+            .edges(&[(0, 1), (1, 2), (2, 0)])
+            .build();
+        let p = tmp("golden.ipgc");
+        write_external(&g, &p, 2).unwrap();
+        let got = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+
+        let mut want: Vec<u8> = Vec::new();
+        let u = |w: &mut Vec<u8>, v: u64| w.extend_from_slice(&v.to_le_bytes());
+        want.extend_from_slice(b"IPGRAPHC");
+        u(&mut want, 0); // flags: unweighted
+        u(&mut want, 2); // block_size
+        u(&mut want, 3); // n
+        u(&mut want, 3); // m
+        for off in [0u64, 1, 2, 3] {
+            u(&mut want, off); // out_offsets
+        }
+        for off in [0u64, 1, 2, 3] {
+            u(&mut want, off); // in_offsets
+        }
+        // Spans (blob-relative): out block {v0,v1} = rows [1],[2]; out
+        // block {v2} = row [0]; in block {v0,v1} = rows [2],[0]; in
+        // block {v2} = row [1]. Each encoded row is 2 bytes here.
+        for (off, len) in [(0u64, 4u64), (4, 2), (6, 4), (10, 2)] {
+            u(&mut want, off);
+            u(&mut want, len);
+        }
+        u(&mut want, 12); // blob_len
+        want.extend_from_slice(&[
+            1, 2, // out v0: [1]
+            1, 4, // out v1: [2]
+            1, 0, // out v2: [0]
+            1, 4, // in v0: [2]
+            1, 0, // in v1: [0]
+            1, 2, // in v2: [1]
+        ]);
+        assert_eq!(got, want);
     }
 }

@@ -12,9 +12,11 @@ pub mod dynamic;
 pub mod gen;
 pub mod io;
 pub mod partition;
+pub mod rows;
 pub mod stats;
 
 pub use builder::GraphBuilder;
 pub use csr::{Csr, EdgeWeight, VertexId};
 pub use dynamic::{DynamicGraph, DynamicStats, MutationReceipt, MutationSet};
 pub use partition::{PartitionPlan, Partitioning};
+pub use rows::{RowMode, RowPlaneStats, RowPolicy, RowSpec};

@@ -90,6 +90,23 @@ impl Partitioning {
     }
 }
 
+/// Snap interior cut points to row-block boundaries (DESIGN.md §2.12).
+/// On plane-backed graphs a shard whose range covers whole blocks
+/// decodes nothing another shard also needs: scatter staging
+/// ([`crate::graph::rows::RowPlane`]'s `pin_range`) never races a
+/// neighbour shard for a boundary block, and residency budgets count
+/// whole shards. Each cut moves at most half a block — bounded extra
+/// edge imbalance — and the 0/`n` endpoints stay pinned. Cut placement
+/// is an execution knob: the parity grid pins that shard boundaries
+/// never change values or traces.
+fn align_to_blocks(mut cuts: Vec<usize>, block: usize, n: usize) -> Vec<usize> {
+    for i in 1..cuts.len().saturating_sub(1) {
+        let snapped = (cuts[i] + block / 2) / block * block;
+        cuts[i] = snapped.clamp(cuts[i - 1], n);
+    }
+    cuts
+}
+
 /// An immutable partition of one graph into contiguous, edge-balanced
 /// shards. Built once per (graph, shard count) and shared by `Arc`
 /// across runs (the session caches plans keyed by resolved shard count).
@@ -128,7 +145,10 @@ impl PartitionPlan {
             .map(|v| (g.out_degree(v) + g.in_degree(v)) as u64)
             .collect();
         let prefix = exclusive_prefix_sum(&weights);
-        let cuts = balanced_cuts(&prefix, shards);
+        let cuts = match g.row_plane() {
+            Some(p) => align_to_blocks(balanced_cuts(&prefix, shards), p.block_size(), n),
+            None => balanced_cuts(&prefix, shards),
+        };
 
         let mut owner = vec![0u32; n];
         for s in 0..shards {
@@ -471,6 +491,21 @@ mod tests {
         }
         assert_eq!(plan.out_edges(), &out_want[..]);
         assert_eq!(plan.in_edges(), &in_want[..]);
+    }
+
+    #[test]
+    fn cuts_align_to_row_blocks_on_plane_backed_graphs() {
+        let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 7).compress(32);
+        let plan = PartitionPlan::build(&g, 5);
+        plan.validate(&g).unwrap();
+        for &c in &plan.cuts()[1..plan.num_shards()] {
+            assert_eq!(c % 32, 0, "interior cut {c} not block-aligned");
+        }
+        // Degenerate shapes survive snapping: more shards than blocks
+        // just leaves some shards empty, still a valid monotone cover.
+        let tiny = gen::star(16).compress(64);
+        let plan = PartitionPlan::build(&tiny, 6);
+        plan.validate(&tiny).unwrap();
     }
 
     #[test]

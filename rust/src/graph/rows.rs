@@ -1,0 +1,996 @@
+//! Pluggable row-storage plane: compressed and out-of-core CSR adjacency
+//! (DESIGN.md §2.12).
+//!
+//! The engine's hot loops iterate plain `&[VertexId]` slices; this module
+//! keeps that contract while letting the *bytes behind the slice* live in
+//! one of three places:
+//!
+//!   - **raw** — the classic in-RAM slabs on [`super::csr::Csr`] itself
+//!     (no plane attached; nothing here runs),
+//!   - **compressed** — rows stored as delta-gap varints in one in-RAM
+//!     blob, decoded block-at-a-time into pooled scratch,
+//!   - **external** — the same encoded blocks (plus the raw weight slabs)
+//!     living in an on-disk arena file, streamed in on demand so only the
+//!     working set of blocks is resident between barriers.
+//!
+//! ## Encoding
+//!
+//! A *block* covers `block_size` consecutive vertex ids in one direction
+//! (out or in). Each row is self-delimiting: a LEB128 varint degree
+//! prefix, then one zigzag-LEB128 value per edge — the first is the
+//! absolute target id, the rest are deltas from the previous target.
+//! Zigzag keeps the codec total (unsorted rows still round-trip); the
+//! builder emits sorted rows, whose small positive gaps are what make the
+//! ≥1.5x ratios in BENCH_memory.
+//!
+//! ## Residency protocol
+//!
+//! Every (direction, block) pair owns a once-cell style slot:
+//! `EMPTY → BUSY → READY`. Readers spin through `ensure()`: a READY slot
+//! hands out a borrow of the decoded [`Block`]; on EMPTY the winning
+//! `CAS(Acquire)` decodes into a pooled buffer and publishes with a
+//! `Release` store; losers spin on BUSY. Between decode and eviction a
+//! READY block is immutable, so concurrent readers need no further
+//! synchronisation.
+//!
+//! Eviction is only legal when **no borrow can be outstanding**:
+//! [`RowPlane::barrier_advise`] runs on the engine thread at a superstep
+//! barrier (workers joined) and bails unless exactly one run is active on
+//! the plane (`run_enter`/`run_exit` — the serving layer runs many
+//! engines over one snapshot). External mode evicts least-recently-touched
+//! blocks down to the `resident_blocks` budget; compressed mode only
+//! evicts blocks that stayed cold for `cold_rounds` consecutive barriers,
+//! and only when the tuner opted in (adaptive runs set the policy from
+//! the shared decision table — see `engine/tune.rs`).
+
+use std::cell::UnsafeCell;
+use std::fs::File;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::csr::{EdgeWeight, VertexId};
+
+// ---------------------------------------------------------------- codec
+
+/// LEB128-encode `x` into `buf` (7 bits per byte, high bit = continue).
+pub fn write_varint(buf: &mut Vec<u8>, mut x: u64) {
+    loop {
+        let byte = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Decode one LEB128 varint from `bytes` starting at `*pos`, advancing
+/// `pos` past it. Input comes from the trusted block builder; a truncated
+/// buffer is a corrupt-file bug and fails loudly on the slice bound.
+pub fn read_varint(bytes: &[u8], pos: &mut usize) -> u64 {
+    let mut x = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = bytes[*pos];
+        *pos += 1;
+        x |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return x;
+        }
+        shift += 7;
+    }
+}
+
+/// Zigzag-map a signed delta to an unsigned varint payload (small
+/// magnitudes of either sign stay small).
+pub fn zigzag(x: i64) -> u64 {
+    ((x << 1) ^ (x >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Append one encoded row: varint degree, then zigzag deltas (first value
+/// is the absolute id, i.e. a delta from 0).
+pub fn encode_row(buf: &mut Vec<u8>, row: &[VertexId]) {
+    write_varint(buf, row.len() as u64);
+    let mut prev: i64 = 0;
+    for &t in row {
+        write_varint(buf, zigzag(i64::from(t) - prev));
+        prev = i64::from(t);
+    }
+}
+
+/// Decode one row in place, appending its targets to `out` and advancing
+/// `pos` past the row's bytes.
+pub fn decode_row(bytes: &[u8], pos: &mut usize, out: &mut Vec<VertexId>) {
+    let deg = read_varint(bytes, pos) as usize;
+    out.reserve(deg);
+    let mut prev: i64 = 0;
+    for _ in 0..deg {
+        prev += unzigzag(read_varint(bytes, pos));
+        out.push(prev as VertexId);
+    }
+}
+
+// ------------------------------------------------------- public surface
+
+/// Which non-raw backing a plane uses (raw CSR is the *absence* of a
+/// plane).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowMode {
+    /// Encoded blocks in one in-RAM blob; weights stay on the raw slabs.
+    Compressed,
+    /// Encoded blocks + weight slabs in an on-disk arena file; only the
+    /// resident working set occupies RAM.
+    External,
+}
+
+/// Residency policy, settable per run (the tuner and the CLI both write
+/// it through [`RowPlane::set_policy`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RowPolicy {
+    /// External mode: evict least-recently-touched READY blocks down to
+    /// this many at each barrier. `None` = keep everything touched.
+    pub resident_blocks: Option<usize>,
+    /// Compressed mode: evict a decoded block after this many consecutive
+    /// barriers without a touch. `None` (fixed-config runs) = decoded
+    /// blocks stay resident; adaptive runs set the decision-table band.
+    pub cold_rounds: Option<u32>,
+}
+
+/// Reapplicable description of a plane — how `DynamicGraph::compact`
+/// restores the backing after rebuilding the raw CSR.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowSpec {
+    pub mode: RowMode,
+    pub block_size: usize,
+    pub policy: RowPolicy,
+    /// Arena file path (external mode only).
+    pub path: Option<PathBuf>,
+}
+
+/// Adjacency direction — the plane stores out- and in-rows as separate
+/// block sequences (slot index = `dir * num_blocks + block`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Dir {
+    Out,
+    In,
+}
+
+impl Dir {
+    #[inline]
+    pub(crate) fn idx(self) -> usize {
+        match self {
+            Dir::Out => 0,
+            Dir::In => 1,
+        }
+    }
+}
+
+/// Cumulative plane counters, snapshotted into `RunMetrics` (the engine
+/// stamps a start snapshot and reports the per-run delta).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RowPlaneStats {
+    /// Blocks decoded (demand faults + staged pins).
+    pub decodes: u64,
+    /// Edges materialised by those decodes.
+    pub decoded_edges: u64,
+    /// Wall time spent decoding (whole-block decode + arena reads).
+    pub decode_ns: u64,
+    /// Decodes triggered by a row access that found its block absent.
+    pub row_faults: u64,
+    /// Decodes triggered by the engine's pre-scatter `pin_range` staging.
+    pub staged_blocks: u64,
+    /// Blocks evicted by `barrier_advise`.
+    pub evictions: u64,
+    /// READY blocks right now (instantaneous, not a delta).
+    pub resident_blocks: u64,
+    /// Bytes held by READY blocks right now (instantaneous).
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes` since plane construction.
+    pub peak_resident_bytes: u64,
+    /// Size of the encoded adjacency (blob or arena block region).
+    pub encoded_bytes: u64,
+    /// Size the same adjacency occupies as raw `u32` slabs.
+    pub raw_adj_bytes: u64,
+}
+
+impl RowPlaneStats {
+    /// Raw-over-encoded adjacency ratio (≥ 1.0 when compression wins).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.encoded_bytes == 0 {
+            1.0
+        } else {
+            self.raw_adj_bytes as f64 / self.encoded_bytes as f64
+        }
+    }
+
+    /// Per-run view: cumulative counters minus a start snapshot;
+    /// instantaneous gauges (resident/peak/sizes) keep their end values.
+    pub fn delta_from(&self, start: &RowPlaneStats) -> RowPlaneStats {
+        RowPlaneStats {
+            decodes: self.decodes - start.decodes,
+            decoded_edges: self.decoded_edges - start.decoded_edges,
+            decode_ns: self.decode_ns - start.decode_ns,
+            row_faults: self.row_faults - start.row_faults,
+            staged_blocks: self.staged_blocks - start.staged_blocks,
+            evictions: self.evictions - start.evictions,
+            ..*self
+        }
+    }
+}
+
+// --------------------------------------------------------------- blocks
+
+/// One decoded block (one direction): the concatenated targets of its
+/// rows, plus the matching weight run when the plane serves weights
+/// (external weighted arenas), plus the byte scratch arena reads land in.
+/// Pooled through the plane free-list so steady-state decoding allocates
+/// nothing.
+#[derive(Default)]
+struct Block {
+    targets: Vec<VertexId>,
+    weights: Vec<EdgeWeight>,
+    raw: Vec<u8>,
+}
+
+impl Block {
+    fn heap_bytes(&self) -> u64 {
+        (self.targets.len() * std::mem::size_of::<VertexId>()
+            + self.weights.len() * std::mem::size_of::<EdgeWeight>()
+            + self.raw.len()) as u64
+    }
+}
+
+const EMPTY: u8 = 0;
+const BUSY: u8 = 1;
+const READY: u8 = 2;
+
+/// Once-cell residency slot for one (direction, block) pair.
+struct Slot {
+    state: AtomicU8,
+    block: UnsafeCell<Option<Box<Block>>>,
+    /// Plane-clock stamp of the last `ensure` touch (LRU key).
+    last_touch: AtomicU64,
+    /// 1 if touched since the last `barrier_advise` (cold detector).
+    touched: AtomicU32,
+    /// Consecutive advises with no touch.
+    cold: AtomicU32,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            state: AtomicU8::new(EMPTY),
+            block: UnsafeCell::new(None),
+            last_touch: AtomicU64::new(0),
+            touched: AtomicU32::new(0),
+            cold: AtomicU32::new(0),
+        }
+    }
+}
+
+// SAFETY: `block` is written exactly once per residency cycle, by the
+// thread that won the EMPTY→BUSY CAS, and published by the READY Release
+// store; readers only dereference it after an Acquire load observes
+// READY, and the only writer after that point is eviction, which requires
+// barrier-time run-exclusivity (no reader exists). See module docs.
+unsafe impl Sync for Slot {}
+
+/// Byte range of one encoded block within the blob / arena file.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub(crate) struct Span {
+    pub offset: u64,
+    pub len: u64,
+}
+
+// ---------------------------------------------------------------- arena
+
+/// Positioned-read handle on the on-disk arena (external mode). Unix gets
+/// true positional reads (`read_at`, no shared cursor); other platforms
+/// serialise a seek+read pair behind a mutex.
+pub(crate) struct Arena {
+    file: File,
+    path: PathBuf,
+    #[cfg(not(unix))]
+    cursor: Mutex<()>,
+}
+
+impl Arena {
+    pub(crate) fn new(file: File, path: PathBuf) -> Arena {
+        Arena {
+            file,
+            path,
+            #[cfg(not(unix))]
+            cursor: Mutex::new(()),
+        }
+    }
+
+    pub(crate) fn path(&self) -> &PathBuf {
+        &self.path
+    }
+
+    #[cfg(unix)]
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.read_exact_at(buf, offset)
+    }
+
+    #[cfg(not(unix))]
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        use std::io::{Read, Seek, SeekFrom};
+        let _guard = self.cursor.lock().unwrap_or_else(|p| p.into_inner());
+        let mut f = &self.file;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+}
+
+// ---------------------------------------------------------------- plane
+
+enum Backing {
+    Compressed { blob: Vec<u8> },
+    External { arena: Arena },
+}
+
+/// Residency bookkeeping serialised behind one mutex: the decode path
+/// takes it once per *block* (not per row), the barrier path once per
+/// superstep — never per message.
+struct Residency {
+    /// Engine runs currently executing over this plane (serving layer
+    /// runs many). Eviction requires exactly one.
+    active_runs: usize,
+    policy: RowPolicy,
+    /// Recycled block buffers (capacity retained).
+    free: Vec<Box<Block>>,
+}
+
+#[derive(Default)]
+struct PlaneCounters {
+    decodes: AtomicU64,
+    decoded_edges: AtomicU64,
+    decode_ns: AtomicU64,
+    row_faults: AtomicU64,
+    staged_blocks: AtomicU64,
+    evictions: AtomicU64,
+    resident_blocks: AtomicU64,
+    resident_bytes: AtomicU64,
+    peak_resident_bytes: AtomicU64,
+}
+
+/// The row-storage plane attached to a [`super::csr::Csr`] (shared via
+/// `Arc` so snapshots clone cheaply). Offsets stay raw on the `Csr` —
+/// degrees are O(1) under every backing — and this plane owns only the
+/// adjacency bytes and the residency machinery.
+pub struct RowPlane {
+    mode: RowMode,
+    block_size: usize,
+    n: usize,
+    num_blocks: usize,
+    /// External weighted arenas serve weights from blocks; compressed
+    /// planes leave weights on the Csr's raw slabs.
+    weights_in_blocks: bool,
+    /// Encoded byte span per slot (`dir * num_blocks + block`).
+    spans: Vec<Span>,
+    /// Per-direction cumulative edge counts at block starts
+    /// (`num_blocks + 1` entries): decode pre-sizing, row slicing and
+    /// weight-run addressing all index off these.
+    first: [Vec<u64>; 2],
+    /// File offsets of the raw weight slabs (external weighted only).
+    wbase: [u64; 2],
+    backing: Backing,
+    slots: Vec<Slot>,
+    res: Mutex<Residency>,
+    stats: PlaneCounters,
+    /// Monotone barrier clock stamped into `last_touch` (LRU recency).
+    clock: AtomicU64,
+    encoded_bytes: u64,
+    raw_adj_bytes: u64,
+}
+
+impl std::fmt::Debug for RowPlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RowPlane")
+            .field("mode", &self.mode)
+            .field("block_size", &self.block_size)
+            .field("num_blocks", &self.num_blocks)
+            .field("encoded_bytes", &self.encoded_bytes)
+            .field("raw_adj_bytes", &self.raw_adj_bytes)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Encode one direction's rows into `blob`, one span per block. Returns
+/// the spans and the cumulative first-edge array (`num_blocks + 1`).
+pub(crate) fn encode_blocks(
+    offsets: &[usize],
+    adj: &[VertexId],
+    block_size: usize,
+    num_blocks: usize,
+    blob: &mut Vec<u8>,
+) -> (Vec<Span>, Vec<u64>) {
+    let n = offsets.len() - 1;
+    let mut spans = Vec::with_capacity(num_blocks);
+    for b in 0..num_blocks {
+        let sv = b * block_size;
+        let ev = (sv + block_size).min(n);
+        let start = blob.len() as u64;
+        for v in sv..ev {
+            encode_row(blob, &adj[offsets[v]..offsets[v + 1]]);
+        }
+        spans.push(Span {
+            offset: start,
+            len: blob.len() as u64 - start,
+        });
+    }
+    let first = (0..=num_blocks)
+        .map(|b| offsets[(b * block_size).min(n)] as u64)
+        .collect();
+    (spans, first)
+}
+
+impl RowPlane {
+    /// Build an in-RAM compressed plane from raw CSR parts. Weights (if
+    /// any) stay on the caller's raw slabs.
+    pub(crate) fn new_compressed(
+        out_offsets: &[usize],
+        out_targets: &[VertexId],
+        in_offsets: &[usize],
+        in_sources: &[VertexId],
+        block_size: usize,
+    ) -> RowPlane {
+        let block_size = block_size.max(1);
+        let n = out_offsets.len() - 1;
+        let num_blocks = n.div_ceil(block_size);
+        let mut blob = Vec::new();
+        let (mut spans, out_first) =
+            encode_blocks(out_offsets, out_targets, block_size, num_blocks, &mut blob);
+        let (in_spans, in_first) =
+            encode_blocks(in_offsets, in_sources, block_size, num_blocks, &mut blob);
+        spans.extend(in_spans);
+        let encoded_bytes = blob.len() as u64;
+        let raw_adj_bytes =
+            ((out_targets.len() + in_sources.len()) * std::mem::size_of::<VertexId>()) as u64;
+        RowPlane {
+            mode: RowMode::Compressed,
+            block_size,
+            n,
+            num_blocks,
+            weights_in_blocks: false,
+            spans,
+            first: [out_first, in_first],
+            wbase: [0, 0],
+            backing: Backing::Compressed { blob },
+            slots: (0..2 * num_blocks).map(|_| Slot::new()).collect(),
+            res: Mutex::new(Residency {
+                active_runs: 0,
+                policy: RowPolicy::default(),
+                free: Vec::new(),
+            }),
+            stats: PlaneCounters::default(),
+            clock: AtomicU64::new(0),
+            encoded_bytes,
+            raw_adj_bytes,
+        }
+    }
+
+    /// Wrap an on-disk arena (opened + header-parsed by `graph/io.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new_external(
+        arena: Arena,
+        block_size: usize,
+        n: usize,
+        weighted: bool,
+        spans: Vec<Span>,
+        first: [Vec<u64>; 2],
+        wbase: [u64; 2],
+        encoded_bytes: u64,
+    ) -> RowPlane {
+        let block_size = block_size.max(1);
+        let num_blocks = n.div_ceil(block_size);
+        debug_assert_eq!(spans.len(), 2 * num_blocks);
+        let raw_adj_bytes = ((first[0][num_blocks] + first[1][num_blocks]) as usize
+            * std::mem::size_of::<VertexId>()) as u64;
+        RowPlane {
+            mode: RowMode::External,
+            block_size,
+            n,
+            num_blocks,
+            weights_in_blocks: weighted,
+            spans,
+            first,
+            wbase,
+            backing: Backing::External { arena },
+            slots: (0..2 * num_blocks).map(|_| Slot::new()).collect(),
+            res: Mutex::new(Residency {
+                active_runs: 0,
+                policy: RowPolicy::default(),
+                free: Vec::new(),
+            }),
+            stats: PlaneCounters::default(),
+            clock: AtomicU64::new(0),
+            encoded_bytes,
+            raw_adj_bytes,
+        }
+    }
+
+    pub fn mode(&self) -> RowMode {
+        self.mode
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    /// True when edge weights live in the arena blocks (external
+    /// weighted) rather than on the Csr's raw slabs.
+    pub fn weights_in_blocks(&self) -> bool {
+        self.weights_in_blocks
+    }
+
+    /// Total base edges in one direction (the count the raw slab would
+    /// hold) — `Csr::num_edges` under a plane.
+    pub(crate) fn base_edges(&self, dir: Dir) -> u64 {
+        *self.first[dir.idx()].last().unwrap_or(&0)
+    }
+
+    /// Reapplicable backing description (see [`RowSpec`]).
+    pub fn spec(&self) -> RowSpec {
+        let path = match &self.backing {
+            Backing::Compressed { .. } => None,
+            Backing::External { arena } => Some(arena.path().clone()),
+        };
+        RowSpec {
+            mode: self.mode,
+            block_size: self.block_size,
+            policy: self.policy(),
+            path,
+        }
+    }
+
+    pub fn set_policy(&self, policy: RowPolicy) {
+        self.res.lock().unwrap_or_else(|p| p.into_inner()).policy = policy;
+    }
+
+    pub fn policy(&self) -> RowPolicy {
+        self.res.lock().unwrap_or_else(|p| p.into_inner()).policy
+    }
+
+    pub fn stats(&self) -> RowPlaneStats {
+        let s = &self.stats;
+        RowPlaneStats {
+            decodes: s.decodes.load(Ordering::Relaxed),
+            decoded_edges: s.decoded_edges.load(Ordering::Relaxed),
+            decode_ns: s.decode_ns.load(Ordering::Relaxed),
+            row_faults: s.row_faults.load(Ordering::Relaxed),
+            staged_blocks: s.staged_blocks.load(Ordering::Relaxed),
+            evictions: s.evictions.load(Ordering::Relaxed),
+            resident_blocks: s.resident_blocks.load(Ordering::Relaxed),
+            resident_bytes: s.resident_bytes.load(Ordering::Relaxed),
+            peak_resident_bytes: s.peak_resident_bytes.load(Ordering::Relaxed),
+            encoded_bytes: self.encoded_bytes,
+            raw_adj_bytes: self.raw_adj_bytes,
+        }
+    }
+
+    // ---------------------------------------------------- row accessors
+
+    /// The decoded row of `v` in direction `dir`. `start..end` is the
+    /// edge-index range from the Csr's (raw, always-resident) offsets;
+    /// the borrow is valid until the next eviction point, which cannot
+    /// occur before the caller's superstep barrier (module docs).
+    #[inline]
+    pub(crate) fn row(&self, dir: Dir, v: VertexId, start: usize, end: usize) -> &[VertexId] {
+        let b = v as usize / self.block_size;
+        let blk = self.ensure(dir, b, false);
+        let base = self.first[dir.idx()][b] as usize;
+        &blk.targets[start - base..end - base]
+    }
+
+    /// The weight run matching [`RowPlane::row`] (external weighted
+    /// arenas only — callers check [`RowPlane::weights_in_blocks`]).
+    #[inline]
+    pub(crate) fn row_weights(
+        &self,
+        dir: Dir,
+        v: VertexId,
+        start: usize,
+        end: usize,
+    ) -> &[EdgeWeight] {
+        let b = v as usize / self.block_size;
+        let blk = self.ensure(dir, b, false);
+        let base = self.first[dir.idx()][b] as usize;
+        &blk.weights[start - base..end - base]
+    }
+
+    /// Pre-decode every block covering vertex range `v_start..v_end` in
+    /// `dir` — the engine's per-shard staging step, so the scatter loop
+    /// itself only ever takes the READY fast path.
+    pub(crate) fn pin_range(&self, dir: Dir, v_start: usize, v_end: usize) {
+        if v_start >= v_end {
+            return;
+        }
+        let b0 = v_start / self.block_size;
+        let b1 = (v_end - 1) / self.block_size;
+        for b in b0..=b1 {
+            let _ = self.ensure(dir, b, true);
+        }
+    }
+
+    /// Resolve a block to READY and borrow it. `staged` only labels the
+    /// decode statistic (pin vs demand fault); the protocol is identical.
+    fn ensure(&self, dir: Dir, b: usize, staged: bool) -> &Block {
+        let slot = &self.slots[dir.idx() * self.num_blocks + b];
+        loop {
+            match slot.state.load(Ordering::Acquire) {
+                READY => {
+                    slot.touched.store(1, Ordering::Relaxed);
+                    slot.last_touch
+                        .store(self.clock.load(Ordering::Relaxed), Ordering::Relaxed);
+                    // SAFETY: the Acquire load above saw READY, which is
+                    // only published (Release) after the BUSY winner fully
+                    // initialised the block; the cell stays written until
+                    // eviction, which requires barrier-time run
+                    // exclusivity, so no writer races this read and the
+                    // Option is necessarily Some.
+                    return unsafe { (*slot.block.get()).as_deref().unwrap_unchecked() };
+                }
+                EMPTY => {
+                    if slot
+                        .state
+                        .compare_exchange(EMPTY, BUSY, Ordering::Acquire, Ordering::Relaxed)
+                        .is_ok()
+                    {
+                        let blk = self.decode_block(dir, b, staged);
+                        // SAFETY: winning the EMPTY→BUSY CAS grants this
+                        // thread exclusive write access to the cell until
+                        // the Release store below publishes READY.
+                        unsafe {
+                            *slot.block.get() = Some(blk);
+                        }
+                        slot.touched.store(1, Ordering::Relaxed);
+                        slot.cold.store(0, Ordering::Relaxed);
+                        slot.last_touch
+                            .store(self.clock.load(Ordering::Relaxed), Ordering::Relaxed);
+                        slot.state.store(READY, Ordering::Release);
+                    }
+                    // Either we published READY or someone else holds
+                    // BUSY — loop re-reads and takes the READY arm.
+                }
+                _ => std::hint::spin_loop(),
+            }
+        }
+    }
+
+    /// Decode (and for external mode, read) one block into a pooled
+    /// buffer. Called only by the slot's BUSY winner.
+    fn decode_block(&self, dir: Dir, b: usize, staged: bool) -> Box<Block> {
+        let t0 = Instant::now();
+        let mut blk = self
+            .res
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .free
+            .pop()
+            .unwrap_or_default();
+        blk.targets.clear();
+        blk.weights.clear();
+        let span = self.spans[dir.idx() * self.num_blocks + b];
+        let first = &self.first[dir.idx()];
+        let edges = (first[b + 1] - first[b]) as usize;
+        blk.targets.reserve(edges);
+        let sv = b * self.block_size;
+        let ev = (sv + self.block_size).min(self.n);
+        match &self.backing {
+            Backing::Compressed { blob } => {
+                let bytes = &blob[span.offset as usize..(span.offset + span.len) as usize];
+                let mut pos = 0usize;
+                for _ in sv..ev {
+                    decode_row(bytes, &mut pos, &mut blk.targets);
+                }
+            }
+            Backing::External { arena } => {
+                blk.raw.resize(span.len as usize, 0);
+                arena
+                    .read_exact_at(&mut blk.raw, span.offset)
+                    // audit:allow(panic): arena I/O failure (file truncated
+                    // or unlinked storage gone) is unrecoverable mid-run —
+                    // fail loudly rather than serve wrong adjacency.
+                    .expect("row arena read failed");
+                let mut pos = 0usize;
+                for _ in sv..ev {
+                    decode_row(&blk.raw, &mut pos, &mut blk.targets);
+                }
+                if self.weights_in_blocks && edges > 0 {
+                    const W: usize = std::mem::size_of::<EdgeWeight>();
+                    blk.raw.resize(edges * W, 0);
+                    let woff = self.wbase[dir.idx()] + first[b] * W as u64;
+                    arena
+                        .read_exact_at(&mut blk.raw, woff)
+                        // audit:allow(panic): same arena-corruption
+                        // invariant as the adjacency read above.
+                        .expect("row arena weight read failed");
+                    blk.weights.extend(
+                        blk.raw
+                            .chunks_exact(W)
+                            .map(|c| EdgeWeight::from_le_bytes([
+                                c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                            ])),
+                    );
+                }
+                blk.raw.clear();
+            }
+        }
+        debug_assert_eq!(blk.targets.len(), edges);
+        let s = &self.stats;
+        s.decodes.fetch_add(1, Ordering::Relaxed);
+        s.decoded_edges.fetch_add(edges as u64, Ordering::Relaxed);
+        s.decode_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if staged {
+            s.staged_blocks.fetch_add(1, Ordering::Relaxed);
+        } else {
+            s.row_faults.fetch_add(1, Ordering::Relaxed);
+        }
+        s.resident_blocks.fetch_add(1, Ordering::Relaxed);
+        let bytes = s
+            .resident_bytes
+            .fetch_add(blk.heap_bytes(), Ordering::Relaxed)
+            + blk.heap_bytes();
+        s.peak_resident_bytes.fetch_max(bytes, Ordering::Relaxed);
+        blk
+    }
+
+    // ------------------------------------------------------- run fences
+
+    /// A run over this plane is starting (serving layer: many at once).
+    pub fn run_enter(&self) {
+        self.res.lock().unwrap_or_else(|p| p.into_inner()).active_runs += 1;
+    }
+
+    /// The matching exit — after the run's final barrier.
+    pub fn run_exit(&self) {
+        let mut res = self.res.lock().unwrap_or_else(|p| p.into_inner());
+        res.active_runs = res.active_runs.saturating_sub(1);
+    }
+
+    /// Barrier-time residency maintenance, called by the engine thread
+    /// between supersteps (workers joined). Advances the LRU clock, and —
+    /// only when this is the sole active run, so no row borrow can be
+    /// outstanding anywhere — applies the eviction policy: external
+    /// planes evict least-recently-touched blocks down to the
+    /// `resident_blocks` budget; compressed planes evict blocks cold for
+    /// `cold_rounds` consecutive barriers.
+    pub fn barrier_advise(&self) {
+        self.clock.fetch_add(1, Ordering::Relaxed);
+        let mut res = self.res.lock().unwrap_or_else(|p| p.into_inner());
+        if res.active_runs != 1 {
+            return;
+        }
+        let policy = res.policy;
+        match self.mode {
+            RowMode::External => {
+                let Some(budget) = policy.resident_blocks else {
+                    return;
+                };
+                let resident = self.stats.resident_blocks.load(Ordering::Relaxed) as usize;
+                if resident <= budget {
+                    return;
+                }
+                // Oldest-touch-first victim order over READY slots.
+                let mut victims: Vec<(u64, usize)> = self
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.state.load(Ordering::Relaxed) == READY)
+                    .map(|(i, s)| (s.last_touch.load(Ordering::Relaxed), i))
+                    .collect();
+                victims.sort_unstable();
+                for &(_, i) in victims.iter().take(resident - budget) {
+                    self.evict_slot(i, &mut res);
+                }
+            }
+            RowMode::Compressed => {
+                let Some(cold_rounds) = policy.cold_rounds else {
+                    return;
+                };
+                for i in 0..self.slots.len() {
+                    let slot = &self.slots[i];
+                    if slot.state.load(Ordering::Relaxed) != READY {
+                        continue;
+                    }
+                    if slot.touched.swap(0, Ordering::Relaxed) == 1 {
+                        slot.cold.store(0, Ordering::Relaxed);
+                    } else {
+                        let streak = slot.cold.fetch_add(1, Ordering::Relaxed) + 1;
+                        if streak >= cold_rounds {
+                            self.evict_slot(i, &mut res);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evict one READY slot. Caller holds the residency lock with
+    /// `active_runs == 1` at a barrier (workers joined).
+    fn evict_slot(&self, idx: usize, res: &mut Residency) {
+        let slot = &self.slots[idx];
+        // SAFETY: run-exclusive at a barrier (caller contract) — no
+        // reader holds a borrow of this block and no decoder can be
+        // running, so taking the cell contents is unobserved.
+        let blk = unsafe { (*slot.block.get()).take() };
+        slot.state.store(EMPTY, Ordering::Release);
+        slot.cold.store(0, Ordering::Relaxed);
+        if let Some(mut b) = blk {
+            let s = &self.stats;
+            s.resident_blocks.fetch_sub(1, Ordering::Relaxed);
+            s.resident_bytes.fetch_sub(b.heap_bytes(), Ordering::Relaxed);
+            s.evictions.fetch_add(1, Ordering::Relaxed);
+            b.targets.clear();
+            b.weights.clear();
+            b.raw.clear();
+            res.free.push(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &vals {
+            write_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(read_varint(&buf, &mut pos), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for x in [-5i64, -1, 0, 1, 5, i64::MIN, i64::MAX] {
+            assert_eq!(unzigzag(zigzag(x)), x);
+        }
+    }
+
+    #[test]
+    fn row_codec_roundtrip_sorted_unsorted_empty() {
+        let rows: Vec<Vec<VertexId>> = vec![
+            vec![],
+            vec![7],
+            vec![1, 2, 3, 100, 1000],
+            vec![9, 3, 0, u32::MAX, 4], // unsorted: zigzag keeps it total
+        ];
+        let mut buf = Vec::new();
+        for r in &rows {
+            encode_row(&mut buf, r);
+        }
+        let mut pos = 0;
+        for r in &rows {
+            let mut out = Vec::new();
+            decode_row(&buf, &mut pos, &mut out);
+            assert_eq!(&out, r);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    /// Tiny 5-vertex graph used across the plane tests:
+    /// out rows: 0→{1,2}, 1→{2}, 2→{}, 3→{0,1,2,4}, 4→{3}.
+    fn toy() -> (Vec<usize>, Vec<VertexId>) {
+        (vec![0, 2, 3, 3, 7, 8], vec![1, 2, 2, 0, 1, 2, 4, 3])
+    }
+
+    fn toy_plane(block_size: usize) -> RowPlane {
+        let (offs, adj) = toy();
+        // Symmetric enough for a test: reuse the same arrays as "in".
+        RowPlane::new_compressed(&offs, &adj, &offs, &adj, block_size)
+    }
+
+    #[test]
+    fn compressed_rows_match_raw_slices() {
+        let (offs, adj) = toy();
+        for bs in [1, 2, 3, 16] {
+            let plane = toy_plane(bs);
+            for v in 0..5u32 {
+                let (s, e) = (offs[v as usize], offs[v as usize + 1]);
+                assert_eq!(plane.row(Dir::Out, v, s, e), &adj[s..e], "bs={bs} v={v}");
+                assert_eq!(plane.row(Dir::In, v, s, e), &adj[s..e], "bs={bs} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_count_faults_and_staging() {
+        let (offs, adj) = toy();
+        let plane = toy_plane(2);
+        plane.pin_range(Dir::Out, 0, 5); // blocks 0..=2 staged
+        let s = plane.stats();
+        assert_eq!(s.staged_blocks, 3);
+        assert_eq!(s.row_faults, 0);
+        assert_eq!(s.decoded_edges, adj.len() as u64);
+        // Demand access on the other direction faults.
+        let _ = plane.row(Dir::In, 0, offs[0], offs[1]);
+        assert_eq!(plane.stats().row_faults, 1);
+        assert!(plane.stats().resident_blocks == 4);
+    }
+
+    #[test]
+    fn cold_eviction_recycles_and_redecodes_identically() {
+        let (offs, adj) = toy();
+        let plane = toy_plane(2);
+        plane.set_policy(RowPolicy {
+            resident_blocks: None,
+            cold_rounds: Some(1),
+        });
+        plane.run_enter();
+        let r0: Vec<VertexId> = plane.row(Dir::Out, 0, offs[0], offs[1]).to_vec();
+        // Advise 1 consumes the touch; advise 2 finds the block cold for
+        // one full round and evicts it.
+        plane.barrier_advise();
+        plane.barrier_advise();
+        assert_eq!(plane.stats().evictions, 1);
+        assert_eq!(plane.stats().resident_blocks, 0);
+        // Re-decode (from the pooled buffer) returns identical bits.
+        assert_eq!(plane.row(Dir::Out, 0, offs[0], offs[1]), r0.as_slice());
+        assert_eq!(&adj[offs[0]..offs[1]], r0.as_slice());
+        plane.run_exit();
+    }
+
+    #[test]
+    fn no_eviction_while_other_runs_active() {
+        let plane = toy_plane(2);
+        plane.set_policy(RowPolicy {
+            resident_blocks: None,
+            cold_rounds: Some(1),
+        });
+        plane.run_enter();
+        plane.run_enter(); // a second concurrent run pins residency
+        let (offs, _) = toy();
+        let _ = plane.row(Dir::Out, 0, offs[0], offs[1]);
+        plane.barrier_advise();
+        plane.barrier_advise();
+        assert_eq!(plane.stats().evictions, 0);
+        plane.run_exit();
+        plane.run_exit();
+    }
+
+    #[test]
+    fn compression_beats_raw_on_sorted_rows() {
+        // 64 vertices, dense-ish sorted rows with small gaps: varint
+        // gap coding must beat 4-byte raw targets comfortably.
+        let n = 64usize;
+        let mut offs = vec![0usize];
+        let mut adj: Vec<VertexId> = Vec::new();
+        for v in 0..n {
+            for t in 0..8u32 {
+                adj.push((v as u32 + t) % n as u32);
+            }
+            let row_start = adj.len() - 8;
+            adj[row_start..].sort_unstable();
+            offs.push(adj.len());
+        }
+        let plane = RowPlane::new_compressed(&offs, &adj, &offs, &adj, 8);
+        assert!(
+            plane.stats().compression_ratio() >= 1.5,
+            "ratio {}",
+            plane.stats().compression_ratio()
+        );
+    }
+}

@@ -21,6 +21,16 @@
 //!                              rendering of the observability plane
 //!                   [--trace-out FILE]  write the run's Chrome trace-event
 //!                              JSON (load in Perfetto / chrome://tracing)
+//!                   [--compress | --oocore FILE]  row-storage plane
+//!                              (§2.12): sorted rows as delta-gap varint
+//!                              blocks decoded per shard on demand, or
+//!                              file-streamed out-of-core blocks with only
+//!                              the working set resident between barriers
+//!                   [--block-size N]       vertices per row block (1024)
+//!                   [--resident-blocks N]  oocore: LRU-evict down to N
+//!                              READY blocks at each barrier
+//!                   [--cold-rounds N]      compress: recycle a decoded
+//!                              block after N untouched barriers
 //!                   [--iterations N] [--source V] [--rounds R]
 //!                   (lpa and triangles are log-plane programs: full
 //!                    message multisets, no combiner — see DESIGN.md §2.6)
@@ -187,7 +197,62 @@ const RUN_FLAGS: &[&str] = &[
     "algo", "threads", "schedule", "strategy", "layout", "bypass", "shards", "adaptive",
     "steal", "pipeline-depth", "iterations", "source", "rounds", "max-supersteps", "dir",
     "mutate-batch", "mutate-rounds", "mutate-seed", "trace-summary", "trace-out",
+    "compress", "oocore", "block-size", "resident-blocks", "cold-rounds",
 ];
+
+/// `--compress` / `--oocore FILE` (+ `--block-size N`,
+/// `--resident-blocks N`, `--cold-rounds N`): move the loaded graph's
+/// rows onto the requested storage plane before the run — delta-gap
+/// varint blocks decoded on demand (compress) or file-streamed blocks
+/// with only the working set resident (oocore). See DESIGN.md §2.12.
+fn apply_row_backing(g: Csr, opts: &Opts) -> Result<Csr> {
+    use ipregel::graph::RowPolicy;
+    let compress = opts.flag("compress");
+    let oocore = opts.get("oocore").map(PathBuf::from);
+    let policy = RowPolicy {
+        resident_blocks: opts
+            .get("resident-blocks")
+            .map(|s| s.parse().map_err(|_| err!("--resident-blocks: bad '{s}'")))
+            .transpose()?,
+        cold_rounds: opts
+            .get("cold-rounds")
+            .map(|s| s.parse().map_err(|_| err!("--cold-rounds: bad '{s}'")))
+            .transpose()?,
+    };
+    if !compress && oocore.is_none() {
+        if policy != RowPolicy::default() {
+            bail!("--resident-blocks/--cold-rounds need --compress or --oocore");
+        }
+        return Ok(g);
+    }
+    if compress && oocore.is_some() {
+        bail!("--compress and --oocore are exclusive row backings");
+    }
+    let block = opts.get_num("block-size", 1024usize)?;
+    if block == 0 {
+        bail!("--block-size must be positive");
+    }
+    let raw_bytes = g.memory_bytes();
+    let g = match &oocore {
+        Some(path) => io::externalize(&g, path, block)?,
+        None => g.compress(block),
+    };
+    let plane = g.row_plane().expect("backing just installed");
+    if policy != RowPolicy::default() {
+        plane.set_policy(policy);
+    }
+    eprintln!(
+        "rows: {:?} backing, {} blocks of {} vertices, {:.2}x compression \
+         ({} -> {} bytes resident)",
+        plane.mode(),
+        plane.num_blocks(),
+        plane.block_size(),
+        plane.stats().compression_ratio(),
+        raw_bytes,
+        g.memory_bytes(),
+    );
+    Ok(g)
+}
 
 /// `--trace-summary` / `--trace-out FILE`, resolved once per `run`/`sim`.
 struct TraceSinks<'a> {
@@ -260,7 +325,7 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
         .ok_or_else(|| {
             err!("usage: ipregel run --algo pr|cc|sssp|wsssp|bfs|lpa|triangles <graph|name>")
         })?;
-    let g = load_graph(arg, &graph_dir(opts))?;
+    let g = apply_row_backing(load_graph(arg, &graph_dir(opts))?, opts)?;
     let cfg = engine_cfg(opts)?;
     let algo = opts.get_or("algo", "pr");
 
@@ -407,12 +472,15 @@ fn cmd_run(opts: &Opts, simulated: bool) -> Result<()> {
             // multiply wedge messages and credits. Rebuild the simple
             // symmetric closure first (same as the test harness does).
             let edges: Vec<(u32, u32)> = g.edges().collect();
-            let g = ipregel::graph::GraphBuilder::new(g.num_vertices())
-                .symmetric(true)
-                .dedup(true)
-                .drop_self_loops(true)
-                .edges(&edges)
-                .build();
+            let g = apply_row_backing(
+                ipregel::graph::GraphBuilder::new(g.num_vertices())
+                    .symmetric(true)
+                    .dedup(true)
+                    .drop_self_loops(true)
+                    .edges(&edges)
+                    .build(),
+                opts,
+            )?;
             eprintln!(
                 "triangles: counting on the simple symmetric closure \
                  (|E|={} directed edges)",

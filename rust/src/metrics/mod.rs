@@ -249,6 +249,11 @@ pub struct RunMetrics {
     /// echoed so multiplexed runs stay attributable. `None` on plain
     /// batch runs.
     pub query_tag: Option<u64>,
+    /// Row-plane counters for this run (compressed/out-of-core adjacency
+    /// only — `None` on raw-CSR runs): decode work, demand faults vs
+    /// staged pins, evictions, and the residency gauges at run end. The
+    /// cumulative counters are per-run deltas (`RowPlaneStats::delta_from`).
+    pub row_plane: Option<crate::graph::RowPlaneStats>,
 }
 
 impl RunMetrics {
@@ -339,6 +344,16 @@ impl RunMetrics {
             s.push_str(&format!(
                 " lanes={}/{}",
                 self.vector_lanes_useful, self.vector_lanes_scanned
+            ));
+        }
+        if let Some(rp) = &self.row_plane {
+            s.push_str(&format!(
+                " rows[decodes={} faults={} evictions={} resident={}KiB ratio={:.2}x]",
+                rp.decodes,
+                rp.row_faults,
+                rp.evictions,
+                rp.resident_bytes / 1024,
+                rp.compression_ratio()
             ));
         }
         if let Some(fb) = &self.schedule_fallback {
@@ -627,6 +642,27 @@ mod tests {
         let quiet = RunMetrics::default().summary();
         assert!(!quiet.contains("steals="));
         assert!(!quiet.contains("lanes="));
+    }
+
+    #[test]
+    fn row_plane_section_appears_only_on_plane_backed_runs() {
+        let m = RunMetrics {
+            row_plane: Some(crate::graph::RowPlaneStats {
+                decodes: 5,
+                row_faults: 2,
+                evictions: 1,
+                resident_bytes: 2048,
+                encoded_bytes: 100,
+                raw_adj_bytes: 250,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("rows[decodes=5 faults=2 evictions=1"));
+        assert!(s.contains("resident=2KiB"));
+        assert!(s.contains("ratio=2.50x"));
+        assert!(!RunMetrics::default().summary().contains("rows["));
     }
 
     #[test]

@@ -7,6 +7,18 @@
 //! is priority-then-wakeup-order: a batch waiter is never admitted while
 //! an interactive waiter is queued; within a class, wakeup order is the
 //! platform condvar's (FIFO on the common platforms, not guaranteed).
+//!
+//! **Load shedding is priority-ordered (reject-batch-first).** With a
+//! queue cap set, a batch submission is shed as soon as the *total*
+//! waiting census is at the cap, but an interactive submission is shed
+//! only when **interactive waiters alone** fill the cap. Queued batch
+//! work can therefore never crowd an interactive query out of the gate
+//! — under overload the queue drains toward all-interactive occupancy,
+//! which is the intended degradation order for a multi-tenant server
+//! (batch callers retry on their own schedule; interactive callers are
+//! a user waiting). Shed decisions are counted per class
+//! ([`AdmissionController::shed`]) so an operator can see *who* is
+//! being turned away, not just that rejections happen.
 
 use crate::serve::handle::Priority;
 use std::sync::{Condvar, Mutex};
@@ -14,7 +26,9 @@ use std::sync::{Condvar, Mutex};
 /// Why a submission was turned away at the gate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmitError {
-    /// The bounded wait queue is full — shed load instead of queueing.
+    /// Shed at the queue cap under the reject-batch-first policy (see
+    /// the [module docs](self)): batch sheds on total occupancy,
+    /// interactive only on interactive occupancy.
     QueueFull,
 }
 
@@ -37,6 +51,10 @@ struct GateState {
     waiting_total: usize,
     /// Total permits ever granted (monotone; for observability).
     admitted: u64,
+    /// Interactive submissions shed at the cap (monotone).
+    shed_interactive: u64,
+    /// Batch submissions shed at the cap (monotone).
+    shed_batch: u64,
 }
 
 /// Concurrency gate for a [`crate::serve::QueryServer`]: at most
@@ -61,8 +79,11 @@ impl AdmissionController {
         }
     }
 
-    /// Bound the wait queue: a submission arriving with `n` queries
-    /// already waiting gets [`AdmitError::QueueFull`] instead of a slot.
+    /// Bound the wait queue: submissions past the cap get
+    /// [`AdmitError::QueueFull`] instead of a slot, shed in
+    /// reject-batch-first order — batch counts every waiter against
+    /// the cap, interactive counts only interactive waiters (see the
+    /// [module docs](self)).
     pub fn with_queue_cap(mut self, n: usize) -> Self {
         self.max_queued = Some(n);
         self
@@ -81,7 +102,19 @@ impl AdmissionController {
         };
         if !can_enter(&st) {
             if let Some(cap) = self.max_queued {
-                if st.waiting_total >= cap {
+                // Reject-batch-first shedding: batch is shed on total
+                // queue occupancy, interactive only when interactive
+                // waiters alone fill the cap — parked batch work never
+                // crowds an interactive query out of the gate.
+                let occupancy = match priority {
+                    Priority::Interactive => st.waiting_interactive,
+                    Priority::Batch => st.waiting_total,
+                };
+                if occupancy >= cap {
+                    match priority {
+                        Priority::Interactive => st.shed_interactive += 1,
+                        Priority::Batch => st.shed_batch += 1,
+                    }
                     return Err(AdmitError::QueueFull);
                 }
             }
@@ -122,6 +155,13 @@ impl AdmissionController {
     /// Total permits ever granted.
     pub fn admitted(&self) -> u64 {
         self.state.lock().expect("admission gate poisoned").admitted
+    }
+
+    /// Submissions shed at the queue cap, as `(interactive, batch)` —
+    /// the per-class view the reject-batch-first policy exists for.
+    pub fn shed(&self) -> (u64, u64) {
+        let st = self.state.lock().expect("admission gate poisoned");
+        (st.shed_interactive, st.shed_batch)
     }
 
     /// The concurrency bound this gate enforces.
@@ -221,8 +261,41 @@ mod tests {
             gate.admit(Priority::Interactive).err(),
             Some(AdmitError::QueueFull)
         );
+        assert_eq!(gate.shed(), (1, 0));
         drop(holder);
         // Slot free again: admission succeeds without queueing.
         assert!(gate.admit(Priority::Batch).is_ok());
+        assert_eq!(gate.shed(), (1, 0), "granted permits are not sheds");
+    }
+
+    #[test]
+    fn shedding_rejects_batch_before_interactive() {
+        let gate = AdmissionController::new(1).with_queue_cap(1);
+        let holder = gate.admit(Priority::Batch).unwrap();
+        std::thread::scope(|s| {
+            let gate_ref = &gate;
+            // A parked batch waiter occupies the single queue slot.
+            s.spawn(move || {
+                let _p = gate_ref.admit(Priority::Batch).unwrap();
+            });
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            assert_eq!(gate.waiting(), 1);
+            // Queue at cap: the next batch submission is shed…
+            assert_eq!(
+                gate.admit(Priority::Batch).err(),
+                Some(AdmitError::QueueFull)
+            );
+            // …but an interactive one still queues — batch occupancy
+            // never counts against the interactive class.
+            s.spawn(move || {
+                let _p = gate_ref.admit(Priority::Interactive).unwrap();
+            });
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            assert_eq!(gate.waiting(), 2, "interactive parked, not shed");
+            drop(holder);
+        });
+        assert_eq!(gate.shed(), (0, 1));
+        assert_eq!(gate.waiting(), 0);
+        assert_eq!(gate.admitted(), 3);
     }
 }

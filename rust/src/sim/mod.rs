@@ -81,6 +81,14 @@ pub struct CostModel {
     pub llc_bytes: f64,
     /// Cache line size in bytes.
     pub line_bytes: f64,
+    /// Per-edge varint decode cost when a row block materialises
+    /// (compressed/out-of-core planes — `graph/rows.rs`): shift/or/add
+    /// chain plus the append, sequential-access friendly.
+    pub t_decode: f64,
+    /// Fixed per-block residency-miss overhead on first touch: slot CAS,
+    /// pool pop, span lookup (plus, for the on-disk arena, the syscall
+    /// setup — the streamed bytes themselves are priced via `t_decode`).
+    pub t_row_fault: f64,
 }
 
 impl Default for CostModel {
@@ -112,6 +120,8 @@ impl Default for CostModel {
             t_l2_miss: 3.0,
             llc_bytes: 32.0 * 1024.0 * 1024.0,
             line_bytes: 64.0,
+            t_decode: 1.2,
+            t_row_fault: 120.0,
         }
     }
 }

@@ -1,0 +1,256 @@
+//! Memory-plane integration tests (DESIGN.md §2.12): the compressed and
+//! out-of-core row backings must be **bit-invisible** — identical values
+//! AND identical superstep traces — across the optimisation grid,
+//! through dynamic mutation batches and serving-layer snapshots, while
+//! the residency counters prove blocks actually decode, stream and
+//! evict. Row storage is an execution knob like layout or scheduling:
+//! nothing a program can observe may depend on it.
+
+use ipregel::algos::query::EgoNetBfs;
+use ipregel::algos::{ConnectedComponents, PageRank, Sssp};
+use ipregel::engine::{EngineConfig, GraphSession, RunOptions};
+use ipregel::graph::csr::Csr;
+use ipregel::graph::dynamic::{DynamicGraph, MutationSet};
+use ipregel::graph::{gen, io, RowMode, RowPolicy};
+use ipregel::metrics::RunMetrics;
+use ipregel::sched::Schedule;
+use ipregel::serve::{AdmissionController, QueryServer, QuerySpec};
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("ipregel_mem_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// The three row backings of one logical graph. The external arena file
+/// lives in `dir` so the caller controls cleanup.
+fn backings(g: &Csr, dir: &std::path::Path, block: usize) -> Vec<(&'static str, Csr)> {
+    vec![
+        ("raw", g.clone()),
+        ("compressed", g.clone().compress(block)),
+        (
+            "external",
+            io::externalize(g, &dir.join(format!("b{block}.ipgc")), block).unwrap(),
+        ),
+    ]
+}
+
+/// The observable superstep trace: who ran and what was delivered, per
+/// superstep. Wall-clock fields are excluded (they are the one thing a
+/// backing *is* allowed to change).
+fn trace_of(m: &RunMetrics) -> Vec<(usize, u64)> {
+    m.supersteps
+        .iter()
+        .map(|s| (s.active_vertices, s.messages))
+        .collect()
+}
+
+/// A grid wide enough to cross the backings with every substrate the
+/// engine has: flat and sharded, scan and list, static and edge-centric
+/// cuts, work-stealing, and the adaptive controller.
+fn grid() -> Vec<EngineConfig> {
+    vec![
+        EngineConfig::default().threads(1),
+        EngineConfig::default().threads(4),
+        EngineConfig::default().threads(4).bypass(true),
+        EngineConfig::default()
+            .threads(4)
+            .schedule(Schedule::EdgeCentric),
+        EngineConfig::default().threads(4).shards(3),
+        EngineConfig::default().threads(4).shards(3).steal(true),
+        EngineConfig::default().threads(4).shards(3).adaptive(true),
+        EngineConfig::default().threads(4).adaptive(true),
+    ]
+}
+
+#[test]
+fn values_and_traces_identical_across_backings_and_grid() {
+    let g = gen::rmat(8, 5, 0.57, 0.19, 0.19, 41);
+    let dir = tmp_dir("grid");
+    for block in [7usize, 64] {
+        let sets = backings(&g, &dir, block);
+        for cfg in grid() {
+            // Pull (PageRank) walks in-rows, push (SSSP) walks out-rows;
+            // together they decode both directions of every backing.
+            let pr = PageRank::default();
+            let ss = Sssp::from_hub(&g);
+            let mut want_pr: Option<(Vec<f64>, Vec<(usize, u64)>)> = None;
+            let mut want_ss: Option<(Vec<u64>, Vec<(usize, u64)>)> = None;
+            for (name, gb) in &sets {
+                let session = GraphSession::new(gb);
+                let a = session.run_with(&pr, RunOptions::new().config(cfg));
+                let b = session.run_with(&ss, RunOptions::new().config(cfg));
+                match &want_pr {
+                    None => want_pr = Some((a.values, trace_of(&a.metrics))),
+                    Some((vals, trace)) => {
+                        assert_eq!(&a.values, vals, "pr values {name} b{block} {cfg:?}");
+                        assert_eq!(
+                            &trace_of(&a.metrics),
+                            trace,
+                            "pr trace {name} b{block} {cfg:?}"
+                        );
+                    }
+                }
+                match &want_ss {
+                    None => want_ss = Some((b.values, trace_of(&b.metrics))),
+                    Some((vals, trace)) => {
+                        assert_eq!(&b.values, vals, "sssp values {name} b{block} {cfg:?}");
+                        assert_eq!(
+                            &trace_of(&b.metrics),
+                            trace,
+                            "sssp trace {name} b{block} {cfg:?}"
+                        );
+                    }
+                }
+                // Plane-backed runs report the plane; raw runs must not.
+                let backed = gb.row_plane().is_some();
+                assert_eq!(a.metrics.row_plane.is_some(), backed, "{name}");
+                if backed {
+                    let rp = a.metrics.row_plane.as_ref().unwrap();
+                    assert!(rp.decodes > 0, "{name} b{block}: nothing decoded");
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mutation_batches_are_backing_invisible_through_compaction() {
+    let dir = tmp_dir("dyn");
+    let base = gen::rmat(7, 4, 0.57, 0.19, 0.19, 9);
+    let variants = backings(&base, &dir, 16);
+    // Drive each backing's DynamicGraph through the same mutation
+    // rounds with a spill threshold low enough to force a compaction —
+    // which must re-apply the row backing (`Csr::with_backing`) and
+    // stay invisible.
+    let mut results: Vec<Vec<Vec<u32>>> = Vec::new();
+    for (_name, gb) in variants {
+        let mut dg = DynamicGraph::with_spill_threshold(gb, 40);
+        let mut per_round = Vec::new();
+        for round in 0..4u32 {
+            let mut m = MutationSet::new();
+            for k in 0..12u32 {
+                let s = (round * 31 + k * 7) % 128;
+                let d = (round * 17 + k * 13 + 1) % 128;
+                if s != d {
+                    m.insert_undirected(s, d);
+                }
+            }
+            dg.apply(&m);
+            let r = GraphSession::new(dg.graph()).run(&ConnectedComponents);
+            per_round.push(r.values);
+        }
+        assert!(
+            dg.stats().compactions > 0,
+            "spill threshold 40 must force at least one compaction"
+        );
+        results.push(per_round);
+    }
+    assert_eq!(results[0], results[1], "compressed diverged from raw");
+    assert_eq!(results[0], results[2], "external diverged from raw");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serving_snapshots_time_travel_over_an_external_backing() {
+    let dir = tmp_dir("serve");
+    let g = gen::rmat(7, 4, 0.57, 0.19, 0.19, 23);
+    let ext = io::externalize(&g, &dir.join("serve.ipgc"), 32).unwrap();
+    let cfg = EngineConfig::default().threads(2);
+    let raw_server = QueryServer::with_config(g, cfg, AdmissionController::new(2));
+    let ext_server = QueryServer::with_config(ext, cfg, AdmissionController::new(2));
+    let p = EgoNetBfs { root: 3, radius: 2 };
+    let spec = QuerySpec::interactive();
+    let before_raw = raw_server.execute(&p, &spec).unwrap();
+    let before_ext = ext_server.execute(&p, &spec).unwrap();
+    assert_eq!(before_raw.values, before_ext.values);
+
+    // Pin the pre-mutation epoch, then mutate both servers identically.
+    let pinned = ext_server.pin_current();
+    let mut m = MutationSet::new();
+    for k in 0..8u32 {
+        m.insert_undirected(3 + k, 90 + k);
+    }
+    raw_server.apply_mutations(&m);
+    ext_server.apply_mutations(&m);
+
+    // Time-travel read off the arena-backed snapshot: bit-identical to
+    // the pre-mutation answer even though the current graph moved on.
+    let old = ext_server.execute_on(&pinned, &p, &spec).unwrap();
+    assert_eq!(old.values, before_ext.values, "snapshot isolation broken");
+    let after_raw = raw_server.execute(&p, &spec).unwrap();
+    let after_ext = ext_server.execute(&p, &spec).unwrap();
+    assert_eq!(after_raw.values, after_ext.values);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn oocore_residency_budget_streams_and_evicts() {
+    let dir = tmp_dir("oocore");
+    let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 5);
+    let ext = io::externalize(&g, &dir.join("res.ipgc"), 16).unwrap();
+    let plane = ext.row_plane().unwrap();
+    assert_eq!(plane.mode(), RowMode::External);
+    plane.set_policy(RowPolicy {
+        resident_blocks: Some(2),
+        cold_rounds: None,
+    });
+    let raw = GraphSession::new(&g).run(&PageRank::default());
+    let r = GraphSession::new(&ext).run(&PageRank::default());
+    assert_eq!(raw.values, r.values);
+    let rp = r.metrics.row_plane.expect("plane-backed run reports stats");
+    // Every superstep touches most blocks; the 2-block budget forces
+    // barrier eviction and re-faulting — the streaming working set.
+    assert!(rp.row_faults > plane.num_blocks() as u64, "no streaming");
+    assert!(rp.evictions > 0, "budget of 2 never evicted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compressed_cold_rounds_recycle_scratch_on_a_moving_frontier() {
+    // A long path walked by SSSP: the frontier sweeps forward one block
+    // at a time, so earlier blocks go cold and a cold_rounds=1 policy
+    // must recycle them (and re-decode identically if ever revisited).
+    let g = gen::path(512);
+    let gc = g.clone().compress(16);
+    gc.row_plane()
+        .unwrap()
+        .set_policy(RowPolicy {
+            resident_blocks: None,
+            cold_rounds: Some(1),
+        });
+    let p = Sssp { source: 0 };
+    let want = GraphSession::new(&g).run_with(
+        &p,
+        RunOptions::new().config(EngineConfig::default().bypass(true)),
+    );
+    let got = GraphSession::new(&gc).run_with(
+        &p,
+        RunOptions::new().config(EngineConfig::default().bypass(true)),
+    );
+    assert_eq!(want.values, got.values);
+    let rp = got.metrics.row_plane.expect("plane stats");
+    assert!(rp.evictions > 0, "cold frontier blocks never recycled");
+    assert_eq!(trace_of(&want.metrics), trace_of(&got.metrics));
+}
+
+#[test]
+fn adaptive_identity_holds_with_an_active_retention_policy() {
+    // The adaptive session installs the decision table's cold_rounds on
+    // the plane; eviction + re-decode mid-run must stay bit-invisible,
+    // including the per-superstep trace.
+    let g = gen::rmat(8, 4, 0.57, 0.19, 0.19, 61);
+    let gc = g.clone().compress(32);
+    let cfg = EngineConfig::default().threads(4).adaptive(true);
+    let p = Sssp::from_hub(&g);
+    let a = GraphSession::new(&g).run_with(&p, RunOptions::new().config(cfg));
+    let b = GraphSession::new(&gc).run_with(&p, RunOptions::new().config(cfg));
+    assert_eq!(a.values, b.values);
+    assert_eq!(trace_of(&a.metrics), trace_of(&b.metrics));
+    assert!(
+        gc.row_plane().unwrap().policy().cold_rounds.is_some(),
+        "adaptive run must install the retention band"
+    );
+}

@@ -29,9 +29,10 @@ reuse_for() {
     bench_scatter) echo "${BENCH_SCATTER_JSON:-}" ;;
     bench_trace) echo "${BENCH_TRACE_JSON:-}" ;;
     bench_serve) echo "${BENCH_SERVE_JSON:-}" ;;
+    bench_memory) echo "${BENCH_MEMORY_JSON:-}" ;;
   esac
 }
-for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter bench_trace bench_serve; do
+for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter bench_trace bench_serve bench_memory; do
   reuse="$(reuse_for "$bench")"
   if [ -n "$reuse" ] && [ -f "$reuse" ]; then
     echo "== $bench (reusing $reuse) ==" >&2
@@ -49,7 +50,7 @@ done
   echo "  \"rustc\": \"$(rustc --version)\","
   echo "  \"smoke\": true,"
   first=1
-  for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter bench_trace bench_serve; do
+  for bench in bench_table2 bench_partition bench_dynamic bench_adaptive bench_scatter bench_trace bench_serve bench_memory; do
     [ "$first" = 1 ] || echo ','
     first=0
     printf '  "%s": ' "$bench"
